@@ -1,0 +1,78 @@
+//! CLFP end-to-end: probe black boxes and re-derive their arithmetic.
+//!
+//! Three targets:
+//!  1. the Rust Volta model (sanity: the loop must recover F=23/RZ),
+//!  2. a "mystery" device whose datasheet lies about its precision,
+//!  3. the AOT-compiled Pallas artifact executed under PJRT — a genuinely
+//!     foreign implementation (JAX/XLA) playing the role silicon plays in
+//!     the paper.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example probe_blackbox
+//! ```
+
+use mma_sim::clfp::{infer, ClfpConfig};
+use mma_sim::formats::{Format, Rho};
+use mma_sim::interface::{MmaFormats, MmaInterface};
+use mma_sim::isa::{find, Arch};
+use mma_sim::models::{MmaModel, ModelSpec};
+use mma_sim::runtime::{artifacts_dir, read_manifest, Runtime};
+
+fn report(label: &str, iface: &dyn MmaInterface, tests: usize) {
+    println!("━━ {label}");
+    let inf = infer(iface, ClfpConfig { validate_tests: tests, seed: 0xC1F9 });
+    println!("   independence: {}", inf.independent);
+    println!("   summation-tree signature:\n{}", indent(&inf.tree.render()));
+    println!(
+        "   probes: {}, survivors: {}, revisions: {}",
+        inf.probes_run,
+        inf.survivors.len(),
+        inf.revisions
+    );
+    match inf.inferred {
+        Some(spec) => println!(
+            "   inferred: {spec:?} (validated on {} randomized MMAs)\n",
+            inf.validated
+        ),
+        None => println!("   inferred: NONE — novel arithmetic behavior\n"),
+    }
+}
+
+fn indent(s: &str) -> String {
+    s.lines().map(|l| format!("      {l}\n")).collect()
+}
+
+fn main() {
+    // 1. known instruction
+    let volta = find(Arch::Volta, "HMMA.884.F32").unwrap().model();
+    report("NVIDIA Volta HMMA.884 (Rust model)", &volta, 400);
+
+    // 2. mystery device: claims Hopper-class F=25 but computes with F=24
+    let mystery = MmaModel::new(
+        "mystery-device",
+        (8, 8, 16),
+        MmaFormats { a: Format::Fp16, b: Format::Fp16, c: Format::Fp32, d: Format::Fp32 },
+        ModelSpec::TFdpa { l_max: 16, f: 24, rho: Rho::RzFp32 },
+    );
+    println!("datasheet claims: TFdpa {{ l_max: 16, f: 25, rho: RzFp32 }}");
+    report("mystery device (actual F=24)", &mystery, 400);
+
+    // 3. the PJRT-compiled Pallas artifact
+    let dir = artifacts_dir();
+    if !dir.join("manifest.txt").exists() {
+        println!("(artifacts not built; run `make artifacts` to probe the PJRT black box)");
+        return;
+    }
+    let rt = Runtime::new(&dir).expect("PJRT runtime");
+    for name in ["volta_fp16_fp32", "cdna3_fp16", "cdna2_fp16"] {
+        let Some(meta) = read_manifest(&dir)
+            .unwrap()
+            .into_iter()
+            .find(|m| m.name == name)
+        else {
+            continue;
+        };
+        let pjrt = rt.load_mma(&meta).expect("load artifact");
+        report(&format!("PJRT artifact {name} (JAX/Pallas black box)"), &pjrt, 60);
+    }
+}

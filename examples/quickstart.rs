@@ -1,0 +1,41 @@
+//! Quickstart: the same MMA, several architectures, different answers.
+//!
+//! Runs the paper's Equation 10 input through Hopper Tensor Cores, CDNA3
+//! Matrix Cores, and the FP64 DMMA reference, printing the results — the
+//! 60-second version of the paper's headline result.
+//!
+//! ```sh
+//! cargo run --release --example quickstart
+//! ```
+
+use mma_sim::analysis::discrepancy::{eq10_output, EQ10_A, EQ10_B, EQ10_C};
+use mma_sim::isa::{find, Arch};
+
+fn main() {
+    println!("MMA-Sim quickstart");
+    println!("==================");
+    println!("input (Eq. 10): a = {EQ10_A:?}");
+    println!("                b = {EQ10_B:?}");
+    println!("                c = {EQ10_C} (2^23)");
+    println!("exact result  : c + a·b = -0.875\n");
+
+    let cases = [
+        (Arch::Hopper, "HGMMA.64x8x16.F32.F16", "NVIDIA Hopper FP16 Tensor Core"),
+        (Arch::Volta, "HMMA.884.F32.F16", "NVIDIA Volta FP16 Tensor Core"),
+        (Arch::Cdna3, "v_mfma_f32_16x16x16_f16", "AMD CDNA3 FP16 Matrix Core"),
+        (Arch::Cdna1, "v_mfma_f32_16x16x16_f16", "AMD CDNA1 FP16 Matrix Core"),
+        (Arch::Hopper, "DMMA.884.F64", "FP64 DMMA (reference behavior)"),
+    ];
+
+    for (arch, frag, label) in cases {
+        let instr = find(arch, frag).expect("instruction in registry");
+        let d = eq10_output(&instr).expect("Eq.10 runs on this format");
+        println!("{label:<36} {:<28} d00 = {d}", instr.name);
+    }
+
+    println!(
+        "\nFour architectures, four answers — run `mma-sim table 8` for all ten,\n\
+         and `mma-sim probe --arch hopper --instr F32.F16` to watch CLFP\n\
+         re-derive the arithmetic from black-box queries."
+    );
+}

@@ -1,0 +1,81 @@
+//! Coordinator demo: a continuous-verification campaign.
+//!
+//! Registers (DUT, golden) pairs — PJRT-compiled Pallas artifacts against
+//! their golden Rust models when artifacts are built, plus an injected
+//! faulty device — and streams batched validation jobs through the worker
+//! pool, reporting throughput, latency, and divergences.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example serve_demo
+//! ```
+
+use std::sync::Arc;
+
+use mma_sim::coordinator::{Coordinator, VerifyPair};
+use mma_sim::formats::{Format, Rho};
+use mma_sim::interface::MmaFormats;
+use mma_sim::models::{MmaModel, ModelSpec};
+use mma_sim::runtime::{artifacts_dir, model_for_artifact, read_manifest, Runtime};
+
+fn main() {
+    let mut pairs: Vec<VerifyPair> = Vec::new();
+
+    // PJRT artifacts vs golden Rust models (the paper's closed loop)
+    let dir = artifacts_dir();
+    if dir.join("manifest.txt").exists() {
+        let rt = Runtime::new(&dir).expect("PJRT runtime");
+        for meta in read_manifest(&dir).unwrap() {
+            if meta.kind != "tfdpa" && meta.kind != "ftz" {
+                continue;
+            }
+            pairs.push(VerifyPair {
+                name: format!("pjrt:{}", meta.name),
+                dut: Arc::new(rt.load_mma(&meta).unwrap()),
+                golden: Arc::new(model_for_artifact(&meta).unwrap()),
+            });
+        }
+        println!("registered {} PJRT verification pairs", pairs.len());
+    } else {
+        println!("artifacts not built; running model-vs-model pairs only");
+    }
+
+    // An injected faulty device: one fewer fraction bit than documented.
+    let fmts = MmaFormats { a: Format::Fp16, b: Format::Fp16, c: Format::Fp32, d: Format::Fp32 };
+    pairs.push(VerifyPair {
+        name: "faulty-device-f24-vs-f25".into(),
+        dut: Arc::new(MmaModel::new(
+            "dut",
+            (8, 8, 16),
+            fmts,
+            ModelSpec::TFdpa { l_max: 16, f: 24, rho: Rho::RzFp32 },
+        )),
+        golden: Arc::new(MmaModel::new(
+            "golden",
+            (8, 8, 16),
+            fmts,
+            ModelSpec::TFdpa { l_max: 16, f: 25, rho: Rho::RzFp32 },
+        )),
+    });
+
+    let workers = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(4);
+    let coord = Coordinator::new(pairs, workers, workers * 2);
+    println!("running campaign on {workers} workers …");
+    let report = coord.run_campaign(8, 50, 0x5EED);
+    println!("{}", report.render());
+
+    let faulty = &report.pairs["faulty-device-f24-vs-f25"];
+    assert!(faulty.mismatches > 0, "the faulty device must be caught");
+    if let Some(mm) = &faulty.first_mismatch {
+        println!(
+            "first divergence on the faulty device: element {} golden {:#x} dut {:#x}",
+            mm.element, mm.golden_bits, mm.dut_bits
+        );
+    }
+    for (name, st) in &report.pairs {
+        if name.starts_with("pjrt:") {
+            assert_eq!(st.mismatches, 0, "{name} must match its golden model");
+        }
+    }
+    println!("campaign complete: PJRT artifacts clean, faulty device detected.");
+    coord.shutdown();
+}

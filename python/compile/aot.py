@@ -1,0 +1,111 @@
+"""AOT compile path: lower every Layer-2 graph to HLO *text* artifacts.
+
+HLO text (not serialized ``HloModuleProto``) is the interchange format:
+jax >= 0.5 emits protos with 64-bit instruction ids that xla_extension
+0.5.1 (the version behind the Rust ``xla`` crate) rejects; the text parser
+reassigns ids and round-trips cleanly.
+
+Run once via ``make artifacts``:
+
+    cd python && python -m compile.aot --out-dir ../artifacts
+
+Outputs ``<name>.hlo.txt`` per artifact plus ``manifest.txt`` (one line per
+artifact: ``name kind in_fmt m n k extra...``) that the Rust runtime parses.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+
+jax.config.update("jax_enable_x64", True)
+
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (see /opt/xla-example)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_emulated(name: str) -> str:
+    fn, (m, n, k) = model.emulated_mma(name)
+    a = jax.ShapeDtypeStruct((m, k), jnp.uint32)
+    b = jax.ShapeDtypeStruct((k, n), jnp.uint32)
+    c = jax.ShapeDtypeStruct((m, n), jnp.uint32)
+    return to_hlo_text(jax.jit(fn).lower(a, b, c))
+
+
+def lower_ref(which: str) -> str:
+    m, n, k = model.REF_SHAPE
+    dt = jnp.float32 if which == "f32" else jnp.float64
+    a = jax.ShapeDtypeStruct((m, k), dt)
+    b = jax.ShapeDtypeStruct((k, n), dt)
+    c = jax.ShapeDtypeStruct((m, n), dt)
+    fn = model.gemm_ref_f32 if which == "f32" else model.gemm_ref_f64
+    return to_hlo_text(jax.jit(fn).lower(a, b, c))
+
+
+def lower_bias(m: int = 16, n: int = 16, k: int = 16) -> str:
+    fn = model.bias_deviation(m, n, k)
+    a = jax.ShapeDtypeStruct((m, k), jnp.uint32)
+    b = jax.ShapeDtypeStruct((k, n), jnp.uint32)
+    c = jax.ShapeDtypeStruct((m, n), jnp.uint32)
+    return to_hlo_text(jax.jit(fn).lower(a, b, c))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", default=None, help="single artifact name")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = []
+    names = model.all_artifact_names() if args.only is None else [args.only]
+    for name in names:
+        text = lower_emulated(name)
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as fh:
+            fh.write(text)
+        meta = model.artifact_meta(name)
+        extra = (
+            f"lmax={meta['l_max']} f={meta['f']} rho={meta['rho']} variant={meta['variant']}"
+            if meta["kind"] == "tfdpa"
+            else f"p={meta['p']}"
+        )
+        manifest.append(
+            f"{name} {meta['kind']} {meta['in_fmt']} {meta['m']} {meta['n']} {meta['k']} {extra}"
+        )
+        print(f"wrote {path} ({len(text)} chars)")
+
+    if args.only is None:
+        m, n, k = model.REF_SHAPE
+        for which in ("f32", "f64"):
+            path = os.path.join(args.out_dir, f"gemm_ref_{which}.hlo.txt")
+            with open(path, "w") as fh:
+                fh.write(lower_ref(which))
+            manifest.append(f"gemm_ref_{which} ref {which} {m} {n} {k} -")
+            print(f"wrote {path}")
+        path = os.path.join(args.out_dir, "bias_deviation.hlo.txt")
+        with open(path, "w") as fh:
+            fh.write(lower_bias())
+        manifest.append("bias_deviation bias fp16 16 16 16 -")
+        print(f"wrote {path}")
+
+        with open(os.path.join(args.out_dir, "manifest.txt"), "w") as fh:
+            fh.write("\n".join(manifest) + "\n")
+        print("wrote manifest.txt")
+
+
+if __name__ == "__main__":
+    main()

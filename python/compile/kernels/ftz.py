@@ -1,0 +1,99 @@
+"""Pallas kernel: bit-accurate FTZ-AddMul GEMM (AMD CDNA2, Algorithm 2).
+
+Unlike the integer T-FDPA kernel, the CDNA2 model is composed of genuine
+binary FP32 operations (RNE add/mul with flush-to-zero), so this kernel
+runs on float32 lanes: decode = bitcast, products are exact in f32
+(<= 11-bit significands), every add is a single correctly-rounded f32 op,
+and flushes are masked bit surgery. Pairwise summation order (P = 2 or 4)
+is unrolled statically, matching Figure 2(b).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+jax.config.update("jax_enable_x64", True)
+
+QUIET_NAN32 = 0x7FC00000  # plain int: jnp constants would be captured by pallas
+
+
+def _fp16_bits_to_f32(bits_u32):
+    """Decode FP16 bit patterns (carried in uint32) to float32 values with
+    *input subnormal flush to +0* (CDNA2 FlushSubnormal)."""
+    b16 = bits_u32.astype(jnp.uint16)
+    expf = (b16 >> 10) & 0x1F
+    mant = b16 & 0x3FF
+    sub = (expf == 0) & (mant != 0)
+    flushed = jnp.where(sub, 0, b16).astype(jnp.uint16)
+    return jax.lax.bitcast_convert_type(flushed, jnp.float16).astype(jnp.float32)
+
+
+def _bf16_bits_to_f32(bits_u32):
+    b16 = bits_u32.astype(jnp.uint16)
+    expf = (b16 >> 7) & 0xFF
+    mant = b16 & 0x7F
+    sub = (expf == 0) & (mant != 0)
+    flushed = jnp.where(sub, 0, b16).astype(jnp.uint16)
+    return jax.lax.bitcast_convert_type(
+        (flushed.astype(jnp.uint32) << 16), jnp.float32
+    )
+
+
+def _flush_c(bits_u32):
+    """Flush FP32 accumulator subnormals to +0 (input flush)."""
+    expf = (bits_u32 >> 23) & 0xFF
+    mant = bits_u32 & 0x7FFFFF
+    sub = (expf == 0) & (mant != 0)
+    return jax.lax.bitcast_convert_type(
+        jnp.where(sub, 0, bits_u32).astype(jnp.uint32), jnp.float32
+    )
+
+
+def _ftz(z):
+    """Flush subnormal f32 results to sign-preserved zero (z * 0.0)."""
+    return jnp.where(jnp.abs(z) < 2.0 ** -126, z * 0.0, z)
+
+
+def make_ftz_kernel(in_fmt_name: str, m: int, n: int, k: int, p: int,
+                    use_pallas: bool = True):
+    """Bit-accurate Φ_FTZ-AddMul GEMM over uint32 bit patterns."""
+    assert in_fmt_name in ("fp16", "bf16")
+    assert k % p == 0
+    decode_in = _fp16_bits_to_f32 if in_fmt_name == "fp16" else _bf16_bits_to_f32
+
+    def compute(a_bits, b_bits, c_bits):
+        a = decode_in(a_bits)  # [M,K] f32, inputs flushed
+        b = decode_in(b_bits)  # [K,N]
+        d = _flush_c(c_bits)  # [M,N]
+        # exact products with FTZ: [M,K,N]
+        prods = _ftz(a[:, :, None] * b[None, :, :])
+        for lo in range(0, k, p):
+            if p == 2:
+                s = _ftz(prods[:, lo, :] + prods[:, lo + 1, :])
+            else:  # p == 4
+                s01 = _ftz(prods[:, lo, :] + prods[:, lo + 1, :])
+                s23 = _ftz(prods[:, lo + 2, :] + prods[:, lo + 3, :])
+                s = _ftz(s01 + s23)
+            d = _ftz(d + s)
+        out = jax.lax.bitcast_convert_type(d, jnp.uint32)
+        return jnp.where(jnp.isnan(d), QUIET_NAN32, out)
+
+    if not use_pallas:
+        return jax.jit(compute)
+
+    def kernel(a_ref, b_ref, c_ref, o_ref):
+        o_ref[...] = compute(a_ref[...], b_ref[...], c_ref[...])
+
+    call = pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.uint32),
+        interpret=True,
+    )
+
+    @jax.jit
+    def run(a_bits, b_bits, c_bits):
+        return call(a_bits, b_bits, c_bits)
+
+    return run

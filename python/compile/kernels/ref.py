@@ -1,0 +1,801 @@
+"""Pure-Python bit-accurate oracle for every MMA arithmetic-behavior model.
+
+This is the *independent second implementation* of the paper's Algorithms
+1-11 (the first is the Rust crate in ``rust/src/ops``).  It operates on raw
+bit patterns carried as Python ints and uses arbitrary-precision integer
+arithmetic, so every intermediate step is exact by construction.
+
+The Pallas kernels in this package are validated against this oracle by
+pytest, and the Rust models are validated against the AOT-compiled Pallas
+kernels by the Rust integration tests — closing the paper's
+probe-infer-verify loop across three implementations.
+
+Bit-level conventions (identical to the Rust crate):
+
+- decoded value = ``(-1)^sign * sig * 2^(exp - mant_bits)``; for normals
+  ``sig`` includes the implicit bit and ``exp`` is the unbiased exponent;
+  for subnormals ``exp = emin``.
+- exactly-zero fused results are ``+0.0`` unless *every* contributing
+  input (each product's sign, and the accumulator) is a negative zero.
+- NVIDIA T/ST/GST-FDPA canonicalize NaN to ``0x7FFFFFFF`` / ``0x7FFF``;
+  every other operation emits the standard quiet NaN.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Optional, Sequence, Tuple
+
+# ---------------------------------------------------------------------------
+# Formats
+# ---------------------------------------------------------------------------
+
+IEEE, NAN_ONLY, FINITE_ONLY, EXP_ONLY = "ieee", "nan_only", "finite_only", "exp_only"
+
+
+@dataclass(frozen=True)
+class Fmt:
+    name: str
+    ebits: int
+    mbits: int
+    bias: int
+    style: str
+    signed: bool = True
+
+    @property
+    def width(self) -> int:
+        return (1 if self.signed else 0) + self.ebits + self.mbits
+
+    @property
+    def emin(self) -> int:
+        return 1 - self.bias
+
+    @property
+    def emax(self) -> int:
+        all_ones = (1 << self.ebits) - 1
+        return (all_ones - 1 - self.bias) if self.style == IEEE else (all_ones - self.bias)
+
+    @property
+    def mask(self) -> int:
+        return (1 << self.width) - 1
+
+    def nan_pattern(self) -> Optional[int]:
+        if self.style == IEEE:
+            return (((1 << self.ebits) - 1) << self.mbits) | (1 << max(self.mbits - 1, 0))
+        if self.style == NAN_ONLY:
+            return (1 << (self.ebits + self.mbits)) - 1
+        if self.style == EXP_ONLY:
+            return 0xFF
+        return None
+
+    def inf_pattern(self) -> Optional[int]:
+        if self.style == IEEE:
+            return ((1 << self.ebits) - 1) << self.mbits
+        return None
+
+    def max_finite_pattern(self) -> int:
+        if self.style == IEEE:
+            return (((1 << self.ebits) - 2) << self.mbits) | ((1 << self.mbits) - 1)
+        if self.style == NAN_ONLY:
+            return (1 << (self.ebits + self.mbits)) - 2
+        if self.style == FINITE_ONLY:
+            return (1 << (self.ebits + self.mbits)) - 1
+        return 0xFE
+
+
+FP64 = Fmt("fp64", 11, 52, 1023, IEEE)
+FP32 = Fmt("fp32", 8, 23, 127, IEEE)
+TF32 = Fmt("tf32", 8, 10, 127, IEEE)
+BF16 = Fmt("bf16", 8, 7, 127, IEEE)
+FP16 = Fmt("fp16", 5, 10, 15, IEEE)
+FP8E4M3 = Fmt("fp8e4m3", 4, 3, 7, NAN_ONLY)
+FP8E5M2 = Fmt("fp8e5m2", 5, 2, 15, IEEE)
+FP6E2M3 = Fmt("fp6e2m3", 2, 3, 1, FINITE_ONLY)
+FP6E3M2 = Fmt("fp6e3m2", 3, 2, 3, FINITE_ONLY)
+FP4E2M1 = Fmt("fp4e2m1", 2, 1, 1, FINITE_ONLY)
+E8M0 = Fmt("e8m0", 8, 0, 127, EXP_ONLY, signed=False)
+UE4M3 = Fmt("ue4m3", 4, 3, 7, NAN_ONLY, signed=False)
+E8M13 = Fmt("e8m13", 8, 13, 127, IEEE)
+
+FORMATS = {
+    f.name: f
+    for f in [FP64, FP32, TF32, BF16, FP16, FP8E4M3, FP8E5M2, FP6E2M3, FP6E3M2, FP4E2M1, E8M0, UE4M3, E8M13]
+}
+
+ZERO, FINITE, INF, NAN = "zero", "finite", "inf", "nan"
+
+
+def decode(fmt: Fmt, bits: int) -> Tuple[str, bool, int, int]:
+    """Decode ``bits`` -> (class, sign, exp, sig)."""
+    bits &= fmt.mask
+    if fmt.style == EXP_ONLY:
+        if bits == 0xFF:
+            return (NAN, False, 0, 0)
+        return (FINITE, False, bits - 127, 1)
+    sign = fmt.signed and ((bits >> (fmt.ebits + fmt.mbits)) & 1) == 1
+    exp_field = (bits >> fmt.mbits) & ((1 << fmt.ebits) - 1)
+    mant = bits & ((1 << fmt.mbits) - 1)
+    all_ones = (1 << fmt.ebits) - 1
+    if fmt.style == IEEE and exp_field == all_ones:
+        return (INF, sign, 0, 0) if mant == 0 else (NAN, sign, 0, 0)
+    if fmt.style == NAN_ONLY and exp_field == all_ones and mant == (1 << fmt.mbits) - 1:
+        return (NAN, sign, 0, 0)
+    if exp_field == 0:
+        if mant == 0:
+            return (ZERO, sign, 0, 0)
+        return (FINITE, sign, fmt.emin, mant)
+    return (FINITE, sign, exp_field - fmt.bias, mant | (1 << fmt.mbits))
+
+
+# rounding modes
+RNE, RNA, RZ, RD, RU = "RNE", "RNA", "RZ", "RD", "RU"
+
+
+def round_shift(mag: int, shift: int, mode: str, neg: bool) -> int:
+    """Shift the magnitude right by ``shift`` bits rounding per ``mode``."""
+    if shift <= 0:
+        return mag << (-shift)
+    kept = mag >> shift
+    rem = mag & ((1 << shift) - 1)
+    if rem == 0:
+        return kept
+    half = 1 << (shift - 1)
+    if mode == RZ:
+        bump = False
+    elif mode == RD:
+        bump = neg
+    elif mode == RU:
+        bump = not neg
+    elif mode == RNE:
+        bump = rem > half or (rem == half and (kept & 1) == 1)
+    elif mode == RNA:
+        bump = rem >= half
+    else:  # pragma: no cover
+        raise ValueError(mode)
+    return kept + 1 if bump else kept
+
+
+def signed_align(neg: bool, mag: int, lsb_exp: int, scale_exp: int, f: int, mode: str) -> int:
+    """Align to quanta of ``2^(scale_exp - f)`` under ``mode`` (RZ_F / RD_F)."""
+    shift = (scale_exp - f) - lsb_exp
+    m = round_shift(mag, shift, mode, neg)
+    return -m if neg else m
+
+
+def encode(fmt: Fmt, neg: bool, mag: int, lsb_exp: int, mode: str) -> int:
+    """Encode ``(-1)^neg * mag * 2^lsb_exp`` into ``fmt`` under ``mode``."""
+    sign_bit = (1 << (fmt.ebits + fmt.mbits)) if (fmt.signed and neg) else 0
+    if mag == 0:
+        return 0 if fmt.style == EXP_ONLY else sign_bit
+    m = fmt.mbits
+    e_true = lsb_exp + mag.bit_length() - 1
+    emin = fmt.emin
+    q_exp = max(e_true - m, emin - m)
+    rounded = round_shift(mag, q_exp - lsb_exp, mode, neg)
+    if rounded == 0:
+        return 0 if fmt.style == EXP_ONLY else sign_bit
+    r_len = rounded.bit_length()
+    value_exp = q_exp + r_len - 1
+    if value_exp >= emin:
+        extra = r_len - (m + 1)
+        sig = (rounded >> extra) if extra > 0 else (rounded << -extra)
+        final_exp = value_exp
+    else:
+        final_exp = emin
+        sig = rounded
+    if final_exp > fmt.emax:
+        to_inf = mode in (RNE, RNA) or (mode == RD and neg) or (mode == RU and not neg)
+        inf = fmt.inf_pattern()
+        return (inf | sign_bit) if (to_inf and inf is not None) else (fmt.max_finite_pattern() | sign_bit)
+    if fmt.style == EXP_ONLY:
+        return max(0, min(0xFE, final_exp + 127))
+    if final_exp == emin and sig < (1 << m):
+        return sign_bit | sig
+    pat = sign_bit | ((final_exp + fmt.bias) << m) | (sig & ((1 << m) - 1))
+    if fmt.style == NAN_ONLY and (pat & ~sign_bit) == (1 << (fmt.ebits + fmt.mbits)) - 1:
+        return sign_bit | fmt.max_finite_pattern()
+    return pat
+
+
+def to_float(fmt: Fmt, bits: int) -> float:
+    cls, sign, exp, sig = decode(fmt, bits)
+    s = -1.0 if sign else 1.0
+    if cls == ZERO:
+        return s * 0.0
+    if cls == INF:
+        return s * float("inf")
+    if cls == NAN:
+        return float("nan")
+    return s * sig * 2.0 ** (exp - fmt.mbits)
+
+
+def from_float(fmt: Fmt, v: float, mode: str = RNE) -> int:
+    """Encoding of a Python float (exact double) into ``fmt``."""
+    import math
+    import struct
+
+    if fmt is FP64:
+        return struct.unpack("<Q", struct.pack("<d", v))[0]
+    if math.isnan(v):
+        pat = fmt.nan_pattern()
+        return pat if pat is not None else fmt.max_finite_pattern()
+    bits64 = struct.unpack("<Q", struct.pack("<d", v))[0]
+    neg = bits64 >> 63 == 1
+    sign_bit = (1 << (fmt.ebits + fmt.mbits)) if (fmt.signed and neg) else 0
+    if math.isinf(v):
+        inf = fmt.inf_pattern()
+        return (inf | sign_bit) if inf is not None else (fmt.max_finite_pattern() | sign_bit)
+    cls, _, exp, sig = decode(FP64, bits64)
+    if cls == ZERO:
+        return 0 if fmt.style == EXP_ONLY else sign_bit
+    return encode(fmt, neg, sig, exp - 52, mode)
+
+
+# ---------------------------------------------------------------------------
+# Conversion functions rho (Table 2)
+# ---------------------------------------------------------------------------
+
+RZ_FP32, RZ_E8M13, RNE_FP32, RNE_FP16 = "RZ-FP32", "RZ-E8M13", "RNE-FP32", "RNE-FP16"
+
+RHO_OUT = {RZ_FP32: FP32, RZ_E8M13: FP32, RNE_FP32: FP32, RNE_FP16: FP16}
+
+
+def e8m13_to_fp32_pattern(pat: int) -> int:
+    sign = (pat >> 21) & 1
+    exp = (pat >> 13) & 0xFF
+    mant = pat & 0x1FFF
+    return (sign << 31) | (exp << 23) | (mant << 10)
+
+
+def rho_convert(rho: str, s_quanta: int, scale_exp: int, f: int) -> int:
+    neg = s_quanta < 0
+    mag = -s_quanta if neg else s_quanta
+    lsb = scale_exp - f
+    if rho == RZ_FP32:
+        return encode(FP32, neg, mag, lsb, RZ)
+    if rho == RNE_FP32:
+        return encode(FP32, neg, mag, lsb, RNE)
+    if rho == RNE_FP16:
+        return encode(FP16, neg, mag, lsb, RNE)
+    if rho == RZ_E8M13:
+        return e8m13_to_fp32_pattern(encode(E8M13, neg, mag, lsb, RZ))
+    raise ValueError(rho)
+
+
+# ---------------------------------------------------------------------------
+# Special-value handling (paper 4.2)
+# ---------------------------------------------------------------------------
+
+NV_NAN32, NV_NAN16 = 0x7FFFFFFF, 0x7FFF
+QUIET_NAN32, QUIET_NAN16, QUIET_NAN64 = 0x7FC00000, 0x7E00, 0x7FF8000000000000
+
+
+def canonical_nan(fmt: Fmt, nv: bool) -> int:
+    if fmt is FP32:
+        return NV_NAN32 if nv else QUIET_NAN32
+    if fmt is FP16:
+        return NV_NAN16 if nv else QUIET_NAN16
+    if fmt is FP64:
+        return QUIET_NAN64
+    raise ValueError(fmt.name)
+
+
+def scan_specials(pairs, c_dec) -> Optional[Tuple[str, bool]]:
+    """Return None (finite path) or ("nan", _) / ("inf", is_negative)."""
+    pos_inf = neg_inf = nan = False
+    for a, b in pairs:
+        (ca, sa, _, _), (cb, sb, _, _) = a, b
+        if ca == NAN or cb == NAN:
+            nan = True
+        elif (ca == INF and cb == ZERO) or (ca == ZERO and cb == INF):
+            nan = True
+        elif ca == INF or cb == INF:
+            if sa != sb:
+                neg_inf = True
+            else:
+                pos_inf = True
+    cc, sc, _, _ = c_dec
+    if cc == NAN:
+        nan = True
+    elif cc == INF:
+        if sc:
+            neg_inf = True
+        else:
+            pos_inf = True
+    if nan or (pos_inf and neg_inf):
+        return ("nan", False)
+    if pos_inf:
+        return ("inf", False)
+    if neg_inf:
+        return ("inf", True)
+    return None
+
+
+def special_pattern(kind: Tuple[str, bool], fmt: Fmt, nv: bool) -> int:
+    if kind[0] == "nan":
+        return canonical_nan(fmt, nv)
+    inf = fmt.inf_pattern()
+    assert inf is not None
+    return inf | ((1 << (fmt.ebits + fmt.mbits)) if kind[1] else 0)
+
+
+def _zero_result(prod_negs: Sequence[bool], c_neg: bool, fmt: Fmt) -> int:
+    all_neg = c_neg
+    for s in prod_negs:
+        all_neg = all_neg and s
+    return (1 << (fmt.ebits + fmt.mbits)) if all_neg else 0
+
+
+# ---------------------------------------------------------------------------
+# Elementary operations (Algorithms 1, 3, 6-11)
+# ---------------------------------------------------------------------------
+
+
+def ftz_mul(fmt: Fmt, x_bits: int, y_bits: int) -> int:
+    """FTZ-Mul (Algorithm 1): RNE-FP32(x*y) with subnormal output flush."""
+    dx, dy = decode(fmt, x_bits), decode(fmt, y_bits)
+    sp = scan_specials([(dx, dy)], (ZERO, False, 0, 0))
+    if sp is not None:
+        return special_pattern(sp, FP32, nv=False)
+    if dx[3] == 0 or dy[3] == 0:
+        return (1 << 31) if (dx[1] != dy[1]) else 0
+    neg = dx[1] != dy[1]
+    mag = dx[3] * dy[3]
+    z = encode(FP32, neg, mag, dx[2] + dy[2] - 2 * fmt.mbits, RNE)
+    return _flush32(z)
+
+
+def ftz_add(x_bits: int, y_bits: int) -> int:
+    """FTZ-Add (Algorithm 1) over FP32 patterns."""
+    dx, dy = decode(FP32, x_bits), decode(FP32, y_bits)
+    if dx[0] == NAN or dy[0] == NAN:
+        return QUIET_NAN32
+    if dx[0] == INF or dy[0] == INF:
+        if dx[0] == INF and dy[0] == INF and dx[1] != dy[1]:
+            return QUIET_NAN32
+        d = dx if dx[0] == INF else dy
+        return 0xFF800000 if d[1] else 0x7F800000
+    if dx[3] == 0 and dy[3] == 0:
+        # IEEE: -0 + -0 = -0, otherwise +0 (RNE)
+        return (1 << 31) if (dx[1] and dy[1]) else 0
+    # exact integer sum at common LSB
+    terms = [t for t in (dx, dy) if t[3]]
+    lsb = min(t[2] - 23 for t in terms)
+    acc = 0
+    for t in terms:
+        v = t[3] << ((t[2] - 23) - lsb)
+        acc += -v if t[1] else v
+    if acc == 0:
+        return 0  # exact cancellation -> +0 under RNE
+    z = encode(FP32, acc < 0, abs(acc), lsb, RNE)
+    return _flush32(z)
+
+
+def _flush32(z: int) -> int:
+    cls, sign, _, sig = decode(FP32, z)
+    if cls == FINITE and sig < (1 << 23):
+        return (1 << 31) if sign else 0
+    return z
+
+
+def fma_op(fmt: Fmt, a_bits: int, b_bits: int, c_bits: int) -> int:
+    """Standard IEEE FMA (Algorithm 3) for FP32/FP64 via exact integers."""
+    da, db, dc = decode(fmt, a_bits), decode(fmt, b_bits), decode(fmt, c_bits)
+    sp = scan_specials([(da, db)], dc)
+    if sp is not None:
+        return special_pattern(sp, fmt, nv=False)
+    m = fmt.mbits
+    pv = da[3] * db[3]
+    prod_neg = da[1] != db[1]
+    if pv == 0 and dc[3] == 0:
+        # all-zero inputs: IEEE sum of signed zeros under RNE
+        if prod_neg and dc[1]:
+            return 1 << (fmt.ebits + fmt.mbits)
+        return 0
+    lsb = min(da[2] + db[2] - 2 * m, dc[2] - m)
+    acc = 0
+    if pv:
+        v = pv << ((da[2] + db[2] - 2 * m) - lsb)
+        acc += -v if prod_neg else v
+    if dc[3]:
+        v = dc[3] << ((dc[2] - m) - lsb)
+        acc += -v if dc[1] else v
+    if acc == 0:
+        return 0  # exact cancellation -> +0 (RNE)
+    return encode(fmt, acc < 0, abs(acc), lsb, RNE)
+
+
+def e_fdpa(in_fmt: Fmt, a: Sequence[int], b: Sequence[int], c_bits: int) -> int:
+    """E-FDPA (Algorithm 6): exact dot-product-add, one RNE-FP32 rounding."""
+    da = [decode(in_fmt, x) for x in a]
+    db = [decode(in_fmt, x) for x in b]
+    dc = decode(FP32, c_bits)
+    sp = scan_specials(zip(da, db), dc)
+    if sp is not None:
+        return special_pattern(sp, FP32, nv=False)
+    m = in_fmt.mbits
+    acc = 0
+    scale = -400  # common LSB well below every possible term
+    for x, y in zip(da, db):
+        pv = x[3] * y[3]
+        if pv:
+            v = pv << ((x[2] + y[2] - 2 * m) - scale)
+            acc += -v if (x[1] != y[1]) else v
+    if dc[3]:
+        v = dc[3] << ((dc[2] - 23) - scale)
+        acc += -v if dc[1] else v
+    if acc == 0:
+        return _zero_result([x[1] != y[1] for x, y in zip(da, db)], dc[1], FP32)
+    return encode(FP32, acc < 0, abs(acc), scale, RNE)
+
+
+def t_fdpa(
+    in_fmt: Fmt,
+    a: Sequence[int],
+    b: Sequence[int],
+    c_bits: int,
+    f: int,
+    rho: str,
+    scale_exp: int = 0,
+    scale_nan: bool = False,
+) -> int:
+    """T-FDPA (Algorithm 7); with ``scale_exp`` it is ST-FDPA (Algorithm 8)."""
+    out_fmt = RHO_OUT[rho]
+    da = [decode(in_fmt, x) for x in a]
+    db = [decode(in_fmt, x) for x in b]
+    dc = decode(out_fmt, c_bits)
+    if scale_nan:
+        return canonical_nan(out_fmt, nv=True)
+    sp = scan_specials(zip(da, db), dc)
+    if sp is not None:
+        return special_pattern(sp, out_fmt, nv=True)
+    m = in_fmt.mbits
+    # terms: (neg, mag, nominal_exp, lsb_exp)
+    terms = []
+    for x, y in zip(da, db):
+        pv = x[3] * y[3]
+        if pv:
+            e = x[2] + y[2] + scale_exp
+            terms.append((x[1] != y[1], pv, e, e - 2 * m))
+    if dc[3]:
+        terms.append((dc[1], dc[3], dc[2], dc[2] - out_fmt.mbits))
+    prod_negs = [x[1] != y[1] for x, y in zip(da, db)]
+    if not terms:
+        return _zero_result(prod_negs, dc[1], out_fmt)
+    emax = max(t[2] for t in terms)
+    s = sum(signed_align(t[0], t[1], t[3], emax, f, RZ) for t in terms)
+    if s == 0:
+        return _zero_result(prod_negs, dc[1], out_fmt)
+    return rho_convert(rho, s, emax, f)
+
+
+def st_fdpa(
+    in_fmt: Fmt,
+    a: Sequence[int],
+    b: Sequence[int],
+    c_bits: int,
+    alpha: int,
+    beta: int,
+    f: int,
+    rho: str,
+) -> int:
+    """ST-FDPA (Algorithm 8) with E8M0 scales."""
+    dal, dbe = decode(E8M0, alpha), decode(E8M0, beta)
+    nan = dal[0] == NAN or dbe[0] == NAN
+    se = 0 if nan else dal[2] + dbe[2]
+    return t_fdpa(in_fmt, a, b, c_bits, f, rho, scale_exp=se, scale_nan=nan)
+
+
+def gst_fdpa(
+    in_fmt: Fmt,
+    a: Sequence[int],
+    b: Sequence[int],
+    c_bits: int,
+    alpha: Sequence[int],
+    beta: Sequence[int],
+    g: int,
+    kblock: int,
+    f: int,
+    rho: str,
+    scale_fmt: Fmt,
+) -> int:
+    """GST-FDPA (Algorithm 9)."""
+    out_fmt = RHO_OUT[rho]
+    da = [decode(in_fmt, x) for x in a]
+    db = [decode(in_fmt, x) for x in b]
+    dc = decode(out_fmt, c_bits)
+    sal = [decode(scale_fmt, s) for s in alpha]
+    sbe = [decode(scale_fmt, s) for s in beta]
+    if any(s[0] == NAN for s in list(sal) + list(sbe)):
+        return canonical_nan(out_fmt, nv=True)
+    sp = scan_specials(zip(da, db), dc)
+    if sp is not None:
+        return special_pattern(sp, out_fmt, nv=True)
+    m = in_fmt.mbits
+    fs = scale_fmt.mbits
+    terms = []
+    for gi in range(len(a) // g):
+        blk = gi * g // kblock
+        sa, sb = sal[blk], sbe[blk]
+        lo, hi = gi * g, (gi + 1) * g
+        lsbs = [da[k][2] + db[k][2] - 2 * m for k in range(lo, hi) if da[k][3] and db[k][3]]
+        if not lsbs:
+            continue
+        min_lsb = min(lsbs)
+        p = 0
+        for k in range(lo, hi):
+            pv = da[k][3] * db[k][3]
+            if pv:
+                v = pv << ((da[k][2] + db[k][2] - 2 * m) - min_lsb)
+                p += -v if (da[k][1] != db[k][1]) else v
+        s_g = p * sa[3] * sb[3]
+        if s_g == 0:
+            continue
+        e_g = sa[2] + sb[2]
+        # value = s_g * 2^(min_lsb - 2*fs) * 2^(e_g)
+        terms.append((s_g < 0, abs(s_g), e_g, e_g - (2 * fs - min_lsb)))
+    if dc[3]:
+        terms.append((dc[1], dc[3], dc[2], dc[2] - out_fmt.mbits))
+    prod_negs = [x[1] != y[1] for x, y in zip(da, db)]
+    if not terms:
+        return _zero_result(prod_negs, dc[1], out_fmt)
+    emax = max(t[2] for t in terms)
+    s = sum(signed_align(t[0], t[1], t[3], emax, f, RZ) for t in terms)
+    if s == 0:
+        return _zero_result(prod_negs, dc[1], out_fmt)
+    return rho_convert(rho, s, emax, f)
+
+
+def tr_fdpa(
+    in_fmt: Fmt,
+    a: Sequence[int],
+    b: Sequence[int],
+    c_bits: int,
+    f: int,
+    f2: int,
+    inner_mode: str = RD,
+) -> int:
+    """TR-FDPA (Algorithm 10). ``inner_mode=RZ`` gives the Figure-3
+    hypothetical symmetric variant."""
+    da = [decode(in_fmt, x) for x in a]
+    db = [decode(in_fmt, x) for x in b]
+    dc = decode(FP32, c_bits)
+    m = in_fmt.mbits
+
+    terms = []
+    ovf_pos = ovf_neg = False
+    for x, y in zip(da, db):
+        pv = x[3] * y[3]
+        if pv:
+            e = x[2] + y[2]
+            # overflow check: |value| >= 2^128
+            if (e - 2 * m) + pv.bit_length() - 1 >= 128:
+                if x[1] != y[1]:
+                    ovf_neg = True
+                else:
+                    ovf_pos = True
+                continue
+            terms.append((x[1] != y[1], pv, e, e - 2 * m))
+
+    sp = scan_specials(zip(da, db), dc)
+    if ovf_pos or ovf_neg:
+        if sp is None:
+            sp = ("nan", False) if (ovf_pos and ovf_neg) else ("inf", ovf_neg)
+        elif sp[0] == "inf":
+            if (sp[1] and ovf_pos) or (not sp[1] and ovf_neg) or (ovf_pos and ovf_neg):
+                sp = ("nan", False)
+    if sp is not None:
+        return special_pattern(sp, FP32, nv=False)
+
+    prod_negs = [x[1] != y[1] for x, y in zip(da, db)]
+    e_p = max((t[2] for t in terms), default=None)
+    t_sum = 0
+    if e_p is not None:
+        t_sum = sum(signed_align(t[0], t[1], t[3], e_p, f, RZ) for t in terms)
+    c_zero = dc[3] == 0
+    if t_sum == 0 and c_zero:
+        return _zero_result(prod_negs, dc[1], FP32)
+    e_c = dc[2] if not c_zero else None
+    e = max(x for x in (e_p, e_c) if x is not None)
+    t_prime = 0
+    if t_sum:
+        t_prime = signed_align(t_sum < 0, abs(t_sum), e_p - f, e, f2, inner_mode)
+    s_c = 0
+    if not c_zero:
+        s_c = signed_align(dc[1], dc[3], dc[2] - 23, e, f, inner_mode) << (f2 - f)
+    s = t_prime + s_c
+    if s == 0:
+        return _zero_result(prod_negs, dc[1], FP32)
+    return rho_convert(RNE_FP32, s, e, f2)
+
+
+def gtr_fdpa(
+    in_fmt: Fmt,
+    a: Sequence[int],
+    b: Sequence[int],
+    c_bits: int,
+    f: int,
+    f2: int,
+    inner_mode: str = RD,
+) -> int:
+    """GTR-FDPA (Algorithm 11): even/odd groups, rounded sums, special
+    truncation of a tiny accumulator."""
+    da = [decode(in_fmt, x) for x in a]
+    db = [decode(in_fmt, x) for x in b]
+    dc = decode(FP32, c_bits)
+    sp = scan_specials(zip(da, db), dc)
+    if sp is not None:
+        return special_pattern(sp, FP32, nv=False)
+    m = in_fmt.mbits
+    terms = []
+    for x, y in zip(da, db):
+        pv = x[3] * y[3]
+        e = x[2] + y[2]
+        terms.append((x[1] != y[1], pv, e, e - 2 * m))
+
+    def group(parity: int):
+        sel = [t for t in terms[parity::2] if t[1]]
+        if not sel:
+            return (0, None)
+        e_g = max(t[2] for t in sel)
+        return (sum(signed_align(t[0], t[1], t[3], e_g, f, RZ) for t in sel), e_g)
+
+    t_even, e_even = group(0)
+    t_odd, e_odd = group(1)
+    es = [x for x in (e_even, e_odd) if x is not None]
+    e_max = max(es) if es else None
+    t = 0
+    if e_max is not None:
+        for gsum, ge in ((t_even, e_even), (t_odd, e_odd)):
+            if ge is not None and gsum:
+                t += signed_align(gsum < 0, abs(gsum), ge - f, e_max, f, inner_mode)
+
+    prod_negs = [x[1] != y[1] for x, y in zip(da, db)]
+    c_zero = dc[3] == 0
+    if t == 0 and c_zero:
+        return _zero_result(prod_negs, dc[1], FP32)
+    e_c = dc[2] if not c_zero else None
+    e = max(x for x in (e_max, e_c) if x is not None)
+    t_prime = 0
+    if t:
+        t_prime = signed_align(t < 0, abs(t), e_max - f, e, f2, inner_mode)
+    s_c = 0
+    if not c_zero and not (dc[2] < e - f - 1):  # special truncation
+        s_c = signed_align(dc[1], dc[3], dc[2] - 23, e, f, inner_mode) << (f2 - f)
+    s = t_prime + s_c
+    if s == 0:
+        return _zero_result(prod_negs, dc[1], FP32)
+    return rho_convert(RNE_FP32, s, e, f2)
+
+
+# ---------------------------------------------------------------------------
+# Matrix-level models (Algorithms 2, 4, 5)
+# ---------------------------------------------------------------------------
+
+
+def _flush_sub(fmt: Fmt, bits: int) -> int:
+    cls, _, _, sig = decode(fmt, bits)
+    if cls == FINITE and sig < (1 << fmt.mbits):
+        return 0
+    return bits
+
+
+def dpa(spec: dict, a_row: Sequence[int], b_col: Sequence[int], c: int,
+        sa: Sequence[int] = (), sb: Sequence[int] = ()) -> int:
+    """One dot-product-accumulate under a model-spec dict.
+
+    ``spec`` keys: ``kind`` in {ftz_addmul, fma, e_fdpa, t_fdpa, st_fdpa,
+    gst_fdpa, tr_fdpa, gtr_fdpa}, ``in`` (input format name), and the
+    model parameters used by the Rust ISA registry.
+    """
+    kind = spec["kind"]
+    in_fmt = FORMATS[spec["in"]]
+    k = len(a_row)
+    if kind == "fma":
+        d = c
+        for i in range(k):
+            d = fma_op(in_fmt, a_row[i], b_col[i], d)
+        return d
+    if kind == "ftz_addmul":
+        p = spec["p"]
+        d = _flush_sub(FP32, c)
+        i = 0
+        while i < k:
+            hi = min(i + p, k)
+            prods = [
+                ftz_mul(in_fmt, _flush_sub(in_fmt, a_row[j]), _flush_sub(in_fmt, b_col[j]))
+                for j in range(i, hi)
+            ]
+            if len(prods) == 1:
+                s = prods[0]
+            elif len(prods) == 2:
+                s = ftz_add(prods[0], prods[1])
+            elif len(prods) == 4:
+                s = ftz_add(ftz_add(prods[0], prods[1]), ftz_add(prods[2], prods[3]))
+            else:
+                s = ftz_add(prods[0], prods[1])
+                for q in prods[2:]:
+                    s = ftz_add(s, q)
+            d = ftz_add(d, s)
+            i = hi
+        return d
+    if kind == "e_fdpa":
+        l = spec["l"]
+        d = c
+        for lo in range(0, k, l):
+            d = e_fdpa(in_fmt, a_row[lo:lo + l], b_col[lo:lo + l], d)
+        return d
+    if kind == "t_fdpa":
+        l = min(spec["l_max"], k)
+        d = c
+        for lo in range(0, k, l):
+            d = t_fdpa(in_fmt, a_row[lo:lo + l], b_col[lo:lo + l], d, spec["f"], spec["rho"])
+        return d
+    if kind == "st_fdpa":
+        l = min(spec["l_max"], k)
+        kb = spec["kblock"]
+        d = c
+        for lo in range(0, k, l):
+            d = st_fdpa(in_fmt, a_row[lo:lo + l], b_col[lo:lo + l], d,
+                        sa[lo // kb], sb[lo // kb], spec["f"], spec["rho"])
+        return d
+    if kind == "gst_fdpa":
+        l = min(spec["l"], k)
+        kb = spec["kblock"]
+        d = c
+        for lo in range(0, k, l):
+            d = gst_fdpa(in_fmt, a_row[lo:lo + l], b_col[lo:lo + l], d,
+                         sa[lo // kb:(lo + l) // kb], sb[lo // kb:(lo + l) // kb],
+                         spec["g"], kb, spec["f"], spec["rho"], FORMATS[spec["scale_fmt"]])
+        return d
+    if kind == "tr_fdpa":
+        l = min(spec["l_max"], k)
+        d = c
+        for lo in range(0, k, l):
+            d = tr_fdpa(in_fmt, a_row[lo:lo + l], b_col[lo:lo + l], d,
+                        spec["f"], spec["f2"], spec.get("inner_mode", RD))
+        return d
+    if kind == "gtr_fdpa":
+        l = min(spec["l_max"], k)
+        d = c
+        for lo in range(0, k, l):
+            d = gtr_fdpa(in_fmt, a_row[lo:lo + l], b_col[lo:lo + l], d,
+                         spec["f"], spec["f2"], spec.get("inner_mode", RD))
+        return d
+    raise ValueError(kind)
+
+
+def mma(spec: dict, A: List[List[int]], B: List[List[int]], C: List[List[int]],
+        SA: Optional[List[List[int]]] = None, SB: Optional[List[List[int]]] = None) -> List[List[int]]:
+    """Full MMA ``D = A x B + C`` over bit-pattern matrices (row-major lists)."""
+    m, k = len(A), len(A[0])
+    n = len(B[0])
+    out = []
+    for i in range(m):
+        row = []
+        for j in range(n):
+            b_col = [B[r][j] for r in range(k)]
+            sa = SA[i] if SA is not None else ()
+            sb = [SB[r][j] for r in range(len(SB))] if SB is not None else ()
+            row.append(dpa(spec, A[i], b_col, C[i][j], sa, sb))
+        out.append(row)
+    return out
+
+
+# Model specs for the instructions exported as AOT artifacts (mirrors the
+# Rust ISA registry rows used by the cross-validation tests).
+def _spec(**kw):
+    kw["in"] = kw.pop("in_")
+    return kw
+
+
+ARTIFACT_SPECS = {
+    "volta_fp16_fp32": _spec(kind="t_fdpa", in_="fp16", l_max=4, f=23, rho=RZ_FP32),
+    "turing_fp16_fp32": _spec(kind="t_fdpa", in_="fp16", l_max=8, f=24, rho=RZ_FP32),
+    "hopper_fp16_fp32": _spec(kind="t_fdpa", in_="fp16", l_max=16, f=25, rho=RZ_FP32),
+    "hopper_fp16_fp16": _spec(kind="t_fdpa", in_="fp16", l_max=16, f=25, rho=RNE_FP16),
+    "ada_fp8e4m3_fp32": _spec(kind="t_fdpa", in_="fp8e4m3", l_max=16, f=13, rho=RZ_E8M13),
+    "ada_fp8e5m2_fp32": _spec(kind="t_fdpa", in_="fp8e5m2", l_max=16, f=13, rho=RZ_E8M13),
+    "cdna2_fp16": _spec(kind="ftz_addmul", in_="fp16", p=4),
+    "cdna3_fp16": _spec(kind="tr_fdpa", in_="fp16", l_max=8, f=24, f2=31),
+}

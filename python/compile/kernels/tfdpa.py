@@ -1,0 +1,315 @@
+"""Pallas kernel: bit-accurate T-FDPA / TR-FDPA GEMM over bit patterns.
+
+Layer-1 of the stack. The kernel reproduces NVIDIA's truncated fused
+dot-product-add (Algorithm 7) and AMD CDNA3's truncated-rounded variant
+(Algorithm 10) *bit for bit*, operating on uint32 bit-pattern tensors with
+pure integer arithmetic (decode -> exact significand products -> align at
+e_max -> truncate -> fixed-point sum -> rho conversion).
+
+Everything is vectorized int64 lane math — deliberately so: the modeled
+hardware arithmetic is non-floating-point internally (paper §4), so a
+faithful TPU mapping runs on the VPU over VMEM-resident tiles (see
+DESIGN.md §Hardware-Adaptation), not the MXU.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom calls, and bit-accuracy is the deliverable — real-TPU performance
+is estimated from the BlockSpec footprint in DESIGN.md §Perf.
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+jax.config.update("jax_enable_x64", True)
+
+BIG_NEG = -(1 << 40)  # plain int: jnp constants would be captured by pallas
+
+
+@dataclass(frozen=True)
+class FmtSpec:
+    """Static decode parameters of an input format."""
+
+    ebits: int
+    mbits: int
+    bias: int
+    style: str  # "ieee" | "nan_only"
+
+    @property
+    def emin(self) -> int:
+        return 1 - self.bias
+
+
+FP16 = FmtSpec(5, 10, 15, "ieee")
+BF16 = FmtSpec(8, 7, 127, "ieee")
+TF32 = FmtSpec(8, 10, 127, "ieee")
+FP8E4M3 = FmtSpec(4, 3, 7, "nan_only")
+FP8E5M2 = FmtSpec(5, 2, 15, "ieee")
+FP32 = FmtSpec(8, 23, 127, "ieee")
+
+IN_FORMATS = {
+    "fp16": FP16,
+    "bf16": BF16,
+    "tf32": TF32,
+    "fp8e4m3": FP8E4M3,
+    "fp8e5m2": FP8E5M2,
+}
+
+
+def _decode(bits, fmt: FmtSpec):
+    """Vectorized decode -> (sign, exp, sig, is_nan, is_inf) int64/bool."""
+    bits = bits.astype(jnp.int64)
+    eb, mb = fmt.ebits, fmt.mbits
+    sign = (bits >> (eb + mb)) & 1
+    expf = (bits >> mb) & ((1 << eb) - 1)
+    mant = bits & ((1 << mb) - 1)
+    all_ones = (1 << eb) - 1
+    if fmt.style == "ieee":
+        is_inf = (expf == all_ones) & (mant == 0)
+        is_nan = (expf == all_ones) & (mant != 0)
+    else:  # nan_only (E4M3): no inf, single NaN code point
+        is_inf = jnp.zeros_like(bits, dtype=bool)
+        is_nan = (expf == all_ones) & (mant == (1 << mb) - 1)
+    subnormal = expf == 0
+    sig = jnp.where(subnormal, mant, mant | (1 << mb))
+    exp = jnp.where(subnormal, fmt.emin, expf - fmt.bias)
+    sig = jnp.where(is_inf | is_nan, 0, sig)
+    return sign, exp, sig, is_nan, is_inf
+
+
+def _align(neg, mag, lsb_exp, scale_exp, f, mode: str):
+    """Vectorized signed_align: quanta of 2^(scale_exp - f) under mode.
+
+    mag: int64 >= 0 with value mag * 2^lsb_exp. Returns signed int64 quanta.
+    mode in {"RZ", "RD", "RNE"}.
+    """
+    shift = (scale_exp - f) - lsb_exp
+    rsh = jnp.clip(shift, 0, 63)
+    lsh = jnp.clip(-shift, 0, 63)
+    kept = mag >> rsh
+    rem = mag - (kept << rsh)
+    inexact = rem != 0
+    if mode == "RZ":
+        bump = jnp.zeros_like(inexact)
+    elif mode == "RD":
+        bump = inexact & neg.astype(bool)
+    elif mode == "RNE":
+        half = jnp.where(rsh > 0, jnp.int64(1) << jnp.maximum(rsh - 1, 0), jnp.int64(0))
+        bump = (rem > half) | ((rem == half) & inexact & ((kept & 1) == 1))
+    else:  # pragma: no cover
+        raise ValueError(mode)
+    kept = kept + bump.astype(jnp.int64)
+    val = jnp.where(shift >= 0, kept, mag << lsh)
+    return jnp.where(neg.astype(bool), -val, val)
+
+
+def _encode_out(neg, mag, lsb_exp, mbits: int, ebits: int, bias: int, mode: str):
+    """Vectorized encode of (-1)^neg * mag * 2^lsb_exp into an IEEE-style
+    format with ``mbits``/``ebits``/``bias``; returns the bit pattern and
+    never produces NaN (specials are overlaid by the caller).
+
+    Mirrors ``ref.encode`` exactly (same q_exp / carry / overflow rules).
+    """
+    emin = 1 - bias
+    emax = ((1 << ebits) - 1) - 1 - bias
+    mag = mag.astype(jnp.int64)
+    # bit length via frexp on exact float64 (mag < 2^53 guaranteed)
+    _, ex = jnp.frexp(mag.astype(jnp.float64))
+    bitlen = ex.astype(jnp.int64)  # mag in [2^(bitlen-1), 2^bitlen)
+    e_true = lsb_exp + bitlen - 1
+    q_exp = jnp.maximum(e_true - mbits, emin - mbits)
+    rounded = _align(jnp.zeros_like(mag, dtype=bool), mag, lsb_exp, q_exp + mbits, mbits, mode)
+    _, ex2 = jnp.frexp(rounded.astype(jnp.float64))
+    r_len = ex2.astype(jnp.int64)
+    value_exp = q_exp + r_len - 1
+    is_normal = value_exp >= emin
+    extra = jnp.where(is_normal, r_len - (mbits + 1), 0)
+    sig = jnp.where(
+        extra > 0,
+        rounded >> jnp.clip(extra, 0, 63),
+        rounded << jnp.clip(-extra, 0, 63),
+    )
+    final_exp = jnp.where(is_normal, value_exp, emin)
+    # assemble
+    sign_bit = neg.astype(jnp.int64) << (ebits + mbits)
+    subnormal_pat = sign_bit | rounded  # rounded already aligned at emin-mbits
+    exp_field = final_exp + bias
+    normal_pat = sign_bit | (exp_field << mbits) | (sig & ((1 << mbits) - 1))
+    pat = jnp.where(is_normal & (sig >= (1 << mbits)), normal_pat, subnormal_pat)
+    # overflow
+    to_inf = mode in ("RNE",)
+    inf_pat = sign_bit | (((1 << ebits) - 1) << mbits)
+    max_pat = sign_bit | ((((1 << ebits) - 2) << mbits) | ((1 << mbits) - 1))
+    ovf = final_exp > emax
+    pat = jnp.where(ovf, inf_pat if to_inf else max_pat, pat)
+    # zero magnitude
+    pat = jnp.where(rounded == 0, sign_bit, pat)
+    pat = jnp.where(mag == 0, sign_bit, pat)
+    return pat
+
+
+def _rho_convert(rho: str, s, scale_exp, f):
+    """Vectorized Table-2 conversion of S quanta at 2^(scale_exp - f)."""
+    neg = s < 0
+    mag = jnp.abs(s)
+    lsb = scale_exp - f
+    if rho == "RZ-FP32":
+        return _encode_out(neg, mag, lsb, 23, 8, 127, "RZ")
+    if rho == "RNE-FP32":
+        return _encode_out(neg, mag, lsb, 23, 8, 127, "RNE")
+    if rho == "RNE-FP16":
+        return _encode_out(neg, mag, lsb, 10, 5, 15, "RNE")
+    if rho == "RZ-E8M13":
+        pat = _encode_out(neg, mag, lsb, 13, 8, 127, "RZ")
+        sign = (pat >> 21) & 1
+        exp = (pat >> 13) & 0xFF
+        mant = pat & 0x1FFF
+        return (sign << 31) | (exp << 23) | (mant << 10)
+    raise ValueError(rho)
+
+
+def _out_fmt(rho: str) -> FmtSpec:
+    return FP16 if rho == "RNE-FP16" else FP32
+
+
+def _fdpa_block(sa, ea, ga, na_nan, na_inf, sb, eb, gb, nb_nan, nb_inf,
+                c_bits, in_fmt: FmtSpec, f: int, rho: str, variant: str,
+                f2: int = 31):
+    """One fused dot-product-add over the K axis (axis 1 of [M,K,N] terms).
+
+    sa/ea/ga: decoded A chunk [M,L] (sign/exp/sig); sb/...: B chunk [K=L,N].
+    c_bits: current accumulator [M,N] in the output format.
+    variant: "t" (Algorithm 7), "tr" (Algorithm 10, inner RD), or "tr_rz"
+    (the paper's §6.2.4 hypothetical instruction with inner RZ).
+    """
+    ofmt = _out_fmt(rho)
+    omb = ofmt.mbits
+    cs, ce, cg, c_nan, c_inf = _decode(c_bits, ofmt)
+
+    # products: [M, L, N]
+    p_sig = ga[:, :, None] * gb[None, :, :]
+    p_exp = ea[:, :, None] + eb[None, :, :]
+    p_neg = (sa[:, :, None] != sb[None, :, :])
+    p_nan = na_nan[:, :, None] | nb_nan[None, :, :]
+    a_inf = na_inf[:, :, None]
+    b_inf = nb_inf[None, :, :]
+    a_zero = (ga == 0)[:, :, None] & ~na_nan[:, :, None] & ~na_inf[:, :, None]
+    b_zero = (gb == 0)[None, :, :] & ~nb_nan[None, :, :] & ~nb_inf[None, :, :]
+    p_nan = p_nan | (a_inf & b_zero) | (a_zero & b_inf)
+    p_inf = (a_inf | b_inf) & ~p_nan
+    p_inf_neg = p_inf & p_neg
+    p_inf_pos = p_inf & ~p_neg
+
+    if variant != "t":
+        # multiplication overflow to inf when |product| >= 2^128
+        _, pex = jnp.frexp(p_sig.astype(jnp.float64))
+        p_msb = (p_exp - 2 * in_fmt.mbits) + pex.astype(jnp.int64) - 1
+        ovf = (p_sig > 0) & (p_msb >= 128)
+        p_inf_pos = p_inf_pos | (ovf & ~p_neg)
+        p_inf_neg = p_inf_neg | (ovf & p_neg)
+        p_sig = jnp.where(ovf, 0, p_sig)
+
+    any_nan = jnp.any(p_nan, axis=1) | c_nan
+    has_pos_inf = jnp.any(p_inf_pos, axis=1) | (c_inf & (cs == 0))
+    has_neg_inf = jnp.any(p_inf_neg, axis=1) | (c_inf & (cs == 1))
+    special_nan = any_nan | (has_pos_inf & has_neg_inf)
+    special_inf = (has_pos_inf | has_neg_inf) & ~special_nan
+    special_inf_neg = has_neg_inf & ~special_nan
+
+    # nominal exponents of nonzero product terms
+    live = p_sig > 0
+    e_term = jnp.where(live, p_exp, BIG_NEG)
+
+    if variant == "t":
+        e_c = jnp.where(cg > 0, ce, BIG_NEG)
+        e_max = jnp.maximum(jnp.max(e_term, axis=1), e_c)  # [M,N]
+        q = _align(p_neg, p_sig, p_exp - 2 * in_fmt.mbits,
+                   e_max[:, None, :], f, "RZ")
+        s = jnp.sum(q, axis=1)
+        qc = _align(cs == 1, cg, ce - omb, e_max, f, "RZ")
+        s = s + qc
+        all_zero = (e_max <= BIG_NEG // 2)
+        out = _rho_convert(rho, s, jnp.where(all_zero, 0, e_max), f)
+        s_iszero = (s == 0) | all_zero
+    else:  # "tr"/"tr_rz": products fused without c, then rounded two-term sum
+        inner = "RZ" if variant == "tr_rz" else "RD"
+        e_p = jnp.max(e_term, axis=1)  # [M,N]; BIG_NEG when no products
+        q = _align(p_neg, p_sig, p_exp - 2 * in_fmt.mbits,
+                   e_p[:, None, :], f, "RZ")
+        t_sum = jnp.sum(q, axis=1)
+        c_zero = cg == 0
+        e_c = jnp.where(~c_zero, ce, BIG_NEG)
+        e = jnp.maximum(e_p, e_c)
+        t_neg = t_sum < 0
+        t_prime = _align(t_neg, jnp.abs(t_sum), e_p - f, e, f2, inner)
+        s_c = _align(cs == 1, cg, ce - 23, e, f, inner) << (f2 - f)
+        s_c = jnp.where(c_zero, 0, s_c)
+        s = t_prime + s_c
+        all_zero = e <= BIG_NEG // 2
+        out = _rho_convert("RNE-FP32", s, jnp.where(all_zero, 0, e), f2)
+        s_iszero = (s == 0) | all_zero
+
+    # exact-zero sign rule (shared convention with the Rust crate):
+    # +0 unless every product sign and c are negative
+    all_neg = jnp.all(p_neg, axis=1) & (cs == 1)
+    zero_pat = jnp.where(all_neg, jnp.int64(1) << (ofmt.ebits + omb), 0)
+    out = jnp.where(s_iszero, zero_pat, out)
+
+    # specials overlay
+    if variant == "t":
+        nan_pat = 0x7FFFFFFF if omb == 23 else 0x7FFF  # NVIDIA canonical
+    else:
+        nan_pat = 0x7FC00000  # AMD quiet NaN (FP32 output)
+    inf_base = ((1 << ofmt.ebits) - 1) << omb
+    sign_bit = 1 << (ofmt.ebits + omb)
+    out = jnp.where(special_inf, inf_base + jnp.where(special_inf_neg, sign_bit, 0), out)
+    out = jnp.where(special_nan, nan_pat, out)
+    return out
+
+
+def make_tfdpa_kernel(in_fmt_name: str, m: int, n: int, k: int, l_max: int,
+                      f: int, rho: str, variant: str = "t", f2: int = 31,
+                      use_pallas: bool = True):
+    """Build the bit-accurate GEMM ``D = A x B + C`` callable.
+
+    Inputs/outputs are uint32 bit-pattern tensors: A [M,K], B [K,N],
+    C [M,N] (output-format patterns); returns D [M,N].
+    """
+    in_fmt = IN_FORMATS[in_fmt_name]
+    l = min(l_max, k)
+    assert k % l == 0, "K must be a multiple of the FDPA vector length"
+
+    def compute(a_bits, b_bits, c_bits):
+        sa, ea, ga, a_nan, a_inf = _decode(a_bits, in_fmt)
+        sb, eb_, gb, b_nan, b_inf = _decode(b_bits, in_fmt)
+        d = c_bits.astype(jnp.int64)
+        for lo in range(0, k, l):
+            sl = slice(lo, lo + l)
+            d = _fdpa_block(
+                sa[:, sl], ea[:, sl], ga[:, sl], a_nan[:, sl], a_inf[:, sl],
+                sb[sl, :], eb_[sl, :], gb[sl, :], b_nan[sl, :], b_inf[sl, :],
+                d, in_fmt, f, rho, variant, f2,
+            )
+        return d.astype(jnp.uint32)
+
+    if not use_pallas:
+        return jax.jit(compute)
+
+    def kernel(a_ref, b_ref, c_ref, o_ref):
+        o_ref[...] = compute(a_ref[...], b_ref[...], c_ref[...])
+
+    call = pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.uint32),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )
+
+    @jax.jit
+    def run(a_bits, b_bits, c_bits):
+        return call(a_bits, b_bits, c_bits)
+
+    return run

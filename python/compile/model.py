@@ -1,0 +1,129 @@
+"""Layer-2: the JAX compute graphs that get AOT-lowered to HLO artifacts.
+
+Three graph families:
+
+- ``emulated_mma``  — the bit-accurate MMA emulation (calls the Layer-1
+  Pallas kernels in :mod:`compile.kernels`); this is the black-box "MMA
+  interface" that the Rust CLFP framework probes via PJRT.
+- ``gemm_ref``      — float reference GEMMs (FP32/FP64) used by the error
+  analysis as ``D_real``.
+- ``bias_deviation``— the Figure-3 Monte-Carlo deviation graph: emulated
+  CDNA3 TR-FDPA output (inner RD), the hypothetical RZ variant, and the
+  FP64 reference, in a single fused module.
+
+Nothing in this module runs at serving time: ``aot.py`` lowers each graph
+once to HLO text and the Rust runtime executes the artifacts.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+jax.config.update("jax_enable_x64", True)
+
+from .kernels.ftz import make_ftz_kernel
+from .kernels.tfdpa import make_tfdpa_kernel
+
+# ---------------------------------------------------------------------------
+# Artifact catalog
+# ---------------------------------------------------------------------------
+
+# (name, in_fmt, M, N, K, l_max, F, rho, variant)
+TFDPA_ARTIFACTS = [
+    ("volta_fp16_fp32", "fp16", 8, 8, 4, 4, 23, "RZ-FP32", "t"),
+    ("turing_fp16_fp32", "fp16", 16, 8, 8, 8, 24, "RZ-FP32", "t"),
+    ("hopper_fp16_fp32", "fp16", 16, 8, 16, 16, 25, "RZ-FP32", "t"),
+    ("hopper_fp16_fp16", "fp16", 16, 8, 16, 16, 25, "RNE-FP16", "t"),
+    ("ampere_bf16_fp32", "bf16", 16, 8, 16, 8, 24, "RZ-FP32", "t"),
+    ("ada_fp8e4m3_fp32", "fp8e4m3", 16, 8, 32, 16, 13, "RZ-E8M13", "t"),
+    ("ada_fp8e5m2_fp32", "fp8e5m2", 16, 8, 32, 16, 13, "RZ-E8M13", "t"),
+    ("cdna3_fp16", "fp16", 16, 16, 16, 8, 24, "RNE-FP32", "tr"),
+]
+
+# (name, in_fmt, M, N, K, P)
+FTZ_ARTIFACTS = [
+    ("cdna2_fp16", "fp16", 16, 16, 16, 4),
+    ("cdna2_bf16_1k", "bf16", 16, 16, 16, 4),
+]
+
+
+def emulated_mma(name: str, use_pallas: bool = True):
+    """Bit-accurate emulated MMA graph for an artifact catalog entry.
+
+    Returns ``(fn, (M, N, K))`` where ``fn(a_u32[M,K], b_u32[K,N],
+    c_u32[M,N]) -> (d_u32[M,N],)``.
+    """
+    for (nm, fmt, m, n, k, l_max, f, rho, variant) in TFDPA_ARTIFACTS:
+        if nm == name:
+            kern = make_tfdpa_kernel(fmt, m, n, k, l_max, f, rho, variant,
+                                     use_pallas=use_pallas)
+            return (lambda a, b, c: (kern(a, b, c),)), (m, n, k)
+    for (nm, fmt, m, n, k, p) in FTZ_ARTIFACTS:
+        if nm == name:
+            kern = make_ftz_kernel(fmt, m, n, k, p, use_pallas=use_pallas)
+            return (lambda a, b, c: (kern(a, b, c),)), (m, n, k)
+    raise KeyError(name)
+
+
+def all_artifact_names():
+    return [t[0] for t in TFDPA_ARTIFACTS] + [t[0] for t in FTZ_ARTIFACTS]
+
+
+def artifact_meta(name: str):
+    """(M, N, K) and a descriptive dict for the manifest."""
+    for (nm, fmt, m, n, k, l_max, f, rho, variant) in TFDPA_ARTIFACTS:
+        if nm == name:
+            return dict(name=nm, kind="tfdpa", in_fmt=fmt, m=m, n=n, k=k,
+                        l_max=l_max, f=f, rho=rho, variant=variant)
+    for (nm, fmt, m, n, k, p) in FTZ_ARTIFACTS:
+        if nm == name:
+            return dict(name=nm, kind="ftz", in_fmt=fmt, m=m, n=n, k=k, p=p)
+    raise KeyError(name)
+
+
+# ---------------------------------------------------------------------------
+# Reference GEMMs (D_real)
+# ---------------------------------------------------------------------------
+
+
+def gemm_ref_f32(a, b, c):
+    """Plain XLA f32 GEMM: D = A@B + C (the software baseline)."""
+    return (jnp.dot(a, b, preferred_element_type=jnp.float32) + c,)
+
+
+def gemm_ref_f64(a, b, c):
+    """FP64 reference GEMM used as ``D_real`` in the accuracy analysis."""
+    return (jnp.dot(a, b, preferred_element_type=jnp.float64) + c,)
+
+
+REF_SHAPE = (16, 16, 16)  # M, N, K
+
+
+# ---------------------------------------------------------------------------
+# Figure 3: Monte-Carlo bias deviation graph
+# ---------------------------------------------------------------------------
+
+
+def bias_deviation(m: int = 16, n: int = 16, k: int = 16):
+    """Graph computing ``(D_rd, D_rz, D_real)`` for one FP16 bit-matrix MMA:
+    the CDNA3 TR-FDPA output, the hypothetical RZ variant (§6.2.4), and the
+    FP64 reference.
+    """
+    rd = make_tfdpa_kernel("fp16", m, n, k, 8, 24, "RNE-FP32", "tr")
+    rz = make_tfdpa_kernel("fp16", m, n, k, 8, 24, "RNE-FP32", "tr_rz")
+
+    def fn(a_bits, b_bits, c_bits):
+        d_rd = rd(a_bits, b_bits, c_bits)
+        d_rz = rz(a_bits, b_bits, c_bits)
+        a16 = jax.lax.bitcast_convert_type(a_bits.astype(jnp.uint16), jnp.float16)
+        b16 = jax.lax.bitcast_convert_type(b_bits.astype(jnp.uint16), jnp.float16)
+        c32 = jax.lax.bitcast_convert_type(c_bits, jnp.float32)
+        d_real = (
+            jnp.dot(a16.astype(jnp.float64), b16.astype(jnp.float64),
+                    preferred_element_type=jnp.float64)
+            + c32.astype(jnp.float64)
+        )
+        return d_rd, d_rz, d_real
+
+    return fn

@@ -1,0 +1,73 @@
+"""AOT path integrity: the lowered HLO text must parse, reference the
+expected operand shapes, and the manifest must describe every artifact."""
+
+import os
+
+import pytest
+
+from compile import aot, model
+
+
+def test_artifact_catalog_is_consistent():
+    names = model.all_artifact_names()
+    assert len(names) >= 10
+    for name in names:
+        meta = model.artifact_meta(name)
+        assert meta["m"] > 0 and meta["n"] > 0 and meta["k"] > 0
+        fn, (m, n, k) = model.emulated_mma(name)
+        assert (m, n, k) == (meta["m"], meta["n"], meta["k"])
+
+
+def test_lowered_hlo_has_expected_shapes():
+    text = aot.lower_emulated("volta_fp16_fp32")
+    assert "HloModule" in text
+    # operand and result shapes appear in the entry computation signature
+    assert "u32[8,4]" in text, "A operand shape"
+    assert "u32[4,8]" in text, "B operand shape"
+    assert "u32[8,8]" in text, "C/D shape"
+
+
+def test_lowered_ref_gemm_f64():
+    text = aot.lower_ref("f64")
+    assert "f64[16,16]" in text
+    assert "dot(" in text
+
+
+def test_bias_module_has_three_outputs():
+    text = aot.lower_bias(8, 8, 16)
+    assert "HloModule" in text
+    assert "f64[8,8]" in text, "FP64 reference output"
+
+
+def test_emulated_matches_nonpallas_path():
+    """The pallas_call wrapper and the raw jnp computation agree —
+    interpret-mode pallas is a pure packaging layer here."""
+    import numpy as np
+
+    fn_p, (m, n, k) = model.emulated_mma("turing_fp16_fp32", use_pallas=True)
+    fn_j, _ = model.emulated_mma("turing_fp16_fp32", use_pallas=False)
+    rng = np.random.default_rng(5)
+    A = rng.integers(0, 1 << 16, size=(m, k), dtype=np.uint32)
+    B = rng.integers(0, 1 << 16, size=(k, n), dtype=np.uint32)
+    C = rng.integers(0, 1 << 32, size=(m, n), dtype=np.uint64).astype(np.uint32)
+    (dp,) = fn_p(A, B, C)
+    (dj,) = fn_j(A, B, C)
+    np.testing.assert_array_equal(np.asarray(dp), np.asarray(dj))
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(os.path.dirname(__file__), "../../artifacts/manifest.txt")),
+    reason="artifacts not built",
+)
+def test_manifest_covers_all_artifacts():
+    path = os.path.join(os.path.dirname(__file__), "../../artifacts/manifest.txt")
+    with open(path) as fh:
+        lines = [l.split() for l in fh.read().splitlines() if l.strip()]
+    names = {l[0] for l in lines}
+    for want in model.all_artifact_names():
+        assert want in names, f"{want} missing from manifest"
+    assert "gemm_ref_f64" in names
+    assert "bias_deviation" in names
+    for l in lines:
+        assert len(l) >= 6, l
+        int(l[3]), int(l[4]), int(l[5])

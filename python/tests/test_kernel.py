@@ -1,0 +1,192 @@
+"""Pallas kernels vs the pure-Python oracle: the core Layer-1 correctness
+signal. Every comparison is bit-exact over randomized bit-stream inputs
+(the paper's most productive §3.1.4 input class), plus hypothesis sweeps.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref as R
+from compile.kernels.ftz import make_ftz_kernel
+from compile.kernels.tfdpa import make_tfdpa_kernel
+
+RNG = np.random.default_rng(0xC0FFEE)
+
+
+def random_bits(shape, width, rng=RNG):
+    return rng.integers(0, 1 << width, size=shape, dtype=np.uint64).astype(np.uint32)
+
+
+def finite_bits(fmt, shape, rng=RNG):
+    """Random *finite* bit patterns of a format (no NaN/Inf classes)."""
+    out = np.empty(shape, dtype=np.uint32)
+    flat = out.reshape(-1)
+    for i in range(flat.size):
+        while True:
+            b = int(rng.integers(0, fmt.mask + 1))
+            if R.decode(fmt, b)[0] in (R.ZERO, R.FINITE):
+                flat[i] = b
+                break
+    return out
+
+
+def oracle_mma(spec, A, B, C):
+    out = R.mma(spec, A.tolist(), B.tolist(), C.tolist())
+    return np.array(out, dtype=np.uint64).astype(np.uint32)
+
+
+CASES = [
+    # name, in_fmt, (M,N,K), l_max, F, rho, variant
+    ("volta", "fp16", (8, 8, 4), 4, 23, "RZ-FP32", "t"),
+    ("turing", "fp16", (8, 8, 8), 8, 24, "RZ-FP32", "t"),
+    ("hopper", "fp16", (8, 8, 16), 16, 25, "RZ-FP32", "t"),
+    ("hopper16", "fp16", (8, 8, 16), 16, 25, "RNE-FP16", "t"),
+    ("ampere_bf16", "bf16", (8, 8, 16), 8, 24, "RZ-FP32", "t"),
+    ("ada_fp8", "fp8e4m3", (8, 8, 32), 16, 13, "RZ-E8M13", "t"),
+    ("ada_fp8e5", "fp8e5m2", (8, 8, 32), 16, 13, "RZ-E8M13", "t"),
+    ("cdna3", "fp16", (8, 8, 16), 8, 24, "RNE-FP32", "tr"),
+    ("cdna3_rz", "fp16", (8, 8, 16), 8, 24, "RNE-FP32", "tr_rz"),
+]
+
+
+def spec_of(case):
+    _, fmt, _, l_max, f, rho, variant = case
+    if variant == "t":
+        return {"kind": "t_fdpa", "in": fmt, "l_max": l_max, "f": f, "rho": rho}
+    inner = R.RZ if variant == "tr_rz" else R.RD
+    return {"kind": "tr_fdpa", "in": fmt, "l_max": l_max, "f": f, "f2": 31,
+            "inner_mode": inner}
+
+
+@pytest.mark.parametrize("case", CASES, ids=[c[0] for c in CASES])
+def test_tfdpa_kernel_bitstream(case):
+    """Bit-exact agreement on raw random bit streams (incl. NaN/Inf/subnormals)."""
+    name, fmt_name, (m, n, k), l_max, f, rho, variant = case
+    fmt = R.FORMATS[fmt_name]
+    kern = make_tfdpa_kernel(fmt_name, m, n, k, l_max, f, rho, variant)
+    spec = spec_of(case)
+    out_fmt = R.RHO_OUT[rho]
+    for trial in range(6):
+        A = random_bits((m, k), fmt.width)
+        B = random_bits((k, n), fmt.width)
+        C = random_bits((m, n), out_fmt.width)
+        got = np.asarray(kern(A, B, C))
+        want = oracle_mma(spec, A, B, C)
+        np.testing.assert_array_equal(got, want, err_msg=f"{name} trial {trial}")
+
+
+@pytest.mark.parametrize("case", CASES[:4], ids=[c[0] for c in CASES[:4]])
+def test_tfdpa_kernel_finite_values(case):
+    """Finite-only sweep: exercises the numeric path without specials."""
+    name, fmt_name, (m, n, k), l_max, f, rho, variant = case
+    fmt = R.FORMATS[fmt_name]
+    kern = make_tfdpa_kernel(fmt_name, m, n, k, l_max, f, rho, variant)
+    spec = spec_of(case)
+    out_fmt = R.RHO_OUT[rho]
+    for _ in range(3):
+        A = finite_bits(fmt, (m, k))
+        B = finite_bits(fmt, (k, n))
+        C = finite_bits(out_fmt, (m, n))
+        got = np.asarray(kern(A, B, C))
+        want = oracle_mma(spec, A, B, C)
+        np.testing.assert_array_equal(got, want)
+
+
+def test_tfdpa_eq10_discrepancy():
+    """The kernel reproduces the Table 8 values for Eq. 10."""
+    m, n, k = 8, 8, 16
+    A = np.zeros((m, k), dtype=np.uint32)
+    B = np.zeros((k, n), dtype=np.uint32)
+    C = np.zeros((m, n), dtype=np.uint32)
+    for j, v in enumerate([-8192.0, -0.5, -0.25, -0.125]):
+        A[0, j] = R.from_float(R.FP16, v)
+    for j, v in enumerate([1024.0, 1.0, 1.0, 1.0]):
+        B[j, 0] = R.from_float(R.FP16, v)
+    C[0, 0] = R.from_float(R.FP32, 2.0**23)
+    hopper = make_tfdpa_kernel("fp16", m, n, k, 16, 25, "RZ-FP32", "t")
+    assert R.to_float(R.FP32, int(np.asarray(hopper(A, B, C))[0, 0])) == -0.75
+    cdna3 = make_tfdpa_kernel("fp16", m, n, k, 8, 24, "RNE-FP32", "tr")
+    assert R.to_float(R.FP32, int(np.asarray(cdna3(A, B, C))[0, 0])) == -0.5
+
+
+@given(st.integers(0, 2**63 - 1))
+@settings(max_examples=40, deadline=None)
+def test_tfdpa_kernel_hypothesis_seeded(seed):
+    """Hypothesis-driven shape/seed sweep on the Hopper configuration."""
+    rng = np.random.default_rng(seed)
+    m, n, k = 4, 4, 16
+    kern = _HOPPER_SMALL
+    A = random_bits((m, k), 16, rng)
+    B = random_bits((k, n), 16, rng)
+    C = random_bits((m, n), 32, rng)
+    got = np.asarray(kern(A, B, C))
+    spec = {"kind": "t_fdpa", "in": "fp16", "l_max": 16, "f": 25, "rho": "RZ-FP32"}
+    want = oracle_mma(spec, A, B, C)
+    np.testing.assert_array_equal(got, want)
+
+
+_HOPPER_SMALL = make_tfdpa_kernel("fp16", 4, 4, 16, 16, 25, "RZ-FP32", "t")
+
+
+FTZ_CASES = [
+    ("cdna2_fp16_p4", "fp16", (8, 8, 16), 4),
+    ("cdna2_fp16_p4_k4", "fp16", (4, 4, 4), 4),
+    ("cdna2_bf16_p2", "bf16", (8, 8, 8), 2),
+    ("cdna2_bf16_1k_p4", "bf16", (8, 8, 16), 4),
+]
+
+
+@pytest.mark.parametrize("case", FTZ_CASES, ids=[c[0] for c in FTZ_CASES])
+def test_ftz_kernel_bitstream(case):
+    name, fmt_name, (m, n, k), p = case
+    fmt = R.FORMATS[fmt_name]
+    kern = make_ftz_kernel(fmt_name, m, n, k, p)
+    spec = {"kind": "ftz_addmul", "in": fmt_name, "p": p}
+    for trial in range(6):
+        A = random_bits((m, k), fmt.width)
+        B = random_bits((k, n), fmt.width)
+        C = random_bits((m, n), 32)
+        got = np.asarray(kern(A, B, C))
+        want = oracle_mma(spec, A, B, C)
+        np.testing.assert_array_equal(got, want, err_msg=f"{name} trial {trial}")
+
+
+def test_ftz_kernel_subnormal_flush_effect():
+    """The PyTorch CDNA2 incident in miniature: FP16 subnormal products
+    vanish, BF16 (wider exponent) keeps them."""
+    m = n = k = 4
+    A = np.zeros((m, k), dtype=np.uint32)
+    B = np.zeros((k, n), dtype=np.uint32)
+    C = np.zeros((m, n), dtype=np.uint32)
+    A[0, 0] = 0x0001  # min fp16 subnormal
+    B[0, 0] = R.from_float(R.FP16, 1.0)
+    kern = make_ftz_kernel("fp16", m, n, k, 4)
+    out = np.asarray(kern(A, B, C))
+    assert R.to_float(R.FP32, int(out[0, 0])) == 0.0
+
+
+def test_bias_deviation_graph():
+    """Figure 3 graph sanity: RD deviates negatively vs RZ on average."""
+    fn = model.bias_deviation(8, 8, 16)
+    rng = np.random.default_rng(7)
+    devs_rd, devs_rz = [], []
+    for _ in range(20):
+        a = (1000.0 * rng.standard_normal((8, 16))).astype(np.float16)
+        b = (1000.0 * rng.standard_normal((16, 8))).astype(np.float16)
+        c = rng.standard_normal((8, 8)).astype(np.float32)
+        A = a.view(np.uint16).astype(np.uint32)
+        B = b.view(np.uint16).astype(np.uint32)
+        C = c.view(np.uint32)
+        d_rd, d_rz, d_real = fn(A, B, C)
+        rd = np.asarray(d_rd).view(np.float32) if False else np.asarray(d_rd).astype(np.uint32).view(np.uint32)
+        rd_f = np.asarray(d_rd, dtype=np.uint32).view(np.float32).astype(np.float64)
+        rz_f = np.asarray(d_rz, dtype=np.uint32).view(np.float32).astype(np.float64)
+        real = np.asarray(d_real)
+        devs_rd.append((rd_f - real).ravel())
+        devs_rz.append((rz_f - real).ravel())
+    mean_rd = np.concatenate(devs_rd).mean()
+    mean_rz = np.concatenate(devs_rz).mean()
+    assert mean_rd < 0, "RD bias must be negative"
+    assert abs(mean_rz) < abs(mean_rd), "RZ variant must be closer to unbiased"

@@ -1,0 +1,222 @@
+"""Extended oracle coverage: scaled FDPA variants (ST/GST), special-value
+handling, rounding-mode edge cases, and the full matrix-level mma() path —
+plus hypothesis sweeps over formats and parameters."""
+
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref as R
+
+
+def f(fmt, v):
+    return R.from_float(fmt, v)
+
+
+def as32(bits):
+    return R.to_float(R.FP32, bits)
+
+
+# --- ST-FDPA -----------------------------------------------------------------
+
+
+def test_st_fdpa_unit_scales_match_t_fdpa():
+    a = [f(R.FP8E4M3, v) for v in [1.5, -2.0, 0.5, 3.0]]
+    b = [f(R.FP8E4M3, v) for v in [2.0, 0.5, -1.0, 1.0]]
+    c = f(R.FP32, 0.25)
+    assert R.st_fdpa(R.FP8E4M3, a, b, c, 127, 127, 25, R.RZ_FP32) == \
+        R.t_fdpa(R.FP8E4M3, a, b, c, 25, R.RZ_FP32)
+
+
+def test_st_fdpa_scale_exponents_add():
+    a = [f(R.FP8E4M3, 1.0)]
+    b = [f(R.FP8E4M3, 1.0)]
+    out = R.st_fdpa(R.FP8E4M3, a, b, f(R.FP32, 1.0), 130, 128, 25, R.RZ_FP32)
+    assert as32(out) == 17.0  # 2^3 * 2^1 + 1
+
+
+def test_st_fdpa_nan_scale():
+    a = [f(R.FP8E4M3, 1.0)]
+    b = [f(R.FP8E4M3, 1.0)]
+    assert R.st_fdpa(R.FP8E4M3, a, b, 0, 0xFF, 127, 25, R.RZ_FP32) == R.NV_NAN32
+
+
+# --- GST-FDPA ----------------------------------------------------------------
+
+
+def _fp4(v):
+    return R.from_float(R.FP4E2M1, v)
+
+
+def test_gst_exact_group_dot():
+    a = [_fp4(0.0)] * 16
+    b = [_fp4(0.0)] * 16
+    a[0], b[0] = _fp4(6.0), _fp4(6.0)
+    a[1], b[1] = _fp4(0.5), _fp4(0.5)
+    out = R.gst_fdpa(R.FP4E2M1, a, b, 0, [0x38], [0x38], 16, 16, 35,
+                     R.RZ_FP32, R.UE4M3)
+    assert as32(out) == 36.25
+
+
+def test_gst_ue4m3_significand():
+    a = [_fp4(0.0)] * 16
+    b = [_fp4(0.0)] * 16
+    a[0], b[0] = _fp4(2.0), _fp4(3.0)
+    alpha = [R.from_float(R.UE4M3, 6.0)]
+    out = R.gst_fdpa(R.FP4E2M1, a, b, 0, alpha, [0x38], 16, 16, 35,
+                     R.RZ_FP32, R.UE4M3)
+    assert as32(out) == 36.0
+
+
+def test_gst_truncates_across_groups():
+    a = [_fp4(0.0)] * 32
+    b = [_fp4(0.0)] * 32
+    a[0], b[0] = _fp4(1.0), _fp4(1.0)
+    a[16], b[16] = _fp4(1.0), _fp4(1.0)
+    out = R.gst_fdpa(R.FP4E2M1, a, b, 0, [127 + 4, 127 - 37], [127, 127],
+                     16, 16, 35, R.RZ_FP32, R.E8M0)
+    assert as32(out) == 16.0
+
+
+# --- specials ----------------------------------------------------------------
+
+
+@pytest.mark.parametrize("op,nan", [
+    ("t", R.NV_NAN32),
+    ("tr", R.QUIET_NAN32),
+    ("gtr", R.QUIET_NAN32),
+    ("e", R.QUIET_NAN32),
+])
+def test_inf_times_zero_nan_encoding(op, nan):
+    fmt = R.FP16 if op != "gtr" else R.FP8E5M2
+    inf = fmt.inf_pattern()
+    a = [inf, 0]
+    b = [0, 0]
+    if op == "t":
+        out = R.t_fdpa(fmt, a, b, 0, 24, R.RZ_FP32)
+    elif op == "tr":
+        out = R.tr_fdpa(fmt, a, b, 0, 24, 31)
+    elif op == "gtr":
+        out = R.gtr_fdpa(fmt, a, b, 0, 24, 31)
+    else:
+        out = R.e_fdpa(fmt, a, b, 0)
+    assert out == nan
+
+
+def test_opposing_inf_products():
+    fmt = R.FP16
+    inf = fmt.inf_pattern()
+    one = f(fmt, 1.0)
+    neg_one = f(fmt, -1.0)
+    out = R.t_fdpa(fmt, [inf, inf], [one, neg_one], 0, 24, R.RZ_FP32)
+    assert out == R.NV_NAN32
+    out = R.t_fdpa(fmt, [inf, 0], [one, 0], 0, 24, R.RZ_FP32)
+    assert out == 0x7F800000
+
+
+def test_tr_product_overflow_to_inf():
+    big = f(R.BF16, 2.0**120)
+    out = R.tr_fdpa(R.BF16, [big], [big], 0, 24, 31)
+    assert out == 0x7F800000
+    nbig = f(R.BF16, -(2.0**120))
+    out = R.tr_fdpa(R.BF16, [big, nbig], [big, big], 0, 24, 31)
+    assert out == R.QUIET_NAN32
+
+
+# --- fp16-output conversions ---------------------------------------------------
+
+
+def test_rne_fp16_overflow_saturates_to_inf():
+    a = [f(R.FP16, 60000.0), f(R.FP16, 60000.0)]
+    b = [f(R.FP16, 1.0), f(R.FP16, 1.0)]
+    out = R.t_fdpa(R.FP16, a, b, 0, 25, R.RNE_FP16)
+    assert out == 0x7C00
+
+
+def test_rne_fp16_subnormal_output():
+    a = [f(R.FP16, 2.0**-12)]
+    b = [f(R.FP16, 2.0**-12)]
+    out = R.t_fdpa(R.FP16, a, b, 0, 25, R.RNE_FP16)
+    assert R.to_float(R.FP16, out) == 2.0**-24
+
+
+# --- matrix-level path --------------------------------------------------------
+
+
+def test_mma_matches_elementwise_dpa():
+    spec = {"kind": "t_fdpa", "in": "fp16", "l_max": 8, "f": 24, "rho": R.RZ_FP32}
+    import random
+
+    rnd = random.Random(7)
+    A = [[rnd.getrandbits(16) for _ in range(8)] for _ in range(3)]
+    B = [[rnd.getrandbits(16) for _ in range(5)] for _ in range(8)]
+    C = [[rnd.getrandbits(32) for _ in range(5)] for _ in range(3)]
+    D = R.mma(spec, A, B, C)
+    for i in range(3):
+        for j in range(5):
+            bcol = [B[r][j] for r in range(8)]
+            assert D[i][j] == R.dpa(spec, A[i], bcol, C[i][j])
+
+
+# --- hypothesis sweeps ----------------------------------------------------------
+
+
+@given(st.integers(0, 0xFFFF), st.integers(0, 0xFFFF), st.integers(0, 2**32 - 1),
+       st.sampled_from([23, 24, 25]))
+@settings(max_examples=400, deadline=None)
+def test_tfdpa_single_product_vs_exact(a_bits, b_bits, c_bits, fbits):
+    """L=1 T-FDPA == RZ-FP32(exact a*b + c) whenever no truncation occurs
+    (i.e. the two summands' exponents are within F)."""
+    da = R.decode(R.FP16, a_bits)
+    db = R.decode(R.FP16, b_bits)
+    dc = R.decode(R.FP32, c_bits)
+    if R.NAN in (da[0], db[0], dc[0]) or R.INF in (da[0], db[0], dc[0]):
+        return
+    p = R.to_float(R.FP16, a_bits) * R.to_float(R.FP16, b_bits)
+    cv = R.to_float(R.FP32, c_bits)
+    out = R.t_fdpa(R.FP16, [a_bits], [b_bits], c_bits, fbits, R.RZ_FP32)
+    got = as32(out)
+    exact = p + cv
+    if p == 0.0 or cv == 0.0 or (p != 0 and cv != 0 and
+                                 abs(math.log2(abs(p) / abs(cv))) < fbits - 30):
+        # no truncation possible: result must be within 1 ulp (RZ) of exact
+        if exact != 0 and math.isfinite(exact):
+            ulp = 2.0 ** (max(math.floor(math.log2(abs(exact))), -126) - 23)
+            assert abs(got - exact) <= ulp, (got, exact)
+
+
+@given(st.lists(st.integers(0, 0xFF), min_size=16, max_size=16),
+       st.lists(st.integers(0, 0xFF), min_size=16, max_size=16),
+       st.integers(0, 2**32 - 1))
+@settings(max_examples=200, deadline=None)
+def test_gtr_vs_tr_agree_without_grouping_effects(av, bv, c_bits):
+    """With all products in the even lanes (odd lanes zero), GTR's odd
+    group is empty and the arithmetic reduces to TR over the even lanes —
+    *except* for GTR's special truncation of a tiny accumulator
+    (Algorithm 11 step 4), which TR lacks; those cases are excluded."""
+    a = [0] * 16
+    b = [0] * 16
+    for i in range(8):
+        a[2 * i] = av[i]
+        b[2 * i] = bv[i]
+    dc = R.decode(R.FP32, c_bits)
+    if dc[0] in (R.NAN, R.INF):
+        return
+    if any(R.decode(R.FP8E5M2, x)[0] in (R.NAN, R.INF) for x in a + b):
+        return
+    # exclude the special-truncation window: c tiny relative to the
+    # product sum's maximum exponent
+    exps = []
+    for i in range(8):
+        da = R.decode(R.FP8E5M2, a[2 * i])
+        db = R.decode(R.FP8E5M2, b[2 * i])
+        if da[3] and db[3]:
+            exps.append(da[2] + db[2])
+    if exps and dc[3] and dc[2] < max(exps) - 24 - 1:
+        return
+    gtr = R.gtr_fdpa(R.FP8E5M2, a, b, c_bits, 24, 31)
+    evens_a = [a[2 * i] for i in range(8)]
+    evens_b = [b[2 * i] for i in range(8)]
+    tr = R.tr_fdpa(R.FP8E5M2, evens_a, evens_b, c_bits, 24, 31)
+    assert gtr == tr

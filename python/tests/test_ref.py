@@ -1,0 +1,229 @@
+"""Oracle self-tests: the pure-Python models must reproduce every worked
+example in the paper (§5, Table 8) plus format/rounding invariants."""
+
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref as R
+
+F16, F32 = R.FP16, R.FP32
+
+
+def f(fmt, v):
+    return R.from_float(fmt, v)
+
+
+def as_f32(bits):
+    return R.to_float(R.FP32, bits)
+
+
+# --- format round-trips -----------------------------------------------------
+
+
+@pytest.mark.parametrize("fmt", [R.FP16, R.BF16, R.FP8E4M3, R.FP8E5M2,
+                                 R.FP6E2M3, R.FP6E3M2, R.FP4E2M1, R.UE4M3])
+def test_exhaustive_roundtrip(fmt):
+    for bits in range(fmt.mask + 1):
+        cls, *_ = R.decode(fmt, bits)
+        if cls == R.NAN:
+            continue
+        v = R.to_float(fmt, bits)
+        assert R.from_float(fmt, v) == bits, hex(bits)
+
+
+@given(st.integers(0, 2**32 - 1))
+@settings(max_examples=2000, deadline=None)
+def test_fp32_roundtrip_random(bits):
+    cls, *_ = R.decode(R.FP32, bits)
+    if cls == R.NAN:
+        return
+    v = R.to_float(R.FP32, bits)
+    assert R.from_float(R.FP32, v) == bits
+
+
+@given(st.floats(allow_nan=False, allow_infinity=False, width=32))
+@settings(max_examples=2000, deadline=None)
+def test_fp32_from_float_matches_struct(x):
+    import struct
+
+    want = struct.unpack("<I", struct.pack("<f", x))[0]
+    assert R.from_float(R.FP32, float(x)) == want
+
+
+# --- the Eq. 10 discrepancy input (paper §5 / Table 8) ----------------------
+
+A_VALS = [-8192.0, -0.5, -0.25, -0.125]
+B_VALS = [1024.0, 1.0, 1.0, 1.0]
+C_VAL = 2.0**23
+
+
+def _eq10(fmt, k):
+    a = [f(fmt, v) for v in A_VALS] + [0] * (k - 4)
+    b = [f(fmt, v) for v in B_VALS] + [0] * (k - 4)
+    return a, b, f(R.FP32, C_VAL)
+
+
+def test_table8_volta():
+    a, b, c = _eq10(F16, 4)
+    assert as_f32(R.t_fdpa(F16, a, b, c, 23, R.RZ_FP32)) == 0.0
+
+
+def test_table8_turing_ampere():
+    a, b, c = _eq10(F16, 8)
+    assert as_f32(R.t_fdpa(F16, a, b, c, 24, R.RZ_FP32)) == -0.5
+
+
+def test_table8_hopper():
+    a, b, c = _eq10(F16, 16)
+    assert as_f32(R.t_fdpa(F16, a, b, c, 25, R.RZ_FP32)) == -0.75
+
+
+def test_table8_fp8_ada_hopper():
+    a, b, c = _eq10(R.FP8E5M2, 16)
+    assert as_f32(R.t_fdpa(R.FP8E5M2, a, b, c, 13, R.RZ_E8M13)) == 0.0
+
+
+def test_table8_cdna1():
+    a, b, c = _eq10(F16, 4)
+    spec = dict(kind="e_fdpa", l=4)
+    spec["in"] = "fp16"
+    assert as_f32(R.dpa(spec, a, b, c)) == -0.875
+
+
+def test_table8_cdna2_bf16_p2():
+    a, b, c = _eq10(R.BF16, 4)
+    spec = {"kind": "ftz_addmul", "p": 2, "in": "bf16"}
+    assert as_f32(R.dpa(spec, a, b, c)) == -0.375
+
+
+def test_table8_cdna2_fp16_p4():
+    a, b, c = _eq10(F16, 4)
+    spec = {"kind": "ftz_addmul", "p": 4, "in": "fp16"}
+    assert as_f32(R.dpa(spec, a, b, c)) == 0.0
+
+
+def test_table8_cdna3_fp16():
+    a, b, c = _eq10(F16, 8)
+    assert as_f32(R.tr_fdpa(F16, a, b, c, 24, 31)) == -0.5
+
+
+def test_table8_cdna3_fp8():
+    a, b, c = _eq10(R.FP8E5M2, 16)
+    assert as_f32(R.gtr_fdpa(R.FP8E5M2, a, b, c, 24, 31)) == -1.0
+
+
+def test_table8_fp32_fma():
+    a, b, c = _eq10(R.FP32, 4)
+    spec = {"kind": "fma", "in": "fp32"}
+    assert as_f32(R.dpa(spec, a, b, c)) == -0.875
+
+
+# --- elementary ops ----------------------------------------------------------
+
+
+def test_ftz_flush_behaviour():
+    # input FP16 subnormal flushed to +0 before multiply
+    sub = 1  # minimum fp16 subnormal
+    spec = {"kind": "ftz_addmul", "p": 2, "in": "fp16"}
+    d = R.dpa(spec, [sub, 0], [f(F16, 1.0), 0], 0)
+    assert as_f32(d) == 0.0
+    # output flush is sign preserving
+    z = R.ftz_mul(R.BF16, f(R.BF16, -(2.0**-100)), f(R.BF16, 2.0**-30))
+    assert z == 1 << 31
+
+
+def test_fma_single_rounding():
+    a = f(R.FP32, 1.0 + 2.0**-12)
+    c = f(R.FP32, -(1.0 + 2.0**-11))
+    d = R.fma_op(R.FP32, a, a, c)
+    assert as_f32(d) == 2.0**-24
+
+
+def test_e_fdpa_is_exact():
+    a = [f(F16, 2.0**15), f(F16, 2.0**-15), f(F16, -(2.0**15))]
+    b = [f(F16, 2.0**15), f(F16, 2.0**-15), f(F16, 2.0**15)]
+    d = R.e_fdpa(F16, a, b, 0)
+    assert as_f32(d) == 2.0**-30
+
+
+def test_tr_asymmetry():
+    a = [f(F16, 2.0**-12), f(F16, 2.0**-17)]
+    b = [f(F16, 2.0**-12), f(F16, 2.0**-17)]
+    na = [f(F16, -(2.0**-12)), f(F16, -(2.0**-17))]
+    pos = as_f32(R.tr_fdpa(F16, a, b, f(R.FP32, 1.0), 24, 31))
+    neg = as_f32(R.tr_fdpa(F16, na, b, f(R.FP32, -1.0), 24, 31))
+    assert pos == 1.0
+    assert neg == -(1.0 + 2.0**-23)
+
+
+def test_tr_rz_variant_is_symmetric_here():
+    a = [f(F16, 2.0**-12), f(F16, 2.0**-17)]
+    b = [f(F16, 2.0**-12), f(F16, 2.0**-17)]
+    na = [f(F16, -(2.0**-12)), f(F16, -(2.0**-17))]
+    pos = as_f32(R.tr_fdpa(F16, a, b, f(R.FP32, 1.0), 24, 31, inner_mode=R.RZ))
+    neg = as_f32(R.tr_fdpa(F16, na, b, f(R.FP32, -1.0), 24, 31, inner_mode=R.RZ))
+    assert pos == -neg
+
+
+def test_gtr_special_truncation():
+    a = [f(R.FP8E5M2, 2.0**12)] + [0] * 15
+    b = [f(R.FP8E5M2, 2.0**12)] + [0] * 15
+    d = R.gtr_fdpa(R.FP8E5M2, a, b, f(R.FP32, -(2.0**-6)), 24, 31)
+    assert as_f32(d) == 2.0**24
+    d = R.gtr_fdpa(R.FP8E5M2, a, b, f(R.FP32, -0.5), 24, 31)
+    assert as_f32(d) == 2.0**24 - 1.0
+
+
+def test_nv_canonical_nan():
+    inf = f(F16, math.inf)
+    z = f(F16, 0.0)
+    assert R.t_fdpa(F16, [inf], [z], 0, 24, R.RZ_FP32) == 0x7FFFFFFF
+    assert R.t_fdpa(F16, [inf], [z], 0, 24, R.RNE_FP16) == 0x7FFF
+
+
+def test_st_scales():
+    a = [f(R.FP8E4M3, 1.0)]
+    b = [f(R.FP8E4M3, 1.0)]
+    out = R.st_fdpa(R.FP8E4M3, a, b, f(R.FP32, 1.0), 130, 128, 25, R.RZ_FP32)
+    assert as_f32(out) == 17.0
+
+
+def test_gst_group_structure():
+    a = [f(R.FP4E2M1, 0.0)] * 32
+    b = [f(R.FP4E2M1, 0.0)] * 32
+    a[0] = f(R.FP4E2M1, 1.0)
+    b[0] = f(R.FP4E2M1, 1.0)
+    a[16] = f(R.FP4E2M1, 1.0)
+    b[16] = f(R.FP4E2M1, 1.0)
+    out = R.gst_fdpa(R.FP4E2M1, a, b, 0, [131, 90], [127, 127], 16, 16, 35,
+                     R.RZ_FP32, R.E8M0)
+    assert as_f32(out) == 16.0  # 2^-37-scaled group truncated at F=35
+
+
+# --- property: error bound of T-FDPA (Table 9) ------------------------------
+
+
+@given(st.lists(st.floats(-100, 100, width=16), min_size=8, max_size=8),
+       st.lists(st.floats(-100, 100, width=16), min_size=8, max_size=8),
+       st.floats(-1000, 1000, width=32))
+@settings(max_examples=300, deadline=None)
+def test_tfdpa_error_bound(av, bv, cv):
+    """|T-FDPA - exact| <= (L+1) * 2^(emax - F) + 1 ulp (paper Table 9)."""
+    fmt = R.FP16
+    a = [f(fmt, float(x)) for x in av]
+    b = [f(fmt, float(x)) for x in bv]
+    c = f(R.FP32, float(cv))
+    out = as_f32(R.t_fdpa(fmt, a, b, c, 24, R.RZ_FP32))
+    av_ = [R.to_float(fmt, x) for x in a]
+    bv_ = [R.to_float(fmt, x) for x in b]
+    exact = sum(x * y for x, y in zip(av_, bv_)) + R.to_float(R.FP32, c)
+    terms = [abs(x * y) for x, y in zip(av_, bv_)] + [abs(R.to_float(R.FP32, c))]
+    emax_val = max([t for t in terms if t > 0], default=0.0)
+    if emax_val == 0:
+        assert out == 0.0
+        return
+    emax = math.floor(math.log2(emax_val)) + 1  # nominal exp can exceed true
+    bound = 9 * 2.0 ** (emax - 24) + 2.0 ** max(emax - 23, -149)
+    assert abs(out - exact) <= bound, (out, exact, bound)

@@ -1,0 +1,97 @@
+//! Ablation bench (paper §6.3): accuracy and cost of the software
+//! mitigations versus the raw units — the DeepSeek split-K FP32
+//! accumulation sweep over the accumulation interval, and the CDNA3
+//! zero-C split.
+
+use mma_sim::formats::{Format, Rho};
+use mma_sim::interface::{BitMatrix, MmaFormats, MmaInterface};
+use mma_sim::mitigations::{CudaCoreAccumulate, ZeroCSplit};
+use mma_sim::models::{MmaModel, ModelSpec};
+use mma_sim::util::{bench, black_box, Rng};
+
+fn fp8_hopper(k: usize) -> MmaModel {
+    MmaModel::new(
+        "sm90 QGMMA.F32.E4M3",
+        (8, 8, k),
+        MmaFormats { a: Format::Fp8E4M3, b: Format::Fp8E4M3, c: Format::Fp32, d: Format::Fp32 },
+        ModelSpec::TFdpa { l_max: 32, f: 13, rho: Rho::RzE8M13 },
+    )
+}
+
+fn mean_rel_err(iface: &dyn MmaInterface, trials: usize, seed: u64) -> f64 {
+    let (m, n, k) = iface.shape();
+    let mut rng = Rng::new(seed);
+    let (mut err, mut cnt) = (0.0f64, 0usize);
+    for _ in 0..trials {
+        let mut a = BitMatrix::zeros(m, k, Format::Fp8E4M3);
+        let mut b = BitMatrix::zeros(k, n, Format::Fp8E4M3);
+        let c = BitMatrix::zeros(m, n, Format::Fp32);
+        for v in a.data.iter_mut() {
+            *v = Format::Fp8E4M3.from_f64(rng.uniform() * 4.0 + 0.25);
+        }
+        for v in b.data.iter_mut() {
+            *v = Format::Fp8E4M3.from_f64(rng.uniform() * 4.0 + 0.25);
+        }
+        let d = iface.execute(&a, &b, &c, None);
+        for i in 0..m {
+            for j in 0..n {
+                let mut exact = 0.0;
+                for kk in 0..k {
+                    exact += Format::Fp8E4M3.to_f64(a.get(i, kk))
+                        * Format::Fp8E4M3.to_f64(b.get(kk, j));
+                }
+                let got = Format::Fp32.to_f64(d.get(i, j));
+                if exact != 0.0 {
+                    err += ((got - exact) / exact).abs();
+                    cnt += 1;
+                }
+            }
+        }
+    }
+    err / cnt.max(1) as f64
+}
+
+fn main() {
+    println!("== ablation_mitigations ==");
+    let k = 32;
+
+    // accuracy sweep: raw vs split-K at intervals 4/8/16
+    let raw = fp8_hopper(k);
+    println!(
+        "accuracy  raw FP8 (F=13):             mean rel err {:.3e}",
+        mean_rel_err(&raw, 30, 1)
+    );
+    for interval in [4usize, 8, 16] {
+        let mit = CudaCoreAccumulate::new(fp8_hopper(k), interval);
+        println!(
+            "accuracy  split-K interval {interval:>2}:        mean rel err {:.3e}",
+            mean_rel_err(&mit, 30, 1)
+        );
+    }
+
+    // cost sweep: the mitigation multiplies MMAU passes
+    let mut rng = Rng::new(2);
+    let (a, b, c) = mma_sim::clfp::random_inputs(&mut rng, &raw, 0);
+    bench("mitigation/raw_fp8_8x8x32", || {
+        black_box(raw.execute(&a, &b, &c, None));
+    });
+    for interval in [4usize, 8, 16] {
+        let mit = CudaCoreAccumulate::new(fp8_hopper(k), interval);
+        bench(&format!("mitigation/splitk_{interval}_8x8x32"), || {
+            black_box(mit.execute(&a, &b, &c, None));
+        });
+    }
+
+    // CDNA3 zero-C split cost
+    let cdna3 = mma_sim::analysis::bias::cdna3_fp16_model();
+    let mut rng = Rng::new(3);
+    let (a, b, c) = mma_sim::clfp::random_inputs(&mut rng, &cdna3, 0);
+    bench("mitigation/cdna3_raw_32x32x8", || {
+        black_box(cdna3.execute(&a, &b, &c, None));
+    });
+    let zc = ZeroCSplit { inner: mma_sim::analysis::bias::cdna3_fp16_model() };
+    bench("mitigation/cdna3_zero_c_split_32x32x8", || {
+        black_box(zc.execute(&a, &b, &c, None));
+    });
+    println!("ablation complete");
+}

@@ -1,0 +1,19 @@
+//! Bench: cross-architecture consistency analysis — pairwise disagreement
+//! rates between all ten architectures on identical random workloads
+//! (the quantified version of the paper's reproducibility motivation).
+
+use mma_sim::analysis::consistency::{disagreement_matrix, fp32_all_consistent, render};
+use mma_sim::isa::InputClass;
+use mma_sim::util::{bench, black_box};
+
+fn main() {
+    println!("== consistency ==");
+    bench("consistency/fp16_matrix(4 MMAs/pair)", || {
+        black_box(disagreement_matrix(InputClass::Fp16, 4, 7));
+    });
+    bench("consistency/fp32_matrix(4 MMAs/pair)", || {
+        black_box(disagreement_matrix(InputClass::Fp32, 4, 7));
+    });
+    assert!(fp32_all_consistent(4));
+    println!("\n{}", render(8));
+}

@@ -1,0 +1,42 @@
+//! Bench: Figure 2 — summation-tree signature extraction (CLFP Step 2)
+//! for the four exemplar instructions, plus the full probe battery.
+
+use mma_sim::clfp::{probe_battery, run_battery, tree_signature, ProbeBuilder};
+use mma_sim::isa::{find, Arch};
+use mma_sim::util::{bench, black_box};
+
+fn main() {
+    println!("== figure2_trees ==");
+    let cases = [
+        (Arch::Cdna1, "16x16x4_f32", "fig2a_chain"),
+        (Arch::Cdna2, "32x32x8_bf16_1k", "fig2b_pairwise"),
+        (Arch::Cdna1, "32x32x4_bf16", "fig2c_nonswamped"),
+        (Arch::Volta, "HMMA.884.F32", "fig2d_swamped"),
+    ];
+    for (arch, frag, label) in cases {
+        let model = find(arch, frag).unwrap().model();
+        bench(&format!("figure2/signature/{label}"), || {
+            black_box(tree_signature(&model));
+        });
+    }
+
+    let model = find(Arch::Hopper, "HGMMA.64x8x16.F32.F16").unwrap().model();
+    let pb = ProbeBuilder::for_interface(&model);
+    let battery = probe_battery(&pb);
+    bench(&format!("figure2/battery({} probes)/hopper", battery.len()), || {
+        black_box(run_battery(&model, &pb, &battery));
+    });
+
+    // verify the shapes
+    let volta = find(Arch::Volta, "HMMA.884.F32").unwrap().model();
+    assert!(tree_signature(&volta).is_swamped_fused());
+    // CDNA1 32x32x4 bf16: K=4 chained over L=2 — each node is a
+    // non-swamped 3-term fused summation (ratio K-1 within a node),
+    // swamping only across the chain
+    let cdna1 = find(Arch::Cdna1, "32x32x4_bf16").unwrap().model();
+    let sig = tree_signature(&cdna1);
+    assert_eq!(sig.ratio[0][1], Some(3), "within-node pair is non-swamped");
+    assert_eq!(sig.ratio[2][3], Some(3), "within-node pair is non-swamped");
+    assert_eq!(sig.ratio[0][2], Some(1), "cross-node pair swamps the chain");
+    println!("figure2 signatures verified");
+}

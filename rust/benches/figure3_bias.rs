@@ -1,0 +1,34 @@
+//! Bench: Figure 3 — Monte-Carlo bias experiment throughput (RD vs RZ
+//! deviation sampling on the CDNA3 FP16 instruction).
+
+use mma_sim::analysis::bias::{bias_experiment, cdna3_fp16_model};
+use mma_sim::clfp::random_inputs;
+use mma_sim::interface::MmaInterface;
+use mma_sim::util::{bench, black_box, Rng};
+
+fn main() {
+    println!("== figure3_bias ==");
+    let r = bench("figure3/experiment(8 MMAs = 8192 samples)", || {
+        black_box(bias_experiment(8, 1));
+    });
+    println!(
+        "    -> {:.0} deviation samples/s",
+        r.throughput(8.0 * 32.0 * 32.0)
+    );
+
+    // isolated 32x32x8 MMA on the production model
+    let model = cdna3_fp16_model();
+    let mut rng = Rng::new(3);
+    let (a, b, c) = random_inputs(&mut rng, &model, 0);
+    let r = bench("figure3/single_mma_32x32x8", || {
+        black_box(model.execute(&a, &b, &c, None));
+    });
+    println!(
+        "    -> {:.0} dot-product-accumulate ops/s",
+        r.throughput(32.0 * 32.0)
+    );
+
+    let res = bias_experiment(6, 0xF16);
+    assert!(res.mean_rd < 0.0 && res.mean_rz.abs() < res.mean_rd.abs() / 4.0);
+    println!("figure3 bias direction verified");
+}

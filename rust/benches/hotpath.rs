@@ -1,0 +1,81 @@
+//! Bench: the simulator hot path — per-elementary-op and per-dot-product
+//! throughput for every model family. This is the §Perf optimization
+//! target (EXPERIMENTS.md records before/after).
+
+use mma_sim::formats::{Format, Rho};
+use mma_sim::interface::MmaInterface;
+use mma_sim::interface::MmaFormats;
+use mma_sim::models::{MmaModel, ModelSpec};
+use mma_sim::ops::{
+    e_fdpa, fma, ftz_add, ftz_mul, gtr_fdpa, t_fdpa, tr_fdpa, GtrFdpaCfg, TFdpaCfg, TrFdpaCfg,
+};
+use mma_sim::util::{bench, black_box, Rng};
+
+fn random_fp16(rng: &mut Rng, n: usize) -> Vec<u64> {
+    (0..n).map(|_| rng.bits(16)).collect()
+}
+
+fn main() {
+    println!("== hotpath ==");
+    let mut rng = Rng::new(0xBEEF);
+
+    // elementary ops
+    let a16 = random_fp16(&mut rng, 16);
+    let b16 = random_fp16(&mut rng, 16);
+    let c32 = rng.bits(32);
+
+    let r = bench("op/t_fdpa/L16_F25", || {
+        black_box(t_fdpa(
+            Format::Fp16,
+            &a16,
+            &b16,
+            c32,
+            TFdpaCfg { f: 25, rho: Rho::RzFp32 },
+        ));
+    });
+    println!("    -> {:.2} M t_fdpa/s", r.throughput(1.0) / 1e6);
+
+    bench("op/tr_fdpa/L8_F24_F2_31", || {
+        black_box(tr_fdpa(Format::Fp16, &a16[..8], &b16[..8], c32, TrFdpaCfg::cdna3()));
+    });
+    bench("op/gtr_fdpa/L16", || {
+        black_box(gtr_fdpa(Format::Fp8E4M3, &a16, &b16, c32, GtrFdpaCfg::cdna3()));
+    });
+    bench("op/e_fdpa/L4", || {
+        black_box(e_fdpa(Format::Fp16, &a16[..4], &b16[..4], c32));
+    });
+    bench("op/fma_chain/K4", || {
+        let mut d = c32;
+        for i in 0..4 {
+            d = fma(Format::Fp32, a16[i] << 16, b16[i] << 16, d);
+        }
+        black_box(d);
+    });
+    bench("op/ftz_mul+add/P4", || {
+        let p0 = ftz_mul(Format::Fp16, a16[0], b16[0]);
+        let p1 = ftz_mul(Format::Fp16, a16[1], b16[1]);
+        let p2 = ftz_mul(Format::Fp16, a16[2], b16[2]);
+        let p3 = ftz_mul(Format::Fp16, a16[3], b16[3]);
+        black_box(ftz_add(ftz_add(p0, p1), ftz_add(p2, p3)));
+    });
+
+    // full-matrix models (the shapes used by validation)
+    let fmts = MmaFormats { a: Format::Fp16, b: Format::Fp16, c: Format::Fp32, d: Format::Fp32 };
+    for (label, spec, k) in [
+        ("hopper_t_fdpa", ModelSpec::TFdpa { l_max: 16, f: 25, rho: Rho::RzFp32 }, 16usize),
+        ("cdna3_tr_fdpa", ModelSpec::TrFdpa { l_max: 8, f: 24, f2: 31 }, 16),
+        ("cdna2_ftz", ModelSpec::FtzAddMul { p: 4 }, 16),
+        ("cdna1_e_fdpa", ModelSpec::EFdpa { l: 4 }, 16),
+    ] {
+        let model = MmaModel::new(label, (16, 8, k), fmts, spec);
+        let mut r2 = Rng::new(1);
+        let (a, b, c) = mma_sim::clfp::random_inputs(&mut r2, &model, 2);
+        let res = bench(&format!("mma/16x8x{k}/{label}"), || {
+            black_box(model.execute(&a, &b, &c, None));
+        });
+        println!(
+            "    -> {:.2} M dpa/s",
+            res.throughput((16 * 8) as f64) / 1e6
+        );
+    }
+}

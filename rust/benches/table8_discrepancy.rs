@@ -1,0 +1,28 @@
+//! Bench: Table 8 regeneration — the Eq. 10 discrepancy sweep across the
+//! full instruction registry, plus per-architecture timing.
+
+use mma_sim::analysis::discrepancy::{eq10_output, table8};
+use mma_sim::isa::{registry, Arch};
+use mma_sim::util::{bench, black_box};
+
+fn main() {
+    println!("== table8_discrepancy ==");
+    bench("table8/full_sweep", || {
+        black_box(table8());
+    });
+
+    for arch in [Arch::Volta, Arch::Hopper, Arch::Cdna2, Arch::Cdna3] {
+        let instrs: Vec<_> = registry().into_iter().filter(|i| i.arch == arch).collect();
+        bench(&format!("table8/arch/{}", arch.target()), || {
+            for i in &instrs {
+                black_box(eq10_output(i));
+            }
+        });
+    }
+
+    // correctness gate: the bench only counts if the table is right
+    let rows = table8();
+    let hopper = rows.iter().find(|r| r.arch == Arch::Hopper).unwrap();
+    assert_eq!(hopper.fp16, Some(-0.75));
+    println!("table8 values verified");
+}

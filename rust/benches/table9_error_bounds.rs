@@ -1,0 +1,28 @@
+//! Bench: Table 9 — error-bound measurement throughput per model family.
+
+use mma_sim::analysis::error_bounds::{measure, table9};
+use mma_sim::isa::{find, Arch};
+use mma_sim::util::{bench, black_box};
+
+fn main() {
+    println!("== table9_error_bounds ==");
+    bench("table9/full(40 samples/model)", || {
+        black_box(table9(40));
+    });
+
+    for (arch, frag, label) in [
+        (Arch::Hopper, "HGMMA.64x8x16.F32.F16", "hopper_fp16"),
+        (Arch::Cdna3, "16x16x16_f16", "cdna3_fp16"),
+        (Arch::Cdna2, "16x16x16_f16", "cdna2_fp16"),
+    ] {
+        let instr = find(arch, frag).unwrap();
+        bench(&format!("table9/measure/{label}"), || {
+            black_box(measure(&instr, 10, 42));
+        });
+    }
+
+    for row in table9(40) {
+        assert!(row.worst_ratio <= 1.0, "{} bound violated", row.instruction);
+    }
+    println!("table9 bounds verified");
+}

@@ -1,0 +1,69 @@
+//! Bench: §3.1.4 randomized-validation throughput — the coordinator's
+//! end-to-end verification rate (model-vs-model and, when artifacts are
+//! built, model-vs-PJRT), across worker counts and batch sizes.
+
+use std::sync::Arc;
+
+use mma_sim::coordinator::{Coordinator, VerifyPair};
+use mma_sim::formats::{Format, Rho};
+use mma_sim::interface::MmaFormats;
+use mma_sim::models::{MmaModel, ModelSpec};
+use mma_sim::runtime::{artifacts_dir, model_for_artifact, read_manifest, Runtime};
+use mma_sim::util::{bench, black_box};
+
+fn model() -> MmaModel {
+    MmaModel::new(
+        "bench",
+        (8, 8, 16),
+        MmaFormats { a: Format::Fp16, b: Format::Fp16, c: Format::Fp32, d: Format::Fp32 },
+        ModelSpec::TFdpa { l_max: 16, f: 25, rho: Rho::RzFp32 },
+    )
+}
+
+fn main() {
+    println!("== validation_throughput ==");
+    for workers in [1usize, 2, 4, 8] {
+        for batch in [50usize, 200] {
+            let pair = VerifyPair {
+                name: "m".into(),
+                dut: Arc::new(model()),
+                golden: Arc::new(model()),
+            };
+            let coord = Coordinator::new(vec![pair], workers, workers * 2);
+            let jobs = 8;
+            let r = bench(&format!("validate/w{workers}/batch{batch}"), || {
+                black_box(coord.run_campaign(jobs, batch, 7));
+            });
+            println!(
+                "    -> {:.0} MMAs verified/s",
+                r.throughput((jobs * batch) as f64)
+            );
+            coord.shutdown();
+        }
+    }
+
+    // PJRT path (model vs artifact), if built
+    let dir = artifacts_dir();
+    if dir.join("manifest.txt").exists() {
+        let rt = Runtime::new(&dir).expect("runtime");
+        if let Some(meta) = read_manifest(&dir)
+            .unwrap()
+            .into_iter()
+            .find(|m| m.name == "hopper_fp16_fp32")
+        {
+            let pair = VerifyPair {
+                name: "pjrt".into(),
+                dut: Arc::new(rt.load_mma(&meta).unwrap()),
+                golden: Arc::new(model_for_artifact(&meta).unwrap()),
+            };
+            let coord = Coordinator::new(vec![pair], 1, 2);
+            let r = bench("validate/pjrt/hopper_fp16(batch 20)", || {
+                black_box(coord.run_campaign(1, 20, 7));
+            });
+            println!("    -> {:.0} PJRT MMAs verified/s", r.throughput(20.0));
+            coord.shutdown();
+        }
+    } else {
+        println!("(artifacts not built; skipping the PJRT leg)");
+    }
+}

@@ -1,0 +1,164 @@
+//! Figure 3: the rounding-bias experiment (paper §6.2.4).
+//!
+//! Simulates the CDNA3 `v_mfma_f32_32x32x8_f16` instruction (TR-FDPA with
+//! internal round-down) against a hypothetical `…_rz` variant (internal
+//! round-to-zero). `A, B ~ 1000·N(0,1)` (FP16), `C ~ N(0,1)` (FP32);
+//! deviations are taken against the FP64 reference. RD shows a negative
+//! mean deviation; RZ is symmetric around zero.
+
+use crate::formats::{Format, RoundingMode};
+use crate::interface::{BitMatrix, MmaFormats, MmaInterface};
+use crate::models::{MmaModel, ModelSpec};
+use crate::ops::{tr_fdpa, TrFdpaCfg};
+use crate::util::Rng;
+
+/// Histogram + moments of the deviation distributions.
+#[derive(Clone, Debug)]
+pub struct BiasResult {
+    pub samples: usize,
+    pub mean_rd: f64,
+    pub mean_rz: f64,
+    pub std_rd: f64,
+    pub std_rz: f64,
+    /// Histogram bin edges (shared) and counts.
+    pub edges: Vec<f64>,
+    pub hist_rd: Vec<usize>,
+    pub hist_rz: Vec<usize>,
+}
+
+/// The production (RD) CDNA3 FP16 model at the Figure 3 shape.
+pub fn cdna3_fp16_model() -> MmaModel {
+    MmaModel::new(
+        "gfx942 v_mfma_f32_32x32x8_f16",
+        (32, 32, 8),
+        MmaFormats { a: Format::Fp16, b: Format::Fp16, c: Format::Fp32, d: Format::Fp32 },
+        ModelSpec::TrFdpa { l_max: 8, f: 24, f2: 31 },
+    )
+}
+
+/// Run the Figure 3 experiment with `mmas` random 32×32×8 MMAs
+/// (`32·32·mmas` deviation samples per variant).
+pub fn bias_experiment(mmas: usize, seed: u64) -> BiasResult {
+    let (m, n, k) = (32usize, 32usize, 8usize);
+    let model_rd = cdna3_fp16_model();
+    let cfg_rz = TrFdpaCfg { f: 24, f2: 31, inner_mode: RoundingMode::TowardZero };
+
+    let mut rng = Rng::new(seed);
+    let mut devs_rd = Vec::with_capacity(mmas * m * n);
+    let mut devs_rz = Vec::with_capacity(mmas * m * n);
+
+    for _ in 0..mmas {
+        let mut a = BitMatrix::zeros(m, k, Format::Fp16);
+        let mut b = BitMatrix::zeros(k, n, Format::Fp16);
+        let mut c = BitMatrix::zeros(m, n, Format::Fp32);
+        for v in a.data.iter_mut() {
+            *v = Format::Fp16.from_f64(1000.0 * rng.normal());
+        }
+        for v in b.data.iter_mut() {
+            *v = Format::Fp16.from_f64(1000.0 * rng.normal());
+        }
+        for v in c.data.iter_mut() {
+            *v = Format::Fp32.from_f64(rng.normal());
+        }
+        let d_rd = model_rd.execute(&a, &b, &c, None);
+        for i in 0..m {
+            for j in 0..n {
+                // hypothetical RZ instruction on the same dot product
+                let bcol: Vec<u64> = (0..k).map(|r| b.get(r, j)).collect();
+                let d_rz = tr_fdpa(Format::Fp16, a.row(i), &bcol, c.get(i, j), cfg_rz);
+                // FP64 reference (paper: D_real computed in FP64)
+                let mut real = Format::Fp32.to_f64(c.get(i, j));
+                for kk in 0..k {
+                    real += Format::Fp16.to_f64(a.get(i, kk))
+                        * Format::Fp16.to_f64(b.get(kk, j));
+                }
+                devs_rd.push(Format::Fp32.to_f64(d_rd.get(i, j)) - real);
+                devs_rz.push(Format::Fp32.to_f64(d_rz) - real);
+            }
+        }
+    }
+
+    let stats = |v: &[f64]| {
+        let n = v.len() as f64;
+        let mean = v.iter().sum::<f64>() / n;
+        let var = v.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n;
+        (mean, var.sqrt())
+    };
+    let (mean_rd, std_rd) = stats(&devs_rd);
+    let (mean_rz, std_rz) = stats(&devs_rz);
+
+    // shared histogram over ±4σ of the wider distribution
+    let span = 4.0 * std_rd.max(std_rz).max(1e-30);
+    let bins = 41usize;
+    let edges: Vec<f64> =
+        (0..=bins).map(|i| -span + 2.0 * span * i as f64 / bins as f64).collect();
+    let hist = |v: &[f64]| {
+        let mut h = vec![0usize; bins];
+        for &x in v {
+            let t = ((x + span) / (2.0 * span) * bins as f64).floor();
+            let idx = (t.max(0.0) as usize).min(bins - 1);
+            h[idx] += 1;
+        }
+        h
+    };
+
+    BiasResult {
+        samples: devs_rd.len(),
+        mean_rd,
+        mean_rz,
+        std_rd,
+        std_rz,
+        hist_rd: hist(&devs_rd),
+        hist_rz: hist(&devs_rz),
+        edges,
+    }
+}
+
+/// ASCII rendering of the two histograms (Figure 3).
+pub fn render(result: &BiasResult) -> String {
+    let mut s = String::new();
+    s.push_str(&format!(
+        "Figure 3 — deviation distributions over {} samples\n\
+         δ_RD: mean {:+.4e} (std {:.3e})   δ_RZ: mean {:+.4e} (std {:.3e})\n\n",
+        result.samples, result.mean_rd, result.std_rd, result.mean_rz, result.std_rz
+    ));
+    let maxc = result.hist_rd.iter().chain(result.hist_rz.iter()).copied().max().unwrap_or(1);
+    for (i, (rd, rz)) in result.hist_rd.iter().zip(result.hist_rz.iter()).enumerate() {
+        let lo = result.edges[i];
+        let bar = |c: usize| "#".repeat((c * 30).div_ceil(maxc.max(1)).min(30));
+        s.push_str(&format!(
+            "{lo:>11.3e} | RD {:<30} | RZ {:<30}\n",
+            bar(*rd),
+            bar(*rz)
+        ));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rd_is_negatively_biased_rz_is_not() {
+        let r = bias_experiment(6, 0xF16);
+        assert!(r.samples >= 6 * 32 * 32);
+        assert!(r.mean_rd < 0.0, "RD mean {:.3e} must be negative", r.mean_rd);
+        assert!(
+            r.mean_rz.abs() < r.mean_rd.abs() / 4.0,
+            "RZ mean {:.3e} must be near zero vs RD {:.3e}",
+            r.mean_rz,
+            r.mean_rd
+        );
+    }
+
+    #[test]
+    fn rd_distribution_shifted_left_of_rz() {
+        let r = bias_experiment(4, 0xF17);
+        // mass below zero: RD must exceed RZ
+        let mid = r.hist_rd.len() / 2;
+        let below_rd: usize = r.hist_rd[..mid].iter().sum();
+        let below_rz: usize = r.hist_rz[..mid].iter().sum();
+        assert!(below_rd > below_rz, "RD {below_rd} vs RZ {below_rz}");
+    }
+}

@@ -1,0 +1,225 @@
+//! Table 8: the six divergent outputs of Equation 10.
+//!
+//! `A = (a,0,…)ᵀ, B = (b,0,…), C = (c,0,…)` with
+//! `a = (−2¹³, −0.5, −0.25, −0.125, 0, …)`, `b = (2¹⁰, 1, 1, 1, 0, …)`,
+//! `c = (2²³, 0, …)`. The output `d₀₀` is the sum of `2²³`, `−2²³`,
+//! `−0.5`, `−0.25`, `−0.125` — and every architecture disagrees about it.
+
+use crate::interface::{BitMatrix, MmaInterface};
+use crate::isa::{registry, Arch, InputClass, Instruction};
+
+/// One architecture's row of Table 8.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Table8Row {
+    pub arch: Arch,
+    /// `d00` per input class column: TF32/BF16, FP16, FP8 (None = N/A).
+    pub tf32_bf16: Option<f64>,
+    pub fp16: Option<f64>,
+    pub fp8: Option<f64>,
+}
+
+/// Eq. 10 summand values.
+pub const EQ10_A: [f64; 4] = [-8192.0, -0.5, -0.25, -0.125];
+pub const EQ10_B: [f64; 4] = [1024.0, 1.0, 1.0, 1.0];
+pub const EQ10_C: f64 = 8388608.0; // 2^23
+
+/// Run the Eq. 10 input through one instruction, returning `d00`.
+pub fn eq10_output(instr: &Instruction) -> Option<f64> {
+    let model = instr.model();
+    let (m, n, k) = (instr.m, instr.n, instr.k);
+    if k < 4 {
+        // K < 4 instructions hold Eq. 10 by chaining MMAs over K-chunks,
+        // as a GEMM library would on hardware.
+        return eq10_output_chained(instr);
+    }
+    let fa = instr.formats.a;
+    let fc = instr.formats.c;
+    // the values must be exactly representable (they are, in every format
+    // the paper lists for this experiment)
+    for v in EQ10_A.iter().chain(EQ10_B.iter()) {
+        if fa.to_f64(fa.from_f64(*v)) != *v {
+            return None;
+        }
+    }
+    let mut a = BitMatrix::zeros(m, k, fa);
+    let mut b = BitMatrix::zeros(k, n, fa);
+    let mut c = BitMatrix::zeros(m, n, fc);
+    for (i, v) in EQ10_A.iter().enumerate() {
+        a.set(0, i, fa.from_f64(*v));
+    }
+    for (i, v) in EQ10_B.iter().enumerate() {
+        b.set(i, 0, fa.from_f64(*v));
+    }
+    c.set(0, 0, fc.from_f64(EQ10_C));
+    let d = model.execute(&a, &b, &c, None);
+    Some(instr.formats.d.to_f64(d.get(0, 0)))
+}
+
+/// K<4 instructions (e.g. FP32 16x16x4 has K=4, but 32x32x2 has K=2):
+/// Eq. 10 still applies by chaining the MMA over K-chunks, which is what
+/// a GEMM library does on hardware.
+fn eq10_output_chained(instr: &Instruction) -> Option<f64> {
+    let model = instr.model();
+    let (m, n, k) = (instr.m, instr.n, instr.k);
+    let fa = instr.formats.a;
+    let fc = instr.formats.c;
+    let mut acc = EQ10_C;
+    let mut idx = 0;
+    while idx < 4 {
+        let mut a = BitMatrix::zeros(m, k, fa);
+        let mut b = BitMatrix::zeros(k, n, fa);
+        let mut c = BitMatrix::zeros(m, n, fc);
+        for kk in 0..k.min(4 - idx) {
+            a.set(0, kk, fa.from_f64(EQ10_A[idx + kk]));
+            b.set(kk, 0, fa.from_f64(EQ10_B[idx + kk]));
+        }
+        c.set(0, 0, fc.from_f64(acc));
+        let d = model.execute(&a, &b, &c, None);
+        acc = instr.formats.d.to_f64(d.get(0, 0));
+        idx += k;
+    }
+    Some(acc)
+}
+
+fn class_pick(instrs: &[Instruction], pred: impl Fn(&Instruction) -> bool) -> Option<f64> {
+    instrs.iter().find(|i| pred(i)).and_then(eq10_output)
+}
+
+/// Compute the full Table 8.
+pub fn table8() -> Vec<Table8Row> {
+    let reg = registry();
+    Arch::ALL
+        .iter()
+        .map(|&arch| {
+            let instrs: Vec<Instruction> =
+                reg.iter().filter(|i| i.arch == arch).cloned().collect();
+            // prefer FP32-accumulating variants (the paper's table)
+            let tf32_bf16 = class_pick(&instrs, |i| {
+                matches!(i.class, InputClass::Tf32 | InputClass::Bf16)
+                    && i.formats.d == crate::formats::Format::Fp32
+            });
+            let fp16 = class_pick(&instrs, |i| {
+                i.class == InputClass::Fp16 && i.formats.d == crate::formats::Format::Fp32
+            });
+            // FP8 column: E5M2 (Eq. 10 needs 2^13/2^10, out of E4M3 range)
+            let fp8 = class_pick(&instrs, |i| {
+                i.class == InputClass::Fp8 && i.formats.a == crate::formats::Format::Fp8E5M2
+            });
+            Table8Row { arch, tf32_bf16, fp16, fp8 }
+        })
+        .collect()
+}
+
+/// FP64/FP32 reference row (the paper's caption: all produce −0.875).
+pub fn table8_fp64_fp32() -> Vec<(String, f64)> {
+    registry()
+        .iter()
+        .filter(|i| matches!(i.class, InputClass::Fp64 | InputClass::Fp32))
+        .filter_map(|i| eq10_output(i).map(|d| (format!("{} {}", i.arch.target(), i.name), d)))
+        .collect()
+}
+
+/// The CDNA2 BF16-without-_1k special case (the paper's "-0.375 or 0.0").
+pub fn table8_cdna2_bf16_variants() -> Vec<(String, f64)> {
+    registry()
+        .iter()
+        .filter(|i| i.arch == Arch::Cdna2 && i.class == InputClass::Bf16)
+        .filter_map(|i| eq10_output(i).map(|d| (i.name.to_string(), d)))
+        .collect()
+}
+
+/// Render Table 8 as text.
+pub fn render_table8() -> String {
+    let fmt = |v: Option<f64>| match v {
+        Some(x) => format!("{x:>7}"),
+        None => format!("{:>7}", "N/A"),
+    };
+    let mut s = String::new();
+    s.push_str("Architecture   | TF32/BF16 | FP16    | FP8\n");
+    s.push_str("---------------+-----------+---------+--------\n");
+    for row in table8() {
+        s.push_str(&format!(
+            "{:<14} | {} | {} | {}\n",
+            row.arch.name(),
+            fmt(row.tf32_bf16),
+            fmt(row.fp16),
+            fmt(row.fp8)
+        ));
+    }
+    s.push_str("\nCDNA2 BF16 variants: ");
+    for (name, d) in table8_cdna2_bf16_variants() {
+        s.push_str(&format!("{name} -> {d}; "));
+    }
+    s.push_str("\nAll FP64/FP32 instructions -> -0.875 (checked individually)\n");
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn row(arch: Arch) -> Table8Row {
+        table8().into_iter().find(|r| r.arch == arch).unwrap()
+    }
+
+    #[test]
+    fn table8_nvidia_column_values() {
+        assert_eq!(row(Arch::Volta).fp16, Some(0.0));
+        assert_eq!(row(Arch::Volta).tf32_bf16, None);
+        assert_eq!(row(Arch::Turing).fp16, Some(-0.5));
+        assert_eq!(row(Arch::Ampere).tf32_bf16, Some(-0.5));
+        assert_eq!(row(Arch::Ampere).fp16, Some(-0.5));
+        assert_eq!(row(Arch::AdaLovelace).fp8, Some(0.0));
+        assert_eq!(row(Arch::Hopper).tf32_bf16, Some(-0.75));
+        assert_eq!(row(Arch::Hopper).fp16, Some(-0.75));
+        assert_eq!(row(Arch::Hopper).fp8, Some(0.0));
+        assert_eq!(row(Arch::Blackwell).fp8, Some(-0.75));
+        assert_eq!(row(Arch::RtxBlackwell).tf32_bf16, Some(-0.75));
+        assert_eq!(row(Arch::RtxBlackwell).fp8, Some(-0.75));
+    }
+
+    #[test]
+    fn table8_amd_column_values() {
+        assert_eq!(row(Arch::Cdna1).tf32_bf16, Some(-0.875));
+        assert_eq!(row(Arch::Cdna1).fp16, Some(-0.875));
+        assert_eq!(row(Arch::Cdna2).fp16, Some(0.0));
+        assert_eq!(row(Arch::Cdna3).tf32_bf16, Some(-0.5));
+        assert_eq!(row(Arch::Cdna3).fp16, Some(-0.5));
+        assert_eq!(row(Arch::Cdna3).fp8, Some(-1.0));
+    }
+
+    #[test]
+    fn table8_cdna2_bf16_both_variants() {
+        let variants = table8_cdna2_bf16_variants();
+        let vals: std::collections::BTreeSet<String> =
+            variants.iter().map(|(_, d)| format!("{d}")).collect();
+        assert!(vals.contains("-0.375"), "{variants:?}");
+        assert!(vals.contains("0"), "{variants:?}");
+    }
+
+    #[test]
+    fn table8_fp64_fp32_all_exact() {
+        let rows = table8_fp64_fp32();
+        assert!(!rows.is_empty());
+        for (name, d) in rows {
+            assert_eq!(d, -0.875, "{name}");
+        }
+    }
+
+    #[test]
+    fn six_distinct_values_appear() {
+        // The paper's headline: 0.0, -0.375, -0.5, -0.75, -0.875, -1.0
+        let mut seen: std::collections::BTreeSet<String> = std::collections::BTreeSet::new();
+        for r in table8() {
+            for v in [r.tf32_bf16, r.fp16, r.fp8].into_iter().flatten() {
+                seen.insert(format!("{v}"));
+            }
+        }
+        for (_, d) in table8_cdna2_bf16_variants() {
+            seen.insert(format!("{d}"));
+        }
+        for want in ["0", "-0.375", "-0.5", "-0.75", "-0.875", "-1"] {
+            assert!(seen.contains(want), "missing {want}: {seen:?}");
+        }
+    }
+}

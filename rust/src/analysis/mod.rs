@@ -1,0 +1,15 @@
+//! Reproduction of the paper's analyses: discrepancy (§5, Table 8),
+//! error bounds (§6.1, Table 9), risky designs (§6.2, Table 10), and the
+//! rounding-bias experiment (Figure 3).
+
+pub mod bias;
+pub mod consistency;
+pub mod discrepancy;
+pub mod error_bounds;
+pub mod risky;
+pub mod tables;
+
+pub use bias::{bias_experiment, BiasResult};
+pub use discrepancy::{table8, Table8Row};
+pub use error_bounds::{table9, Table9Row};
+pub use risky::{table10, RiskyDesign};

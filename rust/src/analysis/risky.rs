@@ -1,0 +1,157 @@
+//! Table 10: risky designs in terms of numerical precision and bias,
+//! derived mechanically from the instruction registry — each flag is a
+//! predicate over the model parameters, so newly-added instructions are
+//! classified automatically.
+
+use crate::formats::{Format, Rho};
+use crate::isa::{registry, Arch};
+use crate::models::ModelSpec;
+
+/// One risky-design finding.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct RiskyDesign {
+    pub arch: Arch,
+    pub instruction: &'static str,
+    pub risk: &'static str,
+    pub detail: String,
+}
+
+/// Scan the registry for the paper's five risky designs.
+pub fn table10() -> Vec<RiskyDesign> {
+    let mut out = Vec::new();
+    for i in registry() {
+        match i.spec {
+            // 6.2.1: input FTZ of FP16 subnormals (error up to 2^-14)
+            ModelSpec::FtzAddMul { .. } if i.formats.a == Format::Fp16 => {
+                out.push(RiskyDesign {
+                    arch: i.arch,
+                    instruction: i.name,
+                    risk: "Input FTZ",
+                    detail: "FP16 input subnormals flushed: error up to 2^-14".into(),
+                });
+            }
+            // 6.2.2: reduced precision in fused summation (small F)
+            ModelSpec::TFdpa { f, rho, .. } if f < 20 => {
+                out.push(RiskyDesign {
+                    arch: i.arch,
+                    instruction: i.name,
+                    risk: "Small F",
+                    detail: format!("fused summation keeps only F={f} fractional bits"),
+                });
+                // 6.2.3a: RZ-E8M13 output
+                if rho == Rho::RzE8M13 {
+                    out.push(RiskyDesign {
+                        arch: i.arch,
+                        instruction: i.name,
+                        risk: "rho = RZ-E8M13",
+                        detail: "output truncated to 13 significand bits (1 ulp_E8M13)".into(),
+                    });
+                }
+            }
+            _ => {}
+        }
+        // 6.2.3b: FP16 output rounding limits precision to 10 bits
+        if let ModelSpec::TFdpa { rho: Rho::RneFp16, .. } = i.spec {
+            out.push(RiskyDesign {
+                arch: i.arch,
+                instruction: i.name,
+                risk: "rho = RNE-FP16",
+                detail: "FP16 output: 0.5 ulp_FP16 = 0.5·2^(e-10)".into(),
+            });
+        }
+        // 6.2.4: asymmetric internal rounding (RD)
+        if !i.spec.is_symmetric() {
+            out.push(RiskyDesign {
+                arch: i.arch,
+                instruction: i.name,
+                risk: "Asymmetry",
+                detail: "internal round-down: Φ(-A,B,-C) != -Φ(A,B,C)".into(),
+            });
+        }
+    }
+    out
+}
+
+/// Render Table 10 grouped as in the paper.
+pub fn render_table10() -> String {
+    let rows = table10();
+    let mut s = String::new();
+    s.push_str("Affected arch and instruction                     | Risky design\n");
+    s.push_str("--------------------------------------------------+----------------\n");
+    let mut seen = std::collections::BTreeSet::new();
+    for r in &rows {
+        let key = (r.arch, r.risk);
+        if seen.insert(key) {
+            let class = registry()
+                .iter()
+                .find(|i| i.name == r.instruction && i.arch == r.arch)
+                .map(|i| i.class.name())
+                .unwrap_or("?");
+            s.push_str(&format!(
+                "{:<49} | {}\n",
+                format!("{}, {} input", r.arch.name(), class),
+                r.risk
+            ));
+        }
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn risks_for(arch: Arch) -> std::collections::BTreeSet<&'static str> {
+        table10().into_iter().filter(|r| r.arch == arch).map(|r| r.risk).collect()
+    }
+
+    #[test]
+    fn cdna2_fp16_input_ftz() {
+        assert!(risks_for(Arch::Cdna2).contains("Input FTZ"));
+    }
+
+    #[test]
+    fn ada_hopper_fp8_small_f_and_e8m13() {
+        for arch in [Arch::AdaLovelace, Arch::Hopper] {
+            let r = risks_for(arch);
+            assert!(r.contains("Small F"), "{arch:?}");
+            assert!(r.contains("rho = RZ-E8M13"), "{arch:?}");
+        }
+    }
+
+    #[test]
+    fn blackwell_fixed_the_fp8_bottleneck() {
+        let r = risks_for(Arch::Blackwell);
+        assert!(!r.contains("Small F"), "Blackwell uses F=25 for FP8: {r:?}");
+        assert!(!r.contains("rho = RZ-E8M13"));
+    }
+
+    #[test]
+    fn all_nvidia_fp16_output_flagged() {
+        for arch in [
+            Arch::Volta,
+            Arch::Turing,
+            Arch::Ampere,
+            Arch::AdaLovelace,
+            Arch::Hopper,
+            Arch::Blackwell,
+            Arch::RtxBlackwell,
+        ] {
+            assert!(
+                risks_for(arch).contains("rho = RNE-FP16"),
+                "{arch:?} has FP16-output instructions"
+            );
+        }
+    }
+
+    #[test]
+    fn cdna3_asymmetry_flagged() {
+        assert!(risks_for(Arch::Cdna3).contains("Asymmetry"));
+        // and nobody else is asymmetric
+        for arch in Arch::ALL {
+            if arch != Arch::Cdna3 {
+                assert!(!risks_for(arch).contains("Asymmetry"), "{arch:?}");
+            }
+        }
+    }
+}

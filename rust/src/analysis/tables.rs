@@ -1,0 +1,174 @@
+//! Text renderings of the registry-derived tables (paper Tables 1–7).
+
+use crate::isa::{amd_instructions, nvidia_instructions, registry, Arch};
+use crate::models::ModelSpec;
+
+/// Table 1: model taxonomy.
+pub fn render_table1() -> String {
+    let mut cats: std::collections::BTreeMap<&str, std::collections::BTreeSet<&str>> =
+        Default::default();
+    for i in registry() {
+        cats.entry(i.spec.category()).or_default().insert(i.spec.symbol());
+    }
+    let mut s = String::from("Category      | Models\n--------------+-------\n");
+    for (cat, models) in cats {
+        s.push_str(&format!("{:<13} | {}\n", cat, models.into_iter().collect::<Vec<_>>().join(", ")));
+    }
+    s
+}
+
+/// Table 2: conversion functions (static, from the paper).
+pub fn render_table2() -> String {
+    "rho       | Definition\n\
+     ----------+-----------------------------------------------------------\n\
+     RZ-FP32   | Convert to FP32 (E8M23) with round-to-zero (RZ) mode.\n\
+     RZ-E8M13  | Convert to truncated FP32 (E8M13) with round-to-zero (RZ).\n\
+     RNE-FP32  | Convert to FP32 with round-to-nearest-ties-to-even (RNE).\n\
+     RNE-FP16  | Convert to FP16 with round-to-nearest-ties-to-even (RNE).\n"
+        .to_string()
+}
+
+/// Table 3: NVIDIA instruction → model mapping.
+pub fn render_table3() -> String {
+    let mut s = String::from("Input Type | SASS family          | Model\n");
+    s.push_str("-----------+----------------------+---------\n");
+    let mut seen = std::collections::BTreeSet::new();
+    for i in nvidia_instructions() {
+        let family = i.name.split('.').next().unwrap_or(i.name);
+        let key = (i.class.name(), i.spec.symbol());
+        if seen.insert(key) {
+            s.push_str(&format!(
+                "{:<10} | {:<20} | {}\n",
+                i.class.name(),
+                family,
+                i.spec.symbol()
+            ));
+        }
+    }
+    s
+}
+
+/// Table 4: T/ST-FDPA parameters per architecture and type.
+pub fn render_table4() -> String {
+    let mut s =
+        String::from("Architecture   | Input     | Output | L_max | F  | rho\n");
+    s.push_str("---------------+-----------+--------+-------+----+---------\n");
+    for i in nvidia_instructions() {
+        let (l, f, rho) = match i.spec {
+            ModelSpec::TFdpa { l_max, f, rho } => (l_max, f, rho),
+            ModelSpec::StFdpa { l_max, f, rho, .. } => (l_max, f, rho),
+            _ => continue,
+        };
+        s.push_str(&format!(
+            "{:<14} | {:<9} | {:<6} | {:>5} | {:>2} | {}\n",
+            i.arch.name(),
+            i.class.name(),
+            i.formats.d.name(),
+            l,
+            f,
+            rho.name()
+        ));
+    }
+    s
+}
+
+/// Table 5: GST-FDPA parameters.
+pub fn render_table5() -> String {
+    let mut s = String::from("Architecture   | Input       | L  | G  | F  | rho\n");
+    s.push_str("---------------+-------------+----+----+----+--------\n");
+    for i in nvidia_instructions() {
+        if let ModelSpec::GstFdpa { l, g, f, rho, .. } = i.spec {
+            s.push_str(&format!(
+                "{:<14} | {:<11} | {:>2} | {:>2} | {:>2} | {}\n",
+                i.arch.name(),
+                i.class.name(),
+                l,
+                g,
+                f,
+                rho.name()
+            ));
+        }
+    }
+    s
+}
+
+/// Table 6: AMD instruction → model mapping.
+pub fn render_table6() -> String {
+    let mut s = String::from("Arch  | Input                 | Model          | Param\n");
+    s.push_str("------+-----------------------+----------------+-------\n");
+    for i in amd_instructions() {
+        let param = match i.spec {
+            ModelSpec::FmaChain => "N/A".to_string(),
+            ModelSpec::EFdpa { l } => format!("L = {l}"),
+            ModelSpec::FtzAddMul { p } => format!("P = {p}"),
+            ModelSpec::TrFdpa { .. } | ModelSpec::GtrFdpa { .. } => "Table 7".to_string(),
+            _ => String::new(),
+        };
+        s.push_str(&format!(
+            "{:<5} | {:<21} | {:<14} | {}\n",
+            i.arch.name(),
+            i.name,
+            i.spec.symbol(),
+            param
+        ));
+    }
+    s
+}
+
+/// Table 7: TR/GTR-FDPA parameters.
+pub fn render_table7() -> String {
+    let mut s = String::from("Input Type | L_max | F  | F2 | rho\n");
+    s.push_str("-----------+-------+----+----+---------\n");
+    let mut seen = std::collections::BTreeSet::new();
+    for i in amd_instructions().into_iter().filter(|i| i.arch == Arch::Cdna3) {
+        let (l, f, f2) = match i.spec {
+            ModelSpec::TrFdpa { l_max, f, f2 } => (l_max, f, f2),
+            ModelSpec::GtrFdpa { l_max, f, f2 } => (l_max, f, f2),
+            _ => continue,
+        };
+        if seen.insert((i.class.name(), l)) {
+            s.push_str(&format!(
+                "{:<10} | {:>5} | {:>2} | {:>2} | RNE-FP32\n",
+                i.class.name(),
+                l,
+                f,
+                f2
+            ));
+        }
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_tables_render_nonempty() {
+        for (n, t) in [
+            (1, render_table1()),
+            (2, render_table2()),
+            (3, render_table3()),
+            (4, render_table4()),
+            (5, render_table5()),
+            (6, render_table6()),
+            (7, render_table7()),
+        ] {
+            assert!(t.lines().count() > 3, "table {n} too small:\n{t}");
+        }
+    }
+
+    #[test]
+    fn table4_lists_the_fp8_bottleneck() {
+        let t = render_table4();
+        assert!(t.contains("13 | RZ-E8M13"), "{t}");
+    }
+
+    #[test]
+    fn table7_has_three_input_rows() {
+        let t = render_table7();
+        assert!(t.contains("TF32"));
+        assert!(t.contains("FP16"));
+        assert!(t.contains("FP8"));
+    }
+}

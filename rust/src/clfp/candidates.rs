@@ -1,0 +1,131 @@
+//! The hypothesis space searched by the closed loop.
+//!
+//! The paper's Step 3 infers arithmetic features and composes a model; its
+//! Step 4 validates and revises. We realize the same loop as *guided
+//! hypothesis filtering*: the design space of realizable models (the eight
+//! families of Table 1 over their parameter grids) is filtered by the
+//! probe battery, and survivors face randomized bit-exact validation.
+//! Revision = continuing the search when a survivor fails.
+
+use crate::formats::{Format, Rho};
+use crate::interface::MmaFormats;
+use crate::models::{MmaModel, ModelSpec};
+
+/// Enumerate candidate model specs for an interface signature.
+///
+/// `k` is the dot-product depth, `in_fmt`/`out_fmt` the operand formats.
+/// The grid deliberately over-covers: F from 10 to 36, every divisor-L,
+/// both rounded-sum precisions seen in silicon plus neighbours.
+pub fn candidate_specs(k: usize, in_fmt: Format, out_fmt: Format) -> Vec<ModelSpec> {
+    let mut out = Vec::new();
+    let ls: Vec<usize> = [1usize, 2, 4, 8, 16, 32, 64]
+        .into_iter()
+        .filter(|&l| l <= k && k % l == 0 && l > 1)
+        .collect();
+
+    // FMA chain only type-checks for FP32/FP64 operands.
+    if matches!(in_fmt, Format::Fp32 | Format::Fp64) && in_fmt == out_fmt {
+        out.push(ModelSpec::FmaChain);
+    }
+    if out_fmt == Format::Fp32 {
+        // E-FDPA (AMD CDNA1)
+        for &l in &ls {
+            out.push(ModelSpec::EFdpa { l });
+        }
+        if k == 1 {
+            out.push(ModelSpec::EFdpa { l: 1 });
+        }
+        // FTZ-AddMul (AMD CDNA2)
+        for p in [2usize, 4] {
+            if k % p == 0 {
+                out.push(ModelSpec::FtzAddMul { p });
+            }
+        }
+        // TR / GTR (AMD CDNA3)
+        for &l in &ls {
+            for f in 22..=26 {
+                for f2 in 29..=33 {
+                    out.push(ModelSpec::TrFdpa { l_max: l, f, f2 });
+                    if l % 2 == 0 {
+                        out.push(ModelSpec::GtrFdpa { l_max: l, f, f2 });
+                    }
+                }
+            }
+        }
+    }
+    // T-FDPA (NVIDIA): every rho consistent with the output format.
+    let rhos: &[Rho] = if out_fmt == Format::Fp16 {
+        &[Rho::RneFp16]
+    } else {
+        &[Rho::RzFp32, Rho::RneFp32, Rho::RzE8M13]
+    };
+    let fs: Vec<i32> = (10..=27).chain([35, 36]).collect();
+    for &l in ls.iter().chain((k > 1).then_some(&k).into_iter()) {
+        for &f in &fs {
+            for &rho in rhos {
+                out.push(ModelSpec::TFdpa { l_max: l, f, rho });
+            }
+        }
+    }
+    out.sort_by_key(spec_key);
+    out.dedup_by_key(|s| spec_key(s));
+    out
+}
+
+fn spec_key(s: &ModelSpec) -> (u8, usize, i32, i32, u8) {
+    match *s {
+        ModelSpec::FmaChain => (0, 0, 0, 0, 0),
+        ModelSpec::FtzAddMul { p } => (1, p, 0, 0, 0),
+        ModelSpec::EFdpa { l } => (2, l, 0, 0, 0),
+        ModelSpec::TFdpa { l_max, f, rho } => (3, l_max, f, 0, rho as u8),
+        ModelSpec::StFdpa { l_max, f, rho, kblock } => (4, l_max, f, kblock as i32, rho as u8),
+        ModelSpec::GstFdpa { l, g, f, .. } => (5, l, f, g as i32, 0),
+        ModelSpec::TrFdpa { l_max, f, f2 } => (6, l_max, f, f2, 0),
+        ModelSpec::GtrFdpa { l_max, f, f2 } => (7, l_max, f, f2, 0),
+    }
+}
+
+/// Instantiate a candidate as an executable model matching the interface.
+pub fn instantiate(
+    spec: ModelSpec,
+    (m, n, k): (usize, usize, usize),
+    formats: MmaFormats,
+) -> MmaModel {
+    MmaModel::new(format!("candidate:{}", spec.symbol()), (m, n, k), formats, spec)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grid_contains_all_production_configs() {
+        // Every Table 4/6/7 configuration must be in the hypothesis space.
+        let g16 = candidate_specs(16, Format::Fp16, Format::Fp32);
+        assert!(g16.contains(&ModelSpec::TFdpa { l_max: 16, f: 25, rho: Rho::RzFp32 }));
+        assert!(g16.contains(&ModelSpec::TFdpa { l_max: 8, f: 24, rho: Rho::RzFp32 }));
+        assert!(g16.contains(&ModelSpec::TrFdpa { l_max: 8, f: 24, f2: 31 }));
+        assert!(g16.contains(&ModelSpec::EFdpa { l: 4 }));
+        assert!(g16.contains(&ModelSpec::FtzAddMul { p: 4 }));
+        let g4 = candidate_specs(4, Format::Fp16, Format::Fp32);
+        assert!(g4.contains(&ModelSpec::TFdpa { l_max: 4, f: 23, rho: Rho::RzFp32 }));
+        let g32 = candidate_specs(32, Format::Fp8E4M3, Format::Fp32);
+        assert!(g32.contains(&ModelSpec::TFdpa { l_max: 16, f: 13, rho: Rho::RzE8M13 }));
+        assert!(g32.contains(&ModelSpec::GtrFdpa { l_max: 16, f: 24, f2: 31 }));
+        let g16h = candidate_specs(16, Format::Fp16, Format::Fp16);
+        assert!(g16h.contains(&ModelSpec::TFdpa { l_max: 16, f: 25, rho: Rho::RneFp16 }));
+        let gf = candidate_specs(4, Format::Fp64, Format::Fp64);
+        assert!(gf.contains(&ModelSpec::FmaChain));
+    }
+
+    #[test]
+    fn grid_is_deduplicated_and_bounded() {
+        let g = candidate_specs(32, Format::Fp16, Format::Fp32);
+        let n = g.len();
+        let mut g2 = g.clone();
+        g2.dedup_by_key(|s| super::spec_key(s));
+        assert_eq!(g2.len(), n, "no duplicates");
+        assert!(n < 2000, "grid stays tractable: {n}");
+        assert!(n > 100, "grid covers the space: {n}");
+    }
+}

@@ -1,0 +1,498 @@
+//! CLFP: closed-loop feature probing (paper §3).
+//!
+//! Given any black-box [`MmaInterface`], the loop:
+//!
+//! 1. **Step 1** — confirms each output element is computed independently
+//!    (replicated rows/columns must give bitwise-identical outputs).
+//! 2. **Step 2** — measures the `d^(i,j)/v` swamping matrix and derives the
+//!    summation-tree signature (Figure 2), including the non-swamped fused
+//!    case the original FPRev missed.
+//! 3. **Step 3** — runs the arithmetic-feature probe battery (summation
+//!    precision via ε-halving, rounding direction via ±U±{0.5,1.5}ε,
+//!    subnormal/FTZ behaviour, special values, symmetry) and filters the
+//!    realizable-design hypothesis space of [`candidates`] down to the
+//!    specs consistent with every observation.
+//! 4. **Step 4** — randomized bit-exact validation of the surviving model
+//!    over the paper's three input classes; a failure revises the loop by
+//!    discarding the survivor and promoting the next.
+
+pub mod candidates;
+pub mod probes;
+pub mod tree;
+
+pub use candidates::candidate_specs;
+pub use probes::{Probe, ProbeBuilder};
+pub use tree::{tree_signature, TreeSignature};
+
+use crate::formats::Format;
+use crate::interface::{BitMatrix, MmaInterface};
+use crate::models::ModelSpec;
+use crate::util::Rng;
+
+/// Outcome of the closed loop.
+#[derive(Clone, Debug)]
+pub struct Inference {
+    /// Step 1 verdict.
+    pub independent: bool,
+    /// Step 2 signature (Figure 2 matrix).
+    pub tree: TreeSignature,
+    /// Number of probe cases executed against the interface.
+    pub probes_run: usize,
+    /// Candidates surviving the probe filter, best first.
+    pub survivors: Vec<ModelSpec>,
+    /// The validated model, if step 4 passed.
+    pub inferred: Option<ModelSpec>,
+    /// Randomized tests the winning model passed bit-for-bit.
+    pub validated: usize,
+    /// Validation mismatches observed during revision (discarded models).
+    pub revisions: usize,
+}
+
+/// Tuning knobs for the loop.
+#[derive(Clone, Copy, Debug)]
+pub struct ClfpConfig {
+    /// Randomized validation tests for the winning candidate.
+    pub validate_tests: usize,
+    /// RNG seed (deterministic loop).
+    pub seed: u64,
+}
+
+impl Default for ClfpConfig {
+    fn default() -> Self {
+        Self { validate_tests: 2000, seed: 0xC1F9 }
+    }
+}
+
+/// Step 1: computational independence (paper §3.1.1).
+pub fn check_independence(iface: &dyn MmaInterface, rng: &mut Rng) -> bool {
+    let (m, n, k) = iface.shape();
+    let fmts = iface.formats();
+    for _ in 0..4 {
+        // 2K+1 random finite values, replicated across rows/columns
+        let mut a = BitMatrix::zeros(m, k, fmts.a);
+        let mut b = BitMatrix::zeros(k, n, fmts.b);
+        let mut c = BitMatrix::zeros(m, n, fmts.c);
+        let arow: Vec<u64> = (0..k).map(|_| finite_bits(fmts.a, rng)).collect();
+        let bcol: Vec<u64> = (0..k).map(|_| finite_bits(fmts.b, rng)).collect();
+        let cval = finite_bits(fmts.c, rng);
+        for i in 0..m {
+            for kk in 0..k {
+                a.set(i, kk, arow[kk]);
+            }
+        }
+        for kk in 0..k {
+            for j in 0..n {
+                b.set(kk, j, bcol[kk]);
+            }
+        }
+        for v in c.data.iter_mut() {
+            *v = cval;
+        }
+        let d = iface.execute(&a, &b, &c, None);
+        let first = d.get(0, 0);
+        if d.data.iter().any(|&x| x != first) {
+            return false;
+        }
+    }
+    true
+}
+
+fn finite_bits(fmt: Format, rng: &mut Rng) -> u64 {
+    loop {
+        let b = rng.bits(fmt.width());
+        let d = fmt.decode(b);
+        if !d.is_nan() && !d.is_inf() {
+            return b;
+        }
+    }
+}
+
+/// Step 3 probe battery: builds the full list of feature probes for an
+/// interface signature.
+pub fn probe_battery(pb: &ProbeBuilder) -> Vec<Probe> {
+    let k = pb.k;
+    let e_u = pb.e_u();
+    let e_lo = pb.e_min().max(e_u - 45);
+    let u = probes::pow2(e_u);
+    let mut out = Vec::new();
+    let mut push = |p: Vec<f64>, c: f64, label: String| {
+        out.push(Probe { p, c, label });
+    };
+
+    // -- summation precision: FusedSum(U, -U, eps) with halving eps,
+    //    with the epsilon in different lanes to expose grouping
+    for lane in [0usize, 1, 2.min(k - 1), k - 1] {
+        for t in 0..(e_u - e_lo) {
+            let eps = probes::pow2(e_u - 1 - t);
+            let mut p = vec![0.0; k];
+            p[0] = u;
+            if k > 1 {
+                p[lane.max(1)] = -u;
+            }
+            if lane < k {
+                // epsilon via c when it collides with the ±U lanes
+                if lane == 0 || (lane == 1 && k > 1) {
+                    push(p.clone(), eps, format!("prec(c,2^{})", e_u - 1 - t));
+                    continue;
+                }
+                p[lane] = eps;
+            }
+            push(p, 0.0, format!("prec(l{lane},2^{})", e_u - 1 - t));
+        }
+    }
+
+    // -- Add(U, eps) through the accumulator: c = U, single product eps
+    for t in 0..(e_u - e_lo) {
+        let eps = probes::pow2(e_u - 1 - t);
+        let mut p = vec![0.0; k];
+        p[0] = eps;
+        push(p, u, format!("addprec(2^{})", e_u - 1 - t));
+    }
+
+    // -- rounding direction: ±U ± {0.5, 1.25, 1.5, 1.75}·eps at various eps
+    for eps_t in [10, 13, 22, 23, 24, 25, 26, 35] {
+        if eps_t >= e_u - e_lo {
+            continue;
+        }
+        let eps = probes::pow2(e_u - 1 - eps_t);
+        for frac in [0.5, 1.25, 1.5, 1.75] {
+            for sign in [1.0, -1.0] {
+                let mut p = vec![0.0; k];
+                p[0] = sign * u;
+                if k > 1 {
+                    p[1] = sign * frac * eps;
+                    push(p, 0.0, format!("round({sign},{frac},2^-{eps_t})"));
+                } else {
+                    push(p, sign * frac * eps, format!("roundc({sign},{frac},2^-{eps_t})"));
+                }
+            }
+        }
+    }
+
+    // -- two-term vs fused accumulator behaviour (TR vs T): c after sum
+    for eps_t in [23, 24, 25, 30, 31, 32] {
+        if eps_t >= e_u - e_lo {
+            continue;
+        }
+        let eps = probes::pow2(e_u - 1 - eps_t);
+        for sign in [1.0, -1.0] {
+            let mut p = vec![0.0; k];
+            p[0] = sign * eps;
+            if k > 1 {
+                p[1] = sign * eps / 2.0;
+            }
+            push(p, sign * u, format!("acc({sign},2^-{eps_t})"));
+        }
+    }
+
+    // -- F2 pinning (TR/GTR rounded product-sum precision): the product
+    //    sum T sits half a quantum past an RNE-FP32 tie against c = ∓U;
+    //    whether the trailing 1.5·2^(e_u−t) term survives the F2
+    //    truncation decides which side of the tie S lands on.
+    if k >= 2 {
+        // T = 0.5·ulp(U) + 1.5·2^(e_u−t): with no F2 truncation S sits on
+        // an exact RNE tie (resolving to even = U); truncating the tail at
+        // F2 <= t-1 keeps S past the tie (rounding to U − ulp). Sweeping t
+        // across the plausible F2 range pins F2 exactly.
+        for t in [28, 29, 30, 31, 32, 33, 34] {
+            if t + 1 >= e_u - e_lo {
+                continue;
+            }
+            for sign in [1.0, -1.0] {
+                let mut p = vec![0.0; k];
+                p[0] = sign * probes::pow2(e_u - 25);
+                p[1] = sign * 1.5 * probes::pow2(e_u - t);
+                push(p.clone(), -sign * u, format!("f2pin({sign},2^-{t})"));
+                // parity-shifted variant (GTR groups by even/odd index)
+                if k >= 3 {
+                    let mut p2 = vec![0.0; k];
+                    p2[0] = sign * probes::pow2(e_u - 25);
+                    p2[2] = sign * 1.5 * probes::pow2(e_u - t);
+                    push(p2, -sign * u, format!("f2pin-even({sign},2^-{t})"));
+                }
+            }
+        }
+    }
+
+    // -- even/odd grouping (GTR): epsilons split across parities
+    if k >= 4 {
+        for eps_t in [23, 24, 25] {
+            if eps_t + 2 >= e_u - e_lo {
+                continue;
+            }
+            let eps = probes::pow2(e_u - 1 - eps_t);
+            let mut p = vec![0.0; k];
+            p[0] = u;
+            p[2] = -u;
+            p[1] = -1.5 * eps;
+            p[3] = -1.5 * eps;
+            push(p.clone(), 0.0, format!("parity(2^-{eps_t})"));
+            let mut p2 = vec![0.0; k];
+            p2[0] = u;
+            p2[1] = -u;
+            p2[2] = -1.5 * eps;
+            if k > 3 {
+                p2[3] = -1.5 * eps;
+            }
+            push(p2, 0.0, format!("parity2(2^-{eps_t})"));
+        }
+    }
+
+    // -- subnormal / FTZ behaviour: subnormal products and accumulators
+    let sub = probes::pow2(pb.in_fmt.emin() - pb.in_fmt.mant_bits() as i32);
+    let mut p = vec![0.0; k];
+    p[0] = sub;
+    push(p.clone(), 0.0, "ftz-in".into());
+    p[0] = -sub;
+    push(p.clone(), 0.0, "ftz-in-neg".into());
+    p[0] = sub;
+    push(p.clone(), 1.0, "ftz-in+1".into());
+    // c subnormal
+    let csub = probes::pow2(pb.c_fmt.emin() - 1);
+    if pb.c_representable(csub) {
+        push(vec![0.0; k], csub, "ftz-c".into());
+        push(vec![0.0; k], -csub, "ftz-c-neg".into());
+    }
+    // product of two values that lands subnormal in FP32 (output flush)
+    if pb.in_fmt == Format::Bf16 {
+        let mut p = vec![0.0; k];
+        p[0] = probes::pow2(-130);
+        push(p, 0.0, "ftz-out".into());
+    }
+
+    // -- asymmetry: the Eq.10-style mixture and its negation
+    if k >= 4 {
+        let base = [-probes::pow2(e_u - 1), -0.5, -0.25, -0.125];
+        let mut p = vec![0.0; k];
+        p[..4].copy_from_slice(&base);
+        push(p.clone(), probes::pow2(e_u - 1), "eq10".into());
+        let np: Vec<f64> = p.iter().map(|x| -x).collect();
+        push(np, -probes::pow2(e_u - 1), "eq10-neg".into());
+    }
+
+    // -- exact-cancellation zero signs
+    if k > 1 {
+        let mut p = vec![0.0; k];
+        p[0] = 1.0;
+        p[1] = -1.0;
+        push(p, 0.0, "zero-cancel".into());
+        push(vec![-0.0; k], -0.0, "zero-allneg".into());
+    }
+
+    out
+}
+
+/// Run the battery against an interface, recording output bits per probe
+/// (`None` where the probe is not realizable in the format).
+pub fn run_battery(
+    iface: &dyn MmaInterface,
+    pb: &ProbeBuilder,
+    battery: &[Probe],
+) -> Vec<Option<u64>> {
+    battery.iter().map(|p| pb.run(iface, p)).collect()
+}
+
+/// The full closed loop.
+pub fn infer(iface: &dyn MmaInterface, cfg: ClfpConfig) -> Inference {
+    let mut rng = Rng::new(cfg.seed);
+    let (m, n, k) = iface.shape();
+    let fmts = iface.formats();
+
+    // Step 1
+    let independent = check_independence(iface, &mut rng);
+
+    // Step 2 (recorded for reporting; candidates must reproduce it too)
+    let tree = tree_signature(iface);
+
+    // Step 3: probe battery against the interface...
+    let pb = ProbeBuilder::for_interface(iface);
+    let battery = probe_battery(&pb);
+    let observed = run_battery(iface, &pb, &battery);
+
+    // ...then filter the hypothesis space.
+    let specs = candidate_specs(k, fmts.a, fmts.d);
+    let mut survivors: Vec<ModelSpec> = Vec::new();
+    'cand: for spec in specs {
+        let cand = candidates::instantiate(spec, (m, n, k), fmts);
+        if tree_signature(&cand).ratio != tree.ratio {
+            continue;
+        }
+        for (probe, want) in battery.iter().zip(observed.iter()) {
+            if pb.run(&cand, probe) != *want {
+                continue 'cand;
+            }
+        }
+        survivors.push(spec);
+    }
+
+    // Step 4: randomized validation with revision.
+    let mut revisions = 0;
+    let mut inferred = None;
+    let mut validated = 0;
+    'surv: for &spec in &survivors {
+        let cand = candidates::instantiate(spec, (m, n, k), fmts);
+        let mut vrng = Rng::new(cfg.seed ^ 0x5742_11D4);
+        for t in 0..cfg.validate_tests {
+            let (a, b, c) = random_inputs(&mut vrng, iface, t);
+            let want = iface.execute(&a, &b, &c, None);
+            let got = cand.execute(&a, &b, &c, None);
+            if want.data != got.data {
+                revisions += 1;
+                continue 'surv;
+            }
+        }
+        inferred = Some(spec);
+        validated = cfg.validate_tests;
+        break;
+    }
+
+    Inference {
+        independent,
+        tree,
+        probes_run: battery.len(),
+        survivors,
+        inferred,
+        validated,
+        revisions,
+    }
+}
+
+/// Step 4 input generator cycling through the paper's three classes:
+/// value distributions, adversarial cancellation, and raw bit streams.
+pub fn random_inputs(
+    rng: &mut Rng,
+    iface: &dyn MmaInterface,
+    t: usize,
+) -> (BitMatrix, BitMatrix, BitMatrix) {
+    let (m, n, k) = iface.shape();
+    let fmts = iface.formats();
+    let mut a = BitMatrix::zeros(m, k, fmts.a);
+    let mut b = BitMatrix::zeros(k, n, fmts.b);
+    let mut c = BitMatrix::zeros(m, n, fmts.c);
+    match t % 3 {
+        0 => {
+            // class 1: common value distributions (normal / DNN mix)
+            for v in a.data.iter_mut() {
+                *v = fmts.a.from_f64(rng.dnn_mix());
+            }
+            for v in b.data.iter_mut() {
+                *v = fmts.b.from_f64(rng.normal());
+            }
+            for v in c.data.iter_mut() {
+                *v = fmts.c.from_f64(rng.normal());
+            }
+        }
+        1 => {
+            // class 2: adversarial cancellation (large condition number)
+            for kk in 0..k {
+                for i in 0..m {
+                    let mag = if kk % 2 == 0 { 1000.0 } else { -1000.0 };
+                    let val = mag * (1.0 + rng.uniform() * 0.01) + rng.normal() * 0.001;
+                    a.set(i, kk, fmts.a.from_f64(val));
+                }
+                for j in 0..n {
+                    b.set(kk, j, fmts.b.from_f64(1.0 + rng.uniform() * 0.001));
+                }
+            }
+            for v in c.data.iter_mut() {
+                *v = fmts.c.from_f64(rng.normal() * 1e-3);
+            }
+        }
+        _ => {
+            // class 3: raw bit streams (most productive per the paper)
+            for v in a.data.iter_mut() {
+                *v = rng.bits(fmts.a.width());
+            }
+            for v in b.data.iter_mut() {
+                *v = rng.bits(fmts.b.width());
+            }
+            for v in c.data.iter_mut() {
+                *v = rng.bits(fmts.c.width());
+            }
+        }
+    }
+    (a, b, c)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::Rho;
+    use crate::interface::MmaFormats;
+    use crate::models::MmaModel;
+
+    fn model(k: usize, spec: ModelSpec) -> MmaModel {
+        MmaModel::new(
+            "clfp-test",
+            (4, 4, k),
+            MmaFormats { a: Format::Fp16, b: Format::Fp16, c: Format::Fp32, d: Format::Fp32 },
+            spec,
+        )
+    }
+
+    #[test]
+    fn independence_holds_for_models() {
+        let m = model(8, ModelSpec::TFdpa { l_max: 8, f: 24, rho: Rho::RzFp32 });
+        let mut rng = Rng::new(1);
+        assert!(check_independence(&m, &mut rng));
+    }
+
+    #[test]
+    fn battery_is_substantial() {
+        let m = model(8, ModelSpec::TFdpa { l_max: 8, f: 24, rho: Rho::RzFp32 });
+        let pb = ProbeBuilder::for_interface(&m);
+        let battery = probe_battery(&pb);
+        assert!(battery.len() > 150, "battery size {}", battery.len());
+    }
+
+    #[test]
+    fn infer_recovers_turing_parameters() {
+        let truth = ModelSpec::TFdpa { l_max: 8, f: 24, rho: Rho::RzFp32 };
+        let m = model(8, truth);
+        let inf = infer(&m, ClfpConfig { validate_tests: 300, seed: 7 });
+        assert!(inf.independent);
+        assert_eq!(inf.inferred, Some(truth), "survivors: {:?}", inf.survivors);
+    }
+
+    #[test]
+    fn infer_recovers_hopper_parameters() {
+        let truth = ModelSpec::TFdpa { l_max: 16, f: 25, rho: Rho::RzFp32 };
+        let m = model(16, truth);
+        let inf = infer(&m, ClfpConfig { validate_tests: 200, seed: 9 });
+        assert_eq!(inf.inferred, Some(truth), "survivors: {:?}", inf.survivors);
+    }
+
+    #[test]
+    fn infer_recovers_cdna3_tr_fdpa() {
+        let truth = ModelSpec::TrFdpa { l_max: 8, f: 24, f2: 31 };
+        let m = model(16, truth);
+        let inf = infer(&m, ClfpConfig { validate_tests: 300, seed: 11 });
+        assert_eq!(inf.inferred, Some(truth), "survivors: {:?}", inf.survivors);
+    }
+
+    #[test]
+    fn infer_recovers_cdna2_ftz() {
+        let truth = ModelSpec::FtzAddMul { p: 4 };
+        let m = model(16, truth);
+        let inf = infer(&m, ClfpConfig { validate_tests: 300, seed: 13 });
+        assert_eq!(inf.inferred, Some(truth), "survivors: {:?}", inf.survivors);
+    }
+
+    #[test]
+    fn infer_recovers_cdna1_e_fdpa() {
+        let truth = ModelSpec::EFdpa { l: 4 };
+        let m = model(16, truth);
+        let inf = infer(&m, ClfpConfig { validate_tests: 300, seed: 17 });
+        assert_eq!(inf.inferred, Some(truth), "survivors: {:?}", inf.survivors);
+    }
+
+    #[test]
+    fn mystery_perturbation_is_detected() {
+        // A "documented" Hopper (F=25) that actually computes with F=24
+        // must be inferred as F=24 — the loop sees through the datasheet.
+        let actual = ModelSpec::TFdpa { l_max: 16, f: 24, rho: Rho::RzFp32 };
+        let m = model(16, actual);
+        let inf = infer(&m, ClfpConfig { validate_tests: 200, seed: 23 });
+        assert_eq!(inf.inferred, Some(actual));
+    }
+}

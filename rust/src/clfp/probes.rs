@@ -1,0 +1,230 @@
+//! Probe-input construction (paper §3.1.2–3.1.3).
+//!
+//! A probe sets the summand values `p_0 … p_{K-1}` (realized as
+//! `a_{0,k}·b_{k,0}` products) and the accumulator `c` for the `(0,0)`
+//! output element, with everything else zero. Values outside the input
+//! format's range are factored across `a` and `b` (`p = a·b` with both
+//! halves representable), exactly as the paper's harness does for FP8
+//! probing.
+
+use crate::formats::{Class, Format};
+use crate::interface::{BitMatrix, MmaInterface};
+
+/// One probe case: target summands and accumulator for element (0,0).
+#[derive(Clone, Debug)]
+pub struct Probe {
+    /// `p_k` values (length K); each is `sign * frac * 2^exp` with
+    /// `frac ∈ [1, 2)` representable in a few bits.
+    pub p: Vec<f64>,
+    /// Accumulator value.
+    pub c: f64,
+    /// Descriptive label for reports.
+    pub label: String,
+}
+
+/// Builds bit-matrix inputs realizing probe summands on an interface.
+pub struct ProbeBuilder {
+    pub m: usize,
+    pub n: usize,
+    pub k: usize,
+    pub in_fmt: Format,
+    pub c_fmt: Format,
+}
+
+impl ProbeBuilder {
+    pub fn for_interface(iface: &dyn MmaInterface) -> Self {
+        let (m, n, k) = iface.shape();
+        let fmts = iface.formats();
+        Self { m, n, k, in_fmt: fmts.a, c_fmt: fmts.c }
+    }
+
+    /// Factor a power-of-two-ish value `v = frac·2^e` into `(a, b)` with
+    /// both representable in `in_fmt` (frac lands on `a`). Returns `None`
+    /// when the value cannot be represented exactly as a product.
+    pub fn factor(&self, v: f64) -> Option<(f64, f64)> {
+        if v == 0.0 {
+            return Some((0.0, 0.0));
+        }
+        let fmt = self.in_fmt;
+        let (frac, exp) = frexp(v.abs());
+        let e = exp - 1; // v.abs() = frac*2^exp with frac in [0.5,1): use [1,2)
+        let mant = frac * 2.0;
+        let sign = if v < 0.0 { -1.0 } else { 1.0 };
+        // choose ea + eb = e with both within range. Two passes: prefer
+        // splits where both factors are *normal* (probes must survive
+        // input-FTZ hardware like CDNA2), fall back to subnormal splits.
+        let emax = fmt.emax();
+        let emin = fmt.emin();
+        let emin_sub = emin - fmt.mant_bits() as i32; // min subnormal exp
+        for floor in [emin, emin_sub] {
+            let hi = emax.min(e - floor);
+            let lo = floor.max(e - emax);
+            let mut ea = hi;
+            while ea >= lo {
+                let eb = e - ea;
+                let a = sign * mant * pow2(ea);
+                let b = pow2(eb);
+                if self.representable(a) && self.representable(b) {
+                    return Some((a, b));
+                }
+                ea -= 1;
+            }
+        }
+        None
+    }
+
+    /// True if `v` encodes exactly in the input format.
+    pub fn representable(&self, v: f64) -> bool {
+        let bits = self.in_fmt.from_f64(v);
+        let d = self.in_fmt.decode(bits);
+        if v == 0.0 {
+            return d.class == Class::Zero;
+        }
+        d.class == Class::Finite && self.in_fmt.to_f64(bits) == v
+    }
+
+    /// True if `v` encodes exactly in the accumulator format.
+    pub fn c_representable(&self, v: f64) -> bool {
+        v == 0.0 || self.c_fmt.to_f64(self.c_fmt.from_f64(v)) == v
+    }
+
+    /// Build `(A, B, C)` matrices realizing a probe, or `None` if some
+    /// value is not exactly representable.
+    pub fn build(&self, probe: &Probe) -> Option<(BitMatrix, BitMatrix, BitMatrix)> {
+        debug_assert_eq!(probe.p.len(), self.k);
+        let mut a = BitMatrix::zeros(self.m, self.k, self.in_fmt);
+        let mut b = BitMatrix::zeros(self.k, self.n, self.in_fmt);
+        let mut c = BitMatrix::zeros(self.m, self.n, self.c_fmt);
+        if !self.c_representable(probe.c) {
+            return None;
+        }
+        c.set(0, 0, self.c_fmt.from_f64(probe.c));
+        for (kk, &p) in probe.p.iter().enumerate() {
+            let (av, bv) = self.factor(p)?;
+            a.set(0, kk, self.in_fmt.from_f64(av));
+            b.set(kk, 0, self.in_fmt.from_f64(bv));
+        }
+        Some((a, b, c))
+    }
+
+    /// Run one probe through an interface, returning the raw `(0,0)` bits.
+    pub fn run(&self, iface: &dyn MmaInterface, probe: &Probe) -> Option<u64> {
+        if !self.c_representable(probe.c) {
+            return None;
+        }
+        let mut a_row = vec![0u64; self.k];
+        let mut b_col = vec![0u64; self.k];
+        for (kk, &p) in probe.p.iter().enumerate() {
+            let (av, bv) = self.factor(p)?;
+            a_row[kk] = self.in_fmt.from_f64(av);
+            b_col[kk] = self.in_fmt.from_f64(bv);
+        }
+        Some(iface.probe(&a_row, &b_col, self.c_fmt.from_f64(probe.c)))
+    }
+
+    /// Largest usable swamping exponent `e_u` for the step-2/3 probes:
+    /// the accumulator and the products must both reach it.
+    pub fn e_u(&self) -> i32 {
+        let prod_max = 2 * self.in_fmt.emax();
+        (self.c_fmt.emax() - 2).min(prod_max)
+    }
+
+    /// Smallest realizable *product* exponent (two minimum subnormals).
+    pub fn e_min(&self) -> i32 {
+        2 * (self.in_fmt.emin() - self.in_fmt.mant_bits() as i32)
+    }
+}
+
+/// `frexp`: `v = frac * 2^exp`, `frac ∈ [0.5, 1)`.
+pub fn frexp(v: f64) -> (f64, i32) {
+    debug_assert!(v > 0.0 && v.is_finite());
+    let bits = v.to_bits();
+    let exp_field = ((bits >> 52) & 0x7FF) as i32;
+    if exp_field == 0 {
+        // subnormal: normalize
+        let n = v * 2f64.powi(100);
+        let (f, e) = frexp(n);
+        return (f, e - 100);
+    }
+    let e = exp_field - 1022;
+    let frac = f64::from_bits((bits & !(0x7FFu64 << 52)) | (1022u64 << 52));
+    (frac, e)
+}
+
+#[inline]
+pub fn pow2(e: i32) -> f64 {
+    if (-1022..=1023).contains(&e) {
+        f64::from_bits(((e + 1023) as u64) << 52)
+    } else if (-1074..-1022).contains(&e) {
+        // subnormal: bit position e + 1074
+        f64::from_bits(1u64 << (e + 1074))
+    } else if e < -1074 {
+        0.0
+    } else {
+        f64::INFINITY
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::Rho;
+    use crate::interface::MmaFormats;
+    use crate::models::{MmaModel, ModelSpec};
+
+    fn builder(in_fmt: Format, c_fmt: Format, k: usize) -> ProbeBuilder {
+        ProbeBuilder { m: 4, n: 4, k, in_fmt, c_fmt }
+    }
+
+    #[test]
+    fn factor_within_range() {
+        let b = builder(Format::Fp8E4M3, Format::Fp32, 4);
+        // 2^16 exceeds E4M3 alone (emax 8) but factors as 2^8 * 2^8
+        let (x, y) = b.factor(pow2(16)).unwrap();
+        assert_eq!(x * y, pow2(16));
+        assert!(b.representable(x) && b.representable(y));
+        // -1.5 * 2^10
+        let (x, y) = b.factor(-1.5 * pow2(10)).unwrap();
+        assert_eq!(x * y, -1.5 * pow2(10));
+    }
+
+    #[test]
+    fn factor_rejects_unrepresentable_fraction() {
+        let b = builder(Format::Fp4E2M1, Format::Fp32, 4);
+        // 1.75 needs 3 significand bits; FP4 has 1
+        assert!(b.factor(1.75).is_none());
+        assert!(b.factor(1.5).is_some());
+    }
+
+    #[test]
+    fn probe_roundtrip_through_model() {
+        let model = MmaModel::new(
+            "probe-test",
+            (4, 4, 4),
+            MmaFormats { a: Format::Fp16, b: Format::Fp16, c: Format::Fp32, d: Format::Fp32 },
+            ModelSpec::TFdpa { l_max: 4, f: 24, rho: Rho::RzFp32 },
+        );
+        let pb = ProbeBuilder::for_interface(&model);
+        let probe = Probe { p: vec![2.0, -0.5, 0.25, 0.0], c: 1.0, label: "t".into() };
+        let bits = pb.run(&model, &probe).unwrap();
+        assert_eq!(f32::from_bits(bits as u32), 2.75);
+    }
+
+    #[test]
+    fn frexp_pow2() {
+        assert_eq!(frexp(1.0), (0.5, 1));
+        assert_eq!(frexp(0.75), (0.75, 0));
+        let (f, e) = frexp(pow2(-1030));
+        assert_eq!(f * pow2(e), pow2(-1030));
+    }
+
+    #[test]
+    fn e_u_respects_format_ranges() {
+        let b = builder(Format::Fp8E4M3, Format::Fp32, 4);
+        assert_eq!(b.e_u(), 16); // 2 * emax(E4M3)
+        let b = builder(Format::Fp16, Format::Fp32, 4);
+        assert_eq!(b.e_u(), 30);
+        let b = builder(Format::Fp16, Format::Fp16, 4);
+        assert_eq!(b.e_u(), 13); // fp16 c: emax 15 - 2
+    }
+}

@@ -1,0 +1,208 @@
+//! Step 2: summation-order inference (paper §3.1.2, extending FPRev).
+//!
+//! For every pair `0 ≤ i < j ≤ K`, the probe sets `p_i = U`, `p_j = -U`,
+//! all other summands to `v` (with `(K-1)·v ± U = ±U` in the target's
+//! arithmetic), and records `d^(i,j)/v` — the number of small summands
+//! *not* swamped by the large pair. The resulting matrix identifies the
+//! summation tree (Figure 2), including the non-swamped fused summations
+//! that the original FPRev missed (Equation 9).
+
+use super::probes::{pow2, Probe, ProbeBuilder};
+use crate::interface::MmaInterface;
+
+/// The `d^(i,j)/v` matrix plus the probe parameters that produced it.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TreeSignature {
+    pub k: usize,
+    pub e_u: i32,
+    pub e_v: i32,
+    /// `ratio[i][j]` for `i < j ≤ K` (index K is the accumulator `c`);
+    /// `None` when the probe could not be realized in the input format.
+    pub ratio: Vec<Vec<Option<i64>>>,
+}
+
+impl TreeSignature {
+    /// Render the matrix like Figure 2's tables.
+    pub fn render(&self) -> String {
+        let mut s = String::new();
+        s.push_str("  i\\j ");
+        for j in 1..=self.k {
+            s.push_str(&format!("{:>4}", if j == self.k { "c".into() } else { j.to_string() }));
+        }
+        s.push('\n');
+        for i in 0..self.k {
+            s.push_str(&format!("{:>5} ", if i == self.k { "c".into() } else { i.to_string() }));
+            for j in 1..=self.k {
+                if j <= i {
+                    s.push_str("    ");
+                } else {
+                    match self.ratio[i][j] {
+                        Some(r) => s.push_str(&format!("{r:>4}")),
+                        None => s.push_str("   -"),
+                    }
+                }
+            }
+            s.push('\n');
+        }
+        s
+    }
+
+    /// True when every realizable pair fully cancels with all small
+    /// summands surviving — the non-swamped fused signature (Eq. 9).
+    pub fn is_non_swamped_fused(&self) -> bool {
+        let want = self.k as i64 - 1;
+        self.all(|r| r == want)
+    }
+
+    /// True when every realizable pair swamps everything (Figure 2d).
+    pub fn is_swamped_fused(&self) -> bool {
+        self.all(|r| r == 0)
+    }
+
+    fn all(&self, pred: impl Fn(i64) -> bool) -> bool {
+        let mut seen = false;
+        for i in 0..=self.k {
+            for j in (i + 1)..=self.k {
+                if let Some(r) = self.ratio[i][j] {
+                    if !pred(r) {
+                        return false;
+                    }
+                    seen = true;
+                }
+            }
+        }
+        seen
+    }
+}
+
+/// Measure the `d^(i,j)/v` matrix of an interface.
+///
+/// `e_u`/`e_v` are chosen from the format ranges; `decode_out` maps the raw
+/// output bits to a value (used to divide by `v`).
+pub fn tree_signature(iface: &dyn MmaInterface) -> TreeSignature {
+    let pb = ProbeBuilder::for_interface(iface);
+    let k = pb.k;
+    let e_u = pb.e_u();
+    // v must survive alone but be swamped by U in every plausible fused
+    // precision. Keep v a product of *normal* values (input-FTZ hardware
+    // like CDNA2 flushes subnormal probe operands) and as low as possible.
+    let e_v = (2 * pb.in_fmt.emin()).max(e_u - 60);
+    let u = pow2(e_u);
+    let v = pow2(e_v);
+    let out_fmt = iface.formats().d;
+
+    let mut ratio = vec![vec![None; k + 1]; k + 1];
+    for i in 0..=k {
+        for j in (i + 1)..=k {
+            let mut p = vec![v; k];
+            let mut c = v;
+            if i == k {
+                c = u;
+            } else {
+                p[i] = u;
+            }
+            if j == k {
+                c = -u;
+            } else {
+                p[j] = -u;
+            }
+            let probe = Probe { p, c, label: format!("tree({i},{j})") };
+            if let Some(bits) = pb.run(iface, &probe) {
+                let d = out_fmt.to_f64(bits);
+                let r = d / v;
+                if r.is_finite() && r >= 0.0 && r.fract() == 0.0 {
+                    ratio[i][j] = Some(r as i64);
+                }
+            }
+        }
+    }
+    TreeSignature { k, e_u, e_v, ratio }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::{Format, Rho};
+    use crate::interface::MmaFormats;
+    use crate::models::{MmaModel, ModelSpec};
+
+    fn model(k: usize, spec: ModelSpec) -> MmaModel {
+        let c_fmt = Format::Fp32;
+        MmaModel::new(
+            "tree-test",
+            (2, 2, k),
+            MmaFormats { a: Format::Fp16, b: Format::Fp16, c: c_fmt, d: c_fmt },
+            spec,
+        )
+    }
+
+    fn model_f32(k: usize, spec: ModelSpec) -> MmaModel {
+        MmaModel::new(
+            "tree-test-f32",
+            (2, 2, k),
+            MmaFormats { a: Format::Fp32, b: Format::Fp32, c: Format::Fp32, d: Format::Fp32 },
+            spec,
+        )
+    }
+
+    #[test]
+    fn figure2a_chain_signature() {
+        // Chain of FMA (c first): d(i,j)/v = K-1-j for j < K
+        let m = model_f32(4, ModelSpec::FmaChain);
+        let sig = tree_signature(&m);
+        for i in 0..4 {
+            for j in (i + 1)..4 {
+                assert_eq!(sig.ratio[i][j], Some(3 - j as i64), "({i},{j})");
+            }
+        }
+        // pairs with c (position 0 in the chain): -U at p_i cancels at i
+        assert_eq!(sig.ratio[0][4], Some(3));
+        assert_eq!(sig.ratio[3][4], Some(0));
+    }
+
+    #[test]
+    fn figure2d_swamped_fused_signature() {
+        // Volta HMMA.884: single swamped 5-term fused summation
+        let m = model(4, ModelSpec::TFdpa { l_max: 4, f: 23, rho: Rho::RzFp32 });
+        let sig = tree_signature(&m);
+        assert!(sig.is_swamped_fused(), "\n{}", sig.render());
+    }
+
+    #[test]
+    fn figure2c_non_swamped_fused_signature() {
+        // CDNA1 E-FDPA with L = K: exact fused summation keeps the v's
+        let m = model(2, ModelSpec::EFdpa { l: 2 });
+        let sig = tree_signature(&m);
+        assert!(sig.is_non_swamped_fused(), "\n{}", sig.render());
+    }
+
+    #[test]
+    fn figure2b_pairwise_signature() {
+        // CDNA2 P=2 pairwise + sequential accumulation over K=4:
+        // pairs within the same FTZ-Add group cancel before accumulation.
+        let m = model(4, ModelSpec::FtzAddMul { p: 2 });
+        let sig = tree_signature(&m);
+        // i=0,j=1 share a pair: cancel inside the pair, c and the later
+        // pair survive: c + (v+v) = 3v
+        assert_eq!(sig.ratio[0][1], Some(3), "\n{}", sig.render());
+        assert_eq!(sig.ratio[2][3], Some(3), "\n{}", sig.render());
+        // i=0,j=2 in different pairs: swamping until the sums meet: 0
+        assert_eq!(sig.ratio[0][2], Some(0), "\n{}", sig.render());
+        // U among products vs -U in c: c absorbed first, then U cancels at
+        // its pair, the final pair survives
+        assert_eq!(sig.ratio[0][4], Some(2), "\n{}", sig.render());
+    }
+
+    #[test]
+    fn signatures_distinguish_families() {
+        let exact = tree_signature(&model(4, ModelSpec::EFdpa { l: 2 }));
+        let fused = tree_signature(&model(
+            4,
+            ModelSpec::TFdpa { l_max: 4, f: 24, rho: Rho::RzFp32 },
+        ));
+        let pairwise = tree_signature(&model(4, ModelSpec::FtzAddMul { p: 2 }));
+        assert_ne!(exact.ratio, fused.ratio);
+        assert_ne!(exact.ratio, pairwise.ratio);
+        assert_ne!(fused.ratio, pairwise.ratio);
+    }
+}

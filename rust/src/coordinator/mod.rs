@@ -1,0 +1,235 @@
+//! The continuous-verification coordinator (paper §3.1.4's "continuous
+//! testing", productized).
+//!
+//! A deployment registers *verification pairs* — a device-under-test
+//! interface (e.g. a PJRT-compiled artifact standing in for silicon, or a
+//! vendor library binding) and its golden Rust model — and streams
+//! validation jobs through a worker pool:
+//!
+//! - **routing**: jobs are addressed to a pair by name;
+//! - **batching**: each job carries a batch of randomized MMAs drawn from
+//!   the paper's three input classes;
+//! - **backpressure**: the submission queue is bounded; `submit` blocks
+//!   when workers fall behind;
+//! - **reporting**: per-pair counters plus the first mismatching triple
+//!   (inputs and both outputs) for debugging — the §3.1.4 revision loop's
+//!   entry point.
+//!
+//! The pool is built on `std::thread` + bounded channels: the image ships
+//! no async runtime, and the workload is CPU-bound bit-twiddling where a
+//! thread-per-core pool is the right shape anyway.
+
+mod report;
+mod worker;
+
+pub use report::{CampaignReport, Mismatch, PairStats};
+pub use worker::VerifyPair;
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use crate::util::Rng;
+
+/// A unit of verification work.
+#[derive(Clone, Debug)]
+pub struct Job {
+    pub id: u64,
+    /// Name of the registered pair to verify.
+    pub pair: String,
+    /// Number of randomized MMAs in this batch.
+    pub batch: usize,
+    /// Seed for the batch's input stream.
+    pub seed: u64,
+}
+
+/// Result of one job.
+#[derive(Clone, Debug)]
+pub struct JobOutcome {
+    pub id: u64,
+    pub pair: String,
+    pub tests: usize,
+    pub mismatches: Vec<Mismatch>,
+    pub micros: u64,
+}
+
+pub(crate) enum Msg {
+    Work(Job),
+    Stop,
+}
+
+/// The verification coordinator: worker pool + routing + aggregation.
+pub struct Coordinator {
+    tx: SyncSender<Msg>,
+    outcome_rx: Receiver<JobOutcome>,
+    handles: Vec<JoinHandle<()>>,
+    submitted: AtomicUsize,
+    pairs: Vec<String>,
+}
+
+impl Coordinator {
+    /// Spawn `workers` threads over the given verification pairs with a
+    /// submission queue of `queue_depth` jobs (the backpressure bound).
+    pub fn new(pairs: Vec<VerifyPair>, workers: usize, queue_depth: usize) -> Self {
+        let (tx, rx) = sync_channel::<Msg>(queue_depth);
+        let (otx, orx) = sync_channel::<JobOutcome>(queue_depth.max(64));
+        let rx = Arc::new(Mutex::new(rx));
+        let pair_names: Vec<String> = pairs.iter().map(|p| p.name.clone()).collect();
+        let shared: Arc<Vec<VerifyPair>> = Arc::new(pairs);
+        let mut handles = Vec::new();
+        for w in 0..workers.max(1) {
+            let rx = Arc::clone(&rx);
+            let otx = otx.clone();
+            let pairs = Arc::clone(&shared);
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("mma-verify-{w}"))
+                    .spawn(move || worker::run(&pairs, rx, otx))
+                    .expect("spawn worker"),
+            );
+        }
+        Self {
+            tx,
+            outcome_rx: orx,
+            handles,
+            submitted: AtomicUsize::new(0),
+            pairs: pair_names,
+        }
+    }
+
+    /// Registered pair names (routing targets).
+    pub fn pairs(&self) -> &[String] {
+        &self.pairs
+    }
+
+    /// Submit a job; blocks when the queue is full (backpressure).
+    pub fn submit(&self, job: Job) {
+        self.submitted.fetch_add(1, Ordering::Relaxed);
+        self.tx.send(Msg::Work(job)).expect("coordinator stopped");
+    }
+
+    /// Collect one outcome (blocking).
+    pub fn next_outcome(&self) -> JobOutcome {
+        self.outcome_rx.recv().expect("workers stopped")
+    }
+
+    /// Run a full campaign: `jobs` batches of `batch` tests per pair,
+    /// round-robin over all pairs, and aggregate the report.
+    pub fn run_campaign(&self, jobs: usize, batch: usize, seed: u64) -> CampaignReport {
+        let started = Instant::now();
+        let mut rng = Rng::new(seed);
+        let total = jobs * self.pairs.len();
+        let mut submitted = 0usize;
+        let mut collected = 0usize;
+        let mut report = CampaignReport::new();
+        let mut next_job = 0u64;
+
+        // interleave submission and collection so the bounded queue
+        // exercises backpressure rather than deadlocking the caller
+        while collected < total {
+            while submitted < total && submitted - collected < self.handles.len() * 2 {
+                let pair = self.pairs[submitted % self.pairs.len()].clone();
+                self.submit(Job { id: next_job, pair, batch, seed: rng.next_u64() });
+                next_job += 1;
+                submitted += 1;
+            }
+            let outcome = self.next_outcome();
+            report.absorb(&outcome);
+            collected += 1;
+        }
+        report.wall_micros = started.elapsed().as_micros() as u64;
+        report
+    }
+
+    /// Stop the pool and join the workers.
+    pub fn shutdown(mut self) {
+        for _ in &self.handles {
+            let _ = self.tx.send(Msg::Stop);
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::{Format, Rho};
+    use crate::interface::MmaFormats;
+    use crate::models::{MmaModel, ModelSpec};
+    use std::sync::Arc as StdArc;
+
+    fn model(f: i32) -> MmaModel {
+        MmaModel::new(
+            format!("m-f{f}"),
+            (4, 4, 8),
+            MmaFormats { a: Format::Fp16, b: Format::Fp16, c: Format::Fp32, d: Format::Fp32 },
+            ModelSpec::TFdpa { l_max: 8, f, rho: Rho::RzFp32 },
+        )
+    }
+
+    #[test]
+    fn matching_pair_reports_zero_mismatches() {
+        let pair = VerifyPair {
+            name: "same".into(),
+            dut: StdArc::new(model(24)),
+            golden: StdArc::new(model(24)),
+        };
+        let c = Coordinator::new(vec![pair], 2, 4);
+        let report = c.run_campaign(6, 50, 42);
+        assert_eq!(report.total_tests, 300);
+        assert_eq!(report.total_mismatches, 0);
+        c.shutdown();
+    }
+
+    #[test]
+    fn diverging_pair_is_caught() {
+        let pair = VerifyPair {
+            name: "diff".into(),
+            dut: StdArc::new(model(25)), // "hardware" with one more bit
+            golden: StdArc::new(model(24)),
+        };
+        let c = Coordinator::new(vec![pair], 2, 4);
+        let report = c.run_campaign(4, 100, 7);
+        assert!(report.total_mismatches > 0, "F=24 vs F=25 must diverge");
+        let stats = &report.pairs["diff"];
+        assert!(stats.first_mismatch.is_some());
+        c.shutdown();
+    }
+
+    #[test]
+    fn routing_by_pair_name() {
+        let p1 = VerifyPair {
+            name: "a".into(),
+            dut: StdArc::new(model(24)),
+            golden: StdArc::new(model(24)),
+        };
+        let p2 = VerifyPair {
+            name: "b".into(),
+            dut: StdArc::new(model(23)),
+            golden: StdArc::new(model(24)),
+        };
+        let c = Coordinator::new(vec![p1, p2], 3, 4);
+        let report = c.run_campaign(4, 60, 11);
+        assert_eq!(report.pairs["a"].mismatches, 0);
+        assert!(report.pairs["b"].mismatches > 0);
+        c.shutdown();
+    }
+
+    #[test]
+    fn campaign_throughput_counted() {
+        let pair = VerifyPair {
+            name: "same".into(),
+            dut: StdArc::new(model(24)),
+            golden: StdArc::new(model(24)),
+        };
+        let c = Coordinator::new(vec![pair], 4, 2);
+        let report = c.run_campaign(8, 25, 3);
+        assert_eq!(report.total_tests, 200);
+        assert!(report.wall_micros > 0);
+        c.shutdown();
+    }
+}

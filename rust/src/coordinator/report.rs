@@ -1,0 +1,124 @@
+//! Campaign aggregation and mismatch records.
+
+use std::collections::BTreeMap;
+
+use super::JobOutcome;
+
+/// A single bit-level divergence with its full reproduction inputs.
+#[derive(Clone, Debug)]
+pub struct Mismatch {
+    pub test_index: usize,
+    pub element: usize,
+    pub golden_bits: u64,
+    pub dut_bits: u64,
+    pub a: Vec<u64>,
+    pub b: Vec<u64>,
+    pub c: Vec<u64>,
+}
+
+/// Per-pair counters.
+#[derive(Clone, Debug, Default)]
+pub struct PairStats {
+    pub jobs: usize,
+    pub tests: usize,
+    pub mismatches: usize,
+    pub busy_micros: u64,
+    pub first_mismatch: Option<Mismatch>,
+}
+
+/// Aggregated campaign report.
+#[derive(Clone, Debug, Default)]
+pub struct CampaignReport {
+    pub total_jobs: usize,
+    pub total_tests: usize,
+    pub total_mismatches: usize,
+    pub wall_micros: u64,
+    pub pairs: BTreeMap<String, PairStats>,
+}
+
+impl CampaignReport {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn absorb(&mut self, outcome: &JobOutcome) {
+        self.total_jobs += 1;
+        self.total_tests += outcome.tests;
+        self.total_mismatches += outcome.mismatches.len();
+        let entry = self.pairs.entry(outcome.pair.clone()).or_default();
+        entry.jobs += 1;
+        entry.tests += outcome.tests;
+        entry.mismatches += outcome.mismatches.len();
+        entry.busy_micros += outcome.micros;
+        if entry.first_mismatch.is_none() {
+            entry.first_mismatch = outcome.mismatches.first().cloned();
+        }
+    }
+
+    /// MMAs verified per second of wall time.
+    pub fn throughput(&self) -> f64 {
+        if self.wall_micros == 0 {
+            return 0.0;
+        }
+        self.total_tests as f64 / (self.wall_micros as f64 / 1e6)
+    }
+
+    pub fn render(&self) -> String {
+        let mut s = format!(
+            "campaign: {} jobs, {} MMAs verified, {} mismatches, {:.1} MMA/s\n",
+            self.total_jobs,
+            self.total_tests,
+            self.total_mismatches,
+            self.throughput()
+        );
+        for (name, st) in &self.pairs {
+            s.push_str(&format!(
+                "  {:<28} jobs {:>4}  tests {:>8}  mismatches {:>6}  busy {:>8} µs{}\n",
+                name,
+                st.jobs,
+                st.tests,
+                st.mismatches,
+                st.busy_micros,
+                if st.mismatches > 0 { "  <-- DIVERGES" } else { "" }
+            ));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn absorb_accumulates() {
+        let mut r = CampaignReport::new();
+        r.absorb(&JobOutcome {
+            id: 0,
+            pair: "x".into(),
+            tests: 10,
+            mismatches: vec![],
+            micros: 5,
+        });
+        r.absorb(&JobOutcome {
+            id: 1,
+            pair: "x".into(),
+            tests: 10,
+            mismatches: vec![Mismatch {
+                test_index: 3,
+                element: 1,
+                golden_bits: 1,
+                dut_bits: 2,
+                a: vec![],
+                b: vec![],
+                c: vec![],
+            }],
+            micros: 7,
+        });
+        assert_eq!(r.total_tests, 20);
+        assert_eq!(r.total_mismatches, 1);
+        assert_eq!(r.pairs["x"].busy_micros, 12);
+        assert!(r.pairs["x"].first_mismatch.is_some());
+        assert!(r.render().contains("DIVERGES"));
+    }
+}

@@ -1,0 +1,107 @@
+//! Worker threads: execute verification jobs against (DUT, golden) pairs.
+
+use std::sync::mpsc::{Receiver, SyncSender};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use super::report::Mismatch;
+use super::{Job, JobOutcome, Msg as CoordinatorMsg};
+use crate::clfp::random_inputs;
+use crate::interface::MmaInterface;
+use crate::util::Rng;
+
+/// A device-under-test and its golden reference model.
+pub struct VerifyPair {
+    pub name: String,
+    pub dut: Arc<dyn MmaInterface>,
+    pub golden: Arc<dyn MmaInterface>,
+}
+
+pub(super) fn run(
+    pairs: &[VerifyPair],
+    rx: Arc<Mutex<Receiver<CoordinatorMsg>>>,
+    out: SyncSender<JobOutcome>,
+) {
+    loop {
+        let msg = {
+            // recover from mutex poisoning (a panicked sibling worker)
+            let guard = match rx.lock() {
+                Ok(g) => g,
+                Err(poisoned) => poisoned.into_inner(),
+            };
+            guard.recv()
+        };
+        match msg {
+            Ok(CoordinatorMsg::Work(job)) => {
+                // A panicking DUT (or model bug) must not wedge the
+                // campaign: convert panics into an empty outcome so the
+                // collector always receives exactly one reply per job.
+                let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    execute(pairs, &job)
+                }))
+                .unwrap_or_else(|_| JobOutcome {
+                    id: job.id,
+                    pair: job.pair.clone(),
+                    tests: 0,
+                    mismatches: vec![],
+                    micros: 0,
+                });
+                if out.send(outcome).is_err() {
+                    return;
+                }
+            }
+            Ok(CoordinatorMsg::Stop) | Err(_) => return,
+        }
+    }
+}
+
+fn execute(pairs: &[VerifyPair], job: &Job) -> JobOutcome {
+    let started = Instant::now();
+    let mut mismatches = Vec::new();
+    let mut tests = 0usize;
+    if let Some(pair) = pairs.iter().find(|p| p.name == job.pair) {
+        let mut rng = Rng::new(job.seed);
+        for t in 0..job.batch {
+            let (a, b, c) = random_inputs(&mut rng, pair.golden.as_ref(), t);
+            let want = pair.golden.execute(&a, &b, &c, None);
+            let got = pair.dut.execute(&a, &b, &c, None);
+            tests += 1;
+            if want.data != got.data {
+                if mismatches.len() < 4 {
+                    let idx = want
+                        .data
+                        .iter()
+                        .zip(got.data.iter())
+                        .position(|(w, g)| w != g)
+                        .unwrap_or(0);
+                    mismatches.push(Mismatch {
+                        test_index: t,
+                        element: idx,
+                        golden_bits: want.data[idx],
+                        dut_bits: got.data[idx],
+                        a: a.data.clone(),
+                        b: b.data.clone(),
+                        c: c.data.clone(),
+                    });
+                } else {
+                    mismatches.push(Mismatch {
+                        test_index: t,
+                        element: 0,
+                        golden_bits: 0,
+                        dut_bits: 0,
+                        a: vec![],
+                        b: vec![],
+                        c: vec![],
+                    });
+                }
+            }
+        }
+    }
+    JobOutcome {
+        id: job.id,
+        pair: job.pair.clone(),
+        tests,
+        mismatches,
+        micros: started.elapsed().as_micros() as u64,
+    }
+}

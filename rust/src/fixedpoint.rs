@@ -1,0 +1,340 @@
+//! Wide fixed-point machinery for the fused operations.
+//!
+//! Two tools live here:
+//!
+//! - [`FxTerm`]: a sign-magnitude fixed-point term `(-1)^neg·mag·2^(exp−frac)`
+//!   with a *nominal* exponent, matching the paper's `SignedSig`/`Exp`
+//!   decomposition. Products keep `exp = Exp(a)+Exp(b)` (significand in
+//!   `[1,4)`), the accumulator keeps `Exp(c)` (significand in `[1,2)`);
+//!   alignment in T/TR/GST-FDPA happens at the maximum *nominal* exponent,
+//!   which is exactly how the hardware aligns (paper Algorithms 7–11).
+//! - [`Kulisch`]: an exact 1024-bit accumulator used by the E-FDPA model
+//!   (infinite-precision dot-product-accumulate) and by error analysis.
+
+use crate::formats::{signed_align, RoundingMode};
+
+/// A sign-magnitude fixed-point term: `value = (-1)^neg * mag * 2^(exp - frac)`.
+///
+/// `exp` is the *nominal* exponent used for alignment (`e_k` in the paper);
+/// `frac` is the number of fractional bits of `mag` relative to `2^exp`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FxTerm {
+    pub neg: bool,
+    pub mag: u128,
+    /// Nominal exponent `e_k` (alignment reference).
+    pub exp: i32,
+    /// Fractional bits of `mag` below `2^exp` (may be negative when a
+    /// group-sum's LSB sits above the nominal exponent, as in GST-FDPA).
+    pub frac: i32,
+}
+
+impl FxTerm {
+    pub const ZERO: FxTerm = FxTerm { neg: false, mag: 0, exp: i32::MIN / 2, frac: 0 };
+
+    #[inline]
+    pub fn is_zero(&self) -> bool {
+        self.mag == 0
+    }
+
+    /// Exact product of two decoded finite significands.
+    ///
+    /// `sig_a`, `sig_b` carry `fa`, `fb` fractional bits; the product has
+    /// nominal exponent `ea + eb` and `fa + fb` fractional bits
+    /// (significand in `[1,4)` for normal×normal).
+    #[inline]
+    pub fn product(
+        sig_a: u64,
+        ea: i32,
+        fa: u32,
+        neg_a: bool,
+        sig_b: u64,
+        eb: i32,
+        fb: u32,
+        neg_b: bool,
+    ) -> FxTerm {
+        let mag = sig_a as u128 * sig_b as u128;
+        if mag == 0 {
+            return FxTerm::ZERO;
+        }
+        FxTerm { neg: neg_a != neg_b, mag, exp: ea + eb, frac: (fa + fb) as i32 }
+    }
+
+    /// Signed quanta of `2^(scale_exp - f)` under `mode`
+    /// (the paper's `RZ_F` / `RD_F` alignment).
+    #[inline]
+    pub fn align(&self, scale_exp: i32, f: i32, mode: RoundingMode) -> i128 {
+        if self.mag == 0 {
+            return 0;
+        }
+        // lsb exponent of mag is exp - frac
+        signed_align(self.neg, self.mag, self.exp - self.frac, scale_exp, f, mode)
+    }
+
+    /// Exact value as `f64` (for diagnostics/tests; may round for wide mags).
+    pub fn to_f64(&self) -> f64 {
+        let v = self.mag as f64 * 2f64.powi(self.exp - self.frac);
+        if self.neg {
+            -v
+        } else {
+            v
+        }
+    }
+}
+
+/// Maximum nominal exponent over non-zero terms (`e_max` in the paper).
+/// Returns `None` when every term is zero.
+#[inline]
+pub fn e_max(terms: &[FxTerm]) -> Option<i32> {
+    terms.iter().filter(|t| !t.is_zero()).map(|t| t.exp).max()
+}
+
+/// Exact signed fixed-point accumulator (Kulisch style).
+///
+/// Width: `W` 64-bit words. The value is `acc * 2^lsb_exp` where `acc` is a
+/// two's-complement multi-word integer. `lsb_exp` is chosen per use site to
+/// cover the full exponent range of the inputs, making every `add` exact.
+#[derive(Clone, Debug)]
+pub struct Kulisch<const W: usize> {
+    words: [u64; W],
+    lsb_exp: i32,
+}
+
+impl<const W: usize> Kulisch<W> {
+    /// New accumulator with the given LSB exponent.
+    pub fn new(lsb_exp: i32) -> Self {
+        Self { words: [0; W], lsb_exp }
+    }
+
+    /// Add `(-1)^neg * mag * 2^exp_of_lsb` exactly.
+    ///
+    /// Panics (debug) if the term does not fit the configured window.
+    pub fn add(&mut self, neg: bool, mag: u128, exp_of_lsb: i32) {
+        if mag == 0 {
+            return;
+        }
+        let shift = exp_of_lsb - self.lsb_exp;
+        debug_assert!(shift >= 0, "term below accumulator LSB: {shift}");
+        let shift = shift as u32;
+        let word = (shift / 64) as usize;
+        let bit = shift % 64;
+        debug_assert!(
+            word + 3 <= W,
+            "term beyond accumulator MSB (word {word}, width {W})"
+        );
+        // Spread the 128-bit magnitude over up to three words.
+        let parts = shift_128_into_words(mag, bit);
+        if neg {
+            self.sub_words(word, &parts);
+        } else {
+            self.add_words(word, &parts);
+        }
+    }
+
+    fn add_words(&mut self, start: usize, parts: &[u64; 3]) {
+        let mut carry = 0u64;
+        for (i, &p) in parts.iter().enumerate() {
+            let idx = start + i;
+            if idx >= W {
+                debug_assert!(p == 0 && carry == 0);
+                break;
+            }
+            let (s1, c1) = self.words[idx].overflowing_add(p);
+            let (s2, c2) = s1.overflowing_add(carry);
+            self.words[idx] = s2;
+            carry = (c1 as u64) + (c2 as u64);
+        }
+        let mut idx = start + 3;
+        while carry != 0 && idx < W {
+            let (s, c) = self.words[idx].overflowing_add(carry);
+            self.words[idx] = s;
+            carry = c as u64;
+            idx += 1;
+        }
+    }
+
+    fn sub_words(&mut self, start: usize, parts: &[u64; 3]) {
+        let mut borrow = 0u64;
+        for (i, &p) in parts.iter().enumerate() {
+            let idx = start + i;
+            if idx >= W {
+                debug_assert!(p == 0 && borrow == 0);
+                break;
+            }
+            let (s1, b1) = self.words[idx].overflowing_sub(p);
+            let (s2, b2) = s1.overflowing_sub(borrow);
+            self.words[idx] = s2;
+            borrow = (b1 as u64) + (b2 as u64);
+        }
+        let mut idx = start + 3;
+        while borrow != 0 && idx < W {
+            let (s, b) = self.words[idx].overflowing_sub(borrow);
+            self.words[idx] = s;
+            borrow = b as u64;
+            idx += 1;
+        }
+        // Two's complement wrap across the top is fine: W is sized with
+        // headroom so the signed value never overflows.
+    }
+
+    /// True iff the accumulated value is exactly zero.
+    pub fn is_zero(&self) -> bool {
+        self.words.iter().all(|&w| w == 0)
+    }
+
+    /// Sign (true = negative) from the top word's MSB.
+    pub fn is_negative(&self) -> bool {
+        self.words[W - 1] >> 63 == 1
+    }
+
+    /// Extract `(neg, mag, lsb_exp)` of the exact value, with a sticky
+    /// bit folded into the magnitude when the exact span exceeds 128 bits.
+    ///
+    /// The top 128 bits below the MSB are kept exactly; any dropped lower
+    /// bits are represented by OR-ing 1 into the kept LSB ("sticky"),
+    /// which preserves every rounding decision for targets with ≤ 120-bit
+    /// significands (FP32/FP64 outputs round far above the sticky).
+    pub fn to_sign_mag(&self) -> (bool, u128, i32) {
+        if self.is_zero() {
+            return (false, 0, self.lsb_exp);
+        }
+        let neg = self.is_negative();
+        // magnitude = |acc| as multiword
+        let mut mag_words = [0u64; W];
+        if neg {
+            // -acc: two's complement negate
+            let mut carry = 1u64;
+            for i in 0..W {
+                let (s, c1) = (!self.words[i]).overflowing_add(carry);
+                mag_words[i] = s;
+                carry = c1 as u64;
+            }
+        } else {
+            mag_words.copy_from_slice(&self.words);
+        }
+        // locate the highest and lowest non-zero words
+        let mut hi = W - 1;
+        while hi > 0 && mag_words[hi] == 0 {
+            hi -= 1;
+        }
+        let mut lo = 0usize;
+        while lo < hi && mag_words[lo] == 0 {
+            lo += 1;
+        }
+        if hi - lo <= 1 {
+            let mag =
+                mag_words[lo] as u128 | if hi > lo { (mag_words[hi] as u128) << 64 } else { 0 };
+            return (neg, mag, self.lsb_exp + (lo as i32) * 64);
+        }
+        // wide span: keep the top two words exactly, fold the rest into a
+        // sticky bit at the kept LSB
+        let keep_lo = hi - 1;
+        let mut mag = (mag_words[hi] as u128) << 64 | mag_words[keep_lo] as u128;
+        let sticky = mag_words[..keep_lo].iter().any(|&w| w != 0);
+        if sticky {
+            mag |= 1;
+        }
+        (neg, mag, self.lsb_exp + (keep_lo as i32) * 64)
+    }
+}
+
+#[inline]
+fn shift_128_into_words(mag: u128, bit: u32) -> [u64; 3] {
+    if bit == 0 {
+        [mag as u64, (mag >> 64) as u64, 0]
+    } else {
+        [
+            (mag << bit) as u64,
+            (mag >> (64 - bit)) as u64,
+            (mag >> (64 - bit) >> 64) as u64,
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::RoundingMode;
+
+    #[test]
+    fn product_of_significands() {
+        // 1.5 * 1.25 with 1 and 2 fractional bits: sig 3 (f=1), 5 (f=2)
+        let t = FxTerm::product(3, 0, 1, false, 5, 0, 2, true);
+        assert_eq!(t.mag, 15);
+        assert_eq!(t.frac, 3);
+        assert!(t.neg);
+        assert_eq!(t.to_f64(), -1.875);
+    }
+
+    #[test]
+    fn align_truncates() {
+        // -0.625 with nominal exp -1 (sig 1.25, frac 2): mag 5, frac 2? value = 5 * 2^(-1-2)
+        let t = FxTerm { neg: true, mag: 5, exp: -1, frac: 2 };
+        assert_eq!(t.to_f64(), -0.625);
+        // aligned at scale 23, F=24 => quantum 0.5: RZ -> -1, RD -> -2
+        assert_eq!(t.align(23, 24, RoundingMode::TowardZero), -1);
+        assert_eq!(t.align(23, 24, RoundingMode::Down), -2);
+    }
+
+    #[test]
+    fn e_max_ignores_zeros() {
+        let terms = [
+            FxTerm::ZERO,
+            FxTerm { neg: false, mag: 1, exp: 5, frac: 0 },
+            FxTerm { neg: true, mag: 1, exp: -3, frac: 0 },
+        ];
+        assert_eq!(e_max(&terms), Some(5));
+        assert_eq!(e_max(&[FxTerm::ZERO]), None);
+    }
+
+    #[test]
+    fn kulisch_exact_sum() {
+        let mut acc = Kulisch::<10>::new(-320);
+        // 2^100 + 2^-300 - 2^100 = 2^-300 : exact
+        acc.add(false, 1, 100);
+        acc.add(false, 1, -300);
+        acc.add(true, 1, 100);
+        let (neg, mag, lsb) = acc.to_sign_mag();
+        assert!(!neg);
+        assert_eq!(mag as f64 * 2f64.powi(lsb + 300), 1.0, "value must be 2^-300");
+    }
+
+    #[test]
+    fn kulisch_signed_cancellation() {
+        let mut acc = Kulisch::<10>::new(-100);
+        acc.add(false, 12345, 0);
+        acc.add(true, 12344, 0);
+        let (neg, mag, lsb) = acc.to_sign_mag();
+        assert!(!neg);
+        assert_eq!(mag as f64 * 2f64.powi(lsb), 1.0);
+    }
+
+    #[test]
+    fn kulisch_negative_result() {
+        let mut acc = Kulisch::<10>::new(-100);
+        acc.add(true, 7, -3);
+        acc.add(false, 3, -3);
+        let (neg, mag, lsb) = acc.to_sign_mag();
+        assert!(neg);
+        assert_eq!(mag as f64 * 2f64.powi(lsb), 0.5);
+    }
+
+    #[test]
+    fn kulisch_zero() {
+        let mut acc = Kulisch::<8>::new(-64);
+        acc.add(false, 42, 0);
+        acc.add(true, 42, 0);
+        assert!(acc.is_zero());
+        let (neg, mag, _) = acc.to_sign_mag();
+        assert!(!neg);
+        assert_eq!(mag, 0);
+    }
+
+    #[test]
+    fn kulisch_wide_magnitude_spread() {
+        let mut acc = Kulisch::<10>::new(0);
+        // magnitude crossing word boundaries
+        acc.add(false, u128::MAX >> 1, 37);
+        acc.add(true, u128::MAX >> 1, 37);
+        assert!(acc.is_zero());
+    }
+}

@@ -1,0 +1,178 @@
+//! The paper's conversion functions ρ (Table 2).
+//!
+//! A ρ converts the fixed-point fused-summation result `S × 2^(emax−F)`
+//! into the floating-point output of the operation. NVIDIA additionally
+//! canonicalizes NaN outputs (0x7FFFFFFF / 0x7FFF, §4.2); that is handled
+//! by the special-value pass in [`crate::ops::special`], not here.
+
+use super::{Format, RoundingMode};
+
+/// Conversion function identifiers from Table 2, plus the AMD CDNA3
+/// `RNE-FP32` used by TR-FDPA/GTR-FDPA.
+#[derive(Clone, Copy, PartialEq, Eq, Debug, Hash)]
+pub enum Rho {
+    /// Convert to FP32 (E8M23) with round-to-zero.
+    RzFp32,
+    /// Convert to truncated FP32 (E8M13) with round-to-zero.
+    RzE8M13,
+    /// Convert to FP32 with round-to-nearest-ties-to-even.
+    RneFp32,
+    /// Convert to FP16 with round-to-nearest-ties-to-even.
+    RneFp16,
+}
+
+impl Rho {
+    pub const ALL: [Rho; 4] = [Rho::RzFp32, Rho::RzE8M13, Rho::RneFp32, Rho::RneFp16];
+
+    /// Output storage format (E8M13 results are stored as FP32 patterns).
+    pub const fn output_format(self) -> Format {
+        match self {
+            Rho::RzFp32 | Rho::RzE8M13 | Rho::RneFp32 => Format::Fp32,
+            Rho::RneFp16 => Format::Fp16,
+        }
+    }
+
+    /// Rounding direction of the conversion.
+    pub const fn mode(self) -> RoundingMode {
+        match self {
+            Rho::RzFp32 | Rho::RzE8M13 => RoundingMode::TowardZero,
+            Rho::RneFp32 | Rho::RneFp16 => RoundingMode::NearestEven,
+        }
+    }
+
+    /// Significand precision of the conversion target in fraction bits.
+    pub const fn target_mant_bits(self) -> u32 {
+        match self {
+            Rho::RzFp32 | Rho::RneFp32 => 23,
+            Rho::RzE8M13 => 13,
+            Rho::RneFp16 => 10,
+        }
+    }
+
+    pub const fn name(self) -> &'static str {
+        match self {
+            Rho::RzFp32 => "RZ-FP32",
+            Rho::RzE8M13 => "RZ-E8M13",
+            Rho::RneFp32 => "RNE-FP32",
+            Rho::RneFp16 => "RNE-FP16",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Rho> {
+        Rho::ALL.iter().copied().find(|r| r.name().eq_ignore_ascii_case(s))
+    }
+}
+
+/// Apply ρ to the signed fixed-point value `s_quanta × 2^(scale_exp − f)`.
+///
+/// Returns the output bit pattern in ρ's storage format (E8M13 values are
+/// emitted as FP32 bit patterns whose low 10 mantissa bits are zero).
+pub fn convert(rho: Rho, s_quanta: i128, scale_exp: i32, f: i32) -> u64 {
+    let neg = s_quanta < 0;
+    let mag = s_quanta.unsigned_abs();
+    let lsb_exp = scale_exp - f;
+    match rho {
+        Rho::RzFp32 | Rho::RneFp32 => {
+            Format::Fp32.encode(neg, mag, lsb_exp, rho.mode())
+        }
+        Rho::RneFp16 => Format::Fp16.encode(neg, mag, lsb_exp, rho.mode()),
+        Rho::RzE8M13 => {
+            // Encode in the virtual E8M13 format, then widen the pattern to
+            // FP32 storage: same sign/exponent fields, mantissa << 10.
+            let pat = Format::E8M13.encode(neg, mag, lsb_exp, RoundingMode::TowardZero);
+            e8m13_to_fp32_pattern(pat)
+        }
+    }
+}
+
+/// Widen an E8M13 bit pattern to its FP32 storage representation.
+pub fn e8m13_to_fp32_pattern(pat: u64) -> u64 {
+    let sign = (pat >> 21) & 1;
+    let exp = (pat >> 13) & 0xFF;
+    let mant = pat & 0x1FFF;
+    (sign << 31) | (exp << 23) | (mant << 10)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn f32_of(bits: u64) -> f32 {
+        f32::from_bits(bits as u32)
+    }
+
+    #[test]
+    fn rz_fp32_truncates_toward_zero() {
+        // value = 1 + 2^-24 (quanta of 2^-24, scale 0, F=24)
+        let s = (1i128 << 24) + 1;
+        let out = convert(Rho::RzFp32, s, 0, 24);
+        assert_eq!(f32_of(out), 1.0);
+        let out = convert(Rho::RzFp32, -s, 0, 24);
+        assert_eq!(f32_of(out), -1.0);
+    }
+
+    #[test]
+    fn rne_fp32_rounds_to_nearest() {
+        let s = (1i128 << 24) + 1; // 1 + 2^-24: tie -> 1.0
+        assert_eq!(f32_of(convert(Rho::RneFp32, s, 0, 24)), 1.0);
+        let s = (1i128 << 24) + 3; // 1 + 3*2^-24: tie at 1.5 ulp -> even (2 ulp)
+        assert_eq!(f32_of(convert(Rho::RneFp32, s, 0, 24)), 1.0 + 2.0 * 2f32.powi(-23));
+    }
+
+    #[test]
+    fn rne_fp16_output() {
+        let s = 3i128; // 1.5 with F=1, scale 0
+        let out = convert(Rho::RneFp16, s, 0, 1);
+        assert_eq!(out, 0x3E00); // 1.5 in fp16
+        // overflow to inf
+        let s = 1i128 << 40;
+        let out = convert(Rho::RneFp16, s, 0, 0);
+        assert_eq!(out, 0x7C00);
+    }
+
+    #[test]
+    fn rz_e8m13_masks_low_mantissa() {
+        // 1 + 2^-13 exactly representable
+        let s = (1i128 << 13) + 1;
+        let out = convert(Rho::RzE8M13, s, 0, 13);
+        assert_eq!(f32_of(out), 1.0 + 2f32.powi(-13));
+        assert_eq!(out & 0x3FF, 0, "low 10 mantissa bits must be zero");
+        // 1 + 2^-14 truncates to 1.0
+        let s = (1i128 << 14) + 1;
+        let out = convert(Rho::RzE8M13, s, 0, 14);
+        assert_eq!(f32_of(out), 1.0);
+    }
+
+    #[test]
+    fn e8m13_subnormals_map_into_fp32() {
+        // minimum positive E8M13 subnormal = 2^(-126-13)
+        let out = convert(Rho::RzE8M13, 1, -126, 13);
+        // 2^-139 as an fp32 subnormal is bit pattern 1 << 10
+        assert_eq!(out, 0x400);
+        assert_eq!(out & 0x3FF, 0);
+    }
+
+    #[test]
+    fn zero_is_positive_zero() {
+        for rho in Rho::ALL {
+            assert_eq!(convert(rho, 0, 10, 24), 0, "{:?}", rho);
+        }
+    }
+
+    #[test]
+    fn rz_overflow_saturates() {
+        // huge positive value under RZ -> max finite fp32
+        let out = convert(Rho::RzFp32, 1i128 << 120, 100, 0);
+        assert_eq!(out, 0x7F7F_FFFF);
+        // and RNE -> inf
+        let out = convert(Rho::RneFp32, 1i128 << 120, 100, 0);
+        assert_eq!(out, 0x7F80_0000);
+    }
+
+    #[test]
+    fn parse_names() {
+        for r in Rho::ALL {
+            assert_eq!(Rho::parse(r.name()), Some(r));
+        }
+    }
+}

@@ -1,0 +1,322 @@
+//! Software floating-point formats used by GPU MMA units.
+//!
+//! Everything in the simulator operates on raw bit patterns carried in
+//! `u64`. This module defines the format catalog (paper §4), bit-level
+//! decode into a canonical `(class, sign, exponent, significand)` form,
+//! and encode with explicit rounding — the primitive that the paper's
+//! conversion functions ρ (Table 2) and all elementary operations are
+//! built on.
+
+mod convert;
+mod decoded;
+mod rounding;
+
+pub use convert::{convert, Rho};
+pub use decoded::{Class, Decoded};
+pub use rounding::{rd_f, round_shift, rz_f, signed_align, RoundingMode};
+
+/// Floating-point formats appearing in GPU MMA instructions.
+///
+/// `E8M13` is the *virtual* output format of NVIDIA's `RZ-E8M13`
+/// conversion (paper Table 2): an FP32 bit pattern whose significand is
+/// truncated to 13 bits.
+#[derive(Clone, Copy, PartialEq, Eq, Debug, Hash)]
+pub enum Format {
+    Fp64,
+    Fp32,
+    /// TF32: 19-bit storage (1+8+10); carried right-aligned in u64.
+    Tf32,
+    Bf16,
+    Fp16,
+    /// OCP FP8 E4M3: no infinities; `S.1111.111` is NaN.
+    Fp8E4M3,
+    /// OCP FP8 E5M2: IEEE-style with infinities and NaNs.
+    Fp8E5M2,
+    /// OCP FP6 E2M3: finite-only (no Inf/NaN encodings).
+    Fp6E2M3,
+    /// OCP FP6 E3M2: finite-only.
+    Fp6E3M2,
+    /// OCP FP4 E2M1: finite-only.
+    Fp4E2M1,
+    /// MX block scale: unsigned power of two, `0xFF` is NaN.
+    E8M0,
+    /// NVFP4 block scale: unsigned E4M3 (no sign bit, `1111.111` NaN).
+    Ue4M3,
+    /// FP32 with a 13-bit significand (RZ-E8M13 conversion target).
+    E8M13,
+}
+
+/// How a format encodes non-finite values.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum SpecialStyle {
+    /// IEEE 754 style: exponent all-ones ⇒ Inf (mant = 0) or NaN.
+    Ieee,
+    /// OCP E4M3 style: no Inf; only mantissa-all-ones at max exponent is NaN.
+    NanOnly,
+    /// No Inf/NaN encodings at all (FP6, FP4).
+    FiniteOnly,
+    /// E8M0: unsigned exponent-only; 0xFF is NaN, no zero, no Inf.
+    ExpOnly,
+}
+
+impl Format {
+    /// All input/output formats (excluding the virtual E8M13 target).
+    pub const ALL: [Format; 12] = [
+        Format::Fp64,
+        Format::Fp32,
+        Format::Tf32,
+        Format::Bf16,
+        Format::Fp16,
+        Format::Fp8E4M3,
+        Format::Fp8E5M2,
+        Format::Fp6E2M3,
+        Format::Fp6E3M2,
+        Format::Fp4E2M1,
+        Format::E8M0,
+        Format::Ue4M3,
+    ];
+
+    /// Number of exponent bits.
+    pub const fn exp_bits(self) -> u32 {
+        match self {
+            Format::Fp64 => 11,
+            Format::Fp32 | Format::Tf32 | Format::Bf16 | Format::E8M0 | Format::E8M13 => 8,
+            Format::Fp16 | Format::Fp8E5M2 => 5,
+            Format::Fp8E4M3 | Format::Ue4M3 => 4,
+            Format::Fp6E3M2 => 3,
+            Format::Fp6E2M3 | Format::Fp4E2M1 => 2,
+        }
+    }
+
+    /// Number of explicit significand (fraction) bits.
+    pub const fn mant_bits(self) -> u32 {
+        match self {
+            Format::Fp64 => 52,
+            Format::Fp32 => 23,
+            Format::E8M13 => 13,
+            Format::Tf32 | Format::Fp16 => 10,
+            Format::Bf16 => 7,
+            Format::Fp8E4M3 | Format::Ue4M3 | Format::Fp6E2M3 => 3,
+            Format::Fp8E5M2 | Format::Fp6E3M2 => 2,
+            Format::Fp4E2M1 => 1,
+            Format::E8M0 => 0,
+        }
+    }
+
+    /// Exponent bias.
+    pub const fn bias(self) -> i32 {
+        match self {
+            Format::Fp64 => 1023,
+            Format::Fp32 | Format::Tf32 | Format::Bf16 | Format::E8M0 | Format::E8M13 => 127,
+            Format::Fp16 | Format::Fp8E5M2 => 15,
+            Format::Fp8E4M3 | Format::Ue4M3 => 7,
+            Format::Fp6E3M2 => 3,
+            Format::Fp6E2M3 | Format::Fp4E2M1 => 1,
+        }
+    }
+
+    /// Whether the format has a sign bit.
+    pub const fn has_sign(self) -> bool {
+        !matches!(self, Format::E8M0 | Format::Ue4M3)
+    }
+
+    /// Special-value encoding style.
+    pub const fn special_style(self) -> SpecialStyle {
+        match self {
+            Format::Fp64
+            | Format::Fp32
+            | Format::Tf32
+            | Format::Bf16
+            | Format::Fp16
+            | Format::Fp8E5M2
+            | Format::E8M13 => SpecialStyle::Ieee,
+            Format::Fp8E4M3 | Format::Ue4M3 => SpecialStyle::NanOnly,
+            Format::Fp6E2M3 | Format::Fp6E3M2 | Format::Fp4E2M1 => SpecialStyle::FiniteOnly,
+            Format::E8M0 => SpecialStyle::ExpOnly,
+        }
+    }
+
+    /// Total storage width in bits.
+    pub const fn width(self) -> u32 {
+        let sign = if self.has_sign() { 1 } else { 0 };
+        sign + self.exp_bits() + self.mant_bits()
+    }
+
+    /// Minimum normal exponent `emin = 1 - bias`.
+    pub const fn emin(self) -> i32 {
+        1 - self.bias()
+    }
+
+    /// Maximum finite exponent.
+    pub const fn emax(self) -> i32 {
+        let all_ones = (1i32 << self.exp_bits()) - 1;
+        match self.special_style() {
+            // all-ones exponent reserved for Inf/NaN
+            SpecialStyle::Ieee => all_ones - 1 - self.bias(),
+            // E4M3/UE4M3/FP6/FP4/E8M0: all-ones exponent still encodes
+            // finite values (except the single NaN code point).
+            _ => all_ones - self.bias(),
+        }
+    }
+
+    /// Short lowercase name used in CLIs and artifact filenames.
+    pub const fn name(self) -> &'static str {
+        match self {
+            Format::Fp64 => "fp64",
+            Format::Fp32 => "fp32",
+            Format::Tf32 => "tf32",
+            Format::Bf16 => "bf16",
+            Format::Fp16 => "fp16",
+            Format::Fp8E4M3 => "fp8e4m3",
+            Format::Fp8E5M2 => "fp8e5m2",
+            Format::Fp6E2M3 => "fp6e2m3",
+            Format::Fp6E3M2 => "fp6e3m2",
+            Format::Fp4E2M1 => "fp4e2m1",
+            Format::E8M0 => "e8m0",
+            Format::Ue4M3 => "ue4m3",
+            Format::E8M13 => "e8m13",
+        }
+    }
+
+    /// Parse a format name as used by the CLI.
+    pub fn parse(s: &str) -> Option<Format> {
+        let s = s.to_ascii_lowercase();
+        Format::ALL
+            .iter()
+            .chain(std::iter::once(&Format::E8M13))
+            .copied()
+            .find(|f| f.name() == s)
+    }
+
+    /// Mask of valid storage bits.
+    pub const fn mask(self) -> u64 {
+        if self.width() >= 64 {
+            u64::MAX
+        } else {
+            (1u64 << self.width()) - 1
+        }
+    }
+
+    /// Positive quiet-NaN bit pattern (canonical for the format), if any.
+    pub fn nan_pattern(self) -> Option<u64> {
+        match self.special_style() {
+            SpecialStyle::Ieee => {
+                let exp_all = ((1u64 << self.exp_bits()) - 1) << self.mant_bits();
+                Some(exp_all | (1u64 << (self.mant_bits().max(1) - 1)))
+            }
+            SpecialStyle::NanOnly => {
+                // exponent + mantissa all ones, sign 0
+                Some((1u64 << (self.exp_bits() + self.mant_bits())) - 1)
+            }
+            SpecialStyle::ExpOnly => Some(0xFF),
+            SpecialStyle::FiniteOnly => None,
+        }
+    }
+
+    /// Positive-infinity bit pattern, if the format has one.
+    pub fn inf_pattern(self) -> Option<u64> {
+        match self.special_style() {
+            SpecialStyle::Ieee => Some(((1u64 << self.exp_bits()) - 1) << self.mant_bits()),
+            _ => None,
+        }
+    }
+
+    /// Largest finite magnitude bit pattern (positive).
+    pub fn max_finite_pattern(self) -> u64 {
+        match self.special_style() {
+            SpecialStyle::Ieee => {
+                // exponent all-ones minus 1, mantissa all ones
+                let exp = ((1u64 << self.exp_bits()) - 2) << self.mant_bits();
+                exp | ((1u64 << self.mant_bits()) - 1)
+            }
+            SpecialStyle::NanOnly => {
+                // everything-ones except the lowest mantissa bit (NaN is all ones)
+                ((1u64 << (self.exp_bits() + self.mant_bits())) - 1) - 1
+            }
+            SpecialStyle::FiniteOnly => (1u64 << (self.exp_bits() + self.mant_bits())) - 1,
+            SpecialStyle::ExpOnly => 0xFE,
+        }
+    }
+
+    /// Decode a bit pattern. See [`Decoded`] for the canonical form.
+    pub fn decode(self, bits: u64) -> Decoded {
+        decoded::decode(self, bits)
+    }
+
+    /// Encode sign/magnitude fixed-point `(-1)^neg * mag * 2^lsb_exp`
+    /// into this format under `mode`. The workhorse behind every ρ.
+    pub fn encode(self, neg: bool, mag: u128, lsb_exp: i32, mode: RoundingMode) -> u64 {
+        decoded::encode(self, neg, mag, lsb_exp, mode)
+    }
+
+    /// Exact value of a finite bit pattern as `f64`
+    /// (exact for every format except FP64 where it is the identity).
+    pub fn to_f64(self, bits: u64) -> f64 {
+        decoded::to_f64(self, bits)
+    }
+
+    /// Nearest (RNE) encoding of an `f64` value.
+    pub fn from_f64(self, v: f64) -> u64 {
+        decoded::from_f64(self, v, RoundingMode::NearestEven)
+    }
+
+    /// Encoding of an `f64` value under an explicit rounding mode.
+    pub fn from_f64_rounded(self, v: f64, mode: RoundingMode) -> u64 {
+        decoded::from_f64(self, v, mode)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn widths() {
+        assert_eq!(Format::Fp64.width(), 64);
+        assert_eq!(Format::Fp32.width(), 32);
+        assert_eq!(Format::Tf32.width(), 19);
+        assert_eq!(Format::Bf16.width(), 16);
+        assert_eq!(Format::Fp16.width(), 16);
+        assert_eq!(Format::Fp8E4M3.width(), 8);
+        assert_eq!(Format::Fp8E5M2.width(), 8);
+        assert_eq!(Format::Fp6E2M3.width(), 6);
+        assert_eq!(Format::Fp6E3M2.width(), 6);
+        assert_eq!(Format::Fp4E2M1.width(), 4);
+        assert_eq!(Format::E8M0.width(), 8);
+        assert_eq!(Format::Ue4M3.width(), 7);
+    }
+
+    #[test]
+    fn exponent_ranges() {
+        assert_eq!(Format::Fp32.emin(), -126);
+        assert_eq!(Format::Fp32.emax(), 127);
+        assert_eq!(Format::Fp16.emin(), -14);
+        assert_eq!(Format::Fp16.emax(), 15);
+        // OCP E4M3: emax 8 (448 = 1.75 * 2^8)
+        assert_eq!(Format::Fp8E4M3.emax(), 8);
+        assert_eq!(Format::Fp8E5M2.emax(), 15);
+        // FP4 E2M1: values up to 6 = 1.5 * 2^2
+        assert_eq!(Format::Fp4E2M1.emax(), 2);
+        assert_eq!(Format::Fp6E2M3.emax(), 2);
+        assert_eq!(Format::Fp6E3M2.emax(), 4);
+    }
+
+    #[test]
+    fn max_finite_values() {
+        assert_eq!(Format::Fp8E4M3.to_f64(Format::Fp8E4M3.max_finite_pattern()), 448.0);
+        assert_eq!(Format::Fp8E5M2.to_f64(Format::Fp8E5M2.max_finite_pattern()), 57344.0);
+        assert_eq!(Format::Fp4E2M1.to_f64(Format::Fp4E2M1.max_finite_pattern()), 6.0);
+        assert_eq!(Format::Fp6E2M3.to_f64(Format::Fp6E2M3.max_finite_pattern()), 7.5);
+        assert_eq!(Format::Fp6E3M2.to_f64(Format::Fp6E3M2.max_finite_pattern()), 28.0);
+        assert_eq!(Format::Fp16.to_f64(Format::Fp16.max_finite_pattern()), 65504.0);
+        assert_eq!(Format::Ue4M3.to_f64(Format::Ue4M3.max_finite_pattern()), 448.0);
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        for f in Format::ALL {
+            assert_eq!(Format::parse(f.name()), Some(f));
+        }
+        assert_eq!(Format::parse("nope"), None);
+    }
+}

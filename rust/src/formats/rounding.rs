@@ -1,0 +1,245 @@
+//! Rounding primitives.
+//!
+//! All fused operations in the paper reduce to one primitive: shift a
+//! sign-magnitude integer right by `n` bits and round the dropped bits
+//! according to a direction. IEEE directions are expressed over the
+//! *magnitude* together with the sign, which keeps RZ/RD/RU exact for
+//! negative values (a plain arithmetic shift would implement RD, not RZ).
+
+/// IEEE 754 rounding directions used by GPU MMAUs.
+///
+/// The paper's probing (§3.1.3) distinguishes RU, RD, RZ, RA and RN with
+/// tie variants; the derived models only ever use RNE (`NearestEven`),
+/// RZ (`TowardZero`) and RD (`Down`), but the probe generator exercises
+/// all of them against mystery models.
+#[derive(Clone, Copy, PartialEq, Eq, Debug, Hash)]
+pub enum RoundingMode {
+    /// Round to nearest, ties to even (RNE).
+    NearestEven,
+    /// Round to nearest, ties away from zero (RNA).
+    NearestAway,
+    /// Round toward zero (RZ) — magnitude truncation.
+    TowardZero,
+    /// Round toward −∞ (RD).
+    Down,
+    /// Round toward +∞ (RU).
+    Up,
+}
+
+impl RoundingMode {
+    pub const ALL: [RoundingMode; 5] = [
+        RoundingMode::NearestEven,
+        RoundingMode::NearestAway,
+        RoundingMode::TowardZero,
+        RoundingMode::Down,
+        RoundingMode::Up,
+    ];
+
+    pub const fn name(self) -> &'static str {
+        match self {
+            RoundingMode::NearestEven => "RNE",
+            RoundingMode::NearestAway => "RNA",
+            RoundingMode::TowardZero => "RZ",
+            RoundingMode::Down => "RD",
+            RoundingMode::Up => "RU",
+        }
+    }
+}
+
+/// Shift the magnitude `mag` of the value `(-1)^neg * mag` right by
+/// `shift` bits (left if negative), rounding dropped bits per `mode`.
+///
+/// Returns `(rounded_magnitude, inexact)`.
+#[inline]
+pub fn round_shift(mag: u128, shift: i32, mode: RoundingMode, neg: bool) -> (u128, bool) {
+    if shift <= 0 {
+        let sh = (-shift) as u32;
+        debug_assert!(sh < 128 - (128 - mag.leading_zeros()), "left shift overflow");
+        return (mag << sh, false);
+    }
+    let sh = shift as u32;
+    if sh >= 128 {
+        let inexact = mag != 0;
+        // The half-quantum boundary is only reachable at sh == 128.
+        let above_half = sh == 128 && mag > 1u128 << 127;
+        let is_half = sh == 128 && mag == 1u128 << 127;
+        return (apply_dir(0, inexact, above_half, mode, neg, is_half), inexact);
+    }
+    let kept = mag >> sh;
+    let rem = mag & ((1u128 << sh) - 1);
+    if rem == 0 {
+        return (kept, false);
+    }
+    let half = 1u128 << (sh - 1);
+    let is_half = rem == half;
+    let above_half = rem > half;
+    (apply_dir(kept, true, above_half, mode, neg, is_half), true)
+}
+
+#[inline]
+fn apply_dir(
+    kept: u128,
+    inexact: bool,
+    above_half: bool,
+    mode: RoundingMode,
+    neg: bool,
+    is_half: bool,
+) -> u128 {
+    if !inexact {
+        return kept;
+    }
+    let bump = match mode {
+        RoundingMode::TowardZero => false,
+        RoundingMode::Down => neg,
+        RoundingMode::Up => !neg,
+        RoundingMode::NearestEven => above_half || (is_half && kept & 1 == 1),
+        RoundingMode::NearestAway => above_half || is_half,
+    };
+    if bump {
+        kept + 1
+    } else {
+        kept
+    }
+}
+
+/// Truncate toward zero at `f` fractional bits: the paper's `RZ_F`.
+///
+/// `value = (-1)^neg * mag * 2^lsb_exp`; returns the signed count of
+/// quanta `2^(-f)` relative to scale `2^scale_exp`, truncated toward zero.
+#[inline]
+pub fn rz_f(neg: bool, mag: u128, lsb_exp: i32, scale_exp: i32, f: i32) -> i128 {
+    signed_align(neg, mag, lsb_exp, scale_exp, f, RoundingMode::TowardZero)
+}
+
+/// Round down (toward −∞) at `f` fractional bits: the paper's `RD_F`.
+#[inline]
+pub fn rd_f(neg: bool, mag: u128, lsb_exp: i32, scale_exp: i32, f: i32) -> i128 {
+    signed_align(neg, mag, lsb_exp, scale_exp, f, RoundingMode::Down)
+}
+
+/// Align `(-1)^neg * mag * 2^lsb_exp` to quanta of `2^(scale_exp - f)`
+/// under `mode`, returning the signed quanta count.
+///
+/// Magnitudes that fit `u64` (every FDPA significand product does) take a
+/// 64-bit fast path; the `u128` path serves the Kulisch/e-fdpa callers.
+#[inline]
+pub fn signed_align(
+    neg: bool,
+    mag: u128,
+    lsb_exp: i32,
+    scale_exp: i32,
+    f: i32,
+    mode: RoundingMode,
+) -> i128 {
+    // quantum exponent = scale_exp - f; shift = quantum_exp - lsb_exp
+    let shift = (scale_exp - f) - lsb_exp;
+    if mag <= u64::MAX as u128 {
+        let m64 = round_shift_u64(mag as u64, shift, mode, neg);
+        return if neg { -(m64 as i128) } else { m64 as i128 };
+    }
+    let (m, _) = round_shift(mag, shift, mode, neg);
+    let m = m as i128;
+    if neg {
+        -m
+    } else {
+        m
+    }
+}
+
+/// 64-bit variant of [`round_shift`] (magnitude only). Left shifts must
+/// not overflow — guaranteed by FDPA operand ranges (`F + sig bits < 64`).
+#[inline]
+pub fn round_shift_u64(mag: u64, shift: i32, mode: RoundingMode, neg: bool) -> u64 {
+    if shift <= 0 {
+        let sh = (-shift) as u32;
+        debug_assert!(sh < mag.leading_zeros() || mag == 0, "left shift overflow");
+        return mag << sh.min(63);
+    }
+    let sh = shift as u32;
+    if sh >= 64 {
+        let inexact = mag != 0;
+        let above_half = sh == 64 && mag > 1u64 << 63;
+        let is_half = sh == 64 && mag == 1u64 << 63;
+        return apply_dir(0, inexact, above_half, mode, neg, is_half) as u64;
+    }
+    let kept = mag >> sh;
+    let rem = mag & ((1u64 << sh) - 1);
+    if rem == 0 {
+        return kept;
+    }
+    let half = 1u64 << (sh - 1);
+    apply_dir(kept as u128, true, rem > half, mode, neg, rem == half) as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn truncation_positive_negative_symmetric() {
+        // RZ truncates magnitude for both signs
+        let (m, ix) = round_shift(0b1011, 2, RoundingMode::TowardZero, false);
+        assert_eq!((m, ix), (0b10, true));
+        let (m, _) = round_shift(0b1011, 2, RoundingMode::TowardZero, true);
+        assert_eq!(m, 0b10);
+    }
+
+    #[test]
+    fn round_down_is_asymmetric() {
+        // +2.75 -> 2 ; -2.75 -> -3 (magnitude 3)
+        let (m, _) = round_shift(0b1011, 2, RoundingMode::Down, false);
+        assert_eq!(m, 0b10);
+        let (m, _) = round_shift(0b1011, 2, RoundingMode::Down, true);
+        assert_eq!(m, 0b11);
+    }
+
+    #[test]
+    fn round_up_mirror_of_down() {
+        let (m, _) = round_shift(0b1011, 2, RoundingMode::Up, false);
+        assert_eq!(m, 0b11);
+        let (m, _) = round_shift(0b1011, 2, RoundingMode::Up, true);
+        assert_eq!(m, 0b10);
+    }
+
+    #[test]
+    fn nearest_even_ties() {
+        // 2.5 -> 2 (even), 3.5 -> 4, 2.75 -> 3
+        assert_eq!(round_shift(0b1010, 2, RoundingMode::NearestEven, false).0, 0b10);
+        assert_eq!(round_shift(0b1110, 2, RoundingMode::NearestEven, false).0, 0b100);
+        assert_eq!(round_shift(0b1011, 2, RoundingMode::NearestEven, false).0, 0b11);
+    }
+
+    #[test]
+    fn nearest_away_ties() {
+        assert_eq!(round_shift(0b1010, 2, RoundingMode::NearestAway, false).0, 0b11);
+        assert_eq!(round_shift(0b1010, 2, RoundingMode::NearestAway, true).0, 0b11);
+    }
+
+    #[test]
+    fn full_shift_out() {
+        // everything shifted out: RZ -> 0, RD negative -> 1 quantum
+        assert_eq!(round_shift(0xFFFF, 128, RoundingMode::TowardZero, false).0, 0);
+        assert_eq!(round_shift(0xFFFF, 130, RoundingMode::Down, true).0, 1);
+        assert_eq!(round_shift(0xFFFF, 130, RoundingMode::Up, false).0, 1);
+        assert_eq!(round_shift(0, 130, RoundingMode::Up, false).0, 0);
+    }
+
+    #[test]
+    fn rz_f_matches_paper_example() {
+        // §5 CDNA3 FP8: -0.625 aligned at e_max = -1 with F = 24 stays exact;
+        // aligned at e_max = 23 with F = 24 (quantum 0.5): RZ -> -1 quantum (-0.5)
+        // value -0.625 = mag 5, lsb_exp = -3
+        let q = rz_f(true, 5, -3, 23, 24);
+        assert_eq!(q, -1); // -0.5 in halves
+        // RD -> -2 quanta (-1.0), the paper's "rounded down to -1"
+        let q = rd_f(true, 5, -3, 23, 24);
+        assert_eq!(q, -2);
+    }
+
+    #[test]
+    fn signed_align_left_shift() {
+        // 1.5 aligned with finer quanta: exact scaling up
+        let q = rz_f(false, 3, -1, 0, 4); // 1.5 in sixteenths = 24
+        assert_eq!(q, 24);
+    }
+}

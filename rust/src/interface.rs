@@ -1,0 +1,174 @@
+//! The black-box MMA interface abstraction.
+//!
+//! CLFP (paper §3) only ever observes `(A, B, C) → D` as bit patterns.
+//! Everything that can answer such queries — a Rust model from
+//! [`crate::models`], a PJRT-loaded artifact from [`crate::runtime`], or a
+//! deliberately-perturbed mystery model in the tests — implements
+//! [`MmaInterface`].
+
+use crate::formats::Format;
+
+/// A dense row-major matrix of raw bit patterns in a given format.
+///
+/// Elements are carried in `u64` regardless of storage width; the unused
+/// high bits are zero.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct BitMatrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub fmt: Format,
+    pub data: Vec<u64>,
+}
+
+impl BitMatrix {
+    /// All-zero (bit pattern 0) matrix.
+    pub fn zeros(rows: usize, cols: usize, fmt: Format) -> Self {
+        Self { rows, cols, fmt, data: vec![0; rows * cols] }
+    }
+
+    /// Build from `f64` values (RNE encoding).
+    pub fn from_f64(rows: usize, cols: usize, fmt: Format, vals: &[f64]) -> Self {
+        assert_eq!(vals.len(), rows * cols);
+        Self {
+            rows,
+            cols,
+            fmt,
+            data: vals.iter().map(|&v| fmt.from_f64(v)).collect(),
+        }
+    }
+
+    /// Fill with a single value (RNE encoding).
+    pub fn splat(rows: usize, cols: usize, fmt: Format, v: f64) -> Self {
+        let bits = fmt.from_f64(v);
+        Self { rows, cols, fmt, data: vec![bits; rows * cols] }
+    }
+
+    #[inline]
+    pub fn get(&self, r: usize, c: usize) -> u64 {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn set(&mut self, r: usize, c: usize, bits: u64) {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.data[r * self.cols + c] = bits;
+    }
+
+    /// Row slice (row-major layout).
+    #[inline]
+    pub fn row(&self, r: usize) -> &[u64] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// Copy of a column.
+    pub fn col(&self, c: usize) -> Vec<u64> {
+        (0..self.rows).map(|r| self.get(r, c)).collect()
+    }
+
+    /// Decode every element to `f64` (lossless for sub-f64 formats).
+    pub fn to_f64_vec(&self) -> Vec<f64> {
+        self.data.iter().map(|&b| self.fmt.to_f64(b)).collect()
+    }
+
+    /// Negate every element (sign-bit flip; finite-only formats included).
+    pub fn negated(&self) -> BitMatrix {
+        assert!(self.fmt.has_sign(), "cannot negate unsigned format");
+        let sign = 1u64 << (self.fmt.width() - 1);
+        BitMatrix {
+            rows: self.rows,
+            cols: self.cols,
+            fmt: self.fmt,
+            data: self.data.iter().map(|&b| b ^ sign).collect(),
+        }
+    }
+}
+
+/// Input/output formats of an MMA interface.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct MmaFormats {
+    pub a: Format,
+    pub b: Format,
+    pub c: Format,
+    pub d: Format,
+}
+
+/// Block-scale specification for MX/NVFP4 interfaces.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ScaleSpec {
+    pub fmt: Format,
+    /// Elements of K covered by one scale factor.
+    pub kblock: usize,
+}
+
+/// Scale operands: `a_scales` is `M × K/kblock`, `b_scales` is `K/kblock × N`.
+pub type Scales<'s> = Option<(&'s BitMatrix, &'s BitMatrix)>;
+
+/// A black-box matrix multiply-accumulate interface:
+/// `D = A×B + C` over bit patterns (paper Equation 2).
+pub trait MmaInterface: Send + Sync {
+    /// `(M, N, K)` of the operation.
+    fn shape(&self) -> (usize, usize, usize);
+
+    /// Operand formats.
+    fn formats(&self) -> MmaFormats;
+
+    /// Block-scale spec, if the interface takes MX-style scale operands.
+    fn scale_spec(&self) -> Option<ScaleSpec> {
+        None
+    }
+
+    /// Execute the MMA: `D = A×B + C`.
+    fn execute(&self, a: &BitMatrix, b: &BitMatrix, c: &BitMatrix, scales: Scales) -> BitMatrix;
+
+    /// Evaluate a single dot-product-accumulate: the `(0,0)` output for
+    /// `a_row`/`b_col`/`c00` with all other elements zero.
+    ///
+    /// The default realizes the probe through a full `execute` (the only
+    /// option for a black box); local models override it with a direct
+    /// dot-product evaluation, which makes CLFP's candidate filtering two
+    /// to three orders of magnitude cheaper.
+    fn probe(&self, a_row: &[u64], b_col: &[u64], c00: u64) -> u64 {
+        let (m, n, k) = self.shape();
+        let fmts = self.formats();
+        let mut a = BitMatrix::zeros(m, k, fmts.a);
+        let mut b = BitMatrix::zeros(k, n, fmts.b);
+        let mut c = BitMatrix::zeros(m, n, fmts.c);
+        a.data[..k].copy_from_slice(a_row);
+        for (r, &bits) in b_col.iter().enumerate() {
+            b.set(r, 0, bits);
+        }
+        c.set(0, 0, c00);
+        self.execute(&a, &b, &c, None).get(0, 0)
+    }
+
+    /// Human-readable identifier (instruction mnemonic or artifact name).
+    fn name(&self) -> String;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bitmatrix_layout() {
+        let mut m = BitMatrix::zeros(2, 3, Format::Fp16);
+        m.set(1, 2, 0x3C00);
+        assert_eq!(m.get(1, 2), 0x3C00);
+        assert_eq!(m.row(1), &[0, 0, 0x3C00]);
+        assert_eq!(m.col(2), vec![0, 0x3C00]);
+    }
+
+    #[test]
+    fn from_f64_roundtrip() {
+        let m = BitMatrix::from_f64(1, 3, Format::Fp32, &[1.0, -2.5, 0.0]);
+        assert_eq!(m.to_f64_vec(), vec![1.0, -2.5, 0.0]);
+    }
+
+    #[test]
+    fn negation_flips_signs() {
+        let m = BitMatrix::from_f64(1, 2, Format::Fp16, &[1.5, -3.0]);
+        let n = m.negated();
+        assert_eq!(n.to_f64_vec(), vec![-1.5, 3.0]);
+    }
+}

@@ -1,0 +1,71 @@
+//! AMD Matrix Core instruction registry (paper Tables 6 and 7).
+//!
+//! Names are the MFMA instruction intrinsics (`v_mfma_*`). The CDNA2
+//! BF16 instructions come in two flavours: the CDNA1-compatible encoding
+//! (P = 2) and the `_1k` encoding (P = 4); FP16 always uses P = 4.
+
+use super::{fmts, Arch, InputClass, Instruction};
+use crate::formats::Format;
+use crate::models::ModelSpec;
+
+/// All modeled AMD Matrix Core instructions.
+pub fn amd_instructions() -> Vec<Instruction> {
+    use Arch::*;
+    use Format::*;
+    use InputClass as C;
+    let mut v = Vec::new();
+
+    let mk = |arch: Arch,
+              name: &'static str,
+              class: InputClass,
+              (m, n, k): (usize, usize, usize),
+              in_fmt: Format,
+              cd: Format,
+              spec: ModelSpec| Instruction {
+        arch,
+        name,
+        class,
+        m,
+        n,
+        k,
+        formats: fmts(in_fmt, cd, cd),
+        spec,
+    };
+
+    // ---- CDNA1 (gfx908) ----
+    v.push(mk(Cdna1, "v_mfma_f32_16x16x4_f32", C::Fp32, (16, 16, 4), Fp32, Fp32, ModelSpec::FmaChain));
+    v.push(mk(Cdna1, "v_mfma_f32_32x32x2_f32", C::Fp32, (32, 32, 2), Fp32, Fp32, ModelSpec::FmaChain));
+    v.push(mk(Cdna1, "v_mfma_f32_16x16x8_bf16", C::Bf16, (16, 16, 8), Bf16, Fp32, ModelSpec::EFdpa { l: 2 }));
+    v.push(mk(Cdna1, "v_mfma_f32_32x32x4_bf16", C::Bf16, (32, 32, 4), Bf16, Fp32, ModelSpec::EFdpa { l: 2 }));
+    v.push(mk(Cdna1, "v_mfma_f32_16x16x16_f16", C::Fp16, (16, 16, 16), Fp16, Fp32, ModelSpec::EFdpa { l: 4 }));
+    v.push(mk(Cdna1, "v_mfma_f32_32x32x8_f16", C::Fp16, (32, 32, 8), Fp16, Fp32, ModelSpec::EFdpa { l: 4 }));
+
+    // ---- CDNA2 (gfx90a) ----
+    v.push(mk(Cdna2, "v_mfma_f64_16x16x4_f64", C::Fp64, (16, 16, 4), Fp64, Fp64, ModelSpec::FmaChain));
+    v.push(mk(Cdna2, "v_mfma_f32_16x16x4_f32", C::Fp32, (16, 16, 4), Fp32, Fp32, ModelSpec::FmaChain));
+    // BF16 without _1k: CDNA1-compatible K, pairing P = 2
+    v.push(mk(Cdna2, "v_mfma_f32_16x16x8_bf16", C::Bf16, (16, 16, 8), Bf16, Fp32, ModelSpec::FtzAddMul { p: 2 }));
+    v.push(mk(Cdna2, "v_mfma_f32_32x32x4_bf16", C::Bf16, (32, 32, 4), Bf16, Fp32, ModelSpec::FtzAddMul { p: 2 }));
+    // BF16 with _1k: doubled K, pairing P = 4
+    v.push(mk(Cdna2, "v_mfma_f32_16x16x16_bf16_1k", C::Bf16, (16, 16, 16), Bf16, Fp32, ModelSpec::FtzAddMul { p: 4 }));
+    v.push(mk(Cdna2, "v_mfma_f32_32x32x8_bf16_1k", C::Bf16, (32, 32, 8), Bf16, Fp32, ModelSpec::FtzAddMul { p: 4 }));
+    v.push(mk(Cdna2, "v_mfma_f32_16x16x16_f16", C::Fp16, (16, 16, 16), Fp16, Fp32, ModelSpec::FtzAddMul { p: 4 }));
+    v.push(mk(Cdna2, "v_mfma_f32_32x32x8_f16", C::Fp16, (32, 32, 8), Fp16, Fp32, ModelSpec::FtzAddMul { p: 4 }));
+
+    // ---- CDNA3 (gfx942) ----
+    v.push(mk(Cdna3, "v_mfma_f64_16x16x4_f64", C::Fp64, (16, 16, 4), Fp64, Fp64, ModelSpec::FmaChain));
+    v.push(mk(Cdna3, "v_mfma_f32_16x16x4_f32", C::Fp32, (16, 16, 4), Fp32, Fp32, ModelSpec::FmaChain));
+    // TF32 ("xf32") TR-FDPA: L_max = 16 bytes / 4 = 4
+    v.push(mk(Cdna3, "v_mfma_f32_16x16x8_xf32", C::Tf32, (16, 16, 8), Tf32, Fp32, ModelSpec::TrFdpa { l_max: 4, f: 24, f2: 31 }));
+    // BF16/FP16 TR-FDPA: L_max = 16 bytes / 2 = 8
+    v.push(mk(Cdna3, "v_mfma_f32_16x16x16_bf16", C::Bf16, (16, 16, 16), Bf16, Fp32, ModelSpec::TrFdpa { l_max: 8, f: 24, f2: 31 }));
+    v.push(mk(Cdna3, "v_mfma_f32_32x32x8_bf16", C::Bf16, (32, 32, 8), Bf16, Fp32, ModelSpec::TrFdpa { l_max: 8, f: 24, f2: 31 }));
+    v.push(mk(Cdna3, "v_mfma_f32_16x16x16_f16", C::Fp16, (16, 16, 16), Fp16, Fp32, ModelSpec::TrFdpa { l_max: 8, f: 24, f2: 31 }));
+    // The Figure 3 instruction:
+    v.push(mk(Cdna3, "v_mfma_f32_32x32x8_f16", C::Fp16, (32, 32, 8), Fp16, Fp32, ModelSpec::TrFdpa { l_max: 8, f: 24, f2: 31 }));
+    // FP8 GTR-FDPA: L_max = 16 bytes / 1 = 16
+    v.push(mk(Cdna3, "v_mfma_f32_16x16x32_fp8_fp8", C::Fp8, (16, 16, 32), Fp8E4M3, Fp32, ModelSpec::GtrFdpa { l_max: 16, f: 24, f2: 31 }));
+    v.push(mk(Cdna3, "v_mfma_f32_16x16x32_bf8_bf8", C::Fp8, (16, 16, 32), Fp8E5M2, Fp32, ModelSpec::GtrFdpa { l_max: 16, f: 24, f2: 31 }));
+
+    v
+}

@@ -1,0 +1,403 @@
+//! Instruction registry: every floating-point MMA instruction modeled by
+//! the paper, across the ten GPU architectures (Tables 3–7).
+//!
+//! Each entry binds a SASS/MFMA mnemonic and shape to its arithmetic
+//! behavior model and parameters. The registry is the single source of
+//! truth for Table 1 (taxonomy), Tables 3–7 (mappings/parameters),
+//! Table 8 (discrepancy sweep) and Table 10 (risky designs).
+
+mod amd;
+mod nvidia;
+
+pub use amd::amd_instructions;
+pub use nvidia::nvidia_instructions;
+
+use crate::formats::Format;
+use crate::interface::MmaFormats;
+use crate::models::{MmaModel, ModelSpec};
+
+/// GPU architectures covered by the paper.
+#[derive(Clone, Copy, PartialEq, Eq, Debug, Hash, PartialOrd, Ord)]
+pub enum Arch {
+    Volta,
+    Turing,
+    Ampere,
+    AdaLovelace,
+    Hopper,
+    Blackwell,
+    RtxBlackwell,
+    Cdna1,
+    Cdna2,
+    Cdna3,
+}
+
+impl Arch {
+    pub const ALL: [Arch; 10] = [
+        Arch::Volta,
+        Arch::Turing,
+        Arch::Ampere,
+        Arch::AdaLovelace,
+        Arch::Hopper,
+        Arch::Blackwell,
+        Arch::RtxBlackwell,
+        Arch::Cdna1,
+        Arch::Cdna2,
+        Arch::Cdna3,
+    ];
+
+    pub const fn name(self) -> &'static str {
+        match self {
+            Arch::Volta => "Volta",
+            Arch::Turing => "Turing",
+            Arch::Ampere => "Ampere",
+            Arch::AdaLovelace => "Ada Lovelace",
+            Arch::Hopper => "Hopper",
+            Arch::Blackwell => "Blackwell",
+            Arch::RtxBlackwell => "RTX Blackwell",
+            Arch::Cdna1 => "CDNA1",
+            Arch::Cdna2 => "CDNA2",
+            Arch::Cdna3 => "CDNA3",
+        }
+    }
+
+    /// Compute-capability / gfx target as in the paper §3.2.
+    pub const fn target(self) -> &'static str {
+        match self {
+            Arch::Volta => "sm70",
+            Arch::Turing => "sm75",
+            Arch::Ampere => "sm80",
+            Arch::AdaLovelace => "sm89",
+            Arch::Hopper => "sm90",
+            Arch::Blackwell => "sm100",
+            Arch::RtxBlackwell => "sm120",
+            Arch::Cdna1 => "gfx908",
+            Arch::Cdna2 => "gfx90a",
+            Arch::Cdna3 => "gfx942",
+        }
+    }
+
+    pub const fn vendor(self) -> &'static str {
+        match self {
+            Arch::Cdna1 | Arch::Cdna2 | Arch::Cdna3 => "AMD",
+            _ => "NVIDIA",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Arch> {
+        let l = s.to_ascii_lowercase().replace([' ', '-', '_'], "");
+        Arch::ALL.iter().copied().find(|a| {
+            a.name().to_ascii_lowercase().replace([' ', '-'], "") == l
+                || a.target().eq_ignore_ascii_case(&l)
+        })
+    }
+}
+
+/// Input-type class used by the paper's tables for grouping.
+#[derive(Clone, Copy, PartialEq, Eq, Debug, Hash)]
+pub enum InputClass {
+    Fp64,
+    Fp32,
+    Tf32,
+    Bf16,
+    Fp16,
+    Fp8,
+    Fp6,
+    Fp4,
+    Mxfp8,
+    Mxfp6,
+    Mxfp4,
+    Nvfp4,
+}
+
+impl InputClass {
+    pub const fn name(self) -> &'static str {
+        match self {
+            InputClass::Fp64 => "FP64",
+            InputClass::Fp32 => "FP32",
+            InputClass::Tf32 => "TF32",
+            InputClass::Bf16 => "BF16",
+            InputClass::Fp16 => "FP16",
+            InputClass::Fp8 => "FP8",
+            InputClass::Fp6 => "FP6",
+            InputClass::Fp4 => "FP4",
+            InputClass::Mxfp8 => "MXFP8",
+            InputClass::Mxfp6 => "MXFP6",
+            InputClass::Mxfp4 => "MXFP4",
+            InputClass::Nvfp4 => "NVFP4",
+        }
+    }
+}
+
+/// One MMA instruction with its derived model (a row of Tables 3–7).
+#[derive(Clone, Debug)]
+pub struct Instruction {
+    pub arch: Arch,
+    /// SASS mnemonic (NVIDIA) or MFMA intrinsic name (AMD).
+    pub name: &'static str,
+    pub class: InputClass,
+    pub m: usize,
+    pub n: usize,
+    pub k: usize,
+    pub formats: MmaFormats,
+    pub spec: ModelSpec,
+}
+
+impl Instruction {
+    /// Instantiate the executable Φ for this instruction.
+    pub fn model(&self) -> MmaModel {
+        MmaModel::new(
+            format!("{} {}", self.arch.target(), self.name),
+            (self.m, self.n, self.k),
+            self.formats,
+            self.spec,
+        )
+    }
+
+    /// `MxNxK` shape string.
+    pub fn shape_str(&self) -> String {
+        format!("m{}n{}k{}", self.m, self.n, self.k)
+    }
+}
+
+/// Full registry across both vendors.
+pub fn registry() -> Vec<Instruction> {
+    let mut v = nvidia_instructions();
+    v.extend(amd_instructions());
+    v
+}
+
+/// Look up instructions by architecture.
+pub fn by_arch(arch: Arch) -> Vec<Instruction> {
+    registry().into_iter().filter(|i| i.arch == arch).collect()
+}
+
+/// Find one instruction by (case-insensitive) name substring and arch.
+pub fn find(arch: Arch, name_frag: &str) -> Option<Instruction> {
+    let frag = name_frag.to_ascii_lowercase();
+    registry()
+        .into_iter()
+        .find(|i| i.arch == arch && i.name.to_ascii_lowercase().contains(&frag))
+}
+
+/// Convenience: standard operand-format bundle.
+pub(crate) const fn fmts(a: Format, c: Format, d: Format) -> MmaFormats {
+    MmaFormats { a, b: a, c, d }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::BTreeSet;
+
+    #[test]
+    fn registry_covers_all_ten_architectures() {
+        let archs: BTreeSet<Arch> = registry().into_iter().map(|i| i.arch).collect();
+        assert_eq!(archs.len(), 10);
+    }
+
+    #[test]
+    fn table1_taxonomy() {
+        // Table 1: 3 categories, 8 model types
+        let reg = registry();
+        let cats: BTreeSet<&str> = reg.iter().map(|i| i.spec.category()).collect();
+        assert_eq!(
+            cats,
+            BTreeSet::from(["AddMul-based", "FMA-based", "FDPA-based"])
+        );
+        let syms: BTreeSet<&str> = reg.iter().map(|i| i.spec.symbol()).collect();
+        assert_eq!(syms.len(), 8, "eight model types: {syms:?}");
+    }
+
+    #[test]
+    fn table3_nvidia_model_mapping() {
+        use crate::models::ModelSpec as S;
+        for i in nvidia_instructions() {
+            match i.class {
+                InputClass::Fp64 => assert!(matches!(i.spec, S::FmaChain), "{}", i.name),
+                InputClass::Tf32 | InputClass::Bf16 | InputClass::Fp16 | InputClass::Fp8
+                | InputClass::Fp6 | InputClass::Fp4 => {
+                    assert!(matches!(i.spec, S::TFdpa { .. }), "{}", i.name)
+                }
+                InputClass::Mxfp8 | InputClass::Mxfp6 => {
+                    assert!(matches!(i.spec, S::StFdpa { .. }), "{}", i.name)
+                }
+                InputClass::Mxfp4 | InputClass::Nvfp4 => {
+                    assert!(
+                        matches!(i.spec, S::GstFdpa { .. } | S::StFdpa { .. }),
+                        "{}",
+                        i.name
+                    )
+                }
+                InputClass::Fp32 => panic!("no FP32 Tensor Core instruction"),
+            }
+        }
+    }
+
+    #[test]
+    fn table4_parameters_match_paper() {
+        use crate::models::ModelSpec as S;
+        let get = |arch: Arch, class: InputClass, out: Format| -> (usize, i32, crate::formats::Rho) {
+            let i = nvidia_instructions()
+                .into_iter()
+                .find(|i| i.arch == arch && i.class == class && i.formats.d == out)
+                .unwrap_or_else(|| panic!("missing {arch:?} {class:?} {out:?}"));
+            match i.spec {
+                S::TFdpa { l_max, f, rho } => (l_max, f, rho),
+                S::StFdpa { l_max, f, rho, .. } => (l_max, f, rho),
+                _ => panic!("not T/ST-FDPA"),
+            }
+        };
+        use crate::formats::Rho::*;
+        use Format as F;
+        use InputClass as C;
+        // Volta
+        assert_eq!(get(Arch::Volta, C::Fp16, F::Fp32), (4, 23, RzFp32));
+        assert_eq!(get(Arch::Volta, C::Fp16, F::Fp16), (4, 23, RneFp16));
+        // Turing
+        assert_eq!(get(Arch::Turing, C::Fp16, F::Fp32), (8, 24, RzFp32));
+        assert_eq!(get(Arch::Turing, C::Fp16, F::Fp16), (8, 24, RneFp16));
+        // Ampere
+        assert_eq!(get(Arch::Ampere, C::Tf32, F::Fp32), (4, 24, RzFp32));
+        assert_eq!(get(Arch::Ampere, C::Bf16, F::Fp32), (8, 24, RzFp32));
+        assert_eq!(get(Arch::Ampere, C::Fp16, F::Fp32), (8, 24, RzFp32));
+        assert_eq!(get(Arch::Ampere, C::Fp16, F::Fp16), (8, 24, RneFp16));
+        // Ada Lovelace
+        assert_eq!(get(Arch::AdaLovelace, C::Tf32, F::Fp32), (4, 24, RzFp32));
+        assert_eq!(get(Arch::AdaLovelace, C::Fp8, F::Fp32), (16, 13, RzE8M13));
+        assert_eq!(get(Arch::AdaLovelace, C::Fp8, F::Fp16), (16, 13, RneFp16));
+        // Hopper
+        assert_eq!(get(Arch::Hopper, C::Tf32, F::Fp32), (8, 25, RzFp32));
+        assert_eq!(get(Arch::Hopper, C::Bf16, F::Fp32), (16, 25, RzFp32));
+        assert_eq!(get(Arch::Hopper, C::Fp16, F::Fp32), (16, 25, RzFp32));
+        assert_eq!(get(Arch::Hopper, C::Fp16, F::Fp16), (16, 25, RneFp16));
+        assert_eq!(get(Arch::Hopper, C::Fp8, F::Fp32), (32, 13, RzE8M13));
+        assert_eq!(get(Arch::Hopper, C::Fp8, F::Fp16), (32, 13, RneFp16));
+        // Blackwell + RTX Blackwell
+        for arch in [Arch::Blackwell, Arch::RtxBlackwell] {
+            assert_eq!(get(arch, C::Tf32, F::Fp32), (8, 25, RzFp32));
+            assert_eq!(get(arch, C::Bf16, F::Fp32), (16, 25, RzFp32));
+            assert_eq!(get(arch, C::Fp16, F::Fp32), (16, 25, RzFp32));
+            assert_eq!(get(arch, C::Fp16, F::Fp16), (16, 25, RneFp16));
+            assert_eq!(get(arch, C::Fp8, F::Fp32), (32, 25, RzFp32));
+            assert_eq!(get(arch, C::Fp8, F::Fp16), (32, 25, RneFp16));
+            assert_eq!(get(arch, C::Mxfp8, F::Fp32), (32, 25, RzFp32));
+        }
+    }
+
+    #[test]
+    fn table5_gst_parameters() {
+        use crate::models::ModelSpec as S;
+        for arch in [Arch::Blackwell, Arch::RtxBlackwell] {
+            for class in [InputClass::Mxfp4, InputClass::Nvfp4] {
+                let i = nvidia_instructions()
+                    .into_iter()
+                    .find(|i| {
+                        i.arch == arch
+                            && i.class == class
+                            && matches!(i.spec, S::GstFdpa { .. })
+                    })
+                    .unwrap();
+                match i.spec {
+                    S::GstFdpa { l, g, f, rho, .. } => {
+                        assert_eq!((l, g, f), (64, 16, 35));
+                        assert_eq!(rho, crate::formats::Rho::RzFp32);
+                    }
+                    other => panic!("{class:?} should be GST-FDPA, got {other:?}"),
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn table6_amd_model_mapping() {
+        use crate::models::ModelSpec as S;
+        for i in amd_instructions() {
+            match (i.arch, i.class) {
+                (_, InputClass::Fp64) | (_, InputClass::Fp32) => {
+                    assert!(matches!(i.spec, S::FmaChain), "{}", i.name)
+                }
+                (Arch::Cdna1, InputClass::Bf16) => {
+                    assert!(matches!(i.spec, S::EFdpa { l: 2 }), "{}", i.name)
+                }
+                (Arch::Cdna1, InputClass::Fp16) => {
+                    assert!(matches!(i.spec, S::EFdpa { l: 4 }), "{}", i.name)
+                }
+                (Arch::Cdna2, InputClass::Bf16) => {
+                    let p_want = if i.name.ends_with("_1k") { 4 } else { 2 };
+                    assert!(
+                        matches!(i.spec, S::FtzAddMul { p } if p == p_want),
+                        "{}",
+                        i.name
+                    )
+                }
+                (Arch::Cdna2, InputClass::Fp16) => {
+                    assert!(matches!(i.spec, S::FtzAddMul { p: 4 }), "{}", i.name)
+                }
+                (Arch::Cdna3, InputClass::Tf32 | InputClass::Bf16 | InputClass::Fp16) => {
+                    assert!(matches!(i.spec, S::TrFdpa { .. }), "{}", i.name)
+                }
+                (Arch::Cdna3, InputClass::Fp8) => {
+                    assert!(matches!(i.spec, S::GtrFdpa { .. }), "{}", i.name)
+                }
+                other => panic!("unexpected AMD entry {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn table7_tr_gtr_parameters() {
+        use crate::models::ModelSpec as S;
+        for i in amd_instructions().into_iter().filter(|i| i.arch == Arch::Cdna3) {
+            match i.spec {
+                S::TrFdpa { l_max, f, f2 } => {
+                    assert_eq!((f, f2), (24, 31), "{}", i.name);
+                    let want = match i.class {
+                        InputClass::Tf32 => 4,
+                        InputClass::Bf16 | InputClass::Fp16 => 8,
+                        _ => unreachable!(),
+                    };
+                    assert_eq!(l_max, want, "{}", i.name);
+                }
+                S::GtrFdpa { l_max, f, f2 } => {
+                    assert_eq!((l_max, f, f2), (16, 24, 31), "{}", i.name);
+                }
+                S::FmaChain => {}
+                other => panic!("{}: {other:?}", i.name),
+            }
+        }
+    }
+
+    #[test]
+    fn shapes_chain_cleanly() {
+        // K must be a positive multiple of the effective vector length so
+        // Algorithm 5's chaining has no ragged tail.
+        use crate::models::ModelSpec as S;
+        for i in registry() {
+            let l = match i.spec {
+                S::EFdpa { l } => l,
+                S::TFdpa { l_max, .. } | S::StFdpa { l_max, .. } => l_max.min(i.k),
+                S::GstFdpa { l, .. } => l.min(i.k),
+                S::TrFdpa { l_max, .. } | S::GtrFdpa { l_max, .. } => l_max.min(i.k),
+                S::FtzAddMul { p } => p,
+                S::FmaChain => 1,
+            };
+            assert_eq!(i.k % l, 0, "{} k={} l={}", i.name, i.k, l);
+        }
+    }
+
+    #[test]
+    fn parse_arch_names() {
+        assert_eq!(Arch::parse("hopper"), Some(Arch::Hopper));
+        assert_eq!(Arch::parse("sm90"), Some(Arch::Hopper));
+        assert_eq!(Arch::parse("gfx942"), Some(Arch::Cdna3));
+        assert_eq!(Arch::parse("rtx blackwell"), Some(Arch::RtxBlackwell));
+        assert_eq!(Arch::parse("ada-lovelace"), Some(Arch::AdaLovelace));
+    }
+
+    #[test]
+    fn find_by_fragment() {
+        assert!(find(Arch::Cdna3, "32x32x8_f16").is_some());
+        assert!(find(Arch::Volta, "HMMA.884").is_some());
+        assert!(find(Arch::Volta, "QMMA").is_none());
+    }
+}

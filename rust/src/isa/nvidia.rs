@@ -1,0 +1,234 @@
+//! NVIDIA Tensor Core instruction registry (paper Tables 3, 4, 5).
+//!
+//! Mnemonics are the SASS instruction families the paper verified against
+//! PTX (`HMMA`/`QMMA` on pre-Hopper, `HGMMA`/`QGMMA` wgmma on Hopper,
+//! `UTCHMMA`/`UTCQMMA` tcgen05 on Blackwell). Shapes are representative
+//! PTX `mma`/`wgmma`/`tcgen05.mma` tile shapes; the arithmetic model is
+//! shape-independent beyond the `K / L` chaining structure.
+
+use super::{fmts, Arch, InputClass, Instruction};
+use crate::formats::{Format, Rho};
+use crate::models::ModelSpec;
+
+fn t(
+    arch: Arch,
+    name: &'static str,
+    class: InputClass,
+    (m, n, k): (usize, usize, usize),
+    in_fmt: Format,
+    out: Format,
+    l_max: usize,
+    f: i32,
+    rho: Rho,
+) -> Instruction {
+    Instruction {
+        arch,
+        name,
+        class,
+        m,
+        n,
+        k,
+        formats: fmts(in_fmt, out, out),
+        spec: ModelSpec::TFdpa { l_max, f, rho },
+    }
+}
+
+/// All modeled NVIDIA Tensor Core instructions.
+pub fn nvidia_instructions() -> Vec<Instruction> {
+    use Arch::*;
+    use Format::*;
+    use InputClass as C;
+    use Rho::*;
+    let mut v = Vec::new();
+
+    // ---- Volta (sm70): first-generation Tensor Core, HMMA.884 ----
+    v.push(t(Volta, "HMMA.884.F32.F16", C::Fp16, (8, 8, 4), Fp16, Fp32, 4, 23, RzFp32));
+    v.push(t(Volta, "HMMA.884.F16.F16", C::Fp16, (8, 8, 4), Fp16, Fp16, 4, 23, RneFp16));
+
+    // ---- Turing (sm75): HMMA.1688 ----
+    v.push(t(Turing, "HMMA.1688.F32.F16", C::Fp16, (16, 8, 8), Fp16, Fp32, 8, 24, RzFp32));
+    v.push(t(Turing, "HMMA.1688.F16.F16", C::Fp16, (16, 8, 8), Fp16, Fp16, 8, 24, RneFp16));
+
+    // ---- Ampere (sm80) ----
+    v.push(Instruction {
+        arch: Ampere,
+        name: "DMMA.884.F64",
+        class: C::Fp64,
+        m: 8,
+        n: 8,
+        k: 4,
+        formats: fmts(Fp64, Fp64, Fp64),
+        spec: ModelSpec::FmaChain,
+    });
+    v.push(t(Ampere, "HMMA.1688.F32.TF32", C::Tf32, (16, 8, 8), Tf32, Fp32, 4, 24, RzFp32));
+    v.push(t(Ampere, "HMMA.16816.F32.BF16", C::Bf16, (16, 8, 16), Bf16, Fp32, 8, 24, RzFp32));
+    v.push(t(Ampere, "HMMA.16816.F32.F16", C::Fp16, (16, 8, 16), Fp16, Fp32, 8, 24, RzFp32));
+    v.push(t(Ampere, "HMMA.16816.F16.F16", C::Fp16, (16, 8, 16), Fp16, Fp16, 8, 24, RneFp16));
+
+    // ---- Ada Lovelace (sm89): Ampere params + FP8 with reduced F ----
+    v.push(t(AdaLovelace, "HMMA.1688.F32.TF32", C::Tf32, (16, 8, 8), Tf32, Fp32, 4, 24, RzFp32));
+    v.push(t(AdaLovelace, "HMMA.16816.F32.BF16", C::Bf16, (16, 8, 16), Bf16, Fp32, 8, 24, RzFp32));
+    v.push(t(AdaLovelace, "HMMA.16816.F32.F16", C::Fp16, (16, 8, 16), Fp16, Fp32, 8, 24, RzFp32));
+    v.push(t(AdaLovelace, "HMMA.16816.F16.F16", C::Fp16, (16, 8, 16), Fp16, Fp16, 8, 24, RneFp16));
+    v.push(t(AdaLovelace, "QMMA.16832.F32.E4M3", C::Fp8, (16, 8, 32), Fp8E4M3, Fp32, 16, 13, RzE8M13));
+    v.push(t(AdaLovelace, "QMMA.16832.F32.E5M2", C::Fp8, (16, 8, 32), Fp8E5M2, Fp32, 16, 13, RzE8M13));
+    v.push(t(AdaLovelace, "QMMA.16832.F16.E4M3", C::Fp8, (16, 8, 32), Fp8E4M3, Fp16, 16, 13, RneFp16));
+
+    // ---- Hopper (sm90): warpgroup MMA, doubled L_max, F = 25 ----
+    v.push(t(Hopper, "HGMMA.64x8x8.F32.TF32", C::Tf32, (64, 8, 8), Tf32, Fp32, 8, 25, RzFp32));
+    v.push(t(Hopper, "HGMMA.64x8x16.F32.BF16", C::Bf16, (64, 8, 16), Bf16, Fp32, 16, 25, RzFp32));
+    v.push(t(Hopper, "HGMMA.64x8x16.F32.F16", C::Fp16, (64, 8, 16), Fp16, Fp32, 16, 25, RzFp32));
+    v.push(t(Hopper, "HGMMA.64x8x16.F16.F16", C::Fp16, (64, 8, 16), Fp16, Fp16, 16, 25, RneFp16));
+    v.push(t(Hopper, "QGMMA.64x8x32.F32.E4M3", C::Fp8, (64, 8, 32), Fp8E4M3, Fp32, 32, 13, RzE8M13));
+    v.push(t(Hopper, "QGMMA.64x8x32.F32.E5M2", C::Fp8, (64, 8, 32), Fp8E5M2, Fp32, 32, 13, RzE8M13));
+    v.push(t(Hopper, "QGMMA.64x8x32.F16.E4M3", C::Fp8, (64, 8, 32), Fp8E4M3, Fp16, 32, 13, RneFp16));
+
+    // ---- Blackwell (sm100) and RTX Blackwell (sm120) ----
+    for (arch, hp, qp) in [
+        (Blackwell, "UTCHMMA", "UTCQMMA"),
+        (RtxBlackwell, "HMMA", "QMMA"),
+    ] {
+        let _ = (hp, qp);
+        let mk = |name: &'static str,
+                  class: InputClass,
+                  shape: (usize, usize, usize),
+                  in_fmt: Format,
+                  out: Format,
+                  l_max: usize,
+                  f: i32,
+                  rho: Rho| t(arch, name, class, shape, in_fmt, out, l_max, f, rho);
+        let (htf, hbf, hf32, hf16, q32, q16, q6, q4) = if arch == Blackwell {
+            (
+                "UTCHMMA.64x8x8.F32.TF32",
+                "UTCHMMA.64x8x16.F32.BF16",
+                "UTCHMMA.64x8x16.F32.F16",
+                "UTCHMMA.64x8x16.F16.F16",
+                "UTCQMMA.64x8x32.F32.E4M3",
+                "UTCQMMA.64x8x32.F16.E4M3",
+                "UTCQMMA.64x8x32.F32.E2M3",
+                "UTCQMMA.64x8x32.F32.E2M1",
+            )
+        } else {
+            (
+                "HMMA.1688.F32.TF32",
+                "HMMA.16816.F32.BF16",
+                "HMMA.16816.F32.F16",
+                "HMMA.16816.F16.F16",
+                "QMMA.16832.F32.E4M3",
+                "QMMA.16832.F16.E4M3",
+                "QMMA.16832.F32.E2M3",
+                "QMMA.16832.F32.E2M1",
+            )
+        };
+        let big = arch == Blackwell;
+        let sh8 = if big { (64, 8, 8) } else { (16, 8, 8) };
+        let sh16 = if big { (64, 8, 16) } else { (16, 8, 16) };
+        let sh32 = if big { (64, 8, 32) } else { (16, 8, 32) };
+        v.push(mk(htf, C::Tf32, sh8, Tf32, Fp32, 8, 25, RzFp32));
+        v.push(mk(hbf, C::Bf16, sh16, Bf16, Fp32, 16, 25, RzFp32));
+        v.push(mk(hf32, C::Fp16, sh16, Fp16, Fp32, 16, 25, RzFp32));
+        v.push(mk(hf16, C::Fp16, sh16, Fp16, Fp16, 16, 25, RneFp16));
+        // FP8/6/4 with full F = 25 (the Blackwell fix for the Hopper FP8
+        // precision bottleneck, §6.2.2)
+        v.push(mk(q32, C::Fp8, sh32, Fp8E4M3, Fp32, 32, 25, RzFp32));
+        let q32_e5: &'static str = if arch == Blackwell {
+            "UTCQMMA.64x8x32.F32.E5M2"
+        } else {
+            "QMMA.16832.F32.E5M2"
+        };
+        v.push(mk(q32_e5, C::Fp8, sh32, Fp8E5M2, Fp32, 32, 25, RzFp32));
+        v.push(mk(q16, C::Fp8, sh32, Fp8E4M3, Fp16, 32, 25, RneFp16));
+        v.push(mk(q6, C::Fp6, sh32, Fp6E2M3, Fp32, 32, 25, RzFp32));
+        v.push(mk(q4, C::Fp4, sh32, Fp4E2M1, Fp32, 32, 25, RzFp32));
+
+        // MXFP8/6/4 via ST-FDPA (one E8M0 scale per 32 elements)
+        let (sf8, sf6, sf4, gst4, gstn4): (
+            &'static str,
+            &'static str,
+            &'static str,
+            &'static str,
+            &'static str,
+        ) = if arch == Blackwell {
+            (
+                "UTCQMMA.SF.64x8x32.F32.MXE4M3",
+                "UTCQMMA.SF.64x8x32.F32.MXE2M3",
+                "UTCQMMA.SF.64x8x32.F32.MXE2M1",
+                "UTCQMMA.SF.64x8x64.F32.MXF4",
+                "UTCQMMA.SF.64x8x64.F32.NVF4",
+            )
+        } else {
+            (
+                "QMMA.SF.16832.F32.MXE4M3",
+                "QMMA.SF.16832.F32.MXE2M3",
+                "QMMA.SF.16832.F32.MXE2M1",
+                "QMMA.SF.16864.F32.MXF4",
+                "QMMA.SF.16864.F32.NVF4",
+            )
+        };
+        let sh64 = if big { (64, 8, 64) } else { (16, 8, 64) };
+        let st = |name, class, in_fmt| Instruction {
+            arch,
+            name,
+            class,
+            m: sh32.0,
+            n: sh32.1,
+            k: sh32.2,
+            formats: fmts(in_fmt, Fp32, Fp32),
+            spec: ModelSpec::StFdpa { l_max: 32, f: 25, rho: RzFp32, kblock: 32 },
+        };
+        v.push(st(sf8, C::Mxfp8, Fp8E4M3));
+        v.push(st(sf6, C::Mxfp6, Fp6E2M3));
+        v.push(st(sf4, C::Mxfp4, Fp4E2M1));
+        // Dedicated MXFP4/NVFP4 path via GST-FDPA (Table 5)
+        v.push(Instruction {
+            arch,
+            name: gst4,
+            class: C::Mxfp4,
+            m: sh64.0,
+            n: sh64.1,
+            k: sh64.2,
+            formats: fmts(Fp4E2M1, Fp32, Fp32),
+            spec: ModelSpec::GstFdpa {
+                l: 64,
+                g: 16,
+                f: 35,
+                rho: RzFp32,
+                kblock: 32,
+                scale_fmt: Format::E8M0,
+            },
+        });
+        v.push(Instruction {
+            arch,
+            name: gstn4,
+            class: C::Nvfp4,
+            m: sh64.0,
+            n: sh64.1,
+            k: sh64.2,
+            formats: fmts(Fp4E2M1, Fp32, Fp32),
+            spec: ModelSpec::GstFdpa {
+                l: 64,
+                g: 16,
+                f: 35,
+                rho: RzFp32,
+                kblock: 16,
+                scale_fmt: Format::Ue4M3,
+            },
+        });
+    }
+
+    // FP64 DMMA on the later datacenter architectures (introduced with
+    // Ampere; Volta/Turing have no FP64 Tensor Core path).
+    for arch in [Hopper, Blackwell] {
+        v.push(Instruction {
+            arch,
+            name: "DMMA.884.F64",
+            class: C::Fp64,
+            m: 8,
+            n: 8,
+            k: 4,
+            formats: fmts(Fp64, Fp64, Fp64),
+            spec: ModelSpec::FmaChain,
+        });
+    }
+    v
+}

@@ -1,0 +1,50 @@
+//! # MMA-Sim
+//!
+//! Bit-accurate reference models of GPU matrix multiply-accumulate units
+//! (NVIDIA Tensor Cores, AMD Matrix Cores), reproducing
+//! *"Bit-Accurate Modeling of GPU Matrix Multiply-Accumulate Units:
+//! Demystifying Numerical Discrepancy and Accuracy"* (MMA-Sim).
+//!
+//! The crate is organized in layers:
+//!
+//! - [`formats`] — software floating-point formats (FP64 … FP4, E8M0, UE4M3),
+//!   decode/encode with every rounding mode, and the paper's Table 2
+//!   conversion functions.
+//! - [`fixedpoint`] — the wide fixed-point machinery (aligned truncation
+//!   `RZ_F`/`RD_F`, exact Kulisch-style accumulation) that the fused
+//!   operations are built from.
+//! - [`ops`] — the nine elementary operations of the paper
+//!   (Algorithms 1, 3, 6–11): FTZ-Add/Mul, FMA, E-FDPA, T-FDPA, ST-FDPA,
+//!   GST-FDPA, TR-FDPA, GTR-FDPA.
+//! - [`models`] — matrix-level arithmetic-behavior models Φ
+//!   (Algorithms 2, 4, 5).
+//! - [`isa`] — the instruction registry for the ten GPU architectures
+//!   (paper Tables 3–7).
+//! - [`interface`] — the black-box `MmaInterface` abstraction that CLFP
+//!   probes (a Rust model, a PJRT-loaded artifact, or a mystery model).
+//! - [`clfp`] — the closed-loop feature-probing framework (paper §3).
+//! - [`analysis`] — discrepancy (Table 8), error bounds (Table 9), risky
+//!   designs (Table 10), summation trees (Figure 2), rounding bias
+//!   (Figure 3).
+//! - [`coordinator`] — the tokio-based continuous-verification service.
+//! - [`runtime`] — PJRT CPU client wrapper that loads AOT artifacts
+//!   produced by `python/compile/aot.py` and exposes them as
+//!   `MmaInterface`s.
+
+pub mod analysis;
+pub mod clfp;
+pub mod coordinator;
+pub mod fixedpoint;
+pub mod gemm;
+pub mod formats;
+pub mod interface;
+pub mod isa;
+pub mod mitigations;
+pub mod models;
+pub mod ops;
+pub mod runtime;
+pub mod util;
+
+pub use formats::{Format, RoundingMode};
+pub use interface::{BitMatrix, MmaInterface};
+pub use isa::{Arch, Instruction};

@@ -1,0 +1,312 @@
+//! `mma-sim` — command-line front end for the bit-accurate MMA simulator.
+//!
+//! Subcommands:
+//!
+//! - `list`                      — registry of modeled instructions
+//! - `simulate`                  — run one MMA on a chosen instruction
+//! - `table <1..10|all>`         — regenerate the paper's tables
+//! - `figure <2|3>`              — regenerate the paper's figures
+//! - `probe`                     — CLFP closed loop against a model or artifact
+//! - `validate`                  — randomized cross-validation vs PJRT artifacts
+//! - `serve`                     — run the continuous-verification coordinator
+//!
+//! The argument parser is hand-rolled: the offline image ships no clap.
+
+use std::sync::Arc;
+
+use anyhow::{anyhow, bail, Result};
+
+use mma_sim::analysis::{bias, discrepancy, error_bounds, risky, tables};
+use mma_sim::clfp::{self, ClfpConfig};
+use mma_sim::coordinator::{Coordinator, VerifyPair};
+use mma_sim::interface::MmaInterface;
+use mma_sim::isa::{self, Arch};
+use mma_sim::runtime::{artifacts_dir, model_for_artifact, read_manifest, Runtime};
+use mma_sim::util::Rng;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = dispatch(&args) {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn flag(args: &[String], name: &str) -> Option<String> {
+    args.iter()
+        .position(|a| a == name)
+        .and_then(|i| args.get(i + 1).cloned())
+}
+
+fn has(args: &[String], name: &str) -> bool {
+    args.iter().any(|a| a == name)
+}
+
+fn dispatch(args: &[String]) -> Result<()> {
+    match args.first().map(String::as_str) {
+        Some("list") => cmd_list(),
+        Some("simulate") => cmd_simulate(args),
+        Some("table") => cmd_table(args),
+        Some("figure") => cmd_figure(args),
+        Some("probe") => cmd_probe(args),
+        Some("validate") => cmd_validate(args),
+        Some("serve") => cmd_serve(args),
+        Some("help") | None => {
+            print_help();
+            Ok(())
+        }
+        Some(other) => bail!("unknown subcommand {other}; try `mma-sim help`"),
+    }
+}
+
+fn print_help() {
+    println!(
+        "mma-sim — bit-accurate reference models of GPU matrix units\n\n\
+         USAGE: mma-sim <subcommand> [options]\n\n\
+         SUBCOMMANDS\n\
+         \x20 list                               list modeled instructions\n\
+         \x20 simulate --arch A --instr FRAG     run a random MMA and print d00 vs FP64\n\
+         \x20 table <1..10|all>                  regenerate a paper table\n\
+         \x20 figure <2|3> [--mmas N]            regenerate a paper figure\n\
+         \x20 probe --arch A --instr FRAG        CLFP closed loop on a model\n\
+         \x20 probe --artifact NAME              CLFP closed loop on a PJRT artifact\n\
+         \x20 validate [--tests N]               Rust models vs PJRT artifacts\n\
+         \x20 serve [--workers N] [--jobs N] [--batch N] [--pjrt]\n\
+         \x20                                    run a verification campaign"
+    );
+}
+
+fn cmd_list() -> Result<()> {
+    println!(
+        "{:<14} {:<34} {:<12} {:<10} {}",
+        "arch", "instruction", "shape", "class", "model"
+    );
+    for i in isa::registry() {
+        println!(
+            "{:<14} {:<34} {:<12} {:<10} {}",
+            i.arch.target(),
+            i.name,
+            i.shape_str(),
+            i.class.name(),
+            i.spec.symbol()
+        );
+    }
+    Ok(())
+}
+
+fn find_instr(args: &[String]) -> Result<isa::Instruction> {
+    let arch = flag(args, "--arch")
+        .and_then(|a| Arch::parse(&a))
+        .ok_or_else(|| anyhow!("--arch required (e.g. hopper, gfx942)"))?;
+    let frag = flag(args, "--instr").unwrap_or_default();
+    isa::find(arch, &frag).ok_or_else(|| anyhow!("no instruction matching '{frag}' on {arch:?}"))
+}
+
+fn cmd_simulate(args: &[String]) -> Result<()> {
+    let instr = find_instr(args)?;
+    let seed = flag(args, "--seed").map(|s| s.parse()).transpose()?.unwrap_or(42u64);
+    let model = instr.model();
+    let mut rng = Rng::new(seed);
+    let (a, b, c) = clfp::random_inputs(&mut rng, &model, 0);
+    let d = model.execute(&a, &b, &c, None);
+    let (m, n, k) = model.shape();
+    let fmts = instr.formats;
+    println!("instruction: {} ({})", model.name(), instr.shape_str());
+    for i in 0..m.min(2) {
+        for j in 0..n.min(2) {
+            let mut real = fmts.c.to_f64(c.get(i, j));
+            for kk in 0..k {
+                real += fmts.a.to_f64(a.get(i, kk)) * fmts.b.to_f64(b.get(kk, j));
+            }
+            let got = fmts.d.to_f64(d.get(i, j));
+            println!(
+                "d[{i}][{j}] = {got:<24} (bits {:#010x})   fp64 ref {real:<24} diff {:+.3e}",
+                d.get(i, j),
+                got - real
+            );
+        }
+    }
+    Ok(())
+}
+
+fn cmd_table(args: &[String]) -> Result<()> {
+    let which = args.get(1).map(String::as_str).unwrap_or("all");
+    let samples = flag(args, "--samples").map(|s| s.parse()).transpose()?.unwrap_or(100usize);
+    let print = |n: u32| -> Result<()> {
+        println!("── Table {n} {}", "─".repeat(50));
+        match n {
+            1 => println!("{}", tables::render_table1()),
+            2 => println!("{}", tables::render_table2()),
+            3 => println!("{}", tables::render_table3()),
+            4 => println!("{}", tables::render_table4()),
+            5 => println!("{}", tables::render_table5()),
+            6 => println!("{}", tables::render_table6()),
+            7 => println!("{}", tables::render_table7()),
+            8 => println!("{}", discrepancy::render_table8()),
+            9 => println!("{}", error_bounds::render_table9(samples)),
+            10 => println!("{}", risky::render_table10()),
+            _ => bail!("tables are numbered 1..10"),
+        }
+        Ok(())
+    };
+    if which == "all" {
+        for n in 1..=10 {
+            print(n)?;
+        }
+    } else {
+        print(which.parse()?)?;
+    }
+    Ok(())
+}
+
+fn cmd_figure(args: &[String]) -> Result<()> {
+    match args.get(1).map(String::as_str) {
+        Some("2") => {
+            // the Figure 2 exemplars: chain, pairwise, non-swamped, swamped
+            let cases = [
+                (Arch::Cdna1, "16x16x4_f32", "Figure 2(a) chain of binary summation"),
+                (Arch::Cdna2, "32x32x8_bf16_1k", "Figure 2(b) pairwise summation"),
+                (Arch::Cdna1, "32x32x4_bf16", "Figure 2(c) non-swamped fused"),
+                (Arch::Volta, "HMMA.884.F32", "Figure 2(d) swamped 5-term fused"),
+            ];
+            for (arch, frag, caption) in cases {
+                let Some(instr) = isa::find(arch, frag) else {
+                    continue;
+                };
+                let model = instr.model();
+                let sig = clfp::tree_signature(&model);
+                println!("{caption}: {} {}", arch.target(), instr.name);
+                println!("{}", sig.render());
+            }
+            Ok(())
+        }
+        Some("3") => {
+            let mmas = flag(args, "--mmas").map(|s| s.parse()).transpose()?.unwrap_or(40usize);
+            let r = bias::bias_experiment(mmas, 0xF16);
+            println!("{}", bias::render(&r));
+            Ok(())
+        }
+        _ => bail!("figure <2|3>"),
+    }
+}
+
+fn cmd_probe(args: &[String]) -> Result<()> {
+    let tests = flag(args, "--tests").map(|s| s.parse()).transpose()?.unwrap_or(500usize);
+    let cfg = ClfpConfig { validate_tests: tests, seed: 0xC1F9 };
+    let iface: Box<dyn MmaInterface> = if let Some(name) = flag(args, "--artifact") {
+        let dir = artifacts_dir();
+        let rt = Runtime::new(&dir)?;
+        let meta = read_manifest(&dir)?
+            .into_iter()
+            .find(|m| m.name == name)
+            .ok_or_else(|| anyhow!("artifact {name} not in manifest"))?;
+        Box::new(rt.load_mma(&meta)?)
+    } else {
+        Box::new(find_instr(args)?.model())
+    };
+    println!("probing {} …", iface.name());
+    let inf = clfp::infer(iface.as_ref(), cfg);
+    println!("step 1  independence: {}", inf.independent);
+    println!("step 2  d(i,j)/v matrix:\n{}", inf.tree.render());
+    println!(
+        "step 3  probes run: {}, surviving candidates: {}",
+        inf.probes_run,
+        inf.survivors.len()
+    );
+    for s in inf.survivors.iter().take(5) {
+        println!("        {s:?}");
+    }
+    println!("step 4  revisions: {}", inf.revisions);
+    match inf.inferred {
+        Some(spec) => println!(
+            "inferred model: {:?} — validated bit-exact on {} randomized tests",
+            spec, inf.validated
+        ),
+        None => println!("no candidate survived validation (novel arithmetic behavior)"),
+    }
+    Ok(())
+}
+
+fn cmd_validate(args: &[String]) -> Result<()> {
+    let tests = flag(args, "--tests").map(|s| s.parse()).transpose()?.unwrap_or(200usize);
+    let dir = artifacts_dir();
+    let rt = Runtime::new(&dir)?;
+    println!("PJRT platform: {}", rt.platform());
+    let mut rng = Rng::new(0xBEEF);
+    let mut total = 0usize;
+    let mut failures = 0usize;
+    for meta in read_manifest(&dir)? {
+        if meta.kind != "tfdpa" && meta.kind != "ftz" {
+            continue;
+        }
+        let pjrt = rt.load_mma(&meta)?;
+        let model = model_for_artifact(&meta)?;
+        let mut mismatch = 0usize;
+        for t in 0..tests {
+            let (a, b, c) = clfp::random_inputs(&mut rng, &model, t);
+            let want = model.execute(&a, &b, &c, None);
+            let got = pjrt.execute(&a, &b, &c, None);
+            if want.data != got.data {
+                mismatch += 1;
+            }
+        }
+        total += tests;
+        failures += mismatch;
+        println!(
+            "{:<24} {:>6} tests  {:>4} mismatches {}",
+            meta.name,
+            tests,
+            mismatch,
+            if mismatch == 0 { "ok" } else { "FAIL" }
+        );
+    }
+    println!("total: {total} tests, {failures} mismatches");
+    if failures > 0 {
+        bail!("cross-validation failed");
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &[String]) -> Result<()> {
+    let workers = flag(args, "--workers").map(|s| s.parse()).transpose()?.unwrap_or(4usize);
+    let jobs = flag(args, "--jobs").map(|s| s.parse()).transpose()?.unwrap_or(16usize);
+    let batch = flag(args, "--batch").map(|s| s.parse()).transpose()?.unwrap_or(100usize);
+
+    let mut pairs: Vec<VerifyPair> = Vec::new();
+    if has(args, "--pjrt") {
+        // verify PJRT artifacts against golden Rust models
+        let dir = artifacts_dir();
+        let rt = Runtime::new(&dir)?;
+        for meta in read_manifest(&dir)? {
+            if meta.kind != "tfdpa" && meta.kind != "ftz" {
+                continue;
+            }
+            pairs.push(VerifyPair {
+                name: meta.name.clone(),
+                dut: Arc::new(rt.load_mma(&meta)?),
+                golden: Arc::new(model_for_artifact(&meta)?),
+            });
+        }
+    } else {
+        // self-verification campaign over the instruction registry
+        for i in isa::registry() {
+            if i.m * i.n > 1024 {
+                continue; // keep the demo campaign snappy
+            }
+            pairs.push(VerifyPair {
+                name: format!("{} {}", i.arch.target(), i.name),
+                dut: Arc::new(i.model()),
+                golden: Arc::new(i.model()),
+            });
+        }
+    }
+    println!(
+        "coordinator: {} pairs, {workers} workers, {jobs} jobs x {batch} MMAs each",
+        pairs.len()
+    );
+    let coord = Coordinator::new(pairs, workers, workers * 2);
+    let report = coord.run_campaign(jobs, batch, 0x5EED);
+    println!("{}", report.render());
+    coord.shutdown();
+    Ok(())
+}

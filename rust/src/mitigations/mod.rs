@@ -1,0 +1,290 @@
+//! Software workarounds and mitigation methods (paper §6.3), as
+//! composable [`MmaInterface`] wrappers.
+//!
+//! - [`CudaCoreAccumulate`] — the DeepSeek FP8 workaround: run the MMAU
+//!   over K-intervals with `C = 0` and accumulate the partial results in
+//!   full FP32 on the general compute units (one IEEE RNE add per
+//!   interval). Restores precision lost to small-F fused summation.
+//! - [`ZeroCSplit`] — the CDNA3 bias mitigation: keep the accumulator off
+//!   the Matrix Core entirely (`C = 0` on the MMAU, one FP32 add outside),
+//!   removing the asymmetric RD rounding of `c`.
+//! - [`cast_inputs`] — the PyTorch CDNA2 workaround: run the same unit in
+//!   BF16 (trading significand bits for exponent range so subnormal FP16
+//!   operands survive).
+//!
+//! Each wrapper is itself an `MmaInterface`, so the coordinator, CLFP, and
+//! the analysis stack can treat mitigated units exactly like raw ones —
+//! including probing them to verify the mitigation's arithmetic.
+
+use crate::formats::Format;
+use crate::interface::{BitMatrix, MmaFormats, MmaInterface, Scales};
+use crate::models::{MmaModel, ModelSpec};
+use crate::ops::fma;
+
+/// DeepSeek-style split-K accumulation: the wrapped MMAU computes partial
+/// dot products over `interval`-sized K chunks with `C = 0`; partials and
+/// the original accumulator are combined with FP32 adds (standard RNE,
+/// realized as `FMA(partial, 1.0, acc)`).
+pub struct CudaCoreAccumulate {
+    pub inner: MmaModel,
+    pub interval: usize,
+}
+
+impl CudaCoreAccumulate {
+    pub fn new(inner: MmaModel, interval: usize) -> Self {
+        assert!(interval > 0 && inner.k % interval == 0, "interval must divide K");
+        assert_eq!(inner.formats.d, Format::Fp32, "FP32 accumulation target");
+        Self { inner, interval }
+    }
+}
+
+impl MmaInterface for CudaCoreAccumulate {
+    fn shape(&self) -> (usize, usize, usize) {
+        (self.inner.m, self.inner.n, self.inner.k)
+    }
+
+    fn formats(&self) -> MmaFormats {
+        self.inner.formats
+    }
+
+    fn execute(&self, a: &BitMatrix, b: &BitMatrix, c: &BitMatrix, _scales: Scales) -> BitMatrix {
+        let (m, n, k) = self.shape();
+        let one = (1.0f32).to_bits() as u64;
+        let mut d = c.clone();
+        d.fmt = self.inner.formats.d;
+        // chunked MMAU passes with C = 0, FP32 accumulation outside
+        let chunk_model = MmaModel::new(
+            format!("{}(split)", self.inner.name),
+            (m, n, self.interval),
+            self.inner.formats,
+            self.inner.spec,
+        );
+        for lo in (0..k).step_by(self.interval) {
+            let mut ac = BitMatrix::zeros(m, self.interval, a.fmt);
+            let mut bc = BitMatrix::zeros(self.interval, n, b.fmt);
+            for i in 0..m {
+                for kk in 0..self.interval {
+                    ac.set(i, kk, a.get(i, lo + kk));
+                }
+            }
+            for kk in 0..self.interval {
+                for j in 0..n {
+                    bc.set(kk, j, b.get(lo + kk, j));
+                }
+            }
+            let zero_c = BitMatrix::zeros(m, n, self.inner.formats.c);
+            let partial = chunk_model.execute(&ac, &bc, &zero_c, None);
+            for idx in 0..m * n {
+                d.data[idx] = fma(Format::Fp32, partial.data[idx], one, d.data[idx]);
+            }
+        }
+        d
+    }
+
+    fn name(&self) -> String {
+        format!("{}+cuda-core-acc({})", self.inner.name, self.interval)
+    }
+}
+
+/// CDNA3 bias mitigation: `D = MMA(A, B, 0) + C` with the add in FP32 on
+/// the general compute units, keeping `c` away from the RD rounded sums.
+pub struct ZeroCSplit {
+    pub inner: MmaModel,
+}
+
+impl MmaInterface for ZeroCSplit {
+    fn shape(&self) -> (usize, usize, usize) {
+        (self.inner.m, self.inner.n, self.inner.k)
+    }
+
+    fn formats(&self) -> MmaFormats {
+        self.inner.formats
+    }
+
+    fn execute(&self, a: &BitMatrix, b: &BitMatrix, c: &BitMatrix, scales: Scales) -> BitMatrix {
+        let zero_c = BitMatrix::zeros(c.rows, c.cols, self.inner.formats.c);
+        let mut d = self.inner.execute(a, b, &zero_c, scales);
+        let one = (1.0f32).to_bits() as u64;
+        for idx in 0..d.data.len() {
+            d.data[idx] = fma(Format::Fp32, c.data[idx], one, d.data[idx]);
+        }
+        d
+    }
+
+    fn name(&self) -> String {
+        format!("{}+zero-c-split", self.inner.name)
+    }
+}
+
+/// The PyTorch CDNA2 workaround: rebuild the unit's model with BF16
+/// operands (same Φ, wider exponent range).
+pub fn cast_inputs(model: &MmaModel, fmt: Format) -> MmaModel {
+    MmaModel::new(
+        format!("{}→{}", model.name, fmt.name()),
+        (model.m, model.n, model.k),
+        MmaFormats { a: fmt, b: fmt, c: model.formats.c, d: model.formats.d },
+        model.spec,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::Rho;
+    use crate::util::Rng;
+
+    fn fp8_hopper(k: usize) -> MmaModel {
+        MmaModel::new(
+            "sm90 QGMMA",
+            (4, 4, k),
+            MmaFormats {
+                a: Format::Fp8E4M3,
+                b: Format::Fp8E4M3,
+                c: Format::Fp32,
+                d: Format::Fp32,
+            },
+            ModelSpec::TFdpa { l_max: 32, f: 13, rho: Rho::RzE8M13 },
+        )
+    }
+
+    fn exact_err(
+        iface: &dyn MmaInterface,
+        a: &BitMatrix,
+        b: &BitMatrix,
+        c: &BitMatrix,
+    ) -> f64 {
+        let (m, n, k) = iface.shape();
+        let d = iface.execute(a, b, c, None);
+        let mut worst: f64 = 0.0;
+        for i in 0..m {
+            for j in 0..n {
+                let mut exact = c.fmt.to_f64(c.get(i, j));
+                for kk in 0..k {
+                    exact += a.fmt.to_f64(a.get(i, kk)) * b.fmt.to_f64(b.get(kk, j));
+                }
+                let got = Format::Fp32.to_f64(d.get(i, j));
+                if exact != 0.0 {
+                    worst = worst.max(((got - exact) / exact).abs());
+                }
+            }
+        }
+        worst
+    }
+
+    #[test]
+    fn deepseek_fp8_workaround_restores_precision() {
+        // Hopper FP8 (F=13) raw vs split-K FP32 accumulation: the relative
+        // error over a long positive dot product must drop substantially.
+        let k = 32;
+        let raw = fp8_hopper(k);
+        let mitigated = CudaCoreAccumulate::new(fp8_hopper(k), 8);
+        let mut rng = Rng::new(0xD5);
+        let mut raw_worst: f64 = 0.0;
+        let mut fix_worst: f64 = 0.0;
+        for _ in 0..40 {
+            let mut a = BitMatrix::zeros(4, k, Format::Fp8E4M3);
+            let mut b = BitMatrix::zeros(k, 4, Format::Fp8E4M3);
+            let c = BitMatrix::zeros(4, 4, Format::Fp32);
+            for v in a.data.iter_mut() {
+                *v = Format::Fp8E4M3.from_f64(rng.uniform() * 4.0 + 0.5);
+            }
+            for v in b.data.iter_mut() {
+                *v = Format::Fp8E4M3.from_f64(rng.uniform() * 4.0 + 0.5);
+            }
+            raw_worst = raw_worst.max(exact_err(&raw, &a, &b, &c));
+            fix_worst = fix_worst.max(exact_err(&mitigated, &a, &b, &c));
+        }
+        assert!(
+            fix_worst < raw_worst / 3.0,
+            "split-K accumulation must cut worst error substantially: raw {raw_worst:.2e} vs fixed {fix_worst:.2e}"
+        );
+    }
+
+    #[test]
+    fn zero_c_split_removes_cdna3_c_bias() {
+        // Figure-3 regime: large A·B, small negative C. The RD pull on c
+        // disappears when c is accumulated outside the Matrix Core.
+        let inner = || crate::analysis::bias::cdna3_fp16_model();
+        let raw = inner();
+        let fixed = ZeroCSplit { inner: inner() };
+        let mut rng = Rng::new(0xF1B);
+        let (mut dev_raw, mut dev_fix) = (0.0f64, 0.0f64);
+        let mut samples = 0usize;
+        for _ in 0..12 {
+            let mut a = BitMatrix::zeros(32, 8, Format::Fp16);
+            let mut b = BitMatrix::zeros(8, 32, Format::Fp16);
+            let mut c = BitMatrix::zeros(32, 32, Format::Fp32);
+            for v in a.data.iter_mut() {
+                *v = Format::Fp16.from_f64(1000.0 * rng.normal());
+            }
+            for v in b.data.iter_mut() {
+                *v = Format::Fp16.from_f64(1000.0 * rng.normal());
+            }
+            for v in c.data.iter_mut() {
+                *v = Format::Fp32.from_f64(rng.normal());
+            }
+            let d_raw = raw.execute(&a, &b, &c, None);
+            let d_fix = fixed.execute(&a, &b, &c, None);
+            for i in 0..32 {
+                for j in 0..32 {
+                    let mut real = Format::Fp32.to_f64(c.get(i, j));
+                    for kk in 0..8 {
+                        real += Format::Fp16.to_f64(a.get(i, kk))
+                            * Format::Fp16.to_f64(b.get(kk, j));
+                    }
+                    dev_raw += Format::Fp32.to_f64(d_raw.get(i, j)) - real;
+                    dev_fix += Format::Fp32.to_f64(d_fix.get(i, j)) - real;
+                    samples += 1;
+                }
+            }
+        }
+        let (m_raw, m_fix) = (dev_raw / samples as f64, dev_fix / samples as f64);
+        assert!(m_raw < 0.0, "raw CDNA3 must show negative bias: {m_raw:.3e}");
+        assert!(
+            m_fix.abs() < m_raw.abs(),
+            "zero-C split must reduce the bias: raw {m_raw:.3e} vs fixed {m_fix:.3e}"
+        );
+    }
+
+    #[test]
+    fn bf16_cast_keeps_subnormal_fp16_information() {
+        // CDNA2 FP16 flushes subnormal operands; the BF16 cast of the same
+        // values survives (§2.2 / §6.3).
+        let fp16 = MmaModel::new(
+            "gfx90a fp16",
+            (2, 2, 4),
+            MmaFormats { a: Format::Fp16, b: Format::Fp16, c: Format::Fp32, d: Format::Fp32 },
+            ModelSpec::FtzAddMul { p: 4 },
+        );
+        let bf16 = cast_inputs(&fp16, Format::Bf16);
+        let x = 3.0e-5; // FP16 subnormal, BF16 normal
+        let a = BitMatrix::splat(2, 4, Format::Fp16, x);
+        let b = BitMatrix::splat(4, 2, Format::Fp16, 1.0);
+        let c = BitMatrix::zeros(2, 2, Format::Fp32);
+        let d = fp16.execute(&a, &b, &c, None);
+        assert_eq!(Format::Fp32.to_f64(d.get(0, 0)), 0.0, "FP16 path flushes");
+        let ab = BitMatrix::splat(2, 4, Format::Bf16, x);
+        let bb = BitMatrix::splat(4, 2, Format::Bf16, 1.0);
+        let d = bf16.execute(&ab, &bb, &c, None);
+        assert!(
+            Format::Fp32.to_f64(d.get(0, 0)) > 0.0,
+            "BF16 cast preserves the signal"
+        );
+    }
+
+    #[test]
+    fn mitigated_units_are_probeable() {
+        // A mitigated unit is still a black box CLFP can interrogate:
+        // step 1 independence must hold, and the split-K FP8 unit must NOT
+        // match the raw F=13 behavior anymore.
+        let mitigated = CudaCoreAccumulate::new(fp8_hopper(32), 8);
+        let mut rng = Rng::new(5);
+        assert!(crate::clfp::check_independence(&mitigated, &mut rng));
+        let raw = fp8_hopper(32);
+        let pb = crate::clfp::ProbeBuilder::for_interface(&raw);
+        let battery = crate::clfp::probe_battery(&pb);
+        let raw_out = crate::clfp::run_battery(&raw, &pb, &battery);
+        let fix_out = crate::clfp::run_battery(&mitigated, &pb, &battery);
+        assert_ne!(raw_out, fix_out, "mitigation visibly changes the arithmetic");
+    }
+}

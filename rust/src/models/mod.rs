@@ -1,0 +1,311 @@
+//! Matrix-level arithmetic behavior models Φ (paper §4, Table 1).
+//!
+//! Every model decomposes the MMA into M×N independent dot-product-
+//! accumulate operations (paper Step 1) and realizes each one with a
+//! specific composition of elementary operations:
+//!
+//! - [`ModelSpec::FtzAddMul`] — Algorithm 2 (AMD CDNA2 BF16/FP16):
+//!   pairwise FTZ summation and sequential accumulation.
+//! - [`ModelSpec::FmaChain`] — Algorithm 4 (FP64/FP32 everywhere):
+//!   a chain of standard FMAs.
+//! - The FDPA family — Algorithm 5: chained fused dot-product-add with
+//!   `L = min(K, L_max)`, in six variants (E/T/ST/GST/TR/GTR).
+
+use crate::formats::{Format, Rho, RoundingMode};
+use crate::interface::{BitMatrix, MmaFormats, MmaInterface, ScaleSpec, Scales};
+use crate::ops::{
+    e_fdpa, fma, ftz_add, ftz_mul, flush_subnormal_input, gst_fdpa, gtr_fdpa, st_fdpa, t_fdpa,
+    tr_fdpa, GstFdpaCfg, GtrFdpaCfg, TFdpaCfg, TrFdpaCfg,
+};
+
+/// Model taxonomy (paper Table 1): which elementary operation composes the
+/// MMA, with its parameters.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ModelSpec {
+    /// Φ_FTZ-AddMul with pairing parameter `P ∈ {2, 4}`.
+    FtzAddMul { p: usize },
+    /// Φ_FMA: chain of standard FMAs.
+    FmaChain,
+    /// Φ_E-FDPA with vector length `L`.
+    EFdpa { l: usize },
+    /// Φ_T-FDPA with `L_max`, summation precision `F`, conversion ρ.
+    TFdpa { l_max: usize, f: i32, rho: Rho },
+    /// Φ_ST-FDPA (T-FDPA + per-block E8M0 scales).
+    StFdpa { l_max: usize, f: i32, rho: Rho, kblock: usize },
+    /// Φ_GST-FDPA with group size `G` and scale block size.
+    GstFdpa { l: usize, g: usize, f: i32, rho: Rho, kblock: usize, scale_fmt: Format },
+    /// Φ_TR-FDPA with `F`, `F2` (internal RD).
+    TrFdpa { l_max: usize, f: i32, f2: i32 },
+    /// Φ_GTR-FDPA with `F`, `F2` (even/odd groups, internal RD).
+    GtrFdpa { l_max: usize, f: i32, f2: i32 },
+}
+
+impl ModelSpec {
+    /// Category name (paper Table 1).
+    pub const fn category(&self) -> &'static str {
+        match self {
+            ModelSpec::FtzAddMul { .. } => "AddMul-based",
+            ModelSpec::FmaChain => "FMA-based",
+            _ => "FDPA-based",
+        }
+    }
+
+    /// Model symbol as printed in the paper.
+    pub const fn symbol(&self) -> &'static str {
+        match self {
+            ModelSpec::FtzAddMul { .. } => "Φ_FTZ-AddMul",
+            ModelSpec::FmaChain => "Φ_FMA",
+            ModelSpec::EFdpa { .. } => "Φ_E-FDPA",
+            ModelSpec::TFdpa { .. } => "Φ_T-FDPA",
+            ModelSpec::StFdpa { .. } => "Φ_ST-FDPA",
+            ModelSpec::GstFdpa { .. } => "Φ_GST-FDPA",
+            ModelSpec::TrFdpa { .. } => "Φ_TR-FDPA",
+            ModelSpec::GtrFdpa { .. } => "Φ_GTR-FDPA",
+        }
+    }
+
+    /// Whether this model is numerically symmetric:
+    /// `Φ(-A, B, -C) = -Φ(A, B, C)` (paper §6.2.4 — TR/GTR are not).
+    pub const fn is_symmetric(&self) -> bool {
+        !matches!(self, ModelSpec::TrFdpa { .. } | ModelSpec::GtrFdpa { .. })
+    }
+}
+
+/// An executable Φ: a [`ModelSpec`] bound to shapes and operand formats.
+#[derive(Clone, Debug)]
+pub struct MmaModel {
+    pub name: String,
+    pub m: usize,
+    pub n: usize,
+    pub k: usize,
+    pub formats: MmaFormats,
+    pub spec: ModelSpec,
+}
+
+impl MmaModel {
+    pub fn new(
+        name: impl Into<String>,
+        (m, n, k): (usize, usize, usize),
+        formats: MmaFormats,
+        spec: ModelSpec,
+    ) -> Self {
+        Self { name: name.into(), m, n, k, formats, spec }
+    }
+
+    /// The paper's Equation 4: one dot-product-accumulate
+    /// `d = c + Σ a_k·b_k` over bit patterns.
+    ///
+    /// `sa`/`sb` carry the per-block scale patterns for ST/GST models
+    /// (one entry per `kblock` elements), empty otherwise.
+    pub fn dpa(&self, a: &[u64], b: &[u64], c: u64, sa: &[u64], sb: &[u64]) -> u64 {
+        debug_assert_eq!(a.len(), self.k);
+        debug_assert_eq!(b.len(), self.k);
+        let fa = self.formats.a;
+        match self.spec {
+            ModelSpec::FmaChain => {
+                let fmt = self.formats.a;
+                let mut d = c;
+                for i in 0..self.k {
+                    d = fma(fmt, a[i], b[i], d);
+                }
+                d
+            }
+            ModelSpec::FtzAddMul { p } => self.dpa_ftz(a, b, c, p),
+            ModelSpec::EFdpa { l } => {
+                let mut d = c;
+                for chunk in 0..self.k.div_ceil(l) {
+                    let lo = chunk * l;
+                    let hi = (lo + l).min(self.k);
+                    d = e_fdpa(fa, &a[lo..hi], &b[lo..hi], d);
+                }
+                d
+            }
+            ModelSpec::TFdpa { l_max, f, rho } => {
+                let l = l_max.min(self.k);
+                let cfg = TFdpaCfg { f, rho };
+                let mut d = c;
+                for chunk in 0..self.k.div_ceil(l) {
+                    let lo = chunk * l;
+                    let hi = (lo + l).min(self.k);
+                    d = t_fdpa(fa, &a[lo..hi], &b[lo..hi], d, cfg);
+                }
+                d
+            }
+            ModelSpec::StFdpa { l_max, f, rho, kblock } => {
+                let l = l_max.min(self.k);
+                debug_assert_eq!(l % kblock, 0, "ST-FDPA vector must cover whole blocks");
+                let cfg = TFdpaCfg { f, rho };
+                let mut d = c;
+                for chunk in 0..self.k.div_ceil(l) {
+                    let lo = chunk * l;
+                    let hi = (lo + l).min(self.k);
+                    // one scale per kblock: ST-FDPA takes a single (α, β)
+                    // pair per call, so L == kblock on real instructions.
+                    let blk = lo / kblock;
+                    d = st_fdpa(fa, &a[lo..hi], &b[lo..hi], d, sa[blk], sb[blk], cfg);
+                }
+                d
+            }
+            ModelSpec::GstFdpa { l, g, f, rho, kblock, scale_fmt } => {
+                let cfg = GstFdpaCfg { g, kblock, f, rho, scale_fmt };
+                let l = l.min(self.k);
+                let mut d = c;
+                for chunk in 0..self.k.div_ceil(l) {
+                    let lo = chunk * l;
+                    let hi = (lo + l).min(self.k);
+                    let blo = lo / kblock;
+                    let bhi = hi / kblock;
+                    d = gst_fdpa(fa, &a[lo..hi], &b[lo..hi], d, &sa[blo..bhi], &sb[blo..bhi], cfg);
+                }
+                d
+            }
+            ModelSpec::TrFdpa { l_max, f, f2 } => {
+                let l = l_max.min(self.k);
+                let cfg = TrFdpaCfg { f, f2, inner_mode: RoundingMode::Down };
+                let mut d = c;
+                for chunk in 0..self.k.div_ceil(l) {
+                    let lo = chunk * l;
+                    let hi = (lo + l).min(self.k);
+                    d = tr_fdpa(fa, &a[lo..hi], &b[lo..hi], d, cfg);
+                }
+                d
+            }
+            ModelSpec::GtrFdpa { l_max, f, f2 } => {
+                let l = l_max.min(self.k);
+                let cfg = GtrFdpaCfg { f, f2, inner_mode: RoundingMode::Down };
+                let mut d = c;
+                for chunk in 0..self.k.div_ceil(l) {
+                    let lo = chunk * l;
+                    let hi = (lo + l).min(self.k);
+                    d = gtr_fdpa(fa, &a[lo..hi], &b[lo..hi], d, cfg);
+                }
+                d
+            }
+        }
+    }
+
+    /// Algorithm 2: FTZ-AddMul dot-product-accumulate.
+    fn dpa_ftz(&self, a: &[u64], b: &[u64], c: u64, p: usize) -> u64 {
+        let fmt = self.formats.a;
+        // input subnormal flushing (A, B, and C)
+        let mut d = flush_subnormal_input(Format::Fp32, c);
+        let mut k = 0;
+        while k < self.k {
+            let hi = (k + p).min(self.k);
+            let prods: Vec<u64> = (k..hi)
+                .map(|i| {
+                    ftz_mul(
+                        fmt,
+                        flush_subnormal_input(fmt, a[i]),
+                        flush_subnormal_input(fmt, b[i]),
+                    )
+                })
+                .collect();
+            let s = match prods.len() {
+                1 => prods[0],
+                2 => ftz_add(prods[0], prods[1]),
+                4 => {
+                    let s01 = ftz_add(prods[0], prods[1]);
+                    let s23 = ftz_add(prods[2], prods[3]);
+                    ftz_add(s01, s23)
+                }
+                n => {
+                    // ragged tail: pairwise left-to-right
+                    let mut s = ftz_add(prods[0], prods[1]);
+                    for &q in &prods[2..n] {
+                        s = ftz_add(s, q);
+                    }
+                    s
+                }
+            };
+            d = ftz_add(d, s);
+            k = hi;
+        }
+        d
+    }
+}
+
+impl MmaInterface for MmaModel {
+    fn shape(&self) -> (usize, usize, usize) {
+        (self.m, self.n, self.k)
+    }
+
+    fn formats(&self) -> MmaFormats {
+        self.formats
+    }
+
+    fn scale_spec(&self) -> Option<ScaleSpec> {
+        match self.spec {
+            ModelSpec::StFdpa { kblock, .. } => {
+                Some(ScaleSpec { fmt: Format::E8M0, kblock })
+            }
+            ModelSpec::GstFdpa { kblock, scale_fmt, .. } => {
+                Some(ScaleSpec { fmt: scale_fmt, kblock })
+            }
+            _ => None,
+        }
+    }
+
+    fn execute(&self, a: &BitMatrix, b: &BitMatrix, c: &BitMatrix, scales: Scales) -> BitMatrix {
+        assert_eq!((a.rows, a.cols), (self.m, self.k), "A shape");
+        assert_eq!((b.rows, b.cols), (self.k, self.n), "B shape");
+        assert_eq!((c.rows, c.cols), (self.m, self.n), "C shape");
+        let mut d = BitMatrix::zeros(self.m, self.n, self.formats.d);
+        // Pre-gather scale rows/columns (unit scales when none supplied).
+        let scale_data: Option<(Vec<Vec<u64>>, Vec<Vec<u64>>)> =
+            self.scale_spec().map(|spec| match scales {
+                Some((am, bm)) => {
+                    assert_eq!((am.rows, am.cols), (self.m, self.k / spec.kblock), "A scales");
+                    assert_eq!((bm.rows, bm.cols), (self.k / spec.kblock, self.n), "B scales");
+                    (
+                        (0..self.m).map(|i| am.row(i).to_vec()).collect(),
+                        (0..self.n).map(|j| bm.col(j)).collect(),
+                    )
+                }
+                None => {
+                    let unit = match spec.fmt {
+                        Format::E8M0 => 127u64,  // 2^0
+                        Format::Ue4M3 => 0x38u64, // 1.0
+                        _ => unreachable!(),
+                    };
+                    let nblk = self.k / spec.kblock;
+                    (vec![vec![unit; nblk]; self.m], vec![vec![unit; nblk]; self.n])
+                }
+            });
+        let mut bcol = vec![0u64; self.k];
+        for j in 0..self.n {
+            for (r, slot) in bcol.iter_mut().enumerate() {
+                *slot = b.get(r, j);
+            }
+            for i in 0..self.m {
+                let (sa, sb): (&[u64], &[u64]) = match &scale_data {
+                    Some((ra, cb)) => (ra[i].as_slice(), cb[j].as_slice()),
+                    None => (&[], &[]),
+                };
+                let out = self.dpa(a.row(i), &bcol, c.get(i, j), sa, sb);
+                d.set(i, j, out);
+            }
+        }
+        d
+    }
+
+    fn name(&self) -> String {
+        self.name.clone()
+    }
+
+    fn probe(&self, a_row: &[u64], b_col: &[u64], c00: u64) -> u64 {
+        // direct dot-product evaluation (unit scales where applicable)
+        match self.scale_spec() {
+            None => self.dpa(a_row, b_col, c00, &[], &[]),
+            Some(spec) => {
+                let unit = match spec.fmt {
+                    Format::E8M0 => 127u64,
+                    Format::Ue4M3 => 0x38u64,
+                    _ => unreachable!(),
+                };
+                let blocks = vec![unit; self.k / spec.kblock];
+                self.dpa(a_row, b_col, c00, &blocks, &blocks)
+            }
+        }
+    }
+}

@@ -1,0 +1,142 @@
+//! E-FDPA: exact fused dot-product-add (paper Algorithm 6).
+//!
+//! Used by BF16/FP16 MFMA instructions on AMD CDNA1. Computes
+//! `c + Σ a_k·b_k` as if with infinite precision (realized by a Kulisch
+//! accumulator) and rounds once to FP32 with RNE.
+
+use super::special::{special_pattern, NanStyle, SpecialOut};
+use super::{scan_specials, zero_result_negative};
+use crate::fixedpoint::Kulisch;
+use crate::formats::{Format, RoundingMode};
+
+/// Accumulator window: BF16 products span LSBs from `2^(−133−133−14)`
+/// up to `2^(127+127−14) = 2^240` (two maximum-exponent normals), with
+/// magnitudes reaching `2^257`; FP32 `c` reaches down to `2^-149`.
+/// LSB at −320 with 12 words (768 bits) covers bit positions −320…447
+/// plus carry/sign headroom.
+const LSB: i32 = -320;
+const WORDS: usize = 12;
+
+/// Exact FDPA: `RNE-FP32(c + Σ a_k b_k)` over bit patterns.
+///
+/// `in_fmt ∈ {BF16, FP16}`; `a`, `b` are the length-`L` vectors; `c` is an
+/// FP32 pattern.
+pub fn e_fdpa(in_fmt: Format, a: &[u64], b: &[u64], c_bits: u64) -> u64 {
+    debug_assert_eq!(a.len(), b.len());
+    let c = Format::Fp32.decode(c_bits);
+    let da: Vec<_> = a.iter().map(|&x| in_fmt.decode(x)).collect();
+    let db: Vec<_> = b.iter().map(|&x| in_fmt.decode(x)).collect();
+
+    match scan_specials(da.iter().copied().zip(db.iter().copied()), c) {
+        SpecialOut::None => {}
+        s => return special_pattern(s, Format::Fp32, NanStyle::Quiet),
+    }
+
+    let m = in_fmt.mant_bits() as i32;
+    let mut acc = Kulisch::<WORDS>::new(LSB);
+    for (x, y) in da.iter().zip(db.iter()) {
+        let mag = x.sig as u128 * y.sig as u128;
+        // product value = mag * 2^(ex + ey - 2m)
+        acc.add(x.sign != y.sign, mag, x.exp + y.exp - 2 * m);
+    }
+    acc.add(c.sign, c.sig as u128, c.exp - 23);
+
+    if acc.is_zero() {
+        let neg = zero_result_negative(
+            da.iter().zip(db.iter()).map(|(x, y)| x.sign != y.sign),
+            c.sign,
+        );
+        return if neg { 0x8000_0000 } else { 0 };
+    }
+    let (neg, mag, lsb) = acc.to_sign_mag();
+    Format::Fp32.encode(neg, mag, lsb, RoundingMode::NearestEven)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn f(fmt: Format, v: f64) -> u64 {
+        fmt.from_f64(v)
+    }
+
+    fn run_f32(in_fmt: Format, a: &[f64], b: &[f64], c: f64) -> f32 {
+        let ab: Vec<u64> = a.iter().map(|&x| f(in_fmt, x)).collect();
+        let bb: Vec<u64> = b.iter().map(|&x| f(in_fmt, x)).collect();
+        let out = e_fdpa(in_fmt, &ab, &bb, f(Format::Fp32, c));
+        f32::from_bits(out as u32)
+    }
+
+    #[test]
+    fn exact_small_dot() {
+        let d = run_f32(Format::Fp16, &[1.5, -2.0], &[2.0, 0.5], 0.25);
+        assert_eq!(d, 1.5 * 2.0 - 2.0 * 0.5 + 0.25);
+    }
+
+    #[test]
+    fn paper_section5_cdna1_fp16() {
+        // §5: FP16 E-FDPA (L=4) yields the exact result -0.875
+        let a = [-8192.0, -0.5, -0.25, -0.125];
+        let b = [1024.0, 1.0, 1.0, 1.0];
+        let d = run_f32(Format::Fp16, &a, &b, 2f64.powi(23));
+        assert_eq!(d, -0.875);
+    }
+
+    #[test]
+    fn infinite_precision_inside() {
+        // 2^30 + 2^-30 - 2^30 survives exactly (would vanish in f32 adds)
+        let d = run_f32(
+            Format::Bf16,
+            &[2f64.powi(15), 2f64.powi(-15), -(2f64.powi(15))],
+            &[2f64.powi(15), 2f64.powi(-15), 2f64.powi(15)],
+            0.0,
+        );
+        assert_eq!(d, 2f32.powi(-30));
+    }
+
+    #[test]
+    fn single_rounding_at_output() {
+        // exact sum 1 + 2^-24 rounds once: tie-to-even -> 1.0
+        let d = run_f32(Format::Fp16, &[1.0, 2f64.powi(-12)], &[1.0, 2f64.powi(-12)], 0.0);
+        assert_eq!(d, 1.0);
+        // 1 + 3*2^-25: not a tie at fp32; exact sum rounds to 1 + 2^-23
+        let d = run_f32(
+            Format::Fp16,
+            &[1.0, 2f64.powi(-12), 2f64.powi(-13)],
+            &[1.0, 2f64.powi(-12), 2f64.powi(-12)],
+            0.0,
+        );
+        assert_eq!(d, 1.0 + 2f32.powi(-23));
+    }
+
+    #[test]
+    fn subnormal_inputs_exact() {
+        // CDNA1 E-FDPA does NOT flush: min fp16 subnormal 2^-24 squared = 2^-48
+        let d = run_f32(Format::Fp16, &[2f64.powi(-24)], &[2f64.powi(-24)], 0.0);
+        assert_eq!(d, 2f32.powi(-48));
+    }
+
+    #[test]
+    fn cancellation_to_zero_is_positive() {
+        let d = run_f32(Format::Fp16, &[2.0, -2.0], &[3.0, 3.0], 0.0);
+        assert_eq!(d.to_bits(), 0);
+    }
+
+    #[test]
+    fn all_negative_zero_inputs_give_negative_zero() {
+        let a = [f(Format::Fp16, -0.0)];
+        let b = [f(Format::Fp16, 0.0)];
+        let out = e_fdpa(Format::Fp16, &a, &b, f(Format::Fp32, -0.0));
+        assert_eq!(out, 0x8000_0000);
+    }
+
+    #[test]
+    fn specials() {
+        let inf = f(Format::Fp16, f64::INFINITY);
+        let one = f(Format::Fp16, 1.0);
+        let out = e_fdpa(Format::Fp16, &[inf], &[one], 0);
+        assert_eq!(out, 0x7F80_0000);
+        let out = e_fdpa(Format::Fp16, &[inf, inf], &[one, f(Format::Fp16, -1.0)], 0);
+        assert_eq!(out, 0x7FC0_0000);
+    }
+}

@@ -1,0 +1,139 @@
+//! FTZ-Add and FTZ-Mul (paper Algorithm 1): the non-standard binary
+//! operations behind AMD CDNA2's FP16/BF16 MFMA instructions.
+//!
+//! `z = RNE-FP32(x ∘ y)`, with subnormal FP32 outputs flushed to a
+//! sign-preserved zero. Inputs are BF16/FP16/FP32; the host `f32`/`f64`
+//! arithmetic below realizes RNE exactly (products of ≤11-bit significands
+//! are exact in `f64`, and the final `f64 → f32` narrowing is a single
+//! correctly-rounded step because the `f64` intermediate is exact).
+
+use super::special::{canonical_nan, NanStyle};
+use crate::formats::Format;
+
+/// Flush a subnormal *input* to positive zero (paper Algorithm 2 line 1-3:
+/// CDNA2 flushes input subnormals to `+0.0` before multiplication).
+#[inline]
+pub fn flush_subnormal_input(fmt: Format, bits: u64) -> u64 {
+    let d = fmt.decode(bits);
+    if d.is_subnormal(fmt) && !d.is_zero() {
+        0 // +0.0
+    } else {
+        bits
+    }
+}
+
+#[inline]
+fn flush_output(z: f32) -> f32 {
+    if z != 0.0 && z.abs() < f32::MIN_POSITIVE {
+        // sign-preserved flush: z * 0.0
+        z * 0.0
+    } else {
+        z
+    }
+}
+
+#[inline]
+fn canon(z: f32) -> u64 {
+    if z.is_nan() {
+        canonical_nan(Format::Fp32, NanStyle::Quiet)
+    } else {
+        z.to_bits() as u64
+    }
+}
+
+/// FTZ-Add over FP32 bit patterns: `RNE-FP32(x + y)` then output flush.
+#[inline]
+pub fn ftz_add(x_bits: u64, y_bits: u64) -> u64 {
+    let x = f32::from_bits(x_bits as u32);
+    let y = f32::from_bits(y_bits as u32);
+    canon(flush_output(x + y))
+}
+
+/// FTZ-Mul over `fmt ∈ {BF16, FP16, FP32}` inputs, FP32 output.
+#[inline]
+pub fn ftz_mul(fmt: Format, x_bits: u64, y_bits: u64) -> u64 {
+    // Exact in f64 (≤ 24-bit significands, exponent range well inside f64),
+    // then one correctly-rounded narrowing to f32.
+    let x = fmt.to_f64(x_bits);
+    let y = fmt.to_f64(y_bits);
+    canon(flush_output((x * y) as f32))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn add_is_rne_fp32() {
+        let a = (1.0f32).to_bits() as u64;
+        let b = (2f32.powi(-24)).to_bits() as u64; // tie: rounds to even (1.0)
+        assert_eq!(ftz_add(a, b), (1.0f32).to_bits() as u64);
+    }
+
+    #[test]
+    fn add_flushes_subnormal_result() {
+        // 2^-126 - 2^-127 = 2^-127: subnormal -> flushed to +0
+        let a = (2f32.powi(-126)).to_bits() as u64;
+        let b = (-2f32.powi(-127)).to_bits() as u64;
+        let z = ftz_add(a, b);
+        assert_eq!(z, 0, "positive subnormal result flushes to +0");
+        // negative: -(2^-127) stays negative zero
+        let z = ftz_add(b, 0);
+        assert_eq!(z, (-0.0f32).to_bits() as u64, "sign-preserved flush");
+    }
+
+    #[test]
+    fn mul_fp16_inputs() {
+        let f = Format::Fp16;
+        let a = f.from_f64(1.5);
+        let b = f.from_f64(-2.0);
+        assert_eq!(ftz_mul(f, a, b), (-3.0f32).to_bits() as u64);
+    }
+
+    #[test]
+    fn mul_flushes_subnormal_product() {
+        let f = Format::Fp16;
+        // 2^-14 * 2^-14 * ... -> need product < 2^-126: fp16 min normal 2^-14;
+        // min subnormal 2^-24: 2^-24 * 2^-24 = 2^-48 (normal). FP16 products
+        // cannot be FP32-subnormal, so check via BF16.
+        let bf = Format::Bf16;
+        let a = bf.from_f64(2f64.powi(-100));
+        let b = bf.from_f64(2f64.powi(-30));
+        assert_eq!(ftz_mul(bf, a, b), 0, "2^-130 flushes to +0");
+        let a = bf.from_f64(-(2f64.powi(-100)));
+        assert_eq!(
+            ftz_mul(bf, a, b),
+            (-0.0f32).to_bits() as u64,
+            "sign-preserved flush"
+        );
+        let _ = f;
+    }
+
+    #[test]
+    fn input_flush_helper() {
+        let f = Format::Fp16;
+        let sub = 0x0001u64; // min fp16 subnormal
+        assert_eq!(flush_subnormal_input(f, sub), 0);
+        let neg_sub = 0x8001u64;
+        assert_eq!(flush_subnormal_input(f, neg_sub), 0, "flush to +0, not -0");
+        let normal = f.from_f64(1.0);
+        assert_eq!(flush_subnormal_input(f, normal), normal);
+        let zero = 0x8000u64; // -0 stays -0 (not subnormal)
+        assert_eq!(flush_subnormal_input(f, zero), zero);
+    }
+
+    #[test]
+    fn nan_canonicalized() {
+        let nan = f32::NAN.to_bits() as u64;
+        assert_eq!(ftz_add(nan, 0), 0x7FC0_0000);
+        assert_eq!(ftz_mul(Format::Fp32, nan, (1.0f32).to_bits() as u64), 0x7FC0_0000);
+    }
+
+    #[test]
+    fn inf_arithmetic() {
+        let inf = f32::INFINITY.to_bits() as u64;
+        let ninf = f32::NEG_INFINITY.to_bits() as u64;
+        assert_eq!(ftz_add(inf, (1.0f32).to_bits() as u64), inf);
+        assert_eq!(ftz_add(inf, ninf), 0x7FC0_0000);
+    }
+}

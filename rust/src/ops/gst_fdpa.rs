@@ -1,0 +1,253 @@
+//! GST-FDPA: group-scaled truncated fused dot-product-add
+//! (paper Algorithm 9).
+//!
+//! Models the dedicated MXFP4/NVFP4 paths on Blackwell: exact fixed-point
+//! dot products per group of `G` elements, each multiplied by the signed
+//! significands of its block scale factors, then one truncated fused
+//! summation of the `L/G` group terms plus the accumulator.
+
+use super::special::{special_pattern, NanStyle, SpecialOut};
+use super::{acc_term, scan_specials, zero_result_negative};
+use crate::fixedpoint::{e_max, FxTerm};
+use crate::formats::{convert, Format, Rho, RoundingMode};
+
+/// Parameters of a GST-FDPA operation (paper Table 5 row).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct GstFdpaCfg {
+    /// Group size `G` for the exact per-group dot products.
+    pub g: usize,
+    /// Block size of the scale factors (`K_block`: 32 for MXFP4, 16 for NVFP4).
+    pub kblock: usize,
+    /// Fractional bits of the fused summation.
+    pub f: i32,
+    /// Output conversion.
+    pub rho: Rho,
+    /// Scale factor format (E8M0 for MXFP4, UE4M3 for NVFP4).
+    pub scale_fmt: Format,
+}
+
+/// GST-FDPA over bit patterns.
+///
+/// `alpha`/`beta` hold one scale per `kblock` consecutive elements
+/// (`len = L / kblock`).
+pub fn gst_fdpa(
+    in_fmt: Format,
+    a: &[u64],
+    b: &[u64],
+    c_bits: u64,
+    alpha: &[u64],
+    beta: &[u64],
+    cfg: GstFdpaCfg,
+) -> u64 {
+    let l = a.len();
+    debug_assert_eq!(b.len(), l);
+    debug_assert_eq!(l % cfg.g, 0);
+    debug_assert_eq!(alpha.len(), l / cfg.kblock);
+    debug_assert_eq!(beta.len(), l / cfg.kblock);
+
+    let out_fmt = cfg.rho.output_format();
+    let c = out_fmt.decode(c_bits);
+    let da: Vec<_> = a.iter().map(|&x| in_fmt.decode(x)).collect();
+    let db: Vec<_> = b.iter().map(|&x| in_fmt.decode(x)).collect();
+    let salpha: Vec<_> = alpha.iter().map(|&x| cfg.scale_fmt.decode(x)).collect();
+    let sbeta: Vec<_> = beta.iter().map(|&x| cfg.scale_fmt.decode(x)).collect();
+
+    if salpha.iter().chain(sbeta.iter()).any(|s| s.is_nan()) {
+        return special_pattern(SpecialOut::Nan, out_fmt, NanStyle::NvCanonical);
+    }
+    match scan_specials(da.iter().copied().zip(db.iter().copied()), c) {
+        SpecialOut::None => {}
+        s => return special_pattern(s, out_fmt, NanStyle::NvCanonical),
+    }
+
+    let fin = in_fmt.mant_bits() as i32;
+    let fs = cfg.scale_fmt.mant_bits() as i32;
+    let groups = l / cfg.g;
+    let mut terms: Vec<FxTerm> = Vec::with_capacity(groups + 1);
+
+    for g in 0..groups {
+        let blk = g * cfg.g / cfg.kblock;
+        let (sa, sb) = (salpha[blk], sbeta[blk]);
+        // Step 1a: exact fixed-point dot product of the group at a common
+        // LSB of 2^(min_exp - 2*fin).
+        let lo = g * cfg.g;
+        let hi = lo + cfg.g;
+        let mut min_lsb = i32::MAX;
+        for k in lo..hi {
+            if da[k].sig != 0 && db[k].sig != 0 {
+                min_lsb = min_lsb.min(da[k].exp + db[k].exp - 2 * fin);
+            }
+        }
+        if min_lsb == i32::MAX {
+            terms.push(FxTerm::ZERO);
+            continue;
+        }
+        let mut p: i128 = 0;
+        for k in lo..hi {
+            let (x, y) = (da[k], db[k]);
+            let mag = x.sig as i128 * y.sig as i128;
+            if mag == 0 {
+                continue;
+            }
+            let sh = (x.exp + y.exp - 2 * fin) - min_lsb;
+            let v = mag << sh;
+            if x.sign != y.sign {
+                p -= v;
+            } else {
+                p += v;
+            }
+        }
+        // Step 1b: multiply by the scale significands; nominal exponent of
+        // the group term is the sum of the scale exponents only.
+        let s_g = p * sa.sig as i128 * sb.sig as i128;
+        let e_g = sa.exp + sb.exp;
+        if s_g == 0 {
+            terms.push(FxTerm::ZERO);
+            continue;
+        }
+        // value = s_g * 2^(min_lsb - fs - fs) * 2^(e_g)
+        terms.push(FxTerm {
+            neg: s_g < 0,
+            mag: s_g.unsigned_abs(),
+            exp: e_g,
+            frac: 2 * fs - min_lsb,
+        });
+    }
+    terms.push(acc_term(out_fmt, c));
+
+    let emax = match e_max(&terms) {
+        Some(e) => e,
+        None => {
+            let neg = zero_result_negative(
+                da.iter().zip(db.iter()).map(|(x, y)| x.sign != y.sign),
+                c.sign,
+            );
+            return if neg { 1u64 << (out_fmt.width() - 1) } else { 0 };
+        }
+    };
+
+    // Step 2: truncated fused sum of L/G + 1 terms.
+    let s: i128 = terms
+        .iter()
+        .map(|t| t.align(emax, cfg.f, RoundingMode::TowardZero))
+        .sum();
+
+    if s == 0 {
+        let neg = zero_result_negative(
+            da.iter().zip(db.iter()).map(|(x, y)| x.sign != y.sign),
+            c.sign,
+        );
+        return if neg { 1u64 << (out_fmt.width() - 1) } else { 0 };
+    }
+    // Step 3: convert.
+    convert(cfg.rho, s, emax, cfg.f)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const NVFP4: GstFdpaCfg = GstFdpaCfg {
+        g: 16,
+        kblock: 16,
+        f: 35,
+        rho: Rho::RzFp32,
+        scale_fmt: Format::Ue4M3,
+    };
+    const MXFP4: GstFdpaCfg = GstFdpaCfg {
+        g: 16,
+        kblock: 32,
+        f: 35,
+        rho: Rho::RzFp32,
+        scale_fmt: Format::E8M0,
+    };
+
+    fn fp4(v: f64) -> u64 {
+        Format::Fp4E2M1.from_f64(v)
+    }
+
+    #[test]
+    fn nvfp4_simple_dot() {
+        // 64 elements, 4 blocks of 16, unit scales (UE4M3 1.0 = 0x38)
+        let a: Vec<u64> = (0..64).map(|i| fp4(if i % 2 == 0 { 1.0 } else { -0.5 })).collect();
+        let b: Vec<u64> = (0..64).map(|_| fp4(2.0)).collect();
+        let scales = vec![0x38u64; 4];
+        let c = Format::Fp32.from_f64(0.5);
+        let out = gst_fdpa(Format::Fp4E2M1, &a, &b, c, &scales, &scales, NVFP4);
+        // 32*(2.0) + 32*(-1.0) + 0.5 = 32.5
+        assert_eq!(f32::from_bits(out as u32), 32.5);
+    }
+
+    #[test]
+    fn group_dot_is_exact_before_truncation() {
+        // Within a group, tiny and huge elements sum exactly (no F-truncation
+        // inside the group dot product).
+        let mut a = vec![fp4(0.0); 64];
+        let mut b = vec![fp4(0.0); 64];
+        a[0] = fp4(6.0);
+        b[0] = fp4(6.0);
+        a[1] = fp4(0.5);
+        b[1] = fp4(0.5);
+        let scales = vec![0x38u64; 4];
+        let out = gst_fdpa(Format::Fp4E2M1, &a, &b, 0, &scales, &scales, NVFP4);
+        assert_eq!(f32::from_bits(out as u32), 36.25);
+    }
+
+    #[test]
+    fn ue4m3_scale_significand_multiplies() {
+        // NVFP4 scale 1.5*2^2 = 6.0 (UE4M3 0x4C): dot * 6 * 1
+        let mut a = vec![fp4(0.0); 16];
+        let mut b = vec![fp4(0.0); 16];
+        a[0] = fp4(2.0);
+        b[0] = fp4(3.0);
+        let alpha = [Format::Ue4M3.from_f64(6.0)];
+        let beta = [0x38u64];
+        let out = gst_fdpa(Format::Fp4E2M1, &a, &b, 0, &alpha, &beta, NVFP4);
+        assert_eq!(f32::from_bits(out as u32), 36.0);
+    }
+
+    #[test]
+    fn mxfp4_kblock32_shares_scale_across_two_groups() {
+        // L=64, G=16, Kblock=32: groups 0,1 share scale[0]; 2,3 share scale[1]
+        let mut a = vec![fp4(0.0); 64];
+        let mut b = vec![fp4(0.0); 64];
+        a[0] = fp4(1.0);
+        b[0] = fp4(1.0); // group 0
+        a[31] = fp4(1.0);
+        b[31] = fp4(1.0); // group 1 (same block)
+        a[32] = fp4(1.0);
+        b[32] = fp4(1.0); // group 2 (block 1)
+        let alpha = [129u64, 127u64]; // 2^2, 2^0
+        let beta = [127u64, 127u64];
+        let out = gst_fdpa(Format::Fp4E2M1, &a, &b, 0, &alpha, &beta, MXFP4);
+        assert_eq!(f32::from_bits(out as u32), 4.0 + 4.0 + 1.0);
+    }
+
+    #[test]
+    fn truncation_across_groups_at_f35() {
+        // group terms 2^4 and 2^-33 (scale exps +4, -33): relative shift 37 > 35
+        let mut a = vec![fp4(0.0); 32];
+        let mut b = vec![fp4(0.0); 32];
+        a[0] = fp4(1.0);
+        b[0] = fp4(1.0);
+        a[16] = fp4(1.0);
+        b[16] = fp4(1.0);
+        let alpha = [127u64 + 4, 127u64 - 37];
+        let beta = [127u64, 127u64];
+        let cfg = GstFdpaCfg { kblock: 16, ..MXFP4 };
+        let out = gst_fdpa(Format::Fp4E2M1, &a, &b, 0, &alpha, &beta, cfg);
+        assert_eq!(f32::from_bits(out as u32), 16.0, "2^-37-scaled group truncated");
+        // at shift 34 it survives
+        let alpha = [127u64 + 4, 127u64 - 30];
+        let out = gst_fdpa(Format::Fp4E2M1, &a, &b, 0, &alpha, &beta, cfg);
+        assert_eq!(f32::from_bits(out as u32), 16.0 + 2f32.powi(-30));
+    }
+
+    #[test]
+    fn nan_scale_is_canonical_nan() {
+        let a = vec![fp4(1.0); 16];
+        let b = vec![fp4(1.0); 16];
+        let out = gst_fdpa(Format::Fp4E2M1, &a, &b, 0, &[0x7F], &[0x38], NVFP4);
+        assert_eq!(out, 0x7FFF_FFFF);
+    }
+}

@@ -1,0 +1,252 @@
+//! GTR-FDPA: group-truncated rounded fused dot-product-add
+//! (paper Algorithm 11).
+//!
+//! Models FP8 MFMA instructions on AMD CDNA3: the products of even and odd
+//! indices are fused separately (truncated at `F` relative to each group's
+//! own maximum exponent), the two group sums are combined with a rounded
+//! (RD) two-term sum, and the accumulator joins through a second rounded
+//! sum with a special truncation rule (`e_c < E − F − 1 ⇒ s'_c ← 0`).
+
+use super::special::{special_pattern, NanStyle, SpecialOut};
+use super::{acc_term, product_term, scan_specials, zero_result_negative};
+use crate::fixedpoint::FxTerm;
+use crate::formats::{convert, signed_align, Format, Rho, RoundingMode};
+
+/// Parameters of a GTR-FDPA operation (paper Table 7: L=16, F=24, F2=31).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct GtrFdpaCfg {
+    pub f: i32,
+    pub f2: i32,
+    /// Internal rounded-sum mode (RD on CDNA3).
+    pub inner_mode: RoundingMode,
+}
+
+impl GtrFdpaCfg {
+    pub const fn cdna3() -> Self {
+        GtrFdpaCfg { f: 24, f2: 31, inner_mode: RoundingMode::Down }
+    }
+}
+
+/// GTR-FDPA over bit patterns. FP8 inputs, FP32 accumulator and output.
+pub fn gtr_fdpa(in_fmt: Format, a: &[u64], b: &[u64], c_bits: u64, cfg: GtrFdpaCfg) -> u64 {
+    debug_assert_eq!(a.len(), b.len());
+    debug_assert_eq!(a.len() % 2, 0);
+    let c = Format::Fp32.decode(c_bits);
+    let da: Vec<_> = a.iter().map(|&x| in_fmt.decode(x)).collect();
+    let db: Vec<_> = b.iter().map(|&x| in_fmt.decode(x)).collect();
+
+    match scan_specials(da.iter().copied().zip(db.iter().copied()), c) {
+        SpecialOut::None => {}
+        s => return special_pattern(s, Format::Fp32, NanStyle::Quiet),
+    }
+
+    // Step 1: exact products (FP8 products cannot overflow).
+    let terms: Vec<FxTerm> = da
+        .iter()
+        .zip(db.iter())
+        .map(|(&x, &y)| product_term(in_fmt, x, in_fmt, y))
+        .collect();
+
+    // Step 2: two truncated fused sums over even / odd indices.
+    let group_sum = |parity: usize| -> (i128, Option<i32>) {
+        let e = terms
+            .iter()
+            .skip(parity)
+            .step_by(2)
+            .filter(|t| !t.is_zero())
+            .map(|t| t.exp)
+            .max();
+        match e {
+            None => (0, None),
+            Some(e) => (
+                terms
+                    .iter()
+                    .skip(parity)
+                    .step_by(2)
+                    .map(|t| t.align(e, cfg.f, RoundingMode::TowardZero))
+                    .sum(),
+                Some(e),
+            ),
+        }
+    };
+    let (t_even, e_even) = group_sum(0);
+    let (t_odd, e_odd) = group_sum(1);
+
+    // Step 3: rounded sum of the two group sums at e_max.
+    let e_max = match (e_even, e_odd) {
+        (Some(a), Some(b)) => Some(a.max(b)),
+        (Some(a), None) => Some(a),
+        (None, Some(b)) => Some(b),
+        (None, None) => None,
+    };
+    let t = match e_max {
+        None => 0i128,
+        Some(em) => {
+            let align_group = |sum: i128, e_g: Option<i32>| -> i128 {
+                match e_g {
+                    None => 0,
+                    Some(eg) => {
+                        if sum == 0 {
+                            0
+                        } else {
+                            // group sum is in quanta 2^(e_g - F); re-round at
+                            // e_max with F fractional bits under inner_mode
+                            signed_align(
+                                sum < 0,
+                                sum.unsigned_abs(),
+                                eg - cfg.f,
+                                em,
+                                cfg.f,
+                                cfg.inner_mode,
+                            )
+                        }
+                    }
+                }
+            };
+            align_group(t_even, e_even) + align_group(t_odd, e_odd)
+        }
+    };
+
+    // Step 4: final rounded sum with c (special truncation of tiny c).
+    let cterm = acc_term(Format::Fp32, c);
+    if t == 0 && cterm.is_zero() {
+        let neg = zero_result_negative(
+            da.iter().zip(db.iter()).map(|(x, y)| x.sign != y.sign),
+            c.sign,
+        );
+        return if neg { 0x8000_0000 } else { 0 };
+    }
+    let e_c = if cterm.is_zero() { i32::MIN / 2 } else { cterm.exp };
+    let e_p = e_max.unwrap_or(i32::MIN / 2);
+    let e = e_p.max(e_c);
+
+    let t_prime = if t == 0 {
+        0i128
+    } else {
+        signed_align(t < 0, t.unsigned_abs(), e_p - cfg.f, e, cfg.f2, cfg.inner_mode)
+    };
+    let s_c = if cterm.is_zero() || e_c < e - cfg.f - 1 {
+        0i128 // the paper's "special truncation"
+    } else {
+        cterm.align(e, cfg.f, cfg.inner_mode) << (cfg.f2 - cfg.f)
+    };
+    let s = t_prime + s_c;
+
+    if s == 0 {
+        let neg = zero_result_negative(
+            da.iter().zip(db.iter()).map(|(x, y)| x.sign != y.sign),
+            c.sign,
+        );
+        return if neg { 0x8000_0000 } else { 0 };
+    }
+    // Step 5: ρ = RNE-FP32.
+    convert(Rho::RneFp32, s, e, cfg.f2)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn f8(v: f64) -> u64 {
+        Format::Fp8E5M2.from_f64(v)
+    }
+
+    fn run(a: &[f64], b: &[f64], c: f64) -> f32 {
+        let ab: Vec<u64> = a.iter().map(|&x| f8(x)).collect();
+        let bb: Vec<u64> = b.iter().map(|&x| f8(x)).collect();
+        let out = gtr_fdpa(
+            Format::Fp8E5M2,
+            &ab,
+            &bb,
+            Format::Fp32.from_f64(c),
+            GtrFdpaCfg::cdna3(),
+        );
+        f32::from_bits(out as u32)
+    }
+
+    #[test]
+    fn paper_section5_cdna3_fp8() {
+        // §5: even group: -2^23 + (-0.25) -> -2^23 (F=24);
+        // odd group: -0.5 + (-0.125) = -0.625;
+        // rounded sum: -0.625 RD at quantum 0.5 -> -1.0; total -2^23 - 1;
+        // plus c = 2^23 -> -1.0
+        let mut a = vec![0.0; 16];
+        let mut b = vec![0.0; 16];
+        a[..4].copy_from_slice(&[-8192.0, -0.5, -0.25, -0.125]);
+        b[..4].copy_from_slice(&[1024.0, 1.0, 1.0, 1.0]);
+        let d = run(&a, &b, 2f64.powi(23));
+        assert_eq!(d, -1.0, "CDNA3 FP8 produces -1.0");
+    }
+
+    #[test]
+    fn even_odd_groups_are_independent() {
+        // Large term in the even group must not truncate odd-group terms.
+        let mut a = vec![0.0; 16];
+        let mut b = vec![0.0; 16];
+        a[0] = 2f64.powi(12); // even: 2^24
+        b[0] = 2f64.powi(12);
+        a[1] = 2f64.powi(-8); // odd: 2^-16 (would die under F=24 vs 2^24)
+        b[1] = 2f64.powi(-8);
+        let d = run(&a, &b, 0.0);
+        // e_max = 24, T_even = 2^24; T_odd = 2^-16 survives its own group,
+        // then RD at F=24 rel 2^24 (quantum 1.0): floor(2^-16) = 0
+        assert_eq!(d, 2f32.powi(24));
+        // with negative odd term the RD floors to -1 quantum
+        a[1] = -(2f64.powi(-8));
+        let d = run(&a, &b, 0.0);
+        assert_eq!(d, 2f32.powi(24) - 1.0, "RD pulls negative group sums down");
+    }
+
+    #[test]
+    fn special_truncation_of_tiny_c() {
+        // T = 2^24 (E = 24); c = -2^-6: e_c = -6 < E - F - 1 = -1 -> s'_c = 0
+        let mut a = vec![0.0; 16];
+        let mut b = vec![0.0; 16];
+        a[0] = 2f64.powi(12);
+        b[0] = 2f64.powi(12);
+        let d = run(&a, &b, -(2f64.powi(-6)));
+        assert_eq!(d, 2f32.powi(24), "tiny negative c truncated to zero, no RD pull");
+        // just inside the window: e_c = -1 >= E - F - 1 = -1: c participates,
+        // RD at quantum 2^0 pulls -0.5 down to -1
+        let d = run(&a, &b, -0.5);
+        assert_eq!(d, 2f32.powi(24) - 1.0);
+    }
+
+    #[test]
+    fn asymmetry() {
+        let mut a = vec![0.0; 16];
+        let mut b = vec![0.0; 16];
+        a[0] = 2f64.powi(12);
+        b[0] = 2f64.powi(12);
+        a[1] = -(2f64.powi(-8));
+        b[1] = 2f64.powi(-8);
+        let pos = run(&a, &b, 0.0);
+        let na: Vec<f64> = a.iter().map(|x| -x).collect();
+        let neg = run(&na, &b, -0.0);
+        assert_ne!(pos, -neg, "GTR-FDPA is asymmetric (§6.2.4)");
+    }
+
+    #[test]
+    fn exact_small_case() {
+        let mut a = vec![0.0; 16];
+        let mut b = vec![0.0; 16];
+        a[0] = 1.5;
+        b[0] = 2.0;
+        a[1] = -0.5;
+        b[1] = 1.0;
+        let d = run(&a, &b, 0.25);
+        assert_eq!(d, 1.5 * 2.0 - 0.5 + 0.25);
+    }
+
+    #[test]
+    fn specials_quiet_nan() {
+        let inf = f8(f64::INFINITY);
+        let zero = f8(0.0);
+        let mut a = vec![f8(0.0); 16];
+        let mut b = vec![f8(0.0); 16];
+        a[0] = inf;
+        b[0] = zero;
+        let out = gtr_fdpa(Format::Fp8E5M2, &a, &b, 0, GtrFdpaCfg::cdna3());
+        assert_eq!(out, 0x7FC0_0000, "AMD emits quiet NaN");
+    }
+}

@@ -1,0 +1,75 @@
+//! The elementary floating-point operations that GPU MMA units are
+//! composed of (paper §4.1, Algorithms 1, 3, 6–11).
+//!
+//! Each operation deterministically maps floating-point *bit patterns* to
+//! a floating-point bit pattern. Inside the operations, intermediates are
+//! fixed-point — exactly as the paper defines an elementary operation.
+
+pub mod e_fdpa;
+pub mod fma;
+pub mod ftz;
+pub mod gst_fdpa;
+pub mod gtr_fdpa;
+pub mod special;
+pub mod st_fdpa;
+pub mod t_fdpa;
+pub mod tr_fdpa;
+
+pub use e_fdpa::e_fdpa;
+pub use fma::fma;
+pub use ftz::{ftz_add, ftz_mul, flush_subnormal_input};
+pub use gst_fdpa::{gst_fdpa, GstFdpaCfg};
+pub use gtr_fdpa::{gtr_fdpa, GtrFdpaCfg};
+pub use special::{canonical_nan, scan_specials, NanStyle, SpecialAcc, SpecialOut};
+pub use st_fdpa::st_fdpa;
+pub use t_fdpa::{t_fdpa, TFdpaCfg};
+pub use tr_fdpa::{tr_fdpa, TrFdpaCfg};
+
+use crate::fixedpoint::FxTerm;
+use crate::formats::{Decoded, Format};
+
+/// Maximum FDPA vector length across all modeled instructions (GST-FDPA
+/// on Blackwell uses L = 64); fixed-size scratch arrays are sized by this.
+pub const MAX_L: usize = 64;
+
+/// Build the exact product term of two decoded finite values
+/// (`SignedSig(a)·SignedSig(b)` with nominal exponent `Exp(a)+Exp(b)`).
+#[inline]
+pub(crate) fn product_term(fmt_a: Format, a: Decoded, fmt_b: Format, b: Decoded) -> FxTerm {
+    FxTerm::product(
+        a.sig,
+        a.exp,
+        fmt_a.mant_bits(),
+        a.sign,
+        b.sig,
+        b.exp,
+        fmt_b.mant_bits(),
+        b.sign,
+    )
+}
+
+/// The accumulator as an alignment term (`SignedSig(c)`, `Exp(c)`).
+#[inline]
+pub(crate) fn acc_term(fmt_c: Format, c: Decoded) -> FxTerm {
+    if c.is_zero() || c.sig == 0 {
+        FxTerm::ZERO
+    } else {
+        FxTerm { neg: c.sign, mag: c.sig as u128, exp: c.exp, frac: fmt_c.mant_bits() as i32 }
+    }
+}
+
+/// Sign convention for exactly-zero fused results: `+0`, unless every
+/// contributing input (all products as signed zeros, and the accumulator)
+/// is a negative zero. Shared by every fused operation so the Rust model
+/// and the Python oracle agree bit-for-bit.
+#[inline]
+pub(crate) fn zero_result_negative(prod_signs: impl Iterator<Item = bool>, c_neg: bool) -> bool {
+    let mut all_neg = c_neg;
+    let mut any = false;
+    for s in prod_signs {
+        any = true;
+        all_neg &= s;
+    }
+    let _ = any;
+    all_neg
+}

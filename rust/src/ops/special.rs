@@ -1,0 +1,239 @@
+//! Special-value (NaN/Inf) handling shared by the elementary operations
+//! (paper §4.2).
+//!
+//! All elementary operations satisfy:
+//! `NaN + x = NaN`, `NaN × x = NaN`, `±∞ + y = ±∞`, `±∞ + ∓∞ = NaN`,
+//! `±∞ × z = ±∞ × sign(z)`, `±∞ × 0 = NaN`.
+//!
+//! NVIDIA's T-FDPA/ST-FDPA/GST-FDPA canonicalize NaN as `0x7FFFFFFF`
+//! (FP32) or `0x7FFF` (FP16); every other operation emits the standard
+//! quiet NaN of its output format.
+
+use crate::formats::{Class, Decoded, Format};
+
+/// NaN encoding style of an operation's output.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum NanStyle {
+    /// NVIDIA canonical: all-ones payload (`0x7FFFFFFF` / `0x7FFF`).
+    NvCanonical,
+    /// IEEE quiet NaN (`0x7FC00000`, `0x7E00`, `0x7FF8…`).
+    Quiet,
+}
+
+/// Canonical NaN bit pattern for `fmt` under `style`.
+pub fn canonical_nan(fmt: Format, style: NanStyle) -> u64 {
+    match (style, fmt) {
+        (NanStyle::NvCanonical, Format::Fp32) => 0x7FFF_FFFF,
+        (NanStyle::NvCanonical, Format::Fp16) => 0x7FFF,
+        (NanStyle::Quiet, Format::Fp32) => 0x7FC0_0000,
+        (NanStyle::Quiet, Format::Fp16) => 0x7E00,
+        (NanStyle::Quiet, Format::Fp64) => 0x7FF8_0000_0000_0000,
+        _ => fmt.nan_pattern().expect("format has no NaN encoding"),
+    }
+}
+
+/// Outcome of the special-value scan over a dot-product-accumulate.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum SpecialOut {
+    /// No special values: proceed with the finite fixed-point path.
+    None,
+    /// Result is NaN.
+    Nan,
+    /// Result is ±∞ (`true` = negative).
+    Inf(bool),
+}
+
+/// Scan decoded multiplicand pairs and the accumulator for special values.
+///
+/// `pairs` yields the decoded `(a_k, b_k)` multiplicands; `c` is the
+/// decoded accumulator. Implements the §4.2 rules.
+pub fn scan_specials<I>(pairs: I, c: Decoded) -> SpecialOut
+where
+    I: IntoIterator<Item = (Decoded, Decoded)>,
+{
+    let mut pos_inf = false;
+    let mut neg_inf = false;
+    let mut nan = false;
+    for (a, b) in pairs {
+        match (a.class, b.class) {
+            (Class::Nan, _) | (_, Class::Nan) => nan = true,
+            (Class::Inf, Class::Zero) | (Class::Zero, Class::Inf) => nan = true,
+            (Class::Inf, _) | (_, Class::Inf) => {
+                if a.sign != b.sign {
+                    neg_inf = true;
+                } else {
+                    pos_inf = true;
+                }
+            }
+            _ => {}
+        }
+    }
+    match c.class {
+        Class::Nan => nan = true,
+        Class::Inf => {
+            if c.sign {
+                neg_inf = true;
+            } else {
+                pos_inf = true;
+            }
+        }
+        _ => {}
+    }
+    if nan || (pos_inf && neg_inf) {
+        SpecialOut::Nan
+    } else if pos_inf {
+        SpecialOut::Inf(false)
+    } else if neg_inf {
+        SpecialOut::Inf(true)
+    } else {
+        SpecialOut::None
+    }
+}
+
+/// Incremental special-value accumulator: the allocation-free fused-pass
+/// equivalent of [`scan_specials`].
+#[derive(Clone, Copy, Debug)]
+pub struct SpecialAcc {
+    pos_inf: bool,
+    neg_inf: bool,
+    nan: bool,
+}
+
+impl SpecialAcc {
+    /// Start a scan with the accumulator operand already folded in.
+    #[inline]
+    pub fn new(c: Decoded) -> Self {
+        let mut s = SpecialAcc { pos_inf: false, neg_inf: false, nan: false };
+        match c.class {
+            Class::Nan => s.nan = true,
+            Class::Inf => {
+                if c.sign {
+                    s.neg_inf = true;
+                } else {
+                    s.pos_inf = true;
+                }
+            }
+            _ => {}
+        }
+        s
+    }
+
+    /// Fold one multiplicand pair.
+    #[inline]
+    pub fn product(&mut self, a: Decoded, b: Decoded) {
+        match (a.class, b.class) {
+            (Class::Nan, _) | (_, Class::Nan) => self.nan = true,
+            (Class::Inf, Class::Zero) | (Class::Zero, Class::Inf) => self.nan = true,
+            (Class::Inf, _) | (_, Class::Inf) => {
+                if a.sign != b.sign {
+                    self.neg_inf = true;
+                } else {
+                    self.pos_inf = true;
+                }
+            }
+            _ => {}
+        }
+    }
+
+    /// Final verdict (same rules as [`scan_specials`]).
+    #[inline]
+    pub fn outcome(&self) -> SpecialOut {
+        if self.nan || (self.pos_inf && self.neg_inf) {
+            SpecialOut::Nan
+        } else if self.pos_inf {
+            SpecialOut::Inf(false)
+        } else if self.neg_inf {
+            SpecialOut::Inf(true)
+        } else {
+            SpecialOut::None
+        }
+    }
+}
+
+/// Emit the bit pattern for a special outcome in `fmt` under `style`.
+/// Panics if called with `SpecialOut::None`.
+pub fn special_pattern(out: SpecialOut, fmt: Format, style: NanStyle) -> u64 {
+    match out {
+        SpecialOut::Nan => canonical_nan(fmt, style),
+        SpecialOut::Inf(neg) => {
+            let inf = fmt.inf_pattern().expect("format has no Inf encoding");
+            if neg {
+                inf | (1u64 << (fmt.width() - 1))
+            } else {
+                inf
+            }
+        }
+        SpecialOut::None => unreachable!("special_pattern on SpecialOut::None"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn d(fmt: Format, v: f64) -> Decoded {
+        fmt.decode(fmt.from_f64(v))
+    }
+
+    #[test]
+    fn nan_propagates() {
+        let f = Format::Fp16;
+        let out = scan_specials([(d(f, f64::NAN), d(f, 1.0))], d(Format::Fp32, 0.0));
+        assert_eq!(out, SpecialOut::Nan);
+        let out = scan_specials([(d(f, 1.0), d(f, 2.0))], d(Format::Fp32, f64::NAN));
+        assert_eq!(out, SpecialOut::Nan);
+    }
+
+    #[test]
+    fn inf_times_zero_is_nan() {
+        let f = Format::Fp16;
+        let out = scan_specials([(d(f, f64::INFINITY), d(f, 0.0))], d(Format::Fp32, 1.0));
+        assert_eq!(out, SpecialOut::Nan);
+    }
+
+    #[test]
+    fn inf_sign_product() {
+        let f = Format::Fp16;
+        let out = scan_specials([(d(f, f64::NEG_INFINITY), d(f, 2.0))], d(Format::Fp32, 1.0));
+        assert_eq!(out, SpecialOut::Inf(true));
+        let out = scan_specials([(d(f, f64::NEG_INFINITY), d(f, -2.0))], d(Format::Fp32, 1.0));
+        assert_eq!(out, SpecialOut::Inf(false));
+    }
+
+    #[test]
+    fn opposing_infs_are_nan() {
+        let f = Format::Fp16;
+        let out = scan_specials(
+            [
+                (d(f, f64::INFINITY), d(f, 1.0)),
+                (d(f, f64::NEG_INFINITY), d(f, 1.0)),
+            ],
+            d(Format::Fp32, 0.0),
+        );
+        assert_eq!(out, SpecialOut::Nan);
+        // inf product vs inf accumulator of opposite sign
+        let out = scan_specials(
+            [(d(f, f64::INFINITY), d(f, 1.0))],
+            d(Format::Fp32, f64::NEG_INFINITY),
+        );
+        assert_eq!(out, SpecialOut::Nan);
+    }
+
+    #[test]
+    fn canonical_patterns() {
+        assert_eq!(canonical_nan(Format::Fp32, NanStyle::NvCanonical), 0x7FFF_FFFF);
+        assert_eq!(canonical_nan(Format::Fp16, NanStyle::NvCanonical), 0x7FFF);
+        assert_eq!(canonical_nan(Format::Fp32, NanStyle::Quiet), 0x7FC0_0000);
+        assert_eq!(
+            special_pattern(SpecialOut::Inf(true), Format::Fp32, NanStyle::Quiet),
+            0xFF80_0000
+        );
+    }
+
+    #[test]
+    fn finite_passthrough() {
+        let f = Format::Bf16;
+        let out = scan_specials([(d(f, 1.5), d(f, -2.0))], d(Format::Fp32, 3.0));
+        assert_eq!(out, SpecialOut::None);
+    }
+}

@@ -1,0 +1,94 @@
+//! ST-FDPA: scaled truncated fused dot-product-add (paper Algorithm 8).
+//!
+//! Models general MXFP8/MXFP6/MXFP4 MMA instructions: T-FDPA with two
+//! per-block E8M0 scale factors whose exponents are added into every
+//! product's nominal exponent before the fused summation.
+
+use super::t_fdpa::{t_fdpa_scaled, TFdpaCfg};
+use crate::formats::Format;
+
+/// ST-FDPA over bit patterns. `alpha`/`beta` are E8M0 scale patterns.
+pub fn st_fdpa(
+    in_fmt: Format,
+    a: &[u64],
+    b: &[u64],
+    c_bits: u64,
+    alpha: u64,
+    beta: u64,
+    cfg: TFdpaCfg,
+) -> u64 {
+    let da = Format::E8M0.decode(alpha);
+    let db = Format::E8M0.decode(beta);
+    let scale_nan = da.is_nan() || db.is_nan();
+    let scale_exp = if scale_nan { 0 } else { da.exp + db.exp };
+    t_fdpa_scaled(in_fmt, a, b, c_bits, cfg, scale_exp, scale_nan)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::Rho;
+
+    fn f(fmt: Format, v: f64) -> u64 {
+        fmt.from_f64(v)
+    }
+
+    const CFG: TFdpaCfg = TFdpaCfg { f: 25, rho: Rho::RzFp32 };
+
+    #[test]
+    fn unit_scales_match_t_fdpa() {
+        let a: Vec<u64> = [1.5, -2.0].iter().map(|&x| f(Format::Fp8E4M3, x)).collect();
+        let b: Vec<u64> = [2.0, 0.5].iter().map(|&x| f(Format::Fp8E4M3, x)).collect();
+        let c = f(Format::Fp32, 0.25);
+        let scaled = st_fdpa(Format::Fp8E4M3, &a, &b, c, 127, 127, CFG);
+        let unscaled = super::super::t_fdpa(Format::Fp8E4M3, &a, &b, c, CFG);
+        assert_eq!(scaled, unscaled);
+    }
+
+    #[test]
+    fn scales_shift_products_not_accumulator() {
+        // alpha = 2^3, beta = 2^1: products scaled by 16, c unscaled
+        let a = [f(Format::Fp8E4M3, 1.0)];
+        let b = [f(Format::Fp8E4M3, 1.0)];
+        let c = f(Format::Fp32, 1.0);
+        let out = st_fdpa(Format::Fp8E4M3, &a, &b, c, 130, 128, CFG);
+        assert_eq!(f32::from_bits(out as u32), 16.0 + 1.0);
+    }
+
+    #[test]
+    fn tiny_scales_downshift() {
+        let a = [f(Format::Fp8E4M3, 2.0)];
+        let b = [f(Format::Fp8E4M3, 3.0)];
+        let c = f(Format::Fp32, 0.0);
+        // alpha = 2^-4, beta = 2^-2
+        let out = st_fdpa(Format::Fp8E4M3, &a, &b, c, 123, 125, CFG);
+        assert_eq!(f32::from_bits(out as u32), 6.0 / 64.0);
+    }
+
+    #[test]
+    fn nan_scale_poisons() {
+        let a = [f(Format::Fp8E4M3, 1.0)];
+        let b = [f(Format::Fp8E4M3, 1.0)];
+        let out = st_fdpa(Format::Fp8E4M3, &a, &b, 0, 0xFF, 127, CFG);
+        assert_eq!(out, 0x7FFF_FFFF, "NaN scale -> NVIDIA canonical NaN");
+    }
+
+    #[test]
+    fn scale_changes_truncation_outcome() {
+        // Without scales: 2^20 + 2^-6 with F=25 keeps the tail; with the
+        // big term scaled up by 2^6 the tail falls below the quantum.
+        let a: Vec<u64> = [2f64.powi(4), 2f64.powi(-3)]
+            .iter()
+            .map(|&x| f(Format::Fp8E4M3, x))
+            .collect();
+        let b: Vec<u64> = [2f64.powi(4), 2f64.powi(-3)]
+            .iter()
+            .map(|&x| f(Format::Fp8E4M3, x))
+            .collect();
+        let base = st_fdpa(Format::Fp8E4M3, &a, &b, 0, 127, 127, CFG);
+        assert_eq!(f32::from_bits(base as u32), 2f32.powi(8) + 2f32.powi(-6));
+        let scaled = st_fdpa(Format::Fp8E4M3, &a, &b, 0, 127 + 12, 127 + 12, CFG);
+        // products now 2^32 and 2^18: both survive F=25 relative to 2^32
+        assert_eq!(f32::from_bits(scaled as u32), 2f32.powi(32) + 2f32.powi(18));
+    }
+}

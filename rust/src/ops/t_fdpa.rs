@@ -1,0 +1,249 @@
+//! T-FDPA: truncated fused dot-product-add (paper Algorithm 7).
+//!
+//! The workhorse of NVIDIA mixed-precision Tensor Cores: exact unnormalized
+//! products, a fused summation of the `L+1` terms aligned at the maximum
+//! nominal exponent and truncated (RZ) to `F` fractional bits, and a single
+//! conversion ρ to the output format.
+
+use super::special::{special_pattern, NanStyle, SpecialAcc, SpecialOut};
+use super::{acc_term, product_term, MAX_L};
+use crate::fixedpoint::FxTerm;
+use crate::formats::{convert, Format, Rho, RoundingMode};
+
+/// Parameters of a T-FDPA operation (paper Table 4 row).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TFdpaCfg {
+    /// Fractional bits kept in the fused summation.
+    pub f: i32,
+    /// Output conversion function.
+    pub rho: Rho,
+}
+
+/// T-FDPA over bit patterns. `c` is in `rho.output_format()` (FP32 or FP16).
+pub fn t_fdpa(in_fmt: Format, a: &[u64], b: &[u64], c_bits: u64, cfg: TFdpaCfg) -> u64 {
+    t_fdpa_scaled(in_fmt, a, b, c_bits, cfg, 0, false)
+}
+
+/// T-FDPA with a per-call scale-exponent offset — the shared core of
+/// T-FDPA (offset 0) and ST-FDPA (offset `Exp(α)+Exp(β)`, NaN flag from
+/// the scale decode).
+pub(crate) fn t_fdpa_scaled(
+    in_fmt: Format,
+    a: &[u64],
+    b: &[u64],
+    c_bits: u64,
+    cfg: TFdpaCfg,
+    scale_exp_sum: i32,
+    scale_nan: bool,
+) -> u64 {
+    debug_assert_eq!(a.len(), b.len());
+    let l = a.len();
+    debug_assert!(l <= MAX_L, "FDPA vector length exceeds {MAX_L}");
+    let out_fmt = cfg.rho.output_format();
+    let c = out_fmt.decode(c_bits);
+
+    if scale_nan {
+        return special_pattern(SpecialOut::Nan, out_fmt, NanStyle::NvCanonical);
+    }
+
+    // Single fused pass: decode, special scan, exact products (Step 1),
+    // e_max tracking, and the zero-sign rule — no heap allocation.
+    let mut terms = [FxTerm::ZERO; MAX_L];
+    let mut specials = SpecialAcc::new(c);
+    let mut all_neg = c.sign;
+    let mut emax = i32::MIN / 2;
+    for i in 0..l {
+        let x = in_fmt.decode(a[i]);
+        let y = in_fmt.decode(b[i]);
+        specials.product(x, y);
+        all_neg &= x.sign != y.sign;
+        let mut t = product_term(in_fmt, x, in_fmt, y);
+        if !t.is_zero() {
+            t.exp += scale_exp_sum;
+            if t.exp > emax {
+                emax = t.exp;
+            }
+        }
+        terms[i] = t;
+    }
+    match specials.outcome() {
+        SpecialOut::None => {}
+        s => return special_pattern(s, out_fmt, NanStyle::NvCanonical),
+    }
+    // Step 2: the accumulator joins the same fused summation.
+    let cterm = acc_term(out_fmt, c);
+    if !cterm.is_zero() && cterm.exp > emax {
+        emax = cterm.exp;
+    }
+    if emax == i32::MIN / 2 {
+        return zero_pattern(out_fmt, all_neg); // every term a signed zero
+    }
+
+    // Align at e_max, truncate to F fractional bits, exact fixed-point sum.
+    let mut s: i128 = cterm.align(emax, cfg.f, RoundingMode::TowardZero);
+    for t in &terms[..l] {
+        s += t.align(emax, cfg.f, RoundingMode::TowardZero);
+    }
+
+    if s == 0 {
+        return zero_pattern(out_fmt, all_neg);
+    }
+    // Step 3: convert to the floating-point output.
+    convert(cfg.rho, s, emax, cfg.f)
+}
+
+#[inline]
+fn zero_pattern(fmt: Format, neg: bool) -> u64 {
+    if neg {
+        1u64 << (fmt.width() - 1)
+    } else {
+        0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn f(fmt: Format, v: f64) -> u64 {
+        fmt.from_f64(v)
+    }
+
+    fn run(in_fmt: Format, fcfg: i32, rho: Rho, a: &[f64], b: &[f64], c: f64) -> f32 {
+        let ab: Vec<u64> = a.iter().map(|&x| f(in_fmt, x)).collect();
+        let bb: Vec<u64> = b.iter().map(|&x| f(in_fmt, x)).collect();
+        let cfmt = rho.output_format();
+        let out = t_fdpa(in_fmt, &ab, &bb, f(cfmt, c), TFdpaCfg { f: fcfg, rho });
+        match cfmt {
+            Format::Fp32 => f32::from_bits(out as u32),
+            Format::Fp16 => Format::Fp16.to_f64(out) as f32,
+            _ => unreachable!(),
+        }
+    }
+
+    // §5 worked example, Eq. 10: c = 2^23, products -2^23, -0.5, -0.25, -0.125
+    const A: [f64; 4] = [-8192.0, -0.5, -0.25, -0.125];
+    const B: [f64; 4] = [1024.0, 1.0, 1.0, 1.0];
+    const C: f64 = 8388608.0; // 2^23
+
+    #[test]
+    fn volta_f23_truncates_everything() {
+        let d = run(Format::Fp16, 23, Rho::RzFp32, &A, &B, C);
+        assert_eq!(d, 0.0, "Volta (F=23) produces 0.0");
+    }
+
+    #[test]
+    fn turing_ampere_f24() {
+        let d = run(Format::Fp16, 24, Rho::RzFp32, &A, &B, C);
+        assert_eq!(d, -0.5, "F=24 keeps only -0.5");
+    }
+
+    #[test]
+    fn hopper_f25() {
+        let d = run(Format::Fp16, 25, Rho::RzFp32, &A, &B, C);
+        assert_eq!(d, -0.75, "F=25 keeps -0.5 and -0.25");
+    }
+
+    #[test]
+    fn fp8_f13_on_e5m2() {
+        let d = run(Format::Fp8E5M2, 13, Rho::RzE8M13, &A, &B, C);
+        assert_eq!(d, 0.0, "Ada/Hopper FP8 (F=13) produces 0.0");
+    }
+
+    #[test]
+    fn blackwell_fp8_f25() {
+        let d = run(Format::Fp8E5M2, 25, Rho::RzFp32, &A, &B, C);
+        assert_eq!(d, -0.75, "Blackwell FP8 (F=25) produces -0.75");
+    }
+
+    #[test]
+    fn truncation_is_toward_zero_both_signs() {
+        // +large with small negative tail: RZ truncation of the negative
+        // summand must shrink its magnitude, not floor it.
+        // terms: 2^2 and -2^-30 with F=24: -2^-30 truncates to 0 => 4.0
+        let d = run(Format::Fp16, 24, Rho::RzFp32, &[2.0, -2f64.powi(-14)], &[2.0, 2f64.powi(-16)], 0.0);
+        assert_eq!(d, 4.0);
+    }
+
+    #[test]
+    fn rz_output_rounding() {
+        // exact sum 1 + 2^-24 with F=25 survives the fused sum, then
+        // RZ-FP32 truncates to 1.0
+        let d = run(
+            Format::Fp16,
+            25,
+            Rho::RzFp32,
+            &[1.0, 2f64.powi(-12)],
+            &[1.0, 2f64.powi(-12)],
+            0.0,
+        );
+        assert_eq!(d, 1.0);
+        // negative: -(1 + 2^-24) truncates toward zero to -1.0
+        let d = run(
+            Format::Fp16,
+            25,
+            Rho::RzFp32,
+            &[-1.0, -2f64.powi(-12)],
+            &[1.0, 2f64.powi(-12)],
+            0.0,
+        );
+        assert_eq!(d, -1.0);
+    }
+
+    #[test]
+    fn fp16_output_rne() {
+        // 1 + 2^-11 exact: RNE-FP16 tie -> 1.0 ; 1 + 3*2^-11 -> 1 + 2^-9
+        let d = run(
+            Format::Fp16,
+            24,
+            Rho::RneFp16,
+            &[1.0, 2f64.powi(-11)],
+            &[1.0, 1.0],
+            0.0,
+        );
+        assert_eq!(d, 1.0);
+    }
+
+    #[test]
+    fn accumulator_in_fused_sum_not_after() {
+        // Fasi et al. observation: c participates in the same fused sum.
+        // c = 2^25, product = 1.0 with F=24: quantum is 2, so 1.0 truncates.
+        let d = run(Format::Fp16, 24, Rho::RzFp32, &[1.0], &[1.0], 2f64.powi(25));
+        assert_eq!(d, 2f32.powi(25), "product swamped by large c");
+    }
+
+    #[test]
+    fn subnormal_inputs_participate() {
+        // fp16 subnormal 2^-24 * 2.0 = 2^-23, no flushing on NVIDIA
+        let d = run(Format::Fp16, 24, Rho::RzFp32, &[2f64.powi(-24)], &[2.0], 0.0);
+        assert_eq!(d, 2f32.powi(-23));
+    }
+
+    #[test]
+    fn nv_canonical_nan() {
+        let inf = f(Format::Fp16, f64::INFINITY);
+        let zero = f(Format::Fp16, 0.0);
+        let out = t_fdpa(
+            Format::Fp16,
+            &[inf],
+            &[zero],
+            0,
+            TFdpaCfg { f: 24, rho: Rho::RzFp32 },
+        );
+        assert_eq!(out, 0x7FFF_FFFF, "NVIDIA canonical FP32 NaN");
+        let out = t_fdpa(
+            Format::Fp16,
+            &[inf],
+            &[zero],
+            0,
+            TFdpaCfg { f: 24, rho: Rho::RneFp16 },
+        );
+        assert_eq!(out, 0x7FFF, "NVIDIA canonical FP16 NaN");
+    }
+
+    #[test]
+    fn exact_zero_from_cancellation_is_positive() {
+        let d = run(Format::Fp16, 24, Rho::RzFp32, &[4.0, -4.0], &[2.0, 2.0], 0.0);
+        assert_eq!(d.to_bits(), 0);
+    }
+}

@@ -1,0 +1,247 @@
+//! TR-FDPA: truncated rounded fused dot-product-add (paper Algorithm 10).
+//!
+//! Models TF32/BF16/FP16 MFMA instructions on AMD CDNA3. Unlike T-FDPA,
+//! the fused summation covers only the `L` products; the accumulator is
+//! added afterwards in a two-term *rounded* sum using the asymmetric
+//! round-down (RD) mode — the source of the paper's §6.2.4 numerical bias.
+//! Products may overflow to ±∞ when `|s_k·2^{e_k}| ≥ 2^128` (§4.2).
+
+use super::special::{special_pattern, NanStyle, SpecialOut};
+use super::{acc_term, product_term, scan_specials, zero_result_negative};
+use crate::fixedpoint::{e_max, FxTerm};
+use crate::formats::{convert, Format, Rho, RoundingMode};
+
+/// Parameters of a TR-FDPA operation (paper Table 7 row).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TrFdpaCfg {
+    /// Fractional bits of the product fused summation (and of `s'_c`).
+    pub f: i32,
+    /// Fractional bits of the rounded product-sum term `T'`.
+    pub f2: i32,
+    /// Rounding mode of the internal two-term sum (RD on CDNA3; the
+    /// hypothetical RZ variant of Figure 3 swaps this).
+    pub inner_mode: RoundingMode,
+}
+
+impl TrFdpaCfg {
+    /// CDNA3 production configuration (Table 7).
+    pub const fn cdna3() -> Self {
+        TrFdpaCfg { f: 24, f2: 31, inner_mode: RoundingMode::Down }
+    }
+}
+
+/// Does the exact product of two finite decoded values overflow 2^128?
+#[inline]
+fn product_overflows(t: &FxTerm) -> bool {
+    if t.is_zero() {
+        return false;
+    }
+    // value = mag * 2^(exp - frac) ; overflow iff value >= 2^128
+    let msb = 127 - t.mag.leading_zeros() as i32;
+    (t.exp - t.frac) + msb >= 128
+}
+
+/// TR-FDPA over bit patterns. `c` is FP32; output is FP32 (ρ = RNE-FP32).
+pub fn tr_fdpa(in_fmt: Format, a: &[u64], b: &[u64], c_bits: u64, cfg: TrFdpaCfg) -> u64 {
+    debug_assert_eq!(a.len(), b.len());
+    let c = Format::Fp32.decode(c_bits);
+    let da: Vec<_> = a.iter().map(|&x| in_fmt.decode(x)).collect();
+    let db: Vec<_> = b.iter().map(|&x| in_fmt.decode(x)).collect();
+
+    // Step 1: exact products; detect multiplication overflow to ±∞.
+    let mut terms: Vec<FxTerm> = Vec::with_capacity(a.len());
+    let mut ovf_pos = false;
+    let mut ovf_neg = false;
+    for (&x, &y) in da.iter().zip(db.iter()) {
+        let t = product_term(in_fmt, x, in_fmt, y);
+        if product_overflows(&t) {
+            if t.neg {
+                ovf_neg = true;
+            } else {
+                ovf_pos = true;
+            }
+            continue;
+        }
+        terms.push(t);
+    }
+
+    let mut special = scan_specials(da.iter().copied().zip(db.iter().copied()), c);
+    // merge multiplication overflows into the special outcome
+    if ovf_pos || ovf_neg {
+        special = match special {
+            SpecialOut::Nan => SpecialOut::Nan,
+            SpecialOut::Inf(neg) => {
+                if (neg && ovf_pos) || (!neg && ovf_neg) || (ovf_pos && ovf_neg) {
+                    SpecialOut::Nan
+                } else {
+                    SpecialOut::Inf(neg)
+                }
+            }
+            SpecialOut::None => {
+                if ovf_pos && ovf_neg {
+                    SpecialOut::Nan
+                } else {
+                    SpecialOut::Inf(ovf_neg)
+                }
+            }
+        };
+    }
+    match special {
+        SpecialOut::None => {}
+        s => return special_pattern(s, Format::Fp32, NanStyle::Quiet),
+    }
+
+    // Step 2: truncated fused sum of the L products (c NOT included).
+    let emax_p = e_max(&terms);
+    let t_sum: i128 = match emax_p {
+        Some(e) => terms.iter().map(|t| t.align(e, cfg.f, RoundingMode::TowardZero)).sum(),
+        None => 0,
+    };
+
+    // Step 3: rounded two-term sum of T and c at E = max(e_max, e_c).
+    let cterm = acc_term(Format::Fp32, c);
+    let e_p = emax_p.unwrap_or(i32::MIN / 2);
+    let e_c = if cterm.is_zero() { i32::MIN / 2 } else { cterm.exp };
+    if t_sum == 0 && cterm.is_zero() {
+        let neg = zero_result_negative(
+            da.iter().zip(db.iter()).map(|(x, y)| x.sign != y.sign),
+            c.sign,
+        );
+        return if neg { 0x8000_0000 } else { 0 };
+    }
+    let e = e_p.max(e_c);
+
+    // T' = RD_F2(T * 2^(e_max - E)) : T is in quanta 2^(e_max - F).
+    let t_prime = if t_sum == 0 {
+        0i128
+    } else {
+        crate::formats::signed_align(
+            t_sum < 0,
+            t_sum.unsigned_abs(),
+            e_p - cfg.f,
+            e,
+            cfg.f2,
+            cfg.inner_mode,
+        )
+    };
+    // s'_c = RD_F(c aligned at E), then widened to F2 quanta.
+    let s_c = if cterm.is_zero() {
+        0i128
+    } else {
+        cterm.align(e, cfg.f, cfg.inner_mode) << (cfg.f2 - cfg.f)
+    };
+    let s = t_prime + s_c;
+
+    if s == 0 {
+        let neg = zero_result_negative(
+            da.iter().zip(db.iter()).map(|(x, y)| x.sign != y.sign),
+            c.sign,
+        );
+        return if neg { 0x8000_0000 } else { 0 };
+    }
+    // Step 4: ρ = RNE-FP32.
+    convert(Rho::RneFp32, s, e, cfg.f2)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn f(fmt: Format, v: f64) -> u64 {
+        fmt.from_f64(v)
+    }
+
+    fn run(in_fmt: Format, a: &[f64], b: &[f64], c: f64) -> f32 {
+        let ab: Vec<u64> = a.iter().map(|&x| f(in_fmt, x)).collect();
+        let bb: Vec<u64> = b.iter().map(|&x| f(in_fmt, x)).collect();
+        let out = tr_fdpa(in_fmt, &ab, &bb, f(Format::Fp32, c), TrFdpaCfg::cdna3());
+        f32::from_bits(out as u32)
+    }
+
+    #[test]
+    fn paper_section5_cdna3_fp16() {
+        // §5: fused truncated sum of products gives -2^23 - 0.5 (F=24),
+        // then + 2^23 = -0.5
+        let a = [-8192.0, -0.5, -0.25, -0.125, 0.0, 0.0, 0.0, 0.0];
+        let b = [1024.0, 1.0, 1.0, 1.0, 0.0, 0.0, 0.0, 0.0];
+        let d = run(Format::Fp16, &a, &b, 2f64.powi(23));
+        assert_eq!(d, -0.5, "CDNA3 TF32/BF16/FP16 produce -0.5");
+    }
+
+    #[test]
+    fn c_not_in_fused_sum() {
+        // products alone: 1.0; c = 2^30 swamps in the two-term RD sum
+        // T = 1.0 (e_max = 0), E = 30, RD_F2: 1.0 at quantum 2^(30-31)=2^-1
+        // survives exactly (2 quanta); c exact. Sum = 2^30 + 1 -> RNE-FP32
+        // rounds to 2^30 (tie-to-even at 2^30 quantum 2^7... inexact, rounds down)
+        let d = run(Format::Fp16, &[1.0], &[1.0], 2f64.powi(30));
+        assert_eq!(d, 2f32.powi(30));
+    }
+
+    #[test]
+    fn round_down_bias_on_negative_tail() {
+        // T = -0.625 with e_max = -1; c = 2^23 (E = 23, quantum F=24 -> 0.5,
+        // F2=31 -> 2^-8). T' = RD(-0.625 at 2^-8 quanta) exact = -160 quanta.
+        // Wait: F2 = 31 => quantum 2^(23-31) = 2^-8; -0.625 = -160 quanta exact.
+        // Sum = 2^23 - 0.625 -> RNE-FP32 = 2^23 - 0.625 ? fp32 quantum at
+        // 2^23 is 1.0: 8388607.375 -> RNE -> 8388607.5? not representable;
+        // quantum in [2^22,2^23) is 0.5 -> 8388607.375 rounds to .5
+        let a = [-0.5, -0.125];
+        let b = [1.0, 1.0];
+        let d = run(Format::Fp16, &a, &b, 2f64.powi(23));
+        assert_eq!(d, 8388607.5);
+    }
+
+    #[test]
+    fn asymmetry_of_rd() {
+        // Φ(-A, B, -C) != -Φ(A, B, C) (paper §6.2.4).
+        // T = 2^-24 + 2^-34; E = 0 (c = ±1); RD at F2 = 31:
+        //   positive: T' = 2^-24 (tail dropped), S = 1 + 2^-24, RNE tie -> 1.0
+        //   negative: T' = -(2^-24 + 2^-31), S past the tie -> -(1 + 2^-23)
+        let a = [2f64.powi(-12), 2f64.powi(-17)];
+        let b = [2f64.powi(-12), 2f64.powi(-17)];
+        let pos = run(Format::Fp16, &a, &b, 1.0);
+        let neg_a: Vec<f64> = a.iter().map(|x| -x).collect();
+        let neg = run(Format::Fp16, &neg_a, &b, -1.0);
+        assert_eq!(pos, 1.0);
+        assert_eq!(neg, -(1.0 + 2f32.powi(-23)));
+        assert_ne!(pos, -neg, "RD makes TR-FDPA asymmetric");
+    }
+
+    #[test]
+    fn product_overflow_to_inf() {
+        // BF16 supports huge values: 2^120 * 2^120 = 2^240 >= 2^128 -> +inf
+        let d = run(Format::Bf16, &[2f64.powi(120)], &[2f64.powi(120)], 0.0);
+        assert!(d.is_infinite() && d > 0.0);
+        let d = run(Format::Bf16, &[-(2f64.powi(120))], &[2f64.powi(120)], 0.0);
+        assert!(d.is_infinite() && d < 0.0);
+        // opposing overflows -> NaN
+        let d = run(
+            Format::Bf16,
+            &[2f64.powi(120), -(2f64.powi(120))],
+            &[2f64.powi(120), 2f64.powi(120)],
+            0.0,
+        );
+        assert!(d.is_nan());
+    }
+
+    #[test]
+    fn no_overflow_below_2_128() {
+        // 2^126 < 2^128: stays finite internally and is FP32-representable.
+        let d = run(Format::Bf16, &[2f64.powi(63)], &[2f64.powi(63)], 0.0);
+        assert_eq!(d, 2f32.powi(126));
+    }
+
+    #[test]
+    fn exact_zero_is_positive() {
+        let d = run(Format::Fp16, &[2.0, -2.0], &[1.0, 1.0], 0.0);
+        assert_eq!(d.to_bits(), 0);
+    }
+
+    #[test]
+    fn rne_output() {
+        // T exact 1 + 2^-24, single product path: output RNE ties-to-even -> 1.0
+        let d = run(Format::Fp16, &[1.0, 2f64.powi(-12)], &[1.0, 2f64.powi(-12)], 0.0);
+        assert_eq!(d, 1.0);
+    }
+}

@@ -1,0 +1,358 @@
+//! PJRT runtime: load the AOT artifacts produced by `python/compile/aot.py`
+//! and expose them to the rest of the system.
+//!
+//! The emulated-MMA artifacts (Pallas kernels lowered to HLO text) are
+//! adapted to [`MmaInterface`], so CLFP and the coordinator treat them as
+//! opaque black boxes — exactly the role silicon plays in the paper. The
+//! reference GEMMs provide `D_real` for the accuracy analysis, and the
+//! `bias_deviation` module drives Figure 3 end-to-end through XLA.
+//!
+//! Python never runs on this path: the artifacts are compiled once by
+//! `make artifacts` and the Rust binary is self-contained afterwards.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::formats::Format;
+use crate::interface::{BitMatrix, MmaFormats, MmaInterface, Scales};
+
+/// The xla crate's executable wrapper holds raw pointers and is not
+/// `Send`; PJRT itself documents executables as thread-safe for execution,
+/// so a marker wrapper restores `Send` for use behind a `Mutex`.
+struct SendExe(xla::PjRtLoadedExecutable);
+// SAFETY: PJRT loaded executables are immutable after compilation and the
+// C API guards execution internally; access here is additionally
+// serialized by the surrounding Mutex.
+unsafe impl Send for SendExe {}
+
+/// Manifest entry describing one artifact (one line of `manifest.txt`).
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub kind: String,
+    pub in_fmt: String,
+    pub m: usize,
+    pub n: usize,
+    pub k: usize,
+    pub extra: String,
+}
+
+/// Parse `artifacts/manifest.txt`.
+pub fn read_manifest(dir: &Path) -> Result<Vec<ArtifactMeta>> {
+    let text = std::fs::read_to_string(dir.join("manifest.txt"))
+        .with_context(|| format!("reading manifest in {}", dir.display()))?;
+    let mut out = Vec::new();
+    for line in text.lines() {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let parts: Vec<&str> = line.split_whitespace().collect();
+        if parts.len() < 6 {
+            bail!("malformed manifest line: {line}");
+        }
+        out.push(ArtifactMeta {
+            name: parts[0].to_string(),
+            kind: parts[1].to_string(),
+            in_fmt: parts[2].to_string(),
+            m: parts[3].parse()?,
+            n: parts[4].parse()?,
+            k: parts[5].parse()?,
+            extra: parts[6..].join(" "),
+        });
+    }
+    Ok(out)
+}
+
+/// A PJRT CPU runtime holding compiled executables.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client rooted at the artifacts directory.
+    pub fn new(artifacts_dir: impl AsRef<Path>) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(Self { client, dir: artifacts_dir.as_ref().to_path_buf() })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    fn compile(&self, file: &str) -> Result<xla::PjRtLoadedExecutable> {
+        let path = self.dir.join(file);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow!("parsing {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        self.client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {}: {e:?}", path.display()))
+    }
+
+    /// Load one emulated-MMA artifact as a black-box [`MmaInterface`].
+    pub fn load_mma(&self, meta: &ArtifactMeta) -> Result<PjrtMma> {
+        let exe = self.compile(&format!("{}.hlo.txt", meta.name))?;
+        let in_fmt = Format::parse(&meta.in_fmt)
+            .ok_or_else(|| anyhow!("unknown format {}", meta.in_fmt))?;
+        // FTZ artifacts and tfdpa RZ/RNE-FP32 produce FP32; RNE-FP16 FP16.
+        let out_fmt =
+            if meta.extra.contains("rho=RNE-FP16") { Format::Fp16 } else { Format::Fp32 };
+        Ok(PjrtMma {
+            exe: Mutex::new(SendExe(exe)),
+            name: meta.name.clone(),
+            m: meta.m,
+            n: meta.n,
+            k: meta.k,
+            formats: MmaFormats { a: in_fmt, b: in_fmt, c: out_fmt, d: out_fmt },
+        })
+    }
+
+    /// Load every emulated-MMA artifact listed in the manifest.
+    pub fn load_all(&self) -> Result<Vec<PjrtMma>> {
+        let mut out = Vec::new();
+        for meta in read_manifest(&self.dir)? {
+            if meta.kind == "tfdpa" || meta.kind == "ftz" {
+                out.push(self.load_mma(&meta)?);
+            }
+        }
+        Ok(out)
+    }
+
+    /// Load the FP32/FP64 reference GEMM (`which` is "f32" or "f64").
+    pub fn load_ref_gemm(&self, which: &str) -> Result<RefGemm> {
+        let exe = self.compile(&format!("gemm_ref_{which}.hlo.txt"))?;
+        let (m, n, k) = (16, 16, 16);
+        Ok(RefGemm { exe: Mutex::new(SendExe(exe)), f64_mode: which == "f64", m, n, k })
+    }
+
+    /// Load the Figure-3 deviation module.
+    pub fn load_bias_deviation(&self) -> Result<BiasDeviation> {
+        let exe = self.compile("bias_deviation.hlo.txt")?;
+        Ok(BiasDeviation { exe: Mutex::new(SendExe(exe)), m: 16, n: 16, k: 16 })
+    }
+}
+
+fn u32_literal(mat: &BitMatrix) -> Result<xla::Literal> {
+    let data: Vec<u32> = mat.data.iter().map(|&b| b as u32).collect();
+    xla::Literal::vec1(&data)
+        .reshape(&[mat.rows as i64, mat.cols as i64])
+        .map_err(|e| anyhow!("literal reshape: {e:?}"))
+}
+
+/// An AOT-compiled emulated MMA running under PJRT — the stand-in for the
+/// hardware MMA interface that CLFP probes.
+pub struct PjrtMma {
+    // PJRT execution is effectively thread-safe, but the xla crate's
+    // wrapper types are not Sync; a mutex keeps MmaInterface usable from
+    // the coordinator's worker threads.
+    exe: Mutex<SendExe>,
+    name: String,
+    m: usize,
+    n: usize,
+    k: usize,
+    formats: MmaFormats,
+}
+
+impl PjrtMma {
+    fn run(&self, a: &BitMatrix, b: &BitMatrix, c: &BitMatrix) -> Result<BitMatrix> {
+        let (la, lb, lc) = (u32_literal(a)?, u32_literal(b)?, u32_literal(c)?);
+        let exe = &self.exe.lock().unwrap().0;
+        let result = exe
+            .execute::<xla::Literal>(&[la, lb, lc])
+            .map_err(|e| anyhow!("execute {}: {e:?}", self.name))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch result: {e:?}"))?;
+        let out = lit.to_tuple1().map_err(|e| anyhow!("untuple: {e:?}"))?;
+        let vals: Vec<u32> = out.to_vec().map_err(|e| anyhow!("to_vec: {e:?}"))?;
+        Ok(BitMatrix {
+            rows: self.m,
+            cols: self.n,
+            fmt: self.formats.d,
+            data: vals.into_iter().map(|v| v as u64).collect(),
+        })
+    }
+}
+
+impl MmaInterface for PjrtMma {
+    fn shape(&self) -> (usize, usize, usize) {
+        (self.m, self.n, self.k)
+    }
+
+    fn formats(&self) -> MmaFormats {
+        self.formats
+    }
+
+    fn execute(&self, a: &BitMatrix, b: &BitMatrix, c: &BitMatrix, _scales: Scales) -> BitMatrix {
+        self.run(a, b, c).expect("PJRT execution failed")
+    }
+
+    fn name(&self) -> String {
+        format!("pjrt:{}", self.name)
+    }
+}
+
+/// Compiled float reference GEMM (`D_real` provider).
+pub struct RefGemm {
+    exe: Mutex<SendExe>,
+    f64_mode: bool,
+    pub m: usize,
+    pub n: usize,
+    pub k: usize,
+}
+
+impl RefGemm {
+    /// `D = A@B + C` over `f64` values (computed in f32 when the artifact
+    /// is the f32 reference).
+    pub fn run(&self, a: &[f64], b: &[f64], c: &[f64]) -> Result<Vec<f64>> {
+        let (m, n, k) = (self.m as i64, self.n as i64, self.k as i64);
+        let exe = &self.exe.lock().unwrap().0;
+        let lit = if self.f64_mode {
+            let la = xla::Literal::vec1(a).reshape(&[m, k]).map_err(wrap)?;
+            let lb = xla::Literal::vec1(b).reshape(&[k, n]).map_err(wrap)?;
+            let lc = xla::Literal::vec1(c).reshape(&[m, n]).map_err(wrap)?;
+            exe.execute::<xla::Literal>(&[la, lb, lc]).map_err(wrap)?[0][0]
+                .to_literal_sync()
+                .map_err(wrap)?
+        } else {
+            let af: Vec<f32> = a.iter().map(|&x| x as f32).collect();
+            let bf: Vec<f32> = b.iter().map(|&x| x as f32).collect();
+            let cf: Vec<f32> = c.iter().map(|&x| x as f32).collect();
+            let la = xla::Literal::vec1(&af).reshape(&[m, k]).map_err(wrap)?;
+            let lb = xla::Literal::vec1(&bf).reshape(&[k, n]).map_err(wrap)?;
+            let lc = xla::Literal::vec1(&cf).reshape(&[m, n]).map_err(wrap)?;
+            exe.execute::<xla::Literal>(&[la, lb, lc]).map_err(wrap)?[0][0]
+                .to_literal_sync()
+                .map_err(wrap)?
+        };
+        let out = lit.to_tuple1().map_err(wrap)?;
+        if self.f64_mode {
+            out.to_vec::<f64>().map_err(wrap)
+        } else {
+            Ok(out
+                .to_vec::<f32>()
+                .map_err(wrap)?
+                .into_iter()
+                .map(|x| x as f64)
+                .collect())
+        }
+    }
+}
+
+/// Compiled Figure-3 deviation module: one call returns
+/// `(D_rd, D_rz, D_real)` for FP16/FP32 bit-pattern inputs.
+pub struct BiasDeviation {
+    exe: Mutex<SendExe>,
+    pub m: usize,
+    pub n: usize,
+    pub k: usize,
+}
+
+impl BiasDeviation {
+    pub fn run(
+        &self,
+        a: &BitMatrix,
+        b: &BitMatrix,
+        c: &BitMatrix,
+    ) -> Result<(Vec<u32>, Vec<u32>, Vec<f64>)> {
+        let (la, lb, lc) = (u32_literal(a)?, u32_literal(b)?, u32_literal(c)?);
+        let exe = &self.exe.lock().unwrap().0;
+        let lit = exe.execute::<xla::Literal>(&[la, lb, lc]).map_err(wrap)?[0][0]
+            .to_literal_sync()
+            .map_err(wrap)?;
+        let (rd, rz, real) = lit.to_tuple3().map_err(wrap)?;
+        Ok((
+            rd.to_vec::<u32>().map_err(wrap)?,
+            rz.to_vec::<u32>().map_err(wrap)?,
+            real.to_vec::<f64>().map_err(wrap)?,
+        ))
+    }
+}
+
+fn wrap(e: xla::Error) -> anyhow::Error {
+    anyhow!("{e:?}")
+}
+
+/// Locate the artifacts directory: `$MMA_SIM_ARTIFACTS`, `./artifacts`, or
+/// the crate root's `artifacts/`.
+pub fn artifacts_dir() -> PathBuf {
+    if let Ok(p) = std::env::var("MMA_SIM_ARTIFACTS") {
+        return PathBuf::from(p);
+    }
+    for cand in [
+        PathBuf::from("artifacts"),
+        PathBuf::from("../artifacts"),
+        Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts"),
+    ] {
+        if cand.join("manifest.txt").exists() {
+            return cand;
+        }
+    }
+    PathBuf::from("artifacts")
+}
+
+/// Map a manifest entry to the equivalent Rust model, used by the
+/// cross-validation tests to pair each artifact with its golden model.
+pub fn model_for_artifact(meta: &ArtifactMeta) -> Result<crate::models::MmaModel> {
+    use crate::formats::Rho;
+    use crate::models::{MmaModel, ModelSpec};
+    let in_fmt = Format::parse(&meta.in_fmt).ok_or_else(|| anyhow!("fmt {}", meta.in_fmt))?;
+    let kv: HashMap<&str, &str> = meta
+        .extra
+        .split_whitespace()
+        .filter_map(|p| p.split_once('='))
+        .collect();
+    let spec = match meta.kind.as_str() {
+        "tfdpa" => {
+            let l_max: usize = kv.get("lmax").ok_or_else(|| anyhow!("lmax"))?.parse()?;
+            let f: i32 = kv.get("f").ok_or_else(|| anyhow!("f"))?.parse()?;
+            let rho = Rho::parse(kv.get("rho").ok_or_else(|| anyhow!("rho"))?)
+                .ok_or_else(|| anyhow!("bad rho"))?;
+            match *kv.get("variant").unwrap_or(&"t") {
+                "t" => ModelSpec::TFdpa { l_max, f, rho },
+                "tr" => ModelSpec::TrFdpa { l_max, f, f2: 31 },
+                other => bail!("unknown variant {other}"),
+            }
+        }
+        "ftz" => {
+            let p: usize = kv.get("p").ok_or_else(|| anyhow!("p"))?.parse()?;
+            ModelSpec::FtzAddMul { p }
+        }
+        other => bail!("not an MMA artifact kind: {other}"),
+    };
+    let out_fmt = if meta.extra.contains("rho=RNE-FP16") { Format::Fp16 } else { Format::Fp32 };
+    Ok(MmaModel::new(
+        format!("model:{}", meta.name),
+        (meta.m, meta.n, meta.k),
+        MmaFormats { a: in_fmt, b: in_fmt, c: out_fmt, d: out_fmt },
+        spec,
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_parsing() {
+        let dir = std::env::temp_dir().join("mma_sim_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.txt"),
+            "x tfdpa fp16 8 8 4 lmax=4 f=23 rho=RZ-FP32 variant=t\ny ftz bf16 16 16 16 p=2\n",
+        )
+        .unwrap();
+        let metas = read_manifest(&dir).unwrap();
+        assert_eq!(metas.len(), 2);
+        assert_eq!(metas[0].m, 8);
+        let model = model_for_artifact(&metas[0]).unwrap();
+        assert_eq!(model.k, 4);
+        let model = model_for_artifact(&metas[1]).unwrap();
+        assert!(matches!(model.spec, crate::models::ModelSpec::FtzAddMul { p: 2 }));
+    }
+}

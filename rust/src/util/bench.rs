@@ -1,0 +1,105 @@
+//! Minimal benchmarking harness (the offline image ships no criterion).
+//!
+//! Measures wall time over adaptive iteration counts with warmup, and
+//! prints mean / p50 / p99 per iteration plus derived throughput, in a
+//! format stable enough to diff across runs (EXPERIMENTS.md §Perf).
+
+use std::time::Instant;
+
+/// One benchmark result.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p99_ns: f64,
+}
+
+impl BenchResult {
+    pub fn report(&self) -> String {
+        format!(
+            "{:<44} {:>10} iters   mean {:>12}   p50 {:>12}   p99 {:>12}",
+            self.name,
+            self.iters,
+            fmt_ns(self.mean_ns),
+            fmt_ns(self.p50_ns),
+            fmt_ns(self.p99_ns),
+        )
+    }
+
+    /// Operations per second given `ops` work items per iteration.
+    pub fn throughput(&self, ops: f64) -> f64 {
+        ops / (self.mean_ns / 1e9)
+    }
+}
+
+fn fmt_ns(ns: f64) -> String {
+    if ns < 1_000.0 {
+        format!("{ns:.1} ns")
+    } else if ns < 1_000_000.0 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Run a benchmark: warm up for ~0.2 s, then sample until ~1 s or
+/// `max_samples` iterations, whichever comes first.
+pub fn bench<F: FnMut()>(name: &str, mut f: F) -> BenchResult {
+    // warmup
+    let warm_start = Instant::now();
+    let mut warm_iters = 0usize;
+    while warm_start.elapsed().as_millis() < 200 && warm_iters < 10_000 {
+        f();
+        warm_iters += 1;
+    }
+    let per_iter = warm_start.elapsed().as_nanos() as f64 / warm_iters.max(1) as f64;
+    let target = ((1e9 / per_iter.max(1.0)) as usize).clamp(10, 100_000);
+
+    let mut samples = Vec::with_capacity(target);
+    for _ in 0..target {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_nanos() as f64);
+    }
+    samples.sort_by(f64::total_cmp);
+    let n = samples.len();
+    let mean = samples.iter().sum::<f64>() / n as f64;
+    let p50 = samples[n / 2];
+    let p99 = samples[((n * 99) / 100).min(n - 1)];
+    let r = BenchResult { name: name.to_string(), iters: n, mean_ns: mean, p50_ns: p50, p99_ns: p99 };
+    println!("{}", r.report());
+    r
+}
+
+/// Prevent the optimizer from discarding a value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_produces_sane_stats() {
+        let mut acc = 0u64;
+        let r = bench("noop-ish", || {
+            acc = black_box(acc.wrapping_add(1));
+        });
+        assert!(r.iters >= 10);
+        assert!(r.mean_ns >= 0.0);
+        assert!(r.p99_ns >= r.p50_ns * 0.5);
+    }
+
+    #[test]
+    fn fmt_ns_ranges() {
+        assert!(fmt_ns(10.0).contains("ns"));
+        assert!(fmt_ns(10_000.0).contains("µs"));
+        assert!(fmt_ns(10_000_000.0).contains("ms"));
+    }
+}

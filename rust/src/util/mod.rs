@@ -1,0 +1,7 @@
+//! Small utilities shared across the crate.
+
+pub mod bench;
+pub mod rng;
+
+pub use bench::{bench, black_box, BenchResult};
+pub use rng::Rng;

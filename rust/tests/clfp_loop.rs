@@ -1,0 +1,89 @@
+//! The paper's full closed loop, end-to-end: CLFP must re-derive the
+//! arithmetic behavior of registry instructions treated as black boxes,
+//! and of the PJRT-compiled Pallas artifacts (the silicon stand-in).
+
+use mma_sim::clfp::{infer, ClfpConfig};
+use mma_sim::formats::Rho;
+use mma_sim::isa::{find, Arch};
+use mma_sim::models::ModelSpec;
+use mma_sim::runtime::{artifacts_dir, read_manifest, Runtime};
+
+fn cfg(tests: usize) -> ClfpConfig {
+    ClfpConfig { validate_tests: tests, seed: 0xC1F9 }
+}
+
+#[test]
+fn clfp_recovers_volta() {
+    let m = find(Arch::Volta, "HMMA.884.F32").unwrap().model();
+    let inf = infer(&m, cfg(200));
+    assert_eq!(
+        inf.inferred,
+        Some(ModelSpec::TFdpa { l_max: 4, f: 23, rho: Rho::RzFp32 })
+    );
+}
+
+#[test]
+fn clfp_recovers_ada_fp8() {
+    let m = find(Arch::AdaLovelace, "QMMA.16832.F32.E4M3").unwrap().model();
+    let inf = infer(&m, cfg(200));
+    assert_eq!(
+        inf.inferred,
+        Some(ModelSpec::TFdpa { l_max: 16, f: 13, rho: Rho::RzE8M13 }),
+        "survivors: {:?}",
+        inf.survivors
+    );
+}
+
+#[test]
+fn clfp_recovers_cdna3_gtr() {
+    let m = find(Arch::Cdna3, "16x16x32_fp8").unwrap().model();
+    let inf = infer(&m, cfg(200));
+    assert_eq!(
+        inf.inferred,
+        Some(ModelSpec::GtrFdpa { l_max: 16, f: 24, f2: 31 }),
+        "survivors: {:?}",
+        inf.survivors
+    );
+}
+
+#[test]
+fn clfp_recovers_cdna2_bf16_both_encodings() {
+    let m = find(Arch::Cdna2, "16x16x8_bf16").unwrap().model();
+    let inf = infer(&m, cfg(200));
+    assert_eq!(inf.inferred, Some(ModelSpec::FtzAddMul { p: 2 }));
+    let m = find(Arch::Cdna2, "16x16x16_bf16_1k").unwrap().model();
+    let inf = infer(&m, cfg(200));
+    assert_eq!(inf.inferred, Some(ModelSpec::FtzAddMul { p: 4 }));
+}
+
+#[test]
+fn clfp_infers_pjrt_artifacts() {
+    // The real closed loop: the black box is a *different implementation*
+    // (JAX/Pallas under XLA). CLFP must still land on the right model.
+    let dir = artifacts_dir();
+    if !dir.join("manifest.txt").exists() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let rt = Runtime::new(&dir).expect("runtime");
+    let metas = read_manifest(&dir).expect("manifest");
+
+    let want: &[(&str, ModelSpec)] = &[
+        ("volta_fp16_fp32", ModelSpec::TFdpa { l_max: 4, f: 23, rho: Rho::RzFp32 }),
+        ("cdna3_fp16", ModelSpec::TrFdpa { l_max: 8, f: 24, f2: 31 }),
+        ("cdna2_fp16", ModelSpec::FtzAddMul { p: 4 }),
+    ];
+    for (name, expect) in want {
+        let meta = metas.iter().find(|m| &m.name == name).expect("artifact listed");
+        let pjrt = rt.load_mma(meta).expect("load");
+        // modest validation count: each PJRT execute is a full XLA launch
+        let inf = infer(&pjrt, cfg(30));
+        assert!(inf.independent, "{name}");
+        assert_eq!(
+            inf.inferred.as_ref(),
+            Some(expect),
+            "{name}: survivors {:?}",
+            inf.survivors
+        );
+    }
+}

@@ -1,0 +1,118 @@
+//! Coordinator service integration: campaigns over many pairs, queue
+//! backpressure under slow consumers, and PJRT-backed verification.
+
+use std::sync::Arc;
+
+use mma_sim::coordinator::{Coordinator, Job, VerifyPair};
+use mma_sim::formats::{Format, Rho};
+use mma_sim::interface::MmaFormats;
+use mma_sim::isa;
+use mma_sim::models::{MmaModel, ModelSpec};
+use mma_sim::runtime::{artifacts_dir, model_for_artifact, read_manifest, Runtime};
+
+fn fmts16() -> MmaFormats {
+    MmaFormats { a: Format::Fp16, b: Format::Fp16, c: Format::Fp32, d: Format::Fp32 }
+}
+
+#[test]
+fn campaign_across_whole_registry_self_pairs() {
+    let pairs: Vec<VerifyPair> = isa::registry()
+        .into_iter()
+        .filter(|i| i.m * i.n <= 256)
+        .map(|i| VerifyPair {
+            name: format!("{} {}", i.arch.target(), i.name),
+            dut: Arc::new(i.model()),
+            golden: Arc::new(i.model()),
+        })
+        .collect();
+    assert!(pairs.len() >= 15);
+    let n_pairs = pairs.len();
+    let coord = Coordinator::new(pairs, 8, 16);
+    let report = coord.run_campaign(2, 12, 5);
+    assert_eq!(report.total_tests, 2 * 12 * n_pairs);
+    assert_eq!(report.total_mismatches, 0, "{}", report.render());
+    coord.shutdown();
+}
+
+#[test]
+fn manual_submission_and_collection() {
+    let pair = VerifyPair {
+        name: "x".into(),
+        dut: Arc::new(MmaModel::new(
+            "d",
+            (4, 4, 8),
+            fmts16(),
+            ModelSpec::TFdpa { l_max: 8, f: 24, rho: Rho::RzFp32 },
+        )),
+        golden: Arc::new(MmaModel::new(
+            "g",
+            (4, 4, 8),
+            fmts16(),
+            ModelSpec::TFdpa { l_max: 8, f: 24, rho: Rho::RzFp32 },
+        )),
+    };
+    let coord = Coordinator::new(vec![pair], 2, 2);
+    for id in 0..6 {
+        coord.submit(Job { id, pair: "x".into(), batch: 10, seed: id });
+    }
+    let mut seen = std::collections::BTreeSet::new();
+    for _ in 0..6 {
+        let out = coord.next_outcome();
+        assert_eq!(out.tests, 10);
+        seen.insert(out.id);
+    }
+    assert_eq!(seen.len(), 6, "every job must complete exactly once");
+    coord.shutdown();
+}
+
+#[test]
+fn unknown_pair_yields_empty_outcome() {
+    let pair = VerifyPair {
+        name: "known".into(),
+        dut: Arc::new(MmaModel::new(
+            "d",
+            (4, 4, 8),
+            fmts16(),
+            ModelSpec::EFdpa { l: 4 },
+        )),
+        golden: Arc::new(MmaModel::new(
+            "g",
+            (4, 4, 8),
+            fmts16(),
+            ModelSpec::EFdpa { l: 4 },
+        )),
+    };
+    let coord = Coordinator::new(vec![pair], 1, 2);
+    coord.submit(Job { id: 1, pair: "missing".into(), batch: 10, seed: 3 });
+    let out = coord.next_outcome();
+    assert_eq!(out.tests, 0, "unroutable job completes with zero tests");
+    coord.shutdown();
+}
+
+#[test]
+fn pjrt_campaign_is_clean() {
+    let dir = artifacts_dir();
+    if !dir.join("manifest.txt").exists() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let rt = Runtime::new(&dir).expect("runtime");
+    let mut pairs = Vec::new();
+    for meta in read_manifest(&dir).unwrap() {
+        if meta.kind != "tfdpa" && meta.kind != "ftz" {
+            continue;
+        }
+        pairs.push(VerifyPair {
+            name: meta.name.clone(),
+            dut: Arc::new(rt.load_mma(&meta).unwrap()),
+            golden: Arc::new(model_for_artifact(&meta).unwrap()),
+        });
+    }
+    let n = pairs.len();
+    assert!(n >= 8, "all artifacts registered");
+    let coord = Coordinator::new(pairs, 4, 8);
+    let report = coord.run_campaign(1, 10, 77);
+    assert_eq!(report.total_tests, 10 * n);
+    assert_eq!(report.total_mismatches, 0, "{}", report.render());
+    coord.shutdown();
+}

@@ -1,0 +1,158 @@
+//! End-to-end integration tests across modules: registry → models →
+//! analysis, exercising the full matrix path rather than single dpa calls.
+
+use mma_sim::analysis::discrepancy::{table8, table8_fp64_fp32};
+use mma_sim::clfp::random_inputs;
+use mma_sim::formats::Format;
+use mma_sim::interface::{BitMatrix, MmaInterface};
+use mma_sim::isa::{self, Arch, InputClass};
+use mma_sim::util::Rng;
+
+#[test]
+fn every_registry_instruction_executes() {
+    let mut rng = Rng::new(1);
+    for instr in isa::registry() {
+        let model = instr.model();
+        let (a, b, c) = random_inputs(&mut rng, &model, 2);
+        let d = model.execute(&a, &b, &c, None);
+        assert_eq!(d.rows, instr.m, "{}", instr.name);
+        assert_eq!(d.cols, instr.n, "{}", instr.name);
+        // every output must be a valid pattern of the output format
+        for &bits in &d.data {
+            assert_eq!(bits & !instr.formats.d.mask(), 0, "{}", instr.name);
+        }
+    }
+}
+
+#[test]
+fn every_instruction_handles_specials_without_panic() {
+    for instr in isa::registry() {
+        let model = instr.model();
+        let (m, n, k) = model.shape();
+        let fmts = model.formats();
+        // NaN/Inf patterns where the format has them
+        let mut a = BitMatrix::zeros(m, k, fmts.a);
+        if let Some(nan) = fmts.a.nan_pattern() {
+            a.set(0, 0, nan);
+        }
+        if let Some(inf) = fmts.a.inf_pattern() {
+            if k > 1 {
+                a.set(0, 1, inf);
+            }
+        }
+        let b = BitMatrix::splat(k, n, fmts.b, 1.0);
+        let c = BitMatrix::zeros(m, n, fmts.c);
+        let d = model.execute(&a, &b, &c, None);
+        if fmts.a.nan_pattern().is_some() {
+            let out = fmts.d.decode(d.get(0, 0));
+            assert!(out.is_nan(), "{}: NaN input must produce NaN", instr.name);
+        }
+    }
+}
+
+#[test]
+fn symmetry_classification_matches_behavior() {
+    // Φ(-A,B,-C) == -Φ(A,B,C) must hold exactly for symmetric models and
+    // fail for at least one input on asymmetric ones.
+    let mut rng = Rng::new(3);
+    for instr in isa::registry() {
+        if !instr.formats.a.has_sign() {
+            continue;
+        }
+        let model = instr.model();
+        let mut found_asym = false;
+        for t in 0..12 {
+            let (a, b, c) = random_inputs(&mut rng, &model, t);
+            let d1 = model.execute(&a, &b, &c, None);
+            let d2 = model.execute(&a.negated(), &b, &c.negated(), None);
+            // compare -d1 vs d2, modulo NaN payloads and the sign of zero
+            // (the exact-zero convention is +0 for cancellation in both
+            // directions, so strict sign-flip equality cannot hold there)
+            let diverges = d1.data.iter().zip(d2.data.iter()).any(|(&x, &y)| {
+                let dx = instr.formats.d.decode(x);
+                let dy = instr.formats.d.decode(y);
+                if dx.is_nan() || dy.is_nan() {
+                    return dx.is_nan() != dy.is_nan();
+                }
+                if dx.is_zero() && dy.is_zero() {
+                    return false;
+                }
+                (x ^ (1u64 << (instr.formats.d.width() - 1))) != y
+            });
+            if diverges {
+                found_asym = true;
+                assert!(
+                    !instr.spec.is_symmetric(),
+                    "{}: classified symmetric but behaved asymmetrically",
+                    instr.name
+                );
+            }
+        }
+        if instr.arch == Arch::Cdna3
+            && matches!(instr.class, InputClass::Fp16 | InputClass::Bf16)
+        {
+            assert!(
+                found_asym,
+                "{}: CDNA3 TR-FDPA must show asymmetry within a few random MMAs",
+                instr.name
+            );
+        }
+    }
+}
+
+#[test]
+fn table8_is_deterministic() {
+    assert_eq!(table8(), table8());
+    // and the FP64/FP32 row is exactly -0.875 everywhere
+    for (name, v) in table8_fp64_fp32() {
+        assert_eq!(v, -0.875, "{name}");
+    }
+}
+
+#[test]
+fn fp16_output_instructions_stay_in_fp16_space() {
+    let mut rng = Rng::new(9);
+    for instr in isa::registry().iter().filter(|i| i.formats.d == Format::Fp16) {
+        let model = instr.model();
+        let (a, b, c) = random_inputs(&mut rng, &model, 5);
+        let d = model.execute(&a, &b, &c, None);
+        for &bits in &d.data {
+            assert!(bits <= 0xFFFF, "{}: FP16 output exceeds 16 bits", instr.name);
+        }
+    }
+}
+
+#[test]
+fn mx_scaled_instructions_accept_scale_operands() {
+    let mut rng = Rng::new(11);
+    for instr in isa::registry()
+        .iter()
+        .filter(|i| matches!(i.class, InputClass::Mxfp8 | InputClass::Mxfp4 | InputClass::Nvfp4))
+    {
+        let model = instr.model();
+        let spec = model.scale_spec().expect("MX instruction has scales");
+        let (m, n, k) = model.shape();
+        let (a, b, c) = random_inputs(&mut rng, &model, 2);
+        let nblk = k / spec.kblock;
+        let unit = match spec.fmt {
+            Format::E8M0 => 127u64,
+            Format::Ue4M3 => 0x38,
+            _ => unreachable!(),
+        };
+        let sa = BitMatrix { rows: m, cols: nblk, fmt: spec.fmt, data: vec![unit; m * nblk] };
+        let sb = BitMatrix { rows: nblk, cols: n, fmt: spec.fmt, data: vec![unit; nblk * n] };
+        let d_none = model.execute(&a, &b, &c, None);
+        let d_unit = model.execute(&a, &b, &c, Some((&sa, &sb)));
+        assert_eq!(d_none.data, d_unit.data, "{}: unit scales == no scales", instr.name);
+        // non-unit scale changes the result
+        let mut sa2 = sa.clone();
+        for v in sa2.data.iter_mut() {
+            *v = match spec.fmt {
+                Format::E8M0 => 131,
+                _ => Format::Ue4M3.from_f64(4.0),
+            };
+        }
+        let d_scaled = model.execute(&a, &b, &c, Some((&sa2, &sb)));
+        assert_ne!(d_scaled.data, d_unit.data, "{}: scales must matter", instr.name);
+    }
+}

@@ -1,0 +1,209 @@
+//! Property-based tests over randomized inputs (the offline image ships
+//! no proptest crate; cases are generated with the crate's deterministic
+//! RNG, shrink-free but seeded and reproducible).
+//!
+//! Invariants covered:
+//! - format encode/decode round-trips for every format and random bits;
+//! - Φ_FMA equals the host fused chain on FP32/FP64;
+//! - T-FDPA truncation monotonicity (larger F never increases |error|
+//!   for RZ outputs on positive-only inputs);
+//! - T-FDPA error bound (Table 9);
+//! - symmetric models negate cleanly; RD models don't (statistically);
+//! - Kulisch exactness against i128 arithmetic on small inputs;
+//! - zero-sign convention consistency between ops.
+
+use mma_sim::fixedpoint::Kulisch;
+use mma_sim::formats::{Format, Rho};
+use mma_sim::interface::{MmaFormats, MmaInterface};
+use mma_sim::models::{MmaModel, ModelSpec};
+use mma_sim::ops::{e_fdpa, fma, t_fdpa, TFdpaCfg};
+use mma_sim::util::Rng;
+
+const CASES: usize = 4000;
+
+#[test]
+fn prop_format_roundtrip_all_formats() {
+    let mut rng = Rng::new(101);
+    for fmt in Format::ALL {
+        for _ in 0..CASES / 10 {
+            let bits = rng.bits(fmt.width());
+            let d = fmt.decode(bits);
+            if d.is_nan() {
+                continue;
+            }
+            let v = fmt.to_f64(bits);
+            assert_eq!(fmt.from_f64(v), bits, "{fmt:?} {bits:#x} {v}");
+        }
+    }
+}
+
+#[test]
+fn prop_fma_matches_host() {
+    let mut rng = Rng::new(103);
+    for _ in 0..CASES {
+        let a = f32::from_bits(rng.next_u32());
+        let b = f32::from_bits(rng.next_u32());
+        let c = f32::from_bits(rng.next_u32());
+        let got = fma(
+            Format::Fp32,
+            a.to_bits() as u64,
+            b.to_bits() as u64,
+            c.to_bits() as u64,
+        );
+        let want = a.mul_add(b, c);
+        if want.is_nan() {
+            assert!(f32::from_bits(got as u32).is_nan());
+        } else {
+            assert_eq!(got as u32, want.to_bits(), "{a} {b} {c}");
+        }
+    }
+}
+
+#[test]
+fn prop_e_fdpa_error_is_half_ulp() {
+    // E-FDPA = RNE(exact): error vs exact f64 recomputation <= 0.5 ulp
+    let mut rng = Rng::new(107);
+    for _ in 0..CASES / 4 {
+        let a: Vec<u64> = (0..4).map(|_| Format::Fp16.from_f64(rng.normal())).collect();
+        let b: Vec<u64> = (0..4).map(|_| Format::Fp16.from_f64(rng.normal())).collect();
+        let c = Format::Fp32.from_f64(rng.normal());
+        let out = e_fdpa(Format::Fp16, &a, &b, c);
+        let got = Format::Fp32.to_f64(out);
+        let exact: f64 = a
+            .iter()
+            .zip(b.iter())
+            .map(|(&x, &y)| Format::Fp16.to_f64(x) * Format::Fp16.to_f64(y))
+            .sum::<f64>()
+            + Format::Fp32.to_f64(c);
+        let ulp = 2f64.powi((exact.abs().log2().floor() as i32).max(-126) - 23);
+        assert!(
+            (got - exact).abs() <= 0.5 * ulp + 1e-300,
+            "{got} vs {exact} (ulp {ulp})"
+        );
+    }
+}
+
+#[test]
+fn prop_tfdpa_more_precision_is_no_worse_on_positive_inputs() {
+    // With all-positive summands (no cancellation), increasing F can only
+    // keep more of the tail: |d_F25 - exact| <= |d_F13 - exact|.
+    let mut rng = Rng::new(109);
+    for _ in 0..CASES / 8 {
+        let a: Vec<u64> =
+            (0..8).map(|_| Format::Fp16.from_f64(rng.uniform() * 8.0 + 0.001)).collect();
+        let b: Vec<u64> =
+            (0..8).map(|_| Format::Fp16.from_f64(rng.uniform() * 8.0 + 0.001)).collect();
+        let c = Format::Fp32.from_f64(rng.uniform());
+        let exact: f64 = a
+            .iter()
+            .zip(b.iter())
+            .map(|(&x, &y)| Format::Fp16.to_f64(x) * Format::Fp16.to_f64(y))
+            .sum::<f64>()
+            + Format::Fp32.to_f64(c);
+        let lo = t_fdpa(Format::Fp16, &a, &b, c, TFdpaCfg { f: 13, rho: Rho::RzFp32 });
+        let hi = t_fdpa(Format::Fp16, &a, &b, c, TFdpaCfg { f: 25, rho: Rho::RzFp32 });
+        let e_lo = (Format::Fp32.to_f64(lo) - exact).abs();
+        let e_hi = (Format::Fp32.to_f64(hi) - exact).abs();
+        assert!(e_hi <= e_lo + 1e-12, "F=25 err {e_hi} > F=13 err {e_lo}");
+    }
+}
+
+#[test]
+fn prop_tfdpa_error_bound_table9() {
+    let mut rng = Rng::new(113);
+    let l = 16usize;
+    let f = 25i32;
+    for _ in 0..CASES / 8 {
+        let a: Vec<u64> = (0..l).map(|_| Format::Fp16.from_f64(rng.dnn_mix())).collect();
+        let b: Vec<u64> = (0..l).map(|_| Format::Fp16.from_f64(rng.normal())).collect();
+        let c = Format::Fp32.from_f64(rng.normal());
+        let out = t_fdpa(Format::Fp16, &a, &b, c, TFdpaCfg { f, rho: Rho::RzFp32 });
+        let got = Format::Fp32.to_f64(out);
+        let prods: Vec<f64> = a
+            .iter()
+            .zip(b.iter())
+            .map(|(&x, &y)| Format::Fp16.to_f64(x) * Format::Fp16.to_f64(y))
+            .collect();
+        let exact: f64 = prods.iter().sum::<f64>() + Format::Fp32.to_f64(c);
+        let emax_val = prods
+            .iter()
+            .map(|p| p.abs())
+            .fold(Format::Fp32.to_f64(c).abs(), f64::max);
+        if emax_val == 0.0 {
+            continue;
+        }
+        let emax = emax_val.log2().floor() as i32 + 2; // nominal exp can exceed log2
+        let bound = (l as f64 + 1.0) * 2f64.powi(emax - f)
+            + 2f64.powi((got.abs().log2().floor() as i32).max(-126) - 22);
+        assert!(
+            (got - exact).abs() <= bound,
+            "err {} bound {bound} (emax {emax})",
+            (got - exact).abs()
+        );
+    }
+}
+
+#[test]
+fn prop_symmetric_models_negate_cleanly() {
+    let mut rng = Rng::new(127);
+    let fmts = MmaFormats { a: Format::Fp16, b: Format::Fp16, c: Format::Fp32, d: Format::Fp32 };
+    for spec in [
+        ModelSpec::TFdpa { l_max: 8, f: 24, rho: Rho::RzFp32 },
+        ModelSpec::EFdpa { l: 4 },
+        ModelSpec::FtzAddMul { p: 2 },
+    ] {
+        let model = MmaModel::new("sym", (4, 4, 8), fmts, spec);
+        for t in 0..60 {
+            let (a, b, c) = mma_sim::clfp::random_inputs(&mut rng, &model, t);
+            let d1 = model.execute(&a, &b, &c, None);
+            let d2 = model.execute(&a.negated(), &b, &c.negated(), None);
+            for (x, y) in d1.data.iter().zip(d2.data.iter()) {
+                let dx = Format::Fp32.decode(*x);
+                if dx.is_nan() {
+                    continue;
+                }
+                assert_eq!(*x ^ (1 << 31), *y, "{spec:?}");
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_kulisch_matches_i128_on_small_ranges() {
+    let mut rng = Rng::new(131);
+    for _ in 0..CASES / 4 {
+        let mut acc = Kulisch::<6>::new(-64);
+        let mut reference: i128 = 0; // in units of 2^-64 (the window LSB)
+        for _ in 0..8 {
+            let mag = rng.bits(30) as u128;
+            let exp = (rng.below(40) as i32) - 32; // [-32, 8)
+            let neg = rng.below(2) == 1;
+            acc.add(neg, mag, exp);
+            let shifted = (mag as i128) << (exp + 64);
+            reference += if neg { -shifted } else { shifted };
+        }
+        let (neg, mag, lsb) = acc.to_sign_mag();
+        // lsb >= -64 by construction; express got in the same 2^-64 units
+        let got = if neg { -(mag as i128) } else { mag as i128 } << (lsb + 64);
+        assert_eq!(got, reference);
+    }
+}
+
+#[test]
+fn prop_zero_sign_convention_shared() {
+    // cancellation -> +0 across fused ops; all-negative-zeros -> -0
+    let mut rng = Rng::new(137);
+    for _ in 0..CASES / 20 {
+        let x = rng.normal().abs() + 0.5;
+        let a = [Format::Fp16.from_f64(x), Format::Fp16.from_f64(-x)];
+        let b = [Format::Fp16.from_f64(1.0), Format::Fp16.from_f64(1.0)];
+        let t = t_fdpa(Format::Fp16, &a, &b, 0, TFdpaCfg { f: 24, rho: Rho::RzFp32 });
+        let e = e_fdpa(Format::Fp16, &a, &b, 0);
+        assert_eq!(t, 0, "T-FDPA cancellation is +0");
+        assert_eq!(e, 0, "E-FDPA cancellation is +0");
+    }
+    let neg0 = [0x8000u64, 0x8000];
+    let pos1 = [Format::Fp16.from_f64(1.0), Format::Fp16.from_f64(1.0)];
+    let t = t_fdpa(Format::Fp16, &neg0, &pos1, 0x8000_0000, TFdpaCfg { f: 24, rho: Rho::RzFp32 });
+    assert_eq!(t, 0x8000_0000, "all-negative-zero inputs give -0");
+}

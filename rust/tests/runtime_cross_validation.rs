@@ -1,0 +1,49 @@
+//! Cross-validation: the Rust golden models must agree bit-for-bit with
+//! the AOT-compiled Pallas kernels executed under PJRT — the closed loop
+//! between the two independent implementations of the paper's algorithms.
+
+use mma_sim::interface::{BitMatrix, MmaInterface};
+use mma_sim::runtime::{artifacts_dir, model_for_artifact, read_manifest, Runtime};
+use mma_sim::util::Rng;
+
+fn random_bits(rng: &mut Rng, rows: usize, cols: usize, fmt: mma_sim::Format) -> BitMatrix {
+    let mut m = BitMatrix::zeros(rows, cols, fmt);
+    for v in m.data.iter_mut() {
+        *v = rng.bits(fmt.width());
+    }
+    m
+}
+
+#[test]
+fn rust_models_match_pjrt_artifacts_bit_for_bit() {
+    let dir = artifacts_dir();
+    if !dir.join("manifest.txt").exists() {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        return;
+    }
+    let rt = Runtime::new(&dir).expect("runtime");
+    let metas = read_manifest(&dir).expect("manifest");
+    let mut rng = Rng::new(0xA0_7E57);
+    let mut total = 0usize;
+    for meta in metas.iter().filter(|m| m.kind == "tfdpa" || m.kind == "ftz") {
+        let pjrt = rt.load_mma(meta).expect("load artifact");
+        let model = model_for_artifact(meta).expect("model");
+        let (m, n, k) = pjrt.shape();
+        let fmts = pjrt.formats();
+        for trial in 0..20 {
+            let a = random_bits(&mut rng, m, k, fmts.a);
+            let b = random_bits(&mut rng, k, n, fmts.b);
+            let c = random_bits(&mut rng, m, n, fmts.c);
+            let want = model.execute(&a, &b, &c, None);
+            let got = pjrt.execute(&a, &b, &c, None);
+            assert_eq!(
+                got.data, want.data,
+                "artifact {} trial {trial} diverges from Rust model",
+                meta.name
+            );
+            total += m * n;
+        }
+    }
+    assert!(total > 0, "no artifacts validated");
+    eprintln!("cross-validated {total} output elements bit-for-bit");
+}
