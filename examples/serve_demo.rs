@@ -23,18 +23,22 @@ fn main() {
     // PJRT artifacts vs golden Rust models (the paper's closed loop)
     let dir = artifacts_dir();
     if dir.join("manifest.txt").exists() {
-        let rt = Runtime::new(&dir).expect("PJRT runtime");
-        for meta in read_manifest(&dir).unwrap() {
-            if meta.kind != "tfdpa" && meta.kind != "ftz" {
-                continue;
+        match Runtime::new(&dir) {
+            Ok(rt) => {
+                for meta in read_manifest(&dir).unwrap() {
+                    if meta.kind != "tfdpa" && meta.kind != "ftz" {
+                        continue;
+                    }
+                    pairs.push(VerifyPair {
+                        name: format!("pjrt:{}", meta.name),
+                        dut: Arc::new(rt.load_mma(&meta).unwrap()),
+                        golden: Arc::new(model_for_artifact(&meta).unwrap()),
+                    });
+                }
+                println!("registered {} PJRT verification pairs", pairs.len());
             }
-            pairs.push(VerifyPair {
-                name: format!("pjrt:{}", meta.name),
-                dut: Arc::new(rt.load_mma(&meta).unwrap()),
-                golden: Arc::new(model_for_artifact(&meta).unwrap()),
-            });
+            Err(e) => println!("skipping PJRT pairs: {e}"),
         }
-        println!("registered {} PJRT verification pairs", pairs.len());
     } else {
         println!("artifacts not built; running model-vs-model pairs only");
     }

@@ -1,9 +1,16 @@
 //! Bench: the simulator hot path — per-elementary-op and per-dot-product
-//! throughput for every model family. This is the §Perf optimization
-//! target (EXPERIMENTS.md records before/after).
+//! throughput for every model family, plus the batch-engine before/after
+//! record (seed-style scalar execute vs scratch-reusing serial batch vs
+//! multi-threaded parallel batch).
+//!
+//! Emits `BENCH_hotpath.json` at the repo root (`MMA_BENCH_OUT` overrides
+//! the directory); EXPERIMENTS.md records the before/after numbers.
+//! `--smoke` (or `MMA_BENCH_SMOKE=1`) runs a seconds-long CI variant whose
+//! numbers are not meaningful.
 
+use mma_sim::clfp::random_case_batch;
 use mma_sim::formats::{Format, Rho};
-use mma_sim::interface::MmaInterface;
+use mma_sim::interface::{auto_threads, parallel_execute_batch_with, MmaInterface};
 use mma_sim::interface::MmaFormats;
 use mma_sim::models::{MmaModel, ModelSpec};
 use mma_sim::ops::{
@@ -16,8 +23,10 @@ fn random_fp16(rng: &mut Rng, n: usize) -> Vec<u64> {
 }
 
 fn main() {
+    mma_sim::util::bench::parse_bench_args();
     println!("== hotpath ==");
     let mut rng = Rng::new(0xBEEF);
+    let mut records: Vec<(String, f64, f64)> = Vec::new(); // (name, mean_ns, Mdpa/s)
 
     // elementary ops
     let a16 = random_fp16(&mut rng, 16);
@@ -34,30 +43,35 @@ fn main() {
         ));
     });
     println!("    -> {:.2} M t_fdpa/s", r.throughput(1.0) / 1e6);
+    records.push((r.name.clone(), r.mean_ns, r.throughput(1.0) / 1e6));
 
-    bench("op/tr_fdpa/L8_F24_F2_31", || {
-        black_box(tr_fdpa(Format::Fp16, &a16[..8], &b16[..8], c32, TrFdpaCfg::cdna3()));
-    });
-    bench("op/gtr_fdpa/L16", || {
-        black_box(gtr_fdpa(Format::Fp8E4M3, &a16, &b16, c32, GtrFdpaCfg::cdna3()));
-    });
-    bench("op/e_fdpa/L4", || {
-        black_box(e_fdpa(Format::Fp16, &a16[..4], &b16[..4], c32));
-    });
-    bench("op/fma_chain/K4", || {
-        let mut d = c32;
-        for i in 0..4 {
-            d = fma(Format::Fp32, a16[i] << 16, b16[i] << 16, d);
-        }
-        black_box(d);
-    });
-    bench("op/ftz_mul+add/P4", || {
-        let p0 = ftz_mul(Format::Fp16, a16[0], b16[0]);
-        let p1 = ftz_mul(Format::Fp16, a16[1], b16[1]);
-        let p2 = ftz_mul(Format::Fp16, a16[2], b16[2]);
-        let p3 = ftz_mul(Format::Fp16, a16[3], b16[3]);
-        black_box(ftz_add(ftz_add(p0, p1), ftz_add(p2, p3)));
-    });
+    for r in [
+        bench("op/tr_fdpa/L8_F24_F2_31", || {
+            black_box(tr_fdpa(Format::Fp16, &a16[..8], &b16[..8], c32, TrFdpaCfg::cdna3()));
+        }),
+        bench("op/gtr_fdpa/L16", || {
+            black_box(gtr_fdpa(Format::Fp8E4M3, &a16, &b16, c32, GtrFdpaCfg::cdna3()));
+        }),
+        bench("op/e_fdpa/L4", || {
+            black_box(e_fdpa(Format::Fp16, &a16[..4], &b16[..4], c32));
+        }),
+        bench("op/fma_chain/K4", || {
+            let mut d = c32;
+            for i in 0..4 {
+                d = fma(Format::Fp32, a16[i] << 16, b16[i] << 16, d);
+            }
+            black_box(d);
+        }),
+        bench("op/ftz_mul+add/P4", || {
+            let p0 = ftz_mul(Format::Fp16, a16[0], b16[0]);
+            let p1 = ftz_mul(Format::Fp16, a16[1], b16[1]);
+            let p2 = ftz_mul(Format::Fp16, a16[2], b16[2]);
+            let p3 = ftz_mul(Format::Fp16, a16[3], b16[3]);
+            black_box(ftz_add(ftz_add(p0, p1), ftz_add(p2, p3)));
+        }),
+    ] {
+        records.push((r.name.clone(), r.mean_ns, r.throughput(1.0) / 1e6));
+    }
 
     // full-matrix models (the shapes used by validation)
     let fmts = MmaFormats { a: Format::Fp16, b: Format::Fp16, c: Format::Fp32, d: Format::Fp32 };
@@ -73,9 +87,82 @@ fn main() {
         let res = bench(&format!("mma/16x8x{k}/{label}"), || {
             black_box(model.execute(&a, &b, &c, None));
         });
-        println!(
-            "    -> {:.2} M dpa/s",
-            res.throughput((16 * 8) as f64) / 1e6
-        );
+        let mdpa = res.throughput((16 * 8) as f64) / 1e6;
+        println!("    -> {mdpa:.2} M dpa/s");
+        records.push((res.name.clone(), res.mean_ns, mdpa));
+    }
+
+    // === batch engine before/after ===========================================
+    // "scalar" reproduces the seed execution pattern: one execute() per case
+    // with fresh per-call scratch. "batch" reuses one scratch across the
+    // whole batch; "parallel" adds scoped worker threads over cases.
+    let cases_n = if mma_sim::util::bench::smoke() { 32 } else { 256 };
+    let model = MmaModel::new(
+        "hopper_t_fdpa",
+        (16, 8, 16),
+        fmts,
+        ModelSpec::TFdpa { l_max: 16, f: 25, rho: Rho::RzFp32 },
+    );
+    let mut r3 = Rng::new(0xD06);
+    let cases = random_case_batch(&mut r3, &model, cases_n, 0);
+    let dpa_per_iter = (cases_n * 16 * 8) as f64;
+    let threads = auto_threads(cases_n, 16 * 8 * 16).max(2);
+
+    let r_scalar = bench(&format!("batch/{cases_n}x16x8x16/scalar_execute"), || {
+        for cs in &cases {
+            black_box(model.execute(&cs.a, &cs.b, &cs.c, None));
+        }
+    });
+    let scalar = r_scalar.throughput(dpa_per_iter) / 1e6;
+    println!("    -> {scalar:.2} M dpa/s (seed-style scalar path)");
+
+    let r_serial = bench(&format!("batch/{cases_n}x16x8x16/batch_serial"), || {
+        black_box(model.execute_batch(&cases));
+    });
+    let serial = r_serial.throughput(dpa_per_iter) / 1e6;
+    println!("    -> {serial:.2} M dpa/s (scratch-reusing serial batch)");
+
+    let r_par = bench(&format!("batch/{cases_n}x16x8x16/batch_parallel_t{threads}"), || {
+        black_box(parallel_execute_batch_with(&model, &cases, threads));
+    });
+    let parallel = r_par.throughput(dpa_per_iter) / 1e6;
+    println!("    -> {parallel:.2} M dpa/s (parallel batch, {threads} threads)");
+    println!(
+        "    batched multi-threaded speedup vs seed scalar path: {:.2}x",
+        parallel / scalar
+    );
+    for r in [&r_scalar, &r_serial, &r_par] {
+        records.push((r.name.clone(), r.mean_ns, r.throughput(dpa_per_iter) / 1e6));
+    }
+
+    // === JSON record =========================================================
+    let mut json = String::from("{\n");
+    json.push_str("  \"bench\": \"hotpath\",\n");
+    json.push_str(&format!("  \"smoke\": {},\n", mma_sim::util::bench::smoke()));
+    json.push_str(&format!("  \"batch_threads\": {threads},\n"));
+    json.push_str("  \"batch\": {\n");
+    json.push_str(&format!("    \"cases\": {cases_n},\n"));
+    json.push_str("    \"shape\": \"16x8x16\",\n");
+    json.push_str(&format!("    \"scalar_mdpa_per_s\": {scalar:.3},\n"));
+    json.push_str(&format!("    \"batch_serial_mdpa_per_s\": {serial:.3},\n"));
+    json.push_str(&format!("    \"batch_parallel_mdpa_per_s\": {parallel:.3},\n"));
+    json.push_str(&format!(
+        "    \"speedup_parallel_vs_scalar\": {:.3}\n",
+        parallel / scalar
+    ));
+    json.push_str("  },\n");
+    json.push_str("  \"records\": [\n");
+    for (i, (name, mean_ns, mdpa)) in records.iter().enumerate() {
+        let comma = if i + 1 < records.len() { "," } else { "" };
+        json.push_str(&format!(
+            "    {{\"name\": \"{name}\", \"mean_ns\": {mean_ns:.1}, \"m_ops_per_s\": {mdpa:.3}}}{comma}\n"
+        ));
+    }
+    json.push_str("  ]\n}\n");
+
+    let path = mma_sim::util::bench::out_path("BENCH_hotpath.json");
+    match std::fs::write(&path, &json) {
+        Ok(()) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("could not write {}: {e}", path.display()),
     }
 }

@@ -1,6 +1,10 @@
 //! Bench: §3.1.4 randomized-validation throughput — the coordinator's
 //! end-to-end verification rate (model-vs-model and, when artifacts are
 //! built, model-vs-PJRT), across worker counts and batch sizes.
+//!
+//! Emits `BENCH_validation_throughput.json` at the repo root
+//! (`MMA_BENCH_OUT` overrides the directory). `--smoke` /
+//! `MMA_BENCH_SMOKE=1` runs the short CI variant.
 
 use std::sync::Arc;
 
@@ -21,9 +25,14 @@ fn model() -> MmaModel {
 }
 
 fn main() {
+    mma_sim::util::bench::parse_bench_args();
     println!("== validation_throughput ==");
-    for workers in [1usize, 2, 4, 8] {
-        for batch in [50usize, 200] {
+    let smoke = mma_sim::util::bench::smoke();
+    let worker_counts: &[usize] = if smoke { &[1, 4] } else { &[1, 2, 4, 8] };
+    let batches: &[usize] = if smoke { &[50] } else { &[50, 200] };
+    let mut rows: Vec<(usize, usize, f64)> = Vec::new();
+    for &workers in worker_counts {
+        for &batch in batches {
             let pair = VerifyPair {
                 name: "m".into(),
                 dut: Arc::new(model()),
@@ -34,36 +43,63 @@ fn main() {
             let r = bench(&format!("validate/w{workers}/batch{batch}"), || {
                 black_box(coord.run_campaign(jobs, batch, 7));
             });
-            println!(
-                "    -> {:.0} MMAs verified/s",
-                r.throughput((jobs * batch) as f64)
-            );
+            let rate = r.throughput((jobs * batch) as f64);
+            println!("    -> {rate:.0} MMAs verified/s");
+            rows.push((workers, batch, rate));
             coord.shutdown();
         }
     }
 
-    // PJRT path (model vs artifact), if built
+    // PJRT path (model vs artifact), if built — measured before the JSON
+    // record is written so its row is captured too.
+    let mut pjrt_rate: Option<f64> = None;
     let dir = artifacts_dir();
-    if dir.join("manifest.txt").exists() {
-        let rt = Runtime::new(&dir).expect("runtime");
-        if let Some(meta) = read_manifest(&dir)
-            .unwrap()
-            .into_iter()
-            .find(|m| m.name == "hopper_fp16_fp32")
-        {
-            let pair = VerifyPair {
-                name: "pjrt".into(),
-                dut: Arc::new(rt.load_mma(&meta).unwrap()),
-                golden: Arc::new(model_for_artifact(&meta).unwrap()),
-            };
-            let coord = Coordinator::new(vec![pair], 1, 2);
-            let r = bench("validate/pjrt/hopper_fp16(batch 20)", || {
-                black_box(coord.run_campaign(1, 20, 7));
-            });
-            println!("    -> {:.0} PJRT MMAs verified/s", r.throughput(20.0));
-            coord.shutdown();
-        }
-    } else {
+    if !dir.join("manifest.txt").exists() {
         println!("(artifacts not built; skipping the PJRT leg)");
+    } else {
+        match Runtime::new(&dir) {
+            Err(e) => println!("skipping PJRT leg: {e}"),
+            Ok(rt) => {
+                if let Some(meta) = read_manifest(&dir)
+                    .unwrap()
+                    .into_iter()
+                    .find(|m| m.name == "hopper_fp16_fp32")
+                {
+                    let pair = VerifyPair {
+                        name: "pjrt".into(),
+                        dut: Arc::new(rt.load_mma(&meta).unwrap()),
+                        golden: Arc::new(model_for_artifact(&meta).unwrap()),
+                    };
+                    let coord = Coordinator::new(vec![pair], 1, 2);
+                    let r = bench("validate/pjrt/hopper_fp16(batch 20)", || {
+                        black_box(coord.run_campaign(1, 20, 7));
+                    });
+                    let rate = r.throughput(20.0);
+                    println!("    -> {rate:.0} PJRT MMAs verified/s");
+                    pjrt_rate = Some(rate);
+                    coord.shutdown();
+                }
+            }
+        }
+    }
+
+    let mut json = String::from("{\n  \"bench\": \"validation_throughput\",\n");
+    json.push_str(&format!("  \"smoke\": {smoke},\n"));
+    match pjrt_rate {
+        Some(rate) => json.push_str(&format!("  \"pjrt_mmas_per_s\": {rate:.1},\n")),
+        None => json.push_str("  \"pjrt_mmas_per_s\": null,\n"),
+    }
+    json.push_str("  \"rows\": [\n");
+    for (i, (w, b, rate)) in rows.iter().enumerate() {
+        let comma = if i + 1 < rows.len() { "," } else { "" };
+        json.push_str(&format!(
+            "    {{\"workers\": {w}, \"batch\": {b}, \"mmas_per_s\": {rate:.1}}}{comma}\n"
+        ));
+    }
+    json.push_str("  ]\n}\n");
+    let path = mma_sim::util::bench::out_path("BENCH_validation_throughput.json");
+    match std::fs::write(&path, &json) {
+        Ok(()) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("could not write {}: {e}", path.display()),
     }
 }

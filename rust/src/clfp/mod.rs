@@ -25,7 +25,7 @@ pub use probes::{Probe, ProbeBuilder};
 pub use tree::{tree_signature, TreeSignature};
 
 use crate::formats::Format;
-use crate::interface::{BitMatrix, MmaInterface};
+use crate::interface::{parallel_execute_batch, BitMatrix, MmaCase, MmaInterface};
 use crate::models::ModelSpec;
 use crate::util::Rng;
 
@@ -325,21 +325,33 @@ pub fn infer(iface: &dyn MmaInterface, cfg: ClfpConfig) -> Inference {
         survivors.push(spec);
     }
 
-    // Step 4: randomized validation with revision.
+    // Step 4: randomized validation with revision, streamed through the
+    // batch engine so both sides reuse scratch and fan out across cores.
+    // The RNG consumption order is identical to the scalar loop, keeping
+    // inference results seed-stable.
     let mut revisions = 0;
     let mut inferred = None;
     let mut validated = 0;
     'surv: for &spec in &survivors {
         let cand = candidates::instantiate(spec, (m, n, k), fmts);
         let mut vrng = Rng::new(cfg.seed ^ 0x5742_11D4);
-        for t in 0..cfg.validate_tests {
-            let (a, b, c) = random_inputs(&mut vrng, iface, t);
-            let want = iface.execute(&a, &b, &c, None);
-            let got = cand.execute(&a, &b, &c, None);
-            if want.data != got.data {
+        let mut t = 0;
+        // Ramp the chunk size: wrong survivors usually diverge within the
+        // first few tests, so small early chunks keep the rejection path
+        // cheap (important for slow black boxes like PJRT) while the
+        // accepting path still amortizes into full 64-case batches.
+        let mut chunk = 4usize;
+        while t < cfg.validate_tests {
+            let nb = chunk.min(cfg.validate_tests - t);
+            let cases = random_case_batch(&mut vrng, iface, nb, t);
+            let want = parallel_execute_batch(iface, &cases);
+            let got = parallel_execute_batch(&cand, &cases);
+            if want.iter().zip(got.iter()).any(|(w, g)| w.data != g.data) {
                 revisions += 1;
                 continue 'surv;
             }
+            t += nb;
+            chunk = (chunk * 2).min(64);
         }
         inferred = Some(spec);
         validated = cfg.validate_tests;
@@ -412,6 +424,24 @@ pub fn random_inputs(
         }
     }
     (a, b, c)
+}
+
+/// Batch-generate `count` randomized cases starting at input-class index
+/// `t0` — the job generator feeding [`MmaInterface::execute_batch`] in the
+/// coordinator workers and CLFP step 4. Consumes the RNG in exactly the
+/// order of `count` sequential [`random_inputs`] calls.
+pub fn random_case_batch(
+    rng: &mut Rng,
+    iface: &dyn MmaInterface,
+    count: usize,
+    t0: usize,
+) -> Vec<MmaCase> {
+    (0..count)
+        .map(|i| {
+            let (a, b, c) = random_inputs(rng, iface, t0 + i);
+            MmaCase::new(a, b, c)
+        })
+        .collect()
 }
 
 #[cfg(test)]

@@ -8,7 +8,9 @@
 //!
 //! - **routing**: jobs are addressed to a pair by name;
 //! - **batching**: each job carries a batch of randomized MMAs drawn from
-//!   the paper's three input classes;
+//!   the paper's three input classes, executed through
+//!   [`MmaInterface::execute_batch`](crate::interface::MmaInterface::execute_batch)
+//!   so models reuse scratch buffers across the whole batch;
 //! - **backpressure**: the submission queue is bounded; `submit` blocks
 //!   when workers fall behind;
 //! - **reporting**: per-pair counters plus the first mismatching triple

@@ -6,7 +6,7 @@ use std::time::Instant;
 
 use super::report::Mismatch;
 use super::{Job, JobOutcome, Msg as CoordinatorMsg};
-use crate::clfp::random_inputs;
+use crate::clfp::random_case_batch;
 use crate::interface::MmaInterface;
 use crate::util::Rng;
 
@@ -60,28 +60,31 @@ fn execute(pairs: &[VerifyPair], job: &Job) -> JobOutcome {
     let mut mismatches = Vec::new();
     let mut tests = 0usize;
     if let Some(pair) = pairs.iter().find(|p| p.name == job.pair) {
+        // The worker thread IS the parallelism unit of the pool, so the
+        // batch runs through the sequential scratch-reusing batch API (no
+        // nested thread spawns); cross-job parallelism comes from the pool.
         let mut rng = Rng::new(job.seed);
-        for t in 0..job.batch {
-            let (a, b, c) = random_inputs(&mut rng, pair.golden.as_ref(), t);
-            let want = pair.golden.execute(&a, &b, &c, None);
-            let got = pair.dut.execute(&a, &b, &c, None);
-            tests += 1;
-            if want.data != got.data {
+        let cases = random_case_batch(&mut rng, pair.golden.as_ref(), job.batch, 0);
+        let want = pair.golden.execute_batch(&cases);
+        let got = pair.dut.execute_batch(&cases);
+        tests = cases.len();
+        for (t, (cs, (w, g))) in cases.iter().zip(want.iter().zip(got.iter())).enumerate() {
+            if w.data != g.data {
                 if mismatches.len() < 4 {
-                    let idx = want
+                    let idx = w
                         .data
                         .iter()
-                        .zip(got.data.iter())
-                        .position(|(w, g)| w != g)
+                        .zip(g.data.iter())
+                        .position(|(wb, gb)| wb != gb)
                         .unwrap_or(0);
                     mismatches.push(Mismatch {
                         test_index: t,
                         element: idx,
-                        golden_bits: want.data[idx],
-                        dut_bits: got.data[idx],
-                        a: a.data.clone(),
-                        b: b.data.clone(),
-                        c: c.data.clone(),
+                        golden_bits: w.data[idx],
+                        dut_bits: g.data[idx],
+                        a: cs.a.data.clone(),
+                        b: cs.b.data.clone(),
+                        c: cs.c.data.clone(),
                     });
                 } else {
                     mismatches.push(Mismatch {

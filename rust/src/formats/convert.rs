@@ -93,6 +93,43 @@ pub fn e8m13_to_fp32_pattern(pat: u64) -> u64 {
     (sign << 31) | (exp << 23) | (mant << 10)
 }
 
+/// Convert a bit pattern between storage formats under `mode`.
+///
+/// Used wherever an accumulator changes representation, e.g. the tiled
+/// GEMM re-encoding its C operand into the D format before K-chaining.
+/// Finite values re-encode exactly when the target is wider (FP16 → FP32 is
+/// lossless); NaNs map to the target's canonical NaN, and infinities map to
+/// ±∞ or saturate to the largest finite magnitude when the target has no
+/// infinity encoding.
+pub fn cast(from: Format, to: Format, bits: u64, mode: RoundingMode) -> u64 {
+    if from == to {
+        return bits & from.mask();
+    }
+    let d = from.decode(bits);
+    let sign_bit = |neg: bool| -> u64 {
+        if neg && to.has_sign() {
+            1u64 << (to.width() - 1)
+        } else {
+            0
+        }
+    };
+    if d.is_nan() {
+        return to
+            .nan_pattern()
+            .unwrap_or_else(|| to.max_finite_pattern());
+    }
+    if d.is_inf() {
+        return match to.inf_pattern() {
+            Some(p) => p | sign_bit(d.sign),
+            None => to.max_finite_pattern() | sign_bit(d.sign),
+        };
+    }
+    if d.is_zero() || d.sig == 0 {
+        return sign_bit(d.sign);
+    }
+    to.encode(d.sign, d.sig as u128, d.exp - from.mant_bits() as i32, mode)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -174,5 +211,45 @@ mod tests {
         for r in Rho::ALL {
             assert_eq!(Rho::parse(r.name()), Some(r));
         }
+    }
+
+    #[test]
+    fn cast_fp16_to_fp32_is_exact() {
+        let mode = RoundingMode::NearestEven;
+        for v in [0.0, -0.0, 1.0, -1.5, 65504.0, 2f64.powi(-24), -2f64.powi(-14)] {
+            let h = Format::Fp16.from_f64(v);
+            let s = cast(Format::Fp16, Format::Fp32, h, mode);
+            assert_eq!(f32::from_bits(s as u32) as f64, v, "{v}");
+        }
+        // signed zero is preserved
+        assert_eq!(cast(Format::Fp16, Format::Fp32, 0x8000, mode), 0x8000_0000);
+        // specials map across
+        let hinf = Format::Fp16.inf_pattern().unwrap();
+        assert_eq!(cast(Format::Fp16, Format::Fp32, hinf, mode), 0x7F80_0000);
+        let hnan = Format::Fp16.nan_pattern().unwrap();
+        assert_eq!(cast(Format::Fp16, Format::Fp32, hnan, mode), 0x7FC0_0000);
+    }
+
+    #[test]
+    fn cast_narrowing_rounds_and_saturates() {
+        let mode = RoundingMode::NearestEven;
+        // 1 + 2^-11 in fp32 -> fp16 tie rounds to even (1.0)
+        let s = (1.0f32 + 2f32.powi(-11)).to_bits() as u64;
+        assert_eq!(cast(Format::Fp32, Format::Fp16, s, mode), 0x3C00);
+        // fp32 1e9 overflows fp16 -> +inf under RNE
+        let s = (1e9f32).to_bits() as u64;
+        assert_eq!(cast(Format::Fp32, Format::Fp16, s, mode), 0x7C00);
+        // inf into a NanOnly target saturates to max finite
+        let s = f32::INFINITY.to_bits() as u64;
+        let max = Format::Fp8E4M3.max_finite_pattern();
+        assert_eq!(cast(Format::Fp32, Format::Fp8E4M3, s, mode), max);
+    }
+
+    #[test]
+    fn cast_same_format_is_identity() {
+        assert_eq!(
+            cast(Format::Fp32, Format::Fp32, 0x3F80_0000, RoundingMode::TowardZero),
+            0x3F80_0000
+        );
     }
 }

@@ -11,7 +11,7 @@ mod convert;
 mod decoded;
 mod rounding;
 
-pub use convert::{convert, Rho};
+pub use convert::{cast, convert, Rho};
 pub use decoded::{Class, Decoded};
 pub use rounding::{rd_f, round_shift, rz_f, signed_align, RoundingMode};
 

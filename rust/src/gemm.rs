@@ -10,14 +10,40 @@
 //! model parameters (asserted by the equivalence test below), which is
 //! what makes whole-GEMM reasoning with the per-instruction models sound.
 
-use crate::interface::{BitMatrix, MmaFormats, MmaInterface, Scales};
+use crate::formats::{cast, RoundingMode};
+use crate::interface::{auto_threads, BitMatrix, MmaFormats, MmaInterface, Scales};
 use crate::isa::Instruction;
-use crate::models::MmaModel;
+use crate::models::{DpaScratch, MmaModel};
 
 /// An arbitrary-shape GEMM executor built from one MMAU instruction.
 pub struct TiledGemm {
     /// The per-tile model (instruction shape).
     pub tile: MmaModel,
+}
+
+/// Per-thread staging for one row band of the tiled GEMM: tile operands,
+/// tile output, and the model's dot-product scratch, all reused across
+/// every tile the band touches.
+struct BandScratch {
+    at: BitMatrix,
+    bt: BitMatrix,
+    ct: BitMatrix,
+    out: BitMatrix,
+    dpa: DpaScratch,
+}
+
+impl BandScratch {
+    fn new(tile: &MmaModel) -> Self {
+        let fmts = tile.formats;
+        Self {
+            at: BitMatrix::zeros(tile.m, tile.k, fmts.a),
+            bt: BitMatrix::zeros(tile.k, tile.n, fmts.b),
+            // the accumulator chain lives in the D format (see `execute`)
+            ct: BitMatrix::zeros(tile.m, tile.n, fmts.d),
+            out: BitMatrix::zeros(tile.m, tile.n, fmts.d),
+            dpa: DpaScratch::default(),
+        }
+    }
 }
 
 impl TiledGemm {
@@ -31,9 +57,28 @@ impl TiledGemm {
 
     /// `D = A×B + C` for any shape that is a multiple of the tile shape.
     ///
-    /// K tiles are chained through the accumulator in ascending order
-    /// (the standard split-K-free GEMM loop ordering).
+    /// K tiles are chained through the accumulator in ascending order (the
+    /// standard split-K-free GEMM loop ordering); the accumulator chain is
+    /// carried in the D format, with C re-encoded via [`cast`] when the
+    /// instruction's C and D formats differ (e.g. FP16 C accumulating into
+    /// FP32 D — previously the C bits were silently reinterpreted).
+    /// Independent row bands run on scoped worker threads; the result is
+    /// bit-identical to the serial loop for any thread count.
     pub fn execute(&self, a: &BitMatrix, b: &BitMatrix, c: &BitMatrix) -> BitMatrix {
+        let bands = a.rows / self.tile.m.max(1);
+        let threads = auto_threads(bands, self.tile.m * b.cols * a.cols);
+        self.execute_with_threads(a, b, c, threads)
+    }
+
+    /// [`execute`](TiledGemm::execute) with an explicit worker count over
+    /// row bands (1 = the plain serial loop).
+    pub fn execute_with_threads(
+        &self,
+        a: &BitMatrix,
+        b: &BitMatrix,
+        c: &BitMatrix,
+        threads: usize,
+    ) -> BitMatrix {
         let (tm, tn, tk) = (self.tile.m, self.tile.n, self.tile.k);
         let (m, k) = (a.rows, a.cols);
         let n = b.cols;
@@ -42,40 +87,91 @@ impl TiledGemm {
         assert!(m % tm == 0 && n % tn == 0 && k % tk == 0, "shape must tile");
 
         let fmts = self.tile.formats;
-        let mut d = c.clone();
-        d.fmt = fmts.d;
+        let data = if fmts.c == fmts.d {
+            c.data.clone()
+        } else {
+            c.data
+                .iter()
+                .map(|&bits| cast(fmts.c, fmts.d, bits, RoundingMode::NearestEven))
+                .collect()
+        };
+        let mut d = BitMatrix { rows: m, cols: n, fmt: fmts.d, data };
 
-        let mut at = BitMatrix::zeros(tm, tk, fmts.a);
-        let mut bt = BitMatrix::zeros(tk, tn, fmts.b);
-        let mut ct = BitMatrix::zeros(tm, tn, fmts.c);
-        for i0 in (0..m).step_by(tm) {
-            for j0 in (0..n).step_by(tn) {
-                for k0 in (0..k).step_by(tk) {
-                    for i in 0..tm {
-                        for kk in 0..tk {
-                            at.set(i, kk, a.get(i0 + i, k0 + kk));
+        let bands = m / tm;
+        let threads = threads.clamp(1, bands.max(1));
+        if threads <= 1 {
+            let mut scratch = BandScratch::new(&self.tile);
+            for (band, rows) in d.data.chunks_mut(tm * n).enumerate() {
+                self.run_band(a, b, rows, band * tm, &mut scratch);
+            }
+        } else {
+            let mut pending: Vec<(usize, &mut [u64])> =
+                d.data.chunks_mut(tm * n).enumerate().collect();
+            let per = pending.len().div_ceil(threads);
+            std::thread::scope(|s| {
+                while !pending.is_empty() {
+                    let take = per.min(pending.len());
+                    let group: Vec<(usize, &mut [u64])> = pending.drain(..take).collect();
+                    s.spawn(move || {
+                        let mut scratch = BandScratch::new(&self.tile);
+                        for (band, rows) in group {
+                            self.run_band(a, b, rows, band * tm, &mut scratch);
                         }
-                    }
+                    });
+                }
+            });
+            drop(pending); // release the d.data borrows before returning d
+        }
+        d
+    }
+
+    /// Compute one `tm`-row band of the output in place. `rows` holds the
+    /// band's accumulator values (already in the D format) in row-major
+    /// order over the full `n` columns.
+    fn run_band(
+        &self,
+        a: &BitMatrix,
+        b: &BitMatrix,
+        rows: &mut [u64],
+        i0: usize,
+        scratch: &mut BandScratch,
+    ) {
+        let (tm, tn, tk) = (self.tile.m, self.tile.n, self.tile.k);
+        let n = b.cols;
+        let k = a.cols;
+        debug_assert_eq!(rows.len(), tm * n);
+        for j0 in (0..n).step_by(tn) {
+            for k0 in (0..k).step_by(tk) {
+                for i in 0..tm {
                     for kk in 0..tk {
-                        for j in 0..tn {
-                            bt.set(kk, j, b.get(k0 + kk, j0 + j));
-                        }
+                        scratch.at.set(i, kk, a.get(i0 + i, k0 + kk));
                     }
-                    for i in 0..tm {
-                        for j in 0..tn {
-                            ct.set(i, j, d.get(i0 + i, j0 + j));
-                        }
+                }
+                for kk in 0..tk {
+                    for j in 0..tn {
+                        scratch.bt.set(kk, j, b.get(k0 + kk, j0 + j));
                     }
-                    let out = self.tile.execute(&at, &bt, &ct, None);
-                    for i in 0..tm {
-                        for j in 0..tn {
-                            d.set(i0 + i, j0 + j, out.get(i, j));
-                        }
+                }
+                for i in 0..tm {
+                    for j in 0..tn {
+                        scratch.ct.set(i, j, rows[i * n + j0 + j]);
+                    }
+                }
+                self.tile.execute_into(
+                    &scratch.at,
+                    &scratch.bt,
+                    &scratch.ct,
+                    None,
+                    &mut scratch.out,
+                    &mut scratch.dpa,
+                );
+                for i in 0..tm {
+                    for j in 0..tn {
+                        rows[i * n + j0 + j] = scratch.out.get(i, j);
                     }
                 }
             }
         }
-        d
     }
 }
 
@@ -185,6 +281,78 @@ mod tests {
         c.set(0, 0, fmts.c.from_f64(2f64.powi(23)));
         let d = gemm.execute(&a, &b, &c);
         assert_eq!(Format::Fp32.to_f64(d.get(0, 0)), -0.75);
+    }
+
+    #[test]
+    fn c_format_converted_when_c_and_d_differ() {
+        // Regression: with C = FP16 and D = FP32 the old code cloned the
+        // FP16 bits and relabeled them FP32, so the first K tile read a
+        // garbage accumulator. The C operand must be value-converted.
+        let fmts = MmaFormats {
+            a: Format::Fp16,
+            b: Format::Fp16,
+            c: Format::Fp16,
+            d: Format::Fp32,
+        };
+        let spec = ModelSpec::TFdpa { l_max: 8, f: 24, rho: Rho::RzFp32 };
+        let gemm = TiledGemm::from_model(MmaModel::new("mixed", (4, 4, 8), fmts, spec));
+        let mut rng = Rng::new(17);
+        let (a, b, c) = random_mats(&mut rng, 8, 8, 16, fmts);
+        let d = gemm.execute(&a, &b, &c);
+        // reference: pre-convert C to FP32 and run the same-format gemm
+        let c32 = BitMatrix {
+            rows: c.rows,
+            cols: c.cols,
+            fmt: Format::Fp32,
+            data: c
+                .data
+                .iter()
+                .map(|&bits| {
+                    crate::formats::cast(
+                        Format::Fp16,
+                        Format::Fp32,
+                        bits,
+                        crate::formats::RoundingMode::NearestEven,
+                    )
+                })
+                .collect(),
+        };
+        let fmts32 = MmaFormats { c: Format::Fp32, ..fmts };
+        let gemm32 = TiledGemm::from_model(MmaModel::new("f32c", (4, 4, 8), fmts32, spec));
+        let want = gemm32.execute(&a, &b, &c32);
+        assert_eq!(d.data, want.data, "FP16 C must convert, not reinterpret");
+        // and the result must differ from the old reinterpretation bug
+        // whenever C is non-trivial (sanity: D carries FP32 values)
+        assert_eq!(d.fmt, Format::Fp32);
+    }
+
+    #[test]
+    fn banded_parallel_execution_is_bit_identical() {
+        // A shape with many row bands: pin explicit thread counts so the
+        // threaded band path runs regardless of core count or env, and
+        // compare every variant bitwise against the wide-K reference.
+        let fmts = MmaFormats {
+            a: Format::Fp16,
+            b: Format::Fp16,
+            c: Format::Fp32,
+            d: Format::Fp32,
+        };
+        let spec = ModelSpec::TFdpa { l_max: 16, f: 25, rho: Rho::RzFp32 };
+        let tile = MmaModel::new("tile", (8, 8, 16), fmts, spec);
+        let wide = MmaModel::new("wide", (64, 16, 32), fmts, spec);
+        let gemm = TiledGemm::from_model(tile);
+        let mut rng = Rng::new(23);
+        let (a, b, c) = random_mats(&mut rng, 64, 16, 32, fmts);
+        // the K-chained tiled result must equal the wide-K model
+        // (K = 32 = 2 × L_max chains inside the model the same way)
+        let d_wide = wide.execute(&a, &b, &c, None);
+        for threads in [1usize, 2, 3, 8, 64] {
+            let d_tiled = gemm.execute_with_threads(&a, &b, &c, threads);
+            assert_eq!(d_tiled.data, d_wide.data, "threads={threads}");
+        }
+        // and the auto-threaded entry point agrees
+        let d_auto = gemm.execute(&a, &b, &c);
+        assert_eq!(d_auto.data, d_wide.data);
     }
 
     #[test]

@@ -104,6 +104,33 @@ pub struct ScaleSpec {
 /// Scale operands: `a_scales` is `M × K/kblock`, `b_scales` is `K/kblock × N`.
 pub type Scales<'s> = Option<(&'s BitMatrix, &'s BitMatrix)>;
 
+/// One MMA problem instance — the unit of work of the batch engine.
+///
+/// Validation campaigns, CLFP step 4, and the coordinator all stream
+/// `MmaCase`s through [`MmaInterface::execute_batch`], which lets local
+/// models reuse scratch buffers across cases and lets
+/// [`parallel_execute_batch`] fan independent cases out across threads.
+#[derive(Clone, Debug)]
+pub struct MmaCase {
+    pub a: BitMatrix,
+    pub b: BitMatrix,
+    pub c: BitMatrix,
+    /// Optional `(a_scales, b_scales)` operands for MX/NVFP4 interfaces.
+    pub scales: Option<(BitMatrix, BitMatrix)>,
+}
+
+impl MmaCase {
+    pub fn new(a: BitMatrix, b: BitMatrix, c: BitMatrix) -> Self {
+        Self { a, b, c, scales: None }
+    }
+
+    /// Borrowed scale operands in the form `execute` takes.
+    #[inline]
+    pub fn scales(&self) -> Scales<'_> {
+        self.scales.as_ref().map(|(sa, sb)| (sa, sb))
+    }
+}
+
 /// A black-box matrix multiply-accumulate interface:
 /// `D = A×B + C` over bit patterns (paper Equation 2).
 pub trait MmaInterface: Send + Sync {
@@ -120,6 +147,23 @@ pub trait MmaInterface: Send + Sync {
 
     /// Execute the MMA: `D = A×B + C`.
     fn execute(&self, a: &BitMatrix, b: &BitMatrix, c: &BitMatrix, scales: Scales) -> BitMatrix;
+
+    /// Execute a batch of independent cases, returning one output per case
+    /// in order.
+    ///
+    /// The default realizes the batch as sequential `execute` calls (the
+    /// only option for a black box). Local models override it to reuse
+    /// scratch buffers across the whole batch so the steady state performs
+    /// no per-case heap allocation. Implementations must stay sequential
+    /// and deterministic; cross-case parallelism is layered on top by
+    /// [`parallel_execute_batch`], which keeps worker-pool callers (the
+    /// coordinator) free of nested thread spawns.
+    fn execute_batch(&self, cases: &[MmaCase]) -> Vec<BitMatrix> {
+        cases
+            .iter()
+            .map(|cs| self.execute(&cs.a, &cs.b, &cs.c, cs.scales()))
+            .collect()
+    }
 
     /// Evaluate a single dot-product-accumulate: the `(0,0)` output for
     /// `a_row`/`b_col`/`c00` with all other elements zero.
@@ -146,6 +190,66 @@ pub trait MmaInterface: Send + Sync {
     fn name(&self) -> String;
 }
 
+/// Pick a worker count for `units` independent work items of roughly
+/// `work_per_unit` dot-product element-operations each.
+///
+/// Honors `MMA_SIM_THREADS` (useful to pin CI and to serialize nested
+/// contexts), stays serial for batches too small to amortize a thread
+/// spawn, and otherwise uses every available core.
+pub fn auto_threads(units: usize, work_per_unit: usize) -> usize {
+    if units < 2 {
+        return 1;
+    }
+    if let Ok(v) = std::env::var("MMA_SIM_THREADS") {
+        if let Ok(n) = v.parse::<usize>() {
+            return n.clamp(1, units);
+        }
+    }
+    // Below ~32k element-ops a thread spawn costs more than it saves.
+    if units.saturating_mul(work_per_unit) < (1 << 15) {
+        return 1;
+    }
+    std::thread::available_parallelism()
+        .map(|p| p.get())
+        .unwrap_or(1)
+        .min(units)
+}
+
+/// Execute a batch of independent cases across scoped worker threads.
+///
+/// Cases are split into contiguous chunks, one per worker; each worker
+/// runs the interface's (sequential, scratch-reusing) `execute_batch` on
+/// its chunk, and results are reassembled in submission order, so the
+/// output is bit-identical to the serial path regardless of thread count.
+pub fn parallel_execute_batch(iface: &dyn MmaInterface, cases: &[MmaCase]) -> Vec<BitMatrix> {
+    let (m, n, k) = iface.shape();
+    let threads = auto_threads(cases.len(), m * n * k);
+    parallel_execute_batch_with(iface, cases, threads)
+}
+
+/// [`parallel_execute_batch`] with an explicit worker count.
+pub fn parallel_execute_batch_with(
+    iface: &dyn MmaInterface,
+    cases: &[MmaCase],
+    threads: usize,
+) -> Vec<BitMatrix> {
+    if threads <= 1 || cases.len() < 2 {
+        return iface.execute_batch(cases);
+    }
+    let chunk = cases.len().div_ceil(threads.min(cases.len()));
+    let mut out = Vec::with_capacity(cases.len());
+    std::thread::scope(|s| {
+        let handles: Vec<_> = cases
+            .chunks(chunk)
+            .map(|slice| s.spawn(move || iface.execute_batch(slice)))
+            .collect();
+        for h in handles {
+            out.extend(h.join().expect("mma batch worker panicked"));
+        }
+    });
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -170,5 +274,82 @@ mod tests {
         let m = BitMatrix::from_f64(1, 2, Format::Fp16, &[1.5, -3.0]);
         let n = m.negated();
         assert_eq!(n.to_f64_vec(), vec![-1.5, 3.0]);
+    }
+
+    /// A toy interface (D = A elementwise) to pin batch-engine plumbing.
+    struct Echo;
+
+    impl MmaInterface for Echo {
+        fn shape(&self) -> (usize, usize, usize) {
+            (2, 2, 2)
+        }
+
+        fn formats(&self) -> MmaFormats {
+            MmaFormats {
+                a: Format::Fp32,
+                b: Format::Fp32,
+                c: Format::Fp32,
+                d: Format::Fp32,
+            }
+        }
+
+        fn execute(
+            &self,
+            a: &BitMatrix,
+            _b: &BitMatrix,
+            _c: &BitMatrix,
+            _scales: Scales,
+        ) -> BitMatrix {
+            a.clone()
+        }
+
+        fn name(&self) -> String {
+            "echo".into()
+        }
+    }
+
+    fn case(tag: u64) -> MmaCase {
+        let mut a = BitMatrix::zeros(2, 2, Format::Fp32);
+        a.set(0, 0, tag);
+        MmaCase::new(
+            a,
+            BitMatrix::zeros(2, 2, Format::Fp32),
+            BitMatrix::zeros(2, 2, Format::Fp32),
+        )
+    }
+
+    #[test]
+    fn default_execute_batch_preserves_order() {
+        let cases: Vec<MmaCase> = (0..17).map(case).collect();
+        let outs = Echo.execute_batch(&cases);
+        assert_eq!(outs.len(), 17);
+        for (i, d) in outs.iter().enumerate() {
+            assert_eq!(d.get(0, 0), i as u64);
+        }
+    }
+
+    #[test]
+    fn parallel_batch_matches_serial_in_order() {
+        let cases: Vec<MmaCase> = (0..97).map(case).collect();
+        let serial = Echo.execute_batch(&cases);
+        for threads in [1, 2, 3, 8, 97, 200] {
+            let parallel = parallel_execute_batch_with(&Echo, &cases, threads);
+            assert_eq!(serial.len(), parallel.len(), "threads={threads}");
+            for (s, p) in serial.iter().zip(parallel.iter()) {
+                assert_eq!(s.data, p.data, "threads={threads}");
+            }
+        }
+        // the auto-threaded entry point must agree too
+        let auto = parallel_execute_batch(&Echo, &cases);
+        assert_eq!(auto.len(), serial.len());
+    }
+
+    #[test]
+    fn auto_threads_serial_for_tiny_work() {
+        assert_eq!(auto_threads(0, 1000), 1);
+        assert_eq!(auto_threads(1, usize::MAX), 1);
+        if std::env::var("MMA_SIM_THREADS").is_err() {
+            assert_eq!(auto_threads(8, 4), 1, "tiny batches stay serial");
+        }
     }
 }

@@ -26,7 +26,8 @@
 //! - [`analysis`] — discrepancy (Table 8), error bounds (Table 9), risky
 //!   designs (Table 10), summation trees (Figure 2), rounding bias
 //!   (Figure 3).
-//! - [`coordinator`] — the tokio-based continuous-verification service.
+//! - [`coordinator`] — the thread-pool continuous-verification service,
+//!   streaming batched jobs through the zero-allocation batch engine.
 //! - [`runtime`] — PJRT CPU client wrapper that loads AOT artifacts
 //!   produced by `python/compile/aot.py` and exposes them as
 //!   `MmaInterface`s.

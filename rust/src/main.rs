@@ -14,7 +14,8 @@
 
 use std::sync::Arc;
 
-use anyhow::{anyhow, bail, Result};
+use mma_sim::util::error::Result;
+use mma_sim::{anyhow, bail};
 
 use mma_sim::analysis::{bias, discrepancy, error_bounds, risky, tables};
 use mma_sim::clfp::{self, ClfpConfig};

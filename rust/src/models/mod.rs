@@ -12,11 +12,37 @@
 //!   `L = min(K, L_max)`, in six variants (E/T/ST/GST/TR/GTR).
 
 use crate::formats::{Format, Rho, RoundingMode};
-use crate::interface::{BitMatrix, MmaFormats, MmaInterface, ScaleSpec, Scales};
+use crate::interface::{BitMatrix, MmaCase, MmaFormats, MmaInterface, ScaleSpec, Scales};
 use crate::ops::{
     e_fdpa, fma, ftz_add, ftz_mul, flush_subnormal_input, gst_fdpa, gtr_fdpa, st_fdpa, t_fdpa,
-    tr_fdpa, GstFdpaCfg, GtrFdpaCfg, TFdpaCfg, TrFdpaCfg,
+    tr_fdpa, GstFdpaCfg, GtrFdpaCfg, TFdpaCfg, TrFdpaCfg, MAX_L,
 };
+
+/// Unit (×1.0) scale pattern of a block-scale format.
+#[inline]
+pub(crate) fn unit_scale(fmt: Format) -> u64 {
+    match fmt {
+        Format::E8M0 => 127,   // 2^0
+        Format::Ue4M3 => 0x38, // 1.0
+        _ => unreachable!("not a scale format: {fmt:?}"),
+    }
+}
+
+/// Reusable gather buffers for [`MmaModel::execute_into`].
+///
+/// One instance per executing thread; reusing it across the cases of a
+/// batch (and across the tiles of a [`crate::gemm::TiledGemm`]) makes the
+/// steady-state execution path free of per-case heap allocation beyond the
+/// output matrix itself.
+#[derive(Clone, Debug, Default)]
+pub struct DpaScratch {
+    /// Gathered B column (`K` elements).
+    bcol: Vec<u64>,
+    /// Flattened A-row scale patterns (`M × nblk`, row-major).
+    sa: Vec<u64>,
+    /// Flattened B-column scale patterns (`N × nblk`, contiguous per column).
+    sb: Vec<u64>,
+}
 
 /// Model taxonomy (paper Table 1): which elementary operation composes the
 /// MMA, with its parameters.
@@ -149,12 +175,21 @@ impl MmaModel {
             ModelSpec::GstFdpa { l, g, f, rho, kblock, scale_fmt } => {
                 let cfg = GstFdpaCfg { g, kblock, f, rho, scale_fmt };
                 let l = l.min(self.k);
+                // interior chunk boundaries must fall on scale-block edges;
+                // hard assert: violating this silently pairs lanes with the
+                // wrong scale blocks (corruption, not a panic) in release
+                assert!(
+                    l % kblock == 0 || self.k <= l,
+                    "GST-FDPA chunk length {l} must cover whole {kblock}-blocks"
+                );
                 let mut d = c;
                 for chunk in 0..self.k.div_ceil(l) {
                     let lo = chunk * l;
                     let hi = (lo + l).min(self.k);
                     let blo = lo / kblock;
-                    let bhi = hi / kblock;
+                    // div_ceil: a ragged final chunk still consumes its
+                    // partial scale block
+                    let bhi = hi.div_ceil(kblock);
                     d = gst_fdpa(fa, &a[lo..hi], &b[lo..hi], d, &sa[blo..bhi], &sb[blo..bhi], cfg);
                 }
                 d
@@ -185,23 +220,29 @@ impl MmaModel {
     }
 
     /// Algorithm 2: FTZ-AddMul dot-product-accumulate.
+    ///
+    /// Products are staged in a fixed-size stack buffer (`P ≤ MAX_L` for
+    /// every modeled instruction), so the hot path performs no heap
+    /// allocation.
     fn dpa_ftz(&self, a: &[u64], b: &[u64], c: u64, p: usize) -> u64 {
+        // hard assert: the stack product buffer would index out of bounds
+        assert!(p <= MAX_L, "FTZ pairing parameter {p} exceeds {MAX_L}");
         let fmt = self.formats.a;
         // input subnormal flushing (A, B, and C)
         let mut d = flush_subnormal_input(Format::Fp32, c);
+        let mut prods = [0u64; MAX_L];
         let mut k = 0;
         while k < self.k {
             let hi = (k + p).min(self.k);
-            let prods: Vec<u64> = (k..hi)
-                .map(|i| {
-                    ftz_mul(
-                        fmt,
-                        flush_subnormal_input(fmt, a[i]),
-                        flush_subnormal_input(fmt, b[i]),
-                    )
-                })
-                .collect();
-            let s = match prods.len() {
+            let n = hi - k;
+            for (slot, i) in prods[..n].iter_mut().zip(k..hi) {
+                *slot = ftz_mul(
+                    fmt,
+                    flush_subnormal_input(fmt, a[i]),
+                    flush_subnormal_input(fmt, b[i]),
+                );
+            }
+            let s = match n {
                 1 => prods[0],
                 2 => ftz_add(prods[0], prods[1]),
                 4 => {
@@ -222,6 +263,80 @@ impl MmaModel {
             k = hi;
         }
         d
+    }
+
+    /// Number of scale blocks along K (`⌈K / K_block⌉`), 0 for unscaled
+    /// models. A ragged K keeps its partial final block.
+    pub fn scale_blocks(&self) -> usize {
+        self.scale_spec()
+            .map(|spec| self.k.div_ceil(spec.kblock))
+            .unwrap_or(0)
+    }
+
+    /// Execute into a caller-provided output matrix, reusing `scratch` for
+    /// every gather the dot-product loop needs — the zero-allocation core
+    /// that `execute`, `execute_batch`, and the tiled GEMM all drive.
+    pub fn execute_into(
+        &self,
+        a: &BitMatrix,
+        b: &BitMatrix,
+        c: &BitMatrix,
+        scales: Scales,
+        d: &mut BitMatrix,
+        scratch: &mut DpaScratch,
+    ) {
+        assert_eq!((a.rows, a.cols), (self.m, self.k), "A shape");
+        assert_eq!((b.rows, b.cols), (self.k, self.n), "B shape");
+        assert_eq!((c.rows, c.cols), (self.m, self.n), "C shape");
+        assert_eq!((d.rows, d.cols), (self.m, self.n), "D shape");
+        d.fmt = self.formats.d;
+
+        // Gather scale rows/columns into the flat scratch buffers (unit
+        // scales when none are supplied).
+        let nblk = self.scale_blocks();
+        if let Some(spec) = self.scale_spec() {
+            scratch.sa.clear();
+            scratch.sb.clear();
+            match scales {
+                Some((am, bm)) => {
+                    assert_eq!((am.rows, am.cols), (self.m, nblk), "A scales");
+                    assert_eq!((bm.rows, bm.cols), (nblk, self.n), "B scales");
+                    for i in 0..self.m {
+                        scratch.sa.extend_from_slice(am.row(i));
+                    }
+                    for j in 0..self.n {
+                        for r in 0..nblk {
+                            scratch.sb.push(bm.get(r, j));
+                        }
+                    }
+                }
+                None => {
+                    let unit = unit_scale(spec.fmt);
+                    scratch.sa.resize(self.m * nblk, unit);
+                    scratch.sb.resize(self.n * nblk, unit);
+                }
+            }
+        }
+
+        scratch.bcol.clear();
+        scratch.bcol.resize(self.k, 0);
+        for j in 0..self.n {
+            for (r, slot) in scratch.bcol.iter_mut().enumerate() {
+                *slot = b.get(r, j);
+            }
+            for i in 0..self.m {
+                let (sa, sb): (&[u64], &[u64]) = if nblk > 0 {
+                    (
+                        &scratch.sa[i * nblk..(i + 1) * nblk],
+                        &scratch.sb[j * nblk..(j + 1) * nblk],
+                    )
+                } else {
+                    (&[], &[])
+                };
+                let out = self.dpa(a.row(i), &scratch.bcol, c.get(i, j), sa, sb);
+                d.set(i, j, out);
+            }
+        }
     }
 }
 
@@ -247,46 +362,24 @@ impl MmaInterface for MmaModel {
     }
 
     fn execute(&self, a: &BitMatrix, b: &BitMatrix, c: &BitMatrix, scales: Scales) -> BitMatrix {
-        assert_eq!((a.rows, a.cols), (self.m, self.k), "A shape");
-        assert_eq!((b.rows, b.cols), (self.k, self.n), "B shape");
-        assert_eq!((c.rows, c.cols), (self.m, self.n), "C shape");
         let mut d = BitMatrix::zeros(self.m, self.n, self.formats.d);
-        // Pre-gather scale rows/columns (unit scales when none supplied).
-        let scale_data: Option<(Vec<Vec<u64>>, Vec<Vec<u64>>)> =
-            self.scale_spec().map(|spec| match scales {
-                Some((am, bm)) => {
-                    assert_eq!((am.rows, am.cols), (self.m, self.k / spec.kblock), "A scales");
-                    assert_eq!((bm.rows, bm.cols), (self.k / spec.kblock, self.n), "B scales");
-                    (
-                        (0..self.m).map(|i| am.row(i).to_vec()).collect(),
-                        (0..self.n).map(|j| bm.col(j)).collect(),
-                    )
-                }
-                None => {
-                    let unit = match spec.fmt {
-                        Format::E8M0 => 127u64,  // 2^0
-                        Format::Ue4M3 => 0x38u64, // 1.0
-                        _ => unreachable!(),
-                    };
-                    let nblk = self.k / spec.kblock;
-                    (vec![vec![unit; nblk]; self.m], vec![vec![unit; nblk]; self.n])
-                }
-            });
-        let mut bcol = vec![0u64; self.k];
-        for j in 0..self.n {
-            for (r, slot) in bcol.iter_mut().enumerate() {
-                *slot = b.get(r, j);
-            }
-            for i in 0..self.m {
-                let (sa, sb): (&[u64], &[u64]) = match &scale_data {
-                    Some((ra, cb)) => (ra[i].as_slice(), cb[j].as_slice()),
-                    None => (&[], &[]),
-                };
-                let out = self.dpa(a.row(i), &bcol, c.get(i, j), sa, sb);
-                d.set(i, j, out);
-            }
-        }
+        let mut scratch = DpaScratch::default();
+        self.execute_into(a, b, c, scales, &mut d, &mut scratch);
         d
+    }
+
+    fn execute_batch(&self, cases: &[MmaCase]) -> Vec<BitMatrix> {
+        // One scratch for the whole batch: the steady state allocates only
+        // the output matrices.
+        let mut scratch = DpaScratch::default();
+        cases
+            .iter()
+            .map(|cs| {
+                let mut d = BitMatrix::zeros(self.m, self.n, self.formats.d);
+                self.execute_into(&cs.a, &cs.b, &cs.c, cs.scales(), &mut d, &mut scratch);
+                d
+            })
+            .collect()
     }
 
     fn name(&self) -> String {
@@ -298,14 +391,158 @@ impl MmaInterface for MmaModel {
         match self.scale_spec() {
             None => self.dpa(a_row, b_col, c00, &[], &[]),
             Some(spec) => {
-                let unit = match spec.fmt {
-                    Format::E8M0 => 127u64,
-                    Format::Ue4M3 => 0x38u64,
-                    _ => unreachable!(),
-                };
-                let blocks = vec![unit; self.k / spec.kblock];
+                let blocks = vec![unit_scale(spec.fmt); self.k.div_ceil(spec.kblock)];
                 self.dpa(a_row, b_col, c00, &blocks, &blocks)
             }
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::clfp::random_case_batch;
+    use crate::util::Rng;
+
+    fn fmts16() -> MmaFormats {
+        MmaFormats { a: Format::Fp16, b: Format::Fp16, c: Format::Fp32, d: Format::Fp32 }
+    }
+
+    #[test]
+    fn batch_matches_scalar_execute_bitwise() {
+        let mut rng = Rng::new(0xBA7C);
+        for spec in [
+            ModelSpec::TFdpa { l_max: 16, f: 25, rho: Rho::RzFp32 },
+            ModelSpec::TrFdpa { l_max: 8, f: 24, f2: 31 },
+            ModelSpec::FtzAddMul { p: 4 },
+            ModelSpec::EFdpa { l: 4 },
+        ] {
+            let model = MmaModel::new("batch-test", (8, 8, 16), fmts16(), spec);
+            let cases = random_case_batch(&mut rng, &model, 12, 0);
+            let batched = model.execute_batch(&cases);
+            for (cs, got) in cases.iter().zip(batched.iter()) {
+                let want = model.execute(&cs.a, &cs.b, &cs.c, None);
+                assert_eq!(want.data, got.data, "{spec:?}");
+            }
+        }
+        // FMA chain with matching FP32 operand formats
+        let fmts = MmaFormats {
+            a: Format::Fp32,
+            b: Format::Fp32,
+            c: Format::Fp32,
+            d: Format::Fp32,
+        };
+        let model = MmaModel::new("fma-batch", (4, 4, 8), fmts, ModelSpec::FmaChain);
+        let cases = random_case_batch(&mut rng, &model, 8, 0);
+        let batched = model.execute_batch(&cases);
+        for (cs, got) in cases.iter().zip(batched.iter()) {
+            let want = model.execute(&cs.a, &cs.b, &cs.c, None);
+            assert_eq!(want.data, got.data, "FmaChain");
+        }
+    }
+
+    #[test]
+    fn scaled_model_batch_matches_scalar() {
+        let spec = ModelSpec::StFdpa { l_max: 32, f: 25, rho: Rho::RzFp32, kblock: 32 };
+        let model = MmaModel::new("st-batch", (4, 4, 32), fmts16_fp8(), spec);
+        let mut rng = Rng::new(7);
+        let nblk = model.scale_blocks();
+        assert_eq!(nblk, 1);
+        let mut cases = random_case_batch(&mut rng, &model, 6, 0);
+        for cs in cases.iter_mut() {
+            let mut sa = BitMatrix::zeros(model.m, nblk, Format::E8M0);
+            let mut sb = BitMatrix::zeros(nblk, model.n, Format::E8M0);
+            for v in sa.data.iter_mut() {
+                *v = 120 + rng.below(16);
+            }
+            for v in sb.data.iter_mut() {
+                *v = 120 + rng.below(16);
+            }
+            cs.scales = Some((sa, sb));
+        }
+        let batched = model.execute_batch(&cases);
+        for (cs, got) in cases.iter().zip(batched.iter()) {
+            let want = model.execute(&cs.a, &cs.b, &cs.c, cs.scales());
+            assert_eq!(want.data, got.data);
+        }
+    }
+
+    fn fmts16_fp8() -> MmaFormats {
+        MmaFormats {
+            a: Format::Fp8E4M3,
+            b: Format::Fp8E4M3,
+            c: Format::Fp32,
+            d: Format::Fp32,
+        }
+    }
+
+    #[test]
+    fn scratch_reuse_is_invisible() {
+        // Interleave two differently-shaped models through one scratch:
+        // buffers must resize cleanly and results must match fresh runs.
+        let small = MmaModel::new(
+            "small",
+            (2, 2, 4),
+            fmts16(),
+            ModelSpec::TFdpa { l_max: 4, f: 24, rho: Rho::RzFp32 },
+        );
+        let big = MmaModel::new(
+            "big",
+            (8, 8, 32),
+            fmts16(),
+            ModelSpec::TFdpa { l_max: 16, f: 25, rho: Rho::RzFp32 },
+        );
+        let mut rng = Rng::new(11);
+        let cs = random_case_batch(&mut rng, &small, 3, 0);
+        let cb = random_case_batch(&mut rng, &big, 3, 0);
+        let mut scratch = DpaScratch::default();
+        for (s, b) in cs.iter().zip(cb.iter()) {
+            let mut ds = BitMatrix::zeros(2, 2, Format::Fp32);
+            small.execute_into(&s.a, &s.b, &s.c, None, &mut ds, &mut scratch);
+            assert_eq!(ds.data, small.execute(&s.a, &s.b, &s.c, None).data);
+            let mut db = BitMatrix::zeros(8, 8, Format::Fp32);
+            big.execute_into(&b.a, &b.b, &b.c, None, &mut db, &mut scratch);
+            assert_eq!(db.data, big.execute(&b.a, &b.b, &b.c, None).data);
+        }
+    }
+
+    #[test]
+    fn gst_ragged_k_consumes_partial_scale_block() {
+        // k = 40 with L = 32, kblock = 16: the final chunk [32, 40) spans a
+        // partial scale block. Before the div_ceil fix the chunk received an
+        // empty scale slice (dropping its scales entirely).
+        let spec = ModelSpec::GstFdpa {
+            l: 32,
+            g: 16,
+            f: 35,
+            rho: Rho::RzFp32,
+            kblock: 16,
+            scale_fmt: Format::E8M0,
+        };
+        let fmts = MmaFormats {
+            a: Format::Fp4E2M1,
+            b: Format::Fp4E2M1,
+            c: Format::Fp32,
+            d: Format::Fp32,
+        };
+        let model = MmaModel::new("gst-ragged", (1, 1, 40), fmts, spec);
+        assert_eq!(model.scale_blocks(), 3);
+        let one = Format::Fp4E2M1.from_f64(1.0);
+        let mut a = BitMatrix::zeros(1, 40, Format::Fp4E2M1);
+        let mut b = BitMatrix::zeros(40, 1, Format::Fp4E2M1);
+        a.set(0, 0, one);
+        b.set(0, 0, one); // block 0: contributes 1.0 × scale0
+        a.set(0, 38, one);
+        b.set(38, 0, one); // block 2 (the partial tail): 1.0 × scale2
+        let c = BitMatrix::from_f64(1, 1, Format::Fp32, &[0.5]);
+        // alpha: block 0 unit, block 1 unit, block 2 = 2^3
+        let sa = BitMatrix { rows: 1, cols: 3, fmt: Format::E8M0, data: vec![127, 127, 130] };
+        let sb = BitMatrix { rows: 3, cols: 1, fmt: Format::E8M0, data: vec![127, 127, 127] };
+        let d = model.execute(&a, &b, &c, Some((&sa, &sb)));
+        assert_eq!(
+            f32::from_bits(d.get(0, 0) as u32),
+            1.0 + 8.0 + 0.5,
+            "tail block scale (2^3) must be applied"
+        );
     }
 }

@@ -5,9 +5,9 @@
 //! accumulator) and rounds once to FP32 with RNE.
 
 use super::special::{special_pattern, NanStyle, SpecialOut};
-use super::{scan_specials, zero_result_negative};
+use super::{scan_specials, zero_result_negative, MAX_L};
 use crate::fixedpoint::Kulisch;
-use crate::formats::{Format, RoundingMode};
+use crate::formats::{Decoded, Format, RoundingMode};
 
 /// Accumulator window: BF16 products span LSBs from `2^(−133−133−14)`
 /// up to `2^(127+127−14) = 2^240` (two maximum-exponent normals), with
@@ -23,9 +23,19 @@ const WORDS: usize = 12;
 /// FP32 pattern.
 pub fn e_fdpa(in_fmt: Format, a: &[u64], b: &[u64], c_bits: u64) -> u64 {
     debug_assert_eq!(a.len(), b.len());
+    let l = a.len();
+    // hard assert: the stack staging below would index out of bounds, and
+    // a release build must fail with the real reason, not a slice panic
+    assert!(l <= MAX_L, "FDPA vector length {l} exceeds {MAX_L}");
     let c = Format::Fp32.decode(c_bits);
-    let da: Vec<_> = a.iter().map(|&x| in_fmt.decode(x)).collect();
-    let db: Vec<_> = b.iter().map(|&x| in_fmt.decode(x)).collect();
+    // fixed-size decode staging: no heap allocation on the hot path
+    let mut da = [Decoded::ZERO; MAX_L];
+    let mut db = [Decoded::ZERO; MAX_L];
+    for i in 0..l {
+        da[i] = in_fmt.decode(a[i]);
+        db[i] = in_fmt.decode(b[i]);
+    }
+    let (da, db) = (&da[..l], &db[..l]);
 
     match scan_specials(da.iter().copied().zip(db.iter().copied()), c) {
         SpecialOut::None => {}

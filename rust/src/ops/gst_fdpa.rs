@@ -7,9 +7,9 @@
 //! summation of the `L/G` group terms plus the accumulator.
 
 use super::special::{special_pattern, NanStyle, SpecialOut};
-use super::{acc_term, scan_specials, zero_result_negative};
+use super::{acc_term, scan_specials, zero_result_negative, MAX_L};
 use crate::fixedpoint::{e_max, FxTerm};
-use crate::formats::{convert, Format, Rho, RoundingMode};
+use crate::formats::{convert, Decoded, Format, Rho, RoundingMode};
 
 /// Parameters of a GST-FDPA operation (paper Table 5 row).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -29,7 +29,9 @@ pub struct GstFdpaCfg {
 /// GST-FDPA over bit patterns.
 ///
 /// `alpha`/`beta` hold one scale per `kblock` consecutive elements
-/// (`len = L / kblock`).
+/// (`len = ⌈L / kblock⌉`). A ragged `L` — the tail chunk of a `K` that is
+/// not a multiple of the vector length — is allowed: the final group and
+/// the final scale block may be partial.
 pub fn gst_fdpa(
     in_fmt: Format,
     a: &[u64],
@@ -41,18 +43,29 @@ pub fn gst_fdpa(
 ) -> u64 {
     let l = a.len();
     debug_assert_eq!(b.len(), l);
-    debug_assert_eq!(l % cfg.g, 0);
-    debug_assert_eq!(alpha.len(), l / cfg.kblock);
-    debug_assert_eq!(beta.len(), l / cfg.kblock);
+    // hard assert: stack staging below would index out of bounds otherwise
+    assert!(l <= MAX_L, "FDPA vector length {l} exceeds {MAX_L}");
+    debug_assert_eq!(alpha.len(), l.div_ceil(cfg.kblock));
+    debug_assert_eq!(beta.len(), l.div_ceil(cfg.kblock));
 
     let out_fmt = cfg.rho.output_format();
     let c = out_fmt.decode(c_bits);
-    let da: Vec<_> = a.iter().map(|&x| in_fmt.decode(x)).collect();
-    let db: Vec<_> = b.iter().map(|&x| in_fmt.decode(x)).collect();
-    let salpha: Vec<_> = alpha.iter().map(|&x| cfg.scale_fmt.decode(x)).collect();
-    let sbeta: Vec<_> = beta.iter().map(|&x| cfg.scale_fmt.decode(x)).collect();
+    let mut da = [Decoded::ZERO; MAX_L];
+    let mut db = [Decoded::ZERO; MAX_L];
+    for i in 0..l {
+        da[i] = in_fmt.decode(a[i]);
+        db[i] = in_fmt.decode(b[i]);
+    }
+    let (da, db) = (&da[..l], &db[..l]);
+    let nblk = alpha.len();
+    let mut salpha = [Decoded::ZERO; MAX_L];
+    let mut sbeta = [Decoded::ZERO; MAX_L];
+    for i in 0..nblk {
+        salpha[i] = cfg.scale_fmt.decode(alpha[i]);
+        sbeta[i] = cfg.scale_fmt.decode(beta[i]);
+    }
 
-    if salpha.iter().chain(sbeta.iter()).any(|s| s.is_nan()) {
+    if salpha[..nblk].iter().chain(sbeta[..nblk].iter()).any(|s| s.is_nan()) {
         return special_pattern(SpecialOut::Nan, out_fmt, NanStyle::NvCanonical);
     }
     match scan_specials(da.iter().copied().zip(db.iter().copied()), c) {
@@ -62,8 +75,11 @@ pub fn gst_fdpa(
 
     let fin = in_fmt.mant_bits() as i32;
     let fs = cfg.scale_fmt.mant_bits() as i32;
-    let groups = l / cfg.g;
-    let mut terms: Vec<FxTerm> = Vec::with_capacity(groups + 1);
+    let groups = l.div_ceil(cfg.g);
+    // Fixed-size staging (≤ L/G group terms + accumulator); zero terms are
+    // skipped — e_max and the aligned sum ignore them anyway.
+    let mut terms = [FxTerm::ZERO; MAX_L + 1];
+    let mut nterms = 0usize;
 
     for g in 0..groups {
         let blk = g * cfg.g / cfg.kblock;
@@ -71,7 +87,7 @@ pub fn gst_fdpa(
         // Step 1a: exact fixed-point dot product of the group at a common
         // LSB of 2^(min_exp - 2*fin).
         let lo = g * cfg.g;
-        let hi = lo + cfg.g;
+        let hi = (lo + cfg.g).min(l);
         let mut min_lsb = i32::MAX;
         for k in lo..hi {
             if da[k].sig != 0 && db[k].sig != 0 {
@@ -79,7 +95,6 @@ pub fn gst_fdpa(
             }
         }
         if min_lsb == i32::MAX {
-            terms.push(FxTerm::ZERO);
             continue;
         }
         let mut p: i128 = 0;
@@ -102,20 +117,22 @@ pub fn gst_fdpa(
         let s_g = p * sa.sig as i128 * sb.sig as i128;
         let e_g = sa.exp + sb.exp;
         if s_g == 0 {
-            terms.push(FxTerm::ZERO);
             continue;
         }
         // value = s_g * 2^(min_lsb - fs - fs) * 2^(e_g)
-        terms.push(FxTerm {
+        terms[nterms] = FxTerm {
             neg: s_g < 0,
             mag: s_g.unsigned_abs(),
             exp: e_g,
             frac: 2 * fs - min_lsb,
-        });
+        };
+        nterms += 1;
     }
-    terms.push(acc_term(out_fmt, c));
+    terms[nterms] = acc_term(out_fmt, c);
+    nterms += 1;
+    let terms = &terms[..nterms];
 
-    let emax = match e_max(&terms) {
+    let emax = match e_max(terms) {
         Some(e) => e,
         None => {
             let neg = zero_result_negative(
@@ -241,6 +258,23 @@ mod tests {
         let alpha = [127u64 + 4, 127u64 - 30];
         let out = gst_fdpa(Format::Fp4E2M1, &a, &b, 0, &alpha, &beta, cfg);
         assert_eq!(f32::from_bits(out as u32), 16.0 + 2f32.powi(-30));
+    }
+
+    #[test]
+    fn ragged_tail_chunk_with_partial_scale_block() {
+        // The tail chunk of a ragged K (e.g. L = 8 left over from K = 40
+        // with a 32-wide vector): one partial group and one partial scale
+        // block, which must still be consumed and applied.
+        let mut a = vec![fp4(0.0); 8];
+        let mut b = vec![fp4(0.0); 8];
+        a[6] = fp4(1.0);
+        b[6] = fp4(1.0);
+        let alpha = [129u64]; // 2^2
+        let beta = [127u64]; // 2^0
+        let cfg = GstFdpaCfg { kblock: 16, ..MXFP4 };
+        let c = Format::Fp32.from_f64(0.25);
+        let out = gst_fdpa(Format::Fp4E2M1, &a, &b, c, &alpha, &beta, cfg);
+        assert_eq!(f32::from_bits(out as u32), 4.25, "partial block scale applied");
     }
 
     #[test]

@@ -8,9 +8,9 @@
 //! sum with a special truncation rule (`e_c < E − F − 1 ⇒ s'_c ← 0`).
 
 use super::special::{special_pattern, NanStyle, SpecialOut};
-use super::{acc_term, product_term, scan_specials, zero_result_negative};
+use super::{acc_term, product_term, scan_specials, zero_result_negative, MAX_L};
 use crate::fixedpoint::FxTerm;
-use crate::formats::{convert, signed_align, Format, Rho, RoundingMode};
+use crate::formats::{convert, signed_align, Decoded, Format, Rho, RoundingMode};
 
 /// Parameters of a GTR-FDPA operation (paper Table 7: L=16, F=24, F2=31).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -32,20 +32,30 @@ pub fn gtr_fdpa(in_fmt: Format, a: &[u64], b: &[u64], c_bits: u64, cfg: GtrFdpaC
     debug_assert_eq!(a.len(), b.len());
     debug_assert_eq!(a.len() % 2, 0);
     let c = Format::Fp32.decode(c_bits);
-    let da: Vec<_> = a.iter().map(|&x| in_fmt.decode(x)).collect();
-    let db: Vec<_> = b.iter().map(|&x| in_fmt.decode(x)).collect();
+    let l = a.len();
+    // hard assert: stack staging below would index out of bounds otherwise
+    assert!(l <= MAX_L, "FDPA vector length {l} exceeds {MAX_L}");
+    // fixed-size decode staging: no heap allocation on the hot path
+    let mut da = [Decoded::ZERO; MAX_L];
+    let mut db = [Decoded::ZERO; MAX_L];
+    for i in 0..l {
+        da[i] = in_fmt.decode(a[i]);
+        db[i] = in_fmt.decode(b[i]);
+    }
+    let (da, db) = (&da[..l], &db[..l]);
 
     match scan_specials(da.iter().copied().zip(db.iter().copied()), c) {
         SpecialOut::None => {}
         s => return special_pattern(s, Format::Fp32, NanStyle::Quiet),
     }
 
-    // Step 1: exact products (FP8 products cannot overflow).
-    let terms: Vec<FxTerm> = da
-        .iter()
-        .zip(db.iter())
-        .map(|(&x, &y)| product_term(in_fmt, x, in_fmt, y))
-        .collect();
+    // Step 1: exact products (FP8 products cannot overflow). The array is
+    // indexed by lane: parity grouping below depends on the positions.
+    let mut terms = [FxTerm::ZERO; MAX_L];
+    for i in 0..l {
+        terms[i] = product_term(in_fmt, da[i], in_fmt, db[i]);
+    }
+    let terms = &terms[..l];
 
     // Step 2: two truncated fused sums over even / odd indices.
     let group_sum = |parity: usize| -> (i128, Option<i32>) {

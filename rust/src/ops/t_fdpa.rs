@@ -38,7 +38,8 @@ pub(crate) fn t_fdpa_scaled(
 ) -> u64 {
     debug_assert_eq!(a.len(), b.len());
     let l = a.len();
-    debug_assert!(l <= MAX_L, "FDPA vector length exceeds {MAX_L}");
+    // hard assert: the `terms` stack array below would index out of bounds
+    assert!(l <= MAX_L, "FDPA vector length {l} exceeds {MAX_L}");
     let out_fmt = cfg.rho.output_format();
     let c = out_fmt.decode(c_bits);
 

@@ -7,9 +7,9 @@
 //! Products may overflow to ±∞ when `|s_k·2^{e_k}| ≥ 2^128` (§4.2).
 
 use super::special::{special_pattern, NanStyle, SpecialOut};
-use super::{acc_term, product_term, scan_specials, zero_result_negative};
+use super::{acc_term, product_term, scan_specials, zero_result_negative, MAX_L};
 use crate::fixedpoint::{e_max, FxTerm};
-use crate::formats::{convert, Format, Rho, RoundingMode};
+use crate::formats::{convert, Decoded, Format, Rho, RoundingMode};
 
 /// Parameters of a TR-FDPA operation (paper Table 7 row).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -44,12 +44,22 @@ fn product_overflows(t: &FxTerm) -> bool {
 /// TR-FDPA over bit patterns. `c` is FP32; output is FP32 (ρ = RNE-FP32).
 pub fn tr_fdpa(in_fmt: Format, a: &[u64], b: &[u64], c_bits: u64, cfg: TrFdpaCfg) -> u64 {
     debug_assert_eq!(a.len(), b.len());
+    let l = a.len();
+    // hard assert: stack staging below would index out of bounds otherwise
+    assert!(l <= MAX_L, "FDPA vector length {l} exceeds {MAX_L}");
     let c = Format::Fp32.decode(c_bits);
-    let da: Vec<_> = a.iter().map(|&x| in_fmt.decode(x)).collect();
-    let db: Vec<_> = b.iter().map(|&x| in_fmt.decode(x)).collect();
+    // fixed-size decode staging: no heap allocation on the hot path
+    let mut da = [Decoded::ZERO; MAX_L];
+    let mut db = [Decoded::ZERO; MAX_L];
+    for i in 0..l {
+        da[i] = in_fmt.decode(a[i]);
+        db[i] = in_fmt.decode(b[i]);
+    }
+    let (da, db) = (&da[..l], &db[..l]);
 
     // Step 1: exact products; detect multiplication overflow to ±∞.
-    let mut terms: Vec<FxTerm> = Vec::with_capacity(a.len());
+    let mut terms = [FxTerm::ZERO; MAX_L];
+    let mut nterms = 0usize;
     let mut ovf_pos = false;
     let mut ovf_neg = false;
     for (&x, &y) in da.iter().zip(db.iter()) {
@@ -62,8 +72,10 @@ pub fn tr_fdpa(in_fmt: Format, a: &[u64], b: &[u64], c_bits: u64, cfg: TrFdpaCfg
             }
             continue;
         }
-        terms.push(t);
+        terms[nterms] = t;
+        nterms += 1;
     }
+    let terms = &terms[..nterms];
 
     let mut special = scan_specials(da.iter().copied().zip(db.iter().copied()), c);
     // merge multiplication overflows into the special outcome

@@ -1,0 +1,229 @@
+//! The real PJRT execution path (requires the vendored `xla` crate; built
+//! only with `--features pjrt`).
+
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use super::{artifact_out_fmt, read_manifest, ArtifactMeta};
+use crate::anyhow;
+use crate::formats::Format;
+use crate::interface::{BitMatrix, MmaFormats, MmaInterface, Scales};
+use crate::util::error::Result;
+
+/// The xla crate's executable wrapper holds raw pointers and is not
+/// `Send`; PJRT itself documents executables as thread-safe for execution,
+/// so a marker wrapper restores `Send` for use behind a `Mutex`.
+struct SendExe(xla::PjRtLoadedExecutable);
+// SAFETY: PJRT loaded executables are immutable after compilation and the
+// C API guards execution internally; access here is additionally
+// serialized by the surrounding Mutex.
+unsafe impl Send for SendExe {}
+
+/// A PJRT CPU runtime holding compiled executables.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client rooted at the artifacts directory.
+    pub fn new(artifacts_dir: impl AsRef<Path>) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(Self { client, dir: artifacts_dir.as_ref().to_path_buf() })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    fn compile(&self, file: &str) -> Result<xla::PjRtLoadedExecutable> {
+        let path = self.dir.join(file);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow!("parsing {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        self.client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {}: {e:?}", path.display()))
+    }
+
+    /// Load one emulated-MMA artifact as a black-box [`MmaInterface`].
+    pub fn load_mma(&self, meta: &ArtifactMeta) -> Result<PjrtMma> {
+        let exe = self.compile(&format!("{}.hlo.txt", meta.name))?;
+        let in_fmt = Format::parse(&meta.in_fmt)
+            .ok_or_else(|| anyhow!("unknown format {}", meta.in_fmt))?;
+        let out_fmt = artifact_out_fmt(meta);
+        Ok(PjrtMma {
+            exe: Mutex::new(SendExe(exe)),
+            name: meta.name.clone(),
+            m: meta.m,
+            n: meta.n,
+            k: meta.k,
+            formats: MmaFormats { a: in_fmt, b: in_fmt, c: out_fmt, d: out_fmt },
+        })
+    }
+
+    /// Load every emulated-MMA artifact listed in the manifest.
+    pub fn load_all(&self) -> Result<Vec<PjrtMma>> {
+        let mut out = Vec::new();
+        for meta in read_manifest(&self.dir)? {
+            if meta.kind == "tfdpa" || meta.kind == "ftz" {
+                out.push(self.load_mma(&meta)?);
+            }
+        }
+        Ok(out)
+    }
+
+    /// Load the FP32/FP64 reference GEMM (`which` is "f32" or "f64").
+    pub fn load_ref_gemm(&self, which: &str) -> Result<RefGemm> {
+        let exe = self.compile(&format!("gemm_ref_{which}.hlo.txt"))?;
+        let (m, n, k) = (16, 16, 16);
+        Ok(RefGemm { exe: Mutex::new(SendExe(exe)), f64_mode: which == "f64", m, n, k })
+    }
+
+    /// Load the Figure-3 deviation module.
+    pub fn load_bias_deviation(&self) -> Result<BiasDeviation> {
+        let exe = self.compile("bias_deviation.hlo.txt")?;
+        Ok(BiasDeviation { exe: Mutex::new(SendExe(exe)), m: 16, n: 16, k: 16 })
+    }
+}
+
+fn u32_literal(mat: &BitMatrix) -> Result<xla::Literal> {
+    let data: Vec<u32> = mat.data.iter().map(|&b| b as u32).collect();
+    xla::Literal::vec1(&data)
+        .reshape(&[mat.rows as i64, mat.cols as i64])
+        .map_err(|e| anyhow!("literal reshape: {e:?}"))
+}
+
+/// An AOT-compiled emulated MMA running under PJRT — the stand-in for the
+/// hardware MMA interface that CLFP probes.
+pub struct PjrtMma {
+    // PJRT execution is effectively thread-safe, but the xla crate's
+    // wrapper types are not Sync; a mutex keeps MmaInterface usable from
+    // the coordinator's worker threads.
+    exe: Mutex<SendExe>,
+    name: String,
+    m: usize,
+    n: usize,
+    k: usize,
+    formats: MmaFormats,
+}
+
+impl PjrtMma {
+    fn run(&self, a: &BitMatrix, b: &BitMatrix, c: &BitMatrix) -> Result<BitMatrix> {
+        let (la, lb, lc) = (u32_literal(a)?, u32_literal(b)?, u32_literal(c)?);
+        let exe = &self.exe.lock().unwrap().0;
+        let result = exe
+            .execute::<xla::Literal>(&[la, lb, lc])
+            .map_err(|e| anyhow!("execute {}: {e:?}", self.name))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch result: {e:?}"))?;
+        let out = lit.to_tuple1().map_err(|e| anyhow!("untuple: {e:?}"))?;
+        let vals: Vec<u32> = out.to_vec().map_err(|e| anyhow!("to_vec: {e:?}"))?;
+        Ok(BitMatrix {
+            rows: self.m,
+            cols: self.n,
+            fmt: self.formats.d,
+            data: vals.into_iter().map(|v| v as u64).collect(),
+        })
+    }
+}
+
+impl MmaInterface for PjrtMma {
+    fn shape(&self) -> (usize, usize, usize) {
+        (self.m, self.n, self.k)
+    }
+
+    fn formats(&self) -> MmaFormats {
+        self.formats
+    }
+
+    fn execute(&self, a: &BitMatrix, b: &BitMatrix, c: &BitMatrix, _scales: Scales) -> BitMatrix {
+        self.run(a, b, c).expect("PJRT execution failed")
+    }
+
+    fn name(&self) -> String {
+        format!("pjrt:{}", self.name)
+    }
+}
+
+/// Compiled float reference GEMM (`D_real` provider).
+pub struct RefGemm {
+    exe: Mutex<SendExe>,
+    f64_mode: bool,
+    pub m: usize,
+    pub n: usize,
+    pub k: usize,
+}
+
+impl RefGemm {
+    /// `D = A@B + C` over `f64` values (computed in f32 when the artifact
+    /// is the f32 reference).
+    pub fn run(&self, a: &[f64], b: &[f64], c: &[f64]) -> Result<Vec<f64>> {
+        let (m, n, k) = (self.m as i64, self.n as i64, self.k as i64);
+        let exe = &self.exe.lock().unwrap().0;
+        let lit = if self.f64_mode {
+            let la = xla::Literal::vec1(a).reshape(&[m, k]).map_err(wrap)?;
+            let lb = xla::Literal::vec1(b).reshape(&[k, n]).map_err(wrap)?;
+            let lc = xla::Literal::vec1(c).reshape(&[m, n]).map_err(wrap)?;
+            exe.execute::<xla::Literal>(&[la, lb, lc]).map_err(wrap)?[0][0]
+                .to_literal_sync()
+                .map_err(wrap)?
+        } else {
+            let af: Vec<f32> = a.iter().map(|&x| x as f32).collect();
+            let bf: Vec<f32> = b.iter().map(|&x| x as f32).collect();
+            let cf: Vec<f32> = c.iter().map(|&x| x as f32).collect();
+            let la = xla::Literal::vec1(&af).reshape(&[m, k]).map_err(wrap)?;
+            let lb = xla::Literal::vec1(&bf).reshape(&[k, n]).map_err(wrap)?;
+            let lc = xla::Literal::vec1(&cf).reshape(&[m, n]).map_err(wrap)?;
+            exe.execute::<xla::Literal>(&[la, lb, lc]).map_err(wrap)?[0][0]
+                .to_literal_sync()
+                .map_err(wrap)?
+        };
+        let out = lit.to_tuple1().map_err(wrap)?;
+        if self.f64_mode {
+            out.to_vec::<f64>().map_err(wrap)
+        } else {
+            Ok(out
+                .to_vec::<f32>()
+                .map_err(wrap)?
+                .into_iter()
+                .map(|x| x as f64)
+                .collect())
+        }
+    }
+}
+
+/// Compiled Figure-3 deviation module: one call returns
+/// `(D_rd, D_rz, D_real)` for FP16/FP32 bit-pattern inputs.
+pub struct BiasDeviation {
+    exe: Mutex<SendExe>,
+    pub m: usize,
+    pub n: usize,
+    pub k: usize,
+}
+
+impl BiasDeviation {
+    pub fn run(
+        &self,
+        a: &BitMatrix,
+        b: &BitMatrix,
+        c: &BitMatrix,
+    ) -> Result<(Vec<u32>, Vec<u32>, Vec<f64>)> {
+        let (la, lb, lc) = (u32_literal(a)?, u32_literal(b)?, u32_literal(c)?);
+        let exe = &self.exe.lock().unwrap().0;
+        let lit = exe.execute::<xla::Literal>(&[la, lb, lc]).map_err(wrap)?[0][0]
+            .to_literal_sync()
+            .map_err(wrap)?;
+        let (rd, rz, real) = lit.to_tuple3().map_err(wrap)?;
+        Ok((
+            rd.to_vec::<u32>().map_err(wrap)?,
+            rz.to_vec::<u32>().map_err(wrap)?,
+            real.to_vec::<f64>().map_err(wrap)?,
+        ))
+    }
+}
+
+fn wrap(e: xla::Error) -> crate::util::error::Error {
+    anyhow!("{e:?}")
+}

@@ -1,0 +1,111 @@
+//! Stub runtime used when the `pjrt` feature is off (the default in the
+//! offline image, which cannot fetch the `xla` crate).
+//!
+//! [`Runtime::new`] always errors, so none of the loaded-artifact types can
+//! ever be constructed; their methods are unreachable by construction.
+//! Every caller (CLI subcommands, benches, integration tests, examples)
+//! gates PJRT work on `manifest.txt` existing and reports "artifacts not
+//! built" / "pjrt not compiled in" instead of failing the suite.
+
+use std::path::Path;
+
+use super::ArtifactMeta;
+use crate::anyhow;
+use crate::interface::{BitMatrix, MmaFormats, MmaInterface, Scales};
+use crate::util::error::Result;
+
+const MSG: &str = "mma-sim was built without the `pjrt` feature; \
+                   rebuild with `--features pjrt` (requires the vendored `xla` crate)";
+
+/// Stub PJRT runtime: construction always fails with a clear message.
+pub struct Runtime {
+    _private: (),
+}
+
+impl Runtime {
+    pub fn new(_artifacts_dir: impl AsRef<Path>) -> Result<Self> {
+        Err(anyhow!("{MSG}"))
+    }
+
+    pub fn platform(&self) -> String {
+        unreachable!("stub Runtime cannot be constructed")
+    }
+
+    pub fn load_mma(&self, _meta: &ArtifactMeta) -> Result<PjrtMma> {
+        unreachable!("stub Runtime cannot be constructed")
+    }
+
+    pub fn load_all(&self) -> Result<Vec<PjrtMma>> {
+        unreachable!("stub Runtime cannot be constructed")
+    }
+
+    pub fn load_ref_gemm(&self, _which: &str) -> Result<RefGemm> {
+        unreachable!("stub Runtime cannot be constructed")
+    }
+
+    pub fn load_bias_deviation(&self) -> Result<BiasDeviation> {
+        unreachable!("stub Runtime cannot be constructed")
+    }
+}
+
+/// Uninhabitable stand-in for the PJRT-loaded MMA artifact.
+pub struct PjrtMma {
+    _private: (),
+}
+
+impl MmaInterface for PjrtMma {
+    fn shape(&self) -> (usize, usize, usize) {
+        unreachable!("stub PjrtMma cannot be constructed")
+    }
+
+    fn formats(&self) -> MmaFormats {
+        unreachable!("stub PjrtMma cannot be constructed")
+    }
+
+    fn execute(
+        &self,
+        _a: &BitMatrix,
+        _b: &BitMatrix,
+        _c: &BitMatrix,
+        _scales: Scales,
+    ) -> BitMatrix {
+        unreachable!("stub PjrtMma cannot be constructed")
+    }
+
+    fn name(&self) -> String {
+        unreachable!("stub PjrtMma cannot be constructed")
+    }
+}
+
+/// Uninhabitable stand-in for the compiled reference GEMM.
+pub struct RefGemm {
+    pub m: usize,
+    pub n: usize,
+    pub k: usize,
+    _private: (),
+}
+
+impl RefGemm {
+    pub fn run(&self, _a: &[f64], _b: &[f64], _c: &[f64]) -> Result<Vec<f64>> {
+        unreachable!("stub RefGemm cannot be constructed")
+    }
+}
+
+/// Uninhabitable stand-in for the Figure-3 deviation module.
+pub struct BiasDeviation {
+    pub m: usize,
+    pub n: usize,
+    pub k: usize,
+    _private: (),
+}
+
+impl BiasDeviation {
+    pub fn run(
+        &self,
+        _a: &BitMatrix,
+        _b: &BitMatrix,
+        _c: &BitMatrix,
+    ) -> Result<(Vec<u32>, Vec<u32>, Vec<f64>)> {
+        unreachable!("stub BiasDeviation cannot be constructed")
+    }
+}

@@ -4,7 +4,45 @@
 //! prints mean / p50 / p99 per iteration plus derived throughput, in a
 //! format stable enough to diff across runs (EXPERIMENTS.md §Perf).
 
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::time::Instant;
+
+static SMOKE: AtomicBool = AtomicBool::new(false);
+
+/// Enable smoke mode: drastically shorter warmup and sample counts so a CI
+/// run of every bench finishes in seconds. The numbers are NOT meaningful
+/// for performance comparison — smoke mode only proves the perf path runs.
+pub fn set_smoke(on: bool) {
+    SMOKE.store(on, Ordering::Relaxed);
+}
+
+/// Whether smoke mode is active (via [`set_smoke`] or `MMA_BENCH_SMOKE=1`).
+pub fn smoke() -> bool {
+    SMOKE.load(Ordering::Relaxed)
+        || std::env::var("MMA_BENCH_SMOKE").is_ok_and(|v| v != "0" && !v.is_empty())
+}
+
+/// Consume a bench binary's CLI args: `--smoke` switches smoke mode on.
+pub fn parse_bench_args() {
+    if std::env::args().skip(1).any(|a| a == "--smoke") {
+        set_smoke(true);
+    }
+}
+
+/// Where a bench writes its JSON record: `$MMA_BENCH_OUT` is an output
+/// *directory* override (each bench keeps its own filename, so two benches
+/// can never clobber each other's record); the default is the repo root.
+pub fn out_path(default_name: &str) -> PathBuf {
+    let dir = match std::env::var("MMA_BENCH_OUT") {
+        Ok(d) if !d.is_empty() => PathBuf::from(d),
+        _ => Path::new(env!("CARGO_MANIFEST_DIR"))
+            .parent()
+            .map(|p| p.to_path_buf())
+            .unwrap_or_default(),
+    };
+    dir.join(default_name)
+}
 
 /// One benchmark result.
 #[derive(Clone, Debug)]
@@ -49,15 +87,17 @@ fn fmt_ns(ns: f64) -> String {
 /// Run a benchmark: warm up for ~0.2 s, then sample until ~1 s or
 /// `max_samples` iterations, whichever comes first.
 pub fn bench<F: FnMut()>(name: &str, mut f: F) -> BenchResult {
+    let (warm_ms, max_warm, min_target, max_target) =
+        if smoke() { (10, 50, 5, 50) } else { (200, 10_000, 10, 100_000) };
     // warmup
     let warm_start = Instant::now();
     let mut warm_iters = 0usize;
-    while warm_start.elapsed().as_millis() < 200 && warm_iters < 10_000 {
+    while warm_start.elapsed().as_millis() < warm_ms && warm_iters < max_warm {
         f();
         warm_iters += 1;
     }
     let per_iter = warm_start.elapsed().as_nanos() as f64 / warm_iters.max(1) as f64;
-    let target = ((1e9 / per_iter.max(1.0)) as usize).clamp(10, 100_000);
+    let target = ((1e9 / per_iter.max(1.0)) as usize).clamp(min_target, max_target);
 
     let mut samples = Vec::with_capacity(target);
     for _ in 0..target {

@@ -1,0 +1,54 @@
+//! Minimal error plumbing (the offline image ships no `anyhow`).
+//!
+//! `Result`/`Error` are boxed trait objects, so `?` works on every std
+//! error type, and the [`crate::anyhow!`]/[`crate::bail!`] macros cover
+//! the formatting-heavy call sites in the CLI and runtime.
+
+/// A boxed error, convertible from any std error or a plain message.
+pub type Error = Box<dyn std::error::Error + Send + Sync + 'static>;
+
+/// Crate-wide result type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Build an [`Error`](crate::util::error::Error) from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::util::error::Error::from(format!($($arg)*))
+    };
+}
+
+/// Return early with a formatted [`Error`](crate::util::error::Error).
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse_twice(s: &str) -> Result<u64> {
+        let n: u64 = s.parse()?; // std error converts via `?`
+        if n > 100 {
+            bail!("{n} is too large");
+        }
+        Ok(n * 2)
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        assert_eq!(parse_twice("21").unwrap(), 42);
+        assert!(parse_twice("nope").is_err());
+        let e = parse_twice("101").unwrap_err();
+        assert_eq!(e.to_string(), "101 is too large");
+    }
+
+    #[test]
+    fn anyhow_macro_formats() {
+        let e: Error = anyhow!("bad {} at {}", "thing", 7);
+        assert_eq!(e.to_string(), "bad thing at 7");
+    }
+}

@@ -1,6 +1,7 @@
 //! Small utilities shared across the crate.
 
 pub mod bench;
+pub mod error;
 pub mod rng;
 
 pub use bench::{bench, black_box, BenchResult};

@@ -1,0 +1,119 @@
+//! The batch execution engine end-to-end: batched results must be
+//! bit-identical to per-case scalar execution through every entry point
+//! (trait-object dispatch, the parallel driver, the coordinator pool), for
+//! every model family in the registry.
+
+use std::sync::Arc;
+
+use mma_sim::clfp::random_case_batch;
+use mma_sim::coordinator::{Coordinator, VerifyPair};
+use mma_sim::formats::{Format, Rho};
+use mma_sim::interface::{
+    parallel_execute_batch, parallel_execute_batch_with, MmaFormats, MmaInterface,
+};
+use mma_sim::isa;
+use mma_sim::models::{MmaModel, ModelSpec};
+use mma_sim::util::Rng;
+
+#[test]
+fn batch_equals_scalar_for_every_registry_instruction() {
+    let mut rng = Rng::new(0xE0E0);
+    for instr in isa::registry() {
+        if instr.m * instr.n > 1024 {
+            continue; // keep the sweep snappy; shapes repeat across sizes
+        }
+        let model = instr.model();
+        let iface: &dyn MmaInterface = &model;
+        let cases = random_case_batch(&mut rng, iface, 5, 0);
+        let batched = iface.execute_batch(&cases);
+        assert_eq!(batched.len(), cases.len(), "{}", instr.name);
+        for (cs, got) in cases.iter().zip(batched.iter()) {
+            let want = iface.execute(&cs.a, &cs.b, &cs.c, None);
+            assert_eq!(want.data, got.data, "{}", instr.name);
+        }
+    }
+}
+
+#[test]
+fn parallel_driver_is_bit_identical_for_any_thread_count() {
+    let model = MmaModel::new(
+        "par",
+        (16, 16, 32),
+        MmaFormats { a: Format::Fp16, b: Format::Fp16, c: Format::Fp32, d: Format::Fp32 },
+        ModelSpec::TFdpa { l_max: 16, f: 25, rho: Rho::RzFp32 },
+    );
+    let mut rng = Rng::new(0xF00D);
+    let cases = random_case_batch(&mut rng, &model, 37, 0);
+    let serial = model.execute_batch(&cases);
+    for threads in [2, 3, 5, 16, 64] {
+        let par = parallel_execute_batch_with(&model, &cases, threads);
+        assert_eq!(par.len(), serial.len());
+        for (i, (s, p)) in serial.iter().zip(par.iter()).enumerate() {
+            assert_eq!(s.data, p.data, "case {i} threads {threads}");
+        }
+    }
+    let auto = parallel_execute_batch(&model, &cases);
+    for (s, p) in serial.iter().zip(auto.iter()) {
+        assert_eq!(s.data, p.data);
+    }
+}
+
+#[test]
+fn coordinator_batch_path_still_catches_divergence() {
+    // The worker now routes through execute_batch; a one-parameter DUT
+    // perturbation must still be detected, and a matching pair must not
+    // regress to false positives.
+    let fmts = MmaFormats { a: Format::Fp16, b: Format::Fp16, c: Format::Fp32, d: Format::Fp32 };
+    let mk = |f: i32| {
+        MmaModel::new(
+            format!("f{f}"),
+            (8, 8, 16),
+            fmts,
+            ModelSpec::TFdpa { l_max: 16, f, rho: Rho::RzFp32 },
+        )
+    };
+    let pairs = vec![
+        VerifyPair { name: "same".into(), dut: Arc::new(mk(25)), golden: Arc::new(mk(25)) },
+        VerifyPair { name: "diff".into(), dut: Arc::new(mk(24)), golden: Arc::new(mk(25)) },
+    ];
+    let coord = Coordinator::new(pairs, 4, 8);
+    let report = coord.run_campaign(4, 100, 99);
+    assert_eq!(report.pairs["same"].mismatches, 0);
+    assert!(report.pairs["diff"].mismatches > 0, "F=24 vs F=25 must diverge");
+    let fm = report.pairs["diff"].first_mismatch.as_ref().expect("mismatch recorded");
+    assert!(!fm.a.is_empty(), "reproduction inputs captured from the batch");
+    coord.shutdown();
+}
+
+#[test]
+fn scaled_interfaces_batch_with_scale_operands() {
+    // MX-scaled instruction through the batch API with explicit scales.
+    let instr = isa::registry()
+        .into_iter()
+        .find(|i| matches!(i.class, isa::InputClass::Mxfp8))
+        .expect("an MXFP8 instruction in the registry");
+    let model = instr.model();
+    let spec = model.scale_spec().expect("scaled");
+    let (m, n, k) = model.shape();
+    let nblk = k / spec.kblock;
+    let mut rng = Rng::new(0x5CA1E);
+    let mut cases = random_case_batch(&mut rng, &model, 4, 0);
+    for cs in cases.iter_mut() {
+        let mut sa =
+            mma_sim::interface::BitMatrix::zeros(m, nblk, spec.fmt);
+        let mut sb =
+            mma_sim::interface::BitMatrix::zeros(nblk, n, spec.fmt);
+        for v in sa.data.iter_mut() {
+            *v = 124 + rng.below(8); // E8M0 exponents around 2^0
+        }
+        for v in sb.data.iter_mut() {
+            *v = 124 + rng.below(8);
+        }
+        cs.scales = Some((sa, sb));
+    }
+    let batched = model.execute_batch(&cases);
+    for (cs, got) in cases.iter().zip(batched.iter()) {
+        let want = model.execute(&cs.a, &cs.b, &cs.c, cs.scales());
+        assert_eq!(want.data, got.data, "{}", instr.name);
+    }
+}

@@ -16,7 +16,7 @@ use mma_sim::fixedpoint::Kulisch;
 use mma_sim::formats::{Format, Rho};
 use mma_sim::interface::{MmaFormats, MmaInterface};
 use mma_sim::models::{MmaModel, ModelSpec};
-use mma_sim::ops::{e_fdpa, fma, t_fdpa, TFdpaCfg};
+use mma_sim::ops::{e_fdpa, flush_subnormal_input, fma, ftz_add, ftz_mul, t_fdpa, TFdpaCfg};
 use mma_sim::util::Rng;
 
 const CASES: usize = 4000;
@@ -163,6 +163,122 @@ fn prop_symmetric_models_negate_cleanly() {
                     continue;
                 }
                 assert_eq!(*x ^ (1 << 31), *y, "{spec:?}");
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_is_symmetric_specs_negate_bitwise() {
+    // Every ModelSpec classified symmetric must satisfy
+    // Φ(-A, B, -C) = -Φ(A, B, C) bit-for-bit (paper §6.2.4), modulo the
+    // shared exact-zero convention (cancellation yields +0 in both
+    // directions) and NaN payloads. Probed at the dot-product level with
+    // unit scales for the scaled families.
+    let mut rng = Rng::new(139);
+    let cases: &[(ModelSpec, Format, usize)] = &[
+        (ModelSpec::TFdpa { l_max: 16, f: 25, rho: Rho::RzFp32 }, Format::Fp16, 32),
+        (ModelSpec::TFdpa { l_max: 8, f: 24, rho: Rho::RneFp16 }, Format::Fp16, 16),
+        (ModelSpec::EFdpa { l: 4 }, Format::Fp16, 16),
+        (ModelSpec::FtzAddMul { p: 2 }, Format::Bf16, 16),
+        (ModelSpec::FtzAddMul { p: 4 }, Format::Fp16, 16),
+        (ModelSpec::FmaChain, Format::Fp32, 8),
+        (
+            ModelSpec::StFdpa { l_max: 32, f: 25, rho: Rho::RzFp32, kblock: 32 },
+            Format::Fp8E4M3,
+            32,
+        ),
+        (
+            ModelSpec::GstFdpa {
+                l: 64,
+                g: 16,
+                f: 35,
+                rho: Rho::RzFp32,
+                kblock: 16,
+                scale_fmt: Format::E8M0,
+            },
+            Format::Fp4E2M1,
+            64,
+        ),
+    ];
+    for &(spec, in_fmt, k) in cases {
+        assert!(spec.is_symmetric(), "{spec:?} must be classified symmetric");
+        let out_fmt = match spec {
+            ModelSpec::TFdpa { rho, .. } => rho.output_format(),
+            _ => Format::Fp32,
+        };
+        let fmts = MmaFormats { a: in_fmt, b: in_fmt, c: out_fmt, d: out_fmt };
+        let model = MmaModel::new("sym", (1, 1, k), fmts, spec);
+        let a_sign = 1u64 << (in_fmt.width() - 1);
+        let d_sign = 1u64 << (out_fmt.width() - 1);
+        for _ in 0..200 {
+            let a: Vec<u64> = (0..k).map(|_| rng.bits(in_fmt.width())).collect();
+            let b: Vec<u64> = (0..k).map(|_| rng.bits(in_fmt.width())).collect();
+            let c = rng.bits(out_fmt.width());
+            let na: Vec<u64> = a.iter().map(|&x| x ^ a_sign).collect();
+            let nc = c ^ d_sign;
+            let d1 = model.probe(&a, &b, c);
+            let d2 = model.probe(&na, &b, nc);
+            let v1 = out_fmt.decode(d1);
+            let v2 = out_fmt.decode(d2);
+            if v1.is_nan() || v2.is_nan() {
+                assert_eq!(v1.is_nan(), v2.is_nan(), "{spec:?}: NaN asymmetry");
+                continue;
+            }
+            if v1.is_zero() && v2.is_zero() {
+                continue; // exact-zero sign convention is direction-independent
+            }
+            assert_eq!(d1 ^ d_sign, d2, "{spec:?}: Φ(-A,B,-C) != -Φ(A,B,C)");
+        }
+    }
+}
+
+/// Explicit FTZ-AddMul reference: P-chunked products with pairwise
+/// summation (balanced for a full P=4 chunk, left-to-right for ragged
+/// tails), sequentially FTZ-accumulated — Algorithm 2 spelled out.
+fn ftz_dpa_reference(fmt: Format, a: &[u64], b: &[u64], c: u64, p: usize) -> u64 {
+    let mut d = flush_subnormal_input(Format::Fp32, c);
+    for (ca, cb) in a.chunks(p).zip(b.chunks(p)) {
+        let prods: Vec<u64> = ca
+            .iter()
+            .zip(cb.iter())
+            .map(|(&x, &y)| {
+                ftz_mul(fmt, flush_subnormal_input(fmt, x), flush_subnormal_input(fmt, y))
+            })
+            .collect();
+        let s = match prods.len() {
+            1 => prods[0],
+            2 => ftz_add(prods[0], prods[1]),
+            4 => ftz_add(ftz_add(prods[0], prods[1]), ftz_add(prods[2], prods[3])),
+            _ => {
+                let mut s = ftz_add(prods[0], prods[1]);
+                for &q in &prods[2..] {
+                    s = ftz_add(s, q);
+                }
+                s
+            }
+        };
+        d = ftz_add(d, s);
+    }
+    d
+}
+
+#[test]
+fn prop_ftz_ragged_tails_match_pairwise_reference() {
+    // k % p ∈ {1, 2, 3}: the tail chunk takes the short summation paths.
+    let mut rng = Rng::new(149);
+    let fmts =
+        MmaFormats { a: Format::Fp16, b: Format::Fp16, c: Format::Fp32, d: Format::Fp32 };
+    for (p, ks) in [(4usize, [5usize, 6, 7, 13]), (2, [3, 5, 7, 9])] {
+        for &k in &ks {
+            let model = MmaModel::new("ftz-ragged", (1, 1, k), fmts, ModelSpec::FtzAddMul { p });
+            for _ in 0..300 {
+                let a: Vec<u64> = (0..k).map(|_| rng.bits(16)).collect();
+                let b: Vec<u64> = (0..k).map(|_| rng.bits(16)).collect();
+                let c = rng.bits(32);
+                let got = model.probe(&a, &b, c);
+                let want = ftz_dpa_reference(Format::Fp16, &a, &b, c, p);
+                assert_eq!(got, want, "p={p} k={k}");
             }
         }
     }
