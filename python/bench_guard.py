@@ -1,0 +1,138 @@
+#!/usr/bin/env python3
+"""Cheap hot-path perf regression guard for CI.
+
+Two checks over a fresh ``BENCH_hotpath.json``:
+
+1. **In-run** (machine-independent): the table-driven fast path must
+   actually be fast. Each speedup in the ``lut`` section — LUT vs
+   bit-level over identical inputs, measured in the same process — must
+   clear the floor: 2.0 on full runs (the acceptance criterion), 1.2 on
+   smoke runs whose handful of samples are too noisy for the full bar
+   (env ``GUARD_MIN_LUT_SPEEDUP`` overrides both). This catches the fast
+   path silently degrading to the reference path, e.g. a dispatch change
+   that stops hitting the tables.
+
+2. **Cross-run**: record-by-record, the fresh run must not regress more
+   than ``REGRESSION_FACTOR`` (2x) against the committed baseline. When
+   three or more records are comparable, each record's throughput ratio
+   is normalized by the median ratio across all compared records, which
+   cancels overall runner-speed differences between unpinned CI hosts —
+   only a record that regresses relative to its own run trips the gate.
+   Armed when the baseline exists, is not a placeholder, and ran in the
+   same smoke mode.
+
+Exit status 1 on any failure, 0 otherwise.
+
+Usage:
+    python3 python/bench_guard.py BENCH_hotpath.json \
+        --baseline /tmp/bench-baseline/BENCH_hotpath.json
+"""
+
+import argparse
+import json
+import os
+import sys
+
+REGRESSION_FACTOR = 2.0
+
+
+def lut_floor(fresh):
+    env = os.environ.get("GUARD_MIN_LUT_SPEEDUP")
+    if env is not None:
+        return float(env)
+    return 1.2 if fresh.get("smoke") else 2.0
+
+
+def load(path):
+    with open(path) as fh:
+        return json.load(fh)
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("fresh", help="bench JSON emitted by the current run")
+    ap.add_argument("--baseline", default=None, help="committed baseline JSON")
+    args = ap.parse_args()
+
+    fresh = load(args.fresh)
+    failures = []
+
+    # The fresh file must be a real measurement: if the bench failed to
+    # overwrite the committed placeholder, the run produced no numbers.
+    if fresh.get("placeholder"):
+        failures.append(
+            "fresh bench record is a placeholder -- the bench did not emit "
+            "a real measurement (did the bench binary fail to write?)"
+        )
+
+    # --- check 1: in-run LUT speedups -----------------------------------
+    floor = lut_floor(fresh)
+    lut = fresh.get("lut") or {}
+    if not lut:
+        failures.append("no `lut` section in fresh run (fast-path bench missing)")
+    for name, speedup in sorted(lut.items()):
+        if speedup is None:
+            failures.append(f"lut.{name} is null -- bench emitted no measurement")
+        elif speedup < floor:
+            failures.append(
+                f"lut.{name} = {speedup:.2f}x < {floor:.2f}x: "
+                "table fast path regressed toward bit-level speed"
+            )
+        else:
+            print(f"guard: lut.{name} = {speedup:.2f}x (>= {floor:.2f}x) ok")
+
+    # --- check 2: cross-run vs committed baseline ------------------------
+    base = None
+    if args.baseline and os.path.exists(args.baseline):
+        base = load(args.baseline)
+    if base is None:
+        print("guard: no committed baseline found -- cross-run check skipped")
+    elif base.get("placeholder"):
+        print(
+            "guard: committed baseline is a placeholder -- commit a real "
+            "`cargo bench --bench hotpath -- --smoke` record to arm the "
+            "cross-run check"
+        )
+    elif bool(base.get("smoke")) != bool(fresh.get("smoke")):
+        print("guard: baseline/fresh smoke modes differ -- cross-run check skipped")
+    else:
+        base_records = {r["name"]: r for r in base.get("records", [])}
+        common = []
+        for r in fresh.get("records", []):
+            b = base_records.get(r["name"])
+            if not b:
+                continue
+            fresh_tp = r.get("m_ops_per_s")
+            base_tp = b.get("m_ops_per_s")
+            if not fresh_tp or not base_tp:
+                continue
+            common.append((r["name"], fresh_tp / base_tp))
+        # Normalize each record's fresh/baseline ratio by the run's median
+        # ratio: an unpinned CI runner that is uniformly slower shifts every
+        # ratio equally and cancels out; only a record that regressed
+        # relative to its own run trips the gate. With fewer than 3
+        # comparable records there is no meaningful median -- compare raw.
+        scale = 1.0
+        if len(common) >= 3:
+            ratios = sorted(ratio for _, ratio in common)
+            scale = ratios[len(ratios) // 2]
+            print(f"guard: runner-speed normalization x{scale:.3f} (median ratio)")
+        for name, ratio in common:
+            if ratio * REGRESSION_FACTOR < scale:
+                failures.append(
+                    f"{name}: {ratio / scale:.2f}x of baseline after runner "
+                    f"normalization (> {REGRESSION_FACTOR}x regression)"
+                )
+        print(f"guard: compared {len(common)} records against baseline")
+
+    if failures:
+        print("bench guard FAILED:")
+        for f in failures:
+            print("  -", f)
+        return 1
+    print("bench guard OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

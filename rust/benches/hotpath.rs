@@ -9,7 +9,8 @@
 //! numbers are not meaningful.
 
 use mma_sim::clfp::random_case_batch;
-use mma_sim::formats::{Format, Rho};
+use mma_sim::fixedpoint::FxTerm;
+use mma_sim::formats::{tables, Format, Rho};
 use mma_sim::interface::{auto_threads, parallel_execute_batch_with, MmaInterface};
 use mma_sim::interface::MmaFormats;
 use mma_sim::models::{MmaModel, ModelSpec};
@@ -135,6 +136,80 @@ fn main() {
         records.push((r.name.clone(), r.mean_ns, r.throughput(dpa_per_iter) / 1e6));
     }
 
+    // === narrow-format decode & product LUTs =================================
+    // Decode-bound and product-bound micro-benchmarks: the bit-level
+    // reference path vs the table-driven fast path over identical inputs.
+    // The `lut` section of BENCH_hotpath.json records the speedups
+    // (target: ≥ 2× on a full run; smoke numbers are noisier).
+    // fp16 stream is table-sized (64Ki random patterns) so the LUT is
+    // measured under streaming access, not a cache-resident replay of a
+    // few indices; the 8-bit tables are tiny, 4Ki inputs suffice.
+    let nd16 = 65536usize;
+    let nd8 = 4096usize;
+    let raw16: Vec<u64> = (0..nd16).map(|_| rng.bits(16)).collect();
+    let raw8a: Vec<u64> = (0..nd8).map(|_| rng.bits(8)).collect();
+    let raw8b: Vec<u64> = (0..nd8).map(|_| rng.bits(8)).collect();
+    tables::warm(Format::Fp16);
+    tables::warm(Format::Fp8E4M3);
+
+    let r_dec16_bit = bench("decode/fp16/bitlevel_x65536", || {
+        let mut acc = 0u64;
+        for &bits in &raw16 {
+            acc ^= Format::Fp16.decode_reference(bits).sig;
+        }
+        black_box(acc);
+    });
+    let r_dec16_lut = bench("decode/fp16/lut_x65536", || {
+        let mut acc = 0u64;
+        for &bits in &raw16 {
+            acc ^= Format::Fp16.decode(bits).sig;
+        }
+        black_box(acc);
+    });
+    let r_dec8_bit = bench("decode/fp8e4m3/bitlevel_x4096", || {
+        let mut acc = 0u64;
+        for &bits in &raw8a {
+            acc ^= Format::Fp8E4M3.decode_reference(bits).sig;
+        }
+        black_box(acc);
+    });
+    let r_dec8_lut = bench("decode/fp8e4m3/lut_x4096", || {
+        let mut acc = 0u64;
+        for &bits in &raw8a {
+            acc ^= Format::Fp8E4M3.decode(bits).sig;
+        }
+        black_box(acc);
+    });
+    let m8 = Format::Fp8E4M3.mant_bits();
+    let r_prod_bit = bench("product/fp8e4m3/bitlevel_x4096", || {
+        let mut acc = 0u128;
+        for (&x, &y) in raw8a.iter().zip(raw8b.iter()) {
+            let dx = Format::Fp8E4M3.decode_reference(x);
+            let dy = Format::Fp8E4M3.decode_reference(y);
+            acc ^= FxTerm::product(dx.sig, dx.exp, m8, dx.sign, dy.sig, dy.exp, m8, dy.sign).mag;
+        }
+        black_box(acc);
+    });
+    let r_prod_lut = bench("product/fp8e4m3/lut_x4096", || {
+        let mut acc = 0u128;
+        for (&x, &y) in raw8a.iter().zip(raw8b.iter()) {
+            acc ^= tables::product(Format::Fp8E4M3, x, Format::Fp8E4M3, y).unwrap().mag;
+        }
+        black_box(acc);
+    });
+    let sp_dec16 = r_dec16_bit.mean_ns / r_dec16_lut.mean_ns;
+    let sp_dec8 = r_dec8_bit.mean_ns / r_dec8_lut.mean_ns;
+    let sp_prod = r_prod_bit.mean_ns / r_prod_lut.mean_ns;
+    println!("    decode fp16    LUT speedup: {sp_dec16:.2}x");
+    println!("    decode fp8e4m3 LUT speedup: {sp_dec8:.2}x");
+    println!("    product fp8e4m3 LUT speedup: {sp_prod:.2}x");
+    for r in [&r_dec16_bit, &r_dec16_lut] {
+        records.push((r.name.clone(), r.mean_ns, r.throughput(nd16 as f64) / 1e6));
+    }
+    for r in [&r_dec8_bit, &r_dec8_lut, &r_prod_bit, &r_prod_lut] {
+        records.push((r.name.clone(), r.mean_ns, r.throughput(nd8 as f64) / 1e6));
+    }
+
     // === JSON record =========================================================
     let mut json = String::from("{\n");
     json.push_str("  \"bench\": \"hotpath\",\n");
@@ -158,11 +233,21 @@ fn main() {
             "    {{\"name\": \"{name}\", \"mean_ns\": {mean_ns:.1}, \"m_ops_per_s\": {mdpa:.3}}}{comma}\n"
         ));
     }
-    json.push_str("  ]\n}\n");
+    json.push_str("  ],\n");
+    json.push_str("  \"lut\": {\n");
+    json.push_str(&format!("    \"decode_fp16_speedup\": {sp_dec16:.3},\n"));
+    json.push_str(&format!("    \"decode_fp8e4m3_speedup\": {sp_dec8:.3},\n"));
+    json.push_str(&format!("    \"product_fp8e4m3_speedup\": {sp_prod:.3}\n"));
+    json.push_str("  }\n}\n");
 
     let path = mma_sim::util::bench::out_path("BENCH_hotpath.json");
     match std::fs::write(&path, &json) {
         Ok(()) => println!("wrote {}", path.display()),
-        Err(e) => eprintln!("could not write {}: {e}", path.display()),
+        Err(e) => {
+            // a silent write failure would leave the committed placeholder
+            // in place and neuter the CI regression guard
+            eprintln!("could not write {}: {e}", path.display());
+            std::process::exit(1);
+        }
     }
 }

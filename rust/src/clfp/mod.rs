@@ -24,6 +24,8 @@ pub use candidates::candidate_specs;
 pub use probes::{Probe, ProbeBuilder};
 pub use tree::{tree_signature, TreeSignature};
 
+use std::collections::HashMap;
+
 use crate::formats::Format;
 use crate::interface::{parallel_execute_batch, BitMatrix, MmaCase, MmaInterface};
 use crate::models::ModelSpec;
@@ -36,8 +38,11 @@ pub struct Inference {
     pub independent: bool,
     /// Step 2 signature (Figure 2 matrix).
     pub tree: TreeSignature,
-    /// Number of probe cases executed against the interface.
+    /// Number of probe cases in the step-3 battery.
     pub probes_run: usize,
+    /// Distinct realized probe inputs after dedup (executions per
+    /// interface; the battery contains colliding probes by construction).
+    pub probes_unique: usize,
     /// Candidates surviving the probe filter, best first.
     pub survivors: Vec<ModelSpec>,
     /// The validated model, if step 4 passed.
@@ -282,14 +287,89 @@ pub fn probe_battery(pb: &ProbeBuilder) -> Vec<Probe> {
     out
 }
 
+/// A probe battery with identical realized inputs deduplicated.
+///
+/// Several battery generators emit probes whose factored bit patterns
+/// coincide (e.g. the lane-0/lane-1 precision sweeps collide after the
+/// ±U lanes are placed), and step 3 used to re-execute every duplicate
+/// once per candidate. Building the dedup map once lets [`run`] execute
+/// each distinct `(a_row, b_col, c)` exactly once per interface, and lets
+/// the candidate filter in [`infer`] memoize per `(candidate, input)`.
+///
+/// [`run`]: DedupedBattery::run
+pub struct DedupedBattery {
+    /// Unique realized inputs, in first-appearance order.
+    inputs: Vec<(Vec<u64>, Vec<u64>, u64)>,
+    /// Battery entry → unique-input slot (`None`: unrealizable probe).
+    map: Vec<Option<usize>>,
+}
+
+impl DedupedBattery {
+    /// Realize and deduplicate a battery for one interface signature.
+    pub fn build(pb: &ProbeBuilder, battery: &[Probe]) -> Self {
+        let mut slots: HashMap<(Vec<u64>, Vec<u64>, u64), usize> = HashMap::new();
+        let mut inputs = Vec::new();
+        let map = battery
+            .iter()
+            .map(|probe| {
+                let key = pb.realize(probe)?;
+                Some(match slots.get(&key) {
+                    Some(&slot) => slot,
+                    None => {
+                        let slot = inputs.len();
+                        slots.insert(key.clone(), slot);
+                        inputs.push(key);
+                        slot
+                    }
+                })
+            })
+            .collect();
+        Self { inputs, map }
+    }
+
+    /// Battery entries (including unrealizable ones).
+    pub fn entries(&self) -> usize {
+        self.map.len()
+    }
+
+    /// Distinct probe executions needed per interface.
+    pub fn unique_count(&self) -> usize {
+        self.inputs.len()
+    }
+
+    /// Unique-input slot of a battery entry (`None`: unrealizable).
+    #[inline]
+    pub fn slot(&self, entry: usize) -> Option<usize> {
+        self.map[entry]
+    }
+
+    /// Execute one unique input against an interface.
+    pub fn run_slot(&self, iface: &dyn MmaInterface, slot: usize) -> u64 {
+        let (a_row, b_col, c) = &self.inputs[slot];
+        iface.probe(a_row, b_col, *c)
+    }
+
+    /// Run the full battery, executing each distinct input exactly once
+    /// and scattering the results back to battery order.
+    pub fn run(&self, iface: &dyn MmaInterface) -> Vec<Option<u64>> {
+        let results: Vec<u64> = self
+            .inputs
+            .iter()
+            .map(|(a_row, b_col, c)| iface.probe(a_row, b_col, *c))
+            .collect();
+        self.map.iter().map(|s| s.map(|i| results[i])).collect()
+    }
+}
+
 /// Run the battery against an interface, recording output bits per probe
-/// (`None` where the probe is not realizable in the format).
+/// (`None` where the probe is not realizable in the format). Identical
+/// realized probe inputs are executed once and fanned back out.
 pub fn run_battery(
     iface: &dyn MmaInterface,
     pb: &ProbeBuilder,
     battery: &[Probe],
 ) -> Vec<Option<u64>> {
-    battery.iter().map(|p| pb.run(iface, p)).collect()
+    DedupedBattery::build(pb, battery).run(iface)
 }
 
 /// The full closed loop.
@@ -304,12 +384,17 @@ pub fn infer(iface: &dyn MmaInterface, cfg: ClfpConfig) -> Inference {
     // Step 2 (recorded for reporting; candidates must reproduce it too)
     let tree = tree_signature(iface);
 
-    // Step 3: probe battery against the interface...
+    // Step 3: probe battery against the interface, with identical realized
+    // inputs deduplicated — each distinct (a_row, b_col, c) runs once.
     let pb = ProbeBuilder::for_interface(iface);
     let battery = probe_battery(&pb);
-    let observed = run_battery(iface, &pb, &battery);
+    let deduped = DedupedBattery::build(&pb, &battery);
+    let observed = deduped.run(iface);
 
-    // ...then filter the hypothesis space.
+    // ...then filter the hypothesis space. Candidate runs are memoized per
+    // (candidate, unique input) and evaluated lazily in battery order, so
+    // a wrong candidate still rejects on its first mismatching probe
+    // without re-executing any duplicate input.
     let specs = candidate_specs(k, fmts.a, fmts.d);
     let mut survivors: Vec<ModelSpec> = Vec::new();
     'cand: for spec in specs {
@@ -317,8 +402,15 @@ pub fn infer(iface: &dyn MmaInterface, cfg: ClfpConfig) -> Inference {
         if tree_signature(&cand).ratio != tree.ratio {
             continue;
         }
-        for (probe, want) in battery.iter().zip(observed.iter()) {
-            if pb.run(&cand, probe) != *want {
+        let mut memo: Vec<Option<u64>> = vec![None; deduped.unique_count()];
+        for (entry, want) in observed.iter().enumerate() {
+            let got = match deduped.slot(entry) {
+                None => None,
+                Some(s) => {
+                    Some(*memo[s].get_or_insert_with(|| deduped.run_slot(&cand, s)))
+                }
+            };
+            if got != *want {
                 continue 'cand;
             }
         }
@@ -362,6 +454,7 @@ pub fn infer(iface: &dyn MmaInterface, cfg: ClfpConfig) -> Inference {
         independent,
         tree,
         probes_run: battery.len(),
+        probes_unique: deduped.unique_count(),
         survivors,
         inferred,
         validated,
@@ -473,6 +566,32 @@ mod tests {
         let pb = ProbeBuilder::for_interface(&m);
         let battery = probe_battery(&pb);
         assert!(battery.len() > 150, "battery size {}", battery.len());
+    }
+
+    #[test]
+    fn deduped_battery_matches_naive_runs_bitwise() {
+        let m = model(8, ModelSpec::TFdpa { l_max: 8, f: 24, rho: Rho::RzFp32 });
+        let pb = ProbeBuilder::for_interface(&m);
+        let battery = probe_battery(&pb);
+        let dd = DedupedBattery::build(&pb, &battery);
+        assert!(
+            dd.unique_count() < dd.entries(),
+            "battery contains colliding probes by construction ({} vs {})",
+            dd.unique_count(),
+            dd.entries()
+        );
+        let deduped = dd.run(&m);
+        let naive: Vec<Option<u64>> = battery.iter().map(|p| pb.run(&m, p)).collect();
+        assert_eq!(deduped, naive, "dedup must be bitwise invisible");
+    }
+
+    #[test]
+    fn infer_reports_dedup_counts() {
+        let truth = ModelSpec::TFdpa { l_max: 8, f: 24, rho: Rho::RzFp32 };
+        let m = model(8, truth);
+        let inf = infer(&m, ClfpConfig { validate_tests: 50, seed: 3 });
+        assert!(inf.probes_unique > 0);
+        assert!(inf.probes_unique < inf.probes_run);
     }
 
     #[test]

@@ -107,8 +107,12 @@ impl ProbeBuilder {
         Some((a, b, c))
     }
 
-    /// Run one probe through an interface, returning the raw `(0,0)` bits.
-    pub fn run(&self, iface: &dyn MmaInterface, probe: &Probe) -> Option<u64> {
+    /// Realize a probe as raw interface inputs: the `(0,0)` A-row,
+    /// B-column, and accumulator bit patterns. `None` when a value is not
+    /// exactly representable in the interface's formats. Two probes with
+    /// equal realizations are *the same experiment* — the dedup layer in
+    /// [`crate::clfp::DedupedBattery`] keys on this.
+    pub fn realize(&self, probe: &Probe) -> Option<(Vec<u64>, Vec<u64>, u64)> {
         if !self.c_representable(probe.c) {
             return None;
         }
@@ -119,7 +123,13 @@ impl ProbeBuilder {
             a_row[kk] = self.in_fmt.from_f64(av);
             b_col[kk] = self.in_fmt.from_f64(bv);
         }
-        Some(iface.probe(&a_row, &b_col, self.c_fmt.from_f64(probe.c)))
+        Some((a_row, b_col, self.c_fmt.from_f64(probe.c)))
+    }
+
+    /// Run one probe through an interface, returning the raw `(0,0)` bits.
+    pub fn run(&self, iface: &dyn MmaInterface, probe: &Probe) -> Option<u64> {
+        let (a_row, b_col, c) = self.realize(probe)?;
+        Some(iface.probe(&a_row, &b_col, c))
     }
 
     /// Largest usable swamping exponent `e_u` for the step-2/3 probes:

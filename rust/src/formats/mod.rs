@@ -6,10 +6,16 @@
 //! and encode with explicit rounding — the primitive that the paper's
 //! conversion functions ρ (Table 2) and all elementary operations are
 //! built on.
+//!
+//! Formats with ≤ 16 storage bits are decoded through lazily-built
+//! lookup tables ([`tables`]); the bit-level path remains the source of
+//! truth (`decode_reference`/`to_f64_reference`) and the two are
+//! exhaustively equivalence-tested.
 
 mod convert;
 mod decoded;
 mod rounding;
+pub mod tables;
 
 pub use convert::{cast, convert, Rho};
 pub use decoded::{Class, Decoded};
@@ -178,14 +184,14 @@ impl Format {
         }
     }
 
-    /// Parse a format name as used by the CLI.
+    /// Parse a format name as used by the CLI (ASCII case-insensitive,
+    /// allocation-free).
     pub fn parse(s: &str) -> Option<Format> {
-        let s = s.to_ascii_lowercase();
         Format::ALL
             .iter()
             .chain(std::iter::once(&Format::E8M13))
             .copied()
-            .find(|f| f.name() == s)
+            .find(|f| f.name().eq_ignore_ascii_case(s))
     }
 
     /// Mask of valid storage bits.
@@ -239,7 +245,23 @@ impl Format {
     }
 
     /// Decode a bit pattern. See [`Decoded`] for the canonical form.
+    ///
+    /// Formats with ≤ 16 storage bits are served from a lazily-built LUT
+    /// ([`tables`]); the result is bitwise identical to the bit-level
+    /// reference path [`Format::decode_reference`] (exhaustively tested).
+    #[inline]
     pub fn decode(self, bits: u64) -> Decoded {
+        match tables::decode_lut(self) {
+            Some(lut) => lut[(bits & self.mask()) as usize],
+            None => decoded::decode(self, bits),
+        }
+    }
+
+    /// Bit-level reference decode — the path the LUTs are built from.
+    /// Exists for table construction, equivalence tests, and benches; use
+    /// [`Format::decode`] everywhere else.
+    #[inline]
+    pub fn decode_reference(self, bits: u64) -> Decoded {
         decoded::decode(self, bits)
     }
 
@@ -251,7 +273,20 @@ impl Format {
 
     /// Exact value of a finite bit pattern as `f64`
     /// (exact for every format except FP64 where it is the identity).
+    ///
+    /// Narrow formats (≤ 16 bits) are served from a lazily-built LUT;
+    /// bitwise identical to [`Format::to_f64_reference`].
+    #[inline]
     pub fn to_f64(self, bits: u64) -> f64 {
+        match tables::f64_lut(self) {
+            Some(lut) => lut[(bits & self.mask()) as usize],
+            None => decoded::to_f64(self, bits),
+        }
+    }
+
+    /// Bit-level reference of [`Format::to_f64`] (the LUT source of truth).
+    #[inline]
+    pub fn to_f64_reference(self, bits: u64) -> f64 {
         decoded::to_f64(self, bits)
     }
 
@@ -316,7 +351,9 @@ mod tests {
     fn parse_roundtrip() {
         for f in Format::ALL {
             assert_eq!(Format::parse(f.name()), Some(f));
+            assert_eq!(Format::parse(&f.name().to_ascii_uppercase()), Some(f));
         }
+        assert_eq!(Format::parse("FP8E4M3"), Some(Format::Fp8E4M3));
         assert_eq!(Format::parse("nope"), None);
     }
 }

@@ -1,0 +1,245 @@
+//! Table-driven decode and exact-product fast paths for narrow formats.
+//!
+//! Every format with ≤ 16 storage bits has at most 65 536 bit patterns,
+//! so bit-level decode — and, for the ≤ 8-bit formats, the full pairwise
+//! significand *product* — is exactly precomputable. The tables here are
+//! built lazily on first use (`OnceLock`) from the bit-level reference
+//! path in [`super::decoded`], which keeps them correct by construction:
+//! the LUT is an implementation detail behind the existing
+//! `decode`/`to_f64` contract, never a second source of truth. The
+//! exhaustive equivalence suite (`tests/lut_equivalence.rs`) checks every
+//! bit pattern of every narrow format against the reference path.
+//!
+//! Layers above opt in automatically: [`Format::decode`] and
+//! [`Format::to_f64`] dispatch here, and the FDPA kernels in
+//! [`crate::ops`] fetch whole product terms via [`product`] — one table
+//! load instead of two decodes and a 128-bit multiply per lane. Model
+//! constructors and the batch engine call [`warm`] so first-touch table
+//! construction never lands inside a worker thread or a timed region.
+
+use std::sync::OnceLock;
+
+use super::{decoded, Decoded, Format};
+use crate::fixedpoint::FxTerm;
+
+/// Formats served by the decode/`f64` LUTs (storage width ≤ 16 bits).
+pub const LUT_FORMATS: [Format; 9] = [
+    Format::Fp16,
+    Format::Bf16,
+    Format::Fp8E4M3,
+    Format::Fp8E5M2,
+    Format::Fp6E2M3,
+    Format::Fp6E3M2,
+    Format::Fp4E2M1,
+    Format::E8M0,
+    Format::Ue4M3,
+];
+
+/// Formats served by the pair-product LUTs (storage width ≤ 8 bits).
+pub const PRODUCT_FORMATS: [Format; 7] = [
+    Format::Fp8E4M3,
+    Format::Fp8E5M2,
+    Format::Fp6E2M3,
+    Format::Fp6E3M2,
+    Format::Fp4E2M1,
+    Format::E8M0,
+    Format::Ue4M3,
+];
+
+#[inline]
+const fn lut_index(fmt: Format) -> Option<usize> {
+    match fmt {
+        Format::Fp16 => Some(0),
+        Format::Bf16 => Some(1),
+        Format::Fp8E4M3 => Some(2),
+        Format::Fp8E5M2 => Some(3),
+        Format::Fp6E2M3 => Some(4),
+        Format::Fp6E3M2 => Some(5),
+        Format::Fp4E2M1 => Some(6),
+        Format::E8M0 => Some(7),
+        Format::Ue4M3 => Some(8),
+        _ => None,
+    }
+}
+
+#[inline]
+const fn prod_index(fmt: Format) -> Option<usize> {
+    match fmt {
+        Format::Fp8E4M3 => Some(0),
+        Format::Fp8E5M2 => Some(1),
+        Format::Fp6E2M3 => Some(2),
+        Format::Fp6E3M2 => Some(3),
+        Format::Fp4E2M1 => Some(4),
+        Format::E8M0 => Some(5),
+        Format::Ue4M3 => Some(6),
+        _ => None,
+    }
+}
+
+/// Compact product-table entry: the value is `(-1)^neg · mag · 2^(exp − frac)`
+/// where `frac = mant_bits(a) + mant_bits(b)` is a per-table constant.
+/// `mag = 0` encodes the zero term (either operand being Zero/Inf/NaN
+/// decodes to `sig 0`; the kernels' special-value scan handles the class).
+#[derive(Clone, Copy, Debug)]
+struct ProdEntry {
+    mag: u16,
+    exp: i16,
+    neg: bool,
+}
+
+type DecodeSlot = OnceLock<Box<[Decoded]>>;
+type F64Slot = OnceLock<Box<[f64]>>;
+type ProdSlot = OnceLock<Box<[ProdEntry]>>;
+
+// `OnceLock` is not `Copy`; const items make the array-repeat initializers
+// const-evaluable on the crate's 1.75 MSRV (no inline-const blocks).
+const DECODE_SLOT: DecodeSlot = OnceLock::new();
+const F64_SLOT: F64Slot = OnceLock::new();
+const PROD_SLOT: ProdSlot = OnceLock::new();
+const PROD_ROW: [ProdSlot; 7] = [PROD_SLOT; 7];
+
+static DECODE: [DecodeSlot; 9] = [DECODE_SLOT; 9];
+static F64: [F64Slot; 9] = [F64_SLOT; 9];
+static PRODUCT: [[ProdSlot; 7]; 7] = [PROD_ROW; 7];
+
+/// Decode LUT for `fmt`, indexed by `bits & fmt.mask()`. `None` for
+/// formats wider than 16 bits (which stay on the bit-level path).
+#[inline]
+pub fn decode_lut(fmt: Format) -> Option<&'static [Decoded]> {
+    let i = lut_index(fmt)?;
+    let table = DECODE[i].get_or_init(|| {
+        (0..=fmt.mask()).map(|bits| decoded::decode(fmt, bits)).collect()
+    });
+    Some(&table[..])
+}
+
+/// `to_f64` LUT for `fmt` (same indexing and coverage as [`decode_lut`]).
+#[inline]
+pub fn f64_lut(fmt: Format) -> Option<&'static [f64]> {
+    let i = lut_index(fmt)?;
+    let table = F64[i].get_or_init(|| {
+        (0..=fmt.mask()).map(|bits| decoded::to_f64(fmt, bits)).collect()
+    });
+    Some(&table[..])
+}
+
+/// Exact product term `SignedSig(a)·SignedSig(b)` at nominal exponent
+/// `Exp(a)+Exp(b)` for two raw bit patterns, as a single table load.
+///
+/// Matches [`FxTerm::product`] over the bit-level decodes for every pair
+/// of patterns (exhaustively tested), including the zero term for
+/// Zero/Inf/NaN operands. `None` when either format is wider than 8 bits.
+#[inline]
+pub fn product(fmt_a: Format, a_bits: u64, fmt_b: Format, b_bits: u64) -> Option<FxTerm> {
+    let ia = prod_index(fmt_a)?;
+    let ib = prod_index(fmt_b)?;
+    let table = PRODUCT[ia][ib].get_or_init(|| build_product(fmt_a, fmt_b));
+    let idx = (((a_bits & fmt_a.mask()) as usize) << fmt_b.width())
+        | (b_bits & fmt_b.mask()) as usize;
+    let e = table[idx];
+    Some(if e.mag == 0 {
+        FxTerm::ZERO
+    } else {
+        FxTerm {
+            neg: e.neg,
+            mag: e.mag as u128,
+            exp: e.exp as i32,
+            frac: (fmt_a.mant_bits() + fmt_b.mant_bits()) as i32,
+        }
+    })
+}
+
+fn build_product(fmt_a: Format, fmt_b: Format) -> Box<[ProdEntry]> {
+    let db: Vec<Decoded> = (0..=fmt_b.mask()).map(|b| decoded::decode(fmt_b, b)).collect();
+    let mut out = Vec::with_capacity(1usize << (fmt_a.width() + fmt_b.width()));
+    for a in 0..=fmt_a.mask() {
+        let da = decoded::decode(fmt_a, a);
+        for y in db.iter() {
+            let t = FxTerm::product(
+                da.sig,
+                da.exp,
+                fmt_a.mant_bits(),
+                da.sign,
+                y.sig,
+                y.exp,
+                fmt_b.mant_bits(),
+                y.sign,
+            );
+            // ≤ 8-bit formats: sig ≤ 15, so mag ≤ 225; |exp| ≤ 254 (E8M0 pair)
+            debug_assert!(t.mag <= u16::MAX as u128);
+            debug_assert!(t.is_zero() || (t.exp >= i16::MIN as i32 && t.exp <= i16::MAX as i32));
+            out.push(ProdEntry {
+                mag: t.mag as u16,
+                exp: if t.is_zero() { 0 } else { t.exp as i16 },
+                neg: t.neg,
+            });
+        }
+    }
+    out.into_boxed_slice()
+}
+
+/// Eagerly build every table serving `fmt`: decode, `f64`, and — for
+/// ≤ 8-bit formats — the same-format product table. A no-op for wide
+/// formats, idempotent and cheap once built.
+pub fn warm(fmt: Format) {
+    let _ = decode_lut(fmt);
+    let _ = f64_lut(fmt);
+    let _ = product(fmt, 0, fmt, 0);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lut_coverage_is_width_gated() {
+        for fmt in LUT_FORMATS {
+            assert!(fmt.width() <= 16);
+            assert!(decode_lut(fmt).is_some(), "{fmt:?}");
+            assert_eq!(decode_lut(fmt).unwrap().len() as u64, fmt.mask() + 1);
+            assert_eq!(f64_lut(fmt).unwrap().len() as u64, fmt.mask() + 1);
+        }
+        for fmt in [Format::Fp64, Format::Fp32, Format::Tf32, Format::E8M13] {
+            assert!(decode_lut(fmt).is_none(), "{fmt:?}");
+            assert!(f64_lut(fmt).is_none(), "{fmt:?}");
+        }
+    }
+
+    #[test]
+    fn product_table_spot_checks() {
+        // 1.5 × 2.0 in E4M3: sigs 12 (1.5, f=3) and 8 (1.0, f=3), exps 0 and 1
+        let a = Format::Fp8E4M3.from_f64(1.5);
+        let b = Format::Fp8E4M3.from_f64(2.0);
+        let t = product(Format::Fp8E4M3, a, Format::Fp8E4M3, b).unwrap();
+        assert_eq!(t.to_f64(), 3.0);
+        // sign crossing
+        let nb = Format::Fp8E4M3.from_f64(-2.0);
+        let t = product(Format::Fp8E4M3, a, Format::Fp8E4M3, nb).unwrap();
+        assert!(t.neg);
+        assert_eq!(t.to_f64(), -3.0);
+        // NaN operand: sig 0 ⇒ zero term (class is the special scan's job)
+        let nan = Format::Fp8E4M3.nan_pattern().unwrap();
+        let t = product(Format::Fp8E4M3, nan, Format::Fp8E4M3, b).unwrap();
+        assert_eq!(t, FxTerm::ZERO);
+        // mixed-format pair: FP4 × E8M0 scale
+        let x = Format::Fp4E2M1.from_f64(3.0);
+        let s = 130u64; // E8M0 2^3
+        let t = product(Format::Fp4E2M1, x, Format::E8M0, s).unwrap();
+        assert_eq!(t.to_f64(), 24.0);
+    }
+
+    #[test]
+    fn product_table_absent_for_wide_formats() {
+        assert!(product(Format::Fp16, 0, Format::Fp16, 0).is_none());
+        assert!(product(Format::Fp8E4M3, 0, Format::Bf16, 0).is_none());
+    }
+
+    #[test]
+    fn warm_is_idempotent() {
+        for fmt in LUT_FORMATS {
+            warm(fmt);
+            warm(fmt);
+        }
+        warm(Format::Fp64); // wide: no-op, must not panic
+    }
+}

@@ -52,6 +52,9 @@ impl TiledGemm {
     }
 
     pub fn from_model(tile: MmaModel) -> Self {
+        // No table warm-up needed here: `tile` can only come from
+        // `MmaModel::new`, which already warms the narrow-format LUTs, so
+        // the band workers never pay first-touch table construction.
         Self { tile }
     }
 

@@ -236,6 +236,15 @@ pub fn parallel_execute_batch_with(
     if threads <= 1 || cases.len() < 2 {
         return iface.execute_batch(cases);
     }
+    // Build the narrow-format LUTs once before fanning out so workers never
+    // serialize on first-touch table construction (idempotent, cheap after).
+    let fmts = iface.formats();
+    for f in [fmts.a, fmts.b, fmts.c, fmts.d] {
+        crate::formats::tables::warm(f);
+    }
+    if let Some(spec) = iface.scale_spec() {
+        crate::formats::tables::warm(spec.fmt);
+    }
     let chunk = cases.len().div_ceil(threads.min(cases.len()));
     let mut out = Vec::with_capacity(cases.len());
     std::thread::scope(|s| {

@@ -8,8 +8,9 @@
 //! The crate is organized in layers:
 //!
 //! - [`formats`] — software floating-point formats (FP64 … FP4, E8M0, UE4M3),
-//!   decode/encode with every rounding mode, and the paper's Table 2
-//!   conversion functions.
+//!   decode/encode with every rounding mode, the paper's Table 2
+//!   conversion functions, and the `formats::tables` LUT fast path
+//!   (table-driven decode and exact pair products for narrow formats).
 //! - [`fixedpoint`] — the wide fixed-point machinery (aligned truncation
 //!   `RZ_F`/`RD_F`, exact Kulisch-style accumulation) that the fused
 //!   operations are built from.

@@ -210,8 +210,9 @@ fn cmd_probe(args: &[String]) -> Result<()> {
     println!("step 1  independence: {}", inf.independent);
     println!("step 2  d(i,j)/v matrix:\n{}", inf.tree.render());
     println!(
-        "step 3  probes run: {}, surviving candidates: {}",
+        "step 3  probes run: {} ({} unique after dedup), surviving candidates: {}",
         inf.probes_run,
+        inf.probes_unique,
         inf.survivors.len()
     );
     for s in inf.survivors.iter().take(5) {

@@ -115,6 +115,17 @@ impl MmaModel {
         formats: MmaFormats,
         spec: ModelSpec,
     ) -> Self {
+        // Build the narrow-format decode/f64/product LUTs up front
+        // (idempotent), so first-touch table construction happens at model
+        // construction rather than inside a worker thread or timed region.
+        for f in [formats.a, formats.b, formats.c, formats.d] {
+            crate::formats::tables::warm(f);
+        }
+        match spec {
+            ModelSpec::StFdpa { .. } => crate::formats::tables::warm(Format::E8M0),
+            ModelSpec::GstFdpa { scale_fmt, .. } => crate::formats::tables::warm(scale_fmt),
+            _ => {}
+        }
         Self { name: name.into(), m, n, k, formats, spec }
     }
 

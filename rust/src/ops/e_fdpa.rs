@@ -5,7 +5,7 @@
 //! accumulator) and rounds once to FP32 with RNE.
 
 use super::special::{special_pattern, NanStyle, SpecialOut};
-use super::{scan_specials, zero_result_negative, MAX_L};
+use super::{product_term_bits, scan_specials, zero_result_negative, MAX_L};
 use crate::fixedpoint::Kulisch;
 use crate::formats::{Decoded, Format, RoundingMode};
 
@@ -42,12 +42,12 @@ pub fn e_fdpa(in_fmt: Format, a: &[u64], b: &[u64], c_bits: u64) -> u64 {
         s => return special_pattern(s, Format::Fp32, NanStyle::Quiet),
     }
 
-    let m = in_fmt.mant_bits() as i32;
     let mut acc = Kulisch::<WORDS>::new(LSB);
-    for (x, y) in da.iter().zip(db.iter()) {
-        let mag = x.sig as u128 * y.sig as u128;
-        // product value = mag * 2^(ex + ey - 2m)
-        acc.add(x.sign != y.sign, mag, x.exp + y.exp - 2 * m);
+    for i in 0..l {
+        // product value = mag * 2^(exp - frac), via the shared product-term
+        // path (decode-based here: BF16/FP16 are wider than the LUT limit)
+        let t = product_term_bits(in_fmt, a[i], b[i], da[i], db[i]);
+        acc.add(t.neg, t.mag, t.exp - t.frac);
     }
     acc.add(c.sign, c.sig as u128, c.exp - 23);
 

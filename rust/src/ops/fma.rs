@@ -5,6 +5,9 @@
 //! `mul_add` is IEEE-correct (single rounding, RNE, gradual underflow) on
 //! every platform Rust targets, so it serves as the reference
 //! implementation; results are NaN-canonicalized to the quiet pattern.
+//! This is the one kernel the `formats::tables` fast path deliberately
+//! bypasses: FP32/FP64 operands are too wide to tabulate, and the host
+//! FMA never decodes them.
 
 use super::special::{canonical_nan, NanStyle};
 use crate::formats::Format;

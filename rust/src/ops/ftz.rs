@@ -53,7 +53,8 @@ pub fn ftz_add(x_bits: u64, y_bits: u64) -> u64 {
 #[inline]
 pub fn ftz_mul(fmt: Format, x_bits: u64, y_bits: u64) -> u64 {
     // Exact in f64 (≤ 24-bit significands, exponent range well inside f64),
-    // then one correctly-rounded narrowing to f32.
+    // then one correctly-rounded narrowing to f32. For ≤ 16-bit inputs the
+    // `to_f64` calls are single loads from the formats::tables f64 LUT.
     let x = fmt.to_f64(x_bits);
     let y = fmt.to_f64(y_bits);
     canon(flush_output((x * y) as f32))

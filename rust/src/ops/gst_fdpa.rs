@@ -7,7 +7,7 @@
 //! summation of the `L/G` group terms plus the accumulator.
 
 use super::special::{special_pattern, NanStyle, SpecialOut};
-use super::{acc_term, scan_specials, zero_result_negative, MAX_L};
+use super::{acc_term, product_term_bits, scan_specials, zero_result_negative, MAX_L};
 use crate::fixedpoint::{e_max, FxTerm};
 use crate::formats::{convert, Decoded, Format, Rho, RoundingMode};
 
@@ -73,40 +73,43 @@ pub fn gst_fdpa(
         s => return special_pattern(s, out_fmt, NanStyle::NvCanonical),
     }
 
-    let fin = in_fmt.mant_bits() as i32;
     let fs = cfg.scale_fmt.mant_bits() as i32;
     let groups = l.div_ceil(cfg.g);
     // Fixed-size staging (≤ L/G group terms + accumulator); zero terms are
     // skipped — e_max and the aligned sum ignore them anyway.
     let mut terms = [FxTerm::ZERO; MAX_L + 1];
     let mut nterms = 0usize;
+    // Per-group product staging, reused across groups (one LUT load per
+    // lane; entries past the current group length are never read).
+    let mut gterms = [FxTerm::ZERO; MAX_L];
 
     for g in 0..groups {
         let blk = g * cfg.g / cfg.kblock;
         let (sa, sb) = (salpha[blk], sbeta[blk]);
         // Step 1a: exact fixed-point dot product of the group at a common
-        // LSB of 2^(min_exp - 2*fin).
+        // LSB of 2^min_lsb. Product terms come from the pair-product LUT
+        // (single loads for the ≤ 8-bit MX/NVFP4 element formats);
+        // the LSB exponent of a term is `t.exp - t.frac`.
         let lo = g * cfg.g;
         let hi = (lo + cfg.g).min(l);
         let mut min_lsb = i32::MAX;
         for k in lo..hi {
-            if da[k].sig != 0 && db[k].sig != 0 {
-                min_lsb = min_lsb.min(da[k].exp + db[k].exp - 2 * fin);
+            let t = product_term_bits(in_fmt, a[k], b[k], da[k], db[k]);
+            if !t.is_zero() {
+                min_lsb = min_lsb.min(t.exp - t.frac);
             }
+            gterms[k - lo] = t;
         }
         if min_lsb == i32::MAX {
             continue;
         }
         let mut p: i128 = 0;
-        for k in lo..hi {
-            let (x, y) = (da[k], db[k]);
-            let mag = x.sig as i128 * y.sig as i128;
-            if mag == 0 {
+        for t in &gterms[..hi - lo] {
+            if t.is_zero() {
                 continue;
             }
-            let sh = (x.exp + y.exp - 2 * fin) - min_lsb;
-            let v = mag << sh;
-            if x.sign != y.sign {
+            let v = (t.mag as i128) << ((t.exp - t.frac) - min_lsb);
+            if t.neg {
                 p -= v;
             } else {
                 p += v;

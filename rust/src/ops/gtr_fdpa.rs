@@ -8,7 +8,7 @@
 //! sum with a special truncation rule (`e_c < E − F − 1 ⇒ s'_c ← 0`).
 
 use super::special::{special_pattern, NanStyle, SpecialOut};
-use super::{acc_term, product_term, scan_specials, zero_result_negative, MAX_L};
+use super::{acc_term, product_term_bits, scan_specials, zero_result_negative, MAX_L};
 use crate::fixedpoint::FxTerm;
 use crate::formats::{convert, signed_align, Decoded, Format, Rho, RoundingMode};
 
@@ -49,11 +49,12 @@ pub fn gtr_fdpa(in_fmt: Format, a: &[u64], b: &[u64], c_bits: u64, cfg: GtrFdpaC
         s => return special_pattern(s, Format::Fp32, NanStyle::Quiet),
     }
 
-    // Step 1: exact products (FP8 products cannot overflow). The array is
-    // indexed by lane: parity grouping below depends on the positions.
+    // Step 1: exact products (FP8 products cannot overflow), one
+    // pair-product LUT load per lane. The array is indexed by lane:
+    // parity grouping below depends on the positions.
     let mut terms = [FxTerm::ZERO; MAX_L];
     for i in 0..l {
-        terms[i] = product_term(in_fmt, da[i], in_fmt, db[i]);
+        terms[i] = product_term_bits(in_fmt, a[i], b[i], da[i], db[i]);
     }
     let terms = &terms[..l];
 

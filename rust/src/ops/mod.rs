@@ -48,6 +48,25 @@ pub(crate) fn product_term(fmt_a: Format, a: Decoded, fmt_b: Format, b: Decoded)
     )
 }
 
+/// Product term of two raw operand patterns: one pair-product table load
+/// for the ≤ 8-bit formats ([`crate::formats::tables`]), falling back to
+/// the decode-based construction for wider formats. `a`/`b` are the
+/// already-decoded operands — the kernels hold them for the special-value
+/// scan regardless, so the fallback costs nothing extra.
+#[inline]
+pub(crate) fn product_term_bits(
+    fmt: Format,
+    a_bits: u64,
+    b_bits: u64,
+    a: Decoded,
+    b: Decoded,
+) -> FxTerm {
+    match crate::formats::tables::product(fmt, a_bits, fmt, b_bits) {
+        Some(t) => t,
+        None => product_term(fmt, a, fmt, b),
+    }
+}
+
 /// The accumulator as an alignment term (`SignedSig(c)`, `Exp(c)`).
 #[inline]
 pub(crate) fn acc_term(fmt_c: Format, c: Decoded) -> FxTerm {

@@ -6,7 +6,7 @@
 //! conversion ρ to the output format.
 
 use super::special::{special_pattern, NanStyle, SpecialAcc, SpecialOut};
-use super::{acc_term, product_term, MAX_L};
+use super::{acc_term, product_term_bits, MAX_L};
 use crate::fixedpoint::FxTerm;
 use crate::formats::{convert, Format, Rho, RoundingMode};
 
@@ -58,7 +58,7 @@ pub(crate) fn t_fdpa_scaled(
         let y = in_fmt.decode(b[i]);
         specials.product(x, y);
         all_neg &= x.sign != y.sign;
-        let mut t = product_term(in_fmt, x, in_fmt, y);
+        let mut t = product_term_bits(in_fmt, a[i], b[i], x, y);
         if !t.is_zero() {
             t.exp += scale_exp_sum;
             if t.exp > emax {

@@ -7,7 +7,7 @@
 //! Products may overflow to ±∞ when `|s_k·2^{e_k}| ≥ 2^128` (§4.2).
 
 use super::special::{special_pattern, NanStyle, SpecialOut};
-use super::{acc_term, product_term, scan_specials, zero_result_negative, MAX_L};
+use super::{acc_term, product_term_bits, scan_specials, zero_result_negative, MAX_L};
 use crate::fixedpoint::{e_max, FxTerm};
 use crate::formats::{convert, Decoded, Format, Rho, RoundingMode};
 
@@ -57,13 +57,14 @@ pub fn tr_fdpa(in_fmt: Format, a: &[u64], b: &[u64], c_bits: u64, cfg: TrFdpaCfg
     }
     let (da, db) = (&da[..l], &db[..l]);
 
-    // Step 1: exact products; detect multiplication overflow to ±∞.
+    // Step 1: exact products (one LUT load per lane for ≤ 8-bit inputs);
+    // detect multiplication overflow to ±∞.
     let mut terms = [FxTerm::ZERO; MAX_L];
     let mut nterms = 0usize;
     let mut ovf_pos = false;
     let mut ovf_neg = false;
-    for (&x, &y) in da.iter().zip(db.iter()) {
-        let t = product_term(in_fmt, x, in_fmt, y);
+    for i in 0..l {
+        let t = product_term_bits(in_fmt, a[i], b[i], da[i], db[i]);
         if product_overflows(&t) {
             if t.neg {
                 ovf_neg = true;

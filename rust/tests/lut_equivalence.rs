@@ -1,0 +1,84 @@
+//! Exhaustive LUT-vs-bit-level equivalence.
+//!
+//! The table layer (`formats::tables`) must be bitwise invisible: for
+//! every format with ≤ 16 storage bits, every one of the 2^width bit
+//! patterns must produce identical `Decoded` and `to_f64` results through
+//! the LUT dispatch and through the bit-level reference path; and for
+//! every ordered pair of ≤ 8-bit formats, the pair-product table must
+//! match decode-and-multiply for all pattern pairs — including the
+//! NaN/Inf/zero/subnormal code points.
+
+use mma_sim::fixedpoint::FxTerm;
+use mma_sim::formats::{tables, Format};
+
+fn narrow(max_width: u32) -> impl Iterator<Item = Format> {
+    Format::ALL.iter().copied().filter(move |f| f.width() <= max_width)
+}
+
+#[test]
+fn lut_coverage_is_exactly_the_narrow_formats() {
+    for fmt in Format::ALL {
+        let is_narrow = fmt.width() <= 16;
+        assert_eq!(tables::decode_lut(fmt).is_some(), is_narrow, "{fmt:?}");
+        assert_eq!(tables::f64_lut(fmt).is_some(), is_narrow, "{fmt:?}");
+        let has_prod = fmt.width() <= 8;
+        assert_eq!(tables::product(fmt, 0, fmt, 0).is_some(), has_prod, "{fmt:?}");
+    }
+    // the virtual E8M13 target (22 bits) stays on the bit-level path
+    assert!(tables::decode_lut(Format::E8M13).is_none());
+    assert!(tables::f64_lut(Format::E8M13).is_none());
+}
+
+#[test]
+fn decode_lut_matches_bit_level_for_every_pattern() {
+    for fmt in narrow(16) {
+        for bits in 0..=fmt.mask() {
+            // `decode` dispatches through the LUT for these formats
+            let lut = fmt.decode(bits);
+            let reference = fmt.decode_reference(bits);
+            assert_eq!(lut, reference, "{fmt:?} bits {bits:#x}");
+        }
+    }
+}
+
+#[test]
+fn to_f64_lut_matches_bit_level_for_every_pattern() {
+    for fmt in narrow(16) {
+        for bits in 0..=fmt.mask() {
+            let lut = fmt.to_f64(bits);
+            let reference = fmt.to_f64_reference(bits);
+            // bit compare: covers NaN payloads and the sign of zero
+            assert_eq!(
+                lut.to_bits(),
+                reference.to_bits(),
+                "{fmt:?} bits {bits:#x}: {lut} vs {reference}"
+            );
+        }
+    }
+}
+
+#[test]
+fn product_lut_matches_decode_and_multiply_for_all_pairs() {
+    for fa in narrow(8) {
+        for fb in narrow(8) {
+            for a in 0..=fa.mask() {
+                let da = fa.decode_reference(a);
+                for b in 0..=fb.mask() {
+                    let db = fb.decode_reference(b);
+                    let got = tables::product(fa, a, fb, b).expect("≤8-bit pair has a table");
+                    let want = FxTerm::product(
+                        da.sig,
+                        da.exp,
+                        fa.mant_bits(),
+                        da.sign,
+                        db.sig,
+                        db.exp,
+                        fb.mant_bits(),
+                        db.sign,
+                    );
+                    assert_eq!(got, want, "{fa:?}×{fb:?} a={a:#x} b={b:#x}");
+                }
+            }
+        }
+    }
+}
