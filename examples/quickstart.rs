@@ -9,7 +9,7 @@
 //! ```
 
 use mma_sim::analysis::discrepancy::{eq10_output, EQ10_A, EQ10_B, EQ10_C};
-use mma_sim::isa::{find, Arch};
+use mma_sim::isa::{resolve, Arch};
 
 fn main() {
     println!("MMA-Sim quickstart");
@@ -28,7 +28,9 @@ fn main() {
     ];
 
     for (arch, frag, label) in cases {
-        let instr = find(arch, frag).expect("instruction in registry");
+        // resolve (unlike find) rejects ambiguous fragments with the
+        // candidate list, so a typo here fails loudly
+        let instr = resolve(arch, frag).expect("instruction in registry");
         let d = eq10_output(&instr).expect("Eq.10 runs on this format");
         println!("{label:<36} {:<28} d00 = {d}", instr.name);
     }

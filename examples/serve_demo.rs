@@ -11,11 +11,12 @@
 
 use std::sync::Arc;
 
-use mma_sim::coordinator::{Coordinator, VerifyPair};
+use mma_sim::coordinator::VerifyPair;
 use mma_sim::formats::{Format, Rho};
 use mma_sim::interface::MmaFormats;
 use mma_sim::models::{MmaModel, ModelSpec};
 use mma_sim::runtime::{artifacts_dir, model_for_artifact, read_manifest, Runtime};
+use mma_sim::session::{self, CampaignConfig};
 
 fn main() {
     let mut pairs: Vec<VerifyPair> = Vec::new();
@@ -62,9 +63,11 @@ fn main() {
     });
 
     let workers = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(4);
-    let coord = Coordinator::new(pairs, workers, workers * 2);
     println!("running campaign on {workers} workers …");
-    let report = coord.run_campaign(8, 50, 0x5EED);
+    // the session facade owns pool construction/teardown; `mma-sim serve
+    // --jsonl` wraps the same pairs in the long-running JSON-lines service
+    let cfg = CampaignConfig { workers, jobs: 8, batch: 50, seed: 0x5EED };
+    let report = session::campaign(pairs, &cfg);
     println!("{}", report.render());
 
     let faulty = &report.pairs["faulty-device-f24-vs-f25"];
@@ -81,5 +84,4 @@ fn main() {
         }
     }
     println!("campaign complete: PJRT artifacts clean, faulty device detected.");
-    coord.shutdown();
 }

@@ -48,6 +48,17 @@ def load(path):
         return json.load(fh)
 
 
+def regen_hint(record, path):
+    """The exact commands that turn a placeholder record into a real one."""
+    bench = record.get("bench", "hotpath")
+    name = os.path.basename(path) if path else f"BENCH_{bench}.json"
+    return (
+        f"regenerate it on any machine with a cargo toolchain:\n"
+        f"      cargo bench --bench {bench} -- --smoke\n"
+        f"      git add {name} && git commit -m 'arm {bench} bench baseline'"
+    )
+
+
 def main():
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("fresh", help="bench JSON emitted by the current run")
@@ -62,7 +73,8 @@ def main():
     if fresh.get("placeholder"):
         failures.append(
             "fresh bench record is a placeholder -- the bench did not emit "
-            "a real measurement (did the bench binary fail to write?)"
+            "a real measurement (did the bench binary fail to write?); "
+            + regen_hint(fresh, args.fresh)
         )
 
     # --- check 1: in-run LUT speedups -----------------------------------
@@ -89,9 +101,9 @@ def main():
         print("guard: no committed baseline found -- cross-run check skipped")
     elif base.get("placeholder"):
         print(
-            "guard: committed baseline is a placeholder -- commit a real "
-            "`cargo bench --bench hotpath -- --smoke` record to arm the "
-            "cross-run check"
+            "guard: committed baseline is a placeholder -- the cross-run "
+            "regression gate is NOT armed; "
+            + regen_hint(base, args.baseline and os.path.basename(args.baseline))
         )
     elif bool(base.get("smoke")) != bool(fresh.get("smoke")):
         print("guard: baseline/fresh smoke modes differ -- cross-run check skipped")

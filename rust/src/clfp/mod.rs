@@ -419,13 +419,19 @@ pub fn infer(iface: &dyn MmaInterface, cfg: ClfpConfig) -> Inference {
 
     // Step 4: randomized validation with revision, streamed through the
     // batch engine so both sides reuse scratch and fan out across cores.
-    // The RNG consumption order is identical to the scalar loop, keeping
-    // inference results seed-stable.
+    // Candidates run through the Session facade's validated batch path;
+    // the interface under test stays on the raw batch API (it is the
+    // black box being probed). The RNG consumption order is identical to
+    // the scalar loop, keeping inference results seed-stable.
     let mut revisions = 0;
     let mut inferred = None;
     let mut validated = 0;
     'surv: for &spec in &survivors {
-        let cand = candidates::instantiate(spec, (m, n, k), fmts);
+        let cand = crate::session::Session::from_model(candidates::instantiate(
+            spec,
+            (m, n, k),
+            fmts,
+        ));
         let mut vrng = Rng::new(cfg.seed ^ 0x5742_11D4);
         let mut t = 0;
         // Ramp the chunk size: wrong survivors usually diverge within the
@@ -437,7 +443,17 @@ pub fn infer(iface: &dyn MmaInterface, cfg: ClfpConfig) -> Inference {
             let nb = chunk.min(cfg.validate_tests - t);
             let cases = random_case_batch(&mut vrng, iface, nb, t);
             let want = parallel_execute_batch(iface, &cases);
-            let got = parallel_execute_batch(&cand, &cases);
+            let got = match cand.run_batch(&cases) {
+                Ok(got) => got,
+                // A candidate that cannot even accept the interface's
+                // signature (e.g. the black box takes block scales, the
+                // hypothesis space has no scaled models) is a failed
+                // hypothesis, not a crash.
+                Err(_) => {
+                    revisions += 1;
+                    continue 'surv;
+                }
+            };
             if want.iter().zip(got.iter()).any(|(w, g)| w.data != g.data) {
                 revisions += 1;
                 continue 'surv;

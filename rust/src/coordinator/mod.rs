@@ -48,7 +48,7 @@ pub struct Job {
 }
 
 /// Result of one job.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct JobOutcome {
     pub id: u64,
     pub pair: String,
@@ -115,6 +115,12 @@ impl Coordinator {
     /// Collect one outcome (blocking).
     pub fn next_outcome(&self) -> JobOutcome {
         self.outcome_rx.recv().expect("workers stopped")
+    }
+
+    /// Collect one outcome if any is ready (non-blocking) — the polling
+    /// primitive the JSON-lines serve loop uses for live reporting.
+    pub fn try_next_outcome(&self) -> Option<JobOutcome> {
+        self.outcome_rx.try_recv().ok()
     }
 
     /// Run a full campaign: `jobs` batches of `batch` tests per pair,

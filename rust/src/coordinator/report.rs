@@ -5,7 +5,7 @@ use std::collections::BTreeMap;
 use super::JobOutcome;
 
 /// A single bit-level divergence with its full reproduction inputs.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct Mismatch {
     pub test_index: usize,
     pub element: usize,
@@ -17,7 +17,7 @@ pub struct Mismatch {
 }
 
 /// Per-pair counters.
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug, Default, PartialEq)]
 pub struct PairStats {
     pub jobs: usize,
     pub tests: usize,
@@ -27,7 +27,7 @@ pub struct PairStats {
 }
 
 /// Aggregated campaign report.
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug, Default, PartialEq)]
 pub struct CampaignReport {
     pub total_jobs: usize,
     pub total_tests: usize,

@@ -1,0 +1,168 @@
+//! Structured errors for the crate's validated entry points.
+//!
+//! Every way a caller can hand the API something malformed — an unknown
+//! architecture, an ambiguous instruction fragment, operands whose shape or
+//! format disagree with the instruction's spec, missing or superfluous
+//! block scales, a bad JSON line — maps to exactly one [`ApiError`]
+//! variant. Validated paths never panic on malformed input; the variants
+//! carry enough structure (expected vs got) for callers to render
+//! actionable messages or route errors programmatically.
+//!
+//! This module is deliberately a leaf (it references only [`formats`] and
+//! [`isa`] types), so low layers like [`interface`](crate::interface) and
+//! [`isa`](crate::isa) can return `ApiError` without depending on the
+//! [`session`](crate::session) facade that sits above them; `session`
+//! re-exports [`ApiError`] as part of its public surface.
+//!
+//! [`formats`]: crate::formats
+//! [`isa`]: crate::isa
+
+use std::fmt;
+
+use crate::formats::Format;
+use crate::isa::Arch;
+
+/// Everything the [`Session`](crate::session::Session) facade can reject.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ApiError {
+    /// The architecture name did not parse (see [`Arch::parse`]).
+    UnknownArch { name: String },
+    /// No instruction on the architecture matches the fragment.
+    UnknownInstruction { arch: Arch, fragment: String },
+    /// The fragment matches more than one instruction; `candidates` lists
+    /// every match so the caller can disambiguate.
+    AmbiguousInstruction {
+        arch: Arch,
+        fragment: String,
+        candidates: Vec<String>,
+    },
+    /// An operand matrix has the wrong dimensions for the instruction.
+    ShapeMismatch {
+        operand: &'static str,
+        expected: (usize, usize),
+        got: (usize, usize),
+    },
+    /// An operand matrix carries the wrong storage format.
+    FormatMismatch {
+        operand: &'static str,
+        expected: Format,
+        got: Format,
+    },
+    /// A flat buffer has the wrong element count.
+    LengthMismatch {
+        what: &'static str,
+        expected: usize,
+        got: usize,
+    },
+    /// A raw bit pattern has bits set above the format's storage width.
+    InvalidBits {
+        operand: &'static str,
+        fmt: Format,
+        bits: u64,
+    },
+    /// Scale operands were supplied, but the instruction has no block-scale
+    /// spec (its model takes no α/β inputs).
+    ScaleSpecMissing { instr: String },
+    /// The instruction requires block-scale operands and none were given.
+    MissingScales { instr: String },
+    /// Negation requested on a format without a sign bit.
+    UnsignedNegate { fmt: Format },
+    /// The requested operation or override is not supported for this
+    /// session's instruction/model combination.
+    Unsupported { what: &'static str, detail: String },
+    /// A JSON document failed to parse or decode; `offset` is the byte
+    /// position in the input where parsing stopped (0 for semantic errors).
+    Json { offset: usize, msg: String },
+}
+
+impl fmt::Display for ApiError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ApiError::UnknownArch { name } => write!(
+                f,
+                "unknown architecture '{name}' (try a name like 'hopper' or a \
+                 target like 'sm90'/'gfx942')"
+            ),
+            ApiError::UnknownInstruction { arch, fragment } => write!(
+                f,
+                "no instruction matching '{fragment}' on {}; run `mma-sim list` \
+                 for the registry",
+                arch.name()
+            ),
+            ApiError::AmbiguousInstruction { arch, fragment, candidates } => write!(
+                f,
+                "instruction fragment '{fragment}' is ambiguous on {}: matches {}",
+                arch.name(),
+                candidates.join(", ")
+            ),
+            ApiError::ShapeMismatch { operand, expected, got } => write!(
+                f,
+                "{operand} shape mismatch: expected {}x{}, got {}x{}",
+                expected.0, expected.1, got.0, got.1
+            ),
+            ApiError::FormatMismatch { operand, expected, got } => write!(
+                f,
+                "{operand} format mismatch: expected {}, got {}",
+                expected.name(),
+                got.name()
+            ),
+            ApiError::LengthMismatch { what, expected, got } => {
+                write!(f, "{what}: expected {expected} elements, got {got}")
+            }
+            ApiError::InvalidBits { operand, fmt, bits } => write!(
+                f,
+                "{operand} bit pattern {bits:#x} exceeds the {}-bit {} storage width",
+                fmt.width(),
+                fmt.name()
+            ),
+            ApiError::ScaleSpecMissing { instr } => write!(
+                f,
+                "'{instr}' takes no block-scale operands, but scales were supplied"
+            ),
+            ApiError::MissingScales { instr } => write!(
+                f,
+                "'{instr}' requires block-scale operands \
+                 (a_scales M x ceil(K/kblock), b_scales ceil(K/kblock) x N)"
+            ),
+            ApiError::UnsignedNegate { fmt } => {
+                write!(f, "cannot negate unsigned format {}", fmt.name())
+            }
+            ApiError::Unsupported { what, detail } => write!(f, "{what}: {detail}"),
+            ApiError::Json { offset, msg } => {
+                write!(f, "JSON error at byte {offset}: {msg}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ApiError {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_is_actionable() {
+        let e = ApiError::AmbiguousInstruction {
+            arch: Arch::Volta,
+            fragment: "HMMA.884".into(),
+            candidates: vec!["HMMA.884.F32.F16".into(), "HMMA.884.F16.F16".into()],
+        };
+        let msg = e.to_string();
+        assert!(msg.contains("ambiguous"), "{msg}");
+        assert!(msg.contains("HMMA.884.F16.F16"), "{msg}");
+
+        let e = ApiError::ShapeMismatch { operand: "A", expected: (8, 4), got: (8, 8) };
+        assert!(e.to_string().contains("expected 8x4, got 8x8"));
+    }
+
+    #[test]
+    fn converts_into_boxed_crate_error() {
+        fn run() -> crate::util::error::Result<()> {
+            let e = ApiError::UnknownArch { name: "pentium".into() };
+            Err(e.into())
+        }
+        let e = run().unwrap_err();
+        assert!(e.to_string().contains("pentium"));
+    }
+}

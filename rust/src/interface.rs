@@ -6,6 +6,7 @@
 //! deliberately-perturbed mystery model in the tests — implements
 //! [`MmaInterface`].
 
+use crate::error::ApiError;
 use crate::formats::Format;
 
 /// A dense row-major matrix of raw bit patterns in a given format.
@@ -26,15 +27,35 @@ impl BitMatrix {
         Self { rows, cols, fmt, data: vec![0; rows * cols] }
     }
 
-    /// Build from `f64` values (RNE encoding).
-    pub fn from_f64(rows: usize, cols: usize, fmt: Format, vals: &[f64]) -> Self {
-        assert_eq!(vals.len(), rows * cols);
-        Self {
+    /// Build from `f64` values (RNE encoding), validating the value count.
+    pub fn try_from_f64(
+        rows: usize,
+        cols: usize,
+        fmt: Format,
+        vals: &[f64],
+    ) -> Result<Self, ApiError> {
+        if vals.len() != rows * cols {
+            return Err(ApiError::LengthMismatch {
+                what: "BitMatrix::from_f64 values",
+                expected: rows * cols,
+                got: vals.len(),
+            });
+        }
+        Ok(Self {
             rows,
             cols,
             fmt,
             data: vals.iter().map(|&v| fmt.from_f64(v)).collect(),
-        }
+        })
+    }
+
+    /// Build from `f64` values (RNE encoding).
+    ///
+    /// Panics when `vals.len() != rows * cols`; fallible callers use
+    /// [`try_from_f64`](BitMatrix::try_from_f64).
+    pub fn from_f64(rows: usize, cols: usize, fmt: Format, vals: &[f64]) -> Self {
+        Self::try_from_f64(rows, cols, fmt, vals)
+            .expect("value count must equal rows * cols (try_from_f64 handles this fallibly)")
     }
 
     /// Fill with a single value (RNE encoding).
@@ -61,9 +82,20 @@ impl BitMatrix {
         &self.data[r * self.cols..(r + 1) * self.cols]
     }
 
-    /// Copy of a column.
+    /// Gather a column into a caller-owned buffer (cleared first) — the
+    /// allocation-free form the model's B-column gather loop reuses across
+    /// every output column of a batch.
+    pub fn col_into(&self, c: usize, out: &mut Vec<u64>) {
+        debug_assert!(c < self.cols);
+        out.clear();
+        out.extend((0..self.rows).map(|r| self.data[r * self.cols + c]));
+    }
+
+    /// Copy of a column (allocates; loops use [`col_into`](BitMatrix::col_into)).
     pub fn col(&self, c: usize) -> Vec<u64> {
-        (0..self.rows).map(|r| self.get(r, c)).collect()
+        let mut out = Vec::with_capacity(self.rows);
+        self.col_into(c, &mut out);
+        out
     }
 
     /// Decode every element to `f64` (lossless for sub-f64 formats).
@@ -71,16 +103,27 @@ impl BitMatrix {
         self.data.iter().map(|&b| self.fmt.to_f64(b)).collect()
     }
 
-    /// Negate every element (sign-bit flip; finite-only formats included).
-    pub fn negated(&self) -> BitMatrix {
-        assert!(self.fmt.has_sign(), "cannot negate unsigned format");
+    /// Negate every element (sign-bit flip), rejecting unsigned formats.
+    pub fn try_negated(&self) -> Result<BitMatrix, ApiError> {
+        if !self.fmt.has_sign() {
+            return Err(ApiError::UnsignedNegate { fmt: self.fmt });
+        }
         let sign = 1u64 << (self.fmt.width() - 1);
-        BitMatrix {
+        Ok(BitMatrix {
             rows: self.rows,
             cols: self.cols,
             fmt: self.fmt,
             data: self.data.iter().map(|&b| b ^ sign).collect(),
-        }
+        })
+    }
+
+    /// Negate every element (sign-bit flip; finite-only formats included).
+    ///
+    /// Panics on unsigned formats; fallible callers use
+    /// [`try_negated`](BitMatrix::try_negated).
+    pub fn negated(&self) -> BitMatrix {
+        self.try_negated()
+            .expect("cannot negate unsigned format (try_negated handles this fallibly)")
     }
 }
 
@@ -110,7 +153,7 @@ pub type Scales<'s> = Option<(&'s BitMatrix, &'s BitMatrix)>;
 /// `MmaCase`s through [`MmaInterface::execute_batch`], which lets local
 /// models reuse scratch buffers across cases and lets
 /// [`parallel_execute_batch`] fan independent cases out across threads.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct MmaCase {
     pub a: BitMatrix,
     pub b: BitMatrix,

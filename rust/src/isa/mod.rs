@@ -12,6 +12,7 @@ mod nvidia;
 pub use amd::amd_instructions;
 pub use nvidia::nvidia_instructions;
 
+use crate::error::ApiError;
 use crate::formats::Format;
 use crate::interface::MmaFormats;
 use crate::models::{MmaModel, ModelSpec};
@@ -172,11 +173,45 @@ pub fn by_arch(arch: Arch) -> Vec<Instruction> {
 }
 
 /// Find one instruction by (case-insensitive) name substring and arch.
+///
+/// Returns the *first* registry match even when the fragment is ambiguous
+/// — fine for exploratory use, wrong for anything user-facing. The
+/// [`Session`](crate::session::Session) facade and the CLI resolve
+/// through [`resolve`], which rejects ambiguity instead.
 pub fn find(arch: Arch, name_frag: &str) -> Option<Instruction> {
     let frag = name_frag.to_ascii_lowercase();
     registry()
         .into_iter()
         .find(|i| i.arch == arch && i.name.to_ascii_lowercase().contains(&frag))
+}
+
+/// Resolve exactly one instruction by (case-insensitive) name fragment.
+///
+/// An exact full-name match wins outright; otherwise the fragment must
+/// match a single registry entry. Zero matches yield
+/// [`ApiError::UnknownInstruction`]; several yield
+/// [`ApiError::AmbiguousInstruction`] listing every candidate, so callers
+/// can present the choices instead of silently picking the first.
+pub fn resolve(arch: Arch, name_frag: &str) -> Result<Instruction, ApiError> {
+    let frag = name_frag.to_ascii_lowercase();
+    let mut matches: Vec<Instruction> = registry()
+        .into_iter()
+        .filter(|i| i.arch == arch && i.name.to_ascii_lowercase().contains(&frag))
+        .collect();
+    if matches.len() > 1 {
+        if let Some(exact) = matches.iter().position(|i| i.name.eq_ignore_ascii_case(name_frag)) {
+            return Ok(matches.swap_remove(exact));
+        }
+        return Err(ApiError::AmbiguousInstruction {
+            arch,
+            fragment: name_frag.to_string(),
+            candidates: matches.iter().map(|i| i.name.to_string()).collect(),
+        });
+    }
+    match matches.pop() {
+        Some(instr) => Ok(instr),
+        None => Err(ApiError::UnknownInstruction { arch, fragment: name_frag.to_string() }),
+    }
 }
 
 /// Convenience: standard operand-format bundle.
@@ -399,5 +434,40 @@ mod tests {
         assert!(find(Arch::Cdna3, "32x32x8_f16").is_some());
         assert!(find(Arch::Volta, "HMMA.884").is_some());
         assert!(find(Arch::Volta, "QMMA").is_none());
+    }
+
+    #[test]
+    fn resolve_accepts_unique_fragments() {
+        let i = resolve(Arch::Cdna3, "32x32x8_f16").unwrap();
+        assert_eq!(i.name, "v_mfma_f32_32x32x8_f16");
+        // a full mnemonic always resolves to itself
+        let i = resolve(Arch::Hopper, "HGMMA.64x8x16.F32.F16").unwrap();
+        assert_eq!(i.name, "HGMMA.64x8x16.F32.F16");
+    }
+
+    #[test]
+    fn resolve_rejects_ambiguity_with_candidates() {
+        let err = resolve(Arch::Volta, "HMMA.884").unwrap_err();
+        match err {
+            crate::error::ApiError::AmbiguousInstruction { candidates, .. } => {
+                assert_eq!(candidates.len(), 2, "{candidates:?}");
+                assert!(candidates.contains(&"HMMA.884.F32.F16".to_string()));
+                assert!(candidates.contains(&"HMMA.884.F16.F16".to_string()));
+            }
+            other => panic!("expected AmbiguousInstruction, got {other:?}"),
+        }
+        // the empty fragment matches the whole arch registry
+        assert!(matches!(
+            resolve(Arch::Hopper, ""),
+            Err(crate::error::ApiError::AmbiguousInstruction { .. })
+        ));
+    }
+
+    #[test]
+    fn resolve_rejects_unknown_fragments() {
+        assert!(matches!(
+            resolve(Arch::Volta, "QMMA"),
+            Err(crate::error::ApiError::UnknownInstruction { .. })
+        ));
     }
 }

@@ -5,8 +5,20 @@
 //! *"Bit-Accurate Modeling of GPU Matrix Multiply-Accumulate Units:
 //! Demystifying Numerical Discrepancy and Accuracy"* (MMA-Sim).
 //!
-//! The crate is organized in layers:
+//! The crate is organized in layers, with [`session`] as the front door:
 //!
+//! - [`session`] — **the primary API**: a [`SessionBuilder`] →
+//!   [`Session`] facade that resolves instructions (with ambiguity
+//!   detection), validates every operand against the instruction's
+//!   shape/format/scale spec ([`ApiError`] instead of panics),
+//!   reuses scratch across runs, and exposes `run` / `run_batch` /
+//!   `gemm` / `probe` / `infer` / `campaign` plus JSON-lines
+//!   serialization ([`session::json`]) and the long-running verification
+//!   service ([`session::serve`]). Start here; the layers below are the
+//!   machinery it drives.
+//! - [`error`] — the structured [`ApiError`] every validated entry point
+//!   rejects malformed input with (a leaf module, so the layers below can
+//!   return it without depending on the facade above them).
 //! - [`formats`] — software floating-point formats (FP64 … FP4, E8M0, UE4M3),
 //!   decode/encode with every rounding mode, the paper's Table 2
 //!   conversion functions, and the `formats::tables` LUT fast path
@@ -20,15 +32,20 @@
 //! - [`models`] — matrix-level arithmetic-behavior models Φ
 //!   (Algorithms 2, 4, 5).
 //! - [`isa`] — the instruction registry for the ten GPU architectures
-//!   (paper Tables 3–7).
+//!   (paper Tables 3–7), with fallible fragment resolution
+//!   ([`isa::resolve`]).
 //! - [`interface`] — the black-box `MmaInterface` abstraction that CLFP
-//!   probes (a Rust model, a PJRT-loaded artifact, or a mystery model).
+//!   probes (a Rust model, a PJRT-loaded artifact, or a mystery model),
+//!   and the order-preserving parallel batch engine.
+//! - [`gemm`] — the tiled arbitrary-shape GEMM executor built from one
+//!   instruction (validated entry: [`session::Session::gemm`]).
 //! - [`clfp`] — the closed-loop feature-probing framework (paper §3).
 //! - [`analysis`] — discrepancy (Table 8), error bounds (Table 9), risky
 //!   designs (Table 10), summation trees (Figure 2), rounding bias
 //!   (Figure 3).
 //! - [`coordinator`] — the thread-pool continuous-verification service,
-//!   streaming batched jobs through the zero-allocation batch engine.
+//!   streaming batched jobs through the zero-allocation batch engine
+//!   (served over JSON lines by [`session::serve`]).
 //! - [`runtime`] — PJRT CPU client wrapper that loads AOT artifacts
 //!   produced by `python/compile/aot.py` and exposes them as
 //!   `MmaInterface`s.
@@ -36,6 +53,7 @@
 pub mod analysis;
 pub mod clfp;
 pub mod coordinator;
+pub mod error;
 pub mod fixedpoint;
 pub mod gemm;
 pub mod formats;
@@ -45,8 +63,10 @@ pub mod mitigations;
 pub mod models;
 pub mod ops;
 pub mod runtime;
+pub mod session;
 pub mod util;
 
 pub use formats::{Format, RoundingMode};
 pub use interface::{BitMatrix, MmaInterface};
 pub use isa::{Arch, Instruction};
+pub use session::{ApiError, RunOutput, Session, SessionBuilder};

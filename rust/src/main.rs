@@ -1,29 +1,34 @@
 //! `mma-sim` — command-line front end for the bit-accurate MMA simulator.
 //!
+//! Every subcommand is a thin wrapper over the [`mma_sim::session`]
+//! facade: the CLI parses flags, the facade resolves instructions,
+//! validates operands, and runs — so malformed input surfaces as a
+//! structured [`ApiError`](mma_sim::session::ApiError) message, never a
+//! panic.
+//!
 //! Subcommands:
 //!
 //! - `list`                      — registry of modeled instructions
-//! - `simulate`                  — run one MMA on a chosen instruction
+//! - `simulate`                  — run one MMA (or a JSON-lines case stream)
 //! - `table <1..10|all>`         — regenerate the paper's tables
 //! - `figure <2|3>`              — regenerate the paper's figures
 //! - `probe`                     — CLFP closed loop against a model or artifact
 //! - `validate`                  — randomized cross-validation vs PJRT artifacts
-//! - `serve`                     — run the continuous-verification coordinator
+//! - `serve`                     — verification campaign, one-shot or JSON-lines
 //!
 //! The argument parser is hand-rolled: the offline image ships no clap.
 
+use std::io::{BufRead, Write};
 use std::sync::Arc;
 
 use mma_sim::util::error::Result;
 use mma_sim::{anyhow, bail};
 
-use mma_sim::analysis::{bias, discrepancy, error_bounds, risky, tables};
-use mma_sim::clfp::{self, ClfpConfig};
-use mma_sim::coordinator::{Coordinator, VerifyPair};
+use mma_sim::clfp::ClfpConfig;
+use mma_sim::coordinator::VerifyPair;
 use mma_sim::interface::MmaInterface;
-use mma_sim::isa::{self, Arch};
 use mma_sim::runtime::{artifacts_dir, model_for_artifact, read_manifest, Runtime};
-use mma_sim::util::Rng;
+use mma_sim::session::{self, json, CampaignConfig, ServeConfig, Session, SessionBuilder};
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -41,6 +46,16 @@ fn flag(args: &[String], name: &str) -> Option<String> {
 
 fn has(args: &[String], name: &str) -> bool {
     args.iter().any(|a| a == name)
+}
+
+fn parsed<T: std::str::FromStr>(args: &[String], name: &str, default: T) -> Result<T>
+where
+    T::Err: std::error::Error + Send + Sync + 'static,
+{
+    match flag(args, name) {
+        Some(v) => Ok(v.parse()?),
+        None => Ok(default),
+    }
 }
 
 fn dispatch(args: &[String]) -> Result<()> {
@@ -64,17 +79,39 @@ fn print_help() {
     println!(
         "mma-sim — bit-accurate reference models of GPU matrix units\n\n\
          USAGE: mma-sim <subcommand> [options]\n\n\
+         All subcommands dispatch through the typed Session facade: an\n\
+         instruction is resolved from (--arch, --instr) with ambiguity\n\
+         detection, and every operand is validated against its spec.\n\n\
          SUBCOMMANDS\n\
          \x20 list                               list modeled instructions\n\
-         \x20 simulate --arch A --instr FRAG     run a random MMA and print d00 vs FP64\n\
-         \x20 table <1..10|all>                  regenerate a paper table\n\
+         \x20 simulate --arch A --instr FRAG     run a random MMA and print d vs FP64\n\
+         \x20          [--seed N] [--threads N]\n\
+         \x20          [--json]                  emit the result as a RunOutput JSON line\n\
+         \x20          [--stdin]                 read MmaCase JSON lines, write RunOutput\n\
+         \x20                                    lines (the cross-process sharding seam)\n\
+         \x20 table <1..10|all> [--samples N]    regenerate a paper table\n\
          \x20 figure <2|3> [--mmas N]            regenerate a paper figure\n\
          \x20 probe --arch A --instr FRAG        CLFP closed loop on a model\n\
          \x20 probe --artifact NAME              CLFP closed loop on a PJRT artifact\n\
          \x20 validate [--tests N]               Rust models vs PJRT artifacts\n\
          \x20 serve [--workers N] [--jobs N] [--batch N] [--pjrt]\n\
-         \x20                                    run a verification campaign"
+         \x20                                    one-shot verification campaign\n\
+         \x20 serve --jsonl [--workers N]        long-running service: read job lines\n\
+         \x20                                    {{\"pair\":…,\"batch\":…,\"seed\":…}} on stdin,\n\
+         \x20                                    emit live outcome lines + final summary"
     );
+}
+
+/// Build a session from the common `--arch/--instr/--threads` flags.
+fn session_from_args(args: &[String]) -> Result<Session> {
+    let arch = flag(args, "--arch").ok_or_else(|| anyhow!("--arch required (e.g. hopper, gfx942)"))?;
+    let mut b = SessionBuilder::new()
+        .arch_named(arch)
+        .instruction(flag(args, "--instr").unwrap_or_default());
+    if let Some(t) = flag(args, "--threads") {
+        b = b.threads(t.parse()?);
+    }
+    Ok(b.build()?)
 }
 
 fn cmd_list() -> Result<()> {
@@ -82,7 +119,7 @@ fn cmd_list() -> Result<()> {
         "{:<14} {:<34} {:<12} {:<10} {}",
         "arch", "instruction", "shape", "class", "model"
     );
-    for i in isa::registry() {
+    for i in session::instructions() {
         println!(
             "{:<14} {:<34} {:<12} {:<10} {}",
             i.arch.target(),
@@ -95,34 +132,28 @@ fn cmd_list() -> Result<()> {
     Ok(())
 }
 
-fn find_instr(args: &[String]) -> Result<isa::Instruction> {
-    let arch = flag(args, "--arch")
-        .and_then(|a| Arch::parse(&a))
-        .ok_or_else(|| anyhow!("--arch required (e.g. hopper, gfx942)"))?;
-    let frag = flag(args, "--instr").unwrap_or_default();
-    isa::find(arch, &frag).ok_or_else(|| anyhow!("no instruction matching '{frag}' on {arch:?}"))
-}
-
 fn cmd_simulate(args: &[String]) -> Result<()> {
-    let instr = find_instr(args)?;
-    let seed = flag(args, "--seed").map(|s| s.parse()).transpose()?.unwrap_or(42u64);
-    let model = instr.model();
-    let mut rng = Rng::new(seed);
-    let (a, b, c) = clfp::random_inputs(&mut rng, &model, 0);
-    let d = model.execute(&a, &b, &c, None);
-    let (m, n, k) = model.shape();
-    let fmts = instr.formats;
-    println!("instruction: {} ({})", model.name(), instr.shape_str());
+    let session = session_from_args(args)?;
+    if has(args, "--stdin") {
+        return simulate_stream(&session);
+    }
+    let seed = parsed(args, "--seed", 42u64)?;
+    let sim = session.simulate(seed)?;
+    if has(args, "--json") {
+        println!("{}", json::encode_run_output(&sim.output));
+        return Ok(());
+    }
+    let (m, n, _) = session.shape();
+    let d_fmt = session.formats().d;
+    let instr = session.instruction().ok_or_else(|| anyhow!("no instruction"))?;
+    println!("instruction: {} ({})", sim.output.instr, instr.shape_str());
     for i in 0..m.min(2) {
         for j in 0..n.min(2) {
-            let mut real = fmts.c.to_f64(c.get(i, j));
-            for kk in 0..k {
-                real += fmts.a.to_f64(a.get(i, kk)) * fmts.b.to_f64(b.get(kk, j));
-            }
-            let got = fmts.d.to_f64(d.get(i, j));
+            let bits = sim.output.d.get(i, j);
+            let got = d_fmt.to_f64(bits);
+            let real = sim.fp64[i * n + j];
             println!(
-                "d[{i}][{j}] = {got:<24} (bits {:#010x})   fp64 ref {real:<24} diff {:+.3e}",
-                d.get(i, j),
+                "d[{i}][{j}] = {got:<24} (bits {bits:#010x})   fp64 ref {real:<24} diff {:+.3e}",
                 got - real
             );
         }
@@ -130,32 +161,31 @@ fn cmd_simulate(args: &[String]) -> Result<()> {
     Ok(())
 }
 
+/// The sharding seam: one validated `run` per input case line.
+fn simulate_stream(session: &Session) -> Result<()> {
+    let stdin = std::io::stdin();
+    let mut out = std::io::stdout().lock();
+    for line in stdin.lock().lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        match json::decode_case(line.trim()).and_then(|case| session.run(&case)) {
+            Ok(output) => writeln!(out, "{}", json::encode_run_output(&output))?,
+            Err(e) => writeln!(out, "{{\"error\":{}}}", json::JsonValue::str(e.to_string()).encode())?,
+        }
+        out.flush()?;
+    }
+    Ok(())
+}
+
 fn cmd_table(args: &[String]) -> Result<()> {
     let which = args.get(1).map(String::as_str).unwrap_or("all");
-    let samples = flag(args, "--samples").map(|s| s.parse()).transpose()?.unwrap_or(100usize);
-    let print = |n: u32| -> Result<()> {
+    let samples = parsed(args, "--samples", 100usize)?;
+    let numbers: Vec<u32> = if which == "all" { (1..=10).collect() } else { vec![which.parse()?] };
+    for n in numbers {
         println!("── Table {n} {}", "─".repeat(50));
-        match n {
-            1 => println!("{}", tables::render_table1()),
-            2 => println!("{}", tables::render_table2()),
-            3 => println!("{}", tables::render_table3()),
-            4 => println!("{}", tables::render_table4()),
-            5 => println!("{}", tables::render_table5()),
-            6 => println!("{}", tables::render_table6()),
-            7 => println!("{}", tables::render_table7()),
-            8 => println!("{}", discrepancy::render_table8()),
-            9 => println!("{}", error_bounds::render_table9(samples)),
-            10 => println!("{}", risky::render_table10()),
-            _ => bail!("tables are numbered 1..10"),
-        }
-        Ok(())
-    };
-    if which == "all" {
-        for n in 1..=10 {
-            print(n)?;
-        }
-    } else {
-        print(which.parse()?)?;
+        println!("{}", session::render_table(n, samples)?);
     }
     Ok(())
 }
@@ -163,28 +193,12 @@ fn cmd_table(args: &[String]) -> Result<()> {
 fn cmd_figure(args: &[String]) -> Result<()> {
     match args.get(1).map(String::as_str) {
         Some("2") => {
-            // the Figure 2 exemplars: chain, pairwise, non-swamped, swamped
-            let cases = [
-                (Arch::Cdna1, "16x16x4_f32", "Figure 2(a) chain of binary summation"),
-                (Arch::Cdna2, "32x32x8_bf16_1k", "Figure 2(b) pairwise summation"),
-                (Arch::Cdna1, "32x32x4_bf16", "Figure 2(c) non-swamped fused"),
-                (Arch::Volta, "HMMA.884.F32", "Figure 2(d) swamped 5-term fused"),
-            ];
-            for (arch, frag, caption) in cases {
-                let Some(instr) = isa::find(arch, frag) else {
-                    continue;
-                };
-                let model = instr.model();
-                let sig = clfp::tree_signature(&model);
-                println!("{caption}: {} {}", arch.target(), instr.name);
-                println!("{}", sig.render());
-            }
+            print!("{}", session::render_figure2());
             Ok(())
         }
         Some("3") => {
-            let mmas = flag(args, "--mmas").map(|s| s.parse()).transpose()?.unwrap_or(40usize);
-            let r = bias::bias_experiment(mmas, 0xF16);
-            println!("{}", bias::render(&r));
+            let mmas = parsed(args, "--mmas", 40usize)?;
+            println!("{}", session::render_figure3(mmas, 0xF16));
             Ok(())
         }
         _ => bail!("figure <2|3>"),
@@ -192,21 +206,27 @@ fn cmd_figure(args: &[String]) -> Result<()> {
 }
 
 fn cmd_probe(args: &[String]) -> Result<()> {
-    let tests = flag(args, "--tests").map(|s| s.parse()).transpose()?.unwrap_or(500usize);
+    let tests = parsed(args, "--tests", 500usize)?;
     let cfg = ClfpConfig { validate_tests: tests, seed: 0xC1F9 };
-    let iface: Box<dyn MmaInterface> = if let Some(name) = flag(args, "--artifact") {
+    let inf;
+    let name;
+    if let Some(artifact) = flag(args, "--artifact") {
         let dir = artifacts_dir();
         let rt = Runtime::new(&dir)?;
         let meta = read_manifest(&dir)?
             .into_iter()
-            .find(|m| m.name == name)
-            .ok_or_else(|| anyhow!("artifact {name} not in manifest"))?;
-        Box::new(rt.load_mma(&meta)?)
+            .find(|m| m.name == artifact)
+            .ok_or_else(|| anyhow!("artifact {artifact} not in manifest"))?;
+        let iface = rt.load_mma(&meta)?;
+        name = iface.name();
+        println!("probing {name} …");
+        inf = session::infer_interface(&iface, cfg);
     } else {
-        Box::new(find_instr(args)?.model())
-    };
-    println!("probing {} …", iface.name());
-    let inf = clfp::infer(iface.as_ref(), cfg);
+        let session = session_from_args(args)?;
+        name = session.name();
+        println!("probing {name} …");
+        inf = session.infer(cfg);
+    }
     println!("step 1  independence: {}", inf.independent);
     println!("step 2  d(i,j)/v matrix:\n{}", inf.tree.render());
     println!(
@@ -230,50 +250,26 @@ fn cmd_probe(args: &[String]) -> Result<()> {
 }
 
 fn cmd_validate(args: &[String]) -> Result<()> {
-    let tests = flag(args, "--tests").map(|s| s.parse()).transpose()?.unwrap_or(200usize);
-    let dir = artifacts_dir();
-    let rt = Runtime::new(&dir)?;
-    println!("PJRT platform: {}", rt.platform());
-    let mut rng = Rng::new(0xBEEF);
-    let mut total = 0usize;
-    let mut failures = 0usize;
-    for meta in read_manifest(&dir)? {
-        if meta.kind != "tfdpa" && meta.kind != "ftz" {
-            continue;
-        }
-        let pjrt = rt.load_mma(&meta)?;
-        let model = model_for_artifact(&meta)?;
-        let mut mismatch = 0usize;
-        for t in 0..tests {
-            let (a, b, c) = clfp::random_inputs(&mut rng, &model, t);
-            let want = model.execute(&a, &b, &c, None);
-            let got = pjrt.execute(&a, &b, &c, None);
-            if want.data != got.data {
-                mismatch += 1;
-            }
-        }
-        total += tests;
-        failures += mismatch;
+    let tests = parsed(args, "--tests", 200usize)?;
+    let summary = session::validate_artifacts(tests)?;
+    println!("PJRT platform: {}", summary.platform);
+    for row in &summary.rows {
         println!(
             "{:<24} {:>6} tests  {:>4} mismatches {}",
-            meta.name,
-            tests,
-            mismatch,
-            if mismatch == 0 { "ok" } else { "FAIL" }
+            row.name,
+            row.tests,
+            row.mismatches,
+            if row.mismatches == 0 { "ok" } else { "FAIL" }
         );
     }
-    println!("total: {total} tests, {failures} mismatches");
-    if failures > 0 {
+    println!("total: {} tests, {} mismatches", summary.total_tests, summary.total_mismatches);
+    if summary.total_mismatches > 0 {
         bail!("cross-validation failed");
     }
     Ok(())
 }
 
-fn cmd_serve(args: &[String]) -> Result<()> {
-    let workers = flag(args, "--workers").map(|s| s.parse()).transpose()?.unwrap_or(4usize);
-    let jobs = flag(args, "--jobs").map(|s| s.parse()).transpose()?.unwrap_or(16usize);
-    let batch = flag(args, "--batch").map(|s| s.parse()).transpose()?.unwrap_or(100usize);
-
+fn verify_pairs(args: &[String]) -> Result<Vec<VerifyPair>> {
     let mut pairs: Vec<VerifyPair> = Vec::new();
     if has(args, "--pjrt") {
         // verify PJRT artifacts against golden Rust models
@@ -291,24 +287,37 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         }
     } else {
         // self-verification campaign over the instruction registry
-        for i in isa::registry() {
-            if i.m * i.n > 1024 {
-                continue; // keep the demo campaign snappy
-            }
-            pairs.push(VerifyPair {
-                name: format!("{} {}", i.arch.target(), i.name),
-                dut: Arc::new(i.model()),
-                golden: Arc::new(i.model()),
-            });
-        }
+        // (capped tile size keeps the demo campaign snappy)
+        pairs = session::registry_pairs(1024);
     }
+    Ok(pairs)
+}
+
+fn cmd_serve(args: &[String]) -> Result<()> {
+    let workers = parsed(args, "--workers", 4usize)?;
+    let pairs = verify_pairs(args)?;
+    if has(args, "--jsonl") {
+        let cfg = ServeConfig { workers, queue_depth: 0 };
+        eprintln!("serve: {} pairs, {workers} workers, reading job lines from stdin", pairs.len());
+        let stdin = std::io::stdin();
+        let mut stdout = std::io::stdout();
+        session::serve_jsonl(pairs, &cfg, stdin.lock(), &mut stdout)?;
+        return Ok(());
+    }
+    let cfg = CampaignConfig {
+        workers,
+        jobs: parsed(args, "--jobs", 16usize)?,
+        batch: parsed(args, "--batch", 100usize)?,
+        seed: 0x5EED,
+    };
     println!(
-        "coordinator: {} pairs, {workers} workers, {jobs} jobs x {batch} MMAs each",
-        pairs.len()
+        "coordinator: {} pairs, {} workers, {} jobs x {} MMAs each",
+        pairs.len(),
+        cfg.workers,
+        cfg.jobs,
+        cfg.batch
     );
-    let coord = Coordinator::new(pairs, workers, workers * 2);
-    let report = coord.run_campaign(jobs, batch, 0x5EED);
+    let report = session::campaign(pairs, &cfg);
     println!("{}", report.render());
-    coord.shutdown();
     Ok(())
 }

@@ -329,12 +329,8 @@ impl MmaModel {
             }
         }
 
-        scratch.bcol.clear();
-        scratch.bcol.resize(self.k, 0);
         for j in 0..self.n {
-            for (r, slot) in scratch.bcol.iter_mut().enumerate() {
-                *slot = b.get(r, j);
-            }
+            b.col_into(j, &mut scratch.bcol);
             for i in 0..self.m {
                 let (sa, sb): (&[u64], &[u64]) = if nblk > 0 {
                     (

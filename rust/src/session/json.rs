@@ -1,0 +1,833 @@
+//! Dependency-free JSON encode/decode for the session wire types.
+//!
+//! The offline image ships no serde, so — matching the hand-rolled BENCH
+//! JSON writers — this module implements the minimal JSON machinery the
+//! facade needs: a [`JsonValue`] tree, a strict parser, and codecs for
+//! [`MmaCase`], [`RunOutput`](crate::session::RunOutput),
+//! [`Job`](crate::coordinator::Job), [`JobOutcome`], and
+//! [`CampaignReport`]. One value per line ("JSON lines") is the wire
+//! protocol for cross-process campaign sharding and `mma-sim serve --jsonl`.
+//!
+//! Bit patterns are carried as decimal integers. `u64` values round-trip
+//! exactly (numbers are kept as text until a typed accessor parses them);
+//! consumers in other languages must read them as 64-bit integers, not
+//! doubles, for FP64 patterns above 2^53.
+
+use crate::coordinator::{CampaignReport, Job, JobOutcome, Mismatch, PairStats};
+use crate::error::ApiError;
+use crate::formats::Format;
+use crate::interface::{BitMatrix, MmaCase};
+use crate::session::RunOutput;
+
+/// A parsed JSON document. Numbers stay as raw text so 64-bit integers
+/// survive the round trip bit-exactly.
+#[derive(Clone, Debug, PartialEq)]
+pub enum JsonValue {
+    Null,
+    Bool(bool),
+    /// Raw number text as it appeared in the document (or was formatted).
+    Num(String),
+    Str(String),
+    Arr(Vec<JsonValue>),
+    /// Key/value pairs in insertion order (duplicate keys: first wins).
+    Obj(Vec<(String, JsonValue)>),
+}
+
+impl JsonValue {
+    /// Parse a complete JSON document (trailing garbage is an error).
+    pub fn parse(text: &str) -> Result<JsonValue, ApiError> {
+        let mut p = Parser { bytes: text.as_bytes(), pos: 0 };
+        p.skip_ws();
+        let v = p.value(0)?;
+        p.skip_ws();
+        if p.pos != p.bytes.len() {
+            return Err(p.err("trailing characters after document"));
+        }
+        Ok(v)
+    }
+
+    pub fn u64(v: u64) -> JsonValue {
+        JsonValue::Num(v.to_string())
+    }
+
+    pub fn usize(v: usize) -> JsonValue {
+        JsonValue::Num(v.to_string())
+    }
+
+    pub fn str(v: impl Into<String>) -> JsonValue {
+        JsonValue::Str(v.into())
+    }
+
+    /// Object field lookup (first match).
+    pub fn get(&self, key: &str) -> Option<&JsonValue> {
+        match self {
+            JsonValue::Obj(pairs) => pairs.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            JsonValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            JsonValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_u64(&self) -> Option<u64> {
+        match self {
+            JsonValue::Num(s) => s.parse().ok(),
+            _ => None,
+        }
+    }
+
+    pub fn as_usize(&self) -> Option<usize> {
+        match self {
+            JsonValue::Num(s) => s.parse().ok(),
+            _ => None,
+        }
+    }
+
+    pub fn as_arr(&self) -> Option<&[JsonValue]> {
+        match self {
+            JsonValue::Arr(items) => Some(items),
+            _ => None,
+        }
+    }
+
+    pub fn is_null(&self) -> bool {
+        matches!(self, JsonValue::Null)
+    }
+
+    /// Serialize compactly (no whitespace — one value fits one line).
+    pub fn write(&self, out: &mut String) {
+        match self {
+            JsonValue::Null => out.push_str("null"),
+            JsonValue::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            JsonValue::Num(s) => out.push_str(s),
+            JsonValue::Str(s) => write_escaped(s, out),
+            JsonValue::Arr(items) => {
+                out.push('[');
+                for (i, v) in items.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    v.write(out);
+                }
+                out.push(']');
+            }
+            JsonValue::Obj(pairs) => {
+                out.push('{');
+                for (i, (k, v)) in pairs.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    write_escaped(k, out);
+                    out.push(':');
+                    v.write(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+
+    /// Serialize to a fresh single-line string.
+    pub fn encode(&self) -> String {
+        let mut s = String::new();
+        self.write(&mut s);
+        s
+    }
+}
+
+fn write_escaped(s: &str, out: &mut String) {
+    out.push('"');
+    for ch in s.chars() {
+        match ch {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+const MAX_DEPTH: usize = 64;
+
+struct Parser<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn err(&self, msg: &str) -> ApiError {
+        ApiError::Json { offset: self.pos, msg: msg.to_string() }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.bytes.get(self.pos).copied()
+    }
+
+    fn skip_ws(&mut self) {
+        while matches!(self.peek(), Some(b' ' | b'\t' | b'\n' | b'\r')) {
+            self.pos += 1;
+        }
+    }
+
+    fn expect(&mut self, b: u8) -> Result<(), ApiError> {
+        if self.peek() == Some(b) {
+            self.pos += 1;
+            Ok(())
+        } else {
+            Err(self.err(&format!("expected '{}'", b as char)))
+        }
+    }
+
+    fn literal(&mut self, word: &str, v: JsonValue) -> Result<JsonValue, ApiError> {
+        if self.bytes[self.pos..].starts_with(word.as_bytes()) {
+            self.pos += word.len();
+            Ok(v)
+        } else {
+            Err(self.err(&format!("expected '{word}'")))
+        }
+    }
+
+    fn value(&mut self, depth: usize) -> Result<JsonValue, ApiError> {
+        if depth > MAX_DEPTH {
+            return Err(self.err("nesting too deep"));
+        }
+        match self.peek() {
+            Some(b'{') => self.object(depth),
+            Some(b'[') => self.array(depth),
+            Some(b'"') => Ok(JsonValue::Str(self.string()?)),
+            Some(b't') => self.literal("true", JsonValue::Bool(true)),
+            Some(b'f') => self.literal("false", JsonValue::Bool(false)),
+            Some(b'n') => self.literal("null", JsonValue::Null),
+            Some(b'-' | b'0'..=b'9') => self.number(),
+            Some(_) => Err(self.err("unexpected character")),
+            None => Err(self.err("unexpected end of input")),
+        }
+    }
+
+    fn object(&mut self, depth: usize) -> Result<JsonValue, ApiError> {
+        self.expect(b'{')?;
+        let mut pairs = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b'}') {
+            self.pos += 1;
+            return Ok(JsonValue::Obj(pairs));
+        }
+        loop {
+            self.skip_ws();
+            let key = self.string()?;
+            self.skip_ws();
+            self.expect(b':')?;
+            self.skip_ws();
+            let val = self.value(depth + 1)?;
+            pairs.push((key, val));
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.pos += 1,
+                Some(b'}') => {
+                    self.pos += 1;
+                    return Ok(JsonValue::Obj(pairs));
+                }
+                _ => return Err(self.err("expected ',' or '}'")),
+            }
+        }
+    }
+
+    fn array(&mut self, depth: usize) -> Result<JsonValue, ApiError> {
+        self.expect(b'[')?;
+        let mut items = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b']') {
+            self.pos += 1;
+            return Ok(JsonValue::Arr(items));
+        }
+        loop {
+            self.skip_ws();
+            items.push(self.value(depth + 1)?);
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.pos += 1,
+                Some(b']') => {
+                    self.pos += 1;
+                    return Ok(JsonValue::Arr(items));
+                }
+                _ => return Err(self.err("expected ',' or ']'")),
+            }
+        }
+    }
+
+    fn string(&mut self) -> Result<String, ApiError> {
+        self.expect(b'"')?;
+        let mut out = String::new();
+        loop {
+            match self.peek() {
+                None => return Err(self.err("unterminated string")),
+                Some(b'"') => {
+                    self.pos += 1;
+                    return Ok(out);
+                }
+                Some(b'\\') => {
+                    self.pos += 1;
+                    match self.peek() {
+                        Some(b'"') => out.push('"'),
+                        Some(b'\\') => out.push('\\'),
+                        Some(b'/') => out.push('/'),
+                        Some(b'b') => out.push('\u{8}'),
+                        Some(b'f') => out.push('\u{c}'),
+                        Some(b'n') => out.push('\n'),
+                        Some(b'r') => out.push('\r'),
+                        Some(b't') => out.push('\t'),
+                        Some(b'u') => {
+                            self.pos += 1;
+                            let cp = self.hex4()?;
+                            // surrogate pairs (rare for our payloads, but
+                            // parse them correctly rather than corrupting)
+                            let ch = if (0xD800..0xDC00).contains(&cp) {
+                                if self.bytes[self.pos..].starts_with(b"\\u") {
+                                    self.pos += 2;
+                                    let lo = self.hex4()?;
+                                    if (0xDC00..0xE000).contains(&lo) {
+                                        char::from_u32(
+                                            0x10000 + ((cp - 0xD800) << 10) + (lo - 0xDC00),
+                                        )
+                                    } else {
+                                        // a high surrogate must be followed
+                                        // by a low one; anything else is an
+                                        // error, not a fabricated character
+                                        None
+                                    }
+                                } else {
+                                    None
+                                }
+                            } else {
+                                char::from_u32(cp)
+                            };
+                            match ch {
+                                Some(c) => out.push(c),
+                                None => return Err(self.err("invalid \\u escape")),
+                            }
+                            continue; // hex4 already advanced past the digits
+                        }
+                        _ => return Err(self.err("invalid escape")),
+                    }
+                    self.pos += 1;
+                }
+                Some(b) if b < 0x20 => return Err(self.err("raw control character in string")),
+                Some(_) => {
+                    // consume one UTF-8 encoded char
+                    let rest = &self.bytes[self.pos..];
+                    let s = std::str::from_utf8(&rest[..rest.len().min(4)])
+                        .or_else(|e| match e.valid_up_to() {
+                            0 => Err(self.err("invalid UTF-8 in string")),
+                            n => std::str::from_utf8(&rest[..n]).map_err(|_| unreachable_err()),
+                        })?;
+                    let ch = s.chars().next().ok_or_else(|| self.err("invalid UTF-8"))?;
+                    out.push(ch);
+                    self.pos += ch.len_utf8();
+                }
+            }
+        }
+    }
+
+    fn hex4(&mut self) -> Result<u32, ApiError> {
+        let mut v = 0u32;
+        for _ in 0..4 {
+            let d = match self.peek() {
+                Some(b @ b'0'..=b'9') => (b - b'0') as u32,
+                Some(b @ b'a'..=b'f') => (b - b'a' + 10) as u32,
+                Some(b @ b'A'..=b'F') => (b - b'A' + 10) as u32,
+                _ => return Err(self.err("expected 4 hex digits")),
+            };
+            v = v * 16 + d;
+            self.pos += 1;
+        }
+        Ok(v)
+    }
+
+    fn number(&mut self) -> Result<JsonValue, ApiError> {
+        let start = self.pos;
+        if self.peek() == Some(b'-') {
+            self.pos += 1;
+        }
+        let digits_start = self.pos;
+        while matches!(self.peek(), Some(b'0'..=b'9')) {
+            self.pos += 1;
+        }
+        if self.pos == digits_start {
+            return Err(self.err("expected digits"));
+        }
+        if self.peek() == Some(b'.') {
+            self.pos += 1;
+            let frac_start = self.pos;
+            while matches!(self.peek(), Some(b'0'..=b'9')) {
+                self.pos += 1;
+            }
+            if self.pos == frac_start {
+                return Err(self.err("expected fraction digits"));
+            }
+        }
+        if matches!(self.peek(), Some(b'e' | b'E')) {
+            self.pos += 1;
+            if matches!(self.peek(), Some(b'+' | b'-')) {
+                self.pos += 1;
+            }
+            let exp_start = self.pos;
+            while matches!(self.peek(), Some(b'0'..=b'9')) {
+                self.pos += 1;
+            }
+            if self.pos == exp_start {
+                return Err(self.err("expected exponent digits"));
+            }
+        }
+        let text = std::str::from_utf8(&self.bytes[start..self.pos])
+            .map_err(|_| unreachable_err())?;
+        Ok(JsonValue::Num(text.to_string()))
+    }
+}
+
+fn unreachable_err() -> ApiError {
+    ApiError::Json { offset: 0, msg: "internal UTF-8 slicing error".into() }
+}
+
+// ---------------------------------------------------------------------------
+// field helpers
+// ---------------------------------------------------------------------------
+
+fn semantic(msg: impl Into<String>) -> ApiError {
+    ApiError::Json { offset: 0, msg: msg.into() }
+}
+
+fn field<'v>(v: &'v JsonValue, key: &str) -> Result<&'v JsonValue, ApiError> {
+    v.get(key).ok_or_else(|| semantic(format!("missing field '{key}'")))
+}
+
+fn usize_field(v: &JsonValue, key: &str) -> Result<usize, ApiError> {
+    field(v, key)?
+        .as_usize()
+        .ok_or_else(|| semantic(format!("field '{key}' must be a non-negative integer")))
+}
+
+fn u64_field(v: &JsonValue, key: &str) -> Result<u64, ApiError> {
+    field(v, key)?
+        .as_u64()
+        .ok_or_else(|| semantic(format!("field '{key}' must be a u64 integer")))
+}
+
+fn str_field<'v>(v: &'v JsonValue, key: &str) -> Result<&'v str, ApiError> {
+    field(v, key)?
+        .as_str()
+        .ok_or_else(|| semantic(format!("field '{key}' must be a string")))
+}
+
+fn u64_array(v: &JsonValue, what: &str) -> Result<Vec<u64>, ApiError> {
+    let items = v
+        .as_arr()
+        .ok_or_else(|| semantic(format!("'{what}' must be an array of integers")))?;
+    items
+        .iter()
+        .map(|x| {
+            x.as_u64()
+                .ok_or_else(|| semantic(format!("'{what}' elements must be u64 integers")))
+        })
+        .collect()
+}
+
+// ---------------------------------------------------------------------------
+// BitMatrix / MmaCase / RunOutput
+// ---------------------------------------------------------------------------
+
+/// `{"rows":R,"cols":C,"fmt":"fp16","data":[...]}`
+pub fn bitmatrix_to_json(m: &BitMatrix) -> JsonValue {
+    JsonValue::Obj(vec![
+        ("rows".into(), JsonValue::usize(m.rows)),
+        ("cols".into(), JsonValue::usize(m.cols)),
+        ("fmt".into(), JsonValue::str(m.fmt.name())),
+        (
+            "data".into(),
+            JsonValue::Arr(m.data.iter().map(|&b| JsonValue::u64(b)).collect()),
+        ),
+    ])
+}
+
+/// Decode and *validate* a matrix: the element count must match the
+/// dimensions and every bit pattern must fit the format's storage width.
+pub fn bitmatrix_from_json(v: &JsonValue) -> Result<BitMatrix, ApiError> {
+    let rows = usize_field(v, "rows")?;
+    let cols = usize_field(v, "cols")?;
+    let fmt_name = str_field(v, "fmt")?;
+    let fmt = Format::parse(fmt_name)
+        .ok_or_else(|| semantic(format!("unknown format '{fmt_name}'")))?;
+    let data = u64_array(field(v, "data")?, "data")?;
+    let elems = rows
+        .checked_mul(cols)
+        .ok_or_else(|| semantic("rows * cols overflows"))?;
+    if data.len() != elems {
+        return Err(ApiError::LengthMismatch {
+            what: "BitMatrix data",
+            expected: elems,
+            got: data.len(),
+        });
+    }
+    for &bits in &data {
+        if bits & !fmt.mask() != 0 {
+            return Err(ApiError::InvalidBits { operand: "data", fmt, bits });
+        }
+    }
+    Ok(BitMatrix { rows, cols, fmt, data })
+}
+
+/// `{"a":M,"b":M,"c":M,"scales":null|[M,M]}`
+pub fn case_to_json(case: &MmaCase) -> JsonValue {
+    let scales = match &case.scales {
+        None => JsonValue::Null,
+        Some((sa, sb)) => JsonValue::Arr(vec![bitmatrix_to_json(sa), bitmatrix_to_json(sb)]),
+    };
+    JsonValue::Obj(vec![
+        ("a".into(), bitmatrix_to_json(&case.a)),
+        ("b".into(), bitmatrix_to_json(&case.b)),
+        ("c".into(), bitmatrix_to_json(&case.c)),
+        ("scales".into(), scales),
+    ])
+}
+
+pub fn case_from_json(v: &JsonValue) -> Result<MmaCase, ApiError> {
+    let a = bitmatrix_from_json(field(v, "a")?)?;
+    let b = bitmatrix_from_json(field(v, "b")?)?;
+    let c = bitmatrix_from_json(field(v, "c")?)?;
+    let scales = match v.get("scales") {
+        None | Some(JsonValue::Null) => None,
+        Some(s) => {
+            let pair = s
+                .as_arr()
+                .ok_or_else(|| semantic("'scales' must be null or [a_scales, b_scales]"))?;
+            if pair.len() != 2 {
+                return Err(semantic("'scales' must hold exactly two matrices"));
+            }
+            Some((bitmatrix_from_json(&pair[0])?, bitmatrix_from_json(&pair[1])?))
+        }
+    };
+    Ok(MmaCase { a, b, c, scales })
+}
+
+/// Encode one case as a single JSON line (no trailing newline).
+pub fn encode_case(case: &MmaCase) -> String {
+    case_to_json(case).encode()
+}
+
+pub fn decode_case(line: &str) -> Result<MmaCase, ApiError> {
+    case_from_json(&JsonValue::parse(line)?)
+}
+
+/// `{"instr":"...","d":M}`
+pub fn run_output_to_json(out: &RunOutput) -> JsonValue {
+    JsonValue::Obj(vec![
+        ("instr".into(), JsonValue::str(&out.instr)),
+        ("d".into(), bitmatrix_to_json(&out.d)),
+    ])
+}
+
+pub fn run_output_from_json(v: &JsonValue) -> Result<RunOutput, ApiError> {
+    Ok(RunOutput {
+        instr: str_field(v, "instr")?.to_string(),
+        d: bitmatrix_from_json(field(v, "d")?)?,
+    })
+}
+
+pub fn encode_run_output(out: &RunOutput) -> String {
+    run_output_to_json(out).encode()
+}
+
+pub fn decode_run_output(line: &str) -> Result<RunOutput, ApiError> {
+    run_output_from_json(&JsonValue::parse(line)?)
+}
+
+// ---------------------------------------------------------------------------
+// coordinator wire types (jobs, outcomes, campaign reports)
+// ---------------------------------------------------------------------------
+
+/// `{"id":N,"pair":"...","batch":N,"seed":N}` — `id` is optional on decode
+/// (the serve loop assigns one).
+pub fn job_to_json(job: &Job) -> JsonValue {
+    JsonValue::Obj(vec![
+        ("id".into(), JsonValue::u64(job.id)),
+        ("pair".into(), JsonValue::str(&job.pair)),
+        ("batch".into(), JsonValue::usize(job.batch)),
+        ("seed".into(), JsonValue::u64(job.seed)),
+    ])
+}
+
+pub fn job_from_json(v: &JsonValue, default_id: u64) -> Result<Job, ApiError> {
+    Ok(Job {
+        id: match v.get("id") {
+            None | Some(JsonValue::Null) => default_id,
+            Some(x) => x
+                .as_u64()
+                .ok_or_else(|| semantic("field 'id' must be a u64 integer"))?,
+        },
+        pair: str_field(v, "pair")?.to_string(),
+        batch: usize_field(v, "batch")?,
+        seed: u64_field(v, "seed")?,
+    })
+}
+
+pub fn mismatch_to_json(m: &Mismatch) -> JsonValue {
+    let ints = |xs: &[u64]| JsonValue::Arr(xs.iter().map(|&x| JsonValue::u64(x)).collect());
+    JsonValue::Obj(vec![
+        ("test_index".into(), JsonValue::usize(m.test_index)),
+        ("element".into(), JsonValue::usize(m.element)),
+        ("golden_bits".into(), JsonValue::u64(m.golden_bits)),
+        ("dut_bits".into(), JsonValue::u64(m.dut_bits)),
+        ("a".into(), ints(&m.a)),
+        ("b".into(), ints(&m.b)),
+        ("c".into(), ints(&m.c)),
+    ])
+}
+
+pub fn mismatch_from_json(v: &JsonValue) -> Result<Mismatch, ApiError> {
+    Ok(Mismatch {
+        test_index: usize_field(v, "test_index")?,
+        element: usize_field(v, "element")?,
+        golden_bits: u64_field(v, "golden_bits")?,
+        dut_bits: u64_field(v, "dut_bits")?,
+        a: u64_array(field(v, "a")?, "a")?,
+        b: u64_array(field(v, "b")?, "b")?,
+        c: u64_array(field(v, "c")?, "c")?,
+    })
+}
+
+pub fn outcome_to_json(o: &JobOutcome) -> JsonValue {
+    JsonValue::Obj(vec![
+        ("id".into(), JsonValue::u64(o.id)),
+        ("pair".into(), JsonValue::str(&o.pair)),
+        ("tests".into(), JsonValue::usize(o.tests)),
+        ("micros".into(), JsonValue::u64(o.micros)),
+        (
+            "mismatches".into(),
+            JsonValue::Arr(o.mismatches.iter().map(mismatch_to_json).collect()),
+        ),
+    ])
+}
+
+pub fn outcome_from_json(v: &JsonValue) -> Result<JobOutcome, ApiError> {
+    let mm = field(v, "mismatches")?
+        .as_arr()
+        .ok_or_else(|| semantic("'mismatches' must be an array"))?;
+    Ok(JobOutcome {
+        id: u64_field(v, "id")?,
+        pair: str_field(v, "pair")?.to_string(),
+        tests: usize_field(v, "tests")?,
+        micros: u64_field(v, "micros")?,
+        mismatches: mm.iter().map(mismatch_from_json).collect::<Result<_, _>>()?,
+    })
+}
+
+fn pair_stats_to_json(s: &PairStats) -> JsonValue {
+    JsonValue::Obj(vec![
+        ("jobs".into(), JsonValue::usize(s.jobs)),
+        ("tests".into(), JsonValue::usize(s.tests)),
+        ("mismatches".into(), JsonValue::usize(s.mismatches)),
+        ("busy_micros".into(), JsonValue::u64(s.busy_micros)),
+        (
+            "first_mismatch".into(),
+            match &s.first_mismatch {
+                None => JsonValue::Null,
+                Some(m) => mismatch_to_json(m),
+            },
+        ),
+    ])
+}
+
+fn pair_stats_from_json(v: &JsonValue) -> Result<PairStats, ApiError> {
+    Ok(PairStats {
+        jobs: usize_field(v, "jobs")?,
+        tests: usize_field(v, "tests")?,
+        mismatches: usize_field(v, "mismatches")?,
+        busy_micros: u64_field(v, "busy_micros")?,
+        first_mismatch: match v.get("first_mismatch") {
+            None | Some(JsonValue::Null) => None,
+            Some(m) => Some(mismatch_from_json(m)?),
+        },
+    })
+}
+
+pub fn report_to_json(r: &CampaignReport) -> JsonValue {
+    JsonValue::Obj(vec![
+        ("total_jobs".into(), JsonValue::usize(r.total_jobs)),
+        ("total_tests".into(), JsonValue::usize(r.total_tests)),
+        ("total_mismatches".into(), JsonValue::usize(r.total_mismatches)),
+        ("wall_micros".into(), JsonValue::u64(r.wall_micros)),
+        (
+            "pairs".into(),
+            JsonValue::Obj(
+                r.pairs
+                    .iter()
+                    .map(|(name, st)| (name.clone(), pair_stats_to_json(st)))
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+pub fn report_from_json(v: &JsonValue) -> Result<CampaignReport, ApiError> {
+    let mut report = CampaignReport {
+        total_jobs: usize_field(v, "total_jobs")?,
+        total_tests: usize_field(v, "total_tests")?,
+        total_mismatches: usize_field(v, "total_mismatches")?,
+        wall_micros: u64_field(v, "wall_micros")?,
+        pairs: Default::default(),
+    };
+    match field(v, "pairs")? {
+        JsonValue::Obj(pairs) => {
+            for (name, st) in pairs {
+                report.pairs.insert(name.clone(), pair_stats_from_json(st)?);
+            }
+        }
+        _ => return Err(semantic("'pairs' must be an object")),
+    }
+    Ok(report)
+}
+
+pub fn encode_report(r: &CampaignReport) -> String {
+    report_to_json(r).encode()
+}
+
+pub fn decode_report(line: &str) -> Result<CampaignReport, ApiError> {
+    report_from_json(&JsonValue::parse(line)?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_scalars_and_nesting() {
+        let v = JsonValue::parse(r#"{"a":[1,2.5,-3e2],"b":"x\"\n","c":null,"d":true}"#).unwrap();
+        assert_eq!(v.get("a").unwrap().as_arr().unwrap()[0].as_u64(), Some(1));
+        assert_eq!(v.get("b").unwrap().as_str(), Some("x\"\n"));
+        assert!(v.get("c").unwrap().is_null());
+        assert_eq!(v.get("d").unwrap().as_bool(), Some(true));
+    }
+
+    #[test]
+    fn u64_round_trips_beyond_2_53() {
+        let big = u64::MAX - 7;
+        let line = JsonValue::u64(big).encode();
+        assert_eq!(JsonValue::parse(&line).unwrap().as_u64(), Some(big));
+    }
+
+    #[test]
+    fn malformed_documents_error_with_offset() {
+        // the last two: a high surrogate not followed by a low surrogate
+        // must error rather than fabricate a character
+        for bad in [
+            "{",
+            "[1,]",
+            "{\"a\":}",
+            "tru",
+            "\"abc",
+            "1 2",
+            "{\"a\" 1}",
+            "\"\\ud800\\u0041\"",
+            "\"\\ud800x\"",
+        ] {
+            let e = JsonValue::parse(bad).unwrap_err();
+            assert!(matches!(e, ApiError::Json { .. }), "{bad}: {e:?}");
+        }
+    }
+
+    #[test]
+    fn string_escapes_round_trip() {
+        let s = "tab\there \"quoted\" back\\slash \u{1F600} ctrl\u{1}";
+        let line = JsonValue::str(s).encode();
+        assert_eq!(JsonValue::parse(&line).unwrap().as_str(), Some(s));
+        // escaped surrogate pairs decode to the astral character
+        let v = JsonValue::parse("\"\\ud83d\\ude00\"").unwrap();
+        assert_eq!(v.as_str(), Some("\u{1F600}"));
+    }
+
+    #[test]
+    fn bitmatrix_rejects_wrong_length_and_wide_bits() {
+        let short = r#"{"rows":2,"cols":2,"fmt":"fp16","data":[1,2,3]}"#;
+        let e = bitmatrix_from_json(&JsonValue::parse(short).unwrap()).unwrap_err();
+        assert!(matches!(e, ApiError::LengthMismatch { expected: 4, got: 3, .. }), "{e:?}");
+
+        let wide = r#"{"rows":1,"cols":1,"fmt":"fp16","data":[65536]}"#;
+        let e = bitmatrix_from_json(&JsonValue::parse(wide).unwrap()).unwrap_err();
+        assert!(matches!(e, ApiError::InvalidBits { bits: 65536, .. }), "{e:?}");
+
+        let fmt = r#"{"rows":1,"cols":1,"fmt":"fp13","data":[0]}"#;
+        let e = bitmatrix_from_json(&JsonValue::parse(fmt).unwrap()).unwrap_err();
+        assert!(matches!(e, ApiError::Json { .. }), "{e:?}");
+    }
+
+    #[test]
+    fn case_round_trip_with_scales() {
+        let mk = |fmt, rows, cols, seed: u64| {
+            let mut m = BitMatrix::zeros(rows, cols, fmt);
+            for (i, v) in m.data.iter_mut().enumerate() {
+                *v = (seed.wrapping_mul(31).wrapping_add(i as u64)) & fmt.mask();
+            }
+            m
+        };
+        let mut case = MmaCase::new(
+            mk(Format::Fp4E2M1, 2, 4, 1),
+            mk(Format::Fp4E2M1, 4, 2, 2),
+            mk(Format::Fp32, 2, 2, 3),
+        );
+        case.scales = Some((mk(Format::E8M0, 2, 1, 4), mk(Format::E8M0, 1, 2, 5)));
+        let decoded = decode_case(&encode_case(&case)).unwrap();
+        assert_eq!(decoded, case);
+
+        case.scales = None;
+        let decoded = decode_case(&encode_case(&case)).unwrap();
+        assert_eq!(decoded, case);
+    }
+
+    #[test]
+    fn outcome_and_report_round_trip() {
+        let outcome = JobOutcome {
+            id: 9,
+            pair: "sm90 HGMMA".into(),
+            tests: 100,
+            micros: 1234,
+            mismatches: vec![Mismatch {
+                test_index: 3,
+                element: 7,
+                golden_bits: 0xDEAD,
+                dut_bits: 0xBEEF,
+                a: vec![1, 2],
+                b: vec![3],
+                c: vec![4],
+            }],
+        };
+        let v = JsonValue::parse(&outcome_to_json(&outcome).encode()).unwrap();
+        assert_eq!(outcome_from_json(&v).unwrap(), outcome);
+
+        let mut report = CampaignReport::new();
+        report.absorb(&outcome);
+        report.wall_micros = 777;
+        let decoded = decode_report(&encode_report(&report)).unwrap();
+        assert_eq!(decoded, report);
+    }
+
+    #[test]
+    fn job_decode_defaults_id() {
+        let v = JsonValue::parse(r#"{"pair":"x","batch":10,"seed":42}"#).unwrap();
+        let job = job_from_json(&v, 5).unwrap();
+        assert_eq!((job.id, job.batch, job.seed), (5, 10, 42));
+        assert!(job_from_json(&JsonValue::parse(r#"{"batch":1}"#).unwrap(), 0).is_err());
+    }
+}

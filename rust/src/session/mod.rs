@@ -1,0 +1,823 @@
+//! The `Session` facade: one typed, fallible, serializable front door.
+//!
+//! Everything the crate can do with an instruction — run a single MMA, a
+//! batch, a tiled GEMM, a CLFP probe loop, or a verification campaign —
+//! is reachable from a [`Session`], built by [`SessionBuilder`]. The
+//! builder owns instruction resolution (architecture + name fragment with
+//! ambiguity detection), format/rounding/thread-count overrides, and LUT
+//! warm-up; the session owns scratch reuse and validates *every* input
+//! against the instruction's shape/format spec, rejecting malformed
+//! operands with a structured [`ApiError`] instead of panicking.
+//!
+//! Five-line quickstart:
+//!
+//! ```
+//! use mma_sim::SessionBuilder;
+//! let s = SessionBuilder::new().arch_named("hopper").instruction("HGMMA.64x8x16.F32.F16").build()?;
+//! let out = s.run(&s.random_case(42))?;
+//! assert_eq!((out.d.rows, out.d.cols), (64, 8));
+//! # Ok::<(), mma_sim::session::ApiError>(())
+//! ```
+//!
+//! Cases and results serialize as single JSON lines ([`json`]) — the seam
+//! for sharding validation campaigns across processes: a parent splits a
+//! case stream over `mma-sim simulate --stdin` children and merges the
+//! [`RunOutput`] lines back, or drives `mma-sim serve --jsonl` workers
+//! with verification jobs and aggregates their [`CampaignReport`]s.
+
+pub mod json;
+pub mod serve;
+
+pub use crate::error::ApiError;
+pub use serve::{serve_jsonl, ServeConfig};
+
+use std::sync::{Arc, Mutex};
+
+use crate::analysis::{bias, discrepancy, error_bounds, risky, tables};
+use crate::clfp::{self, ClfpConfig, Inference};
+use crate::coordinator::{CampaignReport, Coordinator, VerifyPair};
+use crate::formats::{Format, Rho};
+use crate::gemm::TiledGemm;
+use crate::interface::{
+    parallel_execute_batch, parallel_execute_batch_with, BitMatrix, MmaCase, MmaFormats,
+    MmaInterface,
+};
+use crate::isa::{self, Arch, Instruction};
+use crate::models::{DpaScratch, MmaModel, ModelSpec};
+use crate::util::Rng;
+
+/// Result of one validated MMA execution — the unit that crosses process
+/// boundaries as a JSON line (see [`json::encode_run_output`]).
+#[derive(Clone, Debug, PartialEq)]
+pub struct RunOutput {
+    /// Name of the interface that produced `d`.
+    pub instr: String,
+    /// The `D = A×B + C` output bits.
+    pub d: BitMatrix,
+}
+
+/// One randomized simulation with its FP64 reference (for reporting).
+#[derive(Clone, Debug)]
+pub struct Simulation {
+    pub case: MmaCase,
+    pub output: RunOutput,
+    /// Row-major FP64 reference value per output element (block scales
+    /// applied when the instruction takes them).
+    pub fp64: Vec<f64>,
+}
+
+/// Knobs for a verification campaign (one-shot or JSON-lines serve mode).
+#[derive(Clone, Copy, Debug)]
+pub struct CampaignConfig {
+    pub workers: usize,
+    pub jobs: usize,
+    pub batch: usize,
+    pub seed: u64,
+}
+
+impl Default for CampaignConfig {
+    fn default() -> Self {
+        Self { workers: 4, jobs: 16, batch: 100, seed: 0x5EED }
+    }
+}
+
+/// Builder for [`Session`]: pick an instruction (or bring a model), apply
+/// overrides, and `build()` with every inconsistency reported as an
+/// [`ApiError`].
+#[derive(Clone, Debug, Default)]
+pub struct SessionBuilder {
+    arch: Option<Arch>,
+    arch_name: Option<String>,
+    fragment: Option<String>,
+    model: Option<MmaModel>,
+    threads: usize,
+    c_format: Option<Format>,
+    d_format: Option<Format>,
+    rho: Option<Rho>,
+}
+
+impl SessionBuilder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Target architecture (typed).
+    pub fn arch(mut self, arch: Arch) -> Self {
+        self.arch = Some(arch);
+        self.arch_name = None;
+        self
+    }
+
+    /// Target architecture by name (`"hopper"`, `"sm90"`, `"gfx942"`, …);
+    /// an unknown name is reported at `build()` time.
+    pub fn arch_named(mut self, name: impl Into<String>) -> Self {
+        self.arch_name = Some(name.into());
+        self.arch = None;
+        self
+    }
+
+    /// Case-insensitive instruction-name fragment, resolved against the
+    /// registry with ambiguity detection (see [`isa::resolve`]).
+    pub fn instruction(mut self, fragment: impl Into<String>) -> Self {
+        self.fragment = Some(fragment.into());
+        self
+    }
+
+    /// Bring a custom model instead of a registry instruction.
+    pub fn model(mut self, model: MmaModel) -> Self {
+        self.model = Some(model);
+        self
+    }
+
+    /// Worker-thread count for batch/GEMM paths (`0` = automatic).
+    pub fn threads(mut self, threads: usize) -> Self {
+        self.threads = threads;
+        self
+    }
+
+    /// Override the accumulator (C) storage format.
+    pub fn c_format(mut self, fmt: Format) -> Self {
+        self.c_format = Some(fmt);
+        self
+    }
+
+    /// Override the output (D) storage format. Must stay consistent with
+    /// the model's conversion function ρ (checked at `build()`).
+    pub fn d_format(mut self, fmt: Format) -> Self {
+        self.d_format = Some(fmt);
+        self
+    }
+
+    /// Override the conversion function ρ of a T/ST/GST-FDPA model.
+    pub fn rounding(mut self, rho: Rho) -> Self {
+        self.rho = Some(rho);
+        self
+    }
+
+    /// Resolve, validate, warm the LUTs, and construct the [`Session`].
+    pub fn build(self) -> Result<Session, ApiError> {
+        let (instr, base) = match self.model {
+            Some(model) => (None, model),
+            None => {
+                let arch = match (self.arch, &self.arch_name) {
+                    (Some(a), _) => a,
+                    (None, Some(name)) => Arch::parse(name)
+                        .ok_or_else(|| ApiError::UnknownArch { name: name.clone() })?,
+                    (None, None) => {
+                        return Err(ApiError::Unsupported {
+                            what: "session build",
+                            detail: "select an architecture (arch/arch_named) or supply a model"
+                                .into(),
+                        })
+                    }
+                };
+                let instr = isa::resolve(arch, self.fragment.as_deref().unwrap_or(""))?;
+                let model = instr.model();
+                (Some(instr), model)
+            }
+        };
+
+        let mut spec = base.spec;
+        if let Some(rho) = self.rho {
+            match &mut spec {
+                ModelSpec::TFdpa { rho: r, .. }
+                | ModelSpec::StFdpa { rho: r, .. }
+                | ModelSpec::GstFdpa { rho: r, .. } => *r = rho,
+                other => {
+                    return Err(ApiError::Unsupported {
+                        what: "rounding override",
+                        detail: format!(
+                            "{} has no conversion function ρ to override",
+                            other.symbol()
+                        ),
+                    })
+                }
+            }
+        }
+
+        let mut formats = base.formats;
+        if let Some(c) = self.c_format {
+            formats.c = c;
+        }
+        if let Some(d) = self.d_format {
+            formats.d = d;
+        }
+
+        // The output storage format must agree with what the model family
+        // actually emits, or the D bits would be mislabeled.
+        let required_d = match spec {
+            ModelSpec::TFdpa { rho, .. }
+            | ModelSpec::StFdpa { rho, .. }
+            | ModelSpec::GstFdpa { rho, .. } => Some(rho.output_format()),
+            ModelSpec::EFdpa { .. }
+            | ModelSpec::FtzAddMul { .. }
+            | ModelSpec::TrFdpa { .. }
+            | ModelSpec::GtrFdpa { .. } => Some(Format::Fp32),
+            ModelSpec::FmaChain => Some(formats.a),
+        };
+        if let Some(want) = required_d {
+            if formats.d != want {
+                return Err(ApiError::Unsupported {
+                    what: "format override",
+                    detail: format!(
+                        "{} emits {} outputs, but D was set to {}",
+                        spec.symbol(),
+                        want.name(),
+                        formats.d.name()
+                    ),
+                });
+            }
+        }
+
+        // MmaModel::new warms the narrow-format LUTs for all operand
+        // formats (and the scale format for ST/GST specs).
+        let model = MmaModel::new(base.name.clone(), (base.m, base.n, base.k), formats, spec);
+        Ok(Session {
+            instr,
+            model,
+            threads: self.threads,
+            scratch: Mutex::new(DpaScratch::default()),
+        })
+    }
+}
+
+/// A validated, scratch-reusing handle on one instruction (or custom
+/// model). See the [module docs](self) for the quickstart.
+pub struct Session {
+    instr: Option<Instruction>,
+    model: MmaModel,
+    /// Worker threads for batch/GEMM paths; 0 = automatic.
+    threads: usize,
+    /// Reused gather buffers for the single-case `run` path.
+    scratch: Mutex<DpaScratch>,
+}
+
+impl Session {
+    pub fn builder() -> SessionBuilder {
+        SessionBuilder::new()
+    }
+
+    /// Wrap an existing model (no registry resolution). Used by CLFP step 4
+    /// to run candidate models through the validated batch path.
+    pub fn from_model(model: MmaModel) -> Session {
+        Session { instr: None, model, threads: 0, scratch: Mutex::new(DpaScratch::default()) }
+    }
+
+    /// The resolved registry instruction, if the session was built from one.
+    pub fn instruction(&self) -> Option<&Instruction> {
+        self.instr.as_ref()
+    }
+
+    /// The underlying golden model.
+    pub fn model(&self) -> &MmaModel {
+        &self.model
+    }
+
+    pub fn shape(&self) -> (usize, usize, usize) {
+        self.model.shape()
+    }
+
+    pub fn formats(&self) -> MmaFormats {
+        self.model.formats
+    }
+
+    pub fn name(&self) -> String {
+        self.model.name.clone()
+    }
+
+    // -- validation ---------------------------------------------------------
+
+    fn check_matrix(
+        &self,
+        operand: &'static str,
+        m: &BitMatrix,
+        rows: usize,
+        cols: usize,
+        fmt: Format,
+    ) -> Result<(), ApiError> {
+        if (m.rows, m.cols) != (rows, cols) {
+            return Err(ApiError::ShapeMismatch {
+                operand,
+                expected: (rows, cols),
+                got: (m.rows, m.cols),
+            });
+        }
+        if m.fmt != fmt {
+            return Err(ApiError::FormatMismatch { operand, expected: fmt, got: m.fmt });
+        }
+        Ok(())
+    }
+
+    /// Validate one case against the instruction's shape/format/scale spec.
+    pub fn validate_case(&self, case: &MmaCase) -> Result<(), ApiError> {
+        let (m, n, k) = self.model.shape();
+        let fmts = self.model.formats;
+        self.check_matrix("A", &case.a, m, k, fmts.a)?;
+        self.check_matrix("B", &case.b, k, n, fmts.b)?;
+        self.check_matrix("C", &case.c, m, n, fmts.c)?;
+        match (self.model.scale_spec(), &case.scales) {
+            (None, None) => {}
+            (None, Some(_)) => {
+                return Err(ApiError::ScaleSpecMissing { instr: self.model.name.clone() })
+            }
+            (Some(_), None) => {
+                return Err(ApiError::MissingScales { instr: self.model.name.clone() })
+            }
+            (Some(spec), Some((sa, sb))) => {
+                let nblk = self.model.scale_blocks();
+                self.check_matrix("A scales", sa, m, nblk, spec.fmt)?;
+                self.check_matrix("B scales", sb, nblk, n, spec.fmt)?;
+            }
+        }
+        Ok(())
+    }
+
+    // -- execution ----------------------------------------------------------
+
+    /// Execute one validated MMA, reusing the session's scratch buffers.
+    pub fn run(&self, case: &MmaCase) -> Result<RunOutput, ApiError> {
+        self.validate_case(case)?;
+        let (m, n, _) = self.model.shape();
+        let mut d = BitMatrix::zeros(m, n, self.model.formats.d);
+        {
+            let mut scratch = self.scratch.lock().unwrap_or_else(|p| p.into_inner());
+            self.model.execute_into(&case.a, &case.b, &case.c, case.scales(), &mut d, &mut scratch);
+        }
+        Ok(RunOutput { instr: self.model.name.clone(), d })
+    }
+
+    /// Execute a batch of validated cases across worker threads (the
+    /// session's thread override, or automatic sizing). Output order and
+    /// bits are identical to running the cases serially.
+    pub fn run_batch(&self, cases: &[MmaCase]) -> Result<Vec<BitMatrix>, ApiError> {
+        for case in cases {
+            self.validate_case(case)?;
+        }
+        let threads = self.effective_threads(cases.len());
+        Ok(parallel_execute_batch_with(&self.model, cases, threads))
+    }
+
+    fn effective_threads(&self, units: usize) -> usize {
+        if self.threads > 0 {
+            self.threads
+        } else {
+            let (m, n, k) = self.model.shape();
+            crate::interface::auto_threads(units, m * n * k)
+        }
+    }
+
+    /// Arbitrary-shape GEMM through the tiled executor, with the shape and
+    /// formats validated against the tile instruction first.
+    pub fn gemm(
+        &self,
+        a: &BitMatrix,
+        b: &BitMatrix,
+        c: &BitMatrix,
+    ) -> Result<BitMatrix, ApiError> {
+        if self.model.scale_spec().is_some() {
+            return Err(ApiError::Unsupported {
+                what: "gemm",
+                detail: format!(
+                    "'{}' takes block-scale operands; the tiled GEMM path supports \
+                     unscaled instructions only",
+                    self.model.name
+                ),
+            });
+        }
+        let (tm, tn, tk) = self.model.shape();
+        let fmts = self.model.formats;
+        for (operand, mat, fmt) in [("A", a, fmts.a), ("B", b, fmts.b), ("C", c, fmts.c)] {
+            if mat.fmt != fmt {
+                return Err(ApiError::FormatMismatch { operand, expected: fmt, got: mat.fmt });
+            }
+        }
+        if a.rows % tm != 0 || a.cols % tk != 0 {
+            return Err(ApiError::ShapeMismatch {
+                operand: "A (must tile by the instruction's MxK)",
+                expected: (tm, tk),
+                got: (a.rows, a.cols),
+            });
+        }
+        if b.rows != a.cols || b.cols % tn != 0 {
+            return Err(ApiError::ShapeMismatch {
+                operand: "B (rows must equal A cols; cols must tile by N)",
+                expected: (a.cols, tn),
+                got: (b.rows, b.cols),
+            });
+        }
+        if (c.rows, c.cols) != (a.rows, b.cols) {
+            return Err(ApiError::ShapeMismatch {
+                operand: "C",
+                expected: (a.rows, b.cols),
+                got: (c.rows, c.cols),
+            });
+        }
+        let gemm = TiledGemm::from_model(self.model.clone());
+        let bands = a.rows / tm;
+        let threads = if self.threads > 0 {
+            self.threads
+        } else {
+            crate::interface::auto_threads(bands, tm * b.cols * a.cols)
+        };
+        Ok(gemm.execute_with_threads(a, b, c, threads))
+    }
+
+    /// One validated dot-product probe: the `(0,0)` output for
+    /// `a_row`/`b_col`/`c00` with everything else zero.
+    pub fn probe(&self, a_row: &[u64], b_col: &[u64], c00: u64) -> Result<u64, ApiError> {
+        let (_, _, k) = self.model.shape();
+        let fmts = self.model.formats;
+        if a_row.len() != k {
+            return Err(ApiError::LengthMismatch { what: "probe A row", expected: k, got: a_row.len() });
+        }
+        if b_col.len() != k {
+            return Err(ApiError::LengthMismatch { what: "probe B column", expected: k, got: b_col.len() });
+        }
+        for (operand, bits, fmt) in a_row
+            .iter()
+            .map(|&b| ("probe A row", b, fmts.a))
+            .chain(b_col.iter().map(|&b| ("probe B column", b, fmts.b)))
+            .chain(std::iter::once(("probe accumulator", c00, fmts.c)))
+        {
+            if bits & !fmt.mask() != 0 {
+                return Err(ApiError::InvalidBits { operand, fmt, bits });
+            }
+        }
+        Ok(self.model.probe(a_row, b_col, c00))
+    }
+
+    /// Run the CLFP closed loop against this session's model (the
+    /// "known-silicon" probe; use [`infer_interface`] for black boxes).
+    pub fn infer(&self, cfg: ClfpConfig) -> Inference {
+        clfp::infer(&self.model, cfg)
+    }
+
+    // -- input generation ---------------------------------------------------
+
+    /// Unit (×1.0) scale operands for a block-scaled instruction.
+    pub fn unit_scales(&self) -> Option<(BitMatrix, BitMatrix)> {
+        let spec = self.model.scale_spec()?;
+        let (m, n, _) = self.model.shape();
+        let nblk = self.model.scale_blocks();
+        let unit = crate::models::unit_scale(spec.fmt);
+        Some((
+            BitMatrix { rows: m, cols: nblk, fmt: spec.fmt, data: vec![unit; m * nblk] },
+            BitMatrix { rows: nblk, cols: n, fmt: spec.fmt, data: vec![unit; nblk * n] },
+        ))
+    }
+
+    /// A seeded random case matching the instruction's signature (unit
+    /// scales attached when the instruction takes block scales).
+    pub fn random_case(&self, seed: u64) -> MmaCase {
+        let mut rng = Rng::new(seed);
+        self.random_case_with(&mut rng, 0)
+    }
+
+    /// [`random_case`](Session::random_case) drawing from a caller-owned
+    /// RNG stream; `t` selects the paper's input class (`t % 3`).
+    pub fn random_case_with(&self, rng: &mut Rng, t: usize) -> MmaCase {
+        let (a, b, c) = clfp::random_inputs(rng, &self.model, t);
+        let mut case = MmaCase::new(a, b, c);
+        case.scales = self.unit_scales();
+        case
+    }
+
+    /// Run one seeded random case and pair it with the FP64 reference.
+    pub fn simulate(&self, seed: u64) -> Result<Simulation, ApiError> {
+        let case = self.random_case(seed);
+        let output = self.run(&case)?;
+        let fp64 = self.fp64_reference(&case);
+        Ok(Simulation { case, output, fp64 })
+    }
+
+    /// Row-major FP64 reference for a case (block scales applied).
+    pub fn fp64_reference(&self, case: &MmaCase) -> Vec<f64> {
+        let (m, n, k) = self.model.shape();
+        let fmts = self.model.formats;
+        let kblock = self.model.scale_spec().map(|s| s.kblock);
+        let mut out = Vec::with_capacity(m * n);
+        for i in 0..m {
+            for j in 0..n {
+                let mut acc = fmts.c.to_f64(case.c.get(i, j));
+                for kk in 0..k {
+                    let mut term =
+                        fmts.a.to_f64(case.a.get(i, kk)) * fmts.b.to_f64(case.b.get(kk, j));
+                    if let (Some(kb), Some((sa, sb))) = (kblock, &case.scales) {
+                        let blk = kk / kb;
+                        term *= sa.fmt.to_f64(sa.get(i, blk)) * sb.fmt.to_f64(sb.get(blk, j));
+                    }
+                    acc += term;
+                }
+                out.push(acc);
+            }
+        }
+        out
+    }
+
+    // -- verification -------------------------------------------------------
+
+    /// A self-verification pair (two fresh instances of the golden model)
+    /// for campaign plumbing.
+    pub fn verify_pair(&self) -> VerifyPair {
+        VerifyPair {
+            name: self.model.name.clone(),
+            dut: Arc::new(self.model.clone()),
+            golden: Arc::new(self.model.clone()),
+        }
+    }
+
+    /// Run a one-shot verification campaign of this instruction against a
+    /// device under test.
+    pub fn campaign(
+        &self,
+        dut: Arc<dyn MmaInterface>,
+        cfg: &CampaignConfig,
+    ) -> CampaignReport {
+        let pair = VerifyPair {
+            name: self.model.name.clone(),
+            dut,
+            golden: Arc::new(self.model.clone()),
+        };
+        campaign(vec![pair], cfg)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// registry-wide facade (the CLI's entry points)
+// ---------------------------------------------------------------------------
+
+/// The full instruction registry (both vendors).
+pub fn instructions() -> Vec<Instruction> {
+    isa::registry()
+}
+
+/// CLFP inference on an arbitrary black-box interface (PJRT artifact,
+/// mystery model, remote device).
+pub fn infer_interface(iface: &dyn MmaInterface, cfg: ClfpConfig) -> Inference {
+    clfp::infer(iface, cfg)
+}
+
+/// Self-verification pairs over the registry (DUT = golden), skipping
+/// instructions with more than `max_tile_elems` output elements to keep
+/// demo campaigns snappy (0 = no limit).
+pub fn registry_pairs(max_tile_elems: usize) -> Vec<VerifyPair> {
+    isa::registry()
+        .into_iter()
+        .filter(|i| max_tile_elems == 0 || i.m * i.n <= max_tile_elems)
+        .map(|i| VerifyPair {
+            name: format!("{} {}", i.arch.target(), i.name),
+            dut: Arc::new(i.model()),
+            golden: Arc::new(i.model()),
+        })
+        .collect()
+}
+
+/// Run a one-shot campaign over verification pairs and aggregate the report.
+pub fn campaign(pairs: Vec<VerifyPair>, cfg: &CampaignConfig) -> CampaignReport {
+    let coord = Coordinator::new(pairs, cfg.workers, cfg.workers.max(1) * 2);
+    let report = coord.run_campaign(cfg.jobs, cfg.batch, cfg.seed);
+    coord.shutdown();
+    report
+}
+
+/// One artifact's cross-validation result.
+#[derive(Clone, Debug)]
+pub struct ArtifactValidation {
+    pub name: String,
+    pub tests: usize,
+    /// Cases whose output bits diverged from the golden model.
+    pub mismatches: usize,
+}
+
+/// Aggregate of [`validate_artifacts`].
+#[derive(Clone, Debug)]
+pub struct ValidationSummary {
+    pub platform: String,
+    pub rows: Vec<ArtifactValidation>,
+    pub total_tests: usize,
+    pub total_mismatches: usize,
+}
+
+/// Cross-validate every PJRT MMA artifact against its golden Rust model
+/// with `tests` randomized cases each, streamed through the batch engine.
+///
+/// Errors (boxed, not [`ApiError`]) cover the environmental failures:
+/// missing artifacts directory, a build without the `pjrt` feature, or a
+/// malformed manifest.
+pub fn validate_artifacts(tests: usize) -> crate::util::error::Result<ValidationSummary> {
+    let dir = crate::runtime::artifacts_dir();
+    let rt = crate::runtime::Runtime::new(&dir)?;
+    let mut rng = Rng::new(0xBEEF);
+    let mut summary = ValidationSummary {
+        platform: rt.platform(),
+        rows: Vec::new(),
+        total_tests: 0,
+        total_mismatches: 0,
+    };
+    for meta in crate::runtime::read_manifest(&dir)? {
+        if meta.kind != "tfdpa" && meta.kind != "ftz" {
+            continue;
+        }
+        let pjrt = rt.load_mma(&meta)?;
+        let model = crate::runtime::model_for_artifact(&meta)?;
+        let cases = clfp::random_case_batch(&mut rng, &model, tests, 0);
+        let want = parallel_execute_batch(&model, &cases);
+        let got = pjrt.execute_batch(&cases);
+        let mismatches = want
+            .iter()
+            .zip(got.iter())
+            .filter(|(w, g)| w.data != g.data)
+            .count();
+        summary.total_tests += tests;
+        summary.total_mismatches += mismatches;
+        summary.rows.push(ArtifactValidation { name: meta.name, tests, mismatches });
+    }
+    Ok(summary)
+}
+
+/// Render one of the paper's tables (1–10).
+pub fn render_table(n: u32, samples: usize) -> Result<String, ApiError> {
+    Ok(match n {
+        1 => tables::render_table1(),
+        2 => tables::render_table2(),
+        3 => tables::render_table3(),
+        4 => tables::render_table4(),
+        5 => tables::render_table5(),
+        6 => tables::render_table6(),
+        7 => tables::render_table7(),
+        8 => discrepancy::render_table8(),
+        9 => error_bounds::render_table9(samples),
+        10 => risky::render_table10(),
+        _ => {
+            return Err(ApiError::Unsupported {
+                what: "table",
+                detail: format!("tables are numbered 1..10, got {n}"),
+            })
+        }
+    })
+}
+
+/// Render the paper's Figure 2 exemplars (summation-tree signatures).
+pub fn render_figure2() -> String {
+    let cases = [
+        (Arch::Cdna1, "16x16x4_f32", "Figure 2(a) chain of binary summation"),
+        (Arch::Cdna2, "32x32x8_bf16_1k", "Figure 2(b) pairwise summation"),
+        (Arch::Cdna1, "32x32x4_bf16", "Figure 2(c) non-swamped fused"),
+        (Arch::Volta, "HMMA.884.F32", "Figure 2(d) swamped 5-term fused"),
+    ];
+    let mut out = String::new();
+    for (arch, frag, caption) in cases {
+        let Ok(instr) = isa::resolve(arch, frag) else {
+            continue;
+        };
+        let model = instr.model();
+        let sig = clfp::tree_signature(&model);
+        out.push_str(&format!("{caption}: {} {}\n", arch.target(), instr.name));
+        out.push_str(&sig.render());
+    }
+    out
+}
+
+/// Render the paper's Figure 3 (rounding-bias experiment).
+pub fn render_figure3(mmas: usize, seed: u64) -> String {
+    let r = bias::bias_experiment(mmas, seed);
+    bias::render(&r)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::Rho;
+
+    fn hopper() -> Session {
+        SessionBuilder::new()
+            .arch(Arch::Hopper)
+            .instruction("HGMMA.64x8x16.F32.F16")
+            .build()
+            .unwrap()
+    }
+
+    #[test]
+    fn build_resolves_and_runs_bit_identically_to_raw_model() {
+        let s = hopper();
+        let instr = s.instruction().unwrap().clone();
+        let case = s.random_case(7);
+        let got = s.run(&case).unwrap();
+        let want = instr.model().execute(&case.a, &case.b, &case.c, None);
+        assert_eq!(got.d.data, want.data);
+        // batch path agrees with the single-run path
+        let cases = vec![case.clone(), s.random_case(8)];
+        let batch = s.run_batch(&cases).unwrap();
+        assert_eq!(batch[0].data, got.d.data);
+    }
+
+    #[test]
+    fn scratch_reuse_across_runs_is_invisible() {
+        let s = hopper();
+        for seed in 0..4 {
+            let case = s.random_case(seed);
+            let a = s.run(&case).unwrap();
+            let b = s.run(&case).unwrap();
+            assert_eq!(a, b);
+        }
+    }
+
+    #[test]
+    fn threads_override_is_bit_identical() {
+        let auto = hopper();
+        let pinned = SessionBuilder::new()
+            .arch(Arch::Hopper)
+            .instruction("HGMMA.64x8x16.F32.F16")
+            .threads(3)
+            .build()
+            .unwrap();
+        let cases: Vec<MmaCase> = (0..9).map(|i| auto.random_case(i)).collect();
+        assert_eq!(auto.run_batch(&cases).unwrap(), pinned.run_batch(&cases).unwrap());
+    }
+
+    #[test]
+    fn rounding_override_changes_rho() {
+        let s = SessionBuilder::new()
+            .arch(Arch::Hopper)
+            .instruction("HGMMA.64x8x16.F16.F16")
+            .rounding(Rho::RneFp16)
+            .build()
+            .unwrap();
+        assert!(matches!(s.model().spec, ModelSpec::TFdpa { rho: Rho::RneFp16, .. }));
+    }
+
+    #[test]
+    fn inconsistent_d_override_is_rejected() {
+        let err = SessionBuilder::new()
+            .arch(Arch::Hopper)
+            .instruction("HGMMA.64x8x16.F32.F16")
+            .d_format(Format::Fp16)
+            .build()
+            .unwrap_err();
+        assert!(matches!(err, ApiError::Unsupported { what: "format override", .. }), "{err}");
+    }
+
+    #[test]
+    fn simulate_reports_fp64_reference() {
+        let s = hopper();
+        let sim = s.simulate(3).unwrap();
+        let (m, n, _) = s.shape();
+        assert_eq!(sim.fp64.len(), m * n);
+        assert_eq!(sim.output.d.rows, m);
+    }
+
+    #[test]
+    fn scaled_instruction_round_trips_through_run() {
+        let s = SessionBuilder::new()
+            .arch(Arch::Blackwell)
+            .instruction("UTCQMMA.SF.64x8x64.F32.NVF4")
+            .build()
+            .unwrap();
+        let case = s.random_case(11);
+        assert!(case.scales.is_some(), "scaled instruction gets unit scales");
+        let out = s.run(&case).unwrap();
+        let want = s.model().execute(&case.a, &case.b, &case.c, case.scales());
+        assert_eq!(out.d.data, want.data);
+    }
+
+    #[test]
+    fn gemm_matches_tiled_executor() {
+        let s = SessionBuilder::new()
+            .arch(Arch::Turing)
+            .instruction("HMMA.1688.F32.F16")
+            .build()
+            .unwrap();
+        let instr = s.instruction().unwrap().clone();
+        let fmts = s.formats();
+        let mut rng = Rng::new(5);
+        let (m, n, k) = (32, 16, 16);
+        let mut a = BitMatrix::zeros(m, k, fmts.a);
+        let mut b = BitMatrix::zeros(k, n, fmts.b);
+        let mut c = BitMatrix::zeros(m, n, fmts.c);
+        for v in a.data.iter_mut() {
+            *v = fmts.a.from_f64(rng.normal());
+        }
+        for v in b.data.iter_mut() {
+            *v = fmts.b.from_f64(rng.normal());
+        }
+        for v in c.data.iter_mut() {
+            *v = fmts.c.from_f64(rng.normal());
+        }
+        let got = s.gemm(&a, &b, &c).unwrap();
+        let want = TiledGemm::new(&instr).execute(&a, &b, &c);
+        assert_eq!(got.data, want.data);
+    }
+
+    #[test]
+    fn campaign_self_verifies_clean() {
+        let s = SessionBuilder::new()
+            .arch(Arch::Volta)
+            .instruction("HMMA.884.F32.F16")
+            .build()
+            .unwrap();
+        let cfg = CampaignConfig { workers: 2, jobs: 3, batch: 20, seed: 9 };
+        let report = s.campaign(Arc::new(s.model().clone()), &cfg);
+        assert_eq!(report.total_tests, 60);
+        assert_eq!(report.total_mismatches, 0);
+    }
+}

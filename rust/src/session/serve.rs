@@ -1,0 +1,223 @@
+//! JSON-lines service mode: a long-running verification loop.
+//!
+//! [`serve_jsonl`] turns the coordinator into a service: it reads one
+//! *job* per input line, streams the jobs through the worker pool, and
+//! emits one *report* per line as outcomes arrive — live mismatch
+//! reporting instead of a one-shot campaign. On end of input it drains
+//! the pool and emits a final summary line with the aggregated
+//! [`CampaignReport`].
+//!
+//! Wire protocol (one JSON object per line):
+//!
+//! - request: `{"pair": "<name>", "batch": <n>, "seed": <u64>, "id": <u64>?}`
+//! - reply:   `{"ok": true, "outcome": {...}}` — one per completed job,
+//!   with the first mismatching triples inlined (see
+//!   [`json::outcome_to_json`](crate::session::json::outcome_to_json));
+//! - error:   `{"ok": false, "error": "<message>"}` for a malformed line
+//!   or unknown pair (the loop keeps serving);
+//! - summary: `{"summary": {...}}` once, after end of input.
+//!
+//! This is the cross-process sharding seam: a parent process spawns one
+//! `mma-sim serve --jsonl` child per shard, partitions jobs over their
+//! stdins, and merges the summary lines with
+//! [`json::decode_report`](crate::session::json::decode_report).
+
+use std::collections::BTreeSet;
+use std::io::{BufRead, Write};
+
+use crate::coordinator::{CampaignReport, Coordinator, JobOutcome, VerifyPair};
+use crate::session::json::{self, JsonValue};
+use crate::util::error::Result;
+
+/// Pool sizing for the serve loop.
+#[derive(Clone, Copy, Debug)]
+pub struct ServeConfig {
+    pub workers: usize,
+    /// Submission-queue depth (backpressure bound); 0 = `workers * 2`.
+    pub queue_depth: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        Self { workers: 4, queue_depth: 0 }
+    }
+}
+
+fn emit_outcome(out: &mut dyn Write, report: &mut CampaignReport, o: &JobOutcome) -> Result<()> {
+    report.absorb(o);
+    let line = JsonValue::Obj(vec![
+        ("ok".into(), JsonValue::Bool(true)),
+        ("outcome".into(), json::outcome_to_json(o)),
+    ]);
+    writeln!(out, "{}", line.encode())?;
+    out.flush()?;
+    Ok(())
+}
+
+fn emit_error(out: &mut dyn Write, msg: &str) -> Result<()> {
+    let line = JsonValue::Obj(vec![
+        ("ok".into(), JsonValue::Bool(false)),
+        ("error".into(), JsonValue::str(msg)),
+    ]);
+    writeln!(out, "{}", line.encode())?;
+    out.flush()?;
+    Ok(())
+}
+
+/// Run the JSON-lines verification service over `pairs` until `input` is
+/// exhausted, writing replies to `out`. Returns the aggregated report
+/// (also emitted as the final `{"summary": ...}` line).
+pub fn serve_jsonl(
+    pairs: Vec<VerifyPair>,
+    cfg: &ServeConfig,
+    input: impl BufRead,
+    out: &mut dyn Write,
+) -> Result<CampaignReport> {
+    let workers = cfg.workers.max(1);
+    let queue = if cfg.queue_depth > 0 { cfg.queue_depth } else { workers * 2 };
+    let known: BTreeSet<String> = pairs.iter().map(|p| p.name.clone()).collect();
+    let coord = Coordinator::new(pairs, workers, queue);
+
+    let started = std::time::Instant::now();
+    let mut report = CampaignReport::new();
+    let mut submitted = 0usize;
+    let mut collected = 0usize;
+    let mut next_id = 0u64;
+    // Never let more jobs than the pool can absorb sit in flight, so a
+    // blocking `submit` cannot deadlock against a full outcome channel.
+    let in_flight_cap = workers * 2;
+
+    for line in input.lines() {
+        let line = line?;
+        let trimmed = line.trim();
+        if trimmed.is_empty() {
+            continue;
+        }
+        let job = JsonValue::parse(trimmed)
+            .and_then(|v| json::job_from_json(&v, next_id));
+        let job = match job {
+            Ok(job) => job,
+            Err(e) => {
+                emit_error(out, &e.to_string())?;
+                continue;
+            }
+        };
+        if !known.contains(&job.pair) {
+            emit_error(out, &format!("unknown pair '{}'", job.pair))?;
+            continue;
+        }
+        // saturate: a client-supplied id of u64::MAX must not panic the
+        // long-running service (defaulted ids then reuse MAX, harmlessly)
+        next_id = next_id.max(job.id).saturating_add(1);
+        // Drain finished work first (live reporting), then respect the
+        // in-flight cap with blocking collects before submitting more.
+        while let Some(o) = coord.try_next_outcome() {
+            collected += 1;
+            emit_outcome(out, &mut report, &o)?;
+        }
+        while submitted - collected >= in_flight_cap {
+            let o = coord.next_outcome();
+            collected += 1;
+            emit_outcome(out, &mut report, &o)?;
+        }
+        coord.submit(job);
+        submitted += 1;
+    }
+
+    while collected < submitted {
+        let o = coord.next_outcome();
+        collected += 1;
+        emit_outcome(out, &mut report, &o)?;
+    }
+    report.wall_micros = started.elapsed().as_micros() as u64;
+
+    let summary = JsonValue::Obj(vec![("summary".into(), json::report_to_json(&report))]);
+    writeln!(out, "{}", summary.encode())?;
+    out.flush()?;
+    coord.shutdown();
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::{Format, Rho};
+    use crate::interface::MmaFormats;
+    use crate::models::{MmaModel, ModelSpec};
+    use std::sync::Arc;
+
+    fn model(f: i32) -> MmaModel {
+        MmaModel::new(
+            format!("serve-f{f}"),
+            (4, 4, 8),
+            MmaFormats { a: Format::Fp16, b: Format::Fp16, c: Format::Fp32, d: Format::Fp32 },
+            ModelSpec::TFdpa { l_max: 8, f, rho: Rho::RzFp32 },
+        )
+    }
+
+    fn pairs() -> Vec<VerifyPair> {
+        vec![
+            VerifyPair {
+                name: "clean".into(),
+                dut: Arc::new(model(24)),
+                golden: Arc::new(model(24)),
+            },
+            VerifyPair {
+                name: "faulty".into(),
+                dut: Arc::new(model(25)),
+                golden: Arc::new(model(24)),
+            },
+        ]
+    }
+
+    #[test]
+    fn serves_jobs_and_reports_mismatches_live() {
+        let input = "\
+            {\"pair\":\"clean\",\"batch\":40,\"seed\":1}\n\
+            \n\
+            {\"pair\":\"faulty\",\"batch\":60,\"seed\":2}\n\
+            {\"pair\":\"clean\",\"batch\":40,\"seed\":3}\n";
+        let mut out = Vec::new();
+        let cfg = ServeConfig { workers: 2, queue_depth: 0 };
+        let report = serve_jsonl(pairs(), &cfg, input.as_bytes(), &mut out).unwrap();
+        assert_eq!(report.total_jobs, 3);
+        assert_eq!(report.total_tests, 140);
+        assert!(report.total_mismatches > 0, "F=24 vs F=25 must diverge");
+
+        let text = String::from_utf8(out).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 4, "3 outcomes + summary: {text}");
+        let mut outcome_count = 0;
+        for line in &lines[..3] {
+            let v = JsonValue::parse(line).unwrap();
+            assert_eq!(v.get("ok").and_then(|b| b.as_bool()), Some(true));
+            outcome_count += 1;
+            let o = json::outcome_from_json(v.get("outcome").unwrap()).unwrap();
+            assert!(o.pair == "clean" || o.pair == "faulty");
+        }
+        assert_eq!(outcome_count, 3);
+        let summary = JsonValue::parse(lines[3]).unwrap();
+        let decoded = json::report_from_json(summary.get("summary").unwrap()).unwrap();
+        assert_eq!(decoded.total_tests, report.total_tests);
+        assert_eq!(decoded.total_mismatches, report.total_mismatches);
+    }
+
+    #[test]
+    fn malformed_lines_and_unknown_pairs_keep_serving() {
+        let input = "\
+            not json at all\n\
+            {\"pair\":\"nope\",\"batch\":5,\"seed\":0}\n\
+            {\"pair\":\"clean\",\"batch\":10,\"seed\":4}\n";
+        let mut out = Vec::new();
+        let cfg = ServeConfig { workers: 1, queue_depth: 0 };
+        let report = serve_jsonl(pairs(), &cfg, input.as_bytes(), &mut out).unwrap();
+        assert_eq!(report.total_jobs, 1, "only the valid job ran");
+        let text = String::from_utf8(out).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 4, "2 errors + 1 outcome + summary: {text}");
+        for line in &lines[..2] {
+            let v = JsonValue::parse(line).unwrap();
+            assert_eq!(v.get("ok").and_then(|b| b.as_bool()), Some(false));
+        }
+    }
+}

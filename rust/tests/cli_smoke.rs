@@ -1,0 +1,153 @@
+//! End-to-end smoke tests of the `mma-sim` binary: every line of output
+//! here crosses a real process boundary, so these pin the CLI surface
+//! (help/list/simulate) and the JSON-lines seams (`simulate --stdin`,
+//! `serve --jsonl`) the cross-process sharding protocol relies on.
+
+use std::io::Write;
+use std::process::{Command, Stdio};
+
+use mma_sim::isa::Arch;
+use mma_sim::session::{json, SessionBuilder};
+
+fn bin() -> Command {
+    let mut cmd = Command::new(env!("CARGO_BIN_EXE_mma-sim"));
+    // keep child batch paths deterministic and cheap on small runners
+    cmd.env("MMA_SIM_THREADS", "1");
+    cmd
+}
+
+fn run_ok(args: &[&str]) -> String {
+    let out = bin().args(args).output().expect("spawn mma-sim");
+    assert!(
+        out.status.success(),
+        "mma-sim {args:?} failed: {}\n{}",
+        String::from_utf8_lossy(&out.stderr),
+        String::from_utf8_lossy(&out.stdout)
+    );
+    String::from_utf8(out.stdout).expect("utf8 stdout")
+}
+
+#[test]
+fn help_lists_the_subcommands() {
+    let text = run_ok(&["help"]);
+    for needle in ["USAGE", "simulate", "probe", "serve", "--jsonl", "Session"] {
+        assert!(text.contains(needle), "help missing '{needle}':\n{text}");
+    }
+}
+
+#[test]
+fn list_prints_the_registry() {
+    let text = run_ok(&["list"]);
+    assert!(text.contains("HMMA.884.F32.F16"), "{text}");
+    assert!(text.contains("v_mfma_f32_16x16x4_f32"), "{text}");
+    assert!(text.lines().count() > 50, "registry should be substantial");
+}
+
+#[test]
+fn simulate_reports_outputs_and_reference() {
+    let text = run_ok(&["simulate", "--arch", "volta", "--instr", "HMMA.884.F32", "--seed", "1"]);
+    assert!(text.contains("instruction: sm70 HMMA.884.F32.F16"), "{text}");
+    assert!(text.contains("d[0][0]"), "{text}");
+    assert!(text.contains("fp64 ref"), "{text}");
+}
+
+#[test]
+fn malformed_input_is_a_clean_error_not_a_panic() {
+    let out = bin()
+        .args(["simulate", "--arch", "volta", "--instr", "HMMA.884"])
+        .output()
+        .expect("spawn mma-sim");
+    assert!(!out.status.success());
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("ambiguous"), "{err}");
+    assert!(!err.contains("panicked"), "{err}");
+
+    let out = bin().args(["simulate", "--arch", "z80"]).output().expect("spawn");
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("unknown architecture"));
+}
+
+#[test]
+fn simulate_stdin_round_trips_cases_bit_exactly() {
+    // The sharding seam: a parent encodes cases, a child executes them.
+    let session = SessionBuilder::new()
+        .arch(Arch::Volta)
+        .instruction("HMMA.884.F32.F16")
+        .build()
+        .unwrap();
+    let cases = [session.random_case(1), session.random_case(2)];
+
+    let mut child = bin()
+        .args(["simulate", "--arch", "volta", "--instr", "HMMA.884.F32.F16", "--stdin"])
+        .stdin(Stdio::piped())
+        .stdout(Stdio::piped())
+        .spawn()
+        .expect("spawn mma-sim --stdin");
+    {
+        let stdin = child.stdin.as_mut().expect("child stdin");
+        for case in &cases {
+            writeln!(stdin, "{}", json::encode_case(case)).unwrap();
+        }
+        writeln!(stdin, "this is not json").unwrap();
+    }
+    let out = child.wait_with_output().expect("child output");
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8(out.stdout).unwrap();
+    let lines: Vec<&str> = text.lines().collect();
+    assert_eq!(lines.len(), 3, "2 outputs + 1 error line:\n{text}");
+
+    for (case, line) in cases.iter().zip(&lines) {
+        let got = json::decode_run_output(line).expect("RunOutput line");
+        let want = session.run(case).unwrap();
+        assert_eq!(got.d.data, want.d.data, "child output must be bit-identical");
+    }
+    let err = json::JsonValue::parse(lines[2]).unwrap();
+    assert!(err.get("error").is_some(), "bad line must yield an error object: {}", lines[2]);
+}
+
+#[test]
+fn serve_jsonl_executes_jobs_and_summarizes() {
+    let mut child = bin()
+        .args(["serve", "--jsonl", "--workers", "1"])
+        .stdin(Stdio::piped())
+        .stdout(Stdio::piped())
+        .stderr(Stdio::piped())
+        .spawn()
+        .expect("spawn mma-sim serve --jsonl");
+    {
+        let stdin = child.stdin.as_mut().expect("child stdin");
+        writeln!(
+            stdin,
+            "{}",
+            r#"{"pair":"sm70 HMMA.884.F32.F16","batch":5,"seed":7}"#
+        )
+        .unwrap();
+        writeln!(stdin, "{}", r#"{"pair":"no-such-pair","batch":5,"seed":7}"#).unwrap();
+    }
+    let out = child.wait_with_output().expect("child output");
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8(out.stdout).unwrap();
+    let lines: Vec<&str> = text.lines().collect();
+    assert_eq!(lines.len(), 3, "outcome + error + summary:\n{text}");
+
+    let mut saw_outcome = false;
+    let mut saw_error = false;
+    let mut saw_summary = false;
+    for line in lines {
+        let v = json::JsonValue::parse(line).unwrap();
+        if let Some(s) = v.get("summary") {
+            let report = json::report_from_json(s).unwrap();
+            assert_eq!(report.total_tests, 5);
+            assert_eq!(report.total_mismatches, 0, "self-verification must be clean");
+            saw_summary = true;
+        } else if v.get("ok").and_then(|b| b.as_bool()) == Some(true) {
+            let o = json::outcome_from_json(v.get("outcome").unwrap()).unwrap();
+            assert_eq!(o.tests, 5);
+            saw_outcome = true;
+        } else {
+            assert!(v.get("error").is_some(), "{line}");
+            saw_error = true;
+        }
+    }
+    assert!(saw_outcome && saw_error && saw_summary);
+}

@@ -1,0 +1,331 @@
+//! Session facade contract tests: every `ApiError` variant has a
+//! negative-path test proving malformed input is *rejected*, not
+//! panicked on, and the JSON wire format round-trips bit-exactly for
+//! every registry instruction.
+
+use mma_sim::formats::{Format, Rho};
+use mma_sim::interface::{BitMatrix, MmaCase};
+use mma_sim::isa::{self, Arch};
+use mma_sim::session::{json, ApiError, Session, SessionBuilder};
+use mma_sim::util::Rng;
+
+fn hopper() -> Session {
+    SessionBuilder::new()
+        .arch(Arch::Hopper)
+        .instruction("HGMMA.64x8x16.F32.F16")
+        .build()
+        .unwrap()
+}
+
+fn nvfp4() -> Session {
+    SessionBuilder::new()
+        .arch(Arch::Blackwell)
+        .instruction("UTCQMMA.SF.64x8x64.F32.NVF4")
+        .build()
+        .unwrap()
+}
+
+// ---------------------------------------------------------------------------
+// negative paths: one test per ApiError variant
+// ---------------------------------------------------------------------------
+
+#[test]
+fn unknown_arch_is_rejected() {
+    let err = SessionBuilder::new().arch_named("pentium3").build().unwrap_err();
+    assert!(matches!(err, ApiError::UnknownArch { .. }), "{err}");
+}
+
+#[test]
+fn unknown_instruction_is_rejected() {
+    let err = SessionBuilder::new()
+        .arch(Arch::Volta)
+        .instruction("QMMA.16832")
+        .build()
+        .unwrap_err();
+    assert!(matches!(err, ApiError::UnknownInstruction { .. }), "{err}");
+}
+
+#[test]
+fn ambiguous_instruction_lists_candidates() {
+    let err = SessionBuilder::new()
+        .arch(Arch::Volta)
+        .instruction("HMMA.884")
+        .build()
+        .unwrap_err();
+    match err {
+        ApiError::AmbiguousInstruction { candidates, .. } => {
+            assert_eq!(candidates.len(), 2, "{candidates:?}")
+        }
+        other => panic!("expected AmbiguousInstruction, got {other}"),
+    }
+}
+
+#[test]
+fn wrong_shape_is_rejected_per_operand() {
+    let s = hopper();
+    let good = s.random_case(1);
+    let fmts = s.formats();
+    let (m, n, k) = s.shape();
+
+    let mut bad = good.clone();
+    bad.a = BitMatrix::zeros(m, k + 1, fmts.a);
+    match s.run(&bad).unwrap_err() {
+        ApiError::ShapeMismatch { operand: "A", expected, got } => {
+            assert_eq!(expected, (m, k));
+            assert_eq!(got, (m, k + 1));
+        }
+        other => panic!("expected A ShapeMismatch, got {other}"),
+    }
+
+    let mut bad = good.clone();
+    bad.b = BitMatrix::zeros(k + 1, n, fmts.b);
+    assert!(matches!(s.run(&bad).unwrap_err(), ApiError::ShapeMismatch { operand: "B", .. }));
+
+    let mut bad = good.clone();
+    bad.c = BitMatrix::zeros(m + 1, n, fmts.c);
+    assert!(matches!(s.run(&bad).unwrap_err(), ApiError::ShapeMismatch { operand: "C", .. }));
+}
+
+#[test]
+fn wrong_format_is_rejected() {
+    let s = hopper();
+    let mut bad = s.random_case(2);
+    bad.a.fmt = Format::Bf16; // same width, wrong format
+    match s.run(&bad).unwrap_err() {
+        ApiError::FormatMismatch { operand: "A", expected, got } => {
+            assert_eq!(expected, Format::Fp16);
+            assert_eq!(got, Format::Bf16);
+        }
+        other => panic!("expected FormatMismatch, got {other}"),
+    }
+}
+
+#[test]
+fn extra_scales_are_rejected() {
+    let s = hopper();
+    let mut bad = s.random_case(3);
+    bad.scales = Some((
+        BitMatrix::zeros(1, 1, Format::E8M0),
+        BitMatrix::zeros(1, 1, Format::E8M0),
+    ));
+    assert!(matches!(s.run(&bad).unwrap_err(), ApiError::ScaleSpecMissing { .. }));
+}
+
+#[test]
+fn missing_scales_are_rejected() {
+    let s = nvfp4();
+    let mut bad = s.random_case(4);
+    assert!(bad.scales.is_some());
+    bad.scales = None;
+    assert!(matches!(s.run(&bad).unwrap_err(), ApiError::MissingScales { .. }));
+}
+
+#[test]
+fn wrong_scale_shape_and_format_are_rejected() {
+    let s = nvfp4();
+    let good = s.random_case(5);
+    let (sa, sb) = good.scales.clone().unwrap();
+
+    let mut bad = good.clone();
+    bad.scales = Some((BitMatrix::zeros(sa.rows, sa.cols + 1, sa.fmt), sb.clone()));
+    assert!(matches!(
+        s.run(&bad).unwrap_err(),
+        ApiError::ShapeMismatch { operand: "A scales", .. }
+    ));
+
+    let mut bad = good.clone();
+    bad.scales = Some((BitMatrix::zeros(sa.rows, sa.cols, Format::E8M0), sb));
+    assert!(matches!(
+        s.run(&bad).unwrap_err(),
+        ApiError::FormatMismatch { operand: "A scales", .. }
+    ));
+}
+
+#[test]
+fn probe_length_and_bits_are_validated() {
+    let s = hopper();
+    let (_, _, k) = s.shape();
+    let err = s.probe(&vec![0u64; k - 1], &vec![0u64; k], 0).unwrap_err();
+    assert!(matches!(err, ApiError::LengthMismatch { expected, got, .. }
+        if expected == k && got == k - 1));
+
+    // bit 16 is outside FP16's 16-bit storage
+    let mut a_row = vec![0u64; k];
+    a_row[0] = 1 << 16;
+    let err = s.probe(&a_row, &vec![0u64; k], 0).unwrap_err();
+    assert!(matches!(err, ApiError::InvalidBits { fmt: Format::Fp16, .. }), "{err}");
+
+    // and the happy path answers like the model
+    let a_row = vec![Format::Fp16.from_f64(2.0); k];
+    let b_col = vec![Format::Fp16.from_f64(0.5); k];
+    let got = s.probe(&a_row, &b_col, 0).unwrap();
+    assert_eq!(f32::from_bits(got as u32), k as f32);
+}
+
+#[test]
+fn try_from_f64_rejects_length_mismatch() {
+    let err = BitMatrix::try_from_f64(2, 2, Format::Fp16, &[1.0, 2.0, 3.0]).unwrap_err();
+    assert!(matches!(err, ApiError::LengthMismatch { expected: 4, got: 3, .. }));
+    assert!(BitMatrix::try_from_f64(2, 2, Format::Fp16, &[1.0; 4]).is_ok());
+}
+
+#[test]
+fn try_negated_rejects_unsigned_formats() {
+    let m = BitMatrix::zeros(1, 2, Format::E8M0);
+    assert!(matches!(m.try_negated().unwrap_err(), ApiError::UnsignedNegate { fmt: Format::E8M0 }));
+    let m = BitMatrix::from_f64(1, 2, Format::Fp16, &[1.5, -3.0]);
+    assert_eq!(m.try_negated().unwrap().to_f64_vec(), vec![-1.5, 3.0]);
+}
+
+#[test]
+fn unsupported_overrides_are_rejected() {
+    // rounding override on a model family without ρ
+    let err = SessionBuilder::new()
+        .arch(Arch::Ampere)
+        .instruction("DMMA.884.F64")
+        .rounding(Rho::RzFp32)
+        .build()
+        .unwrap_err();
+    assert!(matches!(err, ApiError::Unsupported { what: "rounding override", .. }), "{err}");
+
+    // inconsistent D-format override
+    let err = SessionBuilder::new()
+        .arch(Arch::Hopper)
+        .instruction("HGMMA.64x8x16.F32.F16")
+        .d_format(Format::Fp16)
+        .build()
+        .unwrap_err();
+    assert!(matches!(err, ApiError::Unsupported { what: "format override", .. }), "{err}");
+
+    // gemm on a block-scaled instruction
+    let s = nvfp4();
+    let fmts = s.formats();
+    let (m, n, k) = s.shape();
+    let a = BitMatrix::zeros(m, k, fmts.a);
+    let b = BitMatrix::zeros(k, n, fmts.b);
+    let c = BitMatrix::zeros(m, n, fmts.c);
+    assert!(matches!(s.gemm(&a, &b, &c).unwrap_err(), ApiError::Unsupported { what: "gemm", .. }));
+}
+
+#[test]
+fn gemm_shape_validation() {
+    let s = SessionBuilder::new()
+        .arch(Arch::Turing)
+        .instruction("HMMA.1688.F32.F16")
+        .build()
+        .unwrap();
+    let fmts = s.formats();
+    let (tm, tn, tk) = s.shape();
+    // A rows not a multiple of the tile M
+    let a = BitMatrix::zeros(tm + 1, tk, fmts.a);
+    let b = BitMatrix::zeros(tk, tn, fmts.b);
+    let c = BitMatrix::zeros(tm + 1, tn, fmts.c);
+    assert!(matches!(s.gemm(&a, &b, &c).unwrap_err(), ApiError::ShapeMismatch { .. }));
+    // inner dimensions disagree
+    let a = BitMatrix::zeros(tm, tk, fmts.a);
+    let b = BitMatrix::zeros(2 * tk, tn, fmts.b);
+    let c = BitMatrix::zeros(tm, tn, fmts.c);
+    assert!(matches!(s.gemm(&a, &b, &c).unwrap_err(), ApiError::ShapeMismatch { .. }));
+    // wrong operand format
+    let a = BitMatrix::zeros(tm, tk, Format::Bf16);
+    let b = BitMatrix::zeros(tk, tn, fmts.b);
+    let c = BitMatrix::zeros(tm, tn, fmts.c);
+    assert!(matches!(s.gemm(&a, &b, &c).unwrap_err(), ApiError::FormatMismatch { .. }));
+}
+
+#[test]
+fn json_errors_carry_context() {
+    assert!(matches!(json::decode_case("{oops").unwrap_err(), ApiError::Json { .. }));
+    assert!(matches!(
+        json::decode_case(r#"{"a":1,"b":2,"c":3}"#).unwrap_err(),
+        ApiError::Json { .. }
+    ));
+}
+
+// ---------------------------------------------------------------------------
+// JSON round-trip over the whole registry
+// ---------------------------------------------------------------------------
+
+/// Random scales (not unit) so the scale matrices round-trip non-trivially.
+/// One bit below full width keeps every pattern inside the format's mask
+/// and away from the all-ones NaN code points.
+fn randomize_scales(case: &mut MmaCase, rng: &mut Rng) {
+    if let Some((sa, sb)) = &mut case.scales {
+        let w = sa.fmt.width() - 1;
+        for v in sa.data.iter_mut() {
+            *v = rng.bits(w);
+        }
+        for v in sb.data.iter_mut() {
+            *v = rng.bits(w);
+        }
+    }
+}
+
+#[test]
+fn case_and_output_round_trip_for_every_registry_instruction() {
+    let mut rng = Rng::new(0x5E55);
+    for instr in isa::registry() {
+        let s = SessionBuilder::new()
+            .arch(instr.arch)
+            .instruction(instr.name)
+            .build()
+            .unwrap_or_else(|e| panic!("{} {}: {e}", instr.arch.target(), instr.name));
+        // three cases per instruction cycles all input classes (including
+        // class 3, raw bit streams: NaN/Inf patterns and high bits)
+        for t in 0..3 {
+            let mut case = s.random_case_with(&mut rng, t);
+            randomize_scales(&mut case, &mut rng);
+            let line = json::encode_case(&case);
+            let back = json::decode_case(&line)
+                .unwrap_or_else(|e| panic!("{}: {e}\n{line}", instr.name));
+            assert_eq!(back, case, "{} case bits must round-trip", instr.name);
+
+            let output = s.run(&case).unwrap_or_else(|e| panic!("{}: {e}", instr.name));
+            let line = json::encode_run_output(&output);
+            let back = json::decode_run_output(&line)
+                .unwrap_or_else(|e| panic!("{}: {e}\n{line}", instr.name));
+            assert_eq!(back, output, "{} output bits must round-trip", instr.name);
+        }
+    }
+}
+
+#[test]
+fn fp64_bit_patterns_round_trip_exactly() {
+    // FP64 data exercises full-width u64 patterns (above 2^53)
+    let s = SessionBuilder::new()
+        .arch(Arch::Ampere)
+        .instruction("DMMA.884.F64")
+        .build()
+        .unwrap();
+    let mut case = s.random_case(0xD0D0);
+    case.a.data[0] = u64::MAX - 1; // a quiet-NaN-ish full-width pattern
+    let back = json::decode_case(&json::encode_case(&case)).unwrap();
+    assert_eq!(back.a.data[0], u64::MAX - 1);
+    assert_eq!(back, case);
+}
+
+// ---------------------------------------------------------------------------
+// facade vs raw model: bit-identical behavior on valid inputs
+// ---------------------------------------------------------------------------
+
+#[test]
+fn facade_matches_raw_model_across_architectures() {
+    let mut rng = Rng::new(0xFACE);
+    for (arch, frag) in [
+        (Arch::Volta, "HMMA.884.F32.F16"),
+        (Arch::Cdna2, "v_mfma_f32_16x16x16_f16"),
+        (Arch::Cdna3, "v_mfma_f32_16x16x32_fp8_fp8"),
+    ] {
+        let s = SessionBuilder::new().arch(arch).instruction(frag).build().unwrap();
+        let instr = s.instruction().unwrap().clone();
+        let model = instr.model();
+        for t in 0..3 {
+            let case = s.random_case_with(&mut rng, t);
+            let got = s.run(&case).unwrap();
+            let want = mma_sim::interface::MmaInterface::execute(
+                &model, &case.a, &case.b, &case.c, case.scales(),
+            );
+            assert_eq!(got.d.data, want.data, "{frag} t={t}");
+        }
+    }
+}
