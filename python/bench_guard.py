@@ -3,14 +3,21 @@
 
 Two checks over a fresh ``BENCH_hotpath.json``:
 
-1. **In-run** (machine-independent): the table-driven fast path must
-   actually be fast. Each speedup in the ``lut`` section — LUT vs
-   bit-level over identical inputs, measured in the same process — must
-   clear the floor: 2.0 on full runs (the acceptance criterion), 1.2 on
-   smoke runs whose handful of samples are too noisy for the full bar
-   (env ``GUARD_MIN_LUT_SPEEDUP`` overrides both). This catches the fast
-   path silently degrading to the reference path, e.g. a dispatch change
-   that stops hitting the tables.
+1. **In-run** (machine-independent): the fast paths must actually be
+   fast, each measured against its reference path in the same process:
+
+   - ``lut`` section — table-driven decode/product vs bit-level over
+     identical inputs. Floor: 2.0 on full runs (the acceptance
+     criterion), 1.2 on smoke runs whose handful of samples are too
+     noisy for the full bar (env ``GUARD_MIN_LUT_SPEEDUP`` overrides
+     both). Catches the fast path silently degrading to the reference
+     path, e.g. a dispatch change that stops hitting the tables.
+   - ``gemm`` section — the zero-copy strided GEMM engine vs the
+     staged-copy baseline loop over the same operands. Floor: 1.0 on
+     full runs (the strided path must beat the copies it deleted), 0.75
+     on smoke runs (env ``GUARD_MIN_GEMM_SPEEDUP`` overrides both).
+     Catches the strided engine regressing to (or below) staged-copy
+     cost, e.g. a change that reintroduces per-tile operand staging.
 
 2. **Cross-run**: record-by-record, the fresh run must not regress more
    than ``REGRESSION_FACTOR`` (2x) against the committed baseline. When
@@ -41,6 +48,13 @@ def lut_floor(fresh):
     if env is not None:
         return float(env)
     return 1.2 if fresh.get("smoke") else 2.0
+
+
+def gemm_floor(fresh):
+    env = os.environ.get("GUARD_MIN_GEMM_SPEEDUP")
+    if env is not None:
+        return float(env)
+    return 0.75 if fresh.get("smoke") else 1.0
 
 
 def load(path):
@@ -92,6 +106,28 @@ def main():
             )
         else:
             print(f"guard: lut.{name} = {speedup:.2f}x (>= {floor:.2f}x) ok")
+
+    # --- check 1b: in-run strided-GEMM speedup ---------------------------
+    floor = gemm_floor(fresh)
+    gemm = fresh.get("gemm") or {}
+    if not gemm:
+        failures.append("no `gemm` section in fresh run (strided-engine bench missing)")
+    else:
+        speedup = gemm.get("speedup_strided_vs_staged")
+        if speedup is None:
+            failures.append(
+                "gemm.speedup_strided_vs_staged is null -- bench emitted no measurement"
+            )
+        elif speedup < floor:
+            failures.append(
+                f"gemm.speedup_strided_vs_staged = {speedup:.2f}x < {floor:.2f}x: "
+                "zero-copy strided engine regressed toward staged-copy speed"
+            )
+        else:
+            print(
+                f"guard: gemm.speedup_strided_vs_staged = {speedup:.2f}x "
+                f"(>= {floor:.2f}x) ok"
+            )
 
     # --- check 2: cross-run vs committed baseline ------------------------
     base = None

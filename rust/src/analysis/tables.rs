@@ -12,7 +12,8 @@ pub fn render_table1() -> String {
     }
     let mut s = String::from("Category      | Models\n--------------+-------\n");
     for (cat, models) in cats {
-        s.push_str(&format!("{:<13} | {}\n", cat, models.into_iter().collect::<Vec<_>>().join(", ")));
+        let list = models.into_iter().collect::<Vec<_>>().join(", ");
+        s.push_str(&format!("{cat:<13} | {list}\n"));
     }
     s
 }

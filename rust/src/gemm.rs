@@ -10,8 +10,9 @@
 //! model parameters (asserted by the equivalence test below), which is
 //! what makes whole-GEMM reasoning with the per-instruction models sound.
 
+use crate::error::ApiError;
 use crate::formats::{cast, RoundingMode};
-use crate::interface::{auto_threads, BitMatrix, MmaFormats, MmaInterface, Scales};
+use crate::interface::{auto_threads, BitMatrix, MatMut, MmaFormats, MmaInterface, Scales};
 use crate::isa::Instruction;
 use crate::models::{DpaScratch, MmaModel};
 
@@ -19,31 +20,6 @@ use crate::models::{DpaScratch, MmaModel};
 pub struct TiledGemm {
     /// The per-tile model (instruction shape).
     pub tile: MmaModel,
-}
-
-/// Per-thread staging for one row band of the tiled GEMM: tile operands,
-/// tile output, and the model's dot-product scratch, all reused across
-/// every tile the band touches.
-struct BandScratch {
-    at: BitMatrix,
-    bt: BitMatrix,
-    ct: BitMatrix,
-    out: BitMatrix,
-    dpa: DpaScratch,
-}
-
-impl BandScratch {
-    fn new(tile: &MmaModel) -> Self {
-        let fmts = tile.formats;
-        Self {
-            at: BitMatrix::zeros(tile.m, tile.k, fmts.a),
-            bt: BitMatrix::zeros(tile.k, tile.n, fmts.b),
-            // the accumulator chain lives in the D format (see `execute`)
-            ct: BitMatrix::zeros(tile.m, tile.n, fmts.d),
-            out: BitMatrix::zeros(tile.m, tile.n, fmts.d),
-            dpa: DpaScratch::default(),
-        }
-    }
 }
 
 impl TiledGemm {
@@ -58,6 +34,69 @@ impl TiledGemm {
         Self { tile }
     }
 
+    /// Check that the operands carry the tile's formats, that `A`'s shape
+    /// is a multiple of the tile `M×K`, that the inner dimensions agree
+    /// (with `B` tiling by `N`), and that `C` matches the output shape.
+    pub fn validate(&self, a: &BitMatrix, b: &BitMatrix, c: &BitMatrix) -> Result<(), ApiError> {
+        let (tm, tn, tk) = (self.tile.m, self.tile.n, self.tile.k);
+        let fmts = self.tile.formats;
+        for (operand, mat, fmt) in [("A", a, fmts.a), ("B", b, fmts.b), ("C", c, fmts.c)] {
+            if mat.fmt != fmt {
+                return Err(ApiError::FormatMismatch { operand, expected: fmt, got: mat.fmt });
+            }
+        }
+        if a.rows % tm != 0 || a.cols % tk != 0 {
+            return Err(ApiError::ShapeMismatch {
+                operand: "A (must tile by the instruction's MxK)",
+                expected: (tm, tk),
+                got: (a.rows, a.cols),
+            });
+        }
+        if b.rows != a.cols || b.cols % tn != 0 {
+            return Err(ApiError::ShapeMismatch {
+                operand: "B (rows must equal A cols; cols must tile by N)",
+                expected: (a.cols, tn),
+                got: (b.rows, b.cols),
+            });
+        }
+        if (c.rows, c.cols) != (a.rows, b.cols) {
+            return Err(ApiError::ShapeMismatch {
+                operand: "C",
+                expected: (a.rows, b.cols),
+                got: (c.rows, c.cols),
+            });
+        }
+        Ok(())
+    }
+
+    /// Fallible [`execute`](TiledGemm::execute): non-tiling or mismatched
+    /// operands come back as an [`ApiError`] instead of a panic — the form
+    /// direct `TiledGemm` users (and [`crate::session::Session::gemm`])
+    /// drive.
+    pub fn try_execute(
+        &self,
+        a: &BitMatrix,
+        b: &BitMatrix,
+        c: &BitMatrix,
+    ) -> Result<BitMatrix, ApiError> {
+        let bands = a.rows / self.tile.m.max(1);
+        let threads = auto_threads(bands, self.tile.m * b.cols * a.cols);
+        self.try_execute_with_threads(a, b, c, threads)
+    }
+
+    /// [`try_execute`](TiledGemm::try_execute) with an explicit worker
+    /// count over row bands (1 = the plain serial loop).
+    pub fn try_execute_with_threads(
+        &self,
+        a: &BitMatrix,
+        b: &BitMatrix,
+        c: &BitMatrix,
+        threads: usize,
+    ) -> Result<BitMatrix, ApiError> {
+        self.validate(a, b, c)?;
+        Ok(self.run(a, b, c, threads))
+    }
+
     /// `D = A×B + C` for any shape that is a multiple of the tile shape.
     ///
     /// K tiles are chained through the accumulator in ascending order (the
@@ -67,10 +106,12 @@ impl TiledGemm {
     /// FP32 D — previously the C bits were silently reinterpreted).
     /// Independent row bands run on scoped worker threads; the result is
     /// bit-identical to the serial loop for any thread count.
+    ///
+    /// Panics on malformed operands; fallible callers use
+    /// [`try_execute`](TiledGemm::try_execute).
     pub fn execute(&self, a: &BitMatrix, b: &BitMatrix, c: &BitMatrix) -> BitMatrix {
-        let bands = a.rows / self.tile.m.max(1);
-        let threads = auto_threads(bands, self.tile.m * b.cols * a.cols);
-        self.execute_with_threads(a, b, c, threads)
+        self.try_execute(a, b, c)
+            .unwrap_or_else(|e| panic!("TiledGemm::execute: {e} (try_execute is fallible)"))
     }
 
     /// [`execute`](TiledGemm::execute) with an explicit worker count over
@@ -82,13 +123,17 @@ impl TiledGemm {
         c: &BitMatrix,
         threads: usize,
     ) -> BitMatrix {
-        let (tm, tn, tk) = (self.tile.m, self.tile.n, self.tile.k);
-        let (m, k) = (a.rows, a.cols);
-        let n = b.cols;
-        assert_eq!(b.rows, k, "A/B inner dimensions");
-        assert_eq!((c.rows, c.cols), (m, n), "C shape");
-        assert!(m % tm == 0 && n % tn == 0 && k % tk == 0, "shape must tile");
+        self.try_execute_with_threads(a, b, c, threads).unwrap_or_else(|e| {
+            panic!("TiledGemm::execute_with_threads: {e} (try_execute_with_threads is fallible)")
+        })
+    }
 
+    /// The validated execution body: set up the D-format accumulator
+    /// matrix and fan the row bands out across scoped worker threads.
+    fn run(&self, a: &BitMatrix, b: &BitMatrix, c: &BitMatrix, threads: usize) -> BitMatrix {
+        let tm = self.tile.m;
+        let m = a.rows;
+        let n = b.cols;
         let fmts = self.tile.formats;
         let data = if fmts.c == fmts.d {
             c.data.clone()
@@ -103,7 +148,7 @@ impl TiledGemm {
         let bands = m / tm;
         let threads = threads.clamp(1, bands.max(1));
         if threads <= 1 {
-            let mut scratch = BandScratch::new(&self.tile);
+            let mut scratch = DpaScratch::default();
             for (band, rows) in d.data.chunks_mut(tm * n).enumerate() {
                 self.run_band(a, b, rows, band * tm, &mut scratch);
             }
@@ -116,7 +161,7 @@ impl TiledGemm {
                     let take = per.min(pending.len());
                     let group: Vec<(usize, &mut [u64])> = pending.drain(..take).collect();
                     s.spawn(move || {
-                        let mut scratch = BandScratch::new(&self.tile);
+                        let mut scratch = DpaScratch::default();
                         for (band, rows) in group {
                             self.run_band(a, b, rows, band * tm, &mut scratch);
                         }
@@ -131,13 +176,19 @@ impl TiledGemm {
     /// Compute one `tm`-row band of the output in place. `rows` holds the
     /// band's accumulator values (already in the D format) in row-major
     /// order over the full `n` columns.
+    ///
+    /// Every tile is a strided window: A is read in place through
+    /// subviews, the C/D accumulator chain lives directly in `rows`
+    /// (read-modify-write through a [`MatMut`] window), and B is
+    /// pretransposed once per K-chain step into the scratch panel — the
+    /// band performs no element-wise operand staging at all.
     fn run_band(
         &self,
         a: &BitMatrix,
         b: &BitMatrix,
         rows: &mut [u64],
         i0: usize,
-        scratch: &mut BandScratch,
+        scratch: &mut DpaScratch,
     ) {
         let (tm, tn, tk) = (self.tile.m, self.tile.n, self.tile.k);
         let n = b.cols;
@@ -145,34 +196,16 @@ impl TiledGemm {
         debug_assert_eq!(rows.len(), tm * n);
         for j0 in (0..n).step_by(tn) {
             for k0 in (0..k).step_by(tk) {
-                for i in 0..tm {
-                    for kk in 0..tk {
-                        scratch.at.set(i, kk, a.get(i0 + i, k0 + kk));
-                    }
-                }
-                for kk in 0..tk {
-                    for j in 0..tn {
-                        scratch.bt.set(kk, j, b.get(k0 + kk, j0 + j));
-                    }
-                }
-                for i in 0..tm {
-                    for j in 0..tn {
-                        scratch.ct.set(i, j, rows[i * n + j0 + j]);
-                    }
-                }
-                self.tile.execute_into(
-                    &scratch.at,
-                    &scratch.bt,
-                    &scratch.ct,
-                    None,
-                    &mut scratch.out,
-                    &mut scratch.dpa,
-                );
-                for i in 0..tm {
-                    for j in 0..tn {
-                        rows[i * n + j0 + j] = scratch.out.get(i, j);
-                    }
-                }
+                let at = a.subview(i0, k0, tm, tk);
+                let bt = b.subview(k0, j0, tk, tn);
+                let mut cd = MatMut {
+                    data: &mut rows[..],
+                    rows: tm,
+                    cols: tn,
+                    row_stride: n,
+                    offset: j0,
+                };
+                self.tile.execute_view_acc(at, bt, &mut cd, scratch);
             }
         }
     }
@@ -356,6 +389,56 @@ mod tests {
         // and the auto-threaded entry point agrees
         let d_auto = gemm.execute(&a, &b, &c);
         assert_eq!(d_auto.data, d_wide.data);
+    }
+
+    #[test]
+    fn try_execute_rejects_malformed_operands() {
+        let fmts = MmaFormats {
+            a: Format::Fp16,
+            b: Format::Fp16,
+            c: Format::Fp32,
+            d: Format::Fp32,
+        };
+        let spec = ModelSpec::TFdpa { l_max: 16, f: 25, rho: Rho::RzFp32 };
+        let gemm = TiledGemm::from_model(MmaModel::new("tile", (8, 8, 16), fmts, spec));
+        let good = |m, n, k| {
+            (
+                BitMatrix::zeros(m, k, fmts.a),
+                BitMatrix::zeros(k, n, fmts.b),
+                BitMatrix::zeros(m, n, fmts.c),
+            )
+        };
+        // rows not a multiple of the tile M
+        let (a, b, c) = good(9, 8, 16);
+        assert!(matches!(
+            gemm.try_execute(&a, &b, &c),
+            Err(crate::error::ApiError::ShapeMismatch { .. })
+        ));
+        // inner dimensions disagree
+        let (a, _, c) = good(8, 8, 16);
+        let b = BitMatrix::zeros(32, 8, fmts.b);
+        assert!(matches!(
+            gemm.try_execute(&a, &b, &c),
+            Err(crate::error::ApiError::ShapeMismatch { .. })
+        ));
+        // C shape off
+        let (a, b, _) = good(8, 8, 16);
+        let c = BitMatrix::zeros(8, 16, fmts.c);
+        assert!(matches!(
+            gemm.try_execute(&a, &b, &c),
+            Err(crate::error::ApiError::ShapeMismatch { .. })
+        ));
+        // wrong operand format
+        let (_, b, c) = good(8, 8, 16);
+        let a = BitMatrix::zeros(8, 16, Format::Bf16);
+        assert!(matches!(
+            gemm.try_execute(&a, &b, &c),
+            Err(crate::error::ApiError::FormatMismatch { .. })
+        ));
+        // well-formed operands execute and agree with the panicking form
+        let (a, b, c) = good(16, 16, 32);
+        let d = gemm.try_execute(&a, &b, &c).unwrap();
+        assert_eq!(d.data, gemm.execute(&a, &b, &c).data);
     }
 
     #[test]

@@ -6,6 +6,8 @@
 //! deliberately-perturbed mystery model in the tests — implements
 //! [`MmaInterface`].
 
+use std::sync::OnceLock;
+
 use crate::error::ApiError;
 use crate::formats::Format;
 
@@ -98,6 +100,37 @@ impl BitMatrix {
         out
     }
 
+    /// Borrowed whole-matrix view (zero-copy).
+    #[inline]
+    pub fn view(&self) -> MatRef<'_> {
+        MatRef {
+            data: &self.data,
+            rows: self.rows,
+            cols: self.cols,
+            row_stride: self.cols,
+            offset: 0,
+            fmt: self.fmt,
+        }
+    }
+
+    /// Borrowed `rows × cols` window at `(r0, c0)` (zero-copy).
+    #[inline]
+    pub fn subview(&self, r0: usize, c0: usize, rows: usize, cols: usize) -> MatRef<'_> {
+        self.view().subview(r0, c0, rows, cols)
+    }
+
+    /// Mutable whole-matrix view.
+    #[inline]
+    pub fn view_mut(&mut self) -> MatMut<'_> {
+        MatMut {
+            data: &mut self.data,
+            rows: self.rows,
+            cols: self.cols,
+            row_stride: self.cols,
+            offset: 0,
+        }
+    }
+
     /// Decode every element to `f64` (lossless for sub-f64 formats).
     pub fn to_f64_vec(&self) -> Vec<f64> {
         self.data.iter().map(|&b| self.fmt.to_f64(b)).collect()
@@ -124,6 +157,136 @@ impl BitMatrix {
     pub fn negated(&self) -> BitMatrix {
         self.try_negated()
             .expect("cannot negate unsigned format (try_negated handles this fallibly)")
+    }
+}
+
+/// A borrowed, read-only strided view of a row-major bit matrix.
+///
+/// `get(r, c)` reads `data[offset + r * row_stride + c]`; each row is
+/// `cols` contiguous elements, so dot-product kernels consume [`row`]
+/// slices in place with no staging copies. Views are how the execution
+/// core ([`crate::models::MmaModel::execute_view_into`]) and the tiled
+/// GEMM address operands: a tile is a [`subview`] window into the
+/// caller's full matrix, never a copy.
+///
+/// Invariants: `row_stride >= cols` (debug-asserted by the accessors —
+/// a smaller stride would make rows overlap) and every row lies inside
+/// `data`, i.e. `offset + (rows - 1) * row_stride + cols <= data.len()`
+/// when `rows > 0` (out-of-range rows panic at the slice index; `get` on
+/// a short final row panics likewise). The fields are public, so a
+/// hand-rolled view is responsible for upholding these; views built via
+/// [`BitMatrix::view`]/[`BitMatrix::subview`] always do.
+///
+/// [`row`]: MatRef::row
+/// [`subview`]: MatRef::subview
+#[derive(Clone, Copy, Debug)]
+pub struct MatRef<'a> {
+    pub data: &'a [u64],
+    pub rows: usize,
+    pub cols: usize,
+    /// Element distance between the starts of consecutive rows.
+    pub row_stride: usize,
+    /// Index of element `(0, 0)` in `data`.
+    pub offset: usize,
+    pub fmt: Format,
+}
+
+impl<'a> MatRef<'a> {
+    #[inline]
+    pub fn get(&self, r: usize, c: usize) -> u64 {
+        debug_assert!(r < self.rows && c < self.cols);
+        debug_assert!(self.row_stride >= self.cols, "rows would overlap");
+        self.data[self.offset + r * self.row_stride + c]
+    }
+
+    /// Row `r` as a contiguous slice. The borrow is tied to the underlying
+    /// data (`'a`), not to the view, so row slices outlive the `MatRef`
+    /// value they were taken from.
+    #[inline]
+    pub fn row(&self, r: usize) -> &'a [u64] {
+        debug_assert!(r < self.rows);
+        debug_assert!(self.row_stride >= self.cols, "rows would overlap");
+        let start = self.offset + r * self.row_stride;
+        &self.data[start..start + self.cols]
+    }
+
+    /// A `rows × cols` window with its top-left corner at `(r0, c0)` —
+    /// same backing data, adjusted offset, unchanged stride.
+    pub fn subview(&self, r0: usize, c0: usize, rows: usize, cols: usize) -> MatRef<'a> {
+        debug_assert!(r0 + rows <= self.rows && c0 + cols <= self.cols, "subview out of range");
+        MatRef {
+            data: self.data,
+            rows,
+            cols,
+            row_stride: self.row_stride,
+            offset: self.offset + r0 * self.row_stride + c0,
+            fmt: self.fmt,
+        }
+    }
+}
+
+/// The mutable counterpart of [`MatRef`]: a strided window the execution
+/// core writes output elements through. In the tiled GEMM this is the
+/// tile's window into the caller's full D matrix, which is also the
+/// accumulator chain — so C/D staging tiles are unnecessary.
+#[derive(Debug)]
+pub struct MatMut<'a> {
+    pub data: &'a mut [u64],
+    pub rows: usize,
+    pub cols: usize,
+    /// Element distance between the starts of consecutive rows.
+    pub row_stride: usize,
+    /// Index of element `(0, 0)` in `data`.
+    pub offset: usize,
+}
+
+impl MatMut<'_> {
+    #[inline]
+    pub fn get(&self, r: usize, c: usize) -> u64 {
+        debug_assert!(r < self.rows && c < self.cols);
+        debug_assert!(self.row_stride >= self.cols, "rows would overlap");
+        self.data[self.offset + r * self.row_stride + c]
+    }
+
+    #[inline]
+    pub fn set(&mut self, r: usize, c: usize, bits: u64) {
+        debug_assert!(r < self.rows && c < self.cols);
+        debug_assert!(self.row_stride >= self.cols, "rows would overlap");
+        self.data[self.offset + r * self.row_stride + c] = bits;
+    }
+}
+
+/// A pretransposed B operand panel: every column of the source view laid
+/// out contiguously, so dot-product kernels read [`col`](BPanel::col) as
+/// a plain `&[u64]` with zero per-output gathering.
+///
+/// One panel lives in [`crate::models::DpaScratch`] and is refilled once
+/// per case (or once per K-chain step in the tiled GEMM) — the only data
+/// movement left on the strided execution path.
+#[derive(Clone, Debug, Default)]
+pub struct BPanel {
+    data: Vec<u64>,
+    rows: usize,
+}
+
+impl BPanel {
+    /// Refill from a view, reusing the allocation. The transpose traversal
+    /// reads each source row once, contiguously, and writes every panel
+    /// element, so stale contents never leak between fills.
+    pub fn fill(&mut self, b: MatRef<'_>) {
+        self.rows = b.rows;
+        self.data.resize(b.rows * b.cols, 0);
+        for r in 0..b.rows {
+            for (j, &bits) in b.row(r).iter().enumerate() {
+                self.data[j * b.rows + r] = bits;
+            }
+        }
+    }
+
+    /// Column `j` as a contiguous slice of the source's `rows` elements.
+    #[inline]
+    pub fn col(&self, j: usize) -> &[u64] {
+        &self.data[j * self.rows..(j + 1) * self.rows]
     }
 }
 
@@ -233,20 +396,27 @@ pub trait MmaInterface: Send + Sync {
     fn name(&self) -> String;
 }
 
+/// `MMA_SIM_THREADS`, parsed once per process. The lookup sits on every
+/// batch/GEMM dispatch of the coordinator loop, and `std::env::var`
+/// re-scans the environment (behind a lock on some platforms) on every
+/// call; the cached read is a single atomic load.
+fn env_thread_override() -> Option<usize> {
+    static CACHE: OnceLock<Option<usize>> = OnceLock::new();
+    *CACHE.get_or_init(|| std::env::var("MMA_SIM_THREADS").ok().and_then(|v| v.parse().ok()))
+}
+
 /// Pick a worker count for `units` independent work items of roughly
 /// `work_per_unit` dot-product element-operations each.
 ///
 /// Honors `MMA_SIM_THREADS` (useful to pin CI and to serialize nested
-/// contexts), stays serial for batches too small to amortize a thread
-/// spawn, and otherwise uses every available core.
+/// contexts; read once per process), stays serial for batches too small
+/// to amortize a thread spawn, and otherwise uses every available core.
 pub fn auto_threads(units: usize, work_per_unit: usize) -> usize {
     if units < 2 {
         return 1;
     }
-    if let Ok(v) = std::env::var("MMA_SIM_THREADS") {
-        if let Ok(n) = v.parse::<usize>() {
-            return n.clamp(1, units);
-        }
+    if let Some(n) = env_thread_override() {
+        return n.clamp(1, units);
     }
     // Below ~32k element-ops a thread spawn costs more than it saves.
     if units.saturating_mul(work_per_unit) < (1 << 15) {
@@ -313,6 +483,76 @@ mod tests {
         assert_eq!(m.get(1, 2), 0x3C00);
         assert_eq!(m.row(1), &[0, 0, 0x3C00]);
         assert_eq!(m.col(2), vec![0, 0x3C00]);
+    }
+
+    /// A 5×7 matrix whose element at (r, c) carries the value 10r + c, so
+    /// every index error shows up as a wrong value, not a coincidence.
+    fn indexed(rows: usize, cols: usize) -> BitMatrix {
+        let mut m = BitMatrix::zeros(rows, cols, Format::Fp16);
+        for r in 0..rows {
+            for c in 0..cols {
+                m.set(r, c, (10 * r + c) as u64);
+            }
+        }
+        m
+    }
+
+    #[test]
+    fn matref_offset_and_stride_arithmetic() {
+        let m = indexed(5, 7);
+        let v = m.view();
+        assert_eq!((v.rows, v.cols, v.row_stride, v.offset), (5, 7, 7, 0));
+        assert_eq!(v.get(3, 4), 34);
+        assert_eq!(v.row(2), &[20, 21, 22, 23, 24, 25, 26]);
+
+        // non-contiguous window: rows are 4 elements apart from a stride-7
+        // parent, so naive `r * cols` indexing would read garbage
+        let w = m.subview(1, 2, 3, 4);
+        assert_eq!((w.rows, w.cols, w.row_stride, w.offset), (3, 4, 7, 9));
+        assert_eq!(w.get(0, 0), 12);
+        assert_eq!(w.get(2, 3), 35);
+        assert_eq!(w.row(1), &[22, 23, 24, 25]);
+
+        // a subview of a subview composes offsets against the same data
+        let ww = w.subview(1, 1, 2, 2);
+        assert_eq!((ww.rows, ww.cols, ww.row_stride, ww.offset), (2, 2, 7, 17));
+        assert_eq!(ww.row(0), &[23, 24]);
+        assert_eq!(ww.row(1), &[33, 34]);
+
+        // the bottom-right corner window touches the last data element
+        let br = m.subview(4, 5, 1, 2);
+        assert_eq!(br.row(0), &[45, 46]);
+    }
+
+    #[test]
+    fn matmut_writes_through_strided_window() {
+        let mut m = indexed(4, 6);
+        {
+            let mut w = MatMut {
+                data: &mut m.data,
+                rows: 2,
+                cols: 3,
+                row_stride: 6,
+                offset: 6 + 2, // window at (1, 2)
+            };
+            assert_eq!(w.get(0, 0), 12);
+            w.set(1, 2, 999);
+        }
+        assert_eq!(m.get(2, 4), 999);
+        assert_eq!(m.get(2, 5), 25, "neighbors untouched");
+    }
+
+    #[test]
+    fn bpanel_transposes_and_reuses_allocation() {
+        let m = indexed(3, 4);
+        let mut p = BPanel::default();
+        p.fill(m.view());
+        assert_eq!(p.col(0), &[0, 10, 20]);
+        assert_eq!(p.col(3), &[3, 13, 23]);
+        // refill from a narrower subview: no stale elements survive
+        p.fill(m.subview(1, 1, 2, 2));
+        assert_eq!(p.col(0), &[11, 21]);
+        assert_eq!(p.col(1), &[12, 22]);
     }
 
     #[test]

@@ -9,6 +9,7 @@ use crate::formats::Format;
 use crate::models::ModelSpec;
 
 /// All modeled AMD Matrix Core instructions.
+#[rustfmt::skip] // registry table: one instruction per line beats wrapped args
 pub fn amd_instructions() -> Vec<Instruction> {
     use Arch::*;
     use Format::*;

@@ -270,8 +270,9 @@ mod tests {
 
     #[test]
     fn table4_parameters_match_paper() {
+        use crate::formats::Rho;
         use crate::models::ModelSpec as S;
-        let get = |arch: Arch, class: InputClass, out: Format| -> (usize, i32, crate::formats::Rho) {
+        let get = |arch: Arch, class: InputClass, out: Format| -> (usize, i32, Rho) {
             let i = nvidia_instructions()
                 .into_iter()
                 .find(|i| i.arch == arch && i.class == class && i.formats.d == out)

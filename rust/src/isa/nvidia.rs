@@ -34,6 +34,7 @@ fn t(
 }
 
 /// All modeled NVIDIA Tensor Core instructions.
+#[rustfmt::skip] // registry table: one instruction per line beats wrapped args
 pub fn nvidia_instructions() -> Vec<Instruction> {
     use Arch::*;
     use Format::*;

@@ -30,15 +30,25 @@
 //!   (Algorithms 1, 3, 6–11): FTZ-Add/Mul, FMA, E-FDPA, T-FDPA, ST-FDPA,
 //!   GST-FDPA, TR-FDPA, GTR-FDPA.
 //! - [`models`] — matrix-level arithmetic-behavior models Φ
-//!   (Algorithms 2, 4, 5).
+//!   (Algorithms 2, 4, 5). The execution core is zero-copy and strided:
+//!   `MmaModel::execute_view_into` reads operands in place through
+//!   [`interface::MatRef`] views, pretransposes B once per case into a
+//!   scratch [`interface::BPanel`] (contiguous columns, no per-output
+//!   gathering), and resolves the `ModelSpec` to a kernel function once
+//!   before the m×n loop.
 //! - [`isa`] — the instruction registry for the ten GPU architectures
 //!   (paper Tables 3–7), with fallible fragment resolution
 //!   ([`isa::resolve`]).
 //! - [`interface`] — the black-box `MmaInterface` abstraction that CLFP
 //!   probes (a Rust model, a PJRT-loaded artifact, or a mystery model),
-//!   and the order-preserving parallel batch engine.
+//!   the order-preserving parallel batch engine, and the borrowed
+//!   matrix-view types ([`interface::MatRef`] / [`interface::MatMut`] /
+//!   [`interface::BPanel`]) the strided execution core is built on.
 //! - [`gemm`] — the tiled arbitrary-shape GEMM executor built from one
-//!   instruction (validated entry: [`session::Session::gemm`]).
+//!   instruction; tiles are strided windows into the caller's matrices
+//!   (no operand staging) and the accumulator chain lives directly in the
+//!   output matrix. Fallible entry: `TiledGemm::try_execute` (validated
+//!   facade entry: [`session::Session::gemm`]).
 //! - [`clfp`] — the closed-loop feature-probing framework (paper §3).
 //! - [`analysis`] — discrepancy (Table 8), error bounds (Table 9), risky
 //!   designs (Table 10), summation trees (Figure 2), rounding bias

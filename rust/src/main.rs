@@ -104,7 +104,8 @@ fn print_help() {
 
 /// Build a session from the common `--arch/--instr/--threads` flags.
 fn session_from_args(args: &[String]) -> Result<Session> {
-    let arch = flag(args, "--arch").ok_or_else(|| anyhow!("--arch required (e.g. hopper, gfx942)"))?;
+    let arch = flag(args, "--arch")
+        .ok_or_else(|| anyhow!("--arch required (e.g. hopper, gfx942)"))?;
     let mut b = SessionBuilder::new()
         .arch_named(arch)
         .instruction(flag(args, "--instr").unwrap_or_default());
@@ -172,7 +173,10 @@ fn simulate_stream(session: &Session) -> Result<()> {
         }
         match json::decode_case(line.trim()).and_then(|case| session.run(&case)) {
             Ok(output) => writeln!(out, "{}", json::encode_run_output(&output))?,
-            Err(e) => writeln!(out, "{{\"error\":{}}}", json::JsonValue::str(e.to_string()).encode())?,
+            Err(e) => {
+                let msg = json::JsonValue::str(e.to_string()).encode();
+                writeln!(out, "{{\"error\":{msg}}}")?
+            }
         }
         out.flush()?;
     }

@@ -12,9 +12,11 @@
 //!   `L = min(K, L_max)`, in six variants (E/T/ST/GST/TR/GTR).
 
 use crate::formats::{Format, Rho, RoundingMode};
-use crate::interface::{BitMatrix, MmaCase, MmaFormats, MmaInterface, ScaleSpec, Scales};
+use crate::interface::{
+    BPanel, BitMatrix, MatMut, MatRef, MmaCase, MmaFormats, MmaInterface, ScaleSpec, Scales,
+};
 use crate::ops::{
-    e_fdpa, fma, ftz_add, ftz_mul, flush_subnormal_input, gst_fdpa, gtr_fdpa, st_fdpa, t_fdpa,
+    e_fdpa, flush_subnormal_input, fma, ftz_add, ftz_mul, gst_fdpa, gtr_fdpa, st_fdpa, t_fdpa,
     tr_fdpa, GstFdpaCfg, GtrFdpaCfg, TFdpaCfg, TrFdpaCfg, MAX_L,
 };
 
@@ -28,7 +30,7 @@ pub(crate) fn unit_scale(fmt: Format) -> u64 {
     }
 }
 
-/// Reusable gather buffers for [`MmaModel::execute_into`].
+/// Reusable buffers for [`MmaModel::execute_view_into`].
 ///
 /// One instance per executing thread; reusing it across the cases of a
 /// batch (and across the tiles of a [`crate::gemm::TiledGemm`]) makes the
@@ -36,8 +38,9 @@ pub(crate) fn unit_scale(fmt: Format) -> u64 {
 /// output matrix itself.
 #[derive(Clone, Debug, Default)]
 pub struct DpaScratch {
-    /// Gathered B column (`K` elements).
-    bcol: Vec<u64>,
+    /// Pretransposed B panel: contiguous `K`-element columns, filled once
+    /// per case (or once per K-chain step in the tiled GEMM).
+    panel: BPanel,
     /// Flattened A-row scale patterns (`M × nblk`, row-major).
     sa: Vec<u64>,
     /// Flattened B-column scale patterns (`N × nblk`, contiguous per column).
@@ -97,6 +100,174 @@ impl ModelSpec {
     }
 }
 
+/// A [`ModelSpec`] resolved to a concrete dot-product kernel: chunk
+/// length clamped to K, kernel parameters unpacked, structural invariants
+/// checked — everything [`MmaModel::dpa`] used to redo per output element
+/// — plus the function pointer the execution core's inner loop calls.
+/// Resolution happens once per [`MmaModel::execute_view_into`] call (the
+/// m×n loop then pays one indirect call per element, no spec matching).
+#[derive(Clone, Copy)]
+struct DpaKernel {
+    fa: Format,
+    k: usize,
+    /// Resolved chunk vector length (FDPA families) or pairing P (FTZ).
+    l: usize,
+    /// Elements of K per scale factor (ST/GST), 0 otherwise.
+    kblock: usize,
+    /// Group size (GST).
+    g: usize,
+    /// Fractional bits of the fused summation.
+    f: i32,
+    /// Internal RD fractional bits (TR/GTR).
+    f2: i32,
+    /// Output conversion (T/ST/GST).
+    rho: Rho,
+    /// Scale factor format (GST).
+    scale_fmt: Format,
+    run: fn(&DpaKernel, &[u64], &[u64], u64, &[u64], &[u64]) -> u64,
+}
+
+impl DpaKernel {
+    /// One dot-product-accumulate through the resolved kernel function.
+    #[inline]
+    fn eval(&self, a: &[u64], b: &[u64], c: u64, sa: &[u64], sb: &[u64]) -> u64 {
+        debug_assert_eq!(a.len(), self.k);
+        debug_assert_eq!(b.len(), self.k);
+        (self.run)(self, a, b, c, sa, sb)
+    }
+}
+
+fn run_fma(kn: &DpaKernel, a: &[u64], b: &[u64], c: u64, _sa: &[u64], _sb: &[u64]) -> u64 {
+    let mut d = c;
+    for i in 0..kn.k {
+        d = fma(kn.fa, a[i], b[i], d);
+    }
+    d
+}
+
+/// Algorithm 2: FTZ-AddMul dot-product-accumulate.
+///
+/// Products are staged in a fixed-size stack buffer (`P ≤ MAX_L` for
+/// every modeled instruction, checked at kernel resolution), so the hot
+/// path performs no heap allocation.
+fn run_ftz(kn: &DpaKernel, a: &[u64], b: &[u64], c: u64, _sa: &[u64], _sb: &[u64]) -> u64 {
+    let fmt = kn.fa;
+    let p = kn.l;
+    // input subnormal flushing (A, B, and C)
+    let mut d = flush_subnormal_input(Format::Fp32, c);
+    let mut prods = [0u64; MAX_L];
+    let mut k = 0;
+    while k < kn.k {
+        let hi = (k + p).min(kn.k);
+        let n = hi - k;
+        for (slot, i) in prods[..n].iter_mut().zip(k..hi) {
+            *slot = ftz_mul(
+                fmt,
+                flush_subnormal_input(fmt, a[i]),
+                flush_subnormal_input(fmt, b[i]),
+            );
+        }
+        let s = match n {
+            1 => prods[0],
+            2 => ftz_add(prods[0], prods[1]),
+            4 => {
+                let s01 = ftz_add(prods[0], prods[1]);
+                let s23 = ftz_add(prods[2], prods[3]);
+                ftz_add(s01, s23)
+            }
+            n => {
+                // ragged tail: pairwise left-to-right
+                let mut s = ftz_add(prods[0], prods[1]);
+                for &q in &prods[2..n] {
+                    s = ftz_add(s, q);
+                }
+                s
+            }
+        };
+        d = ftz_add(d, s);
+        k = hi;
+    }
+    d
+}
+
+fn run_e(kn: &DpaKernel, a: &[u64], b: &[u64], c: u64, _sa: &[u64], _sb: &[u64]) -> u64 {
+    let mut d = c;
+    for chunk in 0..kn.k.div_ceil(kn.l) {
+        let lo = chunk * kn.l;
+        let hi = (lo + kn.l).min(kn.k);
+        d = e_fdpa(kn.fa, &a[lo..hi], &b[lo..hi], d);
+    }
+    d
+}
+
+fn run_t(kn: &DpaKernel, a: &[u64], b: &[u64], c: u64, _sa: &[u64], _sb: &[u64]) -> u64 {
+    let cfg = TFdpaCfg { f: kn.f, rho: kn.rho };
+    let mut d = c;
+    for chunk in 0..kn.k.div_ceil(kn.l) {
+        let lo = chunk * kn.l;
+        let hi = (lo + kn.l).min(kn.k);
+        d = t_fdpa(kn.fa, &a[lo..hi], &b[lo..hi], d, cfg);
+    }
+    d
+}
+
+fn run_st(kn: &DpaKernel, a: &[u64], b: &[u64], c: u64, sa: &[u64], sb: &[u64]) -> u64 {
+    let cfg = TFdpaCfg { f: kn.f, rho: kn.rho };
+    let mut d = c;
+    for chunk in 0..kn.k.div_ceil(kn.l) {
+        let lo = chunk * kn.l;
+        let hi = (lo + kn.l).min(kn.k);
+        // one scale per kblock: ST-FDPA takes a single (α, β) pair per
+        // call, so L == kblock on real instructions.
+        let blk = lo / kn.kblock;
+        d = st_fdpa(kn.fa, &a[lo..hi], &b[lo..hi], d, sa[blk], sb[blk], cfg);
+    }
+    d
+}
+
+fn run_gst(kn: &DpaKernel, a: &[u64], b: &[u64], c: u64, sa: &[u64], sb: &[u64]) -> u64 {
+    let cfg = GstFdpaCfg {
+        g: kn.g,
+        kblock: kn.kblock,
+        f: kn.f,
+        rho: kn.rho,
+        scale_fmt: kn.scale_fmt,
+    };
+    let mut d = c;
+    for chunk in 0..kn.k.div_ceil(kn.l) {
+        let lo = chunk * kn.l;
+        let hi = (lo + kn.l).min(kn.k);
+        let blo = lo / kn.kblock;
+        // div_ceil: a ragged final chunk still consumes its partial scale
+        // block
+        let bhi = hi.div_ceil(kn.kblock);
+        d = gst_fdpa(kn.fa, &a[lo..hi], &b[lo..hi], d, &sa[blo..bhi], &sb[blo..bhi], cfg);
+    }
+    d
+}
+
+fn run_tr(kn: &DpaKernel, a: &[u64], b: &[u64], c: u64, _sa: &[u64], _sb: &[u64]) -> u64 {
+    let cfg = TrFdpaCfg { f: kn.f, f2: kn.f2, inner_mode: RoundingMode::Down };
+    let mut d = c;
+    for chunk in 0..kn.k.div_ceil(kn.l) {
+        let lo = chunk * kn.l;
+        let hi = (lo + kn.l).min(kn.k);
+        d = tr_fdpa(kn.fa, &a[lo..hi], &b[lo..hi], d, cfg);
+    }
+    d
+}
+
+fn run_gtr(kn: &DpaKernel, a: &[u64], b: &[u64], c: u64, _sa: &[u64], _sb: &[u64]) -> u64 {
+    let cfg = GtrFdpaCfg { f: kn.f, f2: kn.f2, inner_mode: RoundingMode::Down };
+    let mut d = c;
+    for chunk in 0..kn.k.div_ceil(kn.l) {
+        let lo = chunk * kn.l;
+        let hi = (lo + kn.l).min(kn.k);
+        d = gtr_fdpa(kn.fa, &a[lo..hi], &b[lo..hi], d, cfg);
+    }
+    d
+}
+
 /// An executable Φ: a [`ModelSpec`] bound to shapes and operand formats.
 #[derive(Clone, Debug)]
 pub struct MmaModel {
@@ -129,62 +300,51 @@ impl MmaModel {
         Self { name: name.into(), m, n, k, formats, spec }
     }
 
-    /// The paper's Equation 4: one dot-product-accumulate
-    /// `d = c + Σ a_k·b_k` over bit patterns.
-    ///
-    /// `sa`/`sb` carry the per-block scale patterns for ST/GST models
-    /// (one entry per `kblock` elements), empty otherwise.
-    pub fn dpa(&self, a: &[u64], b: &[u64], c: u64, sa: &[u64], sb: &[u64]) -> u64 {
-        debug_assert_eq!(a.len(), self.k);
-        debug_assert_eq!(b.len(), self.k);
-        let fa = self.formats.a;
+    /// Resolve the spec to a [`DpaKernel`] — the per-element dispatch work
+    /// (family match, `L` clamping, config assembly, structural asserts)
+    /// done once, before any m×n loop.
+    fn kernel(&self) -> DpaKernel {
+        let mut kn = DpaKernel {
+            fa: self.formats.a,
+            k: self.k,
+            l: 0,
+            kblock: 0,
+            g: 0,
+            f: 0,
+            f2: 0,
+            rho: Rho::RzFp32,
+            scale_fmt: Format::E8M0,
+            run: run_fma,
+        };
         match self.spec {
-            ModelSpec::FmaChain => {
-                let fmt = self.formats.a;
-                let mut d = c;
-                for i in 0..self.k {
-                    d = fma(fmt, a[i], b[i], d);
-                }
-                d
+            ModelSpec::FmaChain => {}
+            ModelSpec::FtzAddMul { p } => {
+                // hard assert: the stack product buffer would index out of
+                // bounds
+                assert!(p <= MAX_L, "FTZ pairing parameter {p} exceeds {MAX_L}");
+                kn.l = p;
+                kn.run = run_ftz;
             }
-            ModelSpec::FtzAddMul { p } => self.dpa_ftz(a, b, c, p),
             ModelSpec::EFdpa { l } => {
-                let mut d = c;
-                for chunk in 0..self.k.div_ceil(l) {
-                    let lo = chunk * l;
-                    let hi = (lo + l).min(self.k);
-                    d = e_fdpa(fa, &a[lo..hi], &b[lo..hi], d);
-                }
-                d
+                kn.l = l;
+                kn.run = run_e;
             }
             ModelSpec::TFdpa { l_max, f, rho } => {
-                let l = l_max.min(self.k);
-                let cfg = TFdpaCfg { f, rho };
-                let mut d = c;
-                for chunk in 0..self.k.div_ceil(l) {
-                    let lo = chunk * l;
-                    let hi = (lo + l).min(self.k);
-                    d = t_fdpa(fa, &a[lo..hi], &b[lo..hi], d, cfg);
-                }
-                d
+                kn.l = l_max.min(self.k);
+                kn.f = f;
+                kn.rho = rho;
+                kn.run = run_t;
             }
             ModelSpec::StFdpa { l_max, f, rho, kblock } => {
                 let l = l_max.min(self.k);
                 debug_assert_eq!(l % kblock, 0, "ST-FDPA vector must cover whole blocks");
-                let cfg = TFdpaCfg { f, rho };
-                let mut d = c;
-                for chunk in 0..self.k.div_ceil(l) {
-                    let lo = chunk * l;
-                    let hi = (lo + l).min(self.k);
-                    // one scale per kblock: ST-FDPA takes a single (α, β)
-                    // pair per call, so L == kblock on real instructions.
-                    let blk = lo / kblock;
-                    d = st_fdpa(fa, &a[lo..hi], &b[lo..hi], d, sa[blk], sb[blk], cfg);
-                }
-                d
+                kn.l = l;
+                kn.f = f;
+                kn.rho = rho;
+                kn.kblock = kblock;
+                kn.run = run_st;
             }
             ModelSpec::GstFdpa { l, g, f, rho, kblock, scale_fmt } => {
-                let cfg = GstFdpaCfg { g, kblock, f, rho, scale_fmt };
                 let l = l.min(self.k);
                 // interior chunk boundaries must fall on scale-block edges;
                 // hard assert: violating this silently pairs lanes with the
@@ -193,87 +353,39 @@ impl MmaModel {
                     l % kblock == 0 || self.k <= l,
                     "GST-FDPA chunk length {l} must cover whole {kblock}-blocks"
                 );
-                let mut d = c;
-                for chunk in 0..self.k.div_ceil(l) {
-                    let lo = chunk * l;
-                    let hi = (lo + l).min(self.k);
-                    let blo = lo / kblock;
-                    // div_ceil: a ragged final chunk still consumes its
-                    // partial scale block
-                    let bhi = hi.div_ceil(kblock);
-                    d = gst_fdpa(fa, &a[lo..hi], &b[lo..hi], d, &sa[blo..bhi], &sb[blo..bhi], cfg);
-                }
-                d
+                kn.l = l;
+                kn.g = g;
+                kn.f = f;
+                kn.rho = rho;
+                kn.kblock = kblock;
+                kn.scale_fmt = scale_fmt;
+                kn.run = run_gst;
             }
             ModelSpec::TrFdpa { l_max, f, f2 } => {
-                let l = l_max.min(self.k);
-                let cfg = TrFdpaCfg { f, f2, inner_mode: RoundingMode::Down };
-                let mut d = c;
-                for chunk in 0..self.k.div_ceil(l) {
-                    let lo = chunk * l;
-                    let hi = (lo + l).min(self.k);
-                    d = tr_fdpa(fa, &a[lo..hi], &b[lo..hi], d, cfg);
-                }
-                d
+                kn.l = l_max.min(self.k);
+                kn.f = f;
+                kn.f2 = f2;
+                kn.run = run_tr;
             }
             ModelSpec::GtrFdpa { l_max, f, f2 } => {
-                let l = l_max.min(self.k);
-                let cfg = GtrFdpaCfg { f, f2, inner_mode: RoundingMode::Down };
-                let mut d = c;
-                for chunk in 0..self.k.div_ceil(l) {
-                    let lo = chunk * l;
-                    let hi = (lo + l).min(self.k);
-                    d = gtr_fdpa(fa, &a[lo..hi], &b[lo..hi], d, cfg);
-                }
-                d
+                kn.l = l_max.min(self.k);
+                kn.f = f;
+                kn.f2 = f2;
+                kn.run = run_gtr;
             }
         }
+        kn
     }
 
-    /// Algorithm 2: FTZ-AddMul dot-product-accumulate.
+    /// The paper's Equation 4: one dot-product-accumulate
+    /// `d = c + Σ a_k·b_k` over bit patterns.
     ///
-    /// Products are staged in a fixed-size stack buffer (`P ≤ MAX_L` for
-    /// every modeled instruction), so the hot path performs no heap
-    /// allocation.
-    fn dpa_ftz(&self, a: &[u64], b: &[u64], c: u64, p: usize) -> u64 {
-        // hard assert: the stack product buffer would index out of bounds
-        assert!(p <= MAX_L, "FTZ pairing parameter {p} exceeds {MAX_L}");
-        let fmt = self.formats.a;
-        // input subnormal flushing (A, B, and C)
-        let mut d = flush_subnormal_input(Format::Fp32, c);
-        let mut prods = [0u64; MAX_L];
-        let mut k = 0;
-        while k < self.k {
-            let hi = (k + p).min(self.k);
-            let n = hi - k;
-            for (slot, i) in prods[..n].iter_mut().zip(k..hi) {
-                *slot = ftz_mul(
-                    fmt,
-                    flush_subnormal_input(fmt, a[i]),
-                    flush_subnormal_input(fmt, b[i]),
-                );
-            }
-            let s = match n {
-                1 => prods[0],
-                2 => ftz_add(prods[0], prods[1]),
-                4 => {
-                    let s01 = ftz_add(prods[0], prods[1]);
-                    let s23 = ftz_add(prods[2], prods[3]);
-                    ftz_add(s01, s23)
-                }
-                n => {
-                    // ragged tail: pairwise left-to-right
-                    let mut s = ftz_add(prods[0], prods[1]);
-                    for &q in &prods[2..n] {
-                        s = ftz_add(s, q);
-                    }
-                    s
-                }
-            };
-            d = ftz_add(d, s);
-            k = hi;
-        }
-        d
+    /// `sa`/`sb` carry the per-block scale patterns for ST/GST models
+    /// (one entry per `kblock` elements), empty otherwise. One-shot entry
+    /// point (probes, references): matrix executions resolve the kernel
+    /// once instead via [`execute_view_into`](MmaModel::execute_view_into).
+    pub fn dpa(&self, a: &[u64], b: &[u64], c: u64, sa: &[u64], sb: &[u64]) -> u64 {
+        self.kernel().eval(a, b, c, sa, sb)
     }
 
     /// Number of scale blocks along K (`⌈K / K_block⌉`), 0 for unscaled
@@ -284,9 +396,41 @@ impl MmaModel {
             .unwrap_or(0)
     }
 
-    /// Execute into a caller-provided output matrix, reusing `scratch` for
-    /// every gather the dot-product loop needs — the zero-allocation core
-    /// that `execute`, `execute_batch`, and the tiled GEMM all drive.
+    /// Gather the per-row/per-column scale patterns into the flat scratch
+    /// buffers (unit scales when the model is block-scaled but none were
+    /// supplied) and return the block count per dot product (0 = unscaled).
+    fn gather_scales(&self, scales: Scales, scratch: &mut DpaScratch) -> usize {
+        let Some(spec) = self.scale_spec() else {
+            return 0;
+        };
+        let nblk = self.scale_blocks();
+        scratch.sa.clear();
+        scratch.sb.clear();
+        match scales {
+            Some((am, bm)) => {
+                assert_eq!((am.rows, am.cols), (self.m, nblk), "A scales");
+                assert_eq!((bm.rows, bm.cols), (nblk, self.n), "B scales");
+                for i in 0..self.m {
+                    scratch.sa.extend_from_slice(am.row(i));
+                }
+                for j in 0..self.n {
+                    for r in 0..nblk {
+                        scratch.sb.push(bm.get(r, j));
+                    }
+                }
+            }
+            None => {
+                let unit = unit_scale(spec.fmt);
+                scratch.sa.resize(self.m * nblk, unit);
+                scratch.sb.resize(self.n * nblk, unit);
+            }
+        }
+        nblk
+    }
+
+    /// Execute into a caller-provided output matrix — a thin wrapper that
+    /// turns whole matrices into views and runs the strided core
+    /// ([`execute_view_into`](MmaModel::execute_view_into)).
     pub fn execute_into(
         &self,
         a: &BitMatrix,
@@ -296,41 +440,73 @@ impl MmaModel {
         d: &mut BitMatrix,
         scratch: &mut DpaScratch,
     ) {
+        assert_eq!((d.rows, d.cols), (self.m, self.n), "D shape");
+        d.fmt = self.formats.d;
+        self.execute_view_into(a.view(), b.view(), c.view(), scales, d.view_mut(), scratch);
+    }
+
+    /// The zero-copy execution core: strided operand views are read in
+    /// place (A rows and C elements straight from the caller's memory,
+    /// whatever its stride), B is pretransposed once into the scratch
+    /// panel — the only data movement on the path — and the [`ModelSpec`]
+    /// is resolved to a kernel function once before the m×n loop.
+    /// `execute`, `execute_batch`, and the tiled GEMM all bottom out here;
+    /// any traversal that feeds the kernels the same `(a_row, b_col, c)`
+    /// triples is bit-identical by construction.
+    pub fn execute_view_into(
+        &self,
+        a: MatRef<'_>,
+        b: MatRef<'_>,
+        c: MatRef<'_>,
+        scales: Scales,
+        mut d: MatMut<'_>,
+        scratch: &mut DpaScratch,
+    ) {
         assert_eq!((a.rows, a.cols), (self.m, self.k), "A shape");
         assert_eq!((b.rows, b.cols), (self.k, self.n), "B shape");
         assert_eq!((c.rows, c.cols), (self.m, self.n), "C shape");
         assert_eq!((d.rows, d.cols), (self.m, self.n), "D shape");
-        d.fmt = self.formats.d;
+        let nblk = self.gather_scales(scales, scratch);
+        scratch.panel.fill(b);
+        self.run_view_loop(a, Some(c), &mut d, nblk, scratch);
+    }
 
-        // Gather scale rows/columns into the flat scratch buffers (unit
-        // scales when none are supplied).
-        let nblk = self.scale_blocks();
-        if let Some(spec) = self.scale_spec() {
-            scratch.sa.clear();
-            scratch.sb.clear();
-            match scales {
-                Some((am, bm)) => {
-                    assert_eq!((am.rows, am.cols), (self.m, nblk), "A scales");
-                    assert_eq!((bm.rows, bm.cols), (nblk, self.n), "B scales");
-                    for i in 0..self.m {
-                        scratch.sa.extend_from_slice(am.row(i));
-                    }
-                    for j in 0..self.n {
-                        for r in 0..nblk {
-                            scratch.sb.push(bm.get(r, j));
-                        }
-                    }
-                }
-                None => {
-                    let unit = unit_scale(spec.fmt);
-                    scratch.sa.resize(self.m * nblk, unit);
-                    scratch.sb.resize(self.n * nblk, unit);
-                }
-            }
-        }
+    /// In-place K-chain step: the accumulator is read from `cd` and the
+    /// output written back over it — sound because output `(i, j)` depends
+    /// on no other element of C. This is the tiled GEMM's band form: the
+    /// accumulator chain lives directly in the caller's D matrix, so the
+    /// hot loop performs no C/D staging at all. A block-scaled model runs
+    /// with unit scales, matching `execute_into` with `scales: None`.
+    pub fn execute_view_acc(
+        &self,
+        a: MatRef<'_>,
+        b: MatRef<'_>,
+        cd: &mut MatMut<'_>,
+        scratch: &mut DpaScratch,
+    ) {
+        assert_eq!((a.rows, a.cols), (self.m, self.k), "A shape");
+        assert_eq!((b.rows, b.cols), (self.k, self.n), "B shape");
+        assert_eq!((cd.rows, cd.cols), (self.m, self.n), "C/D shape");
+        let nblk = self.gather_scales(None, scratch);
+        scratch.panel.fill(b);
+        self.run_view_loop(a, None, cd, nblk, scratch);
+    }
 
+    /// The shared m×n loop of both view paths: the accumulator for output
+    /// `(i, j)` comes from `c` when supplied, otherwise it is read back
+    /// from `d` (the in-place K-chain form). Expects the scratch panel
+    /// and scale buffers to be filled for this call already.
+    fn run_view_loop(
+        &self,
+        a: MatRef<'_>,
+        c: Option<MatRef<'_>>,
+        d: &mut MatMut<'_>,
+        nblk: usize,
+        scratch: &DpaScratch,
+    ) {
+        let kernel = self.kernel();
         for j in 0..self.n {
-            b.col_into(j, &mut scratch.bcol);
+            let bcol = scratch.panel.col(j);
             for i in 0..self.m {
                 let (sa, sb): (&[u64], &[u64]) = if nblk > 0 {
                     (
@@ -340,8 +516,11 @@ impl MmaModel {
                 } else {
                     (&[], &[])
                 };
-                let out = self.dpa(a.row(i), &scratch.bcol, c.get(i, j), sa, sb);
-                d.set(i, j, out);
+                let acc = match c {
+                    Some(c) => c.get(i, j),
+                    None => d.get(i, j),
+                };
+                d.set(i, j, kernel.eval(a.row(i), bcol, acc, sa, sb));
             }
         }
     }

@@ -162,7 +162,14 @@ mod tests {
         // +large with small negative tail: RZ truncation of the negative
         // summand must shrink its magnitude, not floor it.
         // terms: 2^2 and -2^-30 with F=24: -2^-30 truncates to 0 => 4.0
-        let d = run(Format::Fp16, 24, Rho::RzFp32, &[2.0, -2f64.powi(-14)], &[2.0, 2f64.powi(-16)], 0.0);
+        let d = run(
+            Format::Fp16,
+            24,
+            Rho::RzFp32,
+            &[2.0, -2f64.powi(-14)],
+            &[2.0, 2f64.powi(-16)],
+            0.0,
+        );
         assert_eq!(d, 4.0);
     }
 

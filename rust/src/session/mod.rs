@@ -384,42 +384,12 @@ impl Session {
                 ),
             });
         }
-        let (tm, tn, tk) = self.model.shape();
-        let fmts = self.model.formats;
-        for (operand, mat, fmt) in [("A", a, fmts.a), ("B", b, fmts.b), ("C", c, fmts.c)] {
-            if mat.fmt != fmt {
-                return Err(ApiError::FormatMismatch { operand, expected: fmt, got: mat.fmt });
-            }
-        }
-        if a.rows % tm != 0 || a.cols % tk != 0 {
-            return Err(ApiError::ShapeMismatch {
-                operand: "A (must tile by the instruction's MxK)",
-                expected: (tm, tk),
-                got: (a.rows, a.cols),
-            });
-        }
-        if b.rows != a.cols || b.cols % tn != 0 {
-            return Err(ApiError::ShapeMismatch {
-                operand: "B (rows must equal A cols; cols must tile by N)",
-                expected: (a.cols, tn),
-                got: (b.rows, b.cols),
-            });
-        }
-        if (c.rows, c.cols) != (a.rows, b.cols) {
-            return Err(ApiError::ShapeMismatch {
-                operand: "C",
-                expected: (a.rows, b.cols),
-                got: (c.rows, c.cols),
-            });
-        }
         let gemm = TiledGemm::from_model(self.model.clone());
-        let bands = a.rows / tm;
-        let threads = if self.threads > 0 {
-            self.threads
+        if self.threads > 0 {
+            gemm.try_execute_with_threads(a, b, c, self.threads)
         } else {
-            crate::interface::auto_threads(bands, tm * b.cols * a.cols)
-        };
-        Ok(gemm.execute_with_threads(a, b, c, threads))
+            gemm.try_execute(a, b, c)
+        }
     }
 
     /// One validated dot-product probe: the `(0,0)` output for
@@ -428,10 +398,18 @@ impl Session {
         let (_, _, k) = self.model.shape();
         let fmts = self.model.formats;
         if a_row.len() != k {
-            return Err(ApiError::LengthMismatch { what: "probe A row", expected: k, got: a_row.len() });
+            return Err(ApiError::LengthMismatch {
+                what: "probe A row",
+                expected: k,
+                got: a_row.len(),
+            });
         }
         if b_col.len() != k {
-            return Err(ApiError::LengthMismatch { what: "probe B column", expected: k, got: b_col.len() });
+            return Err(ApiError::LengthMismatch {
+                what: "probe B column",
+                expected: k,
+                got: b_col.len(),
+            });
         }
         for (operand, bits, fmt) in a_row
             .iter()

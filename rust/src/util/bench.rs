@@ -110,7 +110,13 @@ pub fn bench<F: FnMut()>(name: &str, mut f: F) -> BenchResult {
     let mean = samples.iter().sum::<f64>() / n as f64;
     let p50 = samples[n / 2];
     let p99 = samples[((n * 99) / 100).min(n - 1)];
-    let r = BenchResult { name: name.to_string(), iters: n, mean_ns: mean, p50_ns: p50, p99_ns: p99 };
+    let r = BenchResult {
+        name: name.to_string(),
+        iters: n,
+        mean_ns: mean,
+        p50_ns: p50,
+        p99_ns: p99,
+    };
     println!("{}", r.report());
     r
 }
