@@ -67,7 +67,7 @@ fn main() {
     // the session facade owns pool construction/teardown; `mma-sim serve
     // --jsonl` wraps the same pairs in the long-running JSON-lines service
     let cfg = CampaignConfig { workers, jobs: 8, batch: 50, seed: 0x5EED };
-    let report = session::campaign(pairs, &cfg);
+    let report = session::campaign(pairs, &cfg).expect("worker pool died mid-campaign");
     println!("{}", report.render());
 
     let faulty = &report.pairs["faulty-device-f24-vs-f25"];

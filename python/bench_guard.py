@@ -18,6 +18,12 @@ Two checks over a fresh ``BENCH_hotpath.json``:
      on smoke runs (env ``GUARD_MIN_GEMM_SPEEDUP`` overrides both).
      Catches the strided engine regressing to (or below) staged-copy
      cost, e.g. a change that reintroduces per-tile operand staging.
+   - ``shard`` section — the marginal per-job cost of a 1-shard
+     ``mma-sim shard`` campaign (child process + JSON-lines seam) vs the
+     in-process coordinator, measured as a finite difference so child
+     startup cost cancels. Ceiling: 2.0x on full runs, 4.0x on smoke
+     runs (env ``GUARD_MAX_SHARD_OVERHEAD`` overrides both). Catches the
+     wire seam getting expensive relative to the work it ships.
 
 2. **Cross-run**: record-by-record, the fresh run must not regress more
    than ``REGRESSION_FACTOR`` (2x) against the committed baseline. When
@@ -55,6 +61,13 @@ def gemm_floor(fresh):
     if env is not None:
         return float(env)
     return 0.75 if fresh.get("smoke") else 1.0
+
+
+def shard_ceiling(fresh):
+    env = os.environ.get("GUARD_MAX_SHARD_OVERHEAD")
+    if env is not None:
+        return float(env)
+    return 4.0 if fresh.get("smoke") else 2.0
 
 
 def load(path):
@@ -127,6 +140,40 @@ def main():
             print(
                 f"guard: gemm.speedup_strided_vs_staged = {speedup:.2f}x "
                 f"(>= {floor:.2f}x) ok"
+            )
+
+    # --- check 1c: shard-seam marginal overhead --------------------------
+    # The sharded campaign runner's fixed cost (child startup, registry +
+    # LUT warm) amortizes away; what must stay bounded is the marginal
+    # per-job cost of the JSON-lines seam vs the in-process coordinator.
+    ceiling = shard_ceiling(fresh)
+    shard = fresh.get("shard") or {}
+    if not shard:
+        failures.append("no `shard` section in fresh run (shard-seam bench missing)")
+    else:
+        overhead = shard.get("overhead_marginal_vs_inprocess")
+        if overhead is None and shard.get("measurable") is False:
+            # the bench's finite difference came out non-positive: noise
+            # swamped the tiny workload, so there is nothing to judge
+            print(
+                "guard: shard marginals below timer resolution -- "
+                "overhead check skipped this run"
+            )
+        elif overhead is None:
+            failures.append(
+                "shard.overhead_marginal_vs_inprocess is null -- bench emitted "
+                "no measurement"
+            )
+        elif overhead > ceiling:
+            failures.append(
+                f"shard.overhead_marginal_vs_inprocess = {overhead:.2f}x > "
+                f"{ceiling:.2f}x: the JSON-lines seam costs too much per job "
+                "vs the in-process coordinator"
+            )
+        else:
+            print(
+                f"guard: shard.overhead_marginal_vs_inprocess = {overhead:.2f}x "
+                f"(<= {ceiling:.2f}x) ok"
             )
 
     # --- check 2: cross-run vs committed baseline ------------------------

@@ -41,7 +41,7 @@ fn main() {
             let coord = Coordinator::new(vec![pair], workers, workers * 2);
             let jobs = 8;
             let r = bench(&format!("validate/w{workers}/batch{batch}"), || {
-                black_box(coord.run_campaign(jobs, batch, 7));
+                black_box(coord.run_campaign(jobs, batch, 7).unwrap());
             });
             let rate = r.throughput((jobs * batch) as f64);
             println!("    -> {rate:.0} MMAs verified/s");
@@ -72,7 +72,7 @@ fn main() {
                     };
                     let coord = Coordinator::new(vec![pair], 1, 2);
                     let r = bench("validate/pjrt/hopper_fp16(batch 20)", || {
-                        black_box(coord.run_campaign(1, 20, 7));
+                        black_box(coord.run_campaign(1, 20, 7).unwrap());
                     });
                     let rate = r.throughput(20.0);
                     println!("    -> {rate:.0} PJRT MMAs verified/s");

@@ -33,6 +33,7 @@ use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::Instant;
 
+use crate::error::ApiError;
 use crate::util::Rng;
 
 /// A unit of verification work.
@@ -107,14 +108,25 @@ impl Coordinator {
     }
 
     /// Submit a job; blocks when the queue is full (backpressure).
-    pub fn submit(&self, job: Job) {
+    ///
+    /// Errors with [`ApiError::PoolStopped`] when every worker thread has
+    /// exited — a long-running caller (the serve loop, a shard parent)
+    /// must be able to survive a dead pool instead of panicking.
+    pub fn submit(&self, job: Job) -> Result<(), ApiError> {
+        self.tx
+            .send(Msg::Work(job))
+            .map_err(|_| ApiError::PoolStopped { during: "job submission" })?;
         self.submitted.fetch_add(1, Ordering::Relaxed);
-        self.tx.send(Msg::Work(job)).expect("coordinator stopped");
+        Ok(())
     }
 
-    /// Collect one outcome (blocking).
-    pub fn next_outcome(&self) -> JobOutcome {
-        self.outcome_rx.recv().expect("workers stopped")
+    /// Collect one outcome (blocking). Errors with
+    /// [`ApiError::PoolStopped`] when every worker thread has exited and
+    /// the outcome channel is drained.
+    pub fn next_outcome(&self) -> Result<JobOutcome, ApiError> {
+        self.outcome_rx
+            .recv()
+            .map_err(|_| ApiError::PoolStopped { during: "outcome collection" })
     }
 
     /// Collect one outcome if any is ready (non-blocking) — the polling
@@ -124,8 +136,14 @@ impl Coordinator {
     }
 
     /// Run a full campaign: `jobs` batches of `batch` tests per pair,
-    /// round-robin over all pairs, and aggregate the report.
-    pub fn run_campaign(&self, jobs: usize, batch: usize, seed: u64) -> CampaignReport {
+    /// round-robin over all pairs, and aggregate the report. Errors with
+    /// [`ApiError::PoolStopped`] if the worker pool dies mid-campaign.
+    pub fn run_campaign(
+        &self,
+        jobs: usize,
+        batch: usize,
+        seed: u64,
+    ) -> Result<CampaignReport, ApiError> {
         let started = Instant::now();
         let mut rng = Rng::new(seed);
         let total = jobs * self.pairs.len();
@@ -139,16 +157,16 @@ impl Coordinator {
         while collected < total {
             while submitted < total && submitted - collected < self.handles.len() * 2 {
                 let pair = self.pairs[submitted % self.pairs.len()].clone();
-                self.submit(Job { id: next_job, pair, batch, seed: rng.next_u64() });
+                self.submit(Job { id: next_job, pair, batch, seed: rng.next_u64() })?;
                 next_job += 1;
                 submitted += 1;
             }
-            let outcome = self.next_outcome();
+            let outcome = self.next_outcome()?;
             report.absorb(&outcome);
             collected += 1;
         }
         report.wall_micros = started.elapsed().as_micros() as u64;
-        report
+        Ok(report)
     }
 
     /// Stop the pool and join the workers.
@@ -187,7 +205,7 @@ mod tests {
             golden: StdArc::new(model(24)),
         };
         let c = Coordinator::new(vec![pair], 2, 4);
-        let report = c.run_campaign(6, 50, 42);
+        let report = c.run_campaign(6, 50, 42).unwrap();
         assert_eq!(report.total_tests, 300);
         assert_eq!(report.total_mismatches, 0);
         c.shutdown();
@@ -201,7 +219,7 @@ mod tests {
             golden: StdArc::new(model(24)),
         };
         let c = Coordinator::new(vec![pair], 2, 4);
-        let report = c.run_campaign(4, 100, 7);
+        let report = c.run_campaign(4, 100, 7).unwrap();
         assert!(report.total_mismatches > 0, "F=24 vs F=25 must diverge");
         let stats = &report.pairs["diff"];
         assert!(stats.first_mismatch.is_some());
@@ -221,7 +239,7 @@ mod tests {
             golden: StdArc::new(model(24)),
         };
         let c = Coordinator::new(vec![p1, p2], 3, 4);
-        let report = c.run_campaign(4, 60, 11);
+        let report = c.run_campaign(4, 60, 11).unwrap();
         assert_eq!(report.pairs["a"].mismatches, 0);
         assert!(report.pairs["b"].mismatches > 0);
         c.shutdown();
@@ -235,7 +253,7 @@ mod tests {
             golden: StdArc::new(model(24)),
         };
         let c = Coordinator::new(vec![pair], 4, 2);
-        let report = c.run_campaign(8, 25, 3);
+        let report = c.run_campaign(8, 25, 3).unwrap();
         assert_eq!(report.total_tests, 200);
         assert!(report.wall_micros > 0);
         c.shutdown();

@@ -24,6 +24,12 @@ pub struct PairStats {
     pub mismatches: usize,
     pub busy_micros: u64,
     pub first_mismatch: Option<Mismatch>,
+    /// Id of the job `first_mismatch` came from. Outcomes complete in
+    /// nondeterministic order on a multi-worker pool, so "first" is
+    /// defined as *lowest job id*, which makes the aggregated report
+    /// deterministic for a fixed job list — and lets shard summaries
+    /// merge without re-reading every outcome.
+    pub first_mismatch_job: Option<u64>,
 }
 
 /// Aggregated campaign report.
@@ -50,8 +56,62 @@ impl CampaignReport {
         entry.tests += outcome.tests;
         entry.mismatches += outcome.mismatches.len();
         entry.busy_micros += outcome.micros;
-        if entry.first_mismatch.is_none() {
+        // keep the mismatch from the lowest job id (not the first to
+        // complete): absorb order then cannot influence the report
+        if !outcome.mismatches.is_empty()
+            && entry.first_mismatch_job.map_or(true, |id| outcome.id < id)
+        {
             entry.first_mismatch = outcome.mismatches.first().cloned();
+            entry.first_mismatch_job = Some(outcome.id);
+        }
+    }
+
+    /// Fold another report (typically one shard's summary) into this one:
+    /// counters and per-pair stats sum, `wall_micros` is the max across
+    /// shards (shards run concurrently), and each pair's `first_mismatch`
+    /// is kept from whichever report saw the lowest job id — so a merged
+    /// report is identical however the jobs were partitioned.
+    pub fn merge(&mut self, other: &CampaignReport) {
+        self.total_jobs += other.total_jobs;
+        self.total_tests += other.total_tests;
+        self.total_mismatches += other.total_mismatches;
+        self.wall_micros = self.wall_micros.max(other.wall_micros);
+        for (name, st) in &other.pairs {
+            let entry = self.pairs.entry(name.clone()).or_default();
+            entry.jobs += st.jobs;
+            entry.tests += st.tests;
+            entry.mismatches += st.mismatches;
+            entry.busy_micros += st.busy_micros;
+            let take = if st.first_mismatch.is_none() {
+                false
+            } else if entry.first_mismatch.is_none() {
+                // any triple beats none — covers summaries from pre-merge
+                // producers that carry a mismatch but no job id
+                true
+            } else {
+                match (entry.first_mismatch_job, st.first_mismatch_job) {
+                    (Some(mine), Some(theirs)) => theirs < mine,
+                    // a known job id beats an unknown (legacy) one, and an
+                    // unknown one never displaces an existing triple
+                    (None, Some(_)) => true,
+                    (_, None) => false,
+                }
+            };
+            if take {
+                entry.first_mismatch = st.first_mismatch.clone();
+                entry.first_mismatch_job = st.first_mismatch_job;
+            }
+        }
+    }
+
+    /// Zero every timing field (wall clock and per-pair busy time) — the
+    /// only nondeterministic content of a report. The shard runner's
+    /// `--deterministic` mode uses this so the merged summary is
+    /// byte-identical across shard counts and runs.
+    pub fn clear_timing(&mut self) {
+        self.wall_micros = 0;
+        for st in self.pairs.values_mut() {
+            st.busy_micros = 0;
         }
     }
 
@@ -119,6 +179,107 @@ mod tests {
         assert_eq!(r.total_mismatches, 1);
         assert_eq!(r.pairs["x"].busy_micros, 12);
         assert!(r.pairs["x"].first_mismatch.is_some());
+        assert_eq!(r.pairs["x"].first_mismatch_job, Some(1));
         assert!(r.render().contains("DIVERGES"));
+    }
+
+    fn outcome(id: u64, pair: &str, golden_bits: u64) -> JobOutcome {
+        JobOutcome {
+            id,
+            pair: pair.into(),
+            tests: 10,
+            mismatches: vec![Mismatch {
+                test_index: 0,
+                element: 0,
+                golden_bits,
+                dut_bits: golden_bits ^ 1,
+                a: vec![],
+                b: vec![],
+                c: vec![],
+            }],
+            micros: id + 1,
+        }
+    }
+
+    #[test]
+    fn absorb_order_cannot_change_first_mismatch() {
+        // the same outcomes in two completion orders: identical report
+        let mut fwd = CampaignReport::new();
+        let mut rev = CampaignReport::new();
+        let outcomes = [outcome(0, "x", 0xA), outcome(1, "x", 0xB), outcome(2, "x", 0xC)];
+        for o in &outcomes {
+            fwd.absorb(o);
+        }
+        for o in outcomes.iter().rev() {
+            rev.absorb(o);
+        }
+        assert_eq!(fwd, rev);
+        assert_eq!(fwd.pairs["x"].first_mismatch_job, Some(0));
+        assert_eq!(fwd.pairs["x"].first_mismatch.as_ref().unwrap().golden_bits, 0xA);
+    }
+
+    #[test]
+    fn merge_is_partition_independent() {
+        // six outcomes over two pairs, split 1|2|3 ways: merged reports agree
+        let outcomes: Vec<JobOutcome> = (0..6)
+            .map(|i| outcome(i, if i % 2 == 0 { "even" } else { "odd" }, 0x100 + i))
+            .collect();
+        let merged_from = |splits: &[&[usize]]| {
+            let mut merged = CampaignReport::new();
+            for split in splits {
+                let mut shard = CampaignReport::new();
+                shard.wall_micros = 40 + split.len() as u64; // max survives
+                for &i in *split {
+                    shard.absorb(&outcomes[i]);
+                }
+                merged.merge(&shard);
+            }
+            merged
+        };
+        let one = merged_from(&[&[0, 1, 2, 3, 4, 5]]);
+        let two = merged_from(&[&[1, 3, 5], &[0, 2, 4]]);
+        let three = merged_from(&[&[5, 2], &[4, 1], &[3, 0]]);
+        // timing differs by construction; everything else must not
+        for r in [&one, &two, &three] {
+            assert_eq!(r.total_jobs, 6);
+            assert_eq!(r.total_tests, 60);
+            assert_eq!(r.total_mismatches, 6);
+            assert_eq!(r.pairs["even"].first_mismatch_job, Some(0));
+            assert_eq!(r.pairs["odd"].first_mismatch_job, Some(1));
+            assert_eq!(r.pairs["even"].first_mismatch.as_ref().unwrap().golden_bits, 0x100);
+            assert_eq!(r.pairs["odd"].first_mismatch.as_ref().unwrap().golden_bits, 0x101);
+        }
+        let (mut a, mut b) = (two.clone(), three.clone());
+        a.clear_timing();
+        b.clear_timing();
+        assert_eq!(a, b, "cleared-timing merged reports are identical");
+        assert_eq!(one.wall_micros, 46);
+        assert_eq!(two.wall_micros, 43, "wall is the max across shards");
+    }
+
+    #[test]
+    fn merge_keeps_a_legacy_mismatch_without_job_id() {
+        // a summary decoded from a pre-merge producer carries
+        // first_mismatch but no first_mismatch_job: the triple must
+        // survive a merge into an empty (or mismatch-free) report
+        let mut legacy = CampaignReport::new();
+        legacy.absorb(&outcome(5, "x", 0xF));
+        legacy.pairs.get_mut("x").unwrap().first_mismatch_job = None;
+
+        let mut merged = CampaignReport::new();
+        merged.merge(&legacy);
+        assert!(merged.pairs["x"].first_mismatch.is_some(), "legacy triple survives");
+        assert_eq!(merged.pairs["x"].first_mismatch_job, None);
+
+        // a triple with a known job id displaces the legacy one…
+        let mut modern = CampaignReport::new();
+        modern.absorb(&outcome(9, "x", 0x9));
+        merged.merge(&modern);
+        assert_eq!(merged.pairs["x"].first_mismatch_job, Some(9));
+        assert_eq!(merged.pairs["x"].first_mismatch.as_ref().unwrap().golden_bits, 0x9);
+
+        // …and a legacy one never displaces an existing triple
+        merged.merge(&legacy);
+        assert_eq!(merged.pairs["x"].first_mismatch_job, Some(9));
     }
 }

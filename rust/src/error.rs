@@ -73,6 +73,14 @@ pub enum ApiError {
     /// A JSON document failed to parse or decode; `offset` is the byte
     /// position in the input where parsing stopped (0 for semantic errors).
     Json { offset: usize, msg: String },
+    /// The coordinator's worker pool is no longer running (every worker
+    /// thread exited or the pool was shut down), so jobs can no longer be
+    /// submitted nor outcomes collected. A long-running caller treats this
+    /// as "restart the pool", not as a reason to die.
+    PoolStopped { during: &'static str },
+    /// A cross-process sharding failure: a worker could not be launched,
+    /// every worker died, or a child broke the wire protocol.
+    Shard { detail: String },
 }
 
 impl fmt::Display for ApiError {
@@ -131,6 +139,12 @@ impl fmt::Display for ApiError {
             ApiError::Json { offset, msg } => {
                 write!(f, "JSON error at byte {offset}: {msg}")
             }
+            ApiError::PoolStopped { during } => write!(
+                f,
+                "worker pool stopped during {during} (all worker threads exited \
+                 or the pool was shut down)"
+            ),
+            ApiError::Shard { detail } => write!(f, "shard failure: {detail}"),
         }
     }
 }

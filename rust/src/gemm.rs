@@ -16,6 +16,23 @@ use crate::interface::{auto_threads, BitMatrix, MatMut, MmaFormats, MmaInterface
 use crate::isa::Instruction;
 use crate::models::{DpaScratch, MmaModel};
 
+/// Split `bands` row bands into at most `groups` contiguous spans of
+/// near-equal (ceiling) size. This is the band plan shared by the
+/// in-process threaded executor (one span per worker thread) and the
+/// cross-process shard runner (one span per band request), so both paths
+/// partition a GEMM identically.
+pub fn band_groups(bands: usize, groups: usize) -> Vec<std::ops::Range<usize>> {
+    if bands == 0 {
+        return Vec::new();
+    }
+    let groups = groups.clamp(1, bands);
+    let per = bands.div_ceil(groups);
+    (0..groups)
+        .map(|g| (g * per).min(bands)..((g + 1) * per).min(bands))
+        .filter(|r| !r.is_empty())
+        .collect()
+}
+
 /// An arbitrary-shape GEMM executor built from one MMAU instruction.
 pub struct TiledGemm {
     /// The per-tile model (instruction shape).
@@ -155,11 +172,13 @@ impl TiledGemm {
         } else {
             let mut pending: Vec<(usize, &mut [u64])> =
                 d.data.chunks_mut(tm * n).enumerate().collect();
-            let per = pending.len().div_ceil(threads);
+            // one contiguous span per worker, from the same band plan the
+            // shard runner scatters across processes (`band_groups`)
+            let spans = band_groups(pending.len(), threads);
             std::thread::scope(|s| {
-                while !pending.is_empty() {
-                    let take = per.min(pending.len());
-                    let group: Vec<(usize, &mut [u64])> = pending.drain(..take).collect();
+                // peel spans off the back so indices stay aligned
+                for span in spans.into_iter().rev() {
+                    let group: Vec<(usize, &mut [u64])> = pending.split_off(span.start);
                     s.spawn(move || {
                         let mut scratch = DpaScratch::default();
                         for (band, rows) in group {

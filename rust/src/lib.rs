@@ -13,8 +13,13 @@
 //!   shape/format/scale spec ([`ApiError`] instead of panics),
 //!   reuses scratch across runs, and exposes `run` / `run_batch` /
 //!   `gemm` / `probe` / `infer` / `campaign` plus JSON-lines
-//!   serialization ([`session::json`]) and the long-running verification
-//!   service ([`session::serve`]). Start here; the layers below are the
+//!   serialization ([`session::json`]), the long-running verification
+//!   service ([`session::serve`]), and process-level sharding
+//!   ([`session::shard`]: a `ShardPool` scatters verification jobs or
+//!   GEMM row bands over `mma-sim` child workers through a
+//!   `WorkerTransport`, requeues work from dying children, and merges
+//!   the reply streams back deterministically — `Session::shard_campaign`
+//!   / `Session::shard_gemm`). Start here; the layers below are the
 //!   machinery it drives.
 //! - [`error`] — the structured [`ApiError`] every validated entry point
 //!   rejects malformed input with (a leaf module, so the layers below can
@@ -48,7 +53,9 @@
 //!   instruction; tiles are strided windows into the caller's matrices
 //!   (no operand staging) and the accumulator chain lives directly in the
 //!   output matrix. Fallible entry: `TiledGemm::try_execute` (validated
-//!   facade entry: [`session::Session::gemm`]).
+//!   facade entry: [`session::Session::gemm`]). `gemm::band_groups` is
+//!   the row-band plan shared by the in-process threaded executor and
+//!   the cross-process shard runner.
 //! - [`clfp`] — the closed-loop feature-probing framework (paper §3).
 //! - [`analysis`] — discrepancy (Table 8), error bounds (Table 9), risky
 //!   designs (Table 10), summation trees (Figure 2), rounding bias

@@ -15,20 +15,25 @@
 //! - `probe`                     — CLFP closed loop against a model or artifact
 //! - `validate`                  — randomized cross-validation vs PJRT artifacts
 //! - `serve`                     — verification campaign, one-shot or JSON-lines
+//! - `shard`                     — campaign (or `--gemm`) sharded across child
+//!                                 `mma-sim` worker processes
 //!
 //! The argument parser is hand-rolled: the offline image ships no clap.
 
-use std::io::{BufRead, Write};
 use std::sync::Arc;
 
 use mma_sim::util::error::Result;
 use mma_sim::{anyhow, bail};
 
 use mma_sim::clfp::ClfpConfig;
-use mma_sim::coordinator::VerifyPair;
-use mma_sim::interface::MmaInterface;
+use mma_sim::coordinator::{Job, VerifyPair};
+use mma_sim::interface::{BitMatrix, MmaInterface};
 use mma_sim::runtime::{artifacts_dir, model_for_artifact, read_manifest, Runtime};
-use mma_sim::session::{self, json, CampaignConfig, ServeConfig, Session, SessionBuilder};
+use mma_sim::session::{
+    self, json, CampaignConfig, ProcessTransport, ServeConfig, Session, SessionBuilder,
+    ShardConfig,
+};
+use mma_sim::util::Rng;
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -67,6 +72,7 @@ fn dispatch(args: &[String]) -> Result<()> {
         Some("probe") => cmd_probe(args),
         Some("validate") => cmd_validate(args),
         Some("serve") => cmd_serve(args),
+        Some("shard") => cmd_shard(args),
         Some("help") | None => {
             print_help();
             Ok(())
@@ -98,7 +104,19 @@ fn print_help() {
          \x20                                    one-shot verification campaign\n\
          \x20 serve --jsonl [--workers N]        long-running service: read job lines\n\
          \x20                                    {{\"pair\":…,\"batch\":…,\"seed\":…}} on stdin,\n\
-         \x20                                    emit live outcome lines + final summary"
+         \x20                                    emit live outcome lines + final summary\n\
+         \x20 shard [--workers N] [--jobs J] [--batch B] [--seed S] [--pair NAME]...\n\
+         \x20       [--child-workers W] [--inflight K] [--deterministic]\n\
+         \x20                                    campaign sharded across N child\n\
+         \x20                                    `serve --jsonl` processes; outcome\n\
+         \x20                                    lines merged in job-id order + one\n\
+         \x20                                    merged summary (--deterministic\n\
+         \x20                                    zeroes timing: byte-identical output\n\
+         \x20                                    for any N)\n\
+         \x20 shard --gemm --arch A --instr FRAG [--m M --n N --k K] [--check]\n\
+         \x20                                    GEMM row bands scattered across\n\
+         \x20                                    `simulate --stdin` children; --check\n\
+         \x20                                    asserts bit-identity vs in-process"
     );
 }
 
@@ -162,25 +180,13 @@ fn cmd_simulate(args: &[String]) -> Result<()> {
     Ok(())
 }
 
-/// The sharding seam: one validated `run` per input case line.
+/// The sharding seam: one validated `run` per input case line, plus the
+/// `set_b`/`band` frames the sharded-GEMM parent drives (the loop itself
+/// lives in [`session::serve_cases`]).
 fn simulate_stream(session: &Session) -> Result<()> {
     let stdin = std::io::stdin();
     let mut out = std::io::stdout().lock();
-    for line in stdin.lock().lines() {
-        let line = line?;
-        if line.trim().is_empty() {
-            continue;
-        }
-        match json::decode_case(line.trim()).and_then(|case| session.run(&case)) {
-            Ok(output) => writeln!(out, "{}", json::encode_run_output(&output))?,
-            Err(e) => {
-                let msg = json::JsonValue::str(e.to_string()).encode();
-                writeln!(out, "{{\"error\":{msg}}}")?
-            }
-        }
-        out.flush()?;
-    }
-    Ok(())
+    session::serve_cases(session, stdin.lock(), &mut out)
 }
 
 fn cmd_table(args: &[String]) -> Result<()> {
@@ -273,6 +279,128 @@ fn cmd_validate(args: &[String]) -> Result<()> {
     Ok(())
 }
 
+/// Every value of a repeatable flag, in order.
+fn multi_flag(args: &[String], name: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut i = 0;
+    while i < args.len() {
+        if args[i] == name {
+            if let Some(v) = args.get(i + 1) {
+                out.push(v.clone());
+                i += 2;
+                continue;
+            }
+        }
+        i += 1;
+    }
+    out
+}
+
+fn cmd_shard(args: &[String]) -> Result<()> {
+    let shard_cfg = ShardConfig {
+        workers: parsed(args, "--workers", 2usize)?,
+        inflight: parsed(args, "--inflight", 0usize)?,
+        child_workers: parsed(args, "--child-workers", 2usize)?,
+        deterministic: has(args, "--deterministic"),
+    };
+    let transport = ProcessTransport::current_exe()?;
+    if has(args, "--gemm") {
+        return cmd_shard_gemm(args, &shard_cfg, &transport);
+    }
+
+    // campaign mode: jobs round-robin over the (optionally filtered)
+    // registry pair names — the same generator a one-shot `serve` uses,
+    // so an N-shard run covers exactly the same job list as one process
+    let jobs_n = parsed(args, "--jobs", 8usize)?;
+    let batch = parsed(args, "--batch", 100usize)?;
+    let seed = parsed(args, "--seed", 0x5EEDu64)?;
+    let filters = multi_flag(args, "--pair");
+    let mut names: Vec<String> = session::registry_pairs(session::SERVE_REGISTRY_TILE_CAP)
+        .iter()
+        .map(|p| p.name.clone())
+        .collect();
+    if !filters.is_empty() {
+        names.retain(|n| filters.iter().any(|f| f == n));
+        if names.len() != filters.len() {
+            bail!("--pair names must be distinct registry pairs (run `mma-sim list`)");
+        }
+    }
+    if names.is_empty() {
+        bail!("no verification pairs selected");
+    }
+    let mut rng = Rng::new(seed);
+    let jobs: Vec<Job> = (0..jobs_n)
+        .map(|i| Job {
+            id: i as u64,
+            pair: names[i % names.len()].clone(),
+            batch,
+            seed: rng.next_u64(),
+        })
+        .collect();
+    eprintln!(
+        "shard: {jobs_n} jobs x {batch} MMAs over {} pairs across {} workers",
+        names.len(),
+        shard_cfg.workers
+    );
+    let mut stdout = std::io::stdout();
+    let report = session::shard_campaign(jobs, &shard_cfg, &transport, &mut stdout)?;
+    eprint!("{}", report.render());
+    Ok(())
+}
+
+fn cmd_shard_gemm(
+    args: &[String],
+    shard_cfg: &ShardConfig,
+    transport: &ProcessTransport,
+) -> Result<()> {
+    let session = session_from_args(args)?;
+    let m = parsed(args, "--m", 256usize)?;
+    let n = parsed(args, "--n", 256usize)?;
+    let k = parsed(args, "--k", 256usize)?;
+    let seed = parsed(args, "--seed", 42u64)?;
+    let fmts = session.formats();
+    let mut rng = Rng::new(seed);
+    let mut a = BitMatrix::zeros(m, k, fmts.a);
+    let mut b = BitMatrix::zeros(k, n, fmts.b);
+    let mut c = BitMatrix::zeros(m, n, fmts.c);
+    for v in a.data.iter_mut() {
+        *v = fmts.a.from_f64(rng.normal());
+    }
+    for v in b.data.iter_mut() {
+        *v = fmts.b.from_f64(rng.normal());
+    }
+    for v in c.data.iter_mut() {
+        *v = fmts.c.from_f64(rng.normal());
+    }
+    eprintln!(
+        "shard gemm: {m}x{n}x{k} via {} across {} workers",
+        session.name(),
+        shard_cfg.workers
+    );
+    let started = std::time::Instant::now();
+    let d = session.shard_gemm(&a, &b, &c, shard_cfg, transport)?;
+    eprintln!("gathered in {} µs", started.elapsed().as_micros());
+    // FNV-1a over the output bits: a stable one-line fingerprint that is
+    // identical for any worker count
+    let mut digest: u64 = 0xcbf29ce484222325;
+    for &bits in &d.data {
+        for byte in bits.to_le_bytes() {
+            digest ^= byte as u64;
+            digest = digest.wrapping_mul(0x100000001b3);
+        }
+    }
+    println!("gemm {m}x{n}x{k} seed {seed} d_digest {digest:#018x}");
+    if has(args, "--check") {
+        let want = mma_sim::gemm::TiledGemm::from_model(session.model().clone())
+            .try_execute(&a, &b, &c)?;
+        if want.data != d.data {
+            bail!("sharded GEMM diverged from the in-process engine");
+        }
+        println!("check ok: bit-identical to the in-process engine");
+    }
+    Ok(())
+}
+
 fn verify_pairs(args: &[String]) -> Result<Vec<VerifyPair>> {
     let mut pairs: Vec<VerifyPair> = Vec::new();
     if has(args, "--pjrt") {
@@ -291,8 +419,9 @@ fn verify_pairs(args: &[String]) -> Result<Vec<VerifyPair>> {
         }
     } else {
         // self-verification campaign over the instruction registry
-        // (capped tile size keeps the demo campaign snappy)
-        pairs = session::registry_pairs(1024);
+        // (capped tile size keeps the demo campaign snappy; shard parents
+        // rely on this exact cap when pre-validating job pair names)
+        pairs = session::registry_pairs(session::SERVE_REGISTRY_TILE_CAP);
     }
     Ok(pairs)
 }
@@ -321,7 +450,7 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         cfg.jobs,
         cfg.batch
     );
-    let report = session::campaign(pairs, &cfg);
+    let report = session::campaign(pairs, &cfg)?;
     println!("{}", report.render());
     Ok(())
 }

@@ -17,6 +17,7 @@ use crate::coordinator::{CampaignReport, Job, JobOutcome, Mismatch, PairStats};
 use crate::error::ApiError;
 use crate::formats::Format;
 use crate::interface::{BitMatrix, MmaCase};
+use crate::session::shard::{BandReply, BandRequest};
 use crate::session::RunOutput;
 
 /// A parsed JSON document. Numbers stay as raw text so 64-bit integers
@@ -647,6 +648,13 @@ fn pair_stats_to_json(s: &PairStats) -> JsonValue {
                 Some(m) => mismatch_to_json(m),
             },
         ),
+        (
+            "first_mismatch_job".into(),
+            match s.first_mismatch_job {
+                None => JsonValue::Null,
+                Some(id) => JsonValue::u64(id),
+            },
+        ),
     ])
 }
 
@@ -659,6 +667,14 @@ fn pair_stats_from_json(v: &JsonValue) -> Result<PairStats, ApiError> {
         first_mismatch: match v.get("first_mismatch") {
             None | Some(JsonValue::Null) => None,
             Some(m) => Some(mismatch_from_json(m)?),
+        },
+        // absent (a pre-merge producer) decodes as None
+        first_mismatch_job: match v.get("first_mismatch_job") {
+            None | Some(JsonValue::Null) => None,
+            Some(id) => Some(
+                id.as_u64()
+                    .ok_or_else(|| semantic("'first_mismatch_job' must be a u64 integer"))?,
+            ),
         },
     })
 }
@@ -706,6 +722,50 @@ pub fn encode_report(r: &CampaignReport) -> String {
 
 pub fn decode_report(line: &str) -> Result<CampaignReport, ApiError> {
     report_from_json(&JsonValue::parse(line)?)
+}
+
+// ---------------------------------------------------------------------------
+// sharded-GEMM band framing
+// ---------------------------------------------------------------------------
+
+/// `{"id":N,"row0":R,"a":M,"c":M}` — the payload of a `{"band": ...}`
+/// request frame on the `simulate --stdin` stream. The shared operand B
+/// is installed once per worker by a `{"set_b": M}` frame; each band then
+/// carries only its own rows of A and C.
+pub fn band_request_to_json(r: &BandRequest) -> JsonValue {
+    JsonValue::Obj(vec![
+        ("id".into(), JsonValue::u64(r.id)),
+        ("row0".into(), JsonValue::usize(r.row0)),
+        ("a".into(), bitmatrix_to_json(&r.a)),
+        ("c".into(), bitmatrix_to_json(&r.c)),
+    ])
+}
+
+pub fn band_request_from_json(v: &JsonValue) -> Result<BandRequest, ApiError> {
+    Ok(BandRequest {
+        id: u64_field(v, "id")?,
+        row0: usize_field(v, "row0")?,
+        a: bitmatrix_from_json(field(v, "a")?)?,
+        c: bitmatrix_from_json(field(v, "c")?)?,
+    })
+}
+
+/// `{"id":N,"row0":R,"d":M}` — the payload of a `{"band": ...}` reply
+/// frame: the completed band's output rows.
+pub fn band_reply_to_json(r: &BandReply) -> JsonValue {
+    JsonValue::Obj(vec![
+        ("id".into(), JsonValue::u64(r.id)),
+        ("row0".into(), JsonValue::usize(r.row0)),
+        ("d".into(), bitmatrix_to_json(&r.d)),
+    ])
+}
+
+pub fn band_reply_from_json(v: &JsonValue) -> Result<BandReply, ApiError> {
+    Ok(BandReply {
+        id: u64_field(v, "id")?,
+        row0: usize_field(v, "row0")?,
+        d: bitmatrix_from_json(field(v, "d")?)?,
+    })
 }
 
 #[cfg(test)]
@@ -821,6 +881,34 @@ mod tests {
         report.wall_micros = 777;
         let decoded = decode_report(&encode_report(&report)).unwrap();
         assert_eq!(decoded, report);
+    }
+
+    #[test]
+    fn band_frames_round_trip() {
+        let mk = |fmt: Format, rows, cols, seed: u64| {
+            let mut m = BitMatrix::zeros(rows, cols, fmt);
+            for (i, v) in m.data.iter_mut().enumerate() {
+                *v = (seed.wrapping_mul(131).wrapping_add(i as u64)) & fmt.mask();
+            }
+            m
+        };
+        let req = BandRequest {
+            id: 3,
+            row0: 32,
+            a: mk(Format::Fp16, 16, 64, 7),
+            c: mk(Format::Fp32, 16, 8, 9),
+        };
+        let v = JsonValue::parse(&band_request_to_json(&req).encode()).unwrap();
+        let back = band_request_from_json(&v).unwrap();
+        assert_eq!((back.id, back.row0), (3, 32));
+        assert_eq!(back.a, req.a);
+        assert_eq!(back.c, req.c);
+
+        let reply = BandReply { id: 3, row0: 32, d: mk(Format::Fp32, 16, 8, 11) };
+        let v = JsonValue::parse(&band_reply_to_json(&reply).encode()).unwrap();
+        let back = band_reply_from_json(&v).unwrap();
+        assert_eq!((back.id, back.row0), (3, 32));
+        assert_eq!(back.d, reply.d);
     }
 
     #[test]

@@ -20,22 +20,26 @@
 //! ```
 //!
 //! Cases and results serialize as single JSON lines ([`json`]) — the seam
-//! for sharding validation campaigns across processes: a parent splits a
-//! case stream over `mma-sim simulate --stdin` children and merges the
-//! [`RunOutput`] lines back, or drives `mma-sim serve --jsonl` workers
-//! with verification jobs and aggregates their [`CampaignReport`]s.
+//! for sharding validation campaigns across processes. The parent side of
+//! that seam lives in [`shard`]: a [`ShardPool`] spawns `mma-sim serve
+//! --jsonl` / `mma-sim simulate --stdin` children through a
+//! [`WorkerTransport`], scatters verification jobs or GEMM row bands over
+//! their stdins, and merges the reply lines back deterministically
+//! ([`Session::shard_campaign`], [`Session::shard_gemm`]).
 
 pub mod json;
 pub mod serve;
+pub mod shard;
 
 pub use crate::error::ApiError;
-pub use serve::{serve_jsonl, ServeConfig};
+pub use serve::{serve_cases, serve_jsonl, ServeConfig};
+pub use shard::{shard_campaign, ProcessTransport, ShardConfig, ShardPool, WorkerTransport};
 
 use std::sync::{Arc, Mutex};
 
 use crate::analysis::{bias, discrepancy, error_bounds, risky, tables};
 use crate::clfp::{self, ClfpConfig, Inference};
-use crate::coordinator::{CampaignReport, Coordinator, VerifyPair};
+use crate::coordinator::{CampaignReport, Coordinator, Job, VerifyPair};
 use crate::formats::{Format, Rho};
 use crate::gemm::TiledGemm;
 use crate::interface::{
@@ -510,13 +514,144 @@ impl Session {
         &self,
         dut: Arc<dyn MmaInterface>,
         cfg: &CampaignConfig,
-    ) -> CampaignReport {
+    ) -> Result<CampaignReport, ApiError> {
         let pair = VerifyPair {
             name: self.model.name.clone(),
             dut,
             golden: Arc::new(self.model.clone()),
         };
         campaign(vec![pair], cfg)
+    }
+
+    // -- process-level sharding ---------------------------------------------
+
+    /// The instruction shard workers will resolve for this session.
+    /// Rejects sessions a worker cannot reproduce from `(arch, name)`
+    /// alone: custom models, and rounding/format overrides — a child
+    /// builds the *registry* model, so silently accepting an overridden
+    /// session would ship different arithmetic to the workers.
+    fn shard_instruction(&self, what: &'static str) -> Result<&Instruction, ApiError> {
+        let instr = self.instr.as_ref().ok_or_else(|| ApiError::Unsupported {
+            what,
+            detail: "session was built from a custom model; shard workers resolve \
+                     registry instructions by name"
+                .into(),
+        })?;
+        let registry_model = instr.model();
+        if self.model.formats != registry_model.formats || self.model.spec != registry_model.spec
+        {
+            return Err(ApiError::Unsupported {
+                what,
+                detail: format!(
+                    "session overrides (rounding/format) do not reach shard workers, \
+                     which resolve '{}' fresh from the registry; drop the overrides \
+                     or stay in-process",
+                    self.model.name
+                ),
+            });
+        }
+        Ok(instr)
+    }
+
+    /// Shard a self-verification campaign of this instruction across
+    /// child `serve --jsonl` processes: `cfg.jobs` jobs of `cfg.batch`
+    /// randomized MMAs each, partitioned over `shard.workers` children,
+    /// with the ordered outcome lines written to `out` and the merged
+    /// report returned (see [`shard::shard_campaign`]).
+    pub fn shard_campaign(
+        &self,
+        cfg: &CampaignConfig,
+        shard_cfg: &ShardConfig,
+        transport: &dyn WorkerTransport,
+        out: &mut dyn std::io::Write,
+    ) -> Result<CampaignReport, ApiError> {
+        let instr = self.shard_instruction("shard campaign")?;
+        let pair = format!("{} {}", instr.arch.target(), instr.name);
+        let (m, n, _) = self.model.shape();
+        if m * n > SERVE_REGISTRY_TILE_CAP {
+            return Err(ApiError::Unsupported {
+                what: "shard campaign",
+                detail: format!(
+                    "'{pair}' has {} output elements; serve workers register pairs \
+                     up to {SERVE_REGISTRY_TILE_CAP}",
+                    m * n
+                ),
+            });
+        }
+        let mut rng = Rng::new(cfg.seed);
+        let jobs = (0..cfg.jobs)
+            .map(|i| Job {
+                id: i as u64,
+                pair: pair.clone(),
+                batch: cfg.batch,
+                seed: rng.next_u64(),
+            })
+            .collect();
+        shard::shard_campaign(jobs, shard_cfg, transport, out)
+    }
+
+    /// Arbitrary-shape GEMM scattered across child `simulate --stdin`
+    /// processes: the [`TiledGemm`] band plan becomes per-band requests
+    /// (B installed once per worker), and the gathered output is
+    /// bit-identical to [`Session::gemm`] because every child runs the
+    /// same per-band K-chain.
+    pub fn shard_gemm(
+        &self,
+        a: &BitMatrix,
+        b: &BitMatrix,
+        c: &BitMatrix,
+        shard_cfg: &ShardConfig,
+        transport: &dyn WorkerTransport,
+    ) -> Result<BitMatrix, ApiError> {
+        let instr = self.shard_instruction("shard gemm")?;
+        if self.model.scale_spec().is_some() {
+            return Err(ApiError::Unsupported {
+                what: "shard gemm",
+                detail: format!(
+                    "'{}' takes block-scale operands; the tiled GEMM path supports \
+                     unscaled instructions only",
+                    self.model.name
+                ),
+            });
+        }
+        let tiled = TiledGemm::from_model(self.model.clone());
+        tiled.validate(a, b, c)?;
+        let role = shard::WorkerRole::Gemm {
+            arch: instr.arch.target().to_string(),
+            instr: instr.name.clone(),
+        };
+        let pool = ShardPool::new(transport, role, shard_cfg)?;
+        let (tm, _, _) = self.model.shape();
+        pool.run_gemm(a, b, c, tm, self.model.formats.d)
+    }
+
+    /// Execute one sharded-GEMM band request against the shared B
+    /// operand — the worker side of [`Session::shard_gemm`]. The band
+    /// runs through the same [`TiledGemm`] K-chain as the in-process
+    /// executor, which is what makes a scattered GEMM bit-identical to a
+    /// local one.
+    pub fn run_band(
+        &self,
+        req: &shard::BandRequest,
+        b: &BitMatrix,
+    ) -> Result<shard::BandReply, ApiError> {
+        if self.model.scale_spec().is_some() {
+            return Err(ApiError::Unsupported {
+                what: "gemm band",
+                detail: format!(
+                    "'{}' takes block-scale operands; the tiled GEMM path supports \
+                     unscaled instructions only",
+                    self.model.name
+                ),
+            });
+        }
+        let gemm = TiledGemm::from_model(self.model.clone());
+        let d = if self.threads > 0 {
+            gemm.try_execute_with_threads(&req.a, b, &req.c, self.threads)?
+        } else {
+            gemm.try_execute(&req.a, b, &req.c)?
+        };
+        Ok(shard::BandReply { id: req.id, row0: req.row0, d })
     }
 }
 
@@ -535,6 +670,12 @@ pub fn infer_interface(iface: &dyn MmaInterface, cfg: ClfpConfig) -> Inference {
     clfp::infer(iface, cfg)
 }
 
+/// The `max_tile_elems` cap `serve --jsonl` / `shard` workers register
+/// registry pairs with: big-tile instructions are skipped so demo
+/// campaigns stay snappy, and a shard parent can reject jobs for pairs
+/// its children will not know about.
+pub const SERVE_REGISTRY_TILE_CAP: usize = 1024;
+
 /// Self-verification pairs over the registry (DUT = golden), skipping
 /// instructions with more than `max_tile_elems` output elements to keep
 /// demo campaigns snappy (0 = no limit).
@@ -551,7 +692,7 @@ pub fn registry_pairs(max_tile_elems: usize) -> Vec<VerifyPair> {
 }
 
 /// Run a one-shot campaign over verification pairs and aggregate the report.
-pub fn campaign(pairs: Vec<VerifyPair>, cfg: &CampaignConfig) -> CampaignReport {
+pub fn campaign(pairs: Vec<VerifyPair>, cfg: &CampaignConfig) -> Result<CampaignReport, ApiError> {
     let coord = Coordinator::new(pairs, cfg.workers, cfg.workers.max(1) * 2);
     let report = coord.run_campaign(cfg.jobs, cfg.batch, cfg.seed);
     coord.shutdown();
@@ -786,6 +927,40 @@ mod tests {
         assert_eq!(got.data, want.data);
     }
 
+    /// Shard paths must reject before any worker is launched.
+    struct NoTransport;
+
+    impl shard::WorkerTransport for NoTransport {
+        fn launch(&self, _: &shard::WorkerRole) -> Result<shard::WorkerIo, ApiError> {
+            panic!("transport must not be reached for a rejected session")
+        }
+    }
+
+    #[test]
+    fn overridden_sessions_cannot_shard() {
+        // shard workers rebuild the *registry* model from (arch, name);
+        // a session with a format override would silently compute
+        // different bits on the workers, so it must be rejected up front
+        let s = SessionBuilder::new()
+            .arch(Arch::Hopper)
+            .instruction("HGMMA.64x8x16.F16.F16")
+            .c_format(Format::Fp32)
+            .build()
+            .unwrap();
+        let fmts = s.formats();
+        let a = BitMatrix::zeros(64, 16, fmts.a);
+        let b = BitMatrix::zeros(16, 8, fmts.b);
+        let c = BitMatrix::zeros(64, 8, fmts.c);
+        let err = s.shard_gemm(&a, &b, &c, &ShardConfig::default(), &NoTransport).unwrap_err();
+        assert!(matches!(err, ApiError::Unsupported { what: "shard gemm", .. }), "{err}");
+
+        let cfg = CampaignConfig::default();
+        let err = s
+            .shard_campaign(&cfg, &ShardConfig::default(), &NoTransport, &mut Vec::<u8>::new())
+            .unwrap_err();
+        assert!(matches!(err, ApiError::Unsupported { what: "shard campaign", .. }), "{err}");
+    }
+
     #[test]
     fn campaign_self_verifies_clean() {
         let s = SessionBuilder::new()
@@ -794,7 +969,7 @@ mod tests {
             .build()
             .unwrap();
         let cfg = CampaignConfig { workers: 2, jobs: 3, batch: 20, seed: 9 };
-        let report = s.campaign(Arc::new(s.model().clone()), &cfg);
+        let report = s.campaign(Arc::new(s.model().clone()), &cfg).unwrap();
         assert_eq!(report.total_tests, 60);
         assert_eq!(report.total_mismatches, 0);
     }

@@ -13,14 +13,22 @@
 //! - reply:   `{"ok": true, "outcome": {...}}` — one per completed job,
 //!   with the first mismatching triples inlined (see
 //!   [`json::outcome_to_json`](crate::session::json::outcome_to_json));
-//! - error:   `{"ok": false, "error": "<message>"}` for a malformed line
-//!   or unknown pair (the loop keeps serving);
+//! - error:   `{"ok": false, "error": "<message>", "id": <u64>?}` for a
+//!   malformed line or unknown pair (the loop keeps serving); `id` is
+//!   present whenever the request parsed far enough to carry one, so a
+//!   shard parent can account for the job instead of waiting forever;
 //! - summary: `{"summary": {...}}` once, after end of input.
 //!
 //! This is the cross-process sharding seam: a parent process spawns one
 //! `mma-sim serve --jsonl` child per shard, partitions jobs over their
 //! stdins, and merges the summary lines with
-//! [`json::decode_report`](crate::session::json::decode_report).
+//! [`CampaignReport::merge`] — exactly what
+//! [`shard`](crate::session::shard) implements.
+//!
+//! Every exit path — clean end of input, a broken output sink, a dead
+//! worker pool — drains the outstanding outcomes and joins the worker
+//! threads via [`Coordinator::shutdown`]; the service never strands
+//! in-flight jobs or leaks threads.
 
 use std::collections::BTreeSet;
 use std::io::{BufRead, Write};
@@ -43,6 +51,18 @@ impl Default for ServeConfig {
     }
 }
 
+impl ServeConfig {
+    /// The effective `(workers, queue depth)`. The resolved queue depth is
+    /// the single backpressure bound: it sizes the coordinator's
+    /// submission queue *and* caps the serve loop's in-flight job count,
+    /// so raising `queue_depth` genuinely admits more concurrent jobs.
+    pub fn resolved(&self) -> (usize, usize) {
+        let workers = self.workers.max(1);
+        let queue = if self.queue_depth > 0 { self.queue_depth } else { workers * 2 };
+        (workers, queue)
+    }
+}
+
 fn emit_outcome(out: &mut dyn Write, report: &mut CampaignReport, o: &JobOutcome) -> Result<()> {
     report.absorb(o);
     let line = JsonValue::Obj(vec![
@@ -54,13 +74,81 @@ fn emit_outcome(out: &mut dyn Write, report: &mut CampaignReport, o: &JobOutcome
     Ok(())
 }
 
-fn emit_error(out: &mut dyn Write, msg: &str) -> Result<()> {
-    let line = JsonValue::Obj(vec![
+fn emit_error(out: &mut dyn Write, msg: &str, id: Option<u64>) -> Result<()> {
+    let mut fields = vec![
         ("ok".into(), JsonValue::Bool(false)),
         ("error".into(), JsonValue::str(msg)),
-    ]);
-    writeln!(out, "{}", line.encode())?;
+    ];
+    if let Some(id) = id {
+        fields.push(("id".into(), JsonValue::u64(id)));
+    }
+    writeln!(out, "{}", JsonValue::Obj(fields).encode())?;
     out.flush()?;
+    Ok(())
+}
+
+/// Submission/collection progress, shared between the serve loop and the
+/// cleanup path so an early return knows exactly how many outcomes are
+/// still owed by the pool.
+struct ServeProgress {
+    report: CampaignReport,
+    submitted: usize,
+    collected: usize,
+}
+
+/// The fallible body of the service: reads jobs, enforces the in-flight
+/// cap, emits outcomes live, and drains the tail on clean end of input.
+/// Any `?` here returns with `st` describing the outstanding work;
+/// [`serve_jsonl`] owns the drain-and-join that must follow.
+fn serve_loop(
+    coord: &Coordinator,
+    known: &BTreeSet<String>,
+    in_flight_cap: usize,
+    input: impl BufRead,
+    out: &mut dyn Write,
+    st: &mut ServeProgress,
+) -> Result<()> {
+    let mut next_id = 0u64;
+    for line in input.lines() {
+        let line = line?;
+        let trimmed = line.trim();
+        if trimmed.is_empty() {
+            continue;
+        }
+        let job = JsonValue::parse(trimmed).and_then(|v| json::job_from_json(&v, next_id));
+        let job = match job {
+            Ok(job) => job,
+            Err(e) => {
+                emit_error(out, &e.to_string(), None)?;
+                continue;
+            }
+        };
+        // saturate: a client-supplied id of u64::MAX must not panic the
+        // long-running service (defaulted ids then reuse MAX, harmlessly)
+        next_id = next_id.max(job.id).saturating_add(1);
+        if !known.contains(&job.pair) {
+            emit_error(out, &format!("unknown pair '{}'", job.pair), Some(job.id))?;
+            continue;
+        }
+        // Drain finished work first (live reporting), then respect the
+        // in-flight cap with blocking collects before submitting more.
+        while let Some(o) = coord.try_next_outcome() {
+            st.collected += 1;
+            emit_outcome(out, &mut st.report, &o)?;
+        }
+        while st.submitted - st.collected >= in_flight_cap {
+            let o = coord.next_outcome()?;
+            st.collected += 1;
+            emit_outcome(out, &mut st.report, &o)?;
+        }
+        coord.submit(job)?;
+        st.submitted += 1;
+    }
+    while st.collected < st.submitted {
+        let o = coord.next_outcome()?;
+        st.collected += 1;
+        emit_outcome(out, &mut st.report, &o)?;
+    }
     Ok(())
 }
 
@@ -73,69 +161,121 @@ pub fn serve_jsonl(
     input: impl BufRead,
     out: &mut dyn Write,
 ) -> Result<CampaignReport> {
-    let workers = cfg.workers.max(1);
-    let queue = if cfg.queue_depth > 0 { cfg.queue_depth } else { workers * 2 };
+    let (workers, queue) = cfg.resolved();
     let known: BTreeSet<String> = pairs.iter().map(|p| p.name.clone()).collect();
     let coord = Coordinator::new(pairs, workers, queue);
 
     let started = std::time::Instant::now();
-    let mut report = CampaignReport::new();
-    let mut submitted = 0usize;
-    let mut collected = 0usize;
-    let mut next_id = 0u64;
-    // Never let more jobs than the pool can absorb sit in flight, so a
-    // blocking `submit` cannot deadlock against a full outcome channel.
-    let in_flight_cap = workers * 2;
+    let mut st = ServeProgress { report: CampaignReport::new(), submitted: 0, collected: 0 };
+    let res = serve_loop(&coord, &known, queue, input, out, &mut st);
+    if res.is_err() {
+        // The loop bailed (dead input, broken sink, dead pool). In-flight
+        // jobs must still be collected — dropping the coordinator with
+        // work outstanding would strand its worker threads mid-job — but
+        // nothing more is written to the (possibly broken) sink.
+        while st.collected < st.submitted {
+            match coord.next_outcome() {
+                Ok(o) => {
+                    st.collected += 1;
+                    st.report.absorb(&o);
+                }
+                Err(_) => break, // the pool itself died; nothing left to drain
+            }
+        }
+    }
+    coord.shutdown();
+    res?;
 
+    st.report.wall_micros = started.elapsed().as_micros() as u64;
+    let summary = JsonValue::Obj(vec![("summary".into(), json::report_to_json(&st.report))]);
+    writeln!(out, "{}", summary.encode())?;
+    out.flush()?;
+    Ok(st.report)
+}
+
+// ---------------------------------------------------------------------------
+// the case/band stream (`simulate --stdin`)
+// ---------------------------------------------------------------------------
+
+fn emit_case_error(out: &mut dyn Write, msg: &str, id: Option<u64>) -> Result<()> {
+    let mut fields = vec![("error".into(), JsonValue::str(msg))];
+    if let Some(id) = id {
+        fields.push(("id".into(), JsonValue::u64(id)));
+    }
+    writeln!(out, "{}", JsonValue::Obj(fields).encode())?;
+    out.flush()?;
+    Ok(())
+}
+
+/// The `mma-sim simulate --stdin` stream loop — the per-case sharding
+/// seam, one reply line per input frame:
+///
+/// - a plain [`MmaCase`](crate::interface::MmaCase) object runs through
+///   [`Session::run`] and replies with a `RunOutput` line;
+/// - `{"set_b": <matrix>}` installs the shared GEMM operand B for
+///   subsequent band frames (no reply);
+/// - `{"band": {"id":N,"row0":R,"a":M,"c":M}}` executes that band's
+///   K-chain against the installed B via [`Session::run_band`] and
+///   replies `{"band": {"id":N,"row0":R,"d":M}}`.
+///
+/// Malformed or failing frames reply `{"error": "...", "id": N?}` (the
+/// id is included whenever the frame carried one, so a shard parent can
+/// account for the request) and the loop keeps serving.
+pub fn serve_cases(
+    session: &crate::session::Session,
+    input: impl BufRead,
+    out: &mut dyn Write,
+) -> Result<()> {
+    let mut b_shared: Option<crate::interface::BitMatrix> = None;
     for line in input.lines() {
         let line = line?;
         let trimmed = line.trim();
         if trimmed.is_empty() {
             continue;
         }
-        let job = JsonValue::parse(trimmed)
-            .and_then(|v| json::job_from_json(&v, next_id));
-        let job = match job {
-            Ok(job) => job,
+        let v = match JsonValue::parse(trimmed) {
+            Ok(v) => v,
             Err(e) => {
-                emit_error(out, &e.to_string())?;
+                emit_case_error(out, &e.to_string(), None)?;
                 continue;
             }
         };
-        if !known.contains(&job.pair) {
-            emit_error(out, &format!("unknown pair '{}'", job.pair))?;
+        if let Some(bm) = v.get("set_b") {
+            match json::bitmatrix_from_json(bm) {
+                Ok(b) => b_shared = Some(b),
+                Err(e) => emit_case_error(out, &format!("set_b: {e}"), None)?,
+            }
             continue;
         }
-        // saturate: a client-supplied id of u64::MAX must not panic the
-        // long-running service (defaulted ids then reuse MAX, harmlessly)
-        next_id = next_id.max(job.id).saturating_add(1);
-        // Drain finished work first (live reporting), then respect the
-        // in-flight cap with blocking collects before submitting more.
-        while let Some(o) = coord.try_next_outcome() {
-            collected += 1;
-            emit_outcome(out, &mut report, &o)?;
+        if let Some(frame) = v.get("band") {
+            // pull the id out first so even a failing band is addressable
+            let id = frame.get("id").and_then(|i| i.as_u64());
+            let res = json::band_request_from_json(frame).and_then(|req| {
+                let b = b_shared.as_ref().ok_or_else(|| crate::error::ApiError::Shard {
+                    detail: "no B operand installed (send a set_b frame first)".into(),
+                })?;
+                session.run_band(&req, b)
+            });
+            match res {
+                Ok(reply) => {
+                    let line =
+                        JsonValue::Obj(vec![("band".into(), json::band_reply_to_json(&reply))]);
+                    writeln!(out, "{}", line.encode())?;
+                    out.flush()?;
+                }
+                Err(e) => emit_case_error(out, &e.to_string(), id)?,
+            }
+            continue;
         }
-        while submitted - collected >= in_flight_cap {
-            let o = coord.next_outcome();
-            collected += 1;
-            emit_outcome(out, &mut report, &o)?;
+        match json::case_from_json(&v).and_then(|case| session.run(&case)) {
+            Ok(output) => {
+                writeln!(out, "{}", json::encode_run_output(&output))?;
+                out.flush()?;
+            }
+            Err(e) => emit_case_error(out, &e.to_string(), None)?,
         }
-        coord.submit(job);
-        submitted += 1;
     }
-
-    while collected < submitted {
-        let o = coord.next_outcome();
-        collected += 1;
-        emit_outcome(out, &mut report, &o)?;
-    }
-    report.wall_micros = started.elapsed().as_micros() as u64;
-
-    let summary = JsonValue::Obj(vec![("summary".into(), json::report_to_json(&report))]);
-    writeln!(out, "{}", summary.encode())?;
-    out.flush()?;
-    coord.shutdown();
-    Ok(report)
+    Ok(())
 }
 
 #[cfg(test)]
@@ -200,6 +340,8 @@ mod tests {
         let decoded = json::report_from_json(summary.get("summary").unwrap()).unwrap();
         assert_eq!(decoded.total_tests, report.total_tests);
         assert_eq!(decoded.total_mismatches, report.total_mismatches);
+        // the faulty job has id 1 — the deterministic first-mismatch owner
+        assert_eq!(decoded.pairs["faulty"].first_mismatch_job, Some(1));
     }
 
     #[test]
@@ -219,5 +361,67 @@ mod tests {
             let v = JsonValue::parse(line).unwrap();
             assert_eq!(v.get("ok").and_then(|b| b.as_bool()), Some(false));
         }
+        // the unknown-pair request parsed far enough to carry its job id,
+        // so a shard parent can account for it instead of hanging
+        let unknown = JsonValue::parse(lines[1]).unwrap();
+        assert_eq!(unknown.get("id").and_then(|i| i.as_u64()), Some(0));
+        assert!(JsonValue::parse(lines[0]).unwrap().get("id").is_none());
+    }
+
+    #[test]
+    fn queue_depth_overrides_the_in_flight_cap() {
+        // the resolved queue depth is the in-flight bound: configured
+        // depth wins, 0 falls back to workers * 2, workers floor at 1
+        assert_eq!(ServeConfig { workers: 4, queue_depth: 0 }.resolved(), (4, 8));
+        assert_eq!(ServeConfig { workers: 4, queue_depth: 3 }.resolved(), (4, 3));
+        assert_eq!(ServeConfig { workers: 2, queue_depth: 9 }.resolved(), (2, 9));
+        assert_eq!(ServeConfig { workers: 0, queue_depth: 0 }.resolved(), (1, 2));
+
+        // behavioral: a depth-1 config fully serializes (at most one job
+        // in flight) yet still completes every job
+        let input = (0..6)
+            .map(|i| format!("{{\"pair\":\"clean\",\"batch\":10,\"seed\":{i}}}\n"))
+            .collect::<String>();
+        let mut out = Vec::new();
+        let cfg = ServeConfig { workers: 2, queue_depth: 1 };
+        let report = serve_jsonl(pairs(), &cfg, input.as_bytes(), &mut out).unwrap();
+        assert_eq!(report.total_jobs, 6);
+        assert_eq!(report.total_tests, 60);
+    }
+
+    /// An output sink that accepts `lines_ok` newline-terminated lines and
+    /// then fails every write — the "consumer went away" failure mode.
+    struct FailingWriter {
+        lines_ok: usize,
+        lines: usize,
+    }
+
+    impl Write for FailingWriter {
+        fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+            if self.lines >= self.lines_ok {
+                return Err(std::io::Error::new(std::io::ErrorKind::BrokenPipe, "sink full"));
+            }
+            self.lines += buf.iter().filter(|&&b| b == b'\n').count();
+            Ok(buf.len())
+        }
+        fn flush(&mut self) -> std::io::Result<()> {
+            Ok(())
+        }
+    }
+
+    #[test]
+    fn broken_sink_drains_in_flight_jobs_and_joins_the_pool() {
+        // Submit more jobs than the in-flight cap so several are still
+        // outstanding when the sink dies after one emitted line. The old
+        // loop `?`-returned without draining, abandoning in-flight jobs
+        // and never joining the workers; now the error surfaces *after*
+        // the drain + shutdown, and this test returns instead of leaking.
+        let input = (0..8)
+            .map(|i| format!("{{\"pair\":\"clean\",\"batch\":10,\"seed\":{i}}}\n"))
+            .collect::<String>();
+        let mut out = FailingWriter { lines_ok: 1, lines: 0 };
+        let cfg = ServeConfig { workers: 2, queue_depth: 0 };
+        let err = serve_jsonl(pairs(), &cfg, input.as_bytes(), &mut out).unwrap_err();
+        assert!(err.to_string().contains("sink full"), "{err}");
     }
 }

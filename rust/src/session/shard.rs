@@ -1,0 +1,1254 @@
+//! Process-level sharding: the parent side of the JSON-lines seam.
+//!
+//! PR 3 built the wire protocol (`MmaCase`/`Job`/`CampaignReport` as JSON
+//! lines) and the ready-made shard workers (`mma-sim serve --jsonl`,
+//! `mma-sim simulate --stdin`). This module is the missing half: a
+//! [`ShardPool`] spawns N child workers through a [`WorkerTransport`]
+//! (default: local `mma-sim` processes over stdin/stdout pipes — the trait
+//! is the hook for ssh or container launchers later), partitions work
+//! across them with a bounded in-flight count per child, and multiplexes
+//! their reply lines back into one deterministic result:
+//!
+//! - **campaigns** ([`shard_campaign`]): verification jobs scatter across
+//!   `serve --jsonl` children; outcome lines are re-emitted in ascending
+//!   job-id order regardless of shard completion order, and the final
+//!   per-shard `{"summary": ...}` lines fold into one report via
+//!   [`CampaignReport::merge`] (counter sums, `wall_micros = max`, first
+//!   mismatch kept from the lowest job id) — so the merged output is
+//!   identical however many shards ran it;
+//! - **GEMM** ([`ShardPool::run_gemm`], via
+//!   [`Session::shard_gemm`](crate::session::Session::shard_gemm)): the
+//!   [`TiledGemm`](crate::gemm::TiledGemm) band plan
+//!   ([`gemm::band_groups`](crate::gemm::band_groups)) becomes per-band
+//!   requests over `simulate --stdin` children — B is installed once per
+//!   worker with a `{"set_b": M}` frame, each `{"band": {...}}` request
+//!   carries only its rows of A and C, and the gathered output is
+//!   bit-identical to the in-process engine because each child runs the
+//!   very same K-chain code on its band.
+//!
+//! A dying child does not kill the run: its unanswered work is requeued
+//! onto surviving workers (or a respawned replacement, with the prelude
+//! frames replayed), and every exit path — including errors — kills,
+//! joins, and reaps all children and reader threads.
+
+use std::collections::{BTreeMap, BTreeSet, VecDeque};
+use std::io::{BufRead, BufReader, Read, Write};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::thread::JoinHandle;
+
+use crate::coordinator::{CampaignReport, Job, JobOutcome};
+use crate::error::ApiError;
+use crate::formats::Format;
+use crate::gemm;
+use crate::interface::BitMatrix;
+use crate::session::json::{self, JsonValue};
+
+// ---------------------------------------------------------------------------
+// band wire types
+// ---------------------------------------------------------------------------
+
+/// One sharded-GEMM work unit: a contiguous span of row bands. The shared
+/// operand B is installed separately (a `{"set_b": M}` frame), so the
+/// request carries only the band's rows of A and its accumulator rows C.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BandRequest {
+    pub id: u64,
+    /// First output row this band covers.
+    pub row0: usize,
+    /// The band's rows of A (`rows × K`).
+    pub a: BitMatrix,
+    /// The band's rows of C (`rows × N`).
+    pub c: BitMatrix,
+}
+
+/// A completed band: the output rows to gather at `row0`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BandReply {
+    pub id: u64,
+    pub row0: usize,
+    pub d: BitMatrix,
+}
+
+// ---------------------------------------------------------------------------
+// transports
+// ---------------------------------------------------------------------------
+
+/// What a shard worker process does.
+#[derive(Clone, Debug)]
+pub enum WorkerRole {
+    /// `mma-sim serve --jsonl --workers N`: verification job lines in,
+    /// outcome lines + a final summary out.
+    Campaign { workers: usize },
+    /// `mma-sim simulate --stdin --arch A --instr I`: case/band frames
+    /// in, result lines out.
+    Gemm { arch: String, instr: String },
+}
+
+/// A launched worker's endpoints: a line-oriented request sink, a
+/// line-oriented reply source, and a handle to reap it with.
+pub struct WorkerIo {
+    pub input: Box<dyn Write + Send>,
+    pub output: Box<dyn Read + Send>,
+    pub handle: Box<dyn WorkerHandle>,
+}
+
+/// Lifecycle control over one launched worker.
+pub trait WorkerHandle: Send {
+    /// Block until the worker exits, releasing its resources (reap).
+    fn wait(&mut self);
+    /// Best-effort immediate termination; must also unblock any pending
+    /// read of the worker's output so reader threads can exit.
+    fn kill(&mut self);
+}
+
+/// Launches shard workers. The default [`ProcessTransport`] spawns local
+/// `mma-sim` child processes; remote launchers (ssh, container
+/// schedulers) implement the same trait and plug into the same pool.
+pub trait WorkerTransport {
+    fn launch(&self, role: &WorkerRole) -> Result<WorkerIo, ApiError>;
+}
+
+/// The default transport: one local `mma-sim` child process per worker,
+/// wired over stdin/stdout pipes (stderr is discarded).
+pub struct ProcessTransport {
+    /// Path to the `mma-sim` binary.
+    pub binary: std::path::PathBuf,
+}
+
+impl ProcessTransport {
+    /// Shard into copies of the currently running executable — what the
+    /// `mma-sim shard` subcommand uses.
+    pub fn current_exe() -> Result<Self, ApiError> {
+        let binary = std::env::current_exe().map_err(|e| ApiError::Shard {
+            detail: format!("cannot locate the running mma-sim binary: {e}"),
+        })?;
+        Ok(Self { binary })
+    }
+
+    pub fn with_binary(binary: impl Into<std::path::PathBuf>) -> Self {
+        Self { binary: binary.into() }
+    }
+}
+
+impl WorkerTransport for ProcessTransport {
+    fn launch(&self, role: &WorkerRole) -> Result<WorkerIo, ApiError> {
+        use std::process::{Command, Stdio};
+        let mut cmd = Command::new(&self.binary);
+        match role {
+            WorkerRole::Campaign { workers } => {
+                cmd.args(["serve", "--jsonl", "--workers"]);
+                cmd.arg((*workers).max(1).to_string());
+            }
+            WorkerRole::Gemm { arch, instr } => {
+                cmd.args(["simulate", "--stdin", "--arch"]);
+                cmd.arg(arch).arg("--instr").arg(instr);
+            }
+        }
+        let mut child = cmd
+            .stdin(Stdio::piped())
+            .stdout(Stdio::piped())
+            .stderr(Stdio::null())
+            .spawn()
+            .map_err(|e| ApiError::Shard {
+                detail: format!("spawn {}: {e}", self.binary.display()),
+            })?;
+        let input = child.stdin.take().expect("piped child stdin");
+        let output = child.stdout.take().expect("piped child stdout");
+        Ok(WorkerIo {
+            input: Box::new(input),
+            output: Box::new(output),
+            handle: Box::new(ProcessHandle { child }),
+        })
+    }
+}
+
+struct ProcessHandle {
+    child: std::process::Child,
+}
+
+impl WorkerHandle for ProcessHandle {
+    fn wait(&mut self) {
+        let _ = self.child.wait();
+    }
+    fn kill(&mut self) {
+        let _ = self.child.kill();
+        let _ = self.child.wait(); // reap; harmless if already waited
+    }
+}
+
+// ---------------------------------------------------------------------------
+// the pool
+// ---------------------------------------------------------------------------
+
+/// Knobs for a [`ShardPool`].
+#[derive(Clone, Debug)]
+pub struct ShardConfig {
+    /// Number of child worker processes.
+    pub workers: usize,
+    /// Max requests in flight per child; 0 = `2 × child_workers` for
+    /// campaign workers (keeping every child pool thread fed), 2 for GEMM
+    /// workers (bands are chunky; one executing + one queued).
+    pub inflight: usize,
+    /// Worker threads *inside* each campaign child (`serve --workers`).
+    pub child_workers: usize,
+    /// Zero every timing field in emitted outcome lines and the merged
+    /// summary, making the output byte-identical across shard counts and
+    /// runs (timing is the protocol's only nondeterministic content).
+    pub deterministic: bool,
+}
+
+impl Default for ShardConfig {
+    fn default() -> Self {
+        Self { workers: 2, inflight: 0, child_workers: 2, deterministic: false }
+    }
+}
+
+/// What one reply line from a child decoded to.
+enum Reply {
+    Outcome(JobOutcome),
+    Error { id: Option<u64>, msg: String },
+    Summary(CampaignReport),
+    Band(Box<BandReply>),
+    /// A line that is not part of the protocol — the child is broken.
+    Garbage(String),
+    /// The child's output closed (clean exit or a crash).
+    Eof,
+}
+
+fn parse_reply(line: &str) -> Reply {
+    let v = match JsonValue::parse(line) {
+        Ok(v) => v,
+        Err(e) => return Reply::Garbage(format!("unparseable reply ({e})")),
+    };
+    if let Some(s) = v.get("summary") {
+        return match json::report_from_json(s) {
+            Ok(r) => Reply::Summary(r),
+            Err(e) => Reply::Garbage(format!("bad summary ({e})")),
+        };
+    }
+    if let Some(b) = v.get("band") {
+        return match json::band_reply_from_json(b) {
+            Ok(r) => Reply::Band(Box::new(r)),
+            Err(e) => Reply::Garbage(format!("bad band reply ({e})")),
+        };
+    }
+    if v.get("ok").and_then(|b| b.as_bool()) == Some(true) {
+        return match v.get("outcome").map(json::outcome_from_json) {
+            Some(Ok(o)) => Reply::Outcome(o),
+            _ => Reply::Garbage("ok reply without a valid outcome".into()),
+        };
+    }
+    match v.get("error").and_then(|e| e.as_str()) {
+        Some(msg) => Reply::Error {
+            id: v.get("id").and_then(|i| i.as_u64()),
+            msg: msg.to_string(),
+        },
+        None => Reply::Garbage("reply is neither outcome, error, band, nor summary".into()),
+    }
+}
+
+fn reader_loop(shard: usize, output: Box<dyn Read + Send>, tx: Sender<(usize, Reply)>) {
+    for line in BufReader::new(output).lines() {
+        let line = match line {
+            Ok(l) => l,
+            Err(_) => break,
+        };
+        let trimmed = line.trim();
+        if trimmed.is_empty() {
+            continue;
+        }
+        if tx.send((shard, parse_reply(trimmed))).is_err() {
+            return; // pool is gone
+        }
+    }
+    let _ = tx.send((shard, Reply::Eof));
+}
+
+fn io_err(what: &str, e: std::io::Error) -> ApiError {
+    ApiError::Shard { detail: format!("{what}: {e}") }
+}
+
+struct ChildSlot {
+    /// `None` once the parent closed the child's stdin.
+    input: Option<Box<dyn Write + Send>>,
+    handle: Box<dyn WorkerHandle>,
+    reader: Option<JoinHandle<()>>,
+    /// Ids of requests written to this child and not yet answered.
+    inflight: BTreeSet<u64>,
+    /// The child's output closed.
+    eof: bool,
+    /// The child failed (dead pipe, protocol violation, premature EOF).
+    dead: bool,
+    /// The child's final `{"summary": ...}` line, when it ended cleanly.
+    summary: Option<CampaignReport>,
+    /// Outcomes absorbed as they arrived — the merge fallback for a child
+    /// that died before producing a summary.
+    local: CampaignReport,
+}
+
+/// The parent side of process-level sharding. Construct with
+/// [`ShardPool::new`], then consume with
+/// [`run_campaign`](ShardPool::run_campaign) or
+/// [`run_gemm`](ShardPool::run_gemm); both tear the pool down on every
+/// path (including errors — `Drop` kills, joins, and reaps whatever is
+/// still running).
+pub struct ShardPool<'t> {
+    transport: &'t dyn WorkerTransport,
+    role: WorkerRole,
+    cap: usize,
+    deterministic: bool,
+    /// Respawn budget: total children ever spawned may not exceed this.
+    max_children: usize,
+    children: Vec<ChildSlot>,
+    tx: Sender<(usize, Reply)>,
+    rx: Receiver<(usize, Reply)>,
+    /// Lines replayed to every newly spawned worker (e.g. the GEMM
+    /// `set_b` frame), so a respawned replacement has the same state.
+    prelude: Vec<String>,
+    /// Round-robin cursor over children.
+    rr: usize,
+}
+
+impl<'t> ShardPool<'t> {
+    /// Spawn `cfg.workers` children for `role` through `transport`.
+    pub fn new(
+        transport: &'t dyn WorkerTransport,
+        role: WorkerRole,
+        cfg: &ShardConfig,
+    ) -> Result<Self, ApiError> {
+        let workers = cfg.workers.max(1);
+        let cap = if cfg.inflight > 0 {
+            cfg.inflight
+        } else {
+            match &role {
+                WorkerRole::Campaign { workers } => (*workers).max(1) * 2,
+                WorkerRole::Gemm { .. } => 2,
+            }
+        };
+        let (tx, rx) = channel();
+        let mut pool = Self {
+            transport,
+            role,
+            cap,
+            deterministic: cfg.deterministic,
+            max_children: workers * 3 + 2,
+            children: Vec::new(),
+            tx,
+            rx,
+            prelude: Vec::new(),
+            rr: 0,
+        };
+        for _ in 0..workers {
+            pool.spawn_child()?;
+        }
+        Ok(pool)
+    }
+
+    /// Launch one more worker (initial fill or a replacement for a dead
+    /// child), replaying the prelude frames to it.
+    fn spawn_child(&mut self) -> Result<usize, ApiError> {
+        if self.children.len() >= self.max_children {
+            return Err(ApiError::Shard {
+                detail: format!(
+                    "shard workers keep dying: respawn budget exhausted after {} launches",
+                    self.children.len()
+                ),
+            });
+        }
+        let io = self.transport.launch(&self.role)?;
+        let idx = self.children.len();
+        let tx = self.tx.clone();
+        let reader = match std::thread::Builder::new()
+            .name(format!("mma-shard-reader-{idx}"))
+            .spawn(move || reader_loop(idx, io.output, tx))
+        {
+            Ok(r) => r,
+            Err(e) => {
+                let mut handle = io.handle;
+                handle.kill();
+                return Err(ApiError::Shard { detail: format!("spawn reader thread: {e}") });
+            }
+        };
+        self.children.push(ChildSlot {
+            input: Some(io.input),
+            handle: io.handle,
+            reader: Some(reader),
+            inflight: BTreeSet::new(),
+            eof: false,
+            dead: false,
+            summary: None,
+            local: CampaignReport::new(),
+        });
+        let prelude = std::mem::take(&mut self.prelude);
+        let mut res = Ok(idx);
+        for line in &prelude {
+            if let Err(e) = self.write_line(idx, line) {
+                let _ = self.retire(idx);
+                res = Err(io_err("replaying prelude to a fresh worker", e));
+                break;
+            }
+        }
+        self.prelude = prelude;
+        res
+    }
+
+    /// The next child (round-robin) with an open pipe and spare in-flight
+    /// capacity, if any.
+    fn pick_target(&mut self) -> Option<usize> {
+        let n = self.children.len();
+        for step in 0..n {
+            let idx = (self.rr + step) % n;
+            let c = &self.children[idx];
+            if !c.dead && c.input.is_some() && c.inflight.len() < self.cap {
+                self.rr = (idx + 1) % n;
+                return Some(idx);
+            }
+        }
+        None
+    }
+
+    fn open_count(&self) -> usize {
+        self.children.iter().filter(|c| !c.dead && c.input.is_some()).count()
+    }
+
+    fn total_inflight(&self) -> usize {
+        self.children.iter().map(|c| c.inflight.len()).sum()
+    }
+
+    fn write_line(&mut self, shard: usize, line: &str) -> std::io::Result<()> {
+        let input = self.children[shard].input.as_mut().expect("write to an open child");
+        writeln!(input, "{line}")?;
+        input.flush()
+    }
+
+    /// The child is gone (dead pipe, premature EOF, protocol violation):
+    /// close its pipe, make sure the process is dead, and hand back every
+    /// request id it still owed so the caller can requeue them.
+    fn retire(&mut self, shard: usize) -> Vec<u64> {
+        let c = &mut self.children[shard];
+        c.input = None;
+        c.dead = true;
+        c.handle.kill();
+        // A retired child's summary (already received, or still buffered
+        // in its pipe) covers jobs that are being requeued elsewhere;
+        // trusting it would double-count them. Its `local` report — only
+        // the outcomes the parent actually accepted — is the truth.
+        c.summary = None;
+        std::mem::take(&mut c.inflight).into_iter().collect()
+    }
+
+    /// Close every input, wait for the remaining EOFs, join the reader
+    /// threads, and reap the children. `on_reply` sees each straggler
+    /// reply (summaries, in the campaign driver) before its EOF.
+    fn drain_and_reap(
+        &mut self,
+        mut on_reply: impl FnMut(&mut ChildSlot, Reply),
+    ) -> Result<(), ApiError> {
+        for c in &mut self.children {
+            c.input = None;
+        }
+        while self.children.iter().any(|c| !c.eof) {
+            let (shard, reply) = match self.rx.recv() {
+                Ok(m) => m,
+                Err(_) => break, // unreachable: the pool holds a sender
+            };
+            let slot = &mut self.children[shard];
+            match reply {
+                Reply::Eof => slot.eof = true,
+                other => on_reply(slot, other),
+            }
+        }
+        for c in &mut self.children {
+            if let Some(r) = c.reader.take() {
+                let _ = r.join();
+            }
+            c.handle.wait();
+        }
+        Ok(())
+    }
+
+    // -- campaign driver ----------------------------------------------------
+
+    /// Scatter `jobs` across the pool's `serve --jsonl` workers, write the
+    /// outcome lines to `out` in ascending job-id order followed by one
+    /// merged `{"summary": ...}` line, and return the merged report.
+    ///
+    /// Jobs must carry distinct ids — they are the merge order and the
+    /// dedup key for requeued work.
+    pub fn run_campaign(
+        mut self,
+        jobs: Vec<Job>,
+        out: &mut dyn Write,
+    ) -> Result<CampaignReport, ApiError> {
+        let mut remaining: BTreeSet<u64> = BTreeSet::new();
+        for j in &jobs {
+            if !remaining.insert(j.id) {
+                return Err(ApiError::Shard { detail: format!("duplicate job id {}", j.id) });
+            }
+        }
+        let mut queue: VecDeque<Job> = jobs.into_iter().collect();
+        let mut assigned: BTreeMap<u64, Job> = BTreeMap::new();
+        let mut ready: BTreeMap<u64, String> = BTreeMap::new();
+
+        while !remaining.is_empty() {
+            // submit while children have capacity
+            while !queue.is_empty() {
+                let Some(t) = self.pick_target() else { break };
+                let job = queue.pop_front().expect("queue checked non-empty");
+                let line = json::job_to_json(&job).encode();
+                match self.write_line(t, &line) {
+                    Ok(()) => {
+                        self.children[t].inflight.insert(job.id);
+                        assigned.insert(job.id, job);
+                    }
+                    Err(_) => {
+                        queue.push_front(job);
+                        for id in self.retire(t) {
+                            if let Some(j) = assigned.remove(&id) {
+                                queue.push_back(j);
+                            }
+                        }
+                    }
+                }
+            }
+            // work remains but nobody can take it: grow the pool
+            if !queue.is_empty() && self.open_count() == 0 {
+                self.spawn_child()?;
+                continue;
+            }
+            if queue.is_empty() && self.total_inflight() == 0 {
+                // every job was answered yet some ids never resolved — a
+                // protocol violation we must not wait on forever
+                return Err(ApiError::Shard {
+                    detail: format!("{} job replies never arrived", remaining.len()),
+                });
+            }
+            let (shard, reply) = self
+                .rx
+                .recv()
+                .map_err(|_| ApiError::Shard { detail: "reply channel closed".into() })?;
+            self.on_campaign_reply(
+                shard,
+                reply,
+                out,
+                &mut queue,
+                &mut assigned,
+                &mut ready,
+                &mut remaining,
+            )?;
+        }
+
+        // all outcomes emitted: close stdins so children summarize + exit
+        self.drain_and_reap(|slot, reply| {
+            if let Reply::Summary(r) = reply {
+                if !slot.dead {
+                    slot.summary = Some(r);
+                }
+            }
+        })?;
+
+        let mut merged = CampaignReport::new();
+        for c in &self.children {
+            // a dead child's summary (if any slipped through) is not
+            // trustworthy — requeued jobs also appear in a survivor's
+            let report = if c.dead { &c.local } else { c.summary.as_ref().unwrap_or(&c.local) };
+            merged.merge(report);
+        }
+        if self.deterministic {
+            merged.clear_timing();
+        }
+        let line = JsonValue::Obj(vec![("summary".into(), json::report_to_json(&merged))]).encode();
+        writeln!(out, "{line}").map_err(|e| io_err("writing merged summary", e))?;
+        out.flush().map_err(|e| io_err("flushing merged output", e))?;
+        Ok(merged)
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn on_campaign_reply(
+        &mut self,
+        shard: usize,
+        reply: Reply,
+        out: &mut dyn Write,
+        queue: &mut VecDeque<Job>,
+        assigned: &mut BTreeMap<u64, Job>,
+        ready: &mut BTreeMap<u64, String>,
+        remaining: &mut BTreeSet<u64>,
+    ) -> Result<(), ApiError> {
+        match reply {
+            Reply::Outcome(o) => {
+                if !self.children[shard].inflight.remove(&o.id) {
+                    // not ours (a stale reply from a retired child whose
+                    // job was requeued) — ignore rather than double-count
+                    return Ok(());
+                }
+                assigned.remove(&o.id);
+                self.children[shard].local.absorb(&o);
+                let mut o = o;
+                if self.deterministic {
+                    o.micros = 0;
+                }
+                let line = JsonValue::Obj(vec![
+                    ("ok".into(), JsonValue::Bool(true)),
+                    ("outcome".into(), json::outcome_to_json(&o)),
+                ])
+                .encode();
+                ready.insert(o.id, line);
+                emit_ready(out, ready, remaining)?;
+            }
+            Reply::Error { id: Some(id), msg } => {
+                // a job-level rejection (e.g. unknown pair): deterministic,
+                // so it resolves the id instead of being retried
+                if self.children[shard].inflight.remove(&id) {
+                    assigned.remove(&id);
+                    let line = JsonValue::Obj(vec![
+                        ("ok".into(), JsonValue::Bool(false)),
+                        ("error".into(), JsonValue::str(&msg)),
+                        ("id".into(), JsonValue::u64(id)),
+                    ])
+                    .encode();
+                    ready.insert(id, line);
+                    emit_ready(out, ready, remaining)?;
+                }
+            }
+            Reply::Error { id: None, msg } => {
+                // the parent only writes well-formed job lines, so an
+                // unaddressed error means the pipe is corrupt
+                self.fail_child(shard, queue, assigned, &format!("unaddressed error: {msg}"));
+            }
+            Reply::Summary(r) => {
+                // a summary from a retired child covers requeued jobs —
+                // merging it would double-count them (its `local` stands)
+                if !self.children[shard].dead {
+                    self.children[shard].summary = Some(r);
+                }
+            }
+            Reply::Band(_) => {
+                self.fail_child(shard, queue, assigned, "band reply on a campaign stream");
+            }
+            Reply::Garbage(what) => self.fail_child(shard, queue, assigned, &what),
+            Reply::Eof => {
+                let premature = {
+                    let c = &self.children[shard];
+                    !c.inflight.is_empty() || (c.input.is_some() && c.summary.is_none())
+                };
+                self.children[shard].eof = true;
+                if premature {
+                    for id in self.retire(shard) {
+                        if let Some(j) = assigned.remove(&id) {
+                            queue.push_back(j);
+                        }
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Protocol violation: retire the child and requeue its jobs.
+    fn fail_child(
+        &mut self,
+        shard: usize,
+        queue: &mut VecDeque<Job>,
+        assigned: &mut BTreeMap<u64, Job>,
+        why: &str,
+    ) {
+        eprintln!("shard: worker {shard} failed ({why}); requeueing its jobs");
+        for id in self.retire(shard) {
+            if let Some(j) = assigned.remove(&id) {
+                queue.push_back(j);
+            }
+        }
+    }
+
+    // -- GEMM driver --------------------------------------------------------
+
+    /// Scatter the row bands of `D = A×B + C` across the pool's
+    /// `simulate --stdin` workers and gather the output matrix. The caller
+    /// (see [`Session::shard_gemm`](crate::session::Session::shard_gemm))
+    /// has already validated the operands against the tile instruction;
+    /// `tile_m` is the instruction's M and `d_fmt` its output format.
+    pub fn run_gemm(
+        mut self,
+        a: &BitMatrix,
+        b: &BitMatrix,
+        c: &BitMatrix,
+        tile_m: usize,
+        d_fmt: Format,
+    ) -> Result<BitMatrix, ApiError> {
+        let n = b.cols;
+        let bands = a.rows / tile_m.max(1);
+        // a few spans per worker so a fast child can steal ahead
+        let spans = gemm::band_groups(bands, self.children.len().max(1) * 4);
+        // id → (row0, rows): the request payloads are re-sliced on demand
+        let plan: Vec<(usize, usize)> =
+            spans.iter().map(|s| (s.start * tile_m, (s.end - s.start) * tile_m)).collect();
+
+        // install B once per worker; respawned workers get it replayed
+        let set_b = JsonValue::Obj(vec![("set_b".into(), json::bitmatrix_to_json(b))]).encode();
+        for idx in 0..self.children.len() {
+            if self.children[idx].dead || self.children[idx].input.is_none() {
+                continue;
+            }
+            if self.write_line(idx, &set_b).is_err() {
+                let _ = self.retire(idx); // nothing in flight yet
+            }
+        }
+        self.prelude.push(set_b);
+
+        let mut queue: VecDeque<u64> = (0..plan.len() as u64).collect();
+        let mut d = BitMatrix::zeros(a.rows, n, d_fmt);
+        let mut done: BTreeSet<u64> = BTreeSet::new();
+
+        while done.len() < plan.len() {
+            while !queue.is_empty() {
+                let Some(t) = self.pick_target() else { break };
+                let gid = queue.pop_front().expect("queue checked non-empty");
+                let (row0, rows) = plan[gid as usize];
+                let req = BandRequest {
+                    id: gid,
+                    row0,
+                    a: row_slice(a, row0, rows),
+                    c: row_slice(c, row0, rows),
+                };
+                let line = JsonValue::Obj(vec![("band".into(), json::band_request_to_json(&req))])
+                        .encode();
+                match self.write_line(t, &line) {
+                    Ok(()) => {
+                        self.children[t].inflight.insert(gid);
+                    }
+                    Err(_) => {
+                        queue.push_front(gid);
+                        for id in self.retire(t) {
+                            queue.push_back(id);
+                        }
+                    }
+                }
+            }
+            if !queue.is_empty() && self.open_count() == 0 {
+                self.spawn_child()?;
+                continue;
+            }
+            if queue.is_empty() && self.total_inflight() == 0 && done.len() < plan.len() {
+                return Err(ApiError::Shard {
+                    detail: format!("{} band replies never arrived", plan.len() - done.len()),
+                });
+            }
+            let (shard, reply) = self
+                .rx
+                .recv()
+                .map_err(|_| ApiError::Shard { detail: "reply channel closed".into() })?;
+            match reply {
+                Reply::Band(r) => {
+                    if !self.children[shard].inflight.remove(&r.id) {
+                        continue; // stale reply from a retired child
+                    }
+                    let (row0, rows) = plan[r.id as usize];
+                    if r.row0 != row0 || r.d.rows != rows || r.d.cols != n || r.d.fmt != d_fmt {
+                        eprintln!(
+                            "shard: worker {shard} returned a malformed band {}; requeueing",
+                            r.id
+                        );
+                        queue.push_back(r.id);
+                        for id in self.retire(shard) {
+                            queue.push_back(id);
+                        }
+                        continue;
+                    }
+                    d.data[row0 * n..(row0 + rows) * n].copy_from_slice(&r.d.data);
+                    done.insert(r.id);
+                }
+                Reply::Error { id, msg } => {
+                    // only an error for a band this worker still owes is a
+                    // verdict; stale noise from a retired child is ignored
+                    // (its bands were already requeued)
+                    let owed = id.map_or(false, |id| self.children[shard].inflight.remove(&id));
+                    if owed {
+                        // a live band rejection is deterministic
+                        // (validation): a retry would fail identically
+                        return Err(ApiError::Shard {
+                            detail: format!(
+                                "worker {shard} rejected band {}: {msg}",
+                                id.expect("owed implies an id")
+                            ),
+                        });
+                    }
+                    if id.is_none() && !self.children[shard].dead {
+                        // an unaddressed error from a live worker (e.g. a
+                        // rejected set_b): the stream is not trustworthy —
+                        // retire it and let the requeue/respawn machinery
+                        // (bounded by the respawn budget) sort it out
+                        eprintln!("shard: worker {shard} failed ({msg}); requeueing its bands");
+                        for band in self.retire(shard) {
+                            queue.push_back(band);
+                        }
+                    }
+                }
+                Reply::Eof => {
+                    self.children[shard].eof = true;
+                    for id in self.retire(shard) {
+                        queue.push_back(id);
+                    }
+                }
+                Reply::Garbage(what) => {
+                    eprintln!("shard: worker {shard} failed ({what}); requeueing its bands");
+                    for id in self.retire(shard) {
+                        queue.push_back(id);
+                    }
+                }
+                Reply::Outcome(_) | Reply::Summary(_) => {
+                    eprintln!("shard: worker {shard} sent campaign replies on a GEMM stream");
+                    for id in self.retire(shard) {
+                        queue.push_back(id);
+                    }
+                }
+            }
+        }
+
+        self.drain_and_reap(|_, _| {})?;
+        Ok(d)
+    }
+}
+
+impl Drop for ShardPool<'_> {
+    fn drop(&mut self) {
+        // Early returns and panics land here: no worker process may
+        // outlive the pool, and no reader thread may be left running.
+        for c in &mut self.children {
+            c.input = None;
+            c.handle.kill();
+            if let Some(r) = c.reader.take() {
+                let _ = r.join();
+            }
+        }
+    }
+}
+
+/// Copy rows `row0 .. row0 + rows` of `m` into an owned matrix.
+fn row_slice(m: &BitMatrix, row0: usize, rows: usize) -> BitMatrix {
+    BitMatrix {
+        rows,
+        cols: m.cols,
+        fmt: m.fmt,
+        data: m.data[row0 * m.cols..(row0 + rows) * m.cols].to_vec(),
+    }
+}
+
+/// Emit every buffered line whose id is the lowest unresolved one — the
+/// merger's ordering rule: output is in ascending job-id order no matter
+/// which shard finished first.
+fn emit_ready(
+    out: &mut dyn Write,
+    ready: &mut BTreeMap<u64, String>,
+    remaining: &mut BTreeSet<u64>,
+) -> Result<(), ApiError> {
+    let mut wrote = false;
+    while let Some(&low) = remaining.iter().next() {
+        match ready.remove(&low) {
+            Some(line) => {
+                writeln!(out, "{line}").map_err(|e| io_err("writing merged output", e))?;
+                remaining.remove(&low);
+                wrote = true;
+            }
+            None => break,
+        }
+    }
+    if wrote {
+        out.flush().map_err(|e| io_err("flushing merged output", e))?;
+    }
+    Ok(())
+}
+
+/// Partition `jobs` across `cfg.workers` child `serve --jsonl` processes,
+/// stream the outcome lines to `out` in job-id order, and return the
+/// merged report (also written as a final `{"summary": ...}` line) — the
+/// cross-process form of [`serve_jsonl`](crate::session::serve_jsonl).
+pub fn shard_campaign(
+    jobs: Vec<Job>,
+    cfg: &ShardConfig,
+    transport: &dyn WorkerTransport,
+    out: &mut dyn Write,
+) -> Result<CampaignReport, ApiError> {
+    let role = WorkerRole::Campaign { workers: cfg.child_workers.max(1) };
+    ShardPool::new(transport, role, cfg)?.run_campaign(jobs, out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::VerifyPair;
+    use crate::formats::Rho;
+    use crate::gemm::TiledGemm;
+    use crate::interface::MmaFormats;
+    use crate::isa::Arch;
+    use crate::models::{MmaModel, ModelSpec};
+    use crate::session::{serve_cases, serve_jsonl, ServeConfig, SessionBuilder};
+    use crate::util::Rng;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::{Arc, Condvar, Mutex};
+
+    // -- an in-memory stand-in for OS pipes ---------------------------------
+
+    #[derive(Default)]
+    struct PipeInner {
+        buf: VecDeque<u8>,
+        closed: bool,
+    }
+
+    /// A blocking byte pipe: writes append, reads block until data or
+    /// close. Dropping the writer closes it, like an OS pipe.
+    #[derive(Clone, Default)]
+    struct Pipe(Arc<(Mutex<PipeInner>, Condvar)>);
+
+    impl Pipe {
+        fn parts(&self) -> &(Mutex<PipeInner>, Condvar) {
+            &self.0
+        }
+        fn close(&self) {
+            let (m, cv) = self.parts();
+            m.lock().unwrap().closed = true;
+            cv.notify_all();
+        }
+        fn writer(&self) -> PipeWriter {
+            PipeWriter(self.clone())
+        }
+        fn reader(&self) -> PipeReader {
+            PipeReader(self.clone())
+        }
+    }
+
+    struct PipeWriter(Pipe);
+
+    impl Write for PipeWriter {
+        fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+            let (m, cv) = self.0.parts();
+            let mut st = m.lock().unwrap();
+            if st.closed {
+                return Err(std::io::Error::new(std::io::ErrorKind::BrokenPipe, "pipe closed"));
+            }
+            st.buf.extend(buf.iter().copied());
+            cv.notify_all();
+            Ok(buf.len())
+        }
+        fn flush(&mut self) -> std::io::Result<()> {
+            Ok(())
+        }
+    }
+
+    impl Drop for PipeWriter {
+        fn drop(&mut self) {
+            self.0.close();
+        }
+    }
+
+    struct PipeReader(Pipe);
+
+    impl Read for PipeReader {
+        fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+            if buf.is_empty() {
+                return Ok(0);
+            }
+            let (m, cv) = self.0.parts();
+            let mut st = m.lock().unwrap();
+            loop {
+                if !st.buf.is_empty() {
+                    let n = buf.len().min(st.buf.len());
+                    for slot in buf.iter_mut().take(n) {
+                        *slot = st.buf.pop_front().expect("buffer checked non-empty");
+                    }
+                    return Ok(n);
+                }
+                if st.closed {
+                    return Ok(0);
+                }
+                st = cv.wait(st).unwrap();
+            }
+        }
+    }
+
+    /// Worker lifecycle for an in-process thread standing in for a child:
+    /// `kill` closes both pipes (the thread's next I/O fails, it drains
+    /// and exits) and joins it.
+    struct ThreadHandle {
+        join: Option<std::thread::JoinHandle<()>>,
+        stdin: Pipe,
+        stdout: Pipe,
+    }
+
+    impl WorkerHandle for ThreadHandle {
+        fn wait(&mut self) {
+            if let Some(j) = self.join.take() {
+                let _ = j.join();
+            }
+        }
+        fn kill(&mut self) {
+            self.stdin.close();
+            self.stdout.close();
+            if let Some(j) = self.join.take() {
+                let _ = j.join();
+            }
+        }
+    }
+
+    fn worker_pairs() -> Vec<VerifyPair> {
+        let model = |f: i32| {
+            MmaModel::new(
+                format!("shard-f{f}"),
+                (4, 4, 8),
+                MmaFormats {
+                    a: Format::Fp16,
+                    b: Format::Fp16,
+                    c: Format::Fp32,
+                    d: Format::Fp32,
+                },
+                ModelSpec::TFdpa { l_max: 8, f, rho: Rho::RzFp32 },
+            )
+        };
+        vec![
+            VerifyPair {
+                name: "clean".into(),
+                dut: Arc::new(model(24)),
+                golden: Arc::new(model(24)),
+            },
+            VerifyPair {
+                name: "faulty".into(),
+                dut: Arc::new(model(25)),
+                golden: Arc::new(model(24)),
+            },
+        ]
+    }
+
+    /// The unit-test transport: each "child process" is a thread running
+    /// the very same library loop the real binary would (`serve_jsonl` or
+    /// `serve_cases`) over in-memory pipes.
+    struct ThreadTransport;
+
+    impl WorkerTransport for ThreadTransport {
+        fn launch(&self, role: &WorkerRole) -> Result<WorkerIo, ApiError> {
+            let stdin = Pipe::default();
+            let stdout = Pipe::default();
+            let (child_in, child_out) = (stdin.reader(), stdout.writer());
+            let join = match role {
+                WorkerRole::Campaign { workers } => {
+                    let cfg = ServeConfig { workers: *workers, queue_depth: 0 };
+                    std::thread::spawn(move || {
+                        let mut out = child_out;
+                        let _ =
+                            serve_jsonl(worker_pairs(), &cfg, BufReader::new(child_in), &mut out);
+                    })
+                }
+                WorkerRole::Gemm { arch, instr } => {
+                    let (arch, instr) = (arch.clone(), instr.clone());
+                    std::thread::spawn(move || {
+                        let session = SessionBuilder::new()
+                            .arch_named(arch)
+                            .instruction(instr)
+                            .threads(1)
+                            .build()
+                            .expect("worker session");
+                        let mut out = child_out;
+                        let _ = serve_cases(&session, BufReader::new(child_in), &mut out);
+                    })
+                }
+            };
+            Ok(WorkerIo {
+                input: Box::new(stdin.writer()),
+                output: Box::new(stdout.reader()),
+                handle: Box::new(ThreadHandle { join: Some(join), stdin, stdout }),
+            })
+        }
+    }
+
+    /// Wraps a transport; the first launched worker dies instantly
+    /// without reading a single request (the kill-one-child scenario).
+    struct FlakyTransport<'a> {
+        inner: &'a ThreadTransport,
+        launches: AtomicUsize,
+    }
+
+    impl WorkerTransport for FlakyTransport<'_> {
+        fn launch(&self, role: &WorkerRole) -> Result<WorkerIo, ApiError> {
+            if self.launches.fetch_add(1, Ordering::SeqCst) > 0 {
+                return self.inner.launch(role);
+            }
+            let stdin = Pipe::default();
+            let stdout = Pipe::default();
+            let child_out = stdout.writer();
+            let join = std::thread::spawn(move || drop(child_out));
+            Ok(WorkerIo {
+                input: Box::new(stdin.writer()),
+                output: Box::new(stdout.reader()),
+                handle: Box::new(ThreadHandle { join: Some(join), stdin, stdout }),
+            })
+        }
+    }
+
+    fn jobs(n: u64) -> Vec<Job> {
+        (0..n)
+            .map(|i| Job {
+                id: i,
+                pair: if i % 2 == 0 { "clean" } else { "faulty" }.into(),
+                batch: 24,
+                seed: 1000 + i,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn sharded_campaign_is_deterministic_across_shard_counts() {
+        let transport = ThreadTransport;
+        let mut outputs: Vec<String> = Vec::new();
+        let mut reports = Vec::new();
+        for workers in [1usize, 2, 3] {
+            let cfg = ShardConfig { workers, inflight: 0, child_workers: 2, deterministic: true };
+            let mut out = Vec::new();
+            let report = shard_campaign(jobs(8), &cfg, &transport, &mut out).unwrap();
+            outputs.push(String::from_utf8(out).unwrap());
+            reports.push(report);
+        }
+        assert_eq!(outputs[0], outputs[1], "1 vs 2 shards");
+        assert_eq!(outputs[1], outputs[2], "2 vs 3 shards");
+        assert_eq!(reports[0], reports[1]);
+        assert_eq!(reports[1], reports[2]);
+
+        let r = &reports[0];
+        assert_eq!(r.total_jobs, 8);
+        assert_eq!(r.total_tests, 8 * 24);
+        assert!(r.total_mismatches > 0, "F=24 vs F=25 must diverge");
+        assert_eq!(r.pairs["clean"].mismatches, 0);
+        assert_eq!(r.pairs["faulty"].first_mismatch_job, Some(1), "lowest faulty job id");
+        assert_eq!(r.wall_micros, 0, "deterministic mode zeroes timing");
+
+        // the emitted stream is in ascending job-id order: 8 outcomes + summary
+        let lines: Vec<&str> = outputs[0].lines().collect();
+        assert_eq!(lines.len(), 9, "{}", outputs[0]);
+        for (i, line) in lines[..8].iter().enumerate() {
+            let v = JsonValue::parse(line).unwrap();
+            let o = json::outcome_from_json(v.get("outcome").unwrap()).unwrap();
+            assert_eq!(o.id, i as u64);
+            assert_eq!(o.micros, 0);
+        }
+        let summary = JsonValue::parse(lines[8]).unwrap();
+        let decoded = json::report_from_json(summary.get("summary").unwrap()).unwrap();
+        assert_eq!(&decoded, r);
+    }
+
+    #[test]
+    fn dead_worker_jobs_requeue_onto_survivors() {
+        let inner = ThreadTransport;
+        let flaky = FlakyTransport { inner: &inner, launches: AtomicUsize::new(0) };
+        let cfg = ShardConfig { workers: 2, inflight: 0, child_workers: 1, deterministic: true };
+        let mut out = Vec::new();
+        let report = shard_campaign(jobs(6), &cfg, &flaky, &mut out).unwrap();
+        assert_eq!(report.total_jobs, 6, "jobs owned by the dead worker were requeued");
+
+        // and the output is byte-identical to an all-healthy run
+        let mut healthy_out = Vec::new();
+        let healthy_cfg = ShardConfig { workers: 1, ..cfg };
+        let healthy = shard_campaign(jobs(6), &healthy_cfg, &inner, &mut healthy_out).unwrap();
+        assert_eq!(String::from_utf8(out).unwrap(), String::from_utf8(healthy_out).unwrap());
+        assert_eq!(report, healthy);
+    }
+
+    #[test]
+    fn duplicate_job_ids_are_rejected() {
+        let transport = ThreadTransport;
+        let mut out = Vec::new();
+        let mut js = jobs(2);
+        js[1].id = 0;
+        let err = shard_campaign(js, &ShardConfig::default(), &transport, &mut out).unwrap_err();
+        assert!(matches!(err, ApiError::Shard { .. }), "{err}");
+        // the early return dropped the pool: workers were killed + joined
+    }
+
+    #[test]
+    fn unknown_pairs_resolve_as_ordered_error_lines() {
+        let transport = ThreadTransport;
+        let mut js = jobs(3);
+        js[1].pair = "no-such-pair".into();
+        let cfg = ShardConfig { workers: 2, deterministic: true, ..ShardConfig::default() };
+        let mut out = Vec::new();
+        let report = shard_campaign(js, &cfg, &transport, &mut out).unwrap();
+        assert_eq!(report.total_jobs, 2, "the rejected job ran nowhere");
+        let text = String::from_utf8(out).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 4, "2 outcomes + 1 error + summary: {text}");
+        let err = JsonValue::parse(lines[1]).unwrap();
+        assert_eq!(err.get("ok").and_then(|b| b.as_bool()), Some(false));
+        assert_eq!(err.get("id").and_then(|i| i.as_u64()), Some(1));
+    }
+
+    fn random_mats(
+        rng: &mut Rng,
+        m: usize,
+        n: usize,
+        k: usize,
+        fmts: MmaFormats,
+    ) -> (BitMatrix, BitMatrix, BitMatrix) {
+        let mut a = BitMatrix::zeros(m, k, fmts.a);
+        let mut b = BitMatrix::zeros(k, n, fmts.b);
+        let mut c = BitMatrix::zeros(m, n, fmts.c);
+        for v in a.data.iter_mut() {
+            *v = fmts.a.from_f64(rng.normal());
+        }
+        for v in b.data.iter_mut() {
+            *v = fmts.b.from_f64(rng.normal());
+        }
+        for v in c.data.iter_mut() {
+            *v = fmts.c.from_f64(rng.normal());
+        }
+        (a, b, c)
+    }
+
+    #[test]
+    fn sharded_gemm_matches_the_in_process_engine() {
+        let transport = ThreadTransport;
+        let s = SessionBuilder::new()
+            .arch(Arch::Turing)
+            .instruction("HMMA.1688.F32.F16")
+            .build()
+            .unwrap();
+        let mut rng = Rng::new(77);
+        let (a, b, c) = random_mats(&mut rng, 64, 32, 32, s.formats());
+        let cfg = ShardConfig { workers: 3, inflight: 0, child_workers: 1, deterministic: false };
+        let got = s.shard_gemm(&a, &b, &c, &cfg, &transport).unwrap();
+        let want = TiledGemm::from_model(s.model().clone()).try_execute(&a, &b, &c).unwrap();
+        assert_eq!(got, want, "scattered GEMM must be bit-identical");
+    }
+
+    #[test]
+    fn sharded_gemm_survives_a_dead_worker() {
+        let inner = ThreadTransport;
+        let flaky = FlakyTransport { inner: &inner, launches: AtomicUsize::new(0) };
+        let s = SessionBuilder::new()
+            .arch(Arch::Turing)
+            .instruction("HMMA.1688.F32.F16")
+            .build()
+            .unwrap();
+        let mut rng = Rng::new(78);
+        let (a, b, c) = random_mats(&mut rng, 48, 16, 16, s.formats());
+        let cfg = ShardConfig { workers: 2, inflight: 0, child_workers: 1, deterministic: false };
+        let got = s.shard_gemm(&a, &b, &c, &cfg, &flaky).unwrap();
+        let want = TiledGemm::from_model(s.model().clone()).try_execute(&a, &b, &c).unwrap();
+        assert_eq!(got, want, "bands owned by the dead worker were requeued");
+    }
+
+    #[test]
+    fn band_groups_partition_is_shared_with_the_gemm_engine() {
+        for (bands, groups) in [(1, 1), (4, 2), (5, 4), (10, 4), (3, 8), (16, 16), (7, 1)] {
+            let spans = gemm::band_groups(bands, groups);
+            let mut covered = vec![false; bands];
+            for s in &spans {
+                for i in s.clone() {
+                    assert!(!covered[i], "band {i} covered twice");
+                    covered[i] = true;
+                }
+            }
+            assert!(covered.iter().all(|&c| c), "{bands} bands / {groups} groups");
+            assert!(spans.len() <= groups.max(1));
+            for w in spans.windows(2) {
+                assert_eq!(w[0].end, w[1].start, "spans must be contiguous and ascending");
+            }
+        }
+        assert!(gemm::band_groups(0, 4).is_empty());
+    }
+}

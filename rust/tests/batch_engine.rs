@@ -77,7 +77,7 @@ fn coordinator_batch_path_still_catches_divergence() {
         VerifyPair { name: "diff".into(), dut: Arc::new(mk(24)), golden: Arc::new(mk(25)) },
     ];
     let coord = Coordinator::new(pairs, 4, 8);
-    let report = coord.run_campaign(4, 100, 99);
+    let report = coord.run_campaign(4, 100, 99).unwrap();
     assert_eq!(report.pairs["same"].mismatches, 0);
     assert!(report.pairs["diff"].mismatches > 0, "F=24 vs F=25 must diverge");
     let fm = report.pairs["diff"].first_mismatch.as_ref().expect("mismatch recorded");

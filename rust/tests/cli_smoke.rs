@@ -30,7 +30,7 @@ fn run_ok(args: &[&str]) -> String {
 #[test]
 fn help_lists_the_subcommands() {
     let text = run_ok(&["help"]);
-    for needle in ["USAGE", "simulate", "probe", "serve", "--jsonl", "Session"] {
+    for needle in ["USAGE", "simulate", "probe", "serve", "--jsonl", "shard", "Session"] {
         assert!(text.contains(needle), "help missing '{needle}':\n{text}");
     }
 }
@@ -103,6 +103,76 @@ fn simulate_stdin_round_trips_cases_bit_exactly() {
     }
     let err = json::JsonValue::parse(lines[2]).unwrap();
     assert!(err.get("error").is_some(), "bad line must yield an error object: {}", lines[2]);
+}
+
+#[test]
+fn shard_campaign_output_is_byte_identical_across_worker_counts() {
+    // the same job list and seed through 1, 2, and 4 shard processes must
+    // produce the same bytes: outcome lines in job-id order plus one
+    // merged summary (--deterministic zeroes the only timing content)
+    let run = |workers: &str| {
+        run_ok(&[
+            "shard",
+            "--workers",
+            workers,
+            "--jobs",
+            "6",
+            "--batch",
+            "8",
+            "--seed",
+            "5",
+            "--pair",
+            "sm70 HMMA.884.F32.F16",
+            "--pair",
+            "sm70 HMMA.884.F16.F16",
+            "--child-workers",
+            "2",
+            "--deterministic",
+        ])
+    };
+    let one = run("1");
+    let two = run("2");
+    let four = run("4");
+    assert_eq!(one, two, "1 vs 2 shards must merge identically");
+    assert_eq!(two, four, "2 vs 4 shards must merge identically");
+
+    let lines: Vec<&str> = one.lines().collect();
+    assert_eq!(lines.len(), 7, "6 ordered outcomes + merged summary:\n{one}");
+    for (i, line) in lines[..6].iter().enumerate() {
+        let v = json::JsonValue::parse(line).unwrap();
+        let o = json::outcome_from_json(v.get("outcome").unwrap()).unwrap();
+        assert_eq!(o.id, i as u64, "outcome stream must be in job-id order");
+        assert_eq!(o.tests, 8);
+    }
+    let summary = json::JsonValue::parse(lines[6]).unwrap();
+    let report = json::report_from_json(summary.get("summary").unwrap()).unwrap();
+    assert_eq!(report.total_jobs, 6);
+    assert_eq!(report.total_tests, 48);
+    assert_eq!(report.total_mismatches, 0, "registry self-pairs are clean");
+    assert_eq!(report.wall_micros, 0, "--deterministic zeroes timing");
+}
+
+#[test]
+fn shard_gemm_cli_is_bit_identical_to_in_process() {
+    let text = run_ok(&[
+        "shard",
+        "--gemm",
+        "--arch",
+        "turing",
+        "--instr",
+        "HMMA.1688.F32.F16",
+        "--m",
+        "32",
+        "--n",
+        "16",
+        "--k",
+        "16",
+        "--workers",
+        "2",
+        "--check",
+    ]);
+    assert!(text.contains("d_digest"), "{text}");
+    assert!(text.contains("check ok"), "{text}");
 }
 
 #[test]

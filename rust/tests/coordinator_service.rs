@@ -28,7 +28,7 @@ fn campaign_across_whole_registry_self_pairs() {
     assert!(pairs.len() >= 15);
     let n_pairs = pairs.len();
     let coord = Coordinator::new(pairs, 8, 16);
-    let report = coord.run_campaign(2, 12, 5);
+    let report = coord.run_campaign(2, 12, 5).unwrap();
     assert_eq!(report.total_tests, 2 * 12 * n_pairs);
     assert_eq!(report.total_mismatches, 0, "{}", report.render());
     coord.shutdown();
@@ -53,11 +53,11 @@ fn manual_submission_and_collection() {
     };
     let coord = Coordinator::new(vec![pair], 2, 2);
     for id in 0..6 {
-        coord.submit(Job { id, pair: "x".into(), batch: 10, seed: id });
+        coord.submit(Job { id, pair: "x".into(), batch: 10, seed: id }).unwrap();
     }
     let mut seen = std::collections::BTreeSet::new();
     for _ in 0..6 {
-        let out = coord.next_outcome();
+        let out = coord.next_outcome().unwrap();
         assert_eq!(out.tests, 10);
         seen.insert(out.id);
     }
@@ -83,8 +83,8 @@ fn unknown_pair_yields_empty_outcome() {
         )),
     };
     let coord = Coordinator::new(vec![pair], 1, 2);
-    coord.submit(Job { id: 1, pair: "missing".into(), batch: 10, seed: 3 });
-    let out = coord.next_outcome();
+    coord.submit(Job { id: 1, pair: "missing".into(), batch: 10, seed: 3 }).unwrap();
+    let out = coord.next_outcome().unwrap();
     assert_eq!(out.tests, 0, "unroutable job completes with zero tests");
     coord.shutdown();
 }
@@ -117,7 +117,7 @@ fn pjrt_campaign_is_clean() {
     let n = pairs.len();
     assert!(n >= 8, "all artifacts registered");
     let coord = Coordinator::new(pairs, 4, 8);
-    let report = coord.run_campaign(1, 10, 77);
+    let report = coord.run_campaign(1, 10, 77).unwrap();
     assert_eq!(report.total_tests, 10 * n);
     assert_eq!(report.total_mismatches, 0, "{}", report.render());
     coord.shutdown();

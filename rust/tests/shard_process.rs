@@ -1,0 +1,150 @@
+//! Cross-process shard integration: every test here drives real
+//! `mma-sim` child processes through the shard pool, pinning the two
+//! acceptance properties of the sharding subsystem — sharded GEMM is
+//! bit-identical to the in-process engine, and a child that dies (the
+//! kill-one-child scenario) neither loses jobs nor leaks processes.
+
+use std::process::{Command, Stdio};
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use mma_sim::coordinator::Job;
+use mma_sim::gemm::TiledGemm;
+use mma_sim::interface::{BitMatrix, MmaFormats};
+use mma_sim::isa::Arch;
+use mma_sim::session::shard::{
+    shard_campaign, ProcessTransport, WorkerHandle, WorkerIo, WorkerRole, WorkerTransport,
+};
+use mma_sim::session::{ApiError, CampaignConfig, SessionBuilder, ShardConfig};
+use mma_sim::util::Rng;
+
+fn binary() -> &'static str {
+    env!("CARGO_BIN_EXE_mma-sim")
+}
+
+fn random_mats(
+    rng: &mut Rng,
+    m: usize,
+    n: usize,
+    k: usize,
+    fmts: MmaFormats,
+) -> (BitMatrix, BitMatrix, BitMatrix) {
+    let mut a = BitMatrix::zeros(m, k, fmts.a);
+    let mut b = BitMatrix::zeros(k, n, fmts.b);
+    let mut c = BitMatrix::zeros(m, n, fmts.c);
+    for v in a.data.iter_mut() {
+        *v = fmts.a.from_f64(rng.normal());
+    }
+    for v in b.data.iter_mut() {
+        *v = fmts.b.from_f64(rng.normal());
+    }
+    for v in c.data.iter_mut() {
+        *v = fmts.c.from_f64(rng.normal());
+    }
+    (a, b, c)
+}
+
+#[test]
+fn sharded_gemm_256_bit_identical_across_process_boundary() {
+    // the acceptance case: a 256x256x256 GEMM scattered over child
+    // processes must be bit-identical to TiledGemm::try_execute
+    let s = SessionBuilder::new()
+        .arch(Arch::Hopper)
+        .instruction("HGMMA.64x8x16.F32.F16")
+        .build()
+        .unwrap();
+    let mut rng = Rng::new(0x256);
+    let (a, b, c) = random_mats(&mut rng, 256, 256, 256, s.formats());
+    let transport = ProcessTransport::with_binary(binary());
+    let cfg = ShardConfig { workers: 3, inflight: 0, child_workers: 1, deterministic: false };
+    let got = s.shard_gemm(&a, &b, &c, &cfg, &transport).unwrap();
+    let want = TiledGemm::from_model(s.model().clone()).try_execute(&a, &b, &c).unwrap();
+    assert_eq!(got.data, want.data, "cross-process GEMM must be bit-identical");
+    assert_eq!((got.rows, got.cols, got.fmt), (want.rows, want.cols, want.fmt));
+}
+
+/// A transport whose first worker is dead on arrival: it exits with an
+/// error before reading any input or writing a single protocol line —
+/// the process-level kill-one-child scenario.
+struct FirstChildDead {
+    real: ProcessTransport,
+    launches: AtomicUsize,
+}
+
+struct Reaper(std::process::Child);
+
+impl WorkerHandle for Reaper {
+    fn wait(&mut self) {
+        let _ = self.0.wait();
+    }
+    fn kill(&mut self) {
+        let _ = self.0.kill();
+        let _ = self.0.wait();
+    }
+}
+
+impl WorkerTransport for FirstChildDead {
+    fn launch(&self, role: &WorkerRole) -> Result<WorkerIo, ApiError> {
+        if self.launches.fetch_add(1, Ordering::SeqCst) > 0 {
+            return self.real.launch(role);
+        }
+        let mut child = Command::new(binary())
+            .args(["simulate", "--arch", "z80"]) // exits 1, stdout empty
+            .stdin(Stdio::piped())
+            .stdout(Stdio::piped())
+            .stderr(Stdio::null())
+            .spawn()
+            .expect("spawn dead-on-arrival child");
+        Ok(WorkerIo {
+            input: Box::new(child.stdin.take().expect("piped stdin")),
+            output: Box::new(child.stdout.take().expect("piped stdout")),
+            handle: Box::new(Reaper(child)),
+        })
+    }
+}
+
+#[test]
+fn killed_child_loses_no_jobs_and_reaps_cleanly() {
+    let pair = "sm70 HMMA.884.F32.F16";
+    let jobs: Vec<Job> = (0..6)
+        .map(|i| Job { id: i, pair: pair.into(), batch: 10, seed: 40 + i })
+        .collect();
+    let flaky = FirstChildDead {
+        real: ProcessTransport::with_binary(binary()),
+        launches: AtomicUsize::new(0),
+    };
+    let cfg = ShardConfig { workers: 2, inflight: 0, child_workers: 1, deterministic: true };
+    let mut out = Vec::new();
+    let report = shard_campaign(jobs.clone(), &cfg, &flaky, &mut out).unwrap();
+    assert_eq!(report.total_jobs, 6, "jobs owned by the dead child were requeued");
+    assert_eq!(report.total_tests, 60);
+    assert_eq!(report.total_mismatches, 0);
+
+    // and the merged stream is byte-identical to an all-healthy run —
+    // a dead child may cost time, never content
+    let healthy = ProcessTransport::with_binary(binary());
+    let healthy_cfg = ShardConfig { workers: 1, ..cfg };
+    let mut healthy_out = Vec::new();
+    let healthy_report = shard_campaign(jobs, &healthy_cfg, &healthy, &mut healthy_out).unwrap();
+    assert_eq!(String::from_utf8(out).unwrap(), String::from_utf8(healthy_out).unwrap());
+    assert_eq!(report, healthy_report);
+    // returning at all proves the pool reaped: a leaked child would hold
+    // the stdout pipe open and the merge loop would still be blocked
+}
+
+#[test]
+fn session_shard_campaign_self_verifies_across_processes() {
+    let s = SessionBuilder::new()
+        .arch(Arch::Volta)
+        .instruction("HMMA.884.F32.F16")
+        .build()
+        .unwrap();
+    let transport = ProcessTransport::with_binary(binary());
+    let cfg = CampaignConfig { workers: 2, jobs: 4, batch: 10, seed: 3 };
+    let shard_cfg = ShardConfig { workers: 2, inflight: 0, child_workers: 2, deterministic: false };
+    let mut out = Vec::new();
+    let report = s.shard_campaign(&cfg, &shard_cfg, &transport, &mut out).unwrap();
+    assert_eq!(report.total_jobs, 4);
+    assert_eq!(report.total_tests, 40);
+    assert_eq!(report.total_mismatches, 0, "self-verification must be clean");
+    assert!(report.wall_micros > 0, "non-deterministic mode keeps shard timing");
+}
