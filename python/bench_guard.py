@@ -24,6 +24,13 @@ Two checks over a fresh ``BENCH_hotpath.json``:
      startup cost cancels. Ceiling: 2.0x on full runs, 4.0x on smoke
      runs (env ``GUARD_MAX_SHARD_OVERHEAD`` overrides both). Catches the
      wire seam getting expensive relative to the work it ships.
+   - ``compiled`` section — per model family, the monomorphized
+     (spec-compiled) kernel vs the retained interpreter over the same
+     operands and traversal. Floor: 1.0 on full runs (straight-line
+     code must not lose to the interpreter it replaced), 0.85 on smoke
+     runs (env ``GUARD_MIN_COMPILED_SPEEDUP`` overrides both). Catches
+     the compiled dispatch silently falling back to the interpreter or
+     a monomorphized kernel regressing below interpreted speed.
 
 2. **Cross-run**: record-by-record, the fresh run must not regress more
    than ``REGRESSION_FACTOR`` (2x) against the committed baseline. When
@@ -68,6 +75,13 @@ def shard_ceiling(fresh):
     if env is not None:
         return float(env)
     return 4.0 if fresh.get("smoke") else 2.0
+
+
+def compiled_floor(fresh):
+    env = os.environ.get("GUARD_MIN_COMPILED_SPEEDUP")
+    if env is not None:
+        return float(env)
+    return 0.85 if fresh.get("smoke") else 1.0
 
 
 def load(path):
@@ -175,6 +189,27 @@ def main():
                 f"guard: shard.overhead_marginal_vs_inprocess = {overhead:.2f}x "
                 f"(<= {ceiling:.2f}x) ok"
             )
+
+    # --- check 1d: compiled kernels vs interpreter ------------------------
+    floor = compiled_floor(fresh)
+    compiled = fresh.get("compiled") or {}
+    if not compiled:
+        failures.append(
+            "no `compiled` section in fresh run (spec-compiled kernel bench missing)"
+        )
+    for family, row in sorted(compiled.items()):
+        speedup = (row or {}).get("speedup")
+        if speedup is None:
+            failures.append(
+                f"compiled.{family}.speedup is null -- bench emitted no measurement"
+            )
+        elif speedup < floor:
+            failures.append(
+                f"compiled.{family} = {speedup:.2f}x < {floor:.2f}x: "
+                "monomorphized kernel regressed below interpreter speed"
+            )
+        else:
+            print(f"guard: compiled.{family} = {speedup:.2f}x (>= {floor:.2f}x) ok")
 
     # --- check 2: cross-run vs committed baseline ------------------------
     base = None

@@ -14,7 +14,7 @@ use mma_sim::formats::{tables, Format, Rho};
 use mma_sim::gemm::TiledGemm;
 use mma_sim::interface::{auto_threads, parallel_execute_batch_with, MmaInterface};
 use mma_sim::interface::{BitMatrix, MmaFormats};
-use mma_sim::models::{MmaModel, ModelSpec};
+use mma_sim::models::{DpaScratch, MmaModel, ModelSpec};
 use mma_sim::ops::{
     e_fdpa, fma, ftz_add, ftz_mul, gtr_fdpa, t_fdpa, tr_fdpa, GtrFdpaCfg, TFdpaCfg, TrFdpaCfg,
 };
@@ -401,6 +401,124 @@ fn main() {
         records.push((r.name.clone(), r.mean_ns, r.throughput(nd8 as f64) / 1e6));
     }
 
+    // === compiled kernels vs interpreter =====================================
+    // Headline per-family M dpa/s: one representative registry-shaped model
+    // per family through the monomorphized (spec-compiled) kernel and
+    // through the retained interpreter — identical traversal, scale
+    // gathering, and panel fill; only the per-element run function differs.
+    // Bit-identity is asserted outside the timed region (the differential
+    // suite covers the full registry; this pins the exact benched shapes).
+    // The `compiled` section of BENCH_hotpath.json records both paths and
+    // the speedup; bench_guard enforces the in-run floor
+    // (GUARD_MIN_COMPILED_SPEEDUP overrides).
+    let fam = |f: Format| MmaFormats { a: f, b: f, c: Format::Fp32, d: Format::Fp32 };
+    let fam_models = [
+        (
+            "t",
+            MmaModel::new(
+                "t/fp16_l16",
+                (16, 8, 16),
+                fam(Format::Fp16),
+                ModelSpec::TFdpa { l_max: 16, f: 25, rho: Rho::RzFp32 },
+            ),
+        ),
+        (
+            "st",
+            MmaModel::new(
+                "st/fp8e4m3_l32",
+                (16, 8, 32),
+                fam(Format::Fp8E4M3),
+                ModelSpec::StFdpa { l_max: 32, f: 25, rho: Rho::RzFp32, kblock: 32 },
+            ),
+        ),
+        (
+            "gst",
+            MmaModel::new(
+                "gst/fp4_nvf4",
+                (16, 8, 64),
+                fam(Format::Fp4E2M1),
+                ModelSpec::GstFdpa {
+                    l: 64,
+                    g: 16,
+                    f: 35,
+                    rho: Rho::RzFp32,
+                    kblock: 16,
+                    scale_fmt: Format::Ue4M3,
+                },
+            ),
+        ),
+        (
+            "tr",
+            MmaModel::new(
+                "tr/fp16_l8",
+                (16, 8, 16),
+                fam(Format::Fp16),
+                ModelSpec::TrFdpa { l_max: 8, f: 24, f2: 31 },
+            ),
+        ),
+        (
+            "gtr",
+            MmaModel::new(
+                "gtr/fp8e4m3_l16",
+                (16, 8, 32),
+                fam(Format::Fp8E4M3),
+                ModelSpec::GtrFdpa { l_max: 16, f: 24, f2: 31 },
+            ),
+        ),
+        (
+            "e",
+            MmaModel::new("e/fp16_l4", (16, 8, 16), fam(Format::Fp16), ModelSpec::EFdpa { l: 4 }),
+        ),
+        (
+            "ftz",
+            MmaModel::new(
+                "ftz/fp16_p4",
+                (16, 8, 16),
+                fam(Format::Fp16),
+                ModelSpec::FtzAddMul { p: 4 },
+            ),
+        ),
+        (
+            "fma",
+            MmaModel::new("fma/fp32", (16, 8, 8), fam(Format::Fp32), ModelSpec::FmaChain),
+        ),
+    ];
+    // (family, shape, compiled M dpa/s, interpreter M dpa/s)
+    let mut compiled_rows: Vec<(&str, String, f64, f64)> = Vec::new();
+    let mut r5 = Rng::new(0xC04D);
+    let mut cscratch = DpaScratch::default();
+    for (family, model) in &fam_models {
+        assert!(model.is_compiled(), "bench family {family} must route through a compiled kernel");
+        let (m, n, k) = model.shape();
+        let (ca, cb, cc) = mma_sim::clfp::random_inputs(&mut r5, model, 2);
+        let mut d_hot = BitMatrix::zeros(m, n, model.formats.d);
+        let mut d_ref = BitMatrix::zeros(m, n, model.formats.d);
+        model.execute_into(&ca, &cb, &cc, None, &mut d_hot, &mut cscratch);
+        model.execute_reference_into(&ca, &cb, &cc, None, &mut d_ref, &mut cscratch);
+        assert_eq!(
+            d_hot.data, d_ref.data,
+            "compiled/{family}: benched shape must be bit-identical to the interpreter"
+        );
+        let shape = format!("{m}x{n}x{k}");
+        let dpas = (m * n) as f64;
+        let r_hot = bench(&format!("compiled/{family}/{shape}/compiled"), || {
+            model.execute_into(&ca, &cb, &cc, None, &mut d_hot, &mut cscratch);
+            black_box(&d_hot);
+        });
+        let r_int = bench(&format!("compiled/{family}/{shape}/interpreter"), || {
+            model.execute_reference_into(&ca, &cb, &cc, None, &mut d_ref, &mut cscratch);
+            black_box(&d_ref);
+        });
+        let hot = r_hot.throughput(dpas) / 1e6;
+        let interp = r_int.throughput(dpas) / 1e6;
+        let sp = hot / interp;
+        println!("    -> {family}: {hot:.2} vs {interp:.2} M dpa/s ({sp:.2}x compiled/interp)");
+        for r in [&r_hot, &r_int] {
+            records.push((r.name.clone(), r.mean_ns, r.throughput(dpas) / 1e6));
+        }
+        compiled_rows.push((family, shape, hot, interp));
+    }
+
     // === JSON record =========================================================
     let mut json = String::from("{\n");
     json.push_str("  \"bench\": \"hotpath\",\n");
@@ -455,6 +573,16 @@ fn main() {
     json.push_str(&format!("    \"decode_fp16_speedup\": {sp_dec16:.3},\n"));
     json.push_str(&format!("    \"decode_fp8e4m3_speedup\": {sp_dec8:.3},\n"));
     json.push_str(&format!("    \"product_fp8e4m3_speedup\": {sp_prod:.3}\n"));
+    json.push_str("  },\n");
+    json.push_str("  \"compiled\": {\n");
+    for (i, (family, shape, hot, interp)) in compiled_rows.iter().enumerate() {
+        let comma = if i + 1 < compiled_rows.len() { "," } else { "" };
+        json.push_str(&format!(
+            "    \"{family}\": {{\"shape\": \"{shape}\", \"compiled_mdpa_per_s\": {hot:.3}, \
+             \"interpreter_mdpa_per_s\": {interp:.3}, \"speedup\": {:.3}}}{comma}\n",
+            hot / interp
+        ));
+    }
     json.push_str("  }\n}\n");
 
     let path = mma_sim::util::bench::out_path("BENCH_hotpath.json");

@@ -46,6 +46,12 @@ pub const PRODUCT_FORMATS: [Format; 7] = [
     Format::Ue4M3,
 ];
 
+/// Formats served by the split (per-operand) product sub-tables: the
+/// 16-bit formats, where a 2^32-entry pair table is infeasible but one
+/// 65 536-entry magnitude/exponent table per operand recovers the product
+/// term with two loads and one narrow multiply.
+pub const SPLIT_PRODUCT_FORMATS: [Format; 2] = [Format::Fp16, Format::Bf16];
+
 #[inline]
 const fn lut_index(fmt: Format) -> Option<usize> {
     match fmt {
@@ -58,6 +64,15 @@ const fn lut_index(fmt: Format) -> Option<usize> {
         Format::Fp4E2M1 => Some(6),
         Format::E8M0 => Some(7),
         Format::Ue4M3 => Some(8),
+        _ => None,
+    }
+}
+
+#[inline]
+const fn split_index(fmt: Format) -> Option<usize> {
+    match fmt {
+        Format::Fp16 => Some(0),
+        Format::Bf16 => Some(1),
         _ => None,
     }
 }
@@ -87,20 +102,33 @@ struct ProdEntry {
     neg: bool,
 }
 
+/// Split-table entry: one *operand* of a product, reduced to its signed
+/// significand and unbiased exponent. `mag = 0` encodes Zero/Inf/NaN
+/// operands (they decode to `sig 0`; `exp` is stored as 0 and never read).
+#[derive(Clone, Copy, Debug)]
+struct SplitEntry {
+    mag: u16,
+    exp: i16,
+    neg: bool,
+}
+
 type DecodeSlot = OnceLock<Box<[Decoded]>>;
 type F64Slot = OnceLock<Box<[f64]>>;
 type ProdSlot = OnceLock<Box<[ProdEntry]>>;
+type SplitSlot = OnceLock<Box<[SplitEntry]>>;
 
 // `OnceLock` is not `Copy`; const items make the array-repeat initializers
 // const-evaluable on the crate's 1.75 MSRV (no inline-const blocks).
 const DECODE_SLOT: DecodeSlot = OnceLock::new();
 const F64_SLOT: F64Slot = OnceLock::new();
 const PROD_SLOT: ProdSlot = OnceLock::new();
+const SPLIT_SLOT: SplitSlot = OnceLock::new();
 const PROD_ROW: [ProdSlot; 7] = [PROD_SLOT; 7];
 
 static DECODE: [DecodeSlot; 9] = [DECODE_SLOT; 9];
 static F64: [F64Slot; 9] = [F64_SLOT; 9];
 static PRODUCT: [[ProdSlot; 7]; 7] = [PROD_ROW; 7];
+static SPLIT: [SplitSlot; 2] = [SPLIT_SLOT; 2];
 
 /// Decode LUT for `fmt`, indexed by `bits & fmt.mask()`. `None` for
 /// formats wider than 16 bits (which stay on the bit-level path).
@@ -149,6 +177,47 @@ pub fn product(fmt_a: Format, a_bits: u64, fmt_b: Format, b_bits: u64) -> Option
     })
 }
 
+/// Exact product term for a *16-bit* format via per-operand split
+/// sub-tables: two 65 536-entry loads plus one `u16 × u16` multiply
+/// reconstruct exactly what [`FxTerm::product`] computes over the
+/// bit-level decodes (significands ≤ 11 bits, so the magnitude product
+/// fits 22 bits losslessly). `None` for formats outside
+/// [`SPLIT_PRODUCT_FORMATS`].
+#[inline]
+pub fn product_split(fmt: Format, a_bits: u64, b_bits: u64) -> Option<FxTerm> {
+    let i = split_index(fmt)?;
+    let table = SPLIT[i].get_or_init(|| build_split(fmt));
+    let ea = table[(a_bits & fmt.mask()) as usize];
+    let eb = table[(b_bits & fmt.mask()) as usize];
+    let mag = ea.mag as u128 * eb.mag as u128;
+    Some(if mag == 0 {
+        FxTerm::ZERO
+    } else {
+        FxTerm {
+            neg: ea.neg != eb.neg,
+            mag,
+            exp: ea.exp as i32 + eb.exp as i32,
+            frac: 2 * fmt.mant_bits() as i32,
+        }
+    })
+}
+
+fn build_split(fmt: Format) -> Box<[SplitEntry]> {
+    (0..=fmt.mask())
+        .map(|bits| {
+            let d = decoded::decode(fmt, bits);
+            // 16-bit formats: sig ≤ 2^11, |exp| ≤ 133 (BF16 subnormals)
+            debug_assert!(d.sig <= u16::MAX as u64);
+            debug_assert!(d.sig == 0 || (d.exp >= i16::MIN as i32 && d.exp <= i16::MAX as i32));
+            SplitEntry {
+                mag: d.sig as u16,
+                exp: if d.sig == 0 { 0 } else { d.exp as i16 },
+                neg: d.sign,
+            }
+        })
+        .collect()
+}
+
 fn build_product(fmt_a: Format, fmt_b: Format) -> Box<[ProdEntry]> {
     let db: Vec<Decoded> = (0..=fmt_b.mask()).map(|b| decoded::decode(fmt_b, b)).collect();
     let mut out = Vec::with_capacity(1usize << (fmt_a.width() + fmt_b.width()));
@@ -178,13 +247,15 @@ fn build_product(fmt_a: Format, fmt_b: Format) -> Box<[ProdEntry]> {
     out.into_boxed_slice()
 }
 
-/// Eagerly build every table serving `fmt`: decode, `f64`, and — for
-/// ≤ 8-bit formats — the same-format product table. A no-op for wide
-/// formats, idempotent and cheap once built.
+/// Eagerly build every table serving `fmt`: decode, `f64`, the
+/// same-format product table (≤ 8-bit formats), and the split product
+/// sub-table (16-bit formats). A no-op for wide formats, idempotent and
+/// cheap once built.
 pub fn warm(fmt: Format) {
     let _ = decode_lut(fmt);
     let _ = f64_lut(fmt);
     let _ = product(fmt, 0, fmt, 0);
+    let _ = product_split(fmt, 0, 0);
 }
 
 #[cfg(test)]
@@ -232,6 +303,32 @@ mod tests {
     fn product_table_absent_for_wide_formats() {
         assert!(product(Format::Fp16, 0, Format::Fp16, 0).is_none());
         assert!(product(Format::Fp8E4M3, 0, Format::Bf16, 0).is_none());
+    }
+
+    #[test]
+    fn split_product_spot_checks() {
+        // 1.5 × -2.0 in FP16
+        let a = Format::Fp16.from_f64(1.5);
+        let b = Format::Fp16.from_f64(-2.0);
+        let t = product_split(Format::Fp16, a, b).unwrap();
+        assert!(t.neg);
+        assert_eq!(t.to_f64(), -3.0);
+        // subnormal × normal in BF16: 2^-133 × 2^8
+        let s = Format::Bf16.from_f64(2f64.powi(-133));
+        let n = Format::Bf16.from_f64(2f64.powi(8));
+        let t = product_split(Format::Bf16, s, n).unwrap();
+        assert_eq!(t.to_f64(), 2f64.powi(-125));
+        // NaN operand: sig 0 ⇒ zero term (class is the special scan's job)
+        let nan = Format::Fp16.nan_pattern().unwrap();
+        let t = product_split(Format::Fp16, nan, b).unwrap();
+        assert_eq!(t, FxTerm::ZERO);
+    }
+
+    #[test]
+    fn split_product_absent_outside_16bit_formats() {
+        assert!(product_split(Format::Fp8E4M3, 0, 0).is_none());
+        assert!(product_split(Format::Tf32, 0, 0).is_none());
+        assert!(product_split(Format::Fp32, 0, 0).is_none());
     }
 
     #[test]

@@ -33,14 +33,30 @@
 //!   operations are built from.
 //! - [`ops`] — the nine elementary operations of the paper
 //!   (Algorithms 1, 3, 6–11): FTZ-Add/Mul, FMA, E-FDPA, T-FDPA, ST-FDPA,
-//!   GST-FDPA, TR-FDPA, GTR-FDPA.
+//!   GST-FDPA, TR-FDPA, GTR-FDPA. Each fused family carries two forms:
+//!   the runtime-parameterized entry (`t_fdpa`, `gst_fdpa`, …) and a
+//!   const-generic `*_lanes` core with the vector length, summation
+//!   precision, and scale-block geometry folded as compile-time
+//!   constants — the building blocks the compiled kernel layer
+//!   monomorphizes over.
 //! - [`models`] — matrix-level arithmetic-behavior models Φ
-//!   (Algorithms 2, 4, 5). The execution core is zero-copy and strided:
+//!   (Algorithms 2, 4, 5), in two bit-identical implementations:
+//!   the *interpreter* (`run_*` kernels reading chunk length, widths,
+//!   and rounding mode out of the resolved spec at runtime — the
+//!   explicit reference implementation) and the *compiled* layer
+//!   (`models::compiled`: every registry (family × format × L)
+//!   combination macro-instantiated into a straight-line kernel over
+//!   the `ops` lane cores, resolved once at `MmaModel::new`).
+//!   Execution runs the compiled kernel whenever the spec is in the
+//!   generated set (every registry instruction) and falls back to the
+//!   interpreter for ragged-K or non-registry parameterizations;
+//!   `tests/compiled_kernels.rs` is the differential proof. The
+//!   execution core is zero-copy and strided:
 //!   `MmaModel::execute_view_into` reads operands in place through
 //!   [`interface::MatRef`] views, pretransposes B once per case into a
 //!   scratch [`interface::BPanel`] (contiguous columns, no per-output
-//!   gathering), and resolves the `ModelSpec` to a kernel function once
-//!   before the m×n loop.
+//!   gathering), and resolves the kernel function once before the m×n
+//!   loop.
 //! - [`isa`] — the instruction registry for the ten GPU architectures
 //!   (paper Tables 3–7), with fallible fragment resolution
 //!   ([`isa::resolve`]).
@@ -66,6 +82,17 @@
 //! - [`runtime`] — PJRT CPU client wrapper that loads AOT artifacts
 //!   produced by `python/compile/aot.py` and exposes them as
 //!   `MmaInterface`s.
+
+// Clippy triage (PR 6, `-D warnings` now enforced in CI): these two lints
+// conflict with the house style of the bit-exact kernels and are allowed
+// crate-wide rather than sprinkled per-function.
+// - `needless_range_loop`: the lane kernels index several fixed-size
+//   arrays in lockstep (`da[i]`, `db[i]`, `terms[i]`); iterator zips would
+//   obscure the lane structure the monomorphization exists to expose.
+// - `too_many_arguments`: the `*_lanes` cores and `FxTerm::product` take
+//   the full decoded operand tuple by design — bundling them into structs
+//   would reintroduce the per-call packing the compiled path removes.
+#![allow(clippy::needless_range_loop, clippy::too_many_arguments)]
 
 pub mod analysis;
 pub mod clfp;

@@ -1,0 +1,471 @@
+//! Spec-compiled DPA kernels: the registry's (family × format × L)
+//! combinations monomorphized into straight-line code.
+//!
+//! The interpreter kernels in [`super`] (`run_t`, `run_gst`, …) read the
+//! chunk length, mantissa widths, scale-block geometry, and rounding mode
+//! out of the [`DpaKernel`] struct at runtime. Here each combination that
+//! actually occurs in the instruction registry is *generated* instead: a
+//! declarative macro per family instantiates the `*_lanes` cores from
+//! [`crate::ops`] with every parameter folded as a constant, yielding one
+//! fixed-trip-count, stack-exact kernel per (family, format, L, F, ρ)
+//! tuple. [`lookup`] resolves a [`ModelSpec`] to its compiled kernel at
+//! model construction; combinations outside the generated set (ragged K,
+//! non-registry parameters) return `None` and stay on the interpreter,
+//! which is retained as the reference implementation and differential
+//! oracle (`tests/compiled_kernels.rs`).
+//!
+//! Whole chunks only: every compiled kernel assumes `K % L == 0` (the
+//! registry guarantees it — see the `shapes_chain_cleanly` ISA test), so
+//! the inner loops never carry a ragged-tail branch.
+
+use super::{DpaKernel, ModelSpec};
+use crate::formats::{Format, Rho, RoundingMode};
+use crate::ops::e_fdpa::e_fdpa_lanes;
+use crate::ops::fma::fma;
+use crate::ops::ftz::ftz_dpa_lanes;
+use crate::ops::gst_fdpa::gst_fdpa_lanes;
+use crate::ops::gtr_fdpa::gtr_fdpa_lanes;
+use crate::ops::st_fdpa::st_fdpa_lanes;
+use crate::ops::t_fdpa::t_fdpa_lanes;
+use crate::ops::tr_fdpa::tr_fdpa_lanes;
+
+/// The kernel function signature shared with the interpreter's `run_*`
+/// family, so a compiled kernel drops into [`DpaKernel::run`] unchanged.
+pub(super) type RunFn = fn(&DpaKernel, &[u64], &[u64], u64, &[u64], &[u64]) -> u64;
+
+// ---- FMA chains (format folded; K stays the runtime trip count) ----
+
+fn fma_fp32(_kn: &DpaKernel, a: &[u64], b: &[u64], c: u64, _sa: &[u64], _sb: &[u64]) -> u64 {
+    let mut d = c;
+    for (&x, &y) in a.iter().zip(b.iter()) {
+        d = fma(Format::Fp32, x, y, d);
+    }
+    d
+}
+
+fn fma_fp64(_kn: &DpaKernel, a: &[u64], b: &[u64], c: u64, _sa: &[u64], _sb: &[u64]) -> u64 {
+    let mut d = c;
+    for (&x, &y) in a.iter().zip(b.iter()) {
+        d = fma(Format::Fp64, x, y, d);
+    }
+    d
+}
+
+// ---- per-family wrapper generators ----
+
+macro_rules! ftz_kernel {
+    ($name:ident, $fmt:expr, $p:literal) => {
+        fn $name(kn: &DpaKernel, a: &[u64], b: &[u64], c: u64, _sa: &[u64], _sb: &[u64]) -> u64 {
+            debug_assert_eq!(kn.k % $p, 0);
+            ftz_dpa_lanes::<$p>($fmt, a, b, c)
+        }
+    };
+}
+
+macro_rules! e_kernel {
+    ($name:ident, $fmt:expr, $l:literal) => {
+        fn $name(kn: &DpaKernel, a: &[u64], b: &[u64], c: u64, _sa: &[u64], _sb: &[u64]) -> u64 {
+            debug_assert_eq!(kn.k % $l, 0);
+            let mut d = c;
+            let mut lo = 0;
+            while lo < kn.k {
+                d = e_fdpa_lanes::<$l>($fmt, &a[lo..lo + $l], &b[lo..lo + $l], d);
+                lo += $l;
+            }
+            d
+        }
+    };
+}
+
+macro_rules! t_kernel {
+    ($name:ident, $fmt:expr, $l:literal, $f:literal, $rho:expr) => {
+        fn $name(kn: &DpaKernel, a: &[u64], b: &[u64], c: u64, _sa: &[u64], _sb: &[u64]) -> u64 {
+            debug_assert_eq!(kn.k % $l, 0);
+            let mut d = c;
+            let mut lo = 0;
+            while lo < kn.k {
+                d = t_fdpa_lanes::<$l, $f>(
+                    $fmt,
+                    $rho,
+                    &a[lo..lo + $l],
+                    &b[lo..lo + $l],
+                    d,
+                    0,
+                    false,
+                );
+                lo += $l;
+            }
+            d
+        }
+    };
+}
+
+macro_rules! st_kernel {
+    ($name:ident, $fmt:expr, $l:literal, $f:literal, $rho:expr) => {
+        fn $name(kn: &DpaKernel, a: &[u64], b: &[u64], c: u64, sa: &[u64], sb: &[u64]) -> u64 {
+            // one scale per chunk: the lookup gate guarantees L == K_block
+            debug_assert_eq!(kn.k % $l, 0);
+            let mut d = c;
+            let mut blk = 0;
+            let mut lo = 0;
+            while lo < kn.k {
+                d = st_fdpa_lanes::<$l, $f>(
+                    $fmt,
+                    $rho,
+                    &a[lo..lo + $l],
+                    &b[lo..lo + $l],
+                    d,
+                    sa[blk],
+                    sb[blk],
+                );
+                lo += $l;
+                blk += 1;
+            }
+            d
+        }
+    };
+}
+
+macro_rules! gst_kernel {
+    ($name:ident, $fmt:expr, $scale_fmt:expr, $l:literal, $g:literal, $groups:literal,
+     $kblock:literal, $nblk:literal, $f:literal, $rho:expr) => {
+        fn $name(kn: &DpaKernel, a: &[u64], b: &[u64], c: u64, sa: &[u64], sb: &[u64]) -> u64 {
+            debug_assert_eq!(kn.k % $l, 0);
+            let mut d = c;
+            let mut lo = 0;
+            while lo < kn.k {
+                let blo = lo / $kblock;
+                d = gst_fdpa_lanes::<$l, $g, $groups, $kblock, $nblk, $f>(
+                    $fmt,
+                    $scale_fmt,
+                    $rho,
+                    &a[lo..lo + $l],
+                    &b[lo..lo + $l],
+                    d,
+                    &sa[blo..blo + $nblk],
+                    &sb[blo..blo + $nblk],
+                );
+                lo += $l;
+            }
+            d
+        }
+    };
+}
+
+macro_rules! tr_kernel {
+    ($name:ident, $fmt:expr, $l:literal, $f:literal, $f2:literal) => {
+        fn $name(kn: &DpaKernel, a: &[u64], b: &[u64], c: u64, _sa: &[u64], _sb: &[u64]) -> u64 {
+            debug_assert_eq!(kn.k % $l, 0);
+            let mut d = c;
+            let mut lo = 0;
+            while lo < kn.k {
+                d = tr_fdpa_lanes::<$l, $f, $f2>(
+                    $fmt,
+                    RoundingMode::Down,
+                    &a[lo..lo + $l],
+                    &b[lo..lo + $l],
+                    d,
+                );
+                lo += $l;
+            }
+            d
+        }
+    };
+}
+
+macro_rules! gtr_kernel {
+    ($name:ident, $fmt:expr, $l:literal, $f:literal, $f2:literal) => {
+        fn $name(kn: &DpaKernel, a: &[u64], b: &[u64], c: u64, _sa: &[u64], _sb: &[u64]) -> u64 {
+            debug_assert_eq!(kn.k % $l, 0);
+            let mut d = c;
+            let mut lo = 0;
+            while lo < kn.k {
+                d = gtr_fdpa_lanes::<$l, $f, $f2>(
+                    $fmt,
+                    RoundingMode::Down,
+                    &a[lo..lo + $l],
+                    &b[lo..lo + $l],
+                    d,
+                );
+                lo += $l;
+            }
+            d
+        }
+    };
+}
+
+// ---- instantiations: the registry's (family × format × L) set ----
+
+// T-FDPA (NVIDIA Tensor Cores, Volta → Blackwell; resolved L = min(L_max, K))
+t_kernel!(t_fp16_l4_f23_rz32, Format::Fp16, 4, 23, Rho::RzFp32);
+t_kernel!(t_fp16_l4_f23_rne16, Format::Fp16, 4, 23, Rho::RneFp16);
+t_kernel!(t_fp16_l8_f24_rz32, Format::Fp16, 8, 24, Rho::RzFp32);
+t_kernel!(t_fp16_l8_f24_rne16, Format::Fp16, 8, 24, Rho::RneFp16);
+t_kernel!(t_fp16_l16_f25_rz32, Format::Fp16, 16, 25, Rho::RzFp32);
+t_kernel!(t_fp16_l16_f25_rne16, Format::Fp16, 16, 25, Rho::RneFp16);
+t_kernel!(t_bf16_l8_f24_rz32, Format::Bf16, 8, 24, Rho::RzFp32);
+t_kernel!(t_bf16_l16_f25_rz32, Format::Bf16, 16, 25, Rho::RzFp32);
+t_kernel!(t_tf32_l4_f24_rz32, Format::Tf32, 4, 24, Rho::RzFp32);
+t_kernel!(t_tf32_l8_f25_rz32, Format::Tf32, 8, 25, Rho::RzFp32);
+t_kernel!(t_e4m3_l16_f13_rz13, Format::Fp8E4M3, 16, 13, Rho::RzE8M13);
+t_kernel!(t_e4m3_l16_f13_rne16, Format::Fp8E4M3, 16, 13, Rho::RneFp16);
+t_kernel!(t_e4m3_l32_f13_rz13, Format::Fp8E4M3, 32, 13, Rho::RzE8M13);
+t_kernel!(t_e4m3_l32_f13_rne16, Format::Fp8E4M3, 32, 13, Rho::RneFp16);
+t_kernel!(t_e4m3_l32_f25_rz32, Format::Fp8E4M3, 32, 25, Rho::RzFp32);
+t_kernel!(t_e4m3_l32_f25_rne16, Format::Fp8E4M3, 32, 25, Rho::RneFp16);
+t_kernel!(t_e5m2_l16_f13_rz13, Format::Fp8E5M2, 16, 13, Rho::RzE8M13);
+t_kernel!(t_e5m2_l32_f13_rz13, Format::Fp8E5M2, 32, 13, Rho::RzE8M13);
+t_kernel!(t_e5m2_l32_f25_rz32, Format::Fp8E5M2, 32, 25, Rho::RzFp32);
+t_kernel!(t_e2m3_l32_f25_rz32, Format::Fp6E2M3, 32, 25, Rho::RzFp32);
+t_kernel!(t_e2m1_l32_f25_rz32, Format::Fp4E2M1, 32, 25, Rho::RzFp32);
+
+// ST-FDPA (Blackwell MXFP8/6/4; L == K_block == 32)
+st_kernel!(st_e4m3_l32_f25_rz32, Format::Fp8E4M3, 32, 25, Rho::RzFp32);
+st_kernel!(st_e2m3_l32_f25_rz32, Format::Fp6E2M3, 32, 25, Rho::RzFp32);
+st_kernel!(st_e2m1_l32_f25_rz32, Format::Fp4E2M1, 32, 25, Rho::RzFp32);
+
+// GST-FDPA (Blackwell dedicated MXFP4/NVFP4 paths; L=64, G=16)
+gst_kernel!(gst_e2m1_mxf4, Format::Fp4E2M1, Format::E8M0, 64, 16, 4, 32, 2, 35, Rho::RzFp32);
+gst_kernel!(gst_e2m1_nvf4, Format::Fp4E2M1, Format::Ue4M3, 64, 16, 4, 16, 4, 35, Rho::RzFp32);
+
+// TR-FDPA (AMD CDNA3 XF32/BF16/FP16)
+tr_kernel!(tr_tf32_l4, Format::Tf32, 4, 24, 31);
+tr_kernel!(tr_bf16_l8, Format::Bf16, 8, 24, 31);
+tr_kernel!(tr_fp16_l8, Format::Fp16, 8, 24, 31);
+
+// GTR-FDPA (AMD CDNA3 FP8/BF8)
+gtr_kernel!(gtr_e4m3_l16, Format::Fp8E4M3, 16, 24, 31);
+gtr_kernel!(gtr_e5m2_l16, Format::Fp8E5M2, 16, 24, 31);
+
+// E-FDPA (AMD CDNA1 BF16/FP16)
+e_kernel!(e_bf16_l2, Format::Bf16, 2);
+e_kernel!(e_fp16_l4, Format::Fp16, 4);
+
+// FTZ-AddMul (AMD CDNA2 BF16/FP16)
+ftz_kernel!(ftz_bf16_p2, Format::Bf16, 2);
+ftz_kernel!(ftz_bf16_p4, Format::Bf16, 4);
+ftz_kernel!(ftz_fp16_p4, Format::Fp16, 4);
+
+// ---- lookup tables (keyed on resolved chunk length, not L_max) ----
+
+const T_KERNELS: &[(Format, usize, i32, Rho, RunFn)] = &[
+    (Format::Fp16, 4, 23, Rho::RzFp32, t_fp16_l4_f23_rz32),
+    (Format::Fp16, 4, 23, Rho::RneFp16, t_fp16_l4_f23_rne16),
+    (Format::Fp16, 8, 24, Rho::RzFp32, t_fp16_l8_f24_rz32),
+    (Format::Fp16, 8, 24, Rho::RneFp16, t_fp16_l8_f24_rne16),
+    (Format::Fp16, 16, 25, Rho::RzFp32, t_fp16_l16_f25_rz32),
+    (Format::Fp16, 16, 25, Rho::RneFp16, t_fp16_l16_f25_rne16),
+    (Format::Bf16, 8, 24, Rho::RzFp32, t_bf16_l8_f24_rz32),
+    (Format::Bf16, 16, 25, Rho::RzFp32, t_bf16_l16_f25_rz32),
+    (Format::Tf32, 4, 24, Rho::RzFp32, t_tf32_l4_f24_rz32),
+    (Format::Tf32, 8, 25, Rho::RzFp32, t_tf32_l8_f25_rz32),
+    (Format::Fp8E4M3, 16, 13, Rho::RzE8M13, t_e4m3_l16_f13_rz13),
+    (Format::Fp8E4M3, 16, 13, Rho::RneFp16, t_e4m3_l16_f13_rne16),
+    (Format::Fp8E4M3, 32, 13, Rho::RzE8M13, t_e4m3_l32_f13_rz13),
+    (Format::Fp8E4M3, 32, 13, Rho::RneFp16, t_e4m3_l32_f13_rne16),
+    (Format::Fp8E4M3, 32, 25, Rho::RzFp32, t_e4m3_l32_f25_rz32),
+    (Format::Fp8E4M3, 32, 25, Rho::RneFp16, t_e4m3_l32_f25_rne16),
+    (Format::Fp8E5M2, 16, 13, Rho::RzE8M13, t_e5m2_l16_f13_rz13),
+    (Format::Fp8E5M2, 32, 13, Rho::RzE8M13, t_e5m2_l32_f13_rz13),
+    (Format::Fp8E5M2, 32, 25, Rho::RzFp32, t_e5m2_l32_f25_rz32),
+    (Format::Fp6E2M3, 32, 25, Rho::RzFp32, t_e2m3_l32_f25_rz32),
+    (Format::Fp4E2M1, 32, 25, Rho::RzFp32, t_e2m1_l32_f25_rz32),
+];
+
+const ST_KERNELS: &[(Format, usize, i32, Rho, RunFn)] = &[
+    (Format::Fp8E4M3, 32, 25, Rho::RzFp32, st_e4m3_l32_f25_rz32),
+    (Format::Fp6E2M3, 32, 25, Rho::RzFp32, st_e2m3_l32_f25_rz32),
+    (Format::Fp4E2M1, 32, 25, Rho::RzFp32, st_e2m1_l32_f25_rz32),
+];
+
+/// (format, L, G, K_block, F, ρ, scale format, kernel)
+const GST_KERNELS: &[(Format, usize, usize, usize, i32, Rho, Format, RunFn)] = &[
+    (Format::Fp4E2M1, 64, 16, 32, 35, Rho::RzFp32, Format::E8M0, gst_e2m1_mxf4),
+    (Format::Fp4E2M1, 64, 16, 16, 35, Rho::RzFp32, Format::Ue4M3, gst_e2m1_nvf4),
+];
+
+const TR_KERNELS: &[(Format, usize, i32, i32, RunFn)] = &[
+    (Format::Tf32, 4, 24, 31, tr_tf32_l4),
+    (Format::Bf16, 8, 24, 31, tr_bf16_l8),
+    (Format::Fp16, 8, 24, 31, tr_fp16_l8),
+];
+
+const GTR_KERNELS: &[(Format, usize, i32, i32, RunFn)] = &[
+    (Format::Fp8E4M3, 16, 24, 31, gtr_e4m3_l16),
+    (Format::Fp8E5M2, 16, 24, 31, gtr_e5m2_l16),
+];
+
+const E_KERNELS: &[(Format, usize, RunFn)] = &[
+    (Format::Bf16, 2, e_bf16_l2),
+    (Format::Fp16, 4, e_fp16_l4),
+];
+
+const FTZ_KERNELS: &[(Format, usize, RunFn)] = &[
+    (Format::Bf16, 2, ftz_bf16_p2),
+    (Format::Bf16, 4, ftz_bf16_p4),
+    (Format::Fp16, 4, ftz_fp16_p4),
+];
+
+/// Resolve a spec to its compiled kernel, or `None` for combinations
+/// outside the generated set (which then run on the interpreter).
+///
+/// The gates mirror [`super::MmaModel::kernel`]'s clamping exactly: the
+/// chunk length is `min(L_max, K)`, and a compiled kernel is only
+/// eligible when `K` splits into whole chunks (no ragged tail) — plus the
+/// per-family structural requirements (ST: one scale block per chunk;
+/// GST: chunks cover whole scale blocks; GTR: even lane count).
+pub(super) fn lookup(spec: ModelSpec, fa: Format, k: usize) -> Option<RunFn> {
+    if k == 0 {
+        return None;
+    }
+    match spec {
+        ModelSpec::FmaChain => match fa {
+            Format::Fp32 => Some(fma_fp32),
+            Format::Fp64 => Some(fma_fp64),
+            _ => None,
+        },
+        ModelSpec::FtzAddMul { p } => {
+            if p == 0 || k % p != 0 {
+                return None;
+            }
+            find2(FTZ_KERNELS, fa, p)
+        }
+        ModelSpec::EFdpa { l } => {
+            if l == 0 || k % l != 0 {
+                return None;
+            }
+            find2(E_KERNELS, fa, l)
+        }
+        ModelSpec::TFdpa { l_max, f, rho } => {
+            let l = l_max.min(k);
+            if l == 0 || k % l != 0 {
+                return None;
+            }
+            find4(T_KERNELS, fa, l, f, rho)
+        }
+        ModelSpec::StFdpa { l_max, f, rho, kblock } => {
+            let l = l_max.min(k);
+            if l == 0 || k % l != 0 || l != kblock {
+                return None;
+            }
+            find4(ST_KERNELS, fa, l, f, rho)
+        }
+        ModelSpec::GstFdpa { l, g, f, rho, kblock, scale_fmt } => {
+            let l = l.min(k);
+            if l == 0 || k % l != 0 || kblock == 0 || l % kblock != 0 {
+                return None;
+            }
+            GST_KERNELS
+                .iter()
+                .find(|e| {
+                    e.0 == fa
+                        && e.1 == l
+                        && e.2 == g
+                        && e.3 == kblock
+                        && e.4 == f
+                        && e.5 == rho
+                        && e.6 == scale_fmt
+                })
+                .map(|e| e.7)
+        }
+        ModelSpec::TrFdpa { l_max, f, f2 } => {
+            let l = l_max.min(k);
+            if l == 0 || k % l != 0 {
+                return None;
+            }
+            TR_KERNELS
+                .iter()
+                .find(|e| e.0 == fa && e.1 == l && e.2 == f && e.3 == f2)
+                .map(|e| e.4)
+        }
+        ModelSpec::GtrFdpa { l_max, f, f2 } => {
+            let l = l_max.min(k);
+            if l == 0 || l % 2 != 0 || k % l != 0 {
+                return None;
+            }
+            GTR_KERNELS
+                .iter()
+                .find(|e| e.0 == fa && e.1 == l && e.2 == f && e.3 == f2)
+                .map(|e| e.4)
+        }
+    }
+}
+
+fn find2(table: &[(Format, usize, RunFn)], fa: Format, l: usize) -> Option<RunFn> {
+    table.iter().find(|e| e.0 == fa && e.1 == l).map(|e| e.2)
+}
+
+fn find4(
+    table: &[(Format, usize, i32, Rho, RunFn)],
+    fa: Format,
+    l: usize,
+    f: i32,
+    rho: Rho,
+) -> Option<RunFn> {
+    table
+        .iter()
+        .find(|e| e.0 == fa && e.1 == l && e.2 == f && e.3 == rho)
+        .map(|e| e.4)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa;
+
+    #[test]
+    fn registry_is_fully_compiled() {
+        // every modeled instruction must resolve to a generated kernel —
+        // a registry addition without a matching instantiation fails here
+        for instr in isa::registry() {
+            let model = instr.model();
+            assert!(
+                lookup(model.spec, model.formats.a, model.k).is_some(),
+                "{} {} has no compiled kernel ({:?})",
+                instr.arch.target(),
+                instr.name,
+                model.spec,
+            );
+        }
+    }
+
+    #[test]
+    fn ragged_and_unknown_combinations_fall_back() {
+        use Format::*;
+        // ragged K: l_max = 8 clamps to 8, but 12 % 8 != 0
+        let t = ModelSpec::TFdpa { l_max: 8, f: 24, rho: Rho::RzFp32 };
+        assert!(lookup(t, Fp16, 12).is_none());
+        // clamped chunk length outside the generated set (l = 12 from K)
+        let t16 = ModelSpec::TFdpa { l_max: 16, f: 25, rho: Rho::RzFp32 };
+        assert!(lookup(t16, Fp16, 12).is_none());
+        // non-registry parameterization
+        let odd = ModelSpec::TFdpa { l_max: 16, f: 99, rho: Rho::RzFp32 };
+        assert!(lookup(odd, Fp16, 16).is_none());
+        // ST chunk spanning several scale blocks stays interpreted
+        let st = ModelSpec::StFdpa { l_max: 32, f: 25, rho: Rho::RzFp32, kblock: 16 };
+        assert!(lookup(st, Fp8E4M3, 32).is_none());
+        // GST ragged K (the view_engine edge shape)
+        let gst = ModelSpec::GstFdpa {
+            l: 32,
+            g: 16,
+            f: 35,
+            rho: Rho::RzFp32,
+            kblock: 16,
+            scale_fmt: E8M0,
+        };
+        assert!(lookup(gst, Fp4E2M1, 40).is_none());
+        // FMA on a non-host format
+        assert!(lookup(ModelSpec::FmaChain, Fp16, 8).is_none());
+        // K = 0 never compiles
+        assert!(lookup(t16, Fp16, 0).is_none());
+    }
+
+    #[test]
+    fn clamped_chunk_lengths_resolve() {
+        // K smaller than L_max: the resolved chunk length keys the table
+        let t = ModelSpec::TFdpa { l_max: 16, f: 25, rho: Rho::RzFp32 };
+        assert!(lookup(t, Format::Fp16, 16).is_some());
+        // K = 32 with l_max 16: two whole chunks
+        assert!(lookup(t, Format::Fp16, 32).is_some());
+    }
+}

@@ -20,6 +20,8 @@ use crate::ops::{
     tr_fdpa, GstFdpaCfg, GtrFdpaCfg, TFdpaCfg, TrFdpaCfg, MAX_L,
 };
 
+mod compiled;
+
 /// Unit (×1.0) scale pattern of a block-scale format.
 #[inline]
 pub(crate) fn unit_scale(fmt: Format) -> u64 {
@@ -269,6 +271,13 @@ fn run_gtr(kn: &DpaKernel, a: &[u64], b: &[u64], c: u64, _sa: &[u64], _sb: &[u64
 }
 
 /// An executable Φ: a [`ModelSpec`] bound to shapes and operand formats.
+///
+/// Construction resolves the spec against the `models::compiled` kernel
+/// set once; execution then runs the monomorphized kernel when one exists
+/// (every registry instruction) and the interpreter otherwise. Both are
+/// bit-identical by construction — `tests/compiled_kernels.rs` holds the
+/// differential proof, and [`execute_reference_into`](MmaModel::execute_reference_into)
+/// exposes the interpreter as the oracle.
 #[derive(Clone, Debug)]
 pub struct MmaModel {
     pub name: String,
@@ -277,6 +286,9 @@ pub struct MmaModel {
     pub k: usize,
     pub formats: MmaFormats,
     pub spec: ModelSpec,
+    /// Monomorphized kernel for this (spec, format, K), resolved once at
+    /// construction; `None` falls back to the interpreter `run_*` family.
+    compiled: Option<compiled::RunFn>,
 }
 
 impl MmaModel {
@@ -297,13 +309,33 @@ impl MmaModel {
             ModelSpec::GstFdpa { scale_fmt, .. } => crate::formats::tables::warm(scale_fmt),
             _ => {}
         }
-        Self { name: name.into(), m, n, k, formats, spec }
+        let compiled = compiled::lookup(spec, formats.a, k);
+        Self { name: name.into(), m, n, k, formats, spec, compiled }
     }
 
-    /// Resolve the spec to a [`DpaKernel`] — the per-element dispatch work
-    /// (family match, `L` clamping, config assembly, structural asserts)
-    /// done once, before any m×n loop.
+    /// Whether the hot path runs a monomorphized (`models::compiled`)
+    /// kernel rather than the interpreter. True for every registry
+    /// instruction; false for ragged-K or non-registry parameterizations.
+    pub fn is_compiled(&self) -> bool {
+        self.compiled.is_some()
+    }
+
+    /// Resolve the spec to the kernel the hot path runs: the interpreter
+    /// resolution for the parameter fields, with the `run` pointer swapped
+    /// to the monomorphized kernel when one was compiled for this spec.
     fn kernel(&self) -> DpaKernel {
+        let mut kn = self.interpreter_kernel();
+        if let Some(run) = self.compiled {
+            kn.run = run;
+        }
+        kn
+    }
+
+    /// Resolve the spec to the interpreter [`DpaKernel`] — the per-element
+    /// dispatch work (family match, `L` clamping, config assembly,
+    /// structural asserts) done once, before any m×n loop. This is the
+    /// reference implementation the compiled kernels are checked against.
+    fn interpreter_kernel(&self) -> DpaKernel {
         let mut kn = DpaKernel {
             fa: self.formats.a,
             k: self.k,
@@ -374,6 +406,14 @@ impl MmaModel {
                 kn.run = run_gtr;
             }
         }
+        // The interpreter kernels stage products in `[_; MAX_L]` stack
+        // buffers (the compiled kernels size theirs by the folded L
+        // instead); a longer resolved chunk would index out of bounds.
+        debug_assert!(
+            kn.l <= MAX_L,
+            "resolved chunk length {} exceeds MAX_L = {MAX_L}",
+            kn.l
+        );
         kn
     }
 
@@ -386,6 +426,13 @@ impl MmaModel {
     /// once instead via [`execute_view_into`](MmaModel::execute_view_into).
     pub fn dpa(&self, a: &[u64], b: &[u64], c: u64, sa: &[u64], sb: &[u64]) -> u64 {
         self.kernel().eval(a, b, c, sa, sb)
+    }
+
+    /// [`dpa`](MmaModel::dpa) forced through the interpreter kernel,
+    /// bypassing any compiled kernel — the bit-exact oracle for
+    /// differential tests of the monomorphized path.
+    pub fn dpa_reference(&self, a: &[u64], b: &[u64], c: u64, sa: &[u64], sb: &[u64]) -> u64 {
+        self.interpreter_kernel().eval(a, b, c, sa, sb)
     }
 
     /// Number of scale blocks along K (`⌈K / K_block⌉`), 0 for unscaled
@@ -468,7 +515,33 @@ impl MmaModel {
         assert_eq!((d.rows, d.cols), (self.m, self.n), "D shape");
         let nblk = self.gather_scales(scales, scratch);
         scratch.panel.fill(b);
-        self.run_view_loop(a, Some(c), &mut d, nblk, scratch);
+        self.run_view_loop(&self.kernel(), a, Some(c), &mut d, nblk, scratch);
+    }
+
+    /// [`execute_into`](MmaModel::execute_into) forced through the
+    /// interpreter kernel: identical traversal, scale gathering, and panel
+    /// fill — only the per-element `run` function differs. This is the
+    /// differential oracle for the compiled path (and the baseline side of
+    /// the compiled-vs-interpreter bench section).
+    pub fn execute_reference_into(
+        &self,
+        a: &BitMatrix,
+        b: &BitMatrix,
+        c: &BitMatrix,
+        scales: Scales,
+        d: &mut BitMatrix,
+        scratch: &mut DpaScratch,
+    ) {
+        assert_eq!((d.rows, d.cols), (self.m, self.n), "D shape");
+        d.fmt = self.formats.d;
+        let (a, b, c) = (a.view(), b.view(), c.view());
+        assert_eq!((a.rows, a.cols), (self.m, self.k), "A shape");
+        assert_eq!((b.rows, b.cols), (self.k, self.n), "B shape");
+        assert_eq!((c.rows, c.cols), (self.m, self.n), "C shape");
+        let nblk = self.gather_scales(scales, scratch);
+        scratch.panel.fill(b);
+        let mut dv = d.view_mut();
+        self.run_view_loop(&self.interpreter_kernel(), a, Some(c), &mut dv, nblk, scratch);
     }
 
     /// In-place K-chain step: the accumulator is read from `cd` and the
@@ -489,22 +562,23 @@ impl MmaModel {
         assert_eq!((cd.rows, cd.cols), (self.m, self.n), "C/D shape");
         let nblk = self.gather_scales(None, scratch);
         scratch.panel.fill(b);
-        self.run_view_loop(a, None, cd, nblk, scratch);
+        self.run_view_loop(&self.kernel(), a, None, cd, nblk, scratch);
     }
 
     /// The shared m×n loop of both view paths: the accumulator for output
     /// `(i, j)` comes from `c` when supplied, otherwise it is read back
-    /// from `d` (the in-place K-chain form). Expects the scratch panel
-    /// and scale buffers to be filled for this call already.
+    /// from `d` (the in-place K-chain form). The caller resolves the
+    /// kernel (compiled or interpreter) once and passes it in; expects the
+    /// scratch panel and scale buffers to be filled for this call already.
     fn run_view_loop(
         &self,
+        kernel: &DpaKernel,
         a: MatRef<'_>,
         c: Option<MatRef<'_>>,
         d: &mut MatMut<'_>,
         nblk: usize,
         scratch: &DpaScratch,
     ) {
-        let kernel = self.kernel();
         for j in 0..self.n {
             let bcol = scratch.panel.col(j);
             for i in 0..self.m {

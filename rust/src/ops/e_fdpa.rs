@@ -45,7 +45,53 @@ pub fn e_fdpa(in_fmt: Format, a: &[u64], b: &[u64], c_bits: u64) -> u64 {
     let mut acc = Kulisch::<WORDS>::new(LSB);
     for i in 0..l {
         // product value = mag * 2^(exp - frac), via the shared product-term
-        // path (decode-based here: BF16/FP16 are wider than the LUT limit)
+        // path (split sub-table loads for the BF16/FP16 inputs here)
+        let t = product_term_bits(in_fmt, a[i], b[i], da[i], db[i]);
+        acc.add(t.neg, t.mag, t.exp - t.frac);
+    }
+    acc.add(c.sign, c.sig as u128, c.exp - 23);
+
+    if acc.is_zero() {
+        let neg = zero_result_negative(
+            da.iter().zip(db.iter()).map(|(x, y)| x.sign != y.sign),
+            c.sign,
+        );
+        return if neg { 0x8000_0000 } else { 0 };
+    }
+    let (neg, mag, lsb) = acc.to_sign_mag();
+    Format::Fp32.encode(neg, mag, lsb, RoundingMode::NearestEven)
+}
+
+/// Monomorphized E-FDPA core: chunk length `L` folded as a constant, so
+/// the decode gathers and product staging are fixed-width lane loops.
+/// Bit-identical to [`e_fdpa`] (the Kulisch accumulation is exact, hence
+/// order-insensitive).
+#[inline(always)]
+pub(crate) fn e_fdpa_lanes<const L: usize>(
+    in_fmt: Format,
+    a: &[u64],
+    b: &[u64],
+    c_bits: u64,
+) -> u64 {
+    let a: &[u64; L] = a.try_into().expect("chunk length == L");
+    let b: &[u64; L] = b.try_into().expect("chunk length == L");
+    let c = Format::Fp32.decode(c_bits);
+    let mut da = [Decoded::ZERO; L];
+    let mut db = [Decoded::ZERO; L];
+    for i in 0..L {
+        da[i] = in_fmt.decode(a[i]);
+    }
+    for i in 0..L {
+        db[i] = in_fmt.decode(b[i]);
+    }
+
+    match scan_specials(da.iter().copied().zip(db.iter().copied()), c) {
+        SpecialOut::None => {}
+        s => return special_pattern(s, Format::Fp32, NanStyle::Quiet),
+    }
+
+    let mut acc = Kulisch::<WORDS>::new(LSB);
+    for i in 0..L {
         let t = product_term_bits(in_fmt, a[i], b[i], da[i], db[i]);
         acc.add(t.neg, t.mag, t.exp - t.frac);
     }

@@ -60,6 +60,50 @@ pub fn ftz_mul(fmt: Format, x_bits: u64, y_bits: u64) -> u64 {
     canon(flush_output((x * y) as f32))
 }
 
+/// Monomorphized FTZ-AddMul dot-product-accumulate (Algorithm 2): the
+/// pairing parameter `P` folded as a constant, so the product stage is a
+/// fixed-width lane loop and the pairwise summation tree is selected at
+/// compile time. Requires `a.len() % P == 0` (the compiled-kernel lookup
+/// guarantees it); bit-identical to the interpreter's whole-chunk path.
+#[inline(always)]
+pub(crate) fn ftz_dpa_lanes<const P: usize>(fmt: Format, a: &[u64], b: &[u64], c: u64) -> u64 {
+    debug_assert_eq!(a.len(), b.len());
+    debug_assert_eq!(a.len() % P, 0);
+    // input subnormal flushing (A, B, and C)
+    let mut d = flush_subnormal_input(Format::Fp32, c);
+    let mut k = 0;
+    while k < a.len() {
+        let mut prods = [0u64; P];
+        for i in 0..P {
+            prods[i] = ftz_mul(
+                fmt,
+                flush_subnormal_input(fmt, a[k + i]),
+                flush_subnormal_input(fmt, b[k + i]),
+            );
+        }
+        let s = match P {
+            1 => prods[0],
+            2 => ftz_add(prods[0], prods[1]),
+            4 => {
+                let s01 = ftz_add(prods[0], prods[1]);
+                let s23 = ftz_add(prods[2], prods[3]);
+                ftz_add(s01, s23)
+            }
+            _ => {
+                // unmodeled P: pairwise left-to-right, as the interpreter
+                let mut s = ftz_add(prods[0], prods[1]);
+                for &q in &prods[2..P] {
+                    s = ftz_add(s, q);
+                }
+                s
+            }
+        };
+        d = ftz_add(d, s);
+        k += P;
+    }
+    d
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -163,6 +163,153 @@ pub fn gst_fdpa(
     convert(cfg.rho, s, emax, cfg.f)
 }
 
+/// Monomorphized GST-FDPA core: the whole scale-block geometry —
+/// vector length `L`, group size `G`, group count `GROUPS = L/G`, scale
+/// block size `KBLOCK`, block count `NBLK = L/KBLOCK` — plus the
+/// summation precision `F` folded as constants, so every stage runs as a
+/// fixed-trip-count lane loop over exactly-sized stack arrays.
+///
+/// Bit-identical to [`gst_fdpa`] for whole (non-ragged) chunks: group
+/// terms stay lane-indexed with zero slots instead of being compacted
+/// (`e_max`/`align` skip zeros), and the accumulator term is summed first
+/// instead of last (the aligned-quanta i128 adds are exact, hence
+/// order-insensitive). Ragged chunks fall back to the interpreter.
+#[inline(always)]
+pub(crate) fn gst_fdpa_lanes<
+    const L: usize,
+    const G: usize,
+    const GROUPS: usize,
+    const KBLOCK: usize,
+    const NBLK: usize,
+    const F: i32,
+>(
+    in_fmt: Format,
+    scale_fmt: Format,
+    rho: Rho,
+    a: &[u64],
+    b: &[u64],
+    c_bits: u64,
+    alpha: &[u64],
+    beta: &[u64],
+) -> u64 {
+    debug_assert_eq!(GROUPS * G, L);
+    debug_assert_eq!(NBLK * KBLOCK, L);
+    let a: &[u64; L] = a.try_into().expect("chunk length == L");
+    let b: &[u64; L] = b.try_into().expect("chunk length == L");
+    let alpha: &[u64; NBLK] = alpha.try_into().expect("scale block count == NBLK");
+    let beta: &[u64; NBLK] = beta.try_into().expect("scale block count == NBLK");
+
+    let out_fmt = rho.output_format();
+    let c = out_fmt.decode(c_bits);
+    let mut da = [Decoded::ZERO; L];
+    let mut db = [Decoded::ZERO; L];
+    for i in 0..L {
+        da[i] = in_fmt.decode(a[i]);
+    }
+    for i in 0..L {
+        db[i] = in_fmt.decode(b[i]);
+    }
+    let mut salpha = [Decoded::ZERO; NBLK];
+    let mut sbeta = [Decoded::ZERO; NBLK];
+    for i in 0..NBLK {
+        salpha[i] = scale_fmt.decode(alpha[i]);
+        sbeta[i] = scale_fmt.decode(beta[i]);
+    }
+
+    if salpha.iter().chain(sbeta.iter()).any(|s| s.is_nan()) {
+        return special_pattern(SpecialOut::Nan, out_fmt, NanStyle::NvCanonical);
+    }
+    match scan_specials(da.iter().copied().zip(db.iter().copied()), c) {
+        SpecialOut::None => {}
+        s => return special_pattern(s, out_fmt, NanStyle::NvCanonical),
+    }
+
+    let fs = scale_fmt.mant_bits() as i32;
+    // Group terms stay lane-indexed; all-zero groups leave a zero slot.
+    let mut terms = [FxTerm::ZERO; GROUPS];
+    for g in 0..GROUPS {
+        let blk = g * G / KBLOCK;
+        let (sa, sb) = (salpha[blk], sbeta[blk]);
+        // Step 1a: exact fixed-point dot product of the group at a common
+        // LSB of 2^min_lsb.
+        let lo = g * G;
+        let mut gterms = [FxTerm::ZERO; G];
+        let mut min_lsb = i32::MAX;
+        for i in 0..G {
+            let t = product_term_bits(in_fmt, a[lo + i], b[lo + i], da[lo + i], db[lo + i]);
+            if !t.is_zero() {
+                min_lsb = min_lsb.min(t.exp - t.frac);
+            }
+            gterms[i] = t;
+        }
+        if min_lsb == i32::MAX {
+            continue;
+        }
+        let mut p: i128 = 0;
+        for t in &gterms {
+            if t.is_zero() {
+                continue;
+            }
+            let v = (t.mag as i128) << ((t.exp - t.frac) - min_lsb);
+            if t.neg {
+                p -= v;
+            } else {
+                p += v;
+            }
+        }
+        // Step 1b: multiply by the scale significands; nominal exponent of
+        // the group term is the sum of the scale exponents only.
+        let s_g = p * sa.sig as i128 * sb.sig as i128;
+        let e_g = sa.exp + sb.exp;
+        if s_g == 0 {
+            continue;
+        }
+        terms[g] = FxTerm {
+            neg: s_g < 0,
+            mag: s_g.unsigned_abs(),
+            exp: e_g,
+            frac: 2 * fs - min_lsb,
+        };
+    }
+    let cterm = acc_term(out_fmt, c);
+
+    let mut emax: Option<i32> = None;
+    for t in terms.iter().chain(std::iter::once(&cterm)) {
+        if !t.is_zero() {
+            emax = Some(match emax {
+                Some(e) => e.max(t.exp),
+                None => t.exp,
+            });
+        }
+    }
+    let emax = match emax {
+        Some(e) => e,
+        None => {
+            let neg = zero_result_negative(
+                da.iter().zip(db.iter()).map(|(x, y)| x.sign != y.sign),
+                c.sign,
+            );
+            return if neg { 1u64 << (out_fmt.width() - 1) } else { 0 };
+        }
+    };
+
+    // Step 2: truncated fused sum of L/G + 1 terms.
+    let mut s: i128 = cterm.align(emax, F, RoundingMode::TowardZero);
+    for t in &terms {
+        s += t.align(emax, F, RoundingMode::TowardZero);
+    }
+
+    if s == 0 {
+        let neg = zero_result_negative(
+            da.iter().zip(db.iter()).map(|(x, y)| x.sign != y.sign),
+            c.sign,
+        );
+        return if neg { 1u64 << (out_fmt.width() - 1) } else { 0 };
+    }
+    // Step 3: convert.
+    convert(rho, s, emax, F)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

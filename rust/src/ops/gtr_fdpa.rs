@@ -154,6 +154,128 @@ pub fn gtr_fdpa(in_fmt: Format, a: &[u64], b: &[u64], c_bits: u64, cfg: GtrFdpaC
     convert(Rho::RneFp32, s, e, cfg.f2)
 }
 
+/// Monomorphized GTR-FDPA core: `L`, `F`, `F2` folded as constants; the
+/// decode gathers and the lane-indexed product stage are fixed-width
+/// loops, and the even/odd group reductions run over the constant-length
+/// term array. Bit-identical to [`gtr_fdpa`].
+#[inline(always)]
+pub(crate) fn gtr_fdpa_lanes<const L: usize, const F: i32, const F2: i32>(
+    in_fmt: Format,
+    inner_mode: RoundingMode,
+    a: &[u64],
+    b: &[u64],
+    c_bits: u64,
+) -> u64 {
+    let a: &[u64; L] = a.try_into().expect("chunk length == L");
+    let b: &[u64; L] = b.try_into().expect("chunk length == L");
+    let c = Format::Fp32.decode(c_bits);
+    let mut da = [Decoded::ZERO; L];
+    let mut db = [Decoded::ZERO; L];
+    for i in 0..L {
+        da[i] = in_fmt.decode(a[i]);
+    }
+    for i in 0..L {
+        db[i] = in_fmt.decode(b[i]);
+    }
+
+    match scan_specials(da.iter().copied().zip(db.iter().copied()), c) {
+        SpecialOut::None => {}
+        s => return special_pattern(s, Format::Fp32, NanStyle::Quiet),
+    }
+
+    // Step 1: exact products, lane-indexed (parity grouping below).
+    let mut terms = [FxTerm::ZERO; L];
+    for i in 0..L {
+        terms[i] = product_term_bits(in_fmt, a[i], b[i], da[i], db[i]);
+    }
+
+    // Step 2: two truncated fused sums over even / odd indices.
+    let group_sum = |parity: usize| -> (i128, Option<i32>) {
+        let e = terms
+            .iter()
+            .skip(parity)
+            .step_by(2)
+            .filter(|t| !t.is_zero())
+            .map(|t| t.exp)
+            .max();
+        match e {
+            None => (0, None),
+            Some(e) => (
+                terms
+                    .iter()
+                    .skip(parity)
+                    .step_by(2)
+                    .map(|t| t.align(e, F, RoundingMode::TowardZero))
+                    .sum(),
+                Some(e),
+            ),
+        }
+    };
+    let (t_even, e_even) = group_sum(0);
+    let (t_odd, e_odd) = group_sum(1);
+
+    // Step 3: rounded sum of the two group sums at e_max.
+    let e_max = match (e_even, e_odd) {
+        (Some(a), Some(b)) => Some(a.max(b)),
+        (Some(a), None) => Some(a),
+        (None, Some(b)) => Some(b),
+        (None, None) => None,
+    };
+    let t = match e_max {
+        None => 0i128,
+        Some(em) => {
+            let align_group = |sum: i128, e_g: Option<i32>| -> i128 {
+                match e_g {
+                    None => 0,
+                    Some(eg) => {
+                        if sum == 0 {
+                            0
+                        } else {
+                            signed_align(sum < 0, sum.unsigned_abs(), eg - F, em, F, inner_mode)
+                        }
+                    }
+                }
+            };
+            align_group(t_even, e_even) + align_group(t_odd, e_odd)
+        }
+    };
+
+    // Step 4: final rounded sum with c (special truncation of tiny c).
+    let cterm = acc_term(Format::Fp32, c);
+    if t == 0 && cterm.is_zero() {
+        let neg = zero_result_negative(
+            da.iter().zip(db.iter()).map(|(x, y)| x.sign != y.sign),
+            c.sign,
+        );
+        return if neg { 0x8000_0000 } else { 0 };
+    }
+    let e_c = if cterm.is_zero() { i32::MIN / 2 } else { cterm.exp };
+    let e_p = e_max.unwrap_or(i32::MIN / 2);
+    let e = e_p.max(e_c);
+
+    let t_prime = if t == 0 {
+        0i128
+    } else {
+        signed_align(t < 0, t.unsigned_abs(), e_p - F, e, F2, inner_mode)
+    };
+    let s_c = if cterm.is_zero() || e_c < e - F - 1 {
+        0i128 // the paper's "special truncation"
+    } else {
+        cterm.align(e, F, inner_mode) << (F2 - F)
+    };
+    let s = t_prime + s_c;
+
+    if s == 0 {
+        let neg = zero_result_negative(
+            da.iter().zip(db.iter()).map(|(x, y)| x.sign != y.sign),
+            c.sign,
+        );
+        return if neg { 0x8000_0000 } else { 0 };
+    }
+    // Step 5: ρ = RNE-FP32.
+    convert(Rho::RneFp32, s, e, F2)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -49,10 +49,12 @@ pub(crate) fn product_term(fmt_a: Format, a: Decoded, fmt_b: Format, b: Decoded)
 }
 
 /// Product term of two raw operand patterns: one pair-product table load
-/// for the ≤ 8-bit formats ([`crate::formats::tables`]), falling back to
-/// the decode-based construction for wider formats. `a`/`b` are the
-/// already-decoded operands — the kernels hold them for the special-value
-/// scan regardless, so the fallback costs nothing extra.
+/// for the ≤ 8-bit formats, two split sub-table loads plus a narrow
+/// multiply for the 16-bit formats ([`crate::formats::tables`]), falling
+/// back to the decode-based construction only for the wide formats
+/// (TF32/FP32/FP64). `a`/`b` are the already-decoded operands — the
+/// kernels hold them for the special-value scan regardless, so the
+/// fallback costs nothing extra.
 #[inline]
 pub(crate) fn product_term_bits(
     fmt: Format,
@@ -61,10 +63,13 @@ pub(crate) fn product_term_bits(
     a: Decoded,
     b: Decoded,
 ) -> FxTerm {
-    match crate::formats::tables::product(fmt, a_bits, fmt, b_bits) {
-        Some(t) => t,
-        None => product_term(fmt, a, fmt, b),
+    if let Some(t) = crate::formats::tables::product(fmt, a_bits, fmt, b_bits) {
+        return t;
     }
+    if let Some(t) = crate::formats::tables::product_split(fmt, a_bits, b_bits) {
+        return t;
+    }
+    product_term(fmt, a, fmt, b)
 }
 
 /// The accumulator as an alignment term (`SignedSig(c)`, `Exp(c)`).

@@ -4,8 +4,8 @@
 //! per-block E8M0 scale factors whose exponents are added into every
 //! product's nominal exponent before the fused summation.
 
-use super::t_fdpa::{t_fdpa_scaled, TFdpaCfg};
-use crate::formats::Format;
+use super::t_fdpa::{t_fdpa_lanes, t_fdpa_scaled, TFdpaCfg};
+use crate::formats::{Format, Rho};
 
 /// ST-FDPA over bit patterns. `alpha`/`beta` are E8M0 scale patterns.
 pub fn st_fdpa(
@@ -22,6 +22,25 @@ pub fn st_fdpa(
     let scale_nan = da.is_nan() || db.is_nan();
     let scale_exp = if scale_nan { 0 } else { da.exp + db.exp };
     t_fdpa_scaled(in_fmt, a, b, c_bits, cfg, scale_exp, scale_nan)
+}
+
+/// Monomorphized ST-FDPA core: the E8M0 scale decode folded onto the
+/// [`t_fdpa_lanes`] lane kernel. Bit-identical to [`st_fdpa`].
+#[inline(always)]
+pub(crate) fn st_fdpa_lanes<const L: usize, const F: i32>(
+    in_fmt: Format,
+    rho: Rho,
+    a: &[u64],
+    b: &[u64],
+    c_bits: u64,
+    alpha: u64,
+    beta: u64,
+) -> u64 {
+    let da = Format::E8M0.decode(alpha);
+    let db = Format::E8M0.decode(beta);
+    let scale_nan = da.is_nan() || db.is_nan();
+    let scale_exp = if scale_nan { 0 } else { da.exp + db.exp };
+    t_fdpa_lanes::<L, F>(in_fmt, rho, a, b, c_bits, scale_exp, scale_nan)
 }
 
 #[cfg(test)]

@@ -8,7 +8,7 @@
 use super::special::{special_pattern, NanStyle, SpecialAcc, SpecialOut};
 use super::{acc_term, product_term_bits, MAX_L};
 use crate::fixedpoint::FxTerm;
-use crate::formats::{convert, Format, Rho, RoundingMode};
+use crate::formats::{convert, Decoded, Format, Rho, RoundingMode};
 
 /// Parameters of a T-FDPA operation (paper Table 4 row).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -100,6 +100,90 @@ fn zero_pattern(fmt: Format, neg: bool) -> u64 {
     } else {
         0
     }
+}
+
+/// Monomorphized T-FDPA core: the chunk length `L` and summation
+/// precision `F` are const parameters, so the decode gathers, the product
+/// construction, and the alignment/summation all run as fixed-trip-count
+/// lane loops over stack arrays sized exactly `L` — the shape the
+/// autovectorizer (and a future `std::simd` port) wants.
+///
+/// Bit-identical to [`t_fdpa_scaled`] by construction: the interpreter's
+/// single fused pass is split into lane passes plus one scalar reduction,
+/// which is sound because every reduction involved (special scan,
+/// zero-sign conjunction, `e_max`, and the exact i128 quanta sum) is
+/// order-insensitive. The differential suite
+/// (`tests/compiled_kernels.rs`) pins this across the registry.
+#[inline(always)]
+pub(crate) fn t_fdpa_lanes<const L: usize, const F: i32>(
+    in_fmt: Format,
+    rho: Rho,
+    a: &[u64],
+    b: &[u64],
+    c_bits: u64,
+    scale_exp_sum: i32,
+    scale_nan: bool,
+) -> u64 {
+    let a: &[u64; L] = a.try_into().expect("chunk length == L");
+    let b: &[u64; L] = b.try_into().expect("chunk length == L");
+    let out_fmt = rho.output_format();
+    let c = out_fmt.decode(c_bits);
+    if scale_nan {
+        return special_pattern(SpecialOut::Nan, out_fmt, NanStyle::NvCanonical);
+    }
+
+    // Lane pass 1: decode gathers (single LUT loads for narrow formats).
+    let mut da = [Decoded::ZERO; L];
+    let mut db = [Decoded::ZERO; L];
+    for i in 0..L {
+        da[i] = in_fmt.decode(a[i]);
+    }
+    for i in 0..L {
+        db[i] = in_fmt.decode(b[i]);
+    }
+    // Lane pass 2: exact products (Step 1).
+    let mut terms = [FxTerm::ZERO; L];
+    for i in 0..L {
+        terms[i] = product_term_bits(in_fmt, a[i], b[i], da[i], db[i]);
+    }
+    // Scalar reduction: special scan, zero-sign rule, scale offset, e_max.
+    let mut specials = SpecialAcc::new(c);
+    let mut all_neg = c.sign;
+    let mut emax = i32::MIN / 2;
+    for i in 0..L {
+        specials.product(da[i], db[i]);
+        all_neg &= da[i].sign != db[i].sign;
+        if !terms[i].is_zero() {
+            terms[i].exp += scale_exp_sum;
+            if terms[i].exp > emax {
+                emax = terms[i].exp;
+            }
+        }
+    }
+    match specials.outcome() {
+        SpecialOut::None => {}
+        s => return special_pattern(s, out_fmt, NanStyle::NvCanonical),
+    }
+    // Step 2: the accumulator joins the same fused summation.
+    let cterm = acc_term(out_fmt, c);
+    if !cterm.is_zero() && cterm.exp > emax {
+        emax = cterm.exp;
+    }
+    if emax == i32::MIN / 2 {
+        return zero_pattern(out_fmt, all_neg); // every term a signed zero
+    }
+
+    // Align at e_max, truncate to F fractional bits, exact fixed-point sum.
+    let mut s: i128 = cterm.align(emax, F, RoundingMode::TowardZero);
+    for t in &terms {
+        s += t.align(emax, F, RoundingMode::TowardZero);
+    }
+
+    if s == 0 {
+        return zero_pattern(out_fmt, all_neg);
+    }
+    // Step 3: convert to the floating-point output.
+    convert(rho, s, emax, F)
 }
 
 #[cfg(test)]

@@ -156,6 +156,119 @@ pub fn tr_fdpa(in_fmt: Format, a: &[u64], b: &[u64], c_bits: u64, cfg: TrFdpaCfg
     convert(Rho::RneFp32, s, e, cfg.f2)
 }
 
+/// Monomorphized TR-FDPA core: `L`, `F`, `F2` folded as constants so the
+/// decode gathers and product construction are fixed-width lane loops.
+///
+/// Bit-identical to [`tr_fdpa`]: overflowed products are recorded in the
+/// flags and *zeroed in place* instead of being compacted out — sound
+/// because [`e_max`] skips zero terms and a zero term aligns to 0 quanta,
+/// so the truncated sum is unchanged.
+#[inline(always)]
+pub(crate) fn tr_fdpa_lanes<const L: usize, const F: i32, const F2: i32>(
+    in_fmt: Format,
+    inner_mode: RoundingMode,
+    a: &[u64],
+    b: &[u64],
+    c_bits: u64,
+) -> u64 {
+    let a: &[u64; L] = a.try_into().expect("chunk length == L");
+    let b: &[u64; L] = b.try_into().expect("chunk length == L");
+    let c = Format::Fp32.decode(c_bits);
+    let mut da = [Decoded::ZERO; L];
+    let mut db = [Decoded::ZERO; L];
+    for i in 0..L {
+        da[i] = in_fmt.decode(a[i]);
+    }
+    for i in 0..L {
+        db[i] = in_fmt.decode(b[i]);
+    }
+
+    // Step 1: exact products; detect multiplication overflow to ±∞.
+    let mut terms = [FxTerm::ZERO; L];
+    let mut ovf_pos = false;
+    let mut ovf_neg = false;
+    for i in 0..L {
+        let t = product_term_bits(in_fmt, a[i], b[i], da[i], db[i]);
+        if product_overflows(&t) {
+            if t.neg {
+                ovf_neg = true;
+            } else {
+                ovf_pos = true;
+            }
+            continue; // slot stays FxTerm::ZERO
+        }
+        terms[i] = t;
+    }
+
+    let mut special = scan_specials(da.iter().copied().zip(db.iter().copied()), c);
+    // merge multiplication overflows into the special outcome
+    if ovf_pos || ovf_neg {
+        special = match special {
+            SpecialOut::Nan => SpecialOut::Nan,
+            SpecialOut::Inf(neg) => {
+                if (neg && ovf_pos) || (!neg && ovf_neg) || (ovf_pos && ovf_neg) {
+                    SpecialOut::Nan
+                } else {
+                    SpecialOut::Inf(neg)
+                }
+            }
+            SpecialOut::None => {
+                if ovf_pos && ovf_neg {
+                    SpecialOut::Nan
+                } else {
+                    SpecialOut::Inf(ovf_neg)
+                }
+            }
+        };
+    }
+    match special {
+        SpecialOut::None => {}
+        s => return special_pattern(s, Format::Fp32, NanStyle::Quiet),
+    }
+
+    // Step 2: truncated fused sum of the L products (c NOT included).
+    let emax_p = e_max(&terms);
+    let t_sum: i128 = match emax_p {
+        Some(e) => terms.iter().map(|t| t.align(e, F, RoundingMode::TowardZero)).sum(),
+        None => 0,
+    };
+
+    // Step 3: rounded two-term sum of T and c at E = max(e_max, e_c).
+    let cterm = acc_term(Format::Fp32, c);
+    let e_p = emax_p.unwrap_or(i32::MIN / 2);
+    let e_c = if cterm.is_zero() { i32::MIN / 2 } else { cterm.exp };
+    if t_sum == 0 && cterm.is_zero() {
+        let neg = zero_result_negative(
+            da.iter().zip(db.iter()).map(|(x, y)| x.sign != y.sign),
+            c.sign,
+        );
+        return if neg { 0x8000_0000 } else { 0 };
+    }
+    let e = e_p.max(e_c);
+
+    let t_prime = if t_sum == 0 {
+        0i128
+    } else {
+        crate::formats::signed_align(t_sum < 0, t_sum.unsigned_abs(), e_p - F, e, F2, inner_mode)
+    };
+    let s_c = if cterm.is_zero() {
+        0i128
+    } else {
+        cterm.align(e, F, inner_mode) << (F2 - F)
+    };
+    let s = t_prime + s_c;
+
+    if s == 0 {
+        let neg = zero_result_negative(
+            da.iter().zip(db.iter()).map(|(x, y)| x.sign != y.sign),
+            c.sign,
+        );
+        return if neg { 0x8000_0000 } else { 0 };
+    }
+    // Step 4: ρ = RNE-FP32.
+    convert(Rho::RneFp32, s, e, F2)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

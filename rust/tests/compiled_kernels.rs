@@ -1,0 +1,185 @@
+//! Differential proof that the monomorphized (spec-compiled) kernels are
+//! bit-identical to the interpreter they were compiled from.
+//!
+//! `MmaModel` resolves every registry instruction to a compiled kernel at
+//! construction; the interpreter stays behind as the reference
+//! implementation, reachable via `dpa_reference`/`execute_reference_into`.
+//! These tests drive both paths over the full registry (every family, both
+//! vendors), three input classes per instruction, randomized scale bit
+//! patterns (including NaN/extreme scales), and the edge shapes from the
+//! view-engine suite (multiblock ST, ragged-K GST/TR) — asserting exact
+//! bit equality of the output matrices, plus that the compiled/fallback
+//! routing itself is what the lookup gates promise.
+
+use mma_sim::clfp::random_inputs;
+use mma_sim::formats::{Format, Rho};
+use mma_sim::interface::{BitMatrix, MmaCase, MmaFormats, MmaInterface};
+use mma_sim::isa;
+use mma_sim::models::{DpaScratch, MmaModel, ModelSpec};
+use mma_sim::util::Rng;
+
+/// Random scale operands matching the model's block-scale spec (arbitrary
+/// bit patterns: both paths must agree even on NaN/extreme scales).
+fn random_scales(rng: &mut Rng, model: &MmaModel) -> Option<(BitMatrix, BitMatrix)> {
+    let spec = model.scale_spec()?;
+    let (m, n, _) = model.shape();
+    let nblk = model.scale_blocks();
+    let mut sa = BitMatrix::zeros(m, nblk, spec.fmt);
+    let mut sb = BitMatrix::zeros(nblk, n, spec.fmt);
+    for v in sa.data.iter_mut() {
+        *v = rng.bits(spec.fmt.width());
+    }
+    for v in sb.data.iter_mut() {
+        *v = rng.bits(spec.fmt.width());
+    }
+    Some((sa, sb))
+}
+
+/// Run the hot path (compiled where available) and the forced-interpreter
+/// path through the identical view engine; return both output matrices.
+fn both_paths(
+    model: &MmaModel,
+    case: &MmaCase,
+    scratch: &mut DpaScratch,
+) -> (BitMatrix, BitMatrix) {
+    let (m, n, _) = model.shape();
+    let mut hot = BitMatrix::zeros(m, n, model.formats.d);
+    let mut reference = BitMatrix::zeros(m, n, model.formats.d);
+    model.execute_into(&case.a, &case.b, &case.c, case.scales(), &mut hot, scratch);
+    model.execute_reference_into(
+        &case.a,
+        &case.b,
+        &case.c,
+        case.scales(),
+        &mut reference,
+        scratch,
+    );
+    (hot, reference)
+}
+
+#[test]
+fn registry_compiled_kernels_match_interpreter_bitwise() {
+    // Every instruction must (a) actually route through a compiled kernel
+    // and (b) produce bit-identical output to the interpreter across all
+    // three input classes and random scale patterns.
+    let mut rng = Rng::new(0xC0DE);
+    let mut scratch = DpaScratch::default();
+    for instr in isa::registry() {
+        let model = instr.model();
+        assert!(
+            model.is_compiled(),
+            "{} {} did not resolve to a compiled kernel",
+            instr.arch.target(),
+            instr.name
+        );
+        for t in 0..3 {
+            let (a, b, c) = random_inputs(&mut rng, &model, t);
+            let mut case = MmaCase::new(a, b, c);
+            case.scales = random_scales(&mut rng, &model);
+            let (hot, reference) = both_paths(&model, &case, &mut scratch);
+            assert_eq!(
+                hot.data, reference.data,
+                "{} {} (class {t})",
+                instr.arch.target(),
+                instr.name
+            );
+        }
+    }
+}
+
+#[test]
+fn registry_dpa_matches_dpa_reference() {
+    // The one-shot entry points agree too: a single dot product through
+    // `dpa` (compiled) and `dpa_reference` (interpreter) bit-for-bit.
+    let mut rng = Rng::new(0xD07);
+    for instr in isa::registry() {
+        let model = instr.model();
+        let (a, b, c) = random_inputs(&mut rng, &model, 2);
+        let nblk = model.scale_blocks();
+        let scales = random_scales(&mut rng, &model);
+        let (sa, sb): (Vec<u64>, Vec<u64>) = match &scales {
+            Some((sa, sb)) => (
+                (0..nblk).map(|blk| sa.get(0, blk)).collect(),
+                (0..nblk).map(|r| sb.get(r, 0)).collect(),
+            ),
+            None => (Vec::new(), Vec::new()),
+        };
+        let arow: Vec<u64> = (0..model.k).map(|kk| a.get(0, kk)).collect();
+        let bcol: Vec<u64> = (0..model.k).map(|kk| b.get(kk, 0)).collect();
+        let c00 = c.get(0, 0);
+        assert_eq!(
+            model.dpa(&arow, &bcol, c00, &sa, &sb),
+            model.dpa_reference(&arow, &bcol, c00, &sa, &sb),
+            "{} {}",
+            instr.arch.target(),
+            instr.name
+        );
+    }
+}
+
+#[test]
+fn edge_shapes_route_and_match() {
+    // Multiblock ST (K = 3 × kblock): whole chunks, so it *must* compile;
+    // the per-chunk scale-block indexing is the hazard being pinned.
+    let st = MmaModel::new(
+        "st-multiblock",
+        (4, 4, 96),
+        MmaFormats {
+            a: Format::Fp8E4M3,
+            b: Format::Fp8E4M3,
+            c: Format::Fp32,
+            d: Format::Fp32,
+        },
+        ModelSpec::StFdpa { l_max: 32, f: 25, rho: Rho::RzFp32, kblock: 32 },
+    );
+    assert!(st.is_compiled(), "whole-chunk multiblock ST must compile");
+
+    // Ragged-K GST (the view-engine edge shape): the final chunk spans a
+    // partial scale block, so the lookup must refuse and fall back.
+    let gst = MmaModel::new(
+        "gst-ragged",
+        (4, 4, 40),
+        MmaFormats {
+            a: Format::Fp4E2M1,
+            b: Format::Fp4E2M1,
+            c: Format::Fp32,
+            d: Format::Fp32,
+        },
+        ModelSpec::GstFdpa {
+            l: 32,
+            g: 16,
+            f: 35,
+            rho: Rho::RzFp32,
+            kblock: 16,
+            scale_fmt: Format::E8M0,
+        },
+    );
+    assert!(!gst.is_compiled(), "ragged-K GST must stay on the interpreter");
+
+    // Ragged-K TR: 21 % 8 != 0 — interpreter fallback.
+    let tr = MmaModel::new(
+        "tr-ragged",
+        (4, 4, 21),
+        MmaFormats {
+            a: Format::Fp16,
+            b: Format::Fp16,
+            c: Format::Fp32,
+            d: Format::Fp32,
+        },
+        ModelSpec::TrFdpa { l_max: 8, f: 24, f2: 31 },
+    );
+    assert!(!tr.is_compiled(), "ragged-K TR must stay on the interpreter");
+
+    // Whatever the routing, both entry points agree bit-for-bit.
+    let mut rng = Rng::new(0xED6E);
+    let mut scratch = DpaScratch::default();
+    for model in [&st, &gst, &tr] {
+        for t in 0..6 {
+            let (a, b, c) = random_inputs(&mut rng, model, t);
+            let mut case = MmaCase::new(a, b, c);
+            case.scales = random_scales(&mut rng, model);
+            let (hot, reference) = both_paths(model, &case, &mut scratch);
+            assert_eq!(hot.data, reference.data, "{} (class {})", model.name, t % 3);
+        }
+    }
+}

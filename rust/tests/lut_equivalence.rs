@@ -3,13 +3,17 @@
 //! The table layer (`formats::tables`) must be bitwise invisible: for
 //! every format with ≤ 16 storage bits, every one of the 2^width bit
 //! patterns must produce identical `Decoded` and `to_f64` results through
-//! the LUT dispatch and through the bit-level reference path; and for
-//! every ordered pair of ≤ 8-bit formats, the pair-product table must
-//! match decode-and-multiply for all pattern pairs — including the
-//! NaN/Inf/zero/subnormal code points.
+//! the LUT dispatch and through the bit-level reference path; for every
+//! ordered pair of ≤ 8-bit formats, the pair-product table must match
+//! decode-and-multiply for all pattern pairs — including the
+//! NaN/Inf/zero/subnormal code points; and for the 16-bit formats, the
+//! split exponent/mantissa sub-tables (`product_split`) must reproduce
+//! the decode-and-multiply product term across boundary code points and
+//! randomized pairs.
 
 use mma_sim::fixedpoint::FxTerm;
 use mma_sim::formats::{tables, Format};
+use mma_sim::util::Rng;
 
 fn narrow(max_width: u32) -> impl Iterator<Item = Format> {
     Format::ALL.iter().copied().filter(move |f| f.width() <= max_width)
@@ -79,6 +83,73 @@ fn product_lut_matches_decode_and_multiply_for_all_pairs() {
                     assert_eq!(got, want, "{fa:?}×{fb:?} a={a:#x} b={b:#x}");
                 }
             }
+        }
+    }
+}
+
+/// The split sub-table product, recomputed from first principles.
+fn split_reference(fmt: Format, a: u64, b: u64) -> FxTerm {
+    let da = fmt.decode_reference(a);
+    let db = fmt.decode_reference(b);
+    FxTerm::product(
+        da.sig,
+        da.exp,
+        fmt.mant_bits(),
+        da.sign,
+        db.sig,
+        db.exp,
+        fmt.mant_bits(),
+        db.sign,
+    )
+}
+
+#[test]
+fn split_product_coverage_is_exactly_the_16bit_formats() {
+    for fmt in Format::ALL {
+        let has_split = matches!(fmt, Format::Fp16 | Format::Bf16);
+        assert_eq!(tables::product_split(fmt, 0, 0).is_some(), has_split, "{fmt:?}");
+    }
+}
+
+#[test]
+fn split_product_matches_decode_and_multiply_on_boundaries() {
+    // Full cross product of the boundary code points: both signs × every
+    // exponent field × significand ∈ {zero, min, mid, max}. This sweeps
+    // zero, all subnormals' corners, normals, Inf, and the NaN payload
+    // extremes — every class transition of the encodings.
+    for fmt in [Format::Fp16, Format::Bf16] {
+        let mant = fmt.mant_bits();
+        let exp_bits = fmt.width() - 1 - mant;
+        let sig_max = (1u64 << mant) - 1;
+        let mut points = Vec::new();
+        for sign in 0..2u64 {
+            for e in 0..(1u64 << exp_bits) {
+                for sig in [0, 1, sig_max / 2, sig_max] {
+                    points.push((sign << (fmt.width() - 1)) | (e << mant) | sig);
+                }
+            }
+        }
+        points.dedup();
+        for &a in &points {
+            for &b in &points {
+                let got = tables::product_split(fmt, a, b).expect("16-bit split table");
+                assert_eq!(got, split_reference(fmt, a, b), "{fmt:?} a={a:#x} b={b:#x}");
+            }
+        }
+    }
+}
+
+#[test]
+fn split_product_matches_decode_and_multiply_randomized() {
+    // 2^16 random pairs per format (the full 2^32 cross product is out of
+    // test-time budget; the boundary sweep above covers the class edges).
+    let mut rng = Rng::new(0x5117);
+    for fmt in [Format::Fp16, Format::Bf16] {
+        for _ in 0..(1 << 16) {
+            let a = rng.bits(16);
+            let b = rng.bits(16);
+            let got = tables::product_split(fmt, a, b).expect("16-bit split table");
+            assert_eq!(got, split_reference(fmt, a, b), "{fmt:?} a={a:#x} b={b:#x}");
         }
     }
 }
