@@ -284,9 +284,7 @@ fn main() {
             .collect();
         let cfg = mma_sim::session::ShardConfig {
             workers: 1,
-            inflight: 0,
-            child_workers: 2,
-            deterministic: false,
+            ..mma_sim::session::ShardConfig::default()
         };
         let transport =
             mma_sim::session::ProcessTransport::with_binary(env!("CARGO_BIN_EXE_mma-sim"));

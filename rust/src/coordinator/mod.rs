@@ -24,7 +24,7 @@
 mod report;
 mod worker;
 
-pub use report::{CampaignReport, Mismatch, PairStats};
+pub use report::{CampaignReport, Mismatch, PairStats, QuarantinedJob};
 pub use worker::VerifyPair;
 
 use std::sync::atomic::{AtomicUsize, Ordering};

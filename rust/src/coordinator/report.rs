@@ -32,6 +32,23 @@ pub struct PairStats {
     pub first_mismatch_job: Option<u64>,
 }
 
+/// A job the shard runner gave up on: it was in flight on `kills`
+/// distinct workers at the moment they died or were retired, which makes
+/// the *job* the prime suspect. Rather than feed it to workers forever
+/// (burning the respawn budget and aborting the run), the pool resolves
+/// it as an explicit error line and records it here, so the run degrades
+/// to a partial-but-explicit report.
+#[derive(Clone, Debug, PartialEq)]
+pub struct QuarantinedJob {
+    pub id: u64,
+    pub pair: String,
+    /// Workers felled while this job was in flight on them.
+    pub kills: usize,
+    /// Human-readable cause, quoting the last felled worker's failure
+    /// (including its stderr tail when one was captured).
+    pub reason: String,
+}
+
 /// Aggregated campaign report.
 #[derive(Clone, Debug, Default, PartialEq)]
 pub struct CampaignReport {
@@ -40,6 +57,13 @@ pub struct CampaignReport {
     pub total_mismatches: usize,
     pub wall_micros: u64,
     pub pairs: BTreeMap<String, PairStats>,
+    /// Jobs the run could not complete (currently: quarantined jobs).
+    /// 0 means the report covers every submitted job — the only case in
+    /// which the JSON codec omits the incomplete/quarantined fields, so
+    /// fault-free output is byte-identical to pre-quarantine producers.
+    pub incomplete: usize,
+    /// The quarantine records behind `incomplete`, ascending by job id.
+    pub quarantined: Vec<QuarantinedJob>,
 }
 
 impl CampaignReport {
@@ -76,6 +100,11 @@ impl CampaignReport {
         self.total_tests += other.total_tests;
         self.total_mismatches += other.total_mismatches;
         self.wall_micros = self.wall_micros.max(other.wall_micros);
+        self.incomplete += other.incomplete;
+        if !other.quarantined.is_empty() {
+            self.quarantined.extend(other.quarantined.iter().cloned());
+            self.quarantined.sort_by_key(|q| q.id);
+        }
         for (name, st) in &other.pairs {
             let entry = self.pairs.entry(name.clone()).or_default();
             entry.jobs += st.jobs;
@@ -141,6 +170,18 @@ impl CampaignReport {
                 st.busy_micros,
                 if st.mismatches > 0 { "  <-- DIVERGES" } else { "" }
             ));
+        }
+        if self.incomplete > 0 {
+            s.push_str(&format!(
+                "  INCOMPLETE: {} job(s) did not run to completion\n",
+                self.incomplete
+            ));
+            for q in &self.quarantined {
+                s.push_str(&format!(
+                    "    quarantined job {} ({}) after felling {} workers: {}\n",
+                    q.id, q.pair, q.kills, q.reason
+                ));
+            }
         }
         s
     }
@@ -281,5 +322,35 @@ mod tests {
         // …and a legacy one never displaces an existing triple
         merged.merge(&legacy);
         assert_eq!(merged.pairs["x"].first_mismatch_job, Some(9));
+    }
+
+    #[test]
+    fn quarantine_records_merge_sorted_and_render() {
+        let q = |id: u64| QuarantinedJob {
+            id,
+            pair: "x".into(),
+            kills: 3,
+            reason: format!("felled 3 workers (job {id})"),
+        };
+        let mut a = CampaignReport::new();
+        a.incomplete = 1;
+        a.quarantined = vec![q(7)];
+        let mut b = CampaignReport::new();
+        b.incomplete = 2;
+        b.quarantined = vec![q(2), q(9)];
+        let mut merged = CampaignReport::new();
+        merged.merge(&a);
+        merged.merge(&b);
+        assert_eq!(merged.incomplete, 3);
+        let ids: Vec<u64> = merged.quarantined.iter().map(|r| r.id).collect();
+        assert_eq!(ids, vec![2, 7, 9], "quarantine records stay ascending by id");
+        let rendered = merged.render();
+        assert!(rendered.contains("INCOMPLETE: 3 job(s)"), "{rendered}");
+        assert!(rendered.contains("quarantined job 2 (x) after felling 3 workers"), "{rendered}");
+        // a complete report renders without the section and its timing
+        // clear leaves quarantine records untouched
+        assert!(!CampaignReport::new().render().contains("INCOMPLETE"));
+        merged.clear_timing();
+        assert_eq!(merged.quarantined.len(), 3);
     }
 }

@@ -79,7 +79,10 @@ pub enum ApiError {
     /// as "restart the pool", not as a reason to die.
     PoolStopped { during: &'static str },
     /// A cross-process sharding failure: a worker could not be launched,
-    /// every worker died, or a child broke the wire protocol.
+    /// the respawn budget ran out, a hung child blew its reply deadline, a
+    /// poisoned GEMM band kept felling workers, or a child broke the wire
+    /// protocol. `detail` carries the forensic context the pool gathered —
+    /// including the dead child's last stderr lines when it captured any.
     Shard { detail: String },
 }
 

@@ -19,8 +19,17 @@
 //!   GEMM row bands over `mma-sim` child workers through a
 //!   `WorkerTransport`, requeues work from dying children, and merges
 //!   the reply streams back deterministically — `Session::shard_campaign`
-//!   / `Session::shard_gemm`). Start here; the layers below are the
-//!   machinery it drives.
+//!   / `Session::shard_gemm`). The pool is hardened for unattended
+//!   fleets: per-job reply deadlines retire hung-but-alive children,
+//!   respawns back off on a deterministic exponential schedule against a
+//!   launch budget, a job that keeps felling workers is quarantined into
+//!   an explicit partial report, and each child's last stderr lines ride
+//!   along in every `ApiError::Shard`. The matching fault-injection
+//!   harness lives in [`session::faults`]: seeded, reproducible
+//!   crash/hang/garbage/truncate/delay schedules applied through a
+//!   `ChaosTransport` decorator (in-process) or the workers' own
+//!   `--chaos` flag (real processes). Start here; the layers below are
+//!   the machinery it drives.
 //! - [`error`] — the structured [`ApiError`] every validated entry point
 //!   rejects malformed input with (a leaf module, so the layers below can
 //!   return it without depending on the facade above them).

@@ -30,8 +30,8 @@ use mma_sim::coordinator::{Job, VerifyPair};
 use mma_sim::interface::{BitMatrix, MmaInterface};
 use mma_sim::runtime::{artifacts_dir, model_for_artifact, read_manifest, Runtime};
 use mma_sim::session::{
-    self, json, CampaignConfig, ProcessTransport, ServeConfig, Session, SessionBuilder,
-    ShardConfig,
+    self, json, CampaignConfig, ChaosPlan, ChaosWriter, FaultPlan, ProcessTransport, ServeConfig,
+    Session, SessionBuilder, ShardConfig,
 };
 use mma_sim::util::Rng;
 
@@ -113,6 +113,18 @@ fn print_help() {
          \x20                                    merged summary (--deterministic\n\
          \x20                                    zeroes timing: byte-identical output\n\
          \x20                                    for any N)\n\
+         \x20       [--job-timeout MS]           retire a child that owes a reply for\n\
+         \x20                                    MS ms (kill, requeue, respawn); 0=off\n\
+         \x20       [--max-worker-kills K]       quarantine a job after it fells K\n\
+         \x20                                    workers (partial report; 0=never)\n\
+         \x20       [--respawn-base MS] [--max-spawns N]\n\
+         \x20                                    deterministic exponential respawn\n\
+         \x20                                    backoff base + total launch budget\n\
+         \x20       [--chaos SPEC]               deterministic fault injection into\n\
+         \x20                                    child reply streams; SPEC is either\n\
+         \x20                                    'L:kind@frame,…;L:…' (explicit) or\n\
+         \x20                                    'seed=S,launches=N,frames=F,crash=c,\n\
+         \x20                                    hang=h,garbage=g,truncate=t,delay=d'\n\
          \x20 shard --gemm --arch A --instr FRAG [--m M --n N --k K] [--check]\n\
          \x20                                    GEMM row bands scattered across\n\
          \x20                                    `simulate --stdin` children; --check\n\
@@ -154,7 +166,7 @@ fn cmd_list() -> Result<()> {
 fn cmd_simulate(args: &[String]) -> Result<()> {
     let session = session_from_args(args)?;
     if has(args, "--stdin") {
-        return simulate_stream(&session);
+        return simulate_stream(&session, args);
     }
     let seed = parsed(args, "--seed", 42u64)?;
     let sim = session.simulate(seed)?;
@@ -183,10 +195,18 @@ fn cmd_simulate(args: &[String]) -> Result<()> {
 /// The sharding seam: one validated `run` per input case line, plus the
 /// `set_b`/`band` frames the sharded-GEMM parent drives (the loop itself
 /// lives in [`session::serve_cases`]).
-fn simulate_stream(session: &Session) -> Result<()> {
+fn simulate_stream(session: &Session, args: &[String]) -> Result<()> {
     let stdin = std::io::stdin();
+    let max_line = parsed(args, "--max-line-bytes", 0usize)?;
+    if let Some(spec) = flag(args, "--chaos") {
+        // fault-injection hook: corrupt this worker's own reply stream on
+        // a deterministic schedule, so parent-side hardening is testable
+        // against a real misbehaving process
+        let mut out = ChaosWriter::new(std::io::stdout().lock(), FaultPlan::parse(&spec)?);
+        return session::serve_cases_capped(session, stdin.lock(), &mut out, max_line);
+    }
     let mut out = std::io::stdout().lock();
-    session::serve_cases(session, stdin.lock(), &mut out)
+    session::serve_cases_capped(session, stdin.lock(), &mut out, max_line)
 }
 
 fn cmd_table(args: &[String]) -> Result<()> {
@@ -302,8 +322,15 @@ fn cmd_shard(args: &[String]) -> Result<()> {
         inflight: parsed(args, "--inflight", 0usize)?,
         child_workers: parsed(args, "--child-workers", 2usize)?,
         deterministic: has(args, "--deterministic"),
+        job_timeout_ms: parsed(args, "--job-timeout", 0u64)?,
+        max_worker_kills: parsed(args, "--max-worker-kills", 3usize)?,
+        respawn_base_ms: parsed(args, "--respawn-base", 25u64)?,
+        max_spawns: parsed(args, "--max-spawns", 0usize)?,
     };
-    let transport = ProcessTransport::current_exe()?;
+    let mut transport = ProcessTransport::current_exe()?;
+    if let Some(spec) = flag(args, "--chaos") {
+        transport = transport.with_chaos(ChaosPlan::parse(&spec)?);
+    }
     if has(args, "--gemm") {
         return cmd_shard_gemm(args, &shard_cfg, &transport);
     }
@@ -430,9 +457,20 @@ fn cmd_serve(args: &[String]) -> Result<()> {
     let workers = parsed(args, "--workers", 4usize)?;
     let pairs = verify_pairs(args)?;
     if has(args, "--jsonl") {
-        let cfg = ServeConfig { workers, queue_depth: 0 };
+        let cfg = ServeConfig {
+            workers,
+            queue_depth: 0,
+            max_line_bytes: parsed(args, "--max-line-bytes", 0usize)?,
+        };
         eprintln!("serve: {} pairs, {workers} workers, reading job lines from stdin", pairs.len());
         let stdin = std::io::stdin();
+        if let Some(spec) = flag(args, "--chaos") {
+            // fault-injection hook: corrupt this worker's own reply stream
+            // on a deterministic schedule (see `session::faults`)
+            let mut out = ChaosWriter::new(std::io::stdout(), FaultPlan::parse(&spec)?);
+            session::serve_jsonl(pairs, &cfg, stdin.lock(), &mut out)?;
+            return Ok(());
+        }
         let mut stdout = std::io::stdout();
         session::serve_jsonl(pairs, &cfg, stdin.lock(), &mut stdout)?;
         return Ok(());

@@ -1,0 +1,655 @@
+//! Deterministic fault injection for the shard tier.
+//!
+//! The hardened [`ShardPool`](crate::session::shard::ShardPool) claims to
+//! survive hung children, crashes mid-frame, and corrupt reply streams —
+//! claims that are untestable without a way to *cause* those failures on
+//! demand, reproducibly. This module is that way:
+//!
+//! - a [`FaultPlan`] is an explicit per-worker schedule of faults, keyed
+//!   by reply-frame index: the fault fires in place of the Nth protocol
+//!   frame the worker would have produced. Five fault kinds cover the
+//!   failure modes the pool must handle: [`Fault::Crash`] (the stream
+//!   ends, as if the process died), [`Fault::Hang`] (the stream goes
+//!   silent but stays open — the failure mode that deadlocked the PR-5
+//!   pool), [`Fault::Garbage`] (the frame is replaced by a non-protocol
+//!   line), [`Fault::Truncate`] (half the frame, then the stream ends —
+//!   a crash mid-write), and [`Fault::Delay`] (the frame arrives late but
+//!   intact — the fault that must *not* trip the watchdog);
+//! - a [`ChaosPlan`] assigns one `FaultPlan` per worker *launch index*
+//!   (respawned replacements keep counting up), either written out
+//!   explicitly (`"0:hang@2;1:crash@4"`) or expanded deterministically
+//!   from a seed (`"seed=7,launches=4,frames=20,crash=2,hang=1"`);
+//! - [`ChaosTransport`] decorates any
+//!   [`WorkerTransport`](crate::session::shard::WorkerTransport) and
+//!   applies the plan on the parent side of the pipe (so even in-memory
+//!   test transports can fail); [`ChaosWriter`] applies a plan on the
+//!   *child* side of the pipe — `mma-sim serve --jsonl --chaos <spec>` /
+//!   `simulate --stdin --chaos <spec>` wrap their stdout in one, so a
+//!   real process genuinely crashes mid-write or hangs while alive, and
+//!   the parent's watchdog has a live process to detect and kill.
+//!
+//! Everything here is jitter-free: the same spec produces the same fault
+//! sequence every run, which is what lets the chaos differential suites
+//! assert byte-identical output between faulted and fault-free runs.
+
+use std::collections::BTreeMap;
+use std::io::{BufRead, BufReader, Read, Write};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+use crate::error::ApiError;
+use crate::session::shard::{WorkerHandle, WorkerIo, WorkerRole, WorkerTransport};
+use crate::util::Rng;
+
+/// The line an injected [`Fault::Garbage`] frame is replaced with —
+/// deliberately not JSON, so the pool's protocol-violation path fires.
+pub const GARBAGE_FRAME: &str = "!!chaos-garbage!!";
+
+fn bad_spec(detail: String) -> ApiError {
+    ApiError::Unsupported { what: "chaos spec", detail }
+}
+
+// ---------------------------------------------------------------------------
+// fault plans
+// ---------------------------------------------------------------------------
+
+/// One injectable failure. See the module docs for what each simulates.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Fault {
+    /// The reply stream ends where the frame would have been.
+    Crash,
+    /// The stream goes silent (but stays open) until the worker is killed.
+    Hang,
+    /// The frame is replaced by [`GARBAGE_FRAME`].
+    Garbage,
+    /// The first half of the frame, then the stream ends (crash mid-write).
+    Truncate,
+    /// The frame arrives intact after this many milliseconds.
+    Delay(u64),
+}
+
+impl Fault {
+    fn spec(&self) -> String {
+        match self {
+            Fault::Crash => "crash".into(),
+            Fault::Hang => "hang".into(),
+            Fault::Garbage => "garbage".into(),
+            Fault::Truncate => "truncate".into(),
+            Fault::Delay(ms) => format!("delay{ms}"),
+        }
+    }
+
+    fn parse(kind: &str) -> Result<Self, ApiError> {
+        match kind {
+            "crash" => Ok(Fault::Crash),
+            "hang" => Ok(Fault::Hang),
+            "garbage" => Ok(Fault::Garbage),
+            "truncate" => Ok(Fault::Truncate),
+            _ => match kind.strip_prefix("delay") {
+                Some(ms) => Ok(Fault::Delay(ms.parse().map_err(|_| {
+                    bad_spec(format!("'{kind}': delay wants a millisecond count (delay50)"))
+                })?)),
+                None => Err(bad_spec(format!(
+                    "unknown fault kind '{kind}' (crash|hang|garbage|truncate|delay<ms>)"
+                ))),
+            },
+        }
+    }
+}
+
+/// The fault schedule for one worker: at most one fault per reply-frame
+/// index. Frames count every protocol line the worker produces, 0-based;
+/// a terminal fault (crash, hang, truncate) makes later events unreachable.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct FaultPlan {
+    events: BTreeMap<u64, Fault>,
+}
+
+impl FaultPlan {
+    pub fn empty() -> Self {
+        Self::default()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// The fault scheduled for reply frame `frame`, if any.
+    pub fn fault_at(&self, frame: u64) -> Option<Fault> {
+        self.events.get(&frame).copied()
+    }
+
+    /// Parse a comma-separated `kind@frame` list, e.g.
+    /// `"garbage@2,crash@5"` or `"delay50@1,hang@3"`. `""` is the empty
+    /// plan. Duplicate frames are rejected (the schedule would be
+    /// ambiguous).
+    pub fn parse(spec: &str) -> Result<Self, ApiError> {
+        let mut events = BTreeMap::new();
+        for entry in spec.split(',').map(str::trim).filter(|e| !e.is_empty()) {
+            let (kind, frame) = entry
+                .split_once('@')
+                .ok_or_else(|| bad_spec(format!("'{entry}' is not kind@frame")))?;
+            let frame: u64 = frame
+                .trim()
+                .parse()
+                .map_err(|_| bad_spec(format!("'{entry}': frame must be a u64")))?;
+            if events.insert(frame, Fault::parse(kind.trim())?).is_some() {
+                return Err(bad_spec(format!("two faults scheduled for frame {frame}")));
+            }
+        }
+        Ok(Self { events })
+    }
+
+    /// The canonical spec string: `parse(to_spec())` round-trips.
+    pub fn to_spec(&self) -> String {
+        self.events
+            .iter()
+            .map(|(frame, fault)| format!("{}@{frame}", fault.spec()))
+            .collect::<Vec<_>>()
+            .join(",")
+    }
+}
+
+/// A pool-wide schedule: one [`FaultPlan`] per worker launch index
+/// (respawned replacements take the next index — a seeded plan can keep
+/// killing replacements until its `launches` bound).
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct ChaosPlan {
+    per_launch: BTreeMap<usize, FaultPlan>,
+}
+
+impl ChaosPlan {
+    pub fn is_empty(&self) -> bool {
+        self.per_launch.values().all(FaultPlan::is_empty)
+    }
+
+    /// Install `plan` for worker launch `launch` (builder style).
+    pub fn with_launch(mut self, launch: usize, plan: FaultPlan) -> Self {
+        self.per_launch.insert(launch, plan);
+        self
+    }
+
+    /// The plan for one launch (empty if the schedule names none).
+    pub fn for_launch(&self, launch: usize) -> FaultPlan {
+        self.per_launch.get(&launch).cloned().unwrap_or_default()
+    }
+
+    /// Parse either form:
+    ///
+    /// - explicit: semicolon-separated `launch:planspec` entries, e.g.
+    ///   `"0:hang@2;1:crash@4,garbage@1"`;
+    /// - seeded: a `seed=S` comma list with optional `launches=N` (default
+    ///   4), `frames=F` (default 16), and per-kind event counts `crash=`,
+    ///   `hang=`, `garbage=`, `truncate=`, `delay=` (defaults 0) —
+    ///   expanded deterministically into an explicit schedule.
+    pub fn parse(spec: &str) -> Result<Self, ApiError> {
+        let spec = spec.trim();
+        if spec.starts_with("seed=") {
+            return Self::parse_seeded(spec);
+        }
+        let mut per_launch = BTreeMap::new();
+        for entry in spec.split(';').map(str::trim).filter(|e| !e.is_empty()) {
+            let (launch, plan) = entry
+                .split_once(':')
+                .ok_or_else(|| bad_spec(format!("'{entry}' is not launch:plan")))?;
+            let launch: usize = launch
+                .trim()
+                .parse()
+                .map_err(|_| bad_spec(format!("'{entry}': launch must be a usize")))?;
+            if per_launch.insert(launch, FaultPlan::parse(plan)?).is_some() {
+                return Err(bad_spec(format!("two plans for launch {launch}")));
+            }
+        }
+        Ok(Self { per_launch })
+    }
+
+    fn parse_seeded(spec: &str) -> Result<Self, ApiError> {
+        let (mut seed, mut launches, mut frames) = (0u64, 4usize, 16u64);
+        let mut counts = [0usize; 5]; // crash, hang, garbage, truncate, delay
+        for entry in spec.split(',').map(str::trim).filter(|e| !e.is_empty()) {
+            let (key, value) = entry
+                .split_once('=')
+                .ok_or_else(|| bad_spec(format!("'{entry}' is not key=value")))?;
+            let parse_num = || -> Result<u64, ApiError> {
+                value
+                    .trim()
+                    .parse()
+                    .map_err(|_| bad_spec(format!("'{entry}': value must be a u64")))
+            };
+            match key.trim() {
+                "seed" => seed = parse_num()?,
+                "launches" => launches = parse_num()? as usize,
+                "frames" => frames = parse_num()?,
+                "crash" => counts[0] = parse_num()? as usize,
+                "hang" => counts[1] = parse_num()? as usize,
+                "garbage" => counts[2] = parse_num()? as usize,
+                "truncate" => counts[3] = parse_num()? as usize,
+                "delay" => counts[4] = parse_num()? as usize,
+                other => return Err(bad_spec(format!("unknown seeded key '{other}'"))),
+            }
+        }
+        Ok(Self::seeded(
+            seed, launches, frames, counts[0], counts[1], counts[2], counts[3], counts[4],
+        ))
+    }
+
+    /// Expand a seeded schedule into an explicit one: for each requested
+    /// fault instance, draw a launch in `[0, launches)` and a frame in
+    /// `[0, frames)` from the crate's deterministic RNG. Collisions keep
+    /// the first-drawn fault (same seed, same schedule, every run).
+    /// Seeded delay events sleep a fixed 10 ms.
+    pub fn seeded(
+        seed: u64,
+        launches: usize,
+        frames: u64,
+        crash: usize,
+        hang: usize,
+        garbage: usize,
+        truncate: usize,
+        delay: usize,
+    ) -> Self {
+        let (launches, frames) = (launches.max(1), frames.max(1));
+        let mut rng = Rng::new(seed ^ 0xC4A0_5F17_DE7E_C7ED);
+        let mut per_launch: BTreeMap<usize, FaultPlan> = BTreeMap::new();
+        let kinds = [
+            (Fault::Crash, crash),
+            (Fault::Hang, hang),
+            (Fault::Garbage, garbage),
+            (Fault::Truncate, truncate),
+            (Fault::Delay(10), delay),
+        ];
+        for (fault, count) in kinds {
+            for _ in 0..count {
+                let launch = rng.below(launches as u64) as usize;
+                let frame = rng.below(frames);
+                per_launch.entry(launch).or_default().events.entry(frame).or_insert(fault);
+            }
+        }
+        Self { per_launch }
+    }
+
+    /// The explicit spec string (seeded plans serialize expanded, so the
+    /// schedule a child process receives is concrete and reproducible).
+    pub fn to_spec(&self) -> String {
+        self.per_launch
+            .iter()
+            .filter(|(_, plan)| !plan.is_empty())
+            .map(|(launch, plan)| format!("{launch}:{}", plan.to_spec()))
+            .collect::<Vec<_>>()
+            .join(";")
+    }
+}
+
+// ---------------------------------------------------------------------------
+// parent-side injection: ChaosTransport
+// ---------------------------------------------------------------------------
+
+/// A one-way latch the hang fault blocks on; `kill` releases it so a hung
+/// reader unblocks into EOF instead of stranding its reader thread.
+#[derive(Default)]
+struct KillSwitch {
+    killed: Mutex<bool>,
+    cv: Condvar,
+}
+
+impl KillSwitch {
+    fn trip(&self) {
+        *self.killed.lock().unwrap() = true;
+        self.cv.notify_all();
+    }
+
+    fn wait(&self) {
+        let mut killed = self.killed.lock().unwrap();
+        while !*killed {
+            killed = self.cv.wait(killed).unwrap();
+        }
+    }
+}
+
+/// Wraps any [`WorkerTransport`] and applies a [`ChaosPlan`] to the reply
+/// stream of each launched worker, on the parent side of the pipe. The
+/// worker itself runs unmodified — from the pool's perspective its
+/// replies crash, hang, corrupt, truncate, or stall exactly as scheduled.
+pub struct ChaosTransport<'a> {
+    inner: &'a dyn WorkerTransport,
+    plan: ChaosPlan,
+    launches: AtomicUsize,
+}
+
+impl<'a> ChaosTransport<'a> {
+    pub fn new(inner: &'a dyn WorkerTransport, plan: ChaosPlan) -> Self {
+        Self { inner, plan, launches: AtomicUsize::new(0) }
+    }
+}
+
+impl WorkerTransport for ChaosTransport<'_> {
+    fn launch(&self, role: &WorkerRole) -> Result<WorkerIo, ApiError> {
+        let launch = self.launches.fetch_add(1, Ordering::SeqCst);
+        let io = self.inner.launch(role)?;
+        let plan = self.plan.for_launch(launch);
+        if plan.is_empty() {
+            return Ok(io);
+        }
+        let kill = Arc::new(KillSwitch::default());
+        Ok(WorkerIo {
+            input: io.input,
+            output: Box::new(ChaosReader::new(io.output, plan, kill.clone())),
+            stderr: io.stderr,
+            handle: Box::new(ChaosHandle { inner: io.handle, kill }),
+        })
+    }
+}
+
+struct ChaosHandle {
+    inner: Box<dyn WorkerHandle>,
+    kill: Arc<KillSwitch>,
+}
+
+impl WorkerHandle for ChaosHandle {
+    fn wait(&mut self) {
+        self.inner.wait();
+    }
+    fn kill(&mut self) {
+        // release a reader blocked in a hang fault *and* kill the real
+        // worker (which unblocks a reader stuck in an honest inner read)
+        self.kill.trip();
+        self.inner.kill();
+    }
+}
+
+/// Applies a [`FaultPlan`] to a worker's reply stream: reads whole frames
+/// (lines) from the inner stream and serves them onward, substituting the
+/// scheduled fault at each frame index.
+struct ChaosReader {
+    /// `None` once a terminal fault (or real EOF) ended the stream.
+    inner: Option<BufReader<Box<dyn Read + Send>>>,
+    plan: FaultPlan,
+    frame: u64,
+    pending: Vec<u8>,
+    pos: usize,
+    kill: Arc<KillSwitch>,
+}
+
+impl ChaosReader {
+    fn new(inner: Box<dyn Read + Send>, plan: FaultPlan, kill: Arc<KillSwitch>) -> Self {
+        Self {
+            inner: Some(BufReader::new(inner)),
+            plan,
+            frame: 0,
+            pending: Vec::new(),
+            pos: 0,
+            kill,
+        }
+    }
+}
+
+impl Read for ChaosReader {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        if buf.is_empty() {
+            return Ok(0);
+        }
+        loop {
+            if self.pos < self.pending.len() {
+                let n = buf.len().min(self.pending.len() - self.pos);
+                buf[..n].copy_from_slice(&self.pending[self.pos..self.pos + n]);
+                self.pos += n;
+                return Ok(n);
+            }
+            let Some(inner) = self.inner.as_mut() else { return Ok(0) };
+            let mut line = Vec::new();
+            if inner.read_until(b'\n', &mut line)? == 0 {
+                self.inner = None;
+                return Ok(0);
+            }
+            let fault = self.plan.fault_at(self.frame);
+            self.frame += 1;
+            self.pos = 0;
+            match fault {
+                None => self.pending = line,
+                Some(Fault::Delay(ms)) => {
+                    std::thread::sleep(Duration::from_millis(ms));
+                    self.pending = line;
+                }
+                Some(Fault::Garbage) => {
+                    self.pending = format!("{GARBAGE_FRAME}\n").into_bytes();
+                }
+                Some(Fault::Truncate) => {
+                    line.truncate(line.len() / 2); // half the frame, no newline
+                    self.pending = line;
+                    self.inner = None;
+                }
+                Some(Fault::Crash) => {
+                    self.inner = None;
+                    return Ok(0);
+                }
+                Some(Fault::Hang) => {
+                    // silent but open: block until the pool kills the
+                    // worker, then surface EOF so the reader thread exits
+                    self.inner = None;
+                    self.kill.wait();
+                    return Ok(0);
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// child-side injection: ChaosWriter
+// ---------------------------------------------------------------------------
+
+fn crash_err() -> std::io::Error {
+    std::io::Error::new(std::io::ErrorKind::BrokenPipe, "chaos fault: injected crash")
+}
+
+/// Applies a [`FaultPlan`] to an output stream, frame by frame — the
+/// child side of fault injection. `mma-sim serve --jsonl --chaos <spec>`
+/// and `simulate --stdin --chaos <spec>` wrap stdout in one of these, so
+/// a *real process* emits garbage, dies mid-write (the injected crash
+/// surfaces as a persistent write error, which the serve loops treat as a
+/// fatal sink failure and exit on), or hangs while staying alive — the
+/// scenario the parent's `--job-timeout` watchdog exists for.
+///
+/// Only wire this into a worker process: the hang fault parks the calling
+/// thread until the process is killed.
+pub struct ChaosWriter<W: Write> {
+    inner: W,
+    plan: FaultPlan,
+    frame: u64,
+    buf: Vec<u8>,
+    dead: bool,
+}
+
+impl<W: Write> ChaosWriter<W> {
+    pub fn new(inner: W, plan: FaultPlan) -> Self {
+        Self { inner, plan, frame: 0, buf: Vec::new(), dead: false }
+    }
+}
+
+impl<W: Write> Write for ChaosWriter<W> {
+    fn write(&mut self, data: &[u8]) -> std::io::Result<usize> {
+        if self.dead {
+            return Err(crash_err());
+        }
+        self.buf.extend_from_slice(data);
+        while let Some(pos) = self.buf.iter().position(|&b| b == b'\n') {
+            let line: Vec<u8> = self.buf.drain(..=pos).collect();
+            let fault = self.plan.fault_at(self.frame);
+            self.frame += 1;
+            match fault {
+                None => self.inner.write_all(&line)?,
+                Some(Fault::Delay(ms)) => {
+                    std::thread::sleep(Duration::from_millis(ms));
+                    self.inner.write_all(&line)?;
+                }
+                Some(Fault::Garbage) => {
+                    self.inner.write_all(format!("{GARBAGE_FRAME}\n").as_bytes())?;
+                }
+                Some(Fault::Truncate) => {
+                    self.inner.write_all(&line[..line.len() / 2])?;
+                    let _ = self.inner.flush();
+                    self.dead = true;
+                    return Err(crash_err());
+                }
+                Some(Fault::Crash) => {
+                    self.dead = true;
+                    return Err(crash_err());
+                }
+                Some(Fault::Hang) => {
+                    // stay alive, emit nothing more: a real hung worker
+                    let _ = self.inner.flush();
+                    loop {
+                        std::thread::sleep(Duration::from_secs(3600));
+                    }
+                }
+            }
+        }
+        Ok(data.len())
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        if self.dead {
+            return Err(crash_err());
+        }
+        self.inner.flush()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fault_plan_spec_round_trips() {
+        let plan = FaultPlan::parse("garbage@2,crash@5,delay50@1").unwrap();
+        assert_eq!(plan.fault_at(1), Some(Fault::Delay(50)));
+        assert_eq!(plan.fault_at(2), Some(Fault::Garbage));
+        assert_eq!(plan.fault_at(5), Some(Fault::Crash));
+        assert_eq!(plan.fault_at(0), None);
+        assert_eq!(plan.to_spec(), "delay50@1,garbage@2,crash@5");
+        assert_eq!(FaultPlan::parse(&plan.to_spec()).unwrap(), plan);
+        assert!(FaultPlan::parse("").unwrap().is_empty());
+    }
+
+    #[test]
+    fn bad_specs_are_structured_errors_not_panics() {
+        for spec in ["crash", "wat@1", "crash@x", "crash@1,hang@1", "delay@2"] {
+            let err = FaultPlan::parse(spec).unwrap_err();
+            assert!(matches!(err, ApiError::Unsupported { .. }), "{spec}: {err}");
+        }
+        for spec in ["0hang@2", "x:crash@1", "0:crash@1;0:hang@2", "seed=1,wat=2"] {
+            let err = ChaosPlan::parse(spec).unwrap_err();
+            assert!(matches!(err, ApiError::Unsupported { .. }), "{spec}: {err}");
+        }
+    }
+
+    #[test]
+    fn chaos_plan_explicit_round_trips() {
+        let plan = ChaosPlan::parse("0:hang@2;3:crash@4,garbage@1").unwrap();
+        assert_eq!(plan.for_launch(0).fault_at(2), Some(Fault::Hang));
+        assert_eq!(plan.for_launch(3).fault_at(1), Some(Fault::Garbage));
+        assert!(plan.for_launch(1).is_empty());
+        assert_eq!(ChaosPlan::parse(&plan.to_spec()).unwrap(), plan);
+        assert!(ChaosPlan::parse("").unwrap().is_empty());
+    }
+
+    #[test]
+    fn seeded_plans_are_deterministic_and_bounded() {
+        let spec = "seed=7,launches=3,frames=10,crash=2,hang=1,garbage=3,truncate=1,delay=2";
+        let a = ChaosPlan::parse(spec).unwrap();
+        let b = ChaosPlan::parse(spec).unwrap();
+        assert_eq!(a, b, "same seed, same schedule");
+        assert!(!a.is_empty());
+        let mut events = 0;
+        for (launch, plan) in &a.per_launch {
+            assert!(*launch < 3, "launch {launch} out of bounds");
+            for frame in plan.events.keys() {
+                assert!(*frame < 10, "frame {frame} out of bounds");
+            }
+            events += plan.events.len();
+        }
+        assert!(events >= 5 && events <= 9, "collisions may drop a few of 9: {events}");
+        // the expanded form round-trips and differs across seeds
+        assert_eq!(ChaosPlan::parse(&a.to_spec()).unwrap(), a);
+        assert_ne!(a, ChaosPlan::parse("seed=8,launches=3,frames=10,crash=2,hang=1").unwrap());
+    }
+
+    #[test]
+    fn chaos_writer_substitutes_frames() {
+        let mut sink = Vec::new();
+        {
+            let plan = FaultPlan::parse("garbage@1,crash@3").unwrap();
+            let mut w = ChaosWriter::new(&mut sink, plan);
+            writeln!(w, "frame-0").unwrap();
+            writeln!(w, "frame-1").unwrap(); // replaced by garbage
+            writeln!(w, "frame-2").unwrap();
+            let err = writeln!(w, "frame-3").unwrap_err(); // injected crash
+            assert_eq!(err.kind(), std::io::ErrorKind::BrokenPipe);
+            assert!(writeln!(w, "frame-4").is_err(), "dead writers stay dead");
+        }
+        let text = String::from_utf8(sink).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines, vec!["frame-0", GARBAGE_FRAME, "frame-2"]);
+    }
+
+    #[test]
+    fn chaos_writer_truncates_mid_frame() {
+        let mut sink = Vec::new();
+        {
+            let plan = FaultPlan::parse("truncate@1").unwrap();
+            let mut w = ChaosWriter::new(&mut sink, plan);
+            writeln!(w, "aaaa").unwrap();
+            assert!(writeln!(w, "bbbbbbbb").is_err());
+        }
+        // frame 1 is "bbbbbbbb\n" (9 bytes): half is 4 bytes, no newline
+        assert_eq!(String::from_utf8(sink).unwrap(), "aaaa\nbbbb");
+    }
+
+    #[test]
+    fn chaos_reader_crashes_garbles_and_delays() {
+        let input = b"l0\nl1\nl2\nl3\n".to_vec();
+        let plan = FaultPlan::parse("garbage@1,delay1@2,crash@3").unwrap();
+        let mut r = ChaosReader::new(
+            Box::new(std::io::Cursor::new(input)),
+            plan,
+            Arc::new(KillSwitch::default()),
+        );
+        let mut text = String::new();
+        r.read_to_string(&mut text).unwrap();
+        assert_eq!(text, format!("l0\n{GARBAGE_FRAME}\nl2\n"), "l3 died in the crash");
+    }
+
+    #[test]
+    fn chaos_reader_truncation_cuts_the_frame_and_ends() {
+        let input = b"first\nsecond-frame\nthird\n".to_vec();
+        let plan = FaultPlan::parse("truncate@1").unwrap();
+        let mut r = ChaosReader::new(
+            Box::new(std::io::Cursor::new(input)),
+            plan,
+            Arc::new(KillSwitch::default()),
+        );
+        let mut text = String::new();
+        r.read_to_string(&mut text).unwrap();
+        // "second-frame\n" is 13 bytes: half is 6 bytes of partial frame
+        assert_eq!(text, "first\nsecon");
+    }
+
+    #[test]
+    fn hung_chaos_reader_unblocks_into_eof_on_kill() {
+        let input = b"l0\nl1\n".to_vec();
+        let plan = FaultPlan::parse("hang@1").unwrap();
+        let kill = Arc::new(KillSwitch::default());
+        let mut r =
+            ChaosReader::new(Box::new(std::io::Cursor::new(input)), plan, kill.clone());
+        let reader = std::thread::spawn(move || {
+            let mut text = String::new();
+            r.read_to_string(&mut text).unwrap();
+            text
+        });
+        std::thread::sleep(Duration::from_millis(30));
+        assert!(!reader.is_finished(), "the hang must actually block");
+        kill.trip();
+        assert_eq!(reader.join().unwrap(), "l0\n", "kill turned the hang into EOF");
+    }
+}

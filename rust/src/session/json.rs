@@ -13,7 +13,7 @@
 //! consumers in other languages must read them as 64-bit integers, not
 //! doubles, for FP64 patterns above 2^53.
 
-use crate::coordinator::{CampaignReport, Job, JobOutcome, Mismatch, PairStats};
+use crate::coordinator::{CampaignReport, Job, JobOutcome, Mismatch, PairStats, QuarantinedJob};
 use crate::error::ApiError;
 use crate::formats::Format;
 use crate::interface::{BitMatrix, MmaCase};
@@ -679,8 +679,26 @@ fn pair_stats_from_json(v: &JsonValue) -> Result<PairStats, ApiError> {
     })
 }
 
-pub fn report_to_json(r: &CampaignReport) -> JsonValue {
+fn quarantined_to_json(q: &QuarantinedJob) -> JsonValue {
     JsonValue::Obj(vec![
+        ("id".into(), JsonValue::u64(q.id)),
+        ("pair".into(), JsonValue::str(&q.pair)),
+        ("kills".into(), JsonValue::usize(q.kills)),
+        ("reason".into(), JsonValue::str(&q.reason)),
+    ])
+}
+
+fn quarantined_from_json(v: &JsonValue) -> Result<QuarantinedJob, ApiError> {
+    Ok(QuarantinedJob {
+        id: u64_field(v, "id")?,
+        pair: str_field(v, "pair")?.to_string(),
+        kills: usize_field(v, "kills")?,
+        reason: str_field(v, "reason")?.to_string(),
+    })
+}
+
+pub fn report_to_json(r: &CampaignReport) -> JsonValue {
+    let mut fields = vec![
         ("total_jobs".into(), JsonValue::usize(r.total_jobs)),
         ("total_tests".into(), JsonValue::usize(r.total_tests)),
         ("total_mismatches".into(), JsonValue::usize(r.total_mismatches)),
@@ -694,7 +712,17 @@ pub fn report_to_json(r: &CampaignReport) -> JsonValue {
                     .collect(),
             ),
         ),
-    ])
+    ];
+    // emitted only for degraded runs: a complete report encodes exactly
+    // as a pre-quarantine producer's would (byte-compat both directions)
+    if r.incomplete > 0 || !r.quarantined.is_empty() {
+        fields.push(("incomplete".into(), JsonValue::usize(r.incomplete)));
+        fields.push((
+            "quarantined".into(),
+            JsonValue::Arr(r.quarantined.iter().map(quarantined_to_json).collect()),
+        ));
+    }
+    JsonValue::Obj(fields)
 }
 
 pub fn report_from_json(v: &JsonValue) -> Result<CampaignReport, ApiError> {
@@ -704,6 +732,22 @@ pub fn report_from_json(v: &JsonValue) -> Result<CampaignReport, ApiError> {
         total_mismatches: usize_field(v, "total_mismatches")?,
         wall_micros: u64_field(v, "wall_micros")?,
         pairs: Default::default(),
+        // absent (a complete report, or a pre-quarantine producer)
+        // decodes as "nothing incomplete"
+        incomplete: match v.get("incomplete") {
+            None | Some(JsonValue::Null) => 0,
+            Some(n) => n
+                .as_u64()
+                .ok_or_else(|| semantic("'incomplete' must be a u64 integer"))?
+                as usize,
+        },
+        quarantined: match v.get("quarantined") {
+            None | Some(JsonValue::Null) => Vec::new(),
+            Some(JsonValue::Arr(items)) => {
+                items.iter().map(quarantined_from_json).collect::<Result<Vec<_>, _>>()?
+            }
+            Some(_) => return Err(semantic("'quarantined' must be an array")),
+        },
     };
     match field(v, "pairs")? {
         JsonValue::Obj(pairs) => {
@@ -881,6 +925,34 @@ mod tests {
         report.wall_micros = 777;
         let decoded = decode_report(&encode_report(&report)).unwrap();
         assert_eq!(decoded, report);
+    }
+
+    #[test]
+    fn quarantine_codec_round_trips_and_stays_back_compatible() {
+        // a complete report omits the quarantine fields entirely, so its
+        // encoding is byte-identical to a pre-quarantine producer's…
+        let complete = CampaignReport::new();
+        let line = encode_report(&complete);
+        assert!(!line.contains("quarantined") && !line.contains("incomplete"), "{line}");
+        // …and a pre-quarantine summary (no such fields) still decodes
+        let legacy = r#"{"total_jobs":2,"total_tests":20,"total_mismatches":0,
+            "wall_micros":5,"pairs":{}}"#
+            .replace('\n', "");
+        let decoded = decode_report(&legacy).unwrap();
+        assert_eq!(decoded.incomplete, 0);
+        assert!(decoded.quarantined.is_empty());
+
+        // a degraded report round-trips its quarantine records exactly
+        let mut partial = CampaignReport::new();
+        partial.incomplete = 1;
+        partial.quarantined = vec![QuarantinedJob {
+            id: 4,
+            pair: "sm90 HGMMA".into(),
+            kills: 3,
+            reason: "felled 3 workers (last: worker 2: hung)".into(),
+        }];
+        let decoded = decode_report(&encode_report(&partial)).unwrap();
+        assert_eq!(decoded, partial);
     }
 
     #[test]

@@ -26,13 +26,21 @@
 //! [`WorkerTransport`], scatters verification jobs or GEMM row bands over
 //! their stdins, and merges the reply lines back deterministically
 //! ([`Session::shard_campaign`], [`Session::shard_gemm`]).
+//!
+//! The seam is hardened against misbehaving workers — reply deadlines,
+//! respawn backoff, poisoned-job quarantine — and [`faults`] provides the
+//! deterministic chaos layer ([`ChaosTransport`], seeded [`ChaosPlan`]s)
+//! that proves the hardening under reproducible crash/hang/garbage
+//! schedules.
 
+pub mod faults;
 pub mod json;
 pub mod serve;
 pub mod shard;
 
 pub use crate::error::ApiError;
-pub use serve::{serve_cases, serve_jsonl, ServeConfig};
+pub use faults::{ChaosPlan, ChaosTransport, ChaosWriter, Fault, FaultPlan};
+pub use serve::{serve_cases, serve_cases_capped, serve_jsonl, ServeConfig};
 pub use shard::{shard_campaign, ProcessTransport, ShardConfig, ShardPool, WorkerTransport};
 
 use std::sync::{Arc, Mutex};

@@ -37,17 +37,26 @@ use crate::coordinator::{CampaignReport, Coordinator, JobOutcome, VerifyPair};
 use crate::session::json::{self, JsonValue};
 use crate::util::error::Result;
 
+/// Default cap on a single input frame: 64 MiB comfortably holds the
+/// largest legitimate frame (a `set_b` matrix for a big GEMM) while
+/// bounding what a garbage peer can make the service buffer.
+pub const DEFAULT_MAX_LINE_BYTES: usize = 64 << 20;
+
 /// Pool sizing for the serve loop.
 #[derive(Clone, Copy, Debug)]
 pub struct ServeConfig {
     pub workers: usize,
     /// Submission-queue depth (backpressure bound); 0 = `workers * 2`.
     pub queue_depth: usize,
+    /// Cap on a single input line; 0 = [`DEFAULT_MAX_LINE_BYTES`]. An
+    /// over-long line is consumed and answered with a structured error
+    /// frame instead of being buffered without bound.
+    pub max_line_bytes: usize,
 }
 
 impl Default for ServeConfig {
     fn default() -> Self {
-        Self { workers: 4, queue_depth: 0 }
+        Self { workers: 4, queue_depth: 0, max_line_bytes: 0 }
     }
 }
 
@@ -60,6 +69,67 @@ impl ServeConfig {
         let workers = self.workers.max(1);
         let queue = if self.queue_depth > 0 { self.queue_depth } else { workers * 2 };
         (workers, queue)
+    }
+
+    /// The effective input-frame cap in bytes.
+    pub fn resolved_line_cap(&self) -> usize {
+        if self.max_line_bytes > 0 {
+            self.max_line_bytes
+        } else {
+            DEFAULT_MAX_LINE_BYTES
+        }
+    }
+}
+
+/// One bounded read off the input stream.
+enum BoundedLine {
+    /// A complete line within the cap (terminator stripped, lossy UTF-8).
+    Line(String),
+    /// A line that exceeded `limit` bytes; the whole oversized line has
+    /// been consumed and discarded, so the stream stays frame-aligned.
+    Oversized { limit: usize },
+}
+
+/// Read one newline-terminated line, buffering at most `cap` bytes of it.
+/// `input.lines()` would buffer an arbitrarily long line in full before
+/// returning — a single garbage frame without a newline could then OOM a
+/// long-running service — so this reads via `fill_buf`/`consume` and, once
+/// the cap is crossed, keeps consuming (without storing) to the newline or
+/// end of input. Returns `Ok(None)` on end of input.
+fn read_bounded_line(input: &mut impl BufRead, cap: usize) -> std::io::Result<Option<BoundedLine>> {
+    let mut buf: Vec<u8> = Vec::new();
+    let mut oversized = false;
+    loop {
+        let chunk = input.fill_buf()?;
+        if chunk.is_empty() {
+            // end of input: flush whatever the last (unterminated) line held
+            return Ok(match (buf.is_empty(), oversized) {
+                (true, false) => None,
+                (_, true) => Some(BoundedLine::Oversized { limit: cap }),
+                (false, false) => Some(BoundedLine::Line(String::from_utf8_lossy(&buf).into())),
+            });
+        }
+        let newline = chunk.iter().position(|&b| b == b'\n');
+        let take = newline.map(|i| i + 1).unwrap_or(chunk.len());
+        if !oversized {
+            let keep = newline.unwrap_or(take);
+            if buf.len() + keep > cap {
+                oversized = true;
+                buf.clear();
+            } else {
+                buf.extend_from_slice(&chunk[..keep]);
+            }
+        }
+        input.consume(take);
+        if newline.is_some() {
+            if oversized {
+                return Ok(Some(BoundedLine::Oversized { limit: cap }));
+            }
+            if buf.last() == Some(&b'\r') {
+                buf.pop();
+            }
+            return Ok(Some(BoundedLine::Line(String::from_utf8_lossy(&buf).into())));
+        }
     }
 }
 
@@ -104,13 +174,24 @@ fn serve_loop(
     coord: &Coordinator,
     known: &BTreeSet<String>,
     in_flight_cap: usize,
-    input: impl BufRead,
+    line_cap: usize,
+    mut input: impl BufRead,
     out: &mut dyn Write,
     st: &mut ServeProgress,
 ) -> Result<()> {
     let mut next_id = 0u64;
-    for line in input.lines() {
-        let line = line?;
+    while let Some(bounded) = read_bounded_line(&mut input, line_cap)? {
+        let line = match bounded {
+            BoundedLine::Line(line) => line,
+            BoundedLine::Oversized { limit } => {
+                emit_error(
+                    out,
+                    &format!("input line exceeds the {limit}-byte frame cap; dropped"),
+                    None,
+                )?;
+                continue;
+            }
+        };
         let trimmed = line.trim();
         if trimmed.is_empty() {
             continue;
@@ -167,7 +248,7 @@ pub fn serve_jsonl(
 
     let started = std::time::Instant::now();
     let mut st = ServeProgress { report: CampaignReport::new(), submitted: 0, collected: 0 };
-    let res = serve_loop(&coord, &known, queue, input, out, &mut st);
+    let res = serve_loop(&coord, &known, queue, cfg.resolved_line_cap(), input, out, &mut st);
     if res.is_err() {
         // The loop bailed (dead input, broken sink, dead pool). In-flight
         // jobs must still be collected — dropping the coordinator with
@@ -226,9 +307,32 @@ pub fn serve_cases(
     input: impl BufRead,
     out: &mut dyn Write,
 ) -> Result<()> {
+    serve_cases_capped(session, input, out, DEFAULT_MAX_LINE_BYTES)
+}
+
+/// [`serve_cases`] with an explicit input-frame cap (0 = the default cap).
+/// An over-long frame is consumed, answered with a structured error line,
+/// and the loop keeps serving — the stream stays frame-aligned.
+pub fn serve_cases_capped(
+    session: &crate::session::Session,
+    mut input: impl BufRead,
+    out: &mut dyn Write,
+    max_line_bytes: usize,
+) -> Result<()> {
+    let cap = if max_line_bytes > 0 { max_line_bytes } else { DEFAULT_MAX_LINE_BYTES };
     let mut b_shared: Option<crate::interface::BitMatrix> = None;
-    for line in input.lines() {
-        let line = line?;
+    while let Some(bounded) = read_bounded_line(&mut input, cap)? {
+        let line = match bounded {
+            BoundedLine::Line(line) => line,
+            BoundedLine::Oversized { limit } => {
+                emit_case_error(
+                    out,
+                    &format!("input line exceeds the {limit}-byte frame cap; dropped"),
+                    None,
+                )?;
+                continue;
+            }
+        };
         let trimmed = line.trim();
         if trimmed.is_empty() {
             continue;
@@ -318,7 +422,7 @@ mod tests {
             {\"pair\":\"faulty\",\"batch\":60,\"seed\":2}\n\
             {\"pair\":\"clean\",\"batch\":40,\"seed\":3}\n";
         let mut out = Vec::new();
-        let cfg = ServeConfig { workers: 2, queue_depth: 0 };
+        let cfg = ServeConfig { workers: 2, ..ServeConfig::default() };
         let report = serve_jsonl(pairs(), &cfg, input.as_bytes(), &mut out).unwrap();
         assert_eq!(report.total_jobs, 3);
         assert_eq!(report.total_tests, 140);
@@ -351,7 +455,7 @@ mod tests {
             {\"pair\":\"nope\",\"batch\":5,\"seed\":0}\n\
             {\"pair\":\"clean\",\"batch\":10,\"seed\":4}\n";
         let mut out = Vec::new();
-        let cfg = ServeConfig { workers: 1, queue_depth: 0 };
+        let cfg = ServeConfig { workers: 1, ..ServeConfig::default() };
         let report = serve_jsonl(pairs(), &cfg, input.as_bytes(), &mut out).unwrap();
         assert_eq!(report.total_jobs, 1, "only the valid job ran");
         let text = String::from_utf8(out).unwrap();
@@ -372,10 +476,11 @@ mod tests {
     fn queue_depth_overrides_the_in_flight_cap() {
         // the resolved queue depth is the in-flight bound: configured
         // depth wins, 0 falls back to workers * 2, workers floor at 1
-        assert_eq!(ServeConfig { workers: 4, queue_depth: 0 }.resolved(), (4, 8));
-        assert_eq!(ServeConfig { workers: 4, queue_depth: 3 }.resolved(), (4, 3));
-        assert_eq!(ServeConfig { workers: 2, queue_depth: 9 }.resolved(), (2, 9));
-        assert_eq!(ServeConfig { workers: 0, queue_depth: 0 }.resolved(), (1, 2));
+        let cfg = |workers, queue_depth| ServeConfig { workers, queue_depth, max_line_bytes: 0 };
+        assert_eq!(cfg(4, 0).resolved(), (4, 8));
+        assert_eq!(cfg(4, 3).resolved(), (4, 3));
+        assert_eq!(cfg(2, 9).resolved(), (2, 9));
+        assert_eq!(cfg(0, 0).resolved(), (1, 2));
 
         // behavioral: a depth-1 config fully serializes (at most one job
         // in flight) yet still completes every job
@@ -383,7 +488,7 @@ mod tests {
             .map(|i| format!("{{\"pair\":\"clean\",\"batch\":10,\"seed\":{i}}}\n"))
             .collect::<String>();
         let mut out = Vec::new();
-        let cfg = ServeConfig { workers: 2, queue_depth: 1 };
+        let cfg = ServeConfig { workers: 2, queue_depth: 1, ..ServeConfig::default() };
         let report = serve_jsonl(pairs(), &cfg, input.as_bytes(), &mut out).unwrap();
         assert_eq!(report.total_jobs, 6);
         assert_eq!(report.total_tests, 60);
@@ -420,8 +525,78 @@ mod tests {
             .map(|i| format!("{{\"pair\":\"clean\",\"batch\":10,\"seed\":{i}}}\n"))
             .collect::<String>();
         let mut out = FailingWriter { lines_ok: 1, lines: 0 };
-        let cfg = ServeConfig { workers: 2, queue_depth: 0 };
+        let cfg = ServeConfig { workers: 2, ..ServeConfig::default() };
         let err = serve_jsonl(pairs(), &cfg, input.as_bytes(), &mut out).unwrap_err();
         assert!(err.to_string().contains("sink full"), "{err}");
+    }
+
+    #[test]
+    fn bounded_reader_splits_caps_and_flushes_the_tail() {
+        // ordinary lines within the cap round-trip, including the
+        // unterminated tail and CRLF endings
+        let mut input = "one\r\ntwo\nlast".as_bytes();
+        let mut lines = Vec::new();
+        while let Some(l) = read_bounded_line(&mut input, 64).unwrap() {
+            match l {
+                BoundedLine::Line(s) => lines.push(s),
+                BoundedLine::Oversized { .. } => panic!("nothing here exceeds the cap"),
+            }
+        }
+        assert_eq!(lines, ["one", "two", "last"]);
+
+        // an oversized line is consumed to its newline (stream stays
+        // aligned: the following short line still arrives intact), and an
+        // oversized unterminated tail is reported too
+        let long = "x".repeat(100);
+        let stream = format!("{long}\nshort\n{long}");
+        let mut input = stream.as_bytes();
+        let mut got = Vec::new();
+        while let Some(l) = read_bounded_line(&mut input, 16).unwrap() {
+            got.push(match l {
+                BoundedLine::Line(s) => s,
+                BoundedLine::Oversized { limit } => format!("<oversized:{limit}>"),
+            });
+        }
+        assert_eq!(got, ["<oversized:16>", "short", "<oversized:16>"]);
+    }
+
+    #[test]
+    fn oversized_jsonl_line_gets_a_structured_error_and_serving_continues() {
+        let long_junk = "z".repeat(4096);
+        let input = format!("{long_junk}\n{{\"pair\":\"clean\",\"batch\":10,\"seed\":1}}\n");
+        let mut out = Vec::new();
+        let cfg = ServeConfig { workers: 1, queue_depth: 0, max_line_bytes: 256 };
+        let report = serve_jsonl(pairs(), &cfg, input.as_bytes(), &mut out).unwrap();
+        assert_eq!(report.total_jobs, 1, "the valid job after the junk still ran");
+
+        let text = String::from_utf8(out).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 3, "error + outcome + summary: {text}");
+        let err = JsonValue::parse(lines[0]).unwrap();
+        assert_eq!(err.get("ok").and_then(|b| b.as_bool()), Some(false));
+        let msg = err.get("error").and_then(|e| e.as_str()).unwrap_or_default();
+        assert!(msg.contains("256-byte frame cap"), "{msg}");
+    }
+
+    #[test]
+    fn oversized_case_frame_gets_a_structured_error_and_serving_continues() {
+        let session = crate::session::SessionBuilder::new()
+            .arch(crate::isa::Arch::Hopper)
+            .instruction("HGMMA.64x8x16.F32.F16")
+            .build()
+            .unwrap();
+        let long_junk = "y".repeat(4096);
+        // after the junk, a malformed-but-small frame still gets its own
+        // structured reply — proof the stream stayed frame-aligned
+        let input = format!("{long_junk}\n{{\"nonsense\":true}}\n");
+        let mut out = Vec::new();
+        serve_cases_capped(&session, input.as_bytes(), &mut out, 128).unwrap();
+        let text = String::from_utf8(out).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2, "{text}");
+        let first = JsonValue::parse(lines[0]).unwrap();
+        let msg = first.get("error").and_then(|e| e.as_str()).unwrap_or_default();
+        assert!(msg.contains("128-byte frame cap"), "{msg}");
+        assert!(JsonValue::parse(lines[1]).unwrap().get("error").is_some());
     }
 }

@@ -30,17 +30,46 @@
 //! onto surviving workers (or a respawned replacement, with the prelude
 //! frames replayed), and every exit path — including errors — kills,
 //! joins, and reaps all children and reader threads.
+//!
+//! The pool is also hardened against the *unclean* failures:
+//!
+//! - a per-child reply deadline ([`ShardConfig::job_timeout_ms`]) arms a
+//!   watchdog that retires hung-but-alive children — kill, requeue,
+//!   respawn — instead of blocking on the reply channel forever;
+//! - respawns back off on a deterministic (jitter-free) exponential
+//!   schedule ([`ShardConfig::respawn_base_ms`]) under an explicit spawn
+//!   budget ([`ShardConfig::max_spawns`]);
+//! - a poisoned job — one in flight on [`ShardConfig::max_worker_kills`]
+//!   distinct workers at the moment they died or were retired — is
+//!   quarantined: resolved as an explicit ordered error line and recorded
+//!   in the report's `quarantined`/`incomplete` section, so the run
+//!   degrades to a partial-but-explicit report instead of burning the
+//!   spawn budget and aborting (a poisoned GEMM band instead aborts with
+//!   an explicit error: a partial output matrix would be silently wrong);
+//! - child stderr is captured into a bounded tail ring per worker and
+//!   surfaced in retirement messages, quarantine reasons, and
+//!   budget-exhaustion errors.
+//!
+//! Every one of those paths is exercised deterministically by the chaos
+//! layer ([`faults`](crate::session::faults)): wrap any transport in a
+//! [`ChaosTransport`](crate::session::faults::ChaosTransport) or pass
+//! `--chaos` to the CLI, and crashes, hangs, garbage frames, truncated
+//! frames, and delays fire on a seeded, reproducible schedule.
 
 use std::collections::{BTreeMap, BTreeSet, VecDeque};
 use std::io::{BufRead, BufReader, Read, Write};
-use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
 
-use crate::coordinator::{CampaignReport, Job, JobOutcome};
+use crate::coordinator::{CampaignReport, Job, JobOutcome, QuarantinedJob};
 use crate::error::ApiError;
 use crate::formats::Format;
 use crate::gemm;
 use crate::interface::BitMatrix;
+use crate::session::faults::ChaosPlan;
 use crate::session::json::{self, JsonValue};
 
 // ---------------------------------------------------------------------------
@@ -89,6 +118,10 @@ pub enum WorkerRole {
 pub struct WorkerIo {
     pub input: Box<dyn Write + Send>,
     pub output: Box<dyn Read + Send>,
+    /// The worker's stderr, when the transport captures it: the pool
+    /// drains it into a bounded tail ring and quotes the last lines in
+    /// failure details. `None` for transports without a stderr channel.
+    pub stderr: Option<Box<dyn Read + Send>>,
     pub handle: Box<dyn WorkerHandle>,
 }
 
@@ -109,10 +142,17 @@ pub trait WorkerTransport {
 }
 
 /// The default transport: one local `mma-sim` child process per worker,
-/// wired over stdin/stdout pipes (stderr is discarded).
+/// wired over stdin/stdout pipes. Stderr is piped too, so the pool can
+/// keep a tail of what a dying child printed and quote it in failure
+/// details instead of discarding the only evidence.
 pub struct ProcessTransport {
     /// Path to the `mma-sim` binary.
     pub binary: std::path::PathBuf,
+    /// Fault schedule forwarded to children as `--chaos` (chaos drills
+    /// and the differential test suites; `None` in production).
+    chaos: Option<ChaosPlan>,
+    /// Launch counter — indexes the chaos plan across respawns.
+    launches: AtomicUsize,
 }
 
 impl ProcessTransport {
@@ -122,17 +162,26 @@ impl ProcessTransport {
         let binary = std::env::current_exe().map_err(|e| ApiError::Shard {
             detail: format!("cannot locate the running mma-sim binary: {e}"),
         })?;
-        Ok(Self { binary })
+        Ok(Self::with_binary(binary))
     }
 
     pub fn with_binary(binary: impl Into<std::path::PathBuf>) -> Self {
-        Self { binary: binary.into() }
+        Self { binary: binary.into(), chaos: None, launches: AtomicUsize::new(0) }
+    }
+
+    /// Inject the given fault schedule into launched children: launch
+    /// *i* (respawns keep counting) runs with `--chaos <plan-for-i>`, so
+    /// real-process faults fire on a reproducible schedule.
+    pub fn with_chaos(mut self, plan: ChaosPlan) -> Self {
+        self.chaos = Some(plan);
+        self
     }
 }
 
 impl WorkerTransport for ProcessTransport {
     fn launch(&self, role: &WorkerRole) -> Result<WorkerIo, ApiError> {
         use std::process::{Command, Stdio};
+        let launch_idx = self.launches.fetch_add(1, Ordering::SeqCst);
         let mut cmd = Command::new(&self.binary);
         match role {
             WorkerRole::Campaign { workers } => {
@@ -144,19 +193,30 @@ impl WorkerTransport for ProcessTransport {
                 cmd.arg(arch).arg("--instr").arg(instr);
             }
         }
+        if let Some(plan) = &self.chaos {
+            let spec = plan.for_launch(launch_idx).to_spec();
+            if !spec.is_empty() {
+                cmd.arg("--chaos").arg(spec);
+            }
+        }
         let mut child = cmd
             .stdin(Stdio::piped())
             .stdout(Stdio::piped())
-            .stderr(Stdio::null())
+            .stderr(Stdio::piped())
             .spawn()
             .map_err(|e| ApiError::Shard {
                 detail: format!("spawn {}: {e}", self.binary.display()),
             })?;
         let input = child.stdin.take().expect("piped child stdin");
         let output = child.stdout.take().expect("piped child stdout");
+        let stderr = child
+            .stderr
+            .take()
+            .map(|s| Box::new(s) as Box<dyn Read + Send>);
         Ok(WorkerIo {
             input: Box::new(input),
             output: Box::new(output),
+            stderr,
             handle: Box::new(ProcessHandle { child }),
         })
     }
@@ -195,11 +255,41 @@ pub struct ShardConfig {
     /// summary, making the output byte-identical across shard counts and
     /// runs (timing is the protocol's only nondeterministic content).
     pub deterministic: bool,
+    /// Per-child reply deadline in milliseconds: a child that owes
+    /// replies and has been silent this long is presumed hung and is
+    /// retired (killed, its work requeued, a replacement spawned).
+    /// 0 disables the watchdog — the pool blocks on the reply channel
+    /// indefinitely, the pre-hardening behavior.
+    pub job_timeout_ms: u64,
+    /// Quarantine threshold: a job in flight on this many distinct
+    /// workers at the moment they died or were retired is presumed
+    /// poisoned. Campaign jobs are quarantined (an explicit ordered
+    /// error line plus a `quarantined` record in the merged report);
+    /// a poisoned GEMM band aborts the run, since a partial output
+    /// matrix would be silently wrong. 0 disables quarantine.
+    pub max_worker_kills: usize,
+    /// Base of the deterministic exponential respawn backoff: the n-th
+    /// respawn of a run sleeps `respawn_base_ms << (n-1)` milliseconds
+    /// (the first is immediate), capped at 1 s. Jitter-free, so runs
+    /// are reproducible. 0 disables the backoff.
+    pub respawn_base_ms: u64,
+    /// Total child launches allowed in one run (initial fill plus
+    /// respawns); 0 = auto (`workers * 3 + 2`).
+    pub max_spawns: usize,
 }
 
 impl Default for ShardConfig {
     fn default() -> Self {
-        Self { workers: 2, inflight: 0, child_workers: 2, deterministic: false }
+        Self {
+            workers: 2,
+            inflight: 0,
+            child_workers: 2,
+            deterministic: false,
+            job_timeout_ms: 0,
+            max_worker_kills: 3,
+            respawn_base_ms: 25,
+            max_spawns: 0,
+        }
     }
 }
 
@@ -268,6 +358,35 @@ fn io_err(what: &str, e: std::io::Error) -> ApiError {
     ApiError::Shard { detail: format!("{what}: {e}") }
 }
 
+/// Bytes of child stderr kept per worker — a tail ring: enough for the
+/// last few error lines, never growing with a chatty child.
+const STDERR_RING_BYTES: usize = 4096;
+
+/// Ceiling of the deterministic respawn backoff schedule.
+const MAX_RESPAWN_DELAY: Duration = Duration::from_secs(1);
+
+/// The drained tail of one child's stderr plus the thread draining it.
+struct StderrTail {
+    ring: Arc<Mutex<VecDeque<u8>>>,
+    thread: Option<JoinHandle<()>>,
+}
+
+fn stderr_drain_loop(mut src: Box<dyn Read + Send>, ring: Arc<Mutex<VecDeque<u8>>>) {
+    let mut buf = [0u8; 1024];
+    loop {
+        match src.read(&mut buf) {
+            Ok(0) | Err(_) => return,
+            Ok(n) => {
+                let mut r = ring.lock().unwrap();
+                r.extend(buf[..n].iter().copied());
+                while r.len() > STDERR_RING_BYTES {
+                    r.pop_front();
+                }
+            }
+        }
+    }
+}
+
 struct ChildSlot {
     /// `None` once the parent closed the child's stdin.
     input: Option<Box<dyn Write + Send>>,
@@ -284,6 +403,13 @@ struct ChildSlot {
     /// Outcomes absorbed as they arrived — the merge fallback for a child
     /// that died before producing a summary.
     local: CampaignReport,
+    /// Instant of the child's last observed activity (a submit to it or
+    /// any reply line from it). The watchdog retires a child whose
+    /// activity clock is older than the job timeout *while it owes
+    /// replies* — the deadline measures silence, not job latency.
+    busy_since: Option<Instant>,
+    /// Tail of the child's stderr, when the transport captures it.
+    stderr: Option<StderrTail>,
 }
 
 /// The parent side of process-level sharding. Construct with
@@ -307,6 +433,23 @@ pub struct ShardPool<'t> {
     prelude: Vec<String>,
     /// Round-robin cursor over children.
     rr: usize,
+    /// Per-child reply deadline; `None` = block forever (watchdog off).
+    job_timeout: Option<Duration>,
+    /// Quarantine threshold (0 = never quarantine).
+    max_worker_kills: usize,
+    /// Base of the deterministic exponential respawn backoff.
+    respawn_base: Duration,
+    /// Respawns performed so far — the backoff exponent; never resets
+    /// within a run, so a crash-looping target is retried ever slower.
+    respawns: u32,
+    /// How many workers each request id has felled (was in flight on at
+    /// the moment the worker died or was retired).
+    kills: BTreeMap<u64, usize>,
+    /// Campaign jobs quarantined this run, for the merged report.
+    quarantined: Vec<QuarantinedJob>,
+    /// The most recent worker-failure description (with stderr tail),
+    /// quoted in quarantine records and budget-exhaustion errors.
+    last_failure: Option<String>,
 }
 
 impl<'t> ShardPool<'t> {
@@ -331,12 +474,23 @@ impl<'t> ShardPool<'t> {
             role,
             cap,
             deterministic: cfg.deterministic,
-            max_children: workers * 3 + 2,
+            max_children: if cfg.max_spawns > 0 { cfg.max_spawns } else { workers * 3 + 2 },
             children: Vec::new(),
             tx,
             rx,
             prelude: Vec::new(),
             rr: 0,
+            job_timeout: if cfg.job_timeout_ms > 0 {
+                Some(Duration::from_millis(cfg.job_timeout_ms))
+            } else {
+                None
+            },
+            max_worker_kills: cfg.max_worker_kills,
+            respawn_base: Duration::from_millis(cfg.respawn_base_ms),
+            respawns: 0,
+            kills: BTreeMap::new(),
+            quarantined: Vec::new(),
+            last_failure: None,
         };
         for _ in 0..workers {
             pool.spawn_child()?;
@@ -348,9 +502,12 @@ impl<'t> ShardPool<'t> {
     /// child), replaying the prelude frames to it.
     fn spawn_child(&mut self) -> Result<usize, ApiError> {
         if self.children.len() >= self.max_children {
+            let last =
+                self.last_failure.clone().unwrap_or_else(|| "no worker failure recorded".into());
             return Err(ApiError::Shard {
                 detail: format!(
-                    "shard workers keep dying: respawn budget exhausted after {} launches",
+                    "shard workers keep dying: respawn budget exhausted after {} launches \
+                     (last failure: {last})",
                     self.children.len()
                 ),
             });
@@ -369,6 +526,17 @@ impl<'t> ShardPool<'t> {
                 return Err(ApiError::Shard { detail: format!("spawn reader thread: {e}") });
             }
         };
+        let stderr = io.stderr.map(|src| {
+            let ring = Arc::new(Mutex::new(VecDeque::new()));
+            let drain = {
+                let ring = ring.clone();
+                std::thread::Builder::new()
+                    .name(format!("mma-shard-stderr-{idx}"))
+                    .spawn(move || stderr_drain_loop(src, ring))
+                    .ok()
+            };
+            StderrTail { ring, thread: drain }
+        });
         self.children.push(ChildSlot {
             input: Some(io.input),
             handle: io.handle,
@@ -378,6 +546,8 @@ impl<'t> ShardPool<'t> {
             dead: false,
             summary: None,
             local: CampaignReport::new(),
+            busy_since: None,
+            stderr,
         });
         let prelude = std::mem::take(&mut self.prelude);
         let mut res = Ok(idx);
@@ -416,18 +586,27 @@ impl<'t> ShardPool<'t> {
     }
 
     fn write_line(&mut self, shard: usize, line: &str) -> std::io::Result<()> {
-        let input = self.children[shard].input.as_mut().expect("write to an open child");
+        // a closed pipe is an ordinary dead-child failure, not a bug:
+        // callers route the error through the retire/requeue path
+        let Some(input) = self.children[shard].input.as_mut() else {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::BrokenPipe,
+                "worker input already closed",
+            ));
+        };
         writeln!(input, "{line}")?;
         input.flush()
     }
 
-    /// The child is gone (dead pipe, premature EOF, protocol violation):
-    /// close its pipe, make sure the process is dead, and hand back every
-    /// request id it still owed so the caller can requeue them.
+    /// The child is gone (dead pipe, premature EOF, protocol violation,
+    /// blown deadline): close its pipe, make sure the process is dead,
+    /// and hand back every request id it still owed so the caller can
+    /// settle them (requeue or quarantine).
     fn retire(&mut self, shard: usize) -> Vec<u64> {
         let c = &mut self.children[shard];
         c.input = None;
         c.dead = true;
+        c.busy_since = None;
         c.handle.kill();
         // A retired child's summary (already received, or still buffered
         // in its pipe) covers jobs that are being requeued elsewhere;
@@ -435,6 +614,101 @@ impl<'t> ShardPool<'t> {
         // the outcomes the parent actually accepted — is the truth.
         c.summary = None;
         std::mem::take(&mut c.inflight).into_iter().collect()
+    }
+
+    /// The captured stderr tail of one child, if the transport pipes it:
+    /// the last few non-empty lines, joined for quoting in a failure
+    /// detail.
+    fn stderr_tail(&self, shard: usize) -> Option<String> {
+        let tail = self.children[shard].stderr.as_ref()?;
+        let bytes: Vec<u8> = tail.ring.lock().unwrap().iter().copied().collect();
+        let text = String::from_utf8_lossy(&bytes);
+        let lines: Vec<&str> = text.lines().filter(|l| !l.trim().is_empty()).collect();
+        if lines.is_empty() {
+            return None;
+        }
+        Some(lines[lines.len().saturating_sub(4)..].join(" | "))
+    }
+
+    /// Describe a worker failure (quoting its stderr tail when one was
+    /// captured), remember it as the run's most recent failure, and
+    /// return it for logging.
+    fn failure_note(&mut self, shard: usize, why: &str) -> String {
+        let note = match self.stderr_tail(shard) {
+            Some(tail) => format!("worker {shard}: {why} [stderr: {tail}]"),
+            None => format!("worker {shard}: {why}"),
+        };
+        self.last_failure = Some(note.clone());
+        note
+    }
+
+    /// Re-arm the watchdog clock for `shard`: called on every submit to
+    /// it and every reply line from it — any protocol activity proves
+    /// liveness, so the deadline measures *silence while owing replies*.
+    fn touch(&mut self, shard: usize) {
+        if !self.children[shard].dead {
+            self.children[shard].busy_since = Some(Instant::now());
+        }
+    }
+
+    /// Children that owe replies and have been silent past the deadline —
+    /// hung, as far as the protocol can observe.
+    fn hung_children(&self) -> Vec<usize> {
+        let Some(timeout) = self.job_timeout else { return Vec::new() };
+        let now = Instant::now();
+        self.children
+            .iter()
+            .enumerate()
+            .filter(|(_, c)| {
+                !c.dead
+                    && !c.inflight.is_empty()
+                    && c.busy_since.is_some_and(|s| now.duration_since(s) >= timeout)
+            })
+            .map(|(idx, _)| idx)
+            .collect()
+    }
+
+    /// The next merged reply, or `None` on a watchdog tick (some child
+    /// may have blown its reply deadline — the caller sweeps
+    /// [`hung_children`](Self::hung_children)). Blocks indefinitely when
+    /// no job timeout is configured.
+    fn next_reply(&mut self) -> Result<Option<(usize, Reply)>, ApiError> {
+        let closed = || ApiError::Shard { detail: "reply channel closed".into() };
+        let Some(timeout) = self.job_timeout else {
+            return self.rx.recv().map(Some).map_err(|_| closed());
+        };
+        // wake at the earliest deadline among children owing replies (a
+        // full period from now when nothing is in flight)
+        let now = Instant::now();
+        let wait = self
+            .children
+            .iter()
+            .filter(|c| !c.dead && !c.inflight.is_empty())
+            .filter_map(|c| c.busy_since)
+            .map(|s| (s + timeout).saturating_duration_since(now))
+            .min()
+            .unwrap_or(timeout)
+            .max(Duration::from_millis(1));
+        match self.rx.recv_timeout(wait) {
+            Ok(m) => Ok(Some(m)),
+            Err(RecvTimeoutError::Timeout) => Ok(None),
+            Err(RecvTimeoutError::Disconnected) => Err(closed()),
+        }
+    }
+
+    /// Spawn a replacement worker after the deterministic backoff delay:
+    /// the n-th respawn of a run sleeps `respawn_base << (n-1)` (capped
+    /// at [`MAX_RESPAWN_DELAY`]), so a crash-looping target is retried
+    /// ever more patiently — identically on every run — until the spawn
+    /// budget ends it.
+    fn respawn_with_backoff(&mut self) -> Result<usize, ApiError> {
+        if self.respawns > 0 && !self.respawn_base.is_zero() {
+            let shift = (self.respawns - 1).min(16);
+            let delay = self.respawn_base.saturating_mul(1u32 << shift).min(MAX_RESPAWN_DELAY);
+            std::thread::sleep(delay);
+        }
+        self.respawns += 1;
+        self.spawn_child()
     }
 
     /// Close every input, wait for the remaining EOFs, join the reader
@@ -448,21 +722,113 @@ impl<'t> ShardPool<'t> {
             c.input = None;
         }
         while self.children.iter().any(|c| !c.eof) {
-            let (shard, reply) = match self.rx.recv() {
-                Ok(m) => m,
-                Err(_) => break, // unreachable: the pool holds a sender
+            let msg = match self.job_timeout {
+                None => match self.rx.recv() {
+                    Ok(m) => Some(m),
+                    Err(_) => break, // unreachable: the pool holds a sender
+                },
+                Some(timeout) => match self.rx.recv_timeout(timeout) {
+                    Ok(m) => Some(m),
+                    Err(RecvTimeoutError::Timeout) => None,
+                    Err(RecvTimeoutError::Disconnected) => break,
+                },
             };
-            let slot = &mut self.children[shard];
-            match reply {
-                Reply::Eof => slot.eof = true,
-                other => on_reply(slot, other),
+            match msg {
+                Some((shard, reply)) => {
+                    let slot = &mut self.children[shard];
+                    match reply {
+                        Reply::Eof => slot.eof = true,
+                        other => on_reply(slot, other),
+                    }
+                }
+                None => {
+                    // a child is hung in its shutdown path (e.g. stalled
+                    // before its summary frame): kill the stragglers so
+                    // their EOFs arrive and the drain can finish
+                    for idx in 0..self.children.len() {
+                        if !self.children[idx].eof {
+                            let note = self.failure_note(idx, "hung at shutdown; killed");
+                            eprintln!("shard: {note}");
+                            let _ = self.retire(idx);
+                        }
+                    }
+                }
             }
         }
         for c in &mut self.children {
             if let Some(r) = c.reader.take() {
                 let _ = r.join();
             }
+            if let Some(t) = c.stderr.as_mut().and_then(|s| s.thread.take()) {
+                let _ = t.join();
+            }
             c.handle.wait();
+        }
+        Ok(())
+    }
+
+    /// Settle the campaign jobs a retired worker still owed: requeue
+    /// each — unless it has now felled [`max_worker_kills`] distinct
+    /// workers, in which case it is presumed poisoned and quarantined:
+    /// resolved as an explicit ordered error line and recorded for the
+    /// report's `quarantined` section instead of being fed to the next
+    /// worker forever.
+    ///
+    /// [`max_worker_kills`]: ShardConfig::max_worker_kills
+    fn settle_lost_jobs(
+        &mut self,
+        ids: Vec<u64>,
+        queue: &mut VecDeque<Job>,
+        assigned: &mut BTreeMap<u64, Job>,
+        ready: &mut BTreeMap<u64, String>,
+        remaining: &mut BTreeSet<u64>,
+        out: &mut dyn Write,
+    ) -> Result<(), ApiError> {
+        for id in ids {
+            let Some(job) = assigned.remove(&id) else { continue };
+            let kills = {
+                let k = self.kills.entry(id).or_insert(0);
+                *k += 1;
+                *k
+            };
+            if self.max_worker_kills == 0 || kills < self.max_worker_kills {
+                queue.push_back(job);
+                continue;
+            }
+            let reason = match &self.last_failure {
+                Some(note) => format!("felled {kills} workers (last: {note})"),
+                None => format!("felled {kills} workers"),
+            };
+            eprintln!("shard: quarantining job {id}: {reason}");
+            let line = JsonValue::Obj(vec![
+                ("ok".into(), JsonValue::Bool(false)),
+                ("error".into(), JsonValue::str(&format!("job quarantined: {reason}"))),
+                ("id".into(), JsonValue::u64(id)),
+                ("quarantined".into(), JsonValue::Bool(true)),
+            ])
+            .encode();
+            ready.insert(id, line);
+            self.quarantined.push(QuarantinedJob { id, pair: job.pair, kills, reason });
+        }
+        emit_ready(out, ready, remaining)
+    }
+
+    /// Watchdog tick (campaign): retire every child past its reply
+    /// deadline and settle the work it still owed.
+    fn retire_hung(
+        &mut self,
+        out: &mut dyn Write,
+        queue: &mut VecDeque<Job>,
+        assigned: &mut BTreeMap<u64, Job>,
+        ready: &mut BTreeMap<u64, String>,
+        remaining: &mut BTreeSet<u64>,
+    ) -> Result<(), ApiError> {
+        for shard in self.hung_children() {
+            let ms = self.job_timeout.map_or(0, |t| t.as_millis() as u64);
+            let note = self.failure_note(shard, &format!("no reply within {ms} ms; presumed hung"));
+            eprintln!("shard: {note}; retiring and requeueing its jobs");
+            let ids = self.retire(shard);
+            self.settle_lost_jobs(ids, queue, assigned, ready, remaining, out)?;
         }
         Ok(())
     }
@@ -499,43 +865,55 @@ impl<'t> ShardPool<'t> {
                 match self.write_line(t, &line) {
                     Ok(()) => {
                         self.children[t].inflight.insert(job.id);
+                        self.touch(t);
                         assigned.insert(job.id, job);
                     }
-                    Err(_) => {
+                    Err(e) => {
                         queue.push_front(job);
-                        for id in self.retire(t) {
-                            if let Some(j) = assigned.remove(&id) {
-                                queue.push_back(j);
-                            }
-                        }
+                        let note = self.failure_note(t, &format!("request write failed: {e}"));
+                        eprintln!("shard: {note}; requeueing its jobs");
+                        let ids = self.retire(t);
+                        self.settle_lost_jobs(
+                            ids,
+                            &mut queue,
+                            &mut assigned,
+                            &mut ready,
+                            &mut remaining,
+                            out,
+                        )?;
                     }
                 }
             }
-            // work remains but nobody can take it: grow the pool
+            // work remains but nobody can take it: grow the pool (after
+            // the deterministic backoff delay)
             if !queue.is_empty() && self.open_count() == 0 {
-                self.spawn_child()?;
+                self.respawn_with_backoff()?;
                 continue;
             }
-            if queue.is_empty() && self.total_inflight() == 0 {
+            if queue.is_empty() && self.total_inflight() == 0 && !remaining.is_empty() {
                 // every job was answered yet some ids never resolved — a
                 // protocol violation we must not wait on forever
                 return Err(ApiError::Shard {
                     detail: format!("{} job replies never arrived", remaining.len()),
                 });
             }
-            let (shard, reply) = self
-                .rx
-                .recv()
-                .map_err(|_| ApiError::Shard { detail: "reply channel closed".into() })?;
-            self.on_campaign_reply(
-                shard,
-                reply,
-                out,
-                &mut queue,
-                &mut assigned,
-                &mut ready,
-                &mut remaining,
-            )?;
+            if remaining.is_empty() {
+                break;
+            }
+            match self.next_reply()? {
+                Some((shard, reply)) => self.on_campaign_reply(
+                    shard,
+                    reply,
+                    out,
+                    &mut queue,
+                    &mut assigned,
+                    &mut ready,
+                    &mut remaining,
+                )?,
+                None => {
+                    self.retire_hung(out, &mut queue, &mut assigned, &mut ready, &mut remaining)?
+                }
+            }
         }
 
         // all outcomes emitted: close stdins so children summarize + exit
@@ -554,6 +932,12 @@ impl<'t> ShardPool<'t> {
             let report = if c.dead { &c.local } else { c.summary.as_ref().unwrap_or(&c.local) };
             merged.merge(report);
         }
+        // graceful degradation: quarantined jobs make the report partial
+        // but explicit (encoded only when present, so fault-free output
+        // stays byte-identical to older runs)
+        merged.quarantined.append(&mut self.quarantined);
+        merged.quarantined.sort_by_key(|q| q.id);
+        merged.incomplete = merged.quarantined.len();
         if self.deterministic {
             merged.clear_timing();
         }
@@ -574,6 +958,8 @@ impl<'t> ShardPool<'t> {
         ready: &mut BTreeMap<u64, String>,
         remaining: &mut BTreeSet<u64>,
     ) -> Result<(), ApiError> {
+        // any reply line proves the child is alive: re-arm its watchdog
+        self.touch(shard);
         match reply {
             Reply::Outcome(o) => {
                 if !self.children[shard].inflight.remove(&o.id) {
@@ -613,7 +999,8 @@ impl<'t> ShardPool<'t> {
             Reply::Error { id: None, msg } => {
                 // the parent only writes well-formed job lines, so an
                 // unaddressed error means the pipe is corrupt
-                self.fail_child(shard, queue, assigned, &format!("unaddressed error: {msg}"));
+                let why = format!("unaddressed error: {msg}");
+                self.fail_child(shard, out, queue, assigned, ready, remaining, &why)?;
             }
             Reply::Summary(r) => {
                 // a summary from a retired child covers requeued jobs —
@@ -623,9 +1010,12 @@ impl<'t> ShardPool<'t> {
                 }
             }
             Reply::Band(_) => {
-                self.fail_child(shard, queue, assigned, "band reply on a campaign stream");
+                let why = "band reply on a campaign stream";
+                self.fail_child(shard, out, queue, assigned, ready, remaining, why)?;
             }
-            Reply::Garbage(what) => self.fail_child(shard, queue, assigned, &what),
+            Reply::Garbage(what) => {
+                self.fail_child(shard, out, queue, assigned, ready, remaining, &what)?;
+            }
             Reply::Eof => {
                 let premature = {
                     let c = &self.children[shard];
@@ -633,31 +1023,33 @@ impl<'t> ShardPool<'t> {
                 };
                 self.children[shard].eof = true;
                 if premature {
-                    for id in self.retire(shard) {
-                        if let Some(j) = assigned.remove(&id) {
-                            queue.push_back(j);
-                        }
-                    }
+                    let note = self.failure_note(shard, "output closed with work owed");
+                    eprintln!("shard: {note}; requeueing its jobs");
+                    let ids = self.retire(shard);
+                    self.settle_lost_jobs(ids, queue, assigned, ready, remaining, out)?;
                 }
             }
         }
         Ok(())
     }
 
-    /// Protocol violation: retire the child and requeue its jobs.
+    /// Protocol violation: retire the child and settle (requeue or
+    /// quarantine) its jobs.
+    #[allow(clippy::too_many_arguments)]
     fn fail_child(
         &mut self,
         shard: usize,
+        out: &mut dyn Write,
         queue: &mut VecDeque<Job>,
         assigned: &mut BTreeMap<u64, Job>,
+        ready: &mut BTreeMap<u64, String>,
+        remaining: &mut BTreeSet<u64>,
         why: &str,
-    ) {
-        eprintln!("shard: worker {shard} failed ({why}); requeueing its jobs");
-        for id in self.retire(shard) {
-            if let Some(j) = assigned.remove(&id) {
-                queue.push_back(j);
-            }
-        }
+    ) -> Result<(), ApiError> {
+        let note = self.failure_note(shard, why);
+        eprintln!("shard: {note}; requeueing its jobs");
+        let ids = self.retire(shard);
+        self.settle_lost_jobs(ids, queue, assigned, ready, remaining, out)
     }
 
     // -- GEMM driver --------------------------------------------------------
@@ -715,17 +1107,19 @@ impl<'t> ShardPool<'t> {
                 match self.write_line(t, &line) {
                     Ok(()) => {
                         self.children[t].inflight.insert(gid);
+                        self.touch(t);
                     }
-                    Err(_) => {
+                    Err(e) => {
                         queue.push_front(gid);
-                        for id in self.retire(t) {
-                            queue.push_back(id);
-                        }
+                        let note = self.failure_note(t, &format!("request write failed: {e}"));
+                        eprintln!("shard: {note}; requeueing its bands");
+                        let ids = self.retire(t);
+                        self.settle_lost_bands(&ids, &mut queue)?;
                     }
                 }
             }
             if !queue.is_empty() && self.open_count() == 0 {
-                self.spawn_child()?;
+                self.respawn_with_backoff()?;
                 continue;
             }
             if queue.is_empty() && self.total_inflight() == 0 && done.len() < plan.len() {
@@ -733,10 +1127,13 @@ impl<'t> ShardPool<'t> {
                     detail: format!("{} band replies never arrived", plan.len() - done.len()),
                 });
             }
-            let (shard, reply) = self
-                .rx
-                .recv()
-                .map_err(|_| ApiError::Shard { detail: "reply channel closed".into() })?;
+            let Some((shard, reply)) = self.next_reply()? else {
+                // watchdog tick: sweep for hung children
+                self.retire_hung_gemm(&mut queue)?;
+                continue;
+            };
+            // any reply line proves the child is alive
+            self.touch(shard);
             match reply {
                 Reply::Band(r) => {
                     if !self.children[shard].inflight.remove(&r.id) {
@@ -744,14 +1141,15 @@ impl<'t> ShardPool<'t> {
                     }
                     let (row0, rows) = plan[r.id as usize];
                     if r.row0 != row0 || r.d.rows != rows || r.d.cols != n || r.d.fmt != d_fmt {
-                        eprintln!(
-                            "shard: worker {shard} returned a malformed band {}; requeueing",
-                            r.id
-                        );
-                        queue.push_back(r.id);
-                        for id in self.retire(shard) {
-                            queue.push_back(id);
-                        }
+                        let why = format!("returned a malformed band {}", r.id);
+                        let note = self.failure_note(shard, &why);
+                        eprintln!("shard: {note}; requeueing its bands");
+                        // the malformed band counts against its kill
+                        // budget too — a band whose reply is always
+                        // malformed must not retry forever
+                        self.settle_lost_bands(&[r.id], &mut queue)?;
+                        let ids = self.retire(shard);
+                        self.settle_lost_bands(&ids, &mut queue)?;
                         continue;
                     }
                     d.data[row0 * n..(row0 + rows) * n].copy_from_slice(&r.d.data);
@@ -777,35 +1175,85 @@ impl<'t> ShardPool<'t> {
                         // rejected set_b): the stream is not trustworthy —
                         // retire it and let the requeue/respawn machinery
                         // (bounded by the respawn budget) sort it out
-                        eprintln!("shard: worker {shard} failed ({msg}); requeueing its bands");
-                        for band in self.retire(shard) {
-                            queue.push_back(band);
-                        }
+                        let note = self.failure_note(shard, &msg);
+                        eprintln!("shard: {note}; requeueing its bands");
+                        let ids = self.retire(shard);
+                        self.settle_lost_bands(&ids, &mut queue)?;
                     }
                 }
                 Reply::Eof => {
                     self.children[shard].eof = true;
-                    for id in self.retire(shard) {
-                        queue.push_back(id);
+                    if !self.children[shard].inflight.is_empty() {
+                        let note = self.failure_note(shard, "output closed with bands owed");
+                        eprintln!("shard: {note}; requeueing its bands");
                     }
+                    let ids = self.retire(shard);
+                    self.settle_lost_bands(&ids, &mut queue)?;
                 }
                 Reply::Garbage(what) => {
-                    eprintln!("shard: worker {shard} failed ({what}); requeueing its bands");
-                    for id in self.retire(shard) {
-                        queue.push_back(id);
-                    }
+                    let note = self.failure_note(shard, &what);
+                    eprintln!("shard: {note}; requeueing its bands");
+                    let ids = self.retire(shard);
+                    self.settle_lost_bands(&ids, &mut queue)?;
                 }
                 Reply::Outcome(_) | Reply::Summary(_) => {
-                    eprintln!("shard: worker {shard} sent campaign replies on a GEMM stream");
-                    for id in self.retire(shard) {
-                        queue.push_back(id);
-                    }
+                    let note = self.failure_note(shard, "sent campaign replies on a GEMM stream");
+                    eprintln!("shard: {note}; requeueing its bands");
+                    let ids = self.retire(shard);
+                    self.settle_lost_bands(&ids, &mut queue)?;
                 }
             }
         }
 
         self.drain_and_reap(|_, _| {})?;
         Ok(d)
+    }
+
+    /// Settle the bands a retired worker still owed: requeue each —
+    /// unless one has now felled
+    /// [`max_worker_kills`](ShardConfig::max_worker_kills) workers.
+    /// A partial GEMM output would be silently wrong, so a poisoned
+    /// band aborts the run with an explicit error instead of being
+    /// quarantined.
+    fn settle_lost_bands(
+        &mut self,
+        ids: &[u64],
+        queue: &mut VecDeque<u64>,
+    ) -> Result<(), ApiError> {
+        for &id in ids {
+            let kills = {
+                let k = self.kills.entry(id).or_insert(0);
+                *k += 1;
+                *k
+            };
+            if self.max_worker_kills > 0 && kills >= self.max_worker_kills {
+                let last = self
+                    .last_failure
+                    .clone()
+                    .unwrap_or_else(|| "no worker failure recorded".into());
+                return Err(ApiError::Shard {
+                    detail: format!(
+                        "band {id} felled {kills} workers (last failure: {last}); a partial \
+                         GEMM would be silently wrong, aborting"
+                    ),
+                });
+            }
+            queue.push_back(id);
+        }
+        Ok(())
+    }
+
+    /// Watchdog tick (GEMM): retire every child past its reply deadline
+    /// and settle the bands it still owed.
+    fn retire_hung_gemm(&mut self, queue: &mut VecDeque<u64>) -> Result<(), ApiError> {
+        for shard in self.hung_children() {
+            let ms = self.job_timeout.map_or(0, |t| t.as_millis() as u64);
+            let note = self.failure_note(shard, &format!("no reply within {ms} ms; presumed hung"));
+            eprintln!("shard: {note}; retiring and requeueing its bands");
+            let ids = self.retire(shard);
+            self.settle_lost_bands(&ids, queue)?;
+        }
+        Ok(())
     }
 }
 
@@ -818,6 +1266,9 @@ impl Drop for ShardPool<'_> {
             c.handle.kill();
             if let Some(r) = c.reader.take() {
                 let _ = r.join();
+            }
+            if let Some(t) = c.stderr.as_mut().and_then(|s| s.thread.take()) {
+                let _ = t.join();
             }
         }
     }
@@ -1029,7 +1480,7 @@ mod tests {
             let (child_in, child_out) = (stdin.reader(), stdout.writer());
             let join = match role {
                 WorkerRole::Campaign { workers } => {
-                    let cfg = ServeConfig { workers: *workers, queue_depth: 0 };
+                    let cfg = ServeConfig { workers: *workers, ..ServeConfig::default() };
                     std::thread::spawn(move || {
                         let mut out = child_out;
                         let _ =
@@ -1053,6 +1504,7 @@ mod tests {
             Ok(WorkerIo {
                 input: Box::new(stdin.writer()),
                 output: Box::new(stdout.reader()),
+                stderr: None,
                 handle: Box::new(ThreadHandle { join: Some(join), stdin, stdout }),
             })
         }
@@ -1077,6 +1529,7 @@ mod tests {
             Ok(WorkerIo {
                 input: Box::new(stdin.writer()),
                 output: Box::new(stdout.reader()),
+                stderr: None,
                 handle: Box::new(ThreadHandle { join: Some(join), stdin, stdout }),
             })
         }
@@ -1099,7 +1552,13 @@ mod tests {
         let mut outputs: Vec<String> = Vec::new();
         let mut reports = Vec::new();
         for workers in [1usize, 2, 3] {
-            let cfg = ShardConfig { workers, inflight: 0, child_workers: 2, deterministic: true };
+            let cfg = ShardConfig {
+                workers,
+                inflight: 0,
+                child_workers: 2,
+                deterministic: true,
+                ..ShardConfig::default()
+            };
             let mut out = Vec::new();
             let report = shard_campaign(jobs(8), &cfg, &transport, &mut out).unwrap();
             outputs.push(String::from_utf8(out).unwrap());
@@ -1136,7 +1595,13 @@ mod tests {
     fn dead_worker_jobs_requeue_onto_survivors() {
         let inner = ThreadTransport;
         let flaky = FlakyTransport { inner: &inner, launches: AtomicUsize::new(0) };
-        let cfg = ShardConfig { workers: 2, inflight: 0, child_workers: 1, deterministic: true };
+        let cfg = ShardConfig {
+            workers: 2,
+            inflight: 0,
+            child_workers: 1,
+            deterministic: true,
+            ..ShardConfig::default()
+        };
         let mut out = Vec::new();
         let report = shard_campaign(jobs(6), &cfg, &flaky, &mut out).unwrap();
         assert_eq!(report.total_jobs, 6, "jobs owned by the dead worker were requeued");
@@ -1209,7 +1674,13 @@ mod tests {
             .unwrap();
         let mut rng = Rng::new(77);
         let (a, b, c) = random_mats(&mut rng, 64, 32, 32, s.formats());
-        let cfg = ShardConfig { workers: 3, inflight: 0, child_workers: 1, deterministic: false };
+        let cfg = ShardConfig {
+            workers: 3,
+            inflight: 0,
+            child_workers: 1,
+            deterministic: false,
+            ..ShardConfig::default()
+        };
         let got = s.shard_gemm(&a, &b, &c, &cfg, &transport).unwrap();
         let want = TiledGemm::from_model(s.model().clone()).try_execute(&a, &b, &c).unwrap();
         assert_eq!(got, want, "scattered GEMM must be bit-identical");
@@ -1226,7 +1697,13 @@ mod tests {
             .unwrap();
         let mut rng = Rng::new(78);
         let (a, b, c) = random_mats(&mut rng, 48, 16, 16, s.formats());
-        let cfg = ShardConfig { workers: 2, inflight: 0, child_workers: 1, deterministic: false };
+        let cfg = ShardConfig {
+            workers: 2,
+            inflight: 0,
+            child_workers: 1,
+            deterministic: false,
+            ..ShardConfig::default()
+        };
         let got = s.shard_gemm(&a, &b, &c, &cfg, &flaky).unwrap();
         let want = TiledGemm::from_model(s.model().clone()).try_execute(&a, &b, &c).unwrap();
         assert_eq!(got, want, "bands owned by the dead worker were requeued");

@@ -1,0 +1,381 @@
+//! Chaos differential suite (in-memory): the hardened shard pool under
+//! deterministic fault injection, with thread workers standing in for
+//! child processes.
+//!
+//! The load-bearing invariant: under any fault schedule in which every
+//! job still completes, a `deterministic` run's merged output stream is
+//! **byte-identical** to the fault-free run — crashes, hangs, garbage,
+//! truncation, and delays may cost time, never content. The quarantine
+//! test pins the complement: when a poisoned job keeps felling workers,
+//! the run degrades to a partial-but-explicit report instead of aborting.
+
+use std::collections::VecDeque;
+use std::io::{BufRead, BufReader, Read, Write};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Instant;
+
+use mma_sim::coordinator::{Job, VerifyPair};
+use mma_sim::formats::{Format, Rho};
+use mma_sim::interface::MmaFormats;
+use mma_sim::models::{MmaModel, ModelSpec};
+use mma_sim::session::faults::{ChaosPlan, ChaosTransport};
+use mma_sim::session::json::{self, JsonValue};
+use mma_sim::session::shard::{shard_campaign, WorkerHandle, WorkerIo, WorkerRole, WorkerTransport};
+use mma_sim::session::{serve_jsonl, ApiError, ServeConfig, ShardConfig};
+
+// -- in-memory pipes + thread workers (the shard.rs unit-test pattern,
+//    rebuilt on the public API) ---------------------------------------------
+
+#[derive(Default)]
+struct PipeInner {
+    buf: VecDeque<u8>,
+    closed: bool,
+}
+
+/// A blocking byte pipe: writes append, reads block until data or close.
+#[derive(Clone, Default)]
+struct Pipe(Arc<(Mutex<PipeInner>, Condvar)>);
+
+impl Pipe {
+    fn close(&self) {
+        let (m, cv) = &*self.0;
+        m.lock().unwrap().closed = true;
+        cv.notify_all();
+    }
+    fn writer(&self) -> PipeWriter {
+        PipeWriter(self.clone())
+    }
+    fn reader(&self) -> PipeReader {
+        PipeReader(self.clone())
+    }
+}
+
+struct PipeWriter(Pipe);
+
+impl Write for PipeWriter {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        let (m, cv) = &*self.0 .0;
+        let mut st = m.lock().unwrap();
+        if st.closed {
+            return Err(std::io::Error::new(std::io::ErrorKind::BrokenPipe, "pipe closed"));
+        }
+        st.buf.extend(buf.iter().copied());
+        cv.notify_all();
+        Ok(buf.len())
+    }
+    fn flush(&mut self) -> std::io::Result<()> {
+        Ok(())
+    }
+}
+
+impl Drop for PipeWriter {
+    fn drop(&mut self) {
+        self.0.close();
+    }
+}
+
+struct PipeReader(Pipe);
+
+impl Read for PipeReader {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        if buf.is_empty() {
+            return Ok(0);
+        }
+        let (m, cv) = &*self.0 .0;
+        let mut st = m.lock().unwrap();
+        loop {
+            if !st.buf.is_empty() {
+                let n = buf.len().min(st.buf.len());
+                for slot in buf.iter_mut().take(n) {
+                    *slot = st.buf.pop_front().expect("buffer checked non-empty");
+                }
+                return Ok(n);
+            }
+            if st.closed {
+                return Ok(0);
+            }
+            st = cv.wait(st).unwrap();
+        }
+    }
+}
+
+struct ThreadHandle {
+    join: Option<std::thread::JoinHandle<()>>,
+    stdin: Pipe,
+    stdout: Pipe,
+}
+
+impl WorkerHandle for ThreadHandle {
+    fn wait(&mut self) {
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+    fn kill(&mut self) {
+        self.stdin.close();
+        self.stdout.close();
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+fn worker_pairs() -> Vec<VerifyPair> {
+    let model = |f: i32| {
+        MmaModel::new(
+            format!("chaos-f{f}"),
+            (4, 4, 8),
+            MmaFormats { a: Format::Fp16, b: Format::Fp16, c: Format::Fp32, d: Format::Fp32 },
+            ModelSpec::TFdpa { l_max: 8, f, rho: Rho::RzFp32 },
+        )
+    };
+    vec![
+        VerifyPair { name: "clean".into(), dut: Arc::new(model(24)), golden: Arc::new(model(24)) },
+        VerifyPair { name: "faulty".into(), dut: Arc::new(model(25)), golden: Arc::new(model(24)) },
+    ]
+}
+
+/// Each "child process" is a thread running the very same `serve_jsonl`
+/// loop the real binary would, over in-memory pipes.
+struct ThreadTransport;
+
+impl WorkerTransport for ThreadTransport {
+    fn launch(&self, role: &WorkerRole) -> Result<WorkerIo, ApiError> {
+        let stdin = Pipe::default();
+        let stdout = Pipe::default();
+        let (child_in, child_out) = (stdin.reader(), stdout.writer());
+        let workers = match role {
+            WorkerRole::Campaign { workers } => *workers,
+            WorkerRole::Gemm { .. } => panic!("campaign-only transport"),
+        };
+        let cfg = ServeConfig { workers, ..ServeConfig::default() };
+        let join = std::thread::spawn(move || {
+            let mut out = child_out;
+            let _ = serve_jsonl(worker_pairs(), &cfg, BufReader::new(child_in), &mut out);
+        });
+        Ok(WorkerIo {
+            input: Box::new(stdin.writer()),
+            output: Box::new(stdout.reader()),
+            stderr: None,
+            handle: Box::new(ThreadHandle { join: Some(join), stdin, stdout }),
+        })
+    }
+}
+
+fn jobs(n: u64) -> Vec<Job> {
+    (0..n)
+        .map(|i| Job {
+            id: i,
+            pair: if i % 2 == 0 { "clean" } else { "faulty" }.into(),
+            batch: 24,
+            seed: 1000 + i,
+        })
+        .collect()
+}
+
+fn fault_free_baseline(n_jobs: u64) -> (String, mma_sim::coordinator::CampaignReport) {
+    let cfg = ShardConfig { workers: 2, deterministic: true, ..ShardConfig::default() };
+    let mut out = Vec::new();
+    let report = shard_campaign(jobs(n_jobs), &cfg, &ThreadTransport, &mut out).unwrap();
+    (String::from_utf8(out).unwrap(), report)
+}
+
+// -- the differential invariant ---------------------------------------------
+
+#[test]
+fn seeded_chaos_output_is_byte_identical_to_fault_free() {
+    let (want_text, want_report) = fault_free_baseline(8);
+    for seed in [1u64, 7, 42] {
+        // crashes, hangs, garbage, truncation, and delays on a seeded
+        // schedule; quarantine off and a generous spawn budget so every
+        // job is guaranteed to complete eventually
+        let plan = ChaosPlan::seeded(seed, 6, 12, 2, 1, 2, 1, 1);
+        let inner = ThreadTransport;
+        let chaotic = ChaosTransport::new(&inner, plan);
+        let cfg = ShardConfig {
+            workers: 2,
+            deterministic: true,
+            job_timeout_ms: 500, // hangs need the watchdog to resolve
+            max_worker_kills: 0, // never quarantine: all jobs must finish
+            max_spawns: 32,
+            ..ShardConfig::default()
+        };
+        let mut out = Vec::new();
+        let report = shard_campaign(jobs(8), &cfg, &chaotic, &mut out).unwrap();
+        assert_eq!(
+            String::from_utf8(out).unwrap(),
+            want_text,
+            "seed {seed}: faults may cost time, never content"
+        );
+        assert_eq!(report, want_report, "seed {seed}");
+    }
+}
+
+#[test]
+fn hung_worker_is_retired_within_the_deadline() {
+    // launch 0 goes silent (stream open, nothing arrives) at its second
+    // reply frame; the watchdog must retire it and requeue — without the
+    // job timeout this schedule deadlocked the pre-hardening pool
+    let plan = ChaosPlan::parse("0:hang@1").unwrap();
+    let inner = ThreadTransport;
+    let chaotic = ChaosTransport::new(&inner, plan);
+    let cfg = ShardConfig {
+        workers: 2,
+        deterministic: true,
+        job_timeout_ms: 400,
+        max_worker_kills: 0,
+        ..ShardConfig::default()
+    };
+    let started = Instant::now();
+    let mut out = Vec::new();
+    let report = shard_campaign(jobs(8), &cfg, &chaotic, &mut out).unwrap();
+    let elapsed = started.elapsed();
+    assert!(
+        elapsed.as_secs() < 20,
+        "retirement must be deadline-driven, not luck: took {elapsed:?}"
+    );
+    let (want_text, want_report) = fault_free_baseline(8);
+    assert_eq!(String::from_utf8(out).unwrap(), want_text);
+    assert_eq!(report, want_report);
+}
+
+#[test]
+fn delays_do_not_trip_the_watchdog() {
+    // slow-but-alive workers (50 ms on several frames) against a 5 s
+    // deadline: slowness must be absorbed, not punished — the run
+    // completes with nothing quarantined, and max_spawns == workers
+    // leaves no budget for spurious churn if both children were ever
+    // falsely retired
+    let plan = ChaosPlan::parse("0:delay50@0,delay50@2;1:delay50@1").unwrap();
+    let inner = ThreadTransport;
+    let chaotic = ChaosTransport::new(&inner, plan);
+    let cfg = ShardConfig {
+        workers: 2,
+        deterministic: true,
+        job_timeout_ms: 5000,
+        max_spawns: 2,
+        ..ShardConfig::default()
+    };
+    let mut out = Vec::new();
+    let report = shard_campaign(jobs(6), &cfg, &chaotic, &mut out).unwrap();
+    assert_eq!(report.total_jobs, 6);
+    assert_eq!(report.incomplete, 0);
+}
+
+// -- quarantine: graceful degradation on a poisoned job ----------------------
+
+/// A marker only the poison job's line carries (its seed).
+const POISON_MARKER: &str = "999983";
+
+/// Wraps a worker's stdin and simulates a child that dies the moment the
+/// poison job reaches it: the gate reports end-of-input *before*
+/// delivering the poisoned line, so the worker exits still owing that
+/// job — every single time, on every worker.
+struct PoisonGate {
+    inner: BufReader<PipeReader>,
+    line: Vec<u8>,
+    pos: usize,
+    poisoned: bool,
+}
+
+impl Read for PoisonGate {
+    fn read(&mut self, out: &mut [u8]) -> std::io::Result<usize> {
+        if out.is_empty() {
+            return Ok(0);
+        }
+        if self.pos >= self.line.len() {
+            if self.poisoned {
+                return Ok(0);
+            }
+            let mut next = String::new();
+            if self.inner.read_line(&mut next)? == 0 {
+                return Ok(0);
+            }
+            if next.contains(POISON_MARKER) {
+                self.poisoned = true;
+                return Ok(0);
+            }
+            self.line = next.into_bytes();
+            self.pos = 0;
+        }
+        let n = out.len().min(self.line.len() - self.pos);
+        out[..n].copy_from_slice(&self.line[self.pos..self.pos + n]);
+        self.pos += n;
+        Ok(n)
+    }
+}
+
+struct PoisonTransport;
+
+impl WorkerTransport for PoisonTransport {
+    fn launch(&self, role: &WorkerRole) -> Result<WorkerIo, ApiError> {
+        let stdin = Pipe::default();
+        let stdout = Pipe::default();
+        let gate = PoisonGate {
+            inner: BufReader::new(stdin.reader()),
+            line: Vec::new(),
+            pos: 0,
+            poisoned: false,
+        };
+        let child_out = stdout.writer();
+        let workers = match role {
+            WorkerRole::Campaign { workers } => *workers,
+            WorkerRole::Gemm { .. } => panic!("campaign-only transport"),
+        };
+        let cfg = ServeConfig { workers, ..ServeConfig::default() };
+        let join = std::thread::spawn(move || {
+            let mut out = child_out;
+            let _ = serve_jsonl(worker_pairs(), &cfg, BufReader::new(gate), &mut out);
+        });
+        Ok(WorkerIo {
+            input: Box::new(stdin.writer()),
+            output: Box::new(stdout.reader()),
+            stderr: None,
+            handle: Box::new(ThreadHandle { join: Some(join), stdin, stdout }),
+        })
+    }
+}
+
+#[test]
+fn poisoned_job_is_quarantined_into_a_partial_report() {
+    let mut js = jobs(6);
+    js[3].seed = 999_983; // the poison: fells every worker it reaches
+    let cfg = ShardConfig {
+        workers: 2,
+        inflight: 1, // one job in flight per child: clean kill accounting
+        deterministic: true,
+        max_worker_kills: 3,
+        max_spawns: 16,
+        ..ShardConfig::default()
+    };
+    let mut out = Vec::new();
+    let report = shard_campaign(js, &cfg, &PoisonTransport, &mut out).unwrap();
+
+    // the run degraded instead of aborting: 5 of 6 jobs ran, and the
+    // report says so explicitly
+    assert_eq!(report.total_jobs, 5);
+    assert_eq!(report.incomplete, 1);
+    assert_eq!(report.quarantined.len(), 1);
+    let q = &report.quarantined[0];
+    assert_eq!(q.id, 3);
+    assert_eq!(q.pair, "faulty");
+    assert_eq!(q.kills, 3, "quarantine fires exactly at max_worker_kills");
+    assert!(q.reason.contains("felled 3 workers"), "{}", q.reason);
+
+    // the quarantine verdict is an ordered line in the merged stream,
+    // exactly where job 3's outcome would have been
+    let text = String::from_utf8(out).unwrap();
+    let lines: Vec<&str> = text.lines().collect();
+    assert_eq!(lines.len(), 7, "5 outcomes + 1 quarantine line + summary: {text}");
+    let verdict = JsonValue::parse(lines[3]).unwrap();
+    assert_eq!(verdict.get("ok").and_then(|b| b.as_bool()), Some(false));
+    assert_eq!(verdict.get("id").and_then(|i| i.as_u64()), Some(3));
+    assert_eq!(verdict.get("quarantined").and_then(|b| b.as_bool()), Some(true));
+    let msg = verdict.get("error").and_then(|e| e.as_str()).unwrap_or_default();
+    assert!(msg.starts_with("job quarantined:"), "{msg}");
+
+    // and the degraded report survives its own wire format
+    let summary = JsonValue::parse(lines[6]).unwrap();
+    let decoded = json::report_from_json(summary.get("summary").unwrap()).unwrap();
+    assert_eq!(decoded, report);
+}

@@ -1,0 +1,127 @@
+//! Chaos differential suite (real processes): the same invariants as
+//! `chaos_faults.rs`, but with the faults injected **inside** real
+//! `mma-sim` children via their `--chaos` flag (`ProcessTransport::
+//! with_chaos`) — a child that really crashes mid-protocol, really goes
+//! silent while the process stays alive, and really writes garbage onto
+//! its stdout pipe.
+
+use std::time::Instant;
+
+use mma_sim::coordinator::Job;
+use mma_sim::session::faults::ChaosPlan;
+use mma_sim::session::json::JsonValue;
+use mma_sim::session::shard::{shard_campaign, ProcessTransport};
+use mma_sim::session::ShardConfig;
+
+fn binary() -> &'static str {
+    env!("CARGO_BIN_EXE_mma-sim")
+}
+
+fn jobs(n: u64) -> Vec<Job> {
+    (0..n)
+        .map(|i| Job { id: i, pair: "sm70 HMMA.884.F32.F16".into(), batch: 10, seed: 40 + i })
+        .collect()
+}
+
+fn clean_run(n_jobs: u64, cfg: &ShardConfig) -> (String, mma_sim::coordinator::CampaignReport) {
+    let transport = ProcessTransport::with_binary(binary());
+    let mut out = Vec::new();
+    let report = shard_campaign(jobs(n_jobs), cfg, &transport, &mut out).unwrap();
+    (String::from_utf8(out).unwrap(), report)
+}
+
+#[test]
+fn child_side_chaos_is_byte_identical_to_a_clean_run() {
+    // launch 0 garbles its third reply line, launch 1 crashes writing its
+    // second, launch 2 (the first respawn) is merely slow — with
+    // quarantine off and spawn budget to spare, every job completes and
+    // the deterministic output must not move by a byte
+    let cfg = ShardConfig {
+        workers: 2,
+        child_workers: 1,
+        deterministic: true,
+        max_worker_kills: 0,
+        max_spawns: 16,
+        ..ShardConfig::default()
+    };
+    let (want_text, want_report) = clean_run(6, &cfg);
+
+    let plan = ChaosPlan::parse("0:garbage@2;1:crash@1;2:delay10@0").unwrap();
+    let transport = ProcessTransport::with_binary(binary()).with_chaos(plan);
+    let mut out = Vec::new();
+    let report = shard_campaign(jobs(6), &cfg, &transport, &mut out).unwrap();
+    assert_eq!(
+        String::from_utf8(out).unwrap(),
+        want_text,
+        "real-process faults may cost time, never content"
+    );
+    assert_eq!(report, want_report);
+}
+
+#[test]
+fn hung_child_process_is_retired_by_the_watchdog() {
+    // launch 0 hangs (flushes, then sleeps forever — process alive, pipe
+    // open, zero bytes) at its second reply frame; only the per-job reply
+    // deadline can unstick the merge loop
+    let cfg = ShardConfig {
+        workers: 2,
+        child_workers: 1,
+        deterministic: true,
+        job_timeout_ms: 1500,
+        max_worker_kills: 0,
+        max_spawns: 16,
+        ..ShardConfig::default()
+    };
+    let plan = ChaosPlan::parse("0:hang@1").unwrap();
+    let transport = ProcessTransport::with_binary(binary()).with_chaos(plan);
+    let started = Instant::now();
+    let mut out = Vec::new();
+    let report = shard_campaign(jobs(6), &cfg, &transport, &mut out).unwrap();
+    let elapsed = started.elapsed();
+    assert!(elapsed.as_secs() < 60, "watchdog must fire near the 1.5 s deadline: {elapsed:?}");
+
+    let clean_cfg = ShardConfig { job_timeout_ms: 0, ..cfg };
+    let (want_text, want_report) = clean_run(6, &clean_cfg);
+    assert_eq!(String::from_utf8(out).unwrap(), want_text);
+    assert_eq!(report, want_report);
+}
+
+#[test]
+fn crash_looping_job_is_quarantined_with_stderr_context() {
+    // every launch crashes on its very first reply: the lone job fells
+    // worker after worker until max_worker_kills, then must come back as
+    // an explicit quarantine record — not an abort, not a livelock —
+    // with the child's stderr tail (which names the injected fault)
+    // quoted in the reason
+    let plan = ChaosPlan::parse("0:crash@0;1:crash@0;2:crash@0;3:crash@0").unwrap();
+    let transport = ProcessTransport::with_binary(binary()).with_chaos(plan);
+    let cfg = ShardConfig {
+        workers: 1,
+        child_workers: 1,
+        deterministic: true,
+        max_worker_kills: 3,
+        max_spawns: 8,
+        ..ShardConfig::default()
+    };
+    let job = vec![Job { id: 0, pair: "sm70 HMMA.884.F32.F16".into(), batch: 5, seed: 7 }];
+    let mut out = Vec::new();
+    let report = shard_campaign(job, &cfg, &transport, &mut out).unwrap();
+
+    assert_eq!(report.total_jobs, 0, "the poisoned job never completed");
+    assert_eq!(report.incomplete, 1);
+    assert_eq!(report.quarantined.len(), 1);
+    let q = &report.quarantined[0];
+    assert_eq!(q.id, 0);
+    assert_eq!(q.pair, "sm70 HMMA.884.F32.F16");
+    assert_eq!(q.kills, 3);
+    assert!(q.reason.contains("felled 3 workers"), "{}", q.reason);
+    assert!(q.reason.contains("[stderr:"), "stderr tail must ride along: {}", q.reason);
+    assert!(q.reason.contains("chaos"), "the child's own error reaches the report: {}", q.reason);
+
+    let text = String::from_utf8(out).unwrap();
+    let lines: Vec<&str> = text.lines().collect();
+    assert_eq!(lines.len(), 2, "quarantine line + summary: {text}");
+    let verdict = JsonValue::parse(lines[0]).unwrap();
+    assert_eq!(verdict.get("ok").and_then(|b| b.as_bool()), Some(false));
+    assert_eq!(verdict.get("quarantined").and_then(|b| b.as_bool()), Some(true));
+}

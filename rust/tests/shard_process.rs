@@ -55,7 +55,12 @@ fn sharded_gemm_256_bit_identical_across_process_boundary() {
     let mut rng = Rng::new(0x256);
     let (a, b, c) = random_mats(&mut rng, 256, 256, 256, s.formats());
     let transport = ProcessTransport::with_binary(binary());
-    let cfg = ShardConfig { workers: 3, inflight: 0, child_workers: 1, deterministic: false };
+    let cfg = ShardConfig {
+        workers: 3,
+        child_workers: 1,
+        deterministic: false,
+        ..ShardConfig::default()
+    };
     let got = s.shard_gemm(&a, &b, &c, &cfg, &transport).unwrap();
     let want = TiledGemm::from_model(s.model().clone()).try_execute(&a, &b, &c).unwrap();
     assert_eq!(got.data, want.data, "cross-process GEMM must be bit-identical");
@@ -97,6 +102,7 @@ impl WorkerTransport for FirstChildDead {
         Ok(WorkerIo {
             input: Box::new(child.stdin.take().expect("piped stdin")),
             output: Box::new(child.stdout.take().expect("piped stdout")),
+            stderr: None,
             handle: Box::new(Reaper(child)),
         })
     }
@@ -112,7 +118,8 @@ fn killed_child_loses_no_jobs_and_reaps_cleanly() {
         real: ProcessTransport::with_binary(binary()),
         launches: AtomicUsize::new(0),
     };
-    let cfg = ShardConfig { workers: 2, inflight: 0, child_workers: 1, deterministic: true };
+    let cfg =
+        ShardConfig { workers: 2, child_workers: 1, deterministic: true, ..ShardConfig::default() };
     let mut out = Vec::new();
     let report = shard_campaign(jobs.clone(), &cfg, &flaky, &mut out).unwrap();
     assert_eq!(report.total_jobs, 6, "jobs owned by the dead child were requeued");
@@ -140,7 +147,7 @@ fn session_shard_campaign_self_verifies_across_processes() {
         .unwrap();
     let transport = ProcessTransport::with_binary(binary());
     let cfg = CampaignConfig { workers: 2, jobs: 4, batch: 10, seed: 3 };
-    let shard_cfg = ShardConfig { workers: 2, inflight: 0, child_workers: 2, deterministic: false };
+    let shard_cfg = ShardConfig { workers: 2, ..ShardConfig::default() };
     let mut out = Vec::new();
     let report = s.shard_campaign(&cfg, &shard_cfg, &transport, &mut out).unwrap();
     assert_eq!(report.total_jobs, 4);
