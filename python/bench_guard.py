@@ -31,6 +31,16 @@ Two checks over a fresh ``BENCH_hotpath.json``:
      runs (env ``GUARD_MIN_COMPILED_SPEEDUP`` overrides both). Catches
      the compiled dispatch silently falling back to the interpreter or
      a monomorphized kernel regressing below interpreted speed.
+   - ``serve`` section — the TCP service tier, two numbers from a live
+     ``serve --tcp`` server: a warm content-addressed cache hit vs
+     recomputing the identical deterministic job (floor: 2.0 on full
+     runs, 1.1 on smoke; env ``GUARD_MIN_CACHE_HIT_SPEEDUP`` overrides
+     both), and the marginal per-job cost of the TCP seam vs the
+     ``serve --jsonl`` stdin loop it wraps, as a finite difference so
+     connection/child startup cancels (ceiling: 3.0 on full runs, 6.0
+     on smoke; env ``GUARD_MAX_NET_OVERHEAD`` overrides both). Catches
+     the cache degrading to recompute speed and the socket seam getting
+     expensive relative to the stdin path.
 
 2. **Cross-run**: record-by-record, the fresh run must not regress more
    than ``REGRESSION_FACTOR`` (2x) against the committed baseline. When
@@ -82,6 +92,20 @@ def compiled_floor(fresh):
     if env is not None:
         return float(env)
     return 0.85 if fresh.get("smoke") else 1.0
+
+
+def serve_hit_floor(fresh):
+    env = os.environ.get("GUARD_MIN_CACHE_HIT_SPEEDUP")
+    if env is not None:
+        return float(env)
+    return 1.1 if fresh.get("smoke") else 2.0
+
+
+def serve_overhead_ceiling(fresh):
+    env = os.environ.get("GUARD_MAX_NET_OVERHEAD")
+    if env is not None:
+        return float(env)
+    return 6.0 if fresh.get("smoke") else 3.0
 
 
 def load(path):
@@ -210,6 +234,50 @@ def main():
             )
         else:
             print(f"guard: compiled.{family} = {speedup:.2f}x (>= {floor:.2f}x) ok")
+
+    # --- check 1e: TCP service tier (cache hit + seam overhead) -----------
+    # Two numbers from a live `serve --tcp` server: a warm cache hit must
+    # be meaningfully faster than recomputing the same deterministic job,
+    # and the marginal per-job cost of the TCP seam must stay within a
+    # small factor of the `serve --jsonl` stdin loop it wraps.
+    serve = fresh.get("serve") or {}
+    if not serve:
+        failures.append("no `serve` section in fresh run (TCP service-tier bench missing)")
+    else:
+        floor = serve_hit_floor(fresh)
+        hit = serve.get("cache_hit_speedup")
+        if hit is None:
+            failures.append(
+                "serve.cache_hit_speedup is null -- bench emitted no measurement"
+            )
+        elif hit < floor:
+            failures.append(
+                f"serve.cache_hit_speedup = {hit:.2f}x < {floor:.2f}x: "
+                "a warm cache hit should beat recomputing the job"
+            )
+        else:
+            print(f"guard: serve.cache_hit_speedup = {hit:.2f}x (>= {floor:.2f}x) ok")
+        ceiling = serve_overhead_ceiling(fresh)
+        overhead = serve.get("overhead_tcp_vs_stdin")
+        if overhead is None and serve.get("measurable") is False:
+            print(
+                "guard: serve seam marginals below timer resolution -- "
+                "overhead check skipped this run"
+            )
+        elif overhead is None:
+            failures.append(
+                "serve.overhead_tcp_vs_stdin is null -- bench emitted no measurement"
+            )
+        elif overhead > ceiling:
+            failures.append(
+                f"serve.overhead_tcp_vs_stdin = {overhead:.2f}x > {ceiling:.2f}x: "
+                "the TCP seam costs too much per job vs the stdin loop"
+            )
+        else:
+            print(
+                f"guard: serve.overhead_tcp_vs_stdin = {overhead:.2f}x "
+                f"(<= {ceiling:.2f}x) ok"
+            )
 
     # --- check 2: cross-run vs committed baseline ------------------------
     base = None

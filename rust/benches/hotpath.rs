@@ -325,6 +325,151 @@ fn main() {
         ),
     }
 
+    // === TCP service tier: cache-hit latency + marginal seam overhead ========
+    // Two numbers for the `serve` section of BENCH_hotpath.json, both over
+    // a live `serve --tcp` server with real child workers:
+    //
+    // - cache_hit_speedup: wall time of an identical deterministic job
+    //   stream cold (every job computed by the pool) vs warm (every job
+    //   answered from the content-addressed cache). The cache exists to
+    //   make this ratio large; bench_guard enforces the floor
+    //   (GUARD_MIN_CACHE_HIT_SPEEDUP overrides).
+    // - overhead_tcp_vs_stdin: marginal per-job cost of the TCP seam vs
+    //   the `serve --jsonl` stdin loop, as a finite difference so
+    //   connection setup and child startup cancel. Fresh seeds every run
+    //   keep the deterministic cache out of this measurement. bench_guard
+    //   enforces the ceiling (GUARD_MAX_NET_OVERHEAD overrides).
+    let serve_pair = shard_pair;
+    let serve_batch = shard_batch;
+    let serve_listener =
+        std::net::TcpListener::bind("127.0.0.1:0").expect("serve bench: bind ephemeral port");
+    let serve_addr = serve_listener.local_addr().expect("serve bench: local addr");
+    let serve_cfg = mma_sim::session::NetConfig {
+        shard: mma_sim::session::ShardConfig {
+            workers: 1,
+            ..mma_sim::session::ShardConfig::default()
+        },
+        queue_depth: 64,
+        deterministic: true,
+        cache_max: 4096,
+        ..mma_sim::session::NetConfig::default()
+    };
+    let server = std::thread::spawn(move || {
+        let transport =
+            mma_sim::session::ProcessTransport::with_binary(env!("CARGO_BIN_EXE_mma-sim"));
+        mma_sim::session::serve_tcp(serve_listener, &serve_cfg, &transport)
+    });
+    let make_stream = |seeds: &[u64]| -> String {
+        seeds
+            .iter()
+            .map(|s| format!("{{\"pair\":\"{serve_pair}\",\"batch\":{serve_batch},\"seed\":{s}}}\n"))
+            .collect()
+    };
+    let tcp_round = |input: &str| -> f64 {
+        use std::io::{Read, Write};
+        let mut s = std::net::TcpStream::connect(serve_addr).expect("serve bench: connect");
+        let t = std::time::Instant::now();
+        s.write_all(input.as_bytes()).expect("serve bench: send");
+        s.shutdown(std::net::Shutdown::Write).expect("serve bench: half-close");
+        let mut out = String::new();
+        s.read_to_string(&mut out).expect("serve bench: read replies");
+        let dt = t.elapsed().as_secs_f64();
+        assert_eq!(
+            out.lines().count(),
+            input.lines().count() + 1,
+            "serve bench: every job must resolve (plus the summary)"
+        );
+        dt
+    };
+    // fresh, never-repeating seeds so a run never accidentally warms the
+    // cache for a later measurement
+    let fresh_seed = std::cell::Cell::new(0x77AA_0000u64);
+    let take_seeds = |n: usize| -> Vec<u64> {
+        let base = fresh_seed.get();
+        fresh_seed.set(base + n as u64);
+        (0..n as u64).map(|i| base + i).collect()
+    };
+    // untimed warmup: children finish registry + LUT warm before timing
+    tcp_round(&make_stream(&take_seeds(2)));
+
+    let hit_jobs = 16usize;
+    let hit_seeds: Vec<u64> = (0..hit_jobs as u64).map(|i| 0x0011_AA00 + i).collect();
+    let hit_stream = make_stream(&hit_seeds);
+    let t_cold = tcp_round(&hit_stream);
+    let t_warm = tcp_round(&hit_stream).min(tcp_round(&hit_stream));
+    let hit_speedup = if t_cold > 0.0 && t_warm > 0.0 { Some(t_cold / t_warm) } else { None };
+    match hit_speedup {
+        Some(x) => println!(
+            "    serve cache: cold {:.3} ms/job, warm {:.3} ms/job, hit speedup {x:.2}x",
+            t_cold * 1e3 / hit_jobs as f64,
+            t_warm * 1e3 / hit_jobs as f64
+        ),
+        None => println!("    serve cache: round trips below timer resolution"),
+    }
+
+    let stdin_campaign = |jobs: usize| -> f64 {
+        use std::io::Write;
+        let input = make_stream(&take_seeds(jobs));
+        let mut child = std::process::Command::new(env!("CARGO_BIN_EXE_mma-sim"))
+            .args(["serve", "--jsonl", "--workers", "2", "--deterministic"])
+            .stdin(std::process::Stdio::piped())
+            .stdout(std::process::Stdio::piped())
+            .stderr(std::process::Stdio::null())
+            .spawn()
+            .expect("serve bench: spawn serve --jsonl");
+        let t = std::time::Instant::now();
+        child
+            .stdin
+            .take()
+            .expect("serve bench: child stdin")
+            .write_all(input.as_bytes())
+            .expect("serve bench: feed jobs");
+        let out = child.wait_with_output().expect("serve bench: child output");
+        assert!(out.status.success(), "serve bench: stdin loop failed");
+        t.elapsed().as_secs_f64()
+    };
+    let tcp_campaign = |jobs: usize| -> f64 { tcp_round(&make_stream(&take_seeds(jobs))) };
+    let (net_jobs_lo, net_jobs_hi) = (8usize, 24usize);
+    let best2 = |f: &dyn Fn(usize) -> f64, jobs: usize| f(jobs).min(f(jobs));
+    let t_stdin_lo = best2(&stdin_campaign, net_jobs_lo);
+    let t_stdin_hi = best2(&stdin_campaign, net_jobs_hi);
+    let t_tcp_lo = best2(&tcp_campaign, net_jobs_lo);
+    let t_tcp_hi = best2(&tcp_campaign, net_jobs_hi);
+    let net_span = (net_jobs_hi - net_jobs_lo) as f64;
+    let marg_stdin = (t_stdin_hi - t_stdin_lo) / net_span;
+    let marg_tcp = (t_tcp_hi - t_tcp_lo) / net_span;
+    // same rule as the shard section: a non-positive finite difference is
+    // scheduler noise, not a measurement — report "not measurable" and let
+    // the guard skip with a note instead of judging garbage
+    let net_overhead =
+        if marg_stdin > 0.0 && marg_tcp > 0.0 { Some(marg_tcp / marg_stdin) } else { None };
+    match net_overhead {
+        Some(x) => println!(
+            "    serve seam: stdin marginal {:.3} ms/job, TCP marginal {:.3} ms/job, \
+             overhead {x:.2}x",
+            marg_stdin * 1e3,
+            marg_tcp * 1e3
+        ),
+        None => println!(
+            "    serve seam: marginals below timer resolution (stdin {:.3} ms/job, \
+             TCP {:.3} ms/job) — overhead not measurable this run",
+            marg_stdin * 1e3,
+            marg_tcp * 1e3
+        ),
+    }
+    {
+        use std::io::{Read, Write};
+        let mut s = std::net::TcpStream::connect(serve_addr).expect("serve bench: shutdown");
+        s.write_all(b"{\"shutdown\":true}\n").expect("serve bench: shutdown frame");
+        s.shutdown(std::net::Shutdown::Write).expect("serve bench: half-close");
+        let mut ack = String::new();
+        s.read_to_string(&mut ack).expect("serve bench: shutdown ack");
+    }
+    server
+        .join()
+        .expect("serve bench: server thread")
+        .expect("serve bench: server must exit cleanly");
+
     // === narrow-format decode & product LUTs =================================
     // Decode-bound and product-bound micro-benchmarks: the bit-level
     // reference path vs the table-driven fast path over identical inputs.
@@ -566,6 +711,38 @@ fn main() {
         None => json.push_str("    \"overhead_marginal_vs_inprocess\": null,\n"),
     }
     json.push_str(&format!("    \"measurable\": {}\n", shard_overhead.is_some()));
+    json.push_str("  },\n");
+    json.push_str("  \"serve\": {\n");
+    json.push_str(&format!("    \"pair\": \"{serve_pair}\",\n"));
+    json.push_str(&format!("    \"batch\": {serve_batch},\n"));
+    json.push_str(&format!("    \"hit_jobs\": {hit_jobs},\n"));
+    json.push_str(&format!(
+        "    \"cold_ms_per_job\": {:.4},\n",
+        t_cold * 1e3 / hit_jobs as f64
+    ));
+    json.push_str(&format!(
+        "    \"warm_hit_ms_per_job\": {:.4},\n",
+        t_warm * 1e3 / hit_jobs as f64
+    ));
+    match hit_speedup {
+        Some(x) => json.push_str(&format!("    \"cache_hit_speedup\": {x:.3},\n")),
+        None => json.push_str("    \"cache_hit_speedup\": null,\n"),
+    }
+    json.push_str(&format!("    \"jobs_lo\": {net_jobs_lo},\n"));
+    json.push_str(&format!("    \"jobs_hi\": {net_jobs_hi},\n"));
+    json.push_str(&format!(
+        "    \"stdin_marginal_ms_per_job\": {:.4},\n",
+        marg_stdin * 1e3
+    ));
+    json.push_str(&format!(
+        "    \"tcp_marginal_ms_per_job\": {:.4},\n",
+        marg_tcp * 1e3
+    ));
+    match net_overhead {
+        Some(x) => json.push_str(&format!("    \"overhead_tcp_vs_stdin\": {x:.3},\n")),
+        None => json.push_str("    \"overhead_tcp_vs_stdin\": null,\n"),
+    }
+    json.push_str(&format!("    \"measurable\": {}\n", net_overhead.is_some()));
     json.push_str("  },\n");
     json.push_str("  \"lut\": {\n");
     json.push_str(&format!("    \"decode_fp16_speedup\": {sp_dec16:.3},\n"));

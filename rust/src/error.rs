@@ -84,6 +84,10 @@ pub enum ApiError {
     /// protocol. `detail` carries the forensic context the pool gathered —
     /// including the dead child's last stderr lines when it captured any.
     Shard { detail: String },
+    /// A network-service-tier failure: the listener could not bind, a
+    /// cache artifact could not be read or written, or the shared pool's
+    /// service thread died underneath live connections.
+    Net { detail: String },
 }
 
 impl fmt::Display for ApiError {
@@ -148,6 +152,7 @@ impl fmt::Display for ApiError {
                  or the pool was shut down)"
             ),
             ApiError::Shard { detail } => write!(f, "shard failure: {detail}"),
+            ApiError::Net { detail } => write!(f, "serve tier: {detail}"),
         }
     }
 }

@@ -28,7 +28,17 @@
 //!   harness lives in [`session::faults`]: seeded, reproducible
 //!   crash/hang/garbage/truncate/delay schedules applied through a
 //!   `ChaosTransport` decorator (in-process) or the workers' own
-//!   `--chaos` flag (real processes). Start here; the layers below are
+//!   `--chaos` flag (real processes). Above the pool sits the network
+//!   service tier ([`session::net`], `mma-sim serve --tcp`): many
+//!   concurrent TCP clients speak the same JSON-lines protocol
+//!   per connection (framed by [`session::framing`]), multiplexed onto
+//!   one shared long-lived `ShardPool` in service mode with explicit
+//!   backpressure (`{"ok":false,"retry":true,...}` instead of unbounded
+//!   queueing), a content-addressed result cache
+//!   ([`session::net::cache`]: canonical-JSON job keys, vendored
+//!   FNV-1a/SipHash addressing, persistent warm-restart artifacts under
+//!   `--cache-dir`), and a counters surface ([`session::net::stats`],
+//!   the `{"stats":true}` request). Start here; the layers below are
 //!   the machinery it drives.
 //! - [`error`] — the structured [`ApiError`] every validated entry point
 //!   rejects malformed input with (a leaf module, so the layers below can

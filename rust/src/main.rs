@@ -103,8 +103,23 @@ fn print_help() {
          \x20 serve [--workers N] [--jobs N] [--batch N] [--pjrt]\n\
          \x20                                    one-shot verification campaign\n\
          \x20 serve --jsonl [--workers N]        long-running service: read job lines\n\
-         \x20                                    {{\"pair\":…,\"batch\":…,\"seed\":…}} on stdin,\n\
+         \x20       [--deterministic]            {{\"pair\":…,\"batch\":…,\"seed\":…}} on stdin,\n\
          \x20                                    emit live outcome lines + final summary\n\
+         \x20                                    (--deterministic zeroes all timing)\n\
+         \x20 serve --tcp ADDR                   multi-client network service: same\n\
+         \x20       [--workers N] [--child-workers W]  wire protocol per connection, all\n\
+         \x20       [--queue-depth Q]            clients multiplexed onto one shared\n\
+         \x20       [--deterministic]            hardened worker pool; overflow answers\n\
+         \x20       [--cache-dir DIR]            {{\"ok\":false,\"retry\":true,…}}; with\n\
+         \x20       [--cache-max N]              --deterministic, outcomes memoized in a\n\
+         \x20       [--stats-every SECS]         content-addressed cache (persisted under\n\
+         \x20                                    --cache-dir; warm restarts). Extra\n\
+         \x20                                    request types: {{\"stats\":true}} and\n\
+         \x20                                    {{\"shutdown\":true}} (drain + exit 0).\n\
+         \x20                                    Prints {{\"listening\":\"IP:PORT\"}} on\n\
+         \x20                                    stdout (bind ADDR :0 for ephemeral)\n\
+         \x20 serve --connect ADDR               pipe client for a --tcp server: stdin\n\
+         \x20                                    to socket, replies to stdout\n\
          \x20 shard [--workers N] [--jobs J] [--batch B] [--seed S] [--pair NAME]...\n\
          \x20       [--child-workers W] [--inflight K] [--deterministic]\n\
          \x20                                    campaign sharded across N child\n\
@@ -454,6 +469,14 @@ fn verify_pairs(args: &[String]) -> Result<Vec<VerifyPair>> {
 }
 
 fn cmd_serve(args: &[String]) -> Result<()> {
+    if let Some(addr) = flag(args, "--connect") {
+        // scripted pipe client: stdin -> server, server -> stdout
+        session::connect_pipe(&addr)?;
+        return Ok(());
+    }
+    if let Some(addr) = flag(args, "--tcp") {
+        return serve_tcp_from_args(args, &addr);
+    }
     let workers = parsed(args, "--workers", 4usize)?;
     let pairs = verify_pairs(args)?;
     if has(args, "--jsonl") {
@@ -461,6 +484,7 @@ fn cmd_serve(args: &[String]) -> Result<()> {
             workers,
             queue_depth: 0,
             max_line_bytes: parsed(args, "--max-line-bytes", 0usize)?,
+            deterministic: has(args, "--deterministic"),
         };
         eprintln!("serve: {} pairs, {workers} workers, reading job lines from stdin", pairs.len());
         let stdin = std::io::stdin();
@@ -490,5 +514,51 @@ fn cmd_serve(args: &[String]) -> Result<()> {
     );
     let report = session::campaign(pairs, &cfg)?;
     println!("{}", report.render());
+    Ok(())
+}
+
+/// `serve --tcp <addr>`: the multi-client network service tier. Binds,
+/// announces the resolved address as one machine-readable stdout line
+/// (scripted clients bind port 0 and read it), then serves until a
+/// client sends `{"shutdown": true}`.
+fn serve_tcp_from_args(args: &[String], addr: &str) -> Result<()> {
+    use std::io::Write;
+    let cfg = session::NetConfig {
+        shard: ShardConfig {
+            workers: parsed(args, "--workers", 2usize)?,
+            inflight: parsed(args, "--inflight", 0usize)?,
+            child_workers: parsed(args, "--child-workers", 2usize)?,
+            deterministic: has(args, "--deterministic"),
+            job_timeout_ms: parsed(args, "--job-timeout", 0u64)?,
+            max_worker_kills: parsed(args, "--max-worker-kills", 3usize)?,
+            respawn_base_ms: parsed(args, "--respawn-base", 25u64)?,
+            max_spawns: parsed(args, "--max-spawns", 0usize)?,
+        },
+        queue_depth: parsed(args, "--queue-depth", 0usize)?,
+        max_line_bytes: parsed(args, "--max-line-bytes", 0usize)?,
+        deterministic: has(args, "--deterministic"),
+        cache_dir: flag(args, "--cache-dir").map(Into::into),
+        cache_max: parsed(args, "--cache-max", 65_536usize)?,
+        stats_every_secs: parsed(args, "--stats-every", 0u64)?,
+    };
+    let mut transport = ProcessTransport::current_exe()?;
+    if let Some(spec) = flag(args, "--chaos") {
+        transport = transport.with_chaos(ChaosPlan::parse(&spec)?);
+    }
+    let listener = std::net::TcpListener::bind(addr)?;
+    let local = listener.local_addr()?;
+    // the explicit flush matters: stdout is block-buffered under a pipe,
+    // and scripted clients block on this line to learn the port
+    let mut stdout = std::io::stdout();
+    writeln!(stdout, "{{\"listening\":\"{local}\"}}")?;
+    stdout.flush()?;
+    eprintln!(
+        "serve: tcp on {local}, {} worker processes x {} threads, queue depth {}{}",
+        cfg.shard.workers.max(1),
+        cfg.shard.child_workers.max(1),
+        cfg.resolved_queue_depth(),
+        if cfg.deterministic { ", deterministic + cached" } else { "" }
+    );
+    session::serve_tcp(listener, &cfg, &transport)?;
     Ok(())
 }

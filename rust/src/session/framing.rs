@@ -1,0 +1,272 @@
+//! Bounded JSON-lines framing, shared by every service seam.
+//!
+//! The stdin serve loops ([`serve_jsonl`](crate::session::serve::serve_jsonl),
+//! [`serve_cases`](crate::session::serve::serve_cases)) and the TCP service
+//! tier ([`serve_tcp`](crate::session::net::serve_tcp)) all read
+//! newline-delimited JSON frames from an untrusted peer. `input.lines()`
+//! would buffer an arbitrarily long line in full before returning — a
+//! single garbage frame without a newline could then OOM a long-running
+//! service — so framing here reads via `fill_buf`/`consume` and, once a
+//! configurable cap is crossed, keeps consuming (without storing) to the
+//! newline or end of input. The stream stays frame-aligned past an
+//! oversized line: the caller answers it with a structured error and the
+//! next frame arrives intact.
+//!
+//! [`BoundedLineReader`] is the stateful form: its partial-line buffer
+//! survives transient I/O errors (`WouldBlock`/`TimedOut` from a socket
+//! read timeout), which the TCP tier relies on to poll a shutdown flag
+//! mid-line without corrupting the frame in progress.
+//! [`read_bounded_line`] is the one-shot convenience used by the
+//! blocking stdin loops.
+
+use std::io::BufRead;
+
+/// Default cap on a single input frame: 64 MiB comfortably holds the
+/// largest legitimate frame (a `set_b` matrix for a big GEMM) while
+/// bounding what a garbage peer can make the service buffer.
+pub const DEFAULT_MAX_LINE_BYTES: usize = 64 << 20;
+
+/// One bounded read off the input stream.
+pub enum BoundedLine {
+    /// A complete line within the cap (terminator stripped, lossy UTF-8).
+    Line(String),
+    /// A line that exceeded `limit` bytes; the whole oversized line has
+    /// been consumed and discarded, so the stream stays frame-aligned.
+    Oversized { limit: usize },
+}
+
+/// A stateful bounded line reader over any [`BufRead`].
+///
+/// Unlike the one-shot [`read_bounded_line`], the partial-line state
+/// (buffered prefix, oversized flag) lives in the struct, so a transient
+/// error from the underlying reader — a socket read timeout surfacing as
+/// `WouldBlock`/`TimedOut` — loses nothing: the caller handles the error
+/// (e.g. checks a shutdown flag) and calls [`next_line`] again to resume
+/// exactly where the frame left off.
+///
+/// [`next_line`]: BoundedLineReader::next_line
+pub struct BoundedLineReader<R> {
+    inner: R,
+    buf: Vec<u8>,
+    oversized: bool,
+    cap: usize,
+}
+
+impl<R: BufRead> BoundedLineReader<R> {
+    /// Wrap `inner`, capping each frame at `cap` bytes (0 falls back to
+    /// [`DEFAULT_MAX_LINE_BYTES`]).
+    pub fn new(inner: R, cap: usize) -> Self {
+        let cap = if cap > 0 { cap } else { DEFAULT_MAX_LINE_BYTES };
+        Self { inner, buf: Vec::new(), oversized: false, cap }
+    }
+
+    /// Read the next newline-terminated line, buffering at most `cap`
+    /// bytes of it. Returns `Ok(None)` on end of input. Errors from the
+    /// underlying reader propagate with the partial-frame state intact —
+    /// retrying after a `WouldBlock` resumes the same frame.
+    pub fn next_line(&mut self) -> std::io::Result<Option<BoundedLine>> {
+        loop {
+            let chunk = self.inner.fill_buf()?;
+            if chunk.is_empty() {
+                // end of input: flush whatever the last (unterminated) line held
+                let oversized = std::mem::take(&mut self.oversized);
+                let buf = std::mem::take(&mut self.buf);
+                return Ok(match (buf.is_empty(), oversized) {
+                    (true, false) => None,
+                    (_, true) => Some(BoundedLine::Oversized { limit: self.cap }),
+                    (false, false) => {
+                        Some(BoundedLine::Line(String::from_utf8_lossy(&buf).into()))
+                    }
+                });
+            }
+            let newline = chunk.iter().position(|&b| b == b'\n');
+            let take = newline.map(|i| i + 1).unwrap_or(chunk.len());
+            if !self.oversized {
+                let keep = newline.unwrap_or(take);
+                if self.buf.len() + keep > self.cap {
+                    self.oversized = true;
+                    self.buf.clear();
+                } else {
+                    self.buf.extend_from_slice(&chunk[..keep]);
+                }
+            }
+            self.inner.consume(take);
+            if newline.is_some() {
+                if std::mem::take(&mut self.oversized) {
+                    return Ok(Some(BoundedLine::Oversized { limit: self.cap }));
+                }
+                let mut buf = std::mem::take(&mut self.buf);
+                if buf.last() == Some(&b'\r') {
+                    buf.pop();
+                }
+                return Ok(Some(BoundedLine::Line(String::from_utf8_lossy(&buf).into())));
+            }
+        }
+    }
+}
+
+/// One-shot bounded read: read one newline-terminated line off `input`,
+/// buffering at most `cap` bytes of it. Returns `Ok(None)` on end of
+/// input. This is the blocking-stdin form — a transient error discards
+/// any partial frame, which is fine there because the stdin loops treat
+/// every error as fatal; sockets with read timeouts should hold a
+/// [`BoundedLineReader`] instead.
+pub fn read_bounded_line(
+    input: &mut impl BufRead,
+    cap: usize,
+) -> std::io::Result<Option<BoundedLine>> {
+    BoundedLineReader::new(input, cap).next_line()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bounded_reader_splits_caps_and_flushes_the_tail() {
+        // ordinary lines within the cap round-trip, including the
+        // unterminated tail and CRLF endings
+        let mut input = "one\r\ntwo\nlast".as_bytes();
+        let mut lines = Vec::new();
+        while let Some(l) = read_bounded_line(&mut input, 64).unwrap() {
+            match l {
+                BoundedLine::Line(s) => lines.push(s),
+                BoundedLine::Oversized { .. } => panic!("nothing here exceeds the cap"),
+            }
+        }
+        assert_eq!(lines, ["one", "two", "last"]);
+
+        // an oversized line is consumed to its newline (stream stays
+        // aligned: the following short line still arrives intact), and an
+        // oversized unterminated tail is reported too
+        let long = "x".repeat(100);
+        let stream = format!("{long}\nshort\n{long}");
+        let mut input = stream.as_bytes();
+        let mut got = Vec::new();
+        while let Some(l) = read_bounded_line(&mut input, 16).unwrap() {
+            got.push(match l {
+                BoundedLine::Line(s) => s,
+                BoundedLine::Oversized { limit } => format!("<oversized:{limit}>"),
+            });
+        }
+        assert_eq!(got, ["<oversized:16>", "short", "<oversized:16>"]);
+    }
+
+    #[test]
+    fn cap_boundary_is_inclusive() {
+        // a line of exactly `cap` bytes passes; one more byte trips it
+        let mut input = "abcd\nabcde\n".as_bytes();
+        let mut reader = BoundedLineReader::new(&mut input, 4);
+        assert!(matches!(reader.next_line().unwrap(), Some(BoundedLine::Line(s)) if s == "abcd"));
+        assert!(matches!(
+            reader.next_line().unwrap(),
+            Some(BoundedLine::Oversized { limit: 4 })
+        ));
+        assert!(reader.next_line().unwrap().is_none());
+    }
+
+    /// A reader that hands out its data in scripted chunks, interleaving
+    /// `WouldBlock` errors — the shape of a socket with a read timeout.
+    struct Stutter {
+        script: Vec<Option<Vec<u8>>>,
+        idx: usize,
+        within: usize,
+    }
+
+    impl std::io::Read for Stutter {
+        fn read(&mut self, out: &mut [u8]) -> std::io::Result<usize> {
+            let chunk = self.fill_buf()?;
+            let n = chunk.len().min(out.len());
+            out[..n].copy_from_slice(&chunk[..n]);
+            self.consume(n);
+            Ok(n)
+        }
+    }
+
+    impl BufRead for Stutter {
+        fn fill_buf(&mut self) -> std::io::Result<&[u8]> {
+            while self.idx < self.script.len() {
+                match &self.script[self.idx] {
+                    None => {
+                        self.idx += 1;
+                        return Err(std::io::Error::new(
+                            std::io::ErrorKind::WouldBlock,
+                            "stutter",
+                        ));
+                    }
+                    Some(chunk) if self.within >= chunk.len() => {
+                        self.idx += 1;
+                        self.within = 0;
+                    }
+                    Some(_) => break,
+                }
+            }
+            match self.script.get(self.idx) {
+                Some(Some(chunk)) => Ok(&chunk[self.within..]),
+                _ => Ok(&[]),
+            }
+        }
+        fn consume(&mut self, amt: usize) {
+            self.within += amt;
+        }
+    }
+
+    #[test]
+    fn stateful_reader_survives_transient_errors_mid_frame() {
+        // a frame split across a WouldBlock must reassemble intact — the
+        // TCP conn loop polls its shutdown flag on exactly this error
+        let script = vec![
+            Some(b"par".to_vec()),
+            None,
+            Some(b"tial line\nnext\n".to_vec()),
+        ];
+        let mut reader =
+            BoundedLineReader::new(Stutter { script, idx: 0, within: 0 }, 64);
+        assert_eq!(
+            reader.next_line().unwrap_err().kind(),
+            std::io::ErrorKind::WouldBlock
+        );
+        assert!(matches!(
+            reader.next_line().unwrap(),
+            Some(BoundedLine::Line(s)) if s == "partial line"
+        ));
+        assert!(matches!(
+            reader.next_line().unwrap(),
+            Some(BoundedLine::Line(s)) if s == "next"
+        ));
+        assert!(reader.next_line().unwrap().is_none());
+    }
+
+    #[test]
+    fn oversized_state_survives_transient_errors_too() {
+        let script = vec![
+            Some(vec![b'x'; 100]),
+            None,
+            Some(b"\nok\n".to_vec()),
+        ];
+        let mut reader =
+            BoundedLineReader::new(Stutter { script, idx: 0, within: 0 }, 16);
+        assert_eq!(
+            reader.next_line().unwrap_err().kind(),
+            std::io::ErrorKind::WouldBlock
+        );
+        assert!(matches!(
+            reader.next_line().unwrap(),
+            Some(BoundedLine::Oversized { limit: 16 })
+        ));
+        assert!(matches!(
+            reader.next_line().unwrap(),
+            Some(BoundedLine::Line(s)) if s == "ok"
+        ));
+    }
+
+    #[test]
+    fn zero_cap_falls_back_to_the_default() {
+        let mut input = "hello\n".as_bytes();
+        let mut reader = BoundedLineReader::new(&mut input, 0);
+        assert!(matches!(
+            reader.next_line().unwrap(),
+            Some(BoundedLine::Line(s)) if s == "hello"
+        ));
+    }
+}

@@ -144,6 +144,39 @@ impl JsonValue {
         self.write(&mut s);
         s
     }
+
+    /// A canonical copy: object keys sorted bytewise at every depth,
+    /// duplicate keys collapsed to their first occurrence (matching
+    /// [`JsonValue::get`]), arrays canonicalized element-wise. Two
+    /// semantically equal documents encode to identical bytes after
+    /// canonicalization — the property the content-addressed result
+    /// cache keys on. Number text is preserved verbatim, so bit-exact
+    /// u64 payloads stay bit-exact.
+    pub fn canonical(&self) -> JsonValue {
+        match self {
+            JsonValue::Arr(items) => {
+                JsonValue::Arr(items.iter().map(JsonValue::canonical).collect())
+            }
+            JsonValue::Obj(fields) => {
+                let mut out: Vec<(String, JsonValue)> = Vec::with_capacity(fields.len());
+                for (k, v) in fields {
+                    if out.iter().any(|(seen, _)| seen == k) {
+                        continue; // first occurrence wins, as in `get`
+                    }
+                    out.push((k.clone(), v.canonical()));
+                }
+                out.sort_by(|a, b| a.0.cmp(&b.0));
+                JsonValue::Obj(out)
+            }
+            other => other.clone(),
+        }
+    }
+
+    /// [`canonical`](JsonValue::canonical) + [`encode`](JsonValue::encode):
+    /// the canonical byte form used as a cache key.
+    pub fn canonical_encode(&self) -> String {
+        self.canonical().encode()
+    }
 }
 
 fn write_escaped(s: &str, out: &mut String) {
@@ -769,6 +802,60 @@ pub fn decode_report(line: &str) -> Result<CampaignReport, ApiError> {
 }
 
 // ---------------------------------------------------------------------------
+// serve-tier reply frames
+// ---------------------------------------------------------------------------
+//
+// One builder per reply frame, shared by the stdin loop (`serve --jsonl`)
+// and the TCP tier (`serve --tcp`): both seams must emit byte-identical
+// frames for the transport byte-compare invariant to hold, so the frame
+// shapes live here rather than in either loop.
+
+/// `{"ok":true,"outcome":{...}}` — one per completed job.
+pub fn outcome_frame(o: &JobOutcome) -> JsonValue {
+    JsonValue::Obj(vec![
+        ("ok".into(), JsonValue::Bool(true)),
+        ("outcome".into(), outcome_to_json(o)),
+    ])
+}
+
+/// `{"ok":false,"error":"...","id":N?}` — a malformed line, unknown
+/// pair, or failed job; `id` present whenever the request parsed far
+/// enough to carry one.
+pub fn error_frame(msg: &str, id: Option<u64>) -> JsonValue {
+    let mut fields = vec![
+        ("ok".into(), JsonValue::Bool(false)),
+        ("error".into(), JsonValue::str(msg)),
+    ];
+    if let Some(id) = id {
+        fields.push(("id".into(), JsonValue::u64(id)));
+    }
+    JsonValue::Obj(fields)
+}
+
+/// `{"ok":false,"retry":true,"error":"...","id":N?}` — the TCP tier's
+/// structured backpressure reply: the global in-flight queue is full, the
+/// job was *not* enqueued, and the client should resubmit later. The
+/// `retry` marker is what distinguishes "try again" from a terminal
+/// [`error_frame`].
+pub fn retry_frame(msg: &str, id: Option<u64>) -> JsonValue {
+    let mut fields = vec![
+        ("ok".into(), JsonValue::Bool(false)),
+        ("retry".into(), JsonValue::Bool(true)),
+        ("error".into(), JsonValue::str(msg)),
+    ];
+    if let Some(id) = id {
+        fields.push(("id".into(), JsonValue::u64(id)));
+    }
+    JsonValue::Obj(fields)
+}
+
+/// `{"summary":{...}}` — the end-of-stream aggregate, once per
+/// connection (or once per stdin stream).
+pub fn summary_frame(r: &CampaignReport) -> JsonValue {
+    JsonValue::Obj(vec![("summary".into(), report_to_json(r))])
+}
+
+// ---------------------------------------------------------------------------
 // sharded-GEMM band framing
 // ---------------------------------------------------------------------------
 
@@ -850,6 +937,53 @@ mod tests {
             let e = JsonValue::parse(bad).unwrap_err();
             assert!(matches!(e, ApiError::Json { .. }), "{bad}: {e:?}");
         }
+    }
+
+    #[test]
+    fn canonical_sorts_keys_recursively_and_keeps_first_duplicate() {
+        // key order and duplicate keys are the only representational
+        // freedoms a job object has (numbers stay as text), so canonical
+        // form collapses both: any two spellings of the same job must
+        // produce identical cache-key bytes
+        let a = JsonValue::parse(r#"{"pair":"clean","batch":10,"seed":7}"#).unwrap();
+        let b = JsonValue::parse(r#"{"seed":7,"pair":"clean","batch":10}"#).unwrap();
+        assert_eq!(a.canonical_encode(), b.canonical_encode());
+        assert_eq!(a.canonical_encode(), r#"{"batch":10,"pair":"clean","seed":7}"#);
+
+        // nested objects (inside arrays too) sort at every depth
+        let nested = JsonValue::parse(r#"{"z":[{"b":1,"a":2}],"a":{"y":0,"x":1}}"#).unwrap();
+        assert_eq!(
+            nested.canonical_encode(),
+            r#"{"a":{"x":1,"y":0},"z":[{"a":2,"b":1}]}"#
+        );
+
+        // duplicate keys: the first occurrence wins, matching `get`
+        let dup = JsonValue::parse(r#"{"k":1,"a":0,"k":2}"#).unwrap();
+        assert_eq!(dup.canonical_encode(), r#"{"a":0,"k":1}"#);
+        assert_eq!(dup.get("k").and_then(|v| v.as_u64()), Some(1));
+
+        // canonicalizing is idempotent and preserves number text verbatim
+        let big = JsonValue::parse(&format!(r#"{{"n":{}}}"#, u64::MAX)).unwrap();
+        assert_eq!(big.canonical_encode(), big.canonical().canonical_encode());
+        assert_eq!(
+            JsonValue::parse(&big.canonical_encode()).unwrap().get("n").and_then(|v| v.as_u64()),
+            Some(u64::MAX)
+        );
+    }
+
+    #[test]
+    fn reply_frames_have_the_documented_shapes() {
+        let retry = retry_frame("queue full", Some(3)).encode();
+        assert_eq!(retry, r#"{"ok":false,"retry":true,"error":"queue full","id":3}"#);
+        let retry_anon = retry_frame("queue full", None).encode();
+        assert_eq!(retry_anon, r#"{"ok":false,"retry":true,"error":"queue full"}"#);
+
+        let err = error_frame("unknown pair 'x'", Some(1)).encode();
+        assert_eq!(err, r#"{"ok":false,"error":"unknown pair 'x'","id":1}"#);
+        // a retry frame is distinguishable from a terminal error frame
+        let v = JsonValue::parse(&retry).unwrap();
+        assert_eq!(v.get("retry").and_then(|b| b.as_bool()), Some(true));
+        assert!(JsonValue::parse(&err).unwrap().get("retry").is_none());
     }
 
     #[test]

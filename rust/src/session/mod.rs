@@ -34,14 +34,21 @@
 //! schedules.
 
 pub mod faults;
+pub mod framing;
 pub mod json;
+pub mod net;
 pub mod serve;
 pub mod shard;
 
 pub use crate::error::ApiError;
 pub use faults::{ChaosPlan, ChaosTransport, ChaosWriter, Fault, FaultPlan};
+pub use framing::{read_bounded_line, BoundedLine, BoundedLineReader, DEFAULT_MAX_LINE_BYTES};
+pub use net::{connect_pipe, serve_tcp, NetConfig, ResultCache};
 pub use serve::{serve_cases, serve_cases_capped, serve_jsonl, ServeConfig};
-pub use shard::{shard_campaign, ProcessTransport, ShardConfig, ShardPool, WorkerTransport};
+pub use shard::{
+    shard_campaign, PoolHandle, ProcessTransport, ServiceReply, ServiceRequest, ShardConfig,
+    ShardPool, WorkerTransport,
+};
 
 use std::sync::{Arc, Mutex};
 

@@ -1,0 +1,412 @@
+//! Content-addressed result cache for the TCP service tier.
+//!
+//! Every verification job is a pure function of `(pair, batch, seed)`
+//! under `--deterministic` — the same property that makes independent
+//! Tensor Core models cross-validatable against ours makes repeated
+//! verification traffic memoizable. The cache keys each job by its
+//! *canonical* JSON encoding (recursively sorted keys, no `id` field, via
+//! [`JsonValue::canonical_encode`]) so any request spelling of the same
+//! job — reordered keys, client-chosen ids — lands on one entry.
+//!
+//! Entries live in a bounded in-memory map (FIFO eviction) and, when a
+//! `--cache-dir` is configured, as one content-addressed JSON artifact
+//! per outcome: `<fnv1a64><siphash24>.json` holding
+//! `{"key": <canonical job>, "outcome": <normalized outcome>}`. Artifacts
+//! are written atomically (temp file + rename) at insert time, so the
+//! on-disk corpus is always whole — a server restart warm-loads it, and
+//! the directory is shareable between servers the way a campaign corpus
+//! is. Memory eviction never deletes artifacts: disk is the corpus,
+//! memory is the bounded working set.
+//!
+//! Both hash functions are vendored (no new dependencies): FNV-1a 64 for
+//! cheap dispersion and SipHash-2-4 with the reference key for collision
+//! resistance; the 32-hex-digit concatenation names the artifact.
+//! A warm load re-derives every filename from the stored key and skips
+//! files that do not match — a truncated or hand-edited artifact cannot
+//! poison the cache.
+
+use std::collections::{BTreeMap, VecDeque};
+use std::io::Write;
+use std::path::PathBuf;
+use std::sync::Mutex;
+
+use crate::coordinator::{Job, JobOutcome};
+use crate::error::ApiError;
+use crate::session::json::{self, JsonValue};
+
+// ---------------------------------------------------------------------------
+// vendored hashes
+// ---------------------------------------------------------------------------
+
+/// FNV-1a 64-bit: the standard offset basis / prime pair.
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// SipHash-2-4 with an explicit 128-bit key, per the reference
+/// implementation (Aumasson & Bernstein). The test vectors below use the
+/// reference key `k0 = 0x0706050403020100, k1 = 0x0f0e0d0c0b0a0908`.
+pub fn siphash24(k0: u64, k1: u64, bytes: &[u8]) -> u64 {
+    #[inline]
+    fn rotl(x: u64, b: u32) -> u64 {
+        x.rotate_left(b)
+    }
+    #[inline]
+    fn round(v: &mut [u64; 4]) {
+        v[0] = v[0].wrapping_add(v[1]);
+        v[1] = rotl(v[1], 13);
+        v[1] ^= v[0];
+        v[0] = rotl(v[0], 32);
+        v[2] = v[2].wrapping_add(v[3]);
+        v[3] = rotl(v[3], 16);
+        v[3] ^= v[2];
+        v[0] = v[0].wrapping_add(v[3]);
+        v[3] = rotl(v[3], 21);
+        v[3] ^= v[0];
+        v[2] = v[2].wrapping_add(v[1]);
+        v[1] = rotl(v[1], 17);
+        v[1] ^= v[2];
+        v[2] = rotl(v[2], 32);
+    }
+    let mut v = [
+        k0 ^ 0x736f_6d65_7073_6575,
+        k1 ^ 0x646f_7261_6e64_6f6d,
+        k0 ^ 0x6c79_6765_6e65_7261,
+        k1 ^ 0x7465_6462_7974_6573,
+    ];
+    let mut chunks = bytes.chunks_exact(8);
+    for chunk in &mut chunks {
+        let m = u64::from_le_bytes(chunk.try_into().expect("exact 8-byte chunk"));
+        v[3] ^= m;
+        round(&mut v);
+        round(&mut v);
+        v[0] ^= m;
+    }
+    // final block: remaining bytes little-endian, length in the top byte
+    let tail = chunks.remainder();
+    let mut m = (bytes.len() as u64) << 56;
+    for (i, &b) in tail.iter().enumerate() {
+        m |= (b as u64) << (8 * i);
+    }
+    v[3] ^= m;
+    round(&mut v);
+    round(&mut v);
+    v[0] ^= m;
+    v[2] ^= 0xff;
+    round(&mut v);
+    round(&mut v);
+    round(&mut v);
+    round(&mut v);
+    v[0] ^ v[1] ^ v[2] ^ v[3]
+}
+
+/// The fixed SipHash key for content addressing. Addresses must be stable
+/// across servers and restarts (the artifact corpus is shareable), so the
+/// key is a constant — the reference-vector key, which also lets the unit
+/// tests check known SipHash-2-4 outputs.
+const SIP_K0: u64 = 0x0706_0504_0302_0100;
+const SIP_K1: u64 = 0x0f0e_0d0c_0b0a_0908;
+
+/// The canonical cache key for a job: its compact JSON encoding with
+/// recursively sorted keys and **no `id` field** — ids are per-connection
+/// bookkeeping, not part of the job's mathematical identity.
+pub fn cache_key(job: &Job) -> String {
+    JsonValue::Obj(vec![
+        ("batch".into(), JsonValue::u64(job.batch as u64)),
+        ("pair".into(), JsonValue::str(&job.pair)),
+        ("seed".into(), JsonValue::u64(job.seed)),
+    ])
+    .canonical_encode()
+}
+
+/// The content address of a canonical key: 32 hex digits —
+/// FNV-1a 64 then SipHash-2-4, both over the key bytes.
+pub fn content_hash(key: &str) -> String {
+    format!("{:016x}{:016x}", fnv1a64(key.as_bytes()), siphash24(SIP_K0, SIP_K1, key.as_bytes()))
+}
+
+struct CacheInner {
+    map: BTreeMap<String, JobOutcome>,
+    /// Insertion order for FIFO eviction.
+    order: VecDeque<String>,
+}
+
+/// The memoization store: bounded in-memory map plus optional persistent
+/// artifact directory. All methods take `&self`; one mutex guards the map
+/// *and* artifact writes, so two threads inserting the same key cannot
+/// race on the temp file.
+pub struct ResultCache {
+    inner: Mutex<CacheInner>,
+    dir: Option<PathBuf>,
+    max_entries: usize,
+}
+
+impl ResultCache {
+    /// Open the cache: create `dir` if configured, then warm-load every
+    /// valid artifact in it (sorted filename order, capped at
+    /// `max_entries`). `max_entries == 0` disables the cache entirely —
+    /// every lookup misses and inserts are dropped.
+    pub fn open(dir: Option<PathBuf>, max_entries: usize) -> Result<Self, ApiError> {
+        let cache = Self {
+            inner: Mutex::new(CacheInner { map: BTreeMap::new(), order: VecDeque::new() }),
+            dir,
+            max_entries,
+        };
+        if cache.max_entries == 0 {
+            return Ok(cache);
+        }
+        if let Some(dir) = &cache.dir {
+            std::fs::create_dir_all(dir).map_err(|e| ApiError::Net {
+                detail: format!("cannot create cache dir {}: {e}", dir.display()),
+            })?;
+            cache.warm_load(dir)?;
+        }
+        Ok(cache)
+    }
+
+    /// Load artifacts from `dir`, verifying each filename against the
+    /// hash of its stored key. Invalid files are skipped with a stderr
+    /// note, never trusted.
+    fn warm_load(&self, dir: &std::path::Path) -> Result<(), ApiError> {
+        let entries = std::fs::read_dir(dir).map_err(|e| ApiError::Net {
+            detail: format!("cannot read cache dir {}: {e}", dir.display()),
+        })?;
+        let mut names: Vec<PathBuf> = entries
+            .filter_map(|e| e.ok().map(|e| e.path()))
+            .filter(|p| p.extension().is_some_and(|x| x == "json"))
+            .collect();
+        names.sort();
+        let mut inner = self.inner.lock().expect("cache mutex poisoned");
+        for path in names {
+            if inner.map.len() >= self.max_entries {
+                break;
+            }
+            let Ok(text) = std::fs::read_to_string(&path) else {
+                eprintln!("serve: skipping unreadable cache artifact {}", path.display());
+                continue;
+            };
+            match decode_artifact(&text) {
+                Ok((key, outcome)) => {
+                    let expect = format!("{}.json", content_hash(&key));
+                    if !matches!(path.file_name(), Some(n) if n == expect.as_str()) {
+                        eprintln!(
+                            "serve: cache artifact {} does not match its content hash; skipping",
+                            path.display()
+                        );
+                        continue;
+                    }
+                    if inner.map.insert(key.clone(), outcome).is_none() {
+                        inner.order.push_back(key);
+                    }
+                }
+                Err(e) => {
+                    eprintln!("serve: bad cache artifact {}: {e}; skipping", path.display());
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Look up a canonical key. The returned outcome is normalized
+    /// (`id = 0`, `micros = 0`); the caller re-stamps the connection-local
+    /// id before emission.
+    pub fn lookup(&self, key: &str) -> Option<JobOutcome> {
+        if self.max_entries == 0 {
+            return None;
+        }
+        self.inner.lock().expect("cache mutex poisoned").map.get(key).cloned()
+    }
+
+    /// Memoize `outcome` under `key`, normalizing it first. Returns the
+    /// number of entries FIFO-evicted from memory to stay within
+    /// `max_entries`. When a cache dir is configured the artifact is
+    /// written atomically before the lock is released; a failed write
+    /// degrades to memory-only with a stderr note (the cache is an
+    /// optimization — a full disk must not take the server down).
+    pub fn insert(&self, key: &str, outcome: &JobOutcome) -> usize {
+        if self.max_entries == 0 {
+            return 0;
+        }
+        let mut normalized = outcome.clone();
+        normalized.id = 0;
+        normalized.micros = 0;
+        let mut inner = self.inner.lock().expect("cache mutex poisoned");
+        if inner.map.insert(key.to_string(), normalized.clone()).is_some() {
+            return 0; // refreshed an existing entry; artifact already on disk
+        }
+        inner.order.push_back(key.to_string());
+        let mut evicted = 0;
+        while inner.map.len() > self.max_entries {
+            if let Some(old) = inner.order.pop_front() {
+                inner.map.remove(&old);
+                evicted += 1;
+            } else {
+                break;
+            }
+        }
+        if let Some(dir) = &self.dir {
+            if let Err(e) = write_artifact(dir, key, &normalized) {
+                eprintln!("serve: cache artifact write failed ({e}); continuing memory-only");
+            }
+        }
+        evicted
+    }
+
+    /// Entries currently held in memory.
+    pub fn len(&self) -> usize {
+        self.inner.lock().expect("cache mutex poisoned").map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+fn decode_artifact(text: &str) -> Result<(String, JobOutcome), ApiError> {
+    let v = JsonValue::parse(text.trim())?;
+    let key = v
+        .get("key")
+        .ok_or_else(|| ApiError::Json { offset: 0, msg: "artifact missing 'key'".into() })?
+        .canonical_encode();
+    let outcome = v
+        .get("outcome")
+        .ok_or_else(|| ApiError::Json { offset: 0, msg: "artifact missing 'outcome'".into() })
+        .and_then(json::outcome_from_json)?;
+    Ok((key, outcome))
+}
+
+/// Write `{"key": ..., "outcome": ...}` to `<dir>/<hash>.json` via a
+/// temp file + rename, so readers (and warm loads after a crash) never
+/// see a torn artifact. Callers hold the cache mutex, which also makes
+/// the temp filename race-free within this process.
+fn write_artifact(
+    dir: &std::path::Path,
+    key: &str,
+    outcome: &JobOutcome,
+) -> std::io::Result<()> {
+    let key_value = JsonValue::parse(key)
+        .map_err(|e| std::io::Error::other(format!("unencodable cache key: {e}")))?;
+    let artifact = JsonValue::Obj(vec![
+        ("key".into(), key_value),
+        ("outcome".into(), json::outcome_to_json(outcome)),
+    ]);
+    let name = format!("{}.json", content_hash(key));
+    let tmp = dir.join(format!("{name}.tmp"));
+    let fin = dir.join(&name);
+    {
+        let mut f = std::fs::File::create(&tmp)?;
+        writeln!(f, "{}", artifact.encode())?;
+        f.sync_all()?;
+    }
+    std::fs::rename(&tmp, &fin)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn outcome(id: u64, tests: usize) -> JobOutcome {
+        JobOutcome { id, pair: "clean".into(), tests, mismatches: Vec::new(), micros: 123 }
+    }
+
+    #[test]
+    fn siphash24_matches_the_reference_vectors() {
+        // reference key, from the SipHash paper's appendix vectors
+        let (k0, k1) = (SIP_K0, SIP_K1);
+        assert_eq!(siphash24(k0, k1, b""), 0x726f_db47_dd0e_0e31);
+        assert_eq!(siphash24(k0, k1, &[0x00]), 0x74f8_39c5_93dc_67fd);
+        assert_eq!(
+            siphash24(k0, k1, &[0x00, 0x01, 0x02, 0x03, 0x04, 0x05, 0x06]),
+            0xab02_00f5_8b01_d137
+        );
+        assert_eq!(
+            siphash24(k0, k1, &[0x00, 0x01, 0x02, 0x03, 0x04, 0x05, 0x06, 0x07]),
+            0x93f5_f579_9a93_2462
+        );
+    }
+
+    #[test]
+    fn fnv1a64_matches_known_values() {
+        assert_eq!(fnv1a64(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a64(b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(fnv1a64(b"foobar"), 0x8594_4171_f739_67e8);
+    }
+
+    #[test]
+    fn cache_key_is_canonical_and_id_free() {
+        let a = Job { id: 7, pair: "clean".into(), batch: 10, seed: 42 };
+        let b = Job { id: 9000, pair: "clean".into(), batch: 10, seed: 42 };
+        assert_eq!(cache_key(&a), cache_key(&b), "ids must not affect the key");
+        assert_eq!(cache_key(&a), r#"{"batch":10,"pair":"clean","seed":42}"#);
+        // the address is a pure function of the key
+        assert_eq!(content_hash(&cache_key(&a)), content_hash(&cache_key(&b)));
+        assert_eq!(content_hash(&cache_key(&a)).len(), 32);
+    }
+
+    #[test]
+    fn insert_normalizes_and_lookup_round_trips() {
+        let cache = ResultCache::open(None, 8).unwrap();
+        let key = cache_key(&Job { id: 3, pair: "clean".into(), batch: 10, seed: 1 });
+        assert!(cache.lookup(&key).is_none());
+        cache.insert(&key, &outcome(3, 10));
+        let got = cache.lookup(&key).unwrap();
+        assert_eq!(got.id, 0, "cached outcomes are id-normalized");
+        assert_eq!(got.micros, 0, "cached outcomes are timing-normalized");
+        assert_eq!(got.tests, 10);
+    }
+
+    #[test]
+    fn fifo_eviction_is_bounded_and_counted() {
+        let cache = ResultCache::open(None, 2).unwrap();
+        let key = |seed| cache_key(&Job { id: 0, pair: "clean".into(), batch: 1, seed });
+        assert_eq!(cache.insert(&key(1), &outcome(0, 1)), 0);
+        assert_eq!(cache.insert(&key(2), &outcome(0, 1)), 0);
+        assert_eq!(cache.insert(&key(3), &outcome(0, 1)), 1, "oldest entry evicted");
+        assert_eq!(cache.len(), 2);
+        assert!(cache.lookup(&key(1)).is_none(), "FIFO: first in, first out");
+        assert!(cache.lookup(&key(3)).is_some());
+        // re-inserting an existing key refreshes, never evicts
+        assert_eq!(cache.insert(&key(3), &outcome(0, 1)), 0);
+    }
+
+    #[test]
+    fn zero_max_entries_disables_the_cache() {
+        let cache = ResultCache::open(None, 0).unwrap();
+        let key = cache_key(&Job { id: 0, pair: "clean".into(), batch: 1, seed: 1 });
+        cache.insert(&key, &outcome(0, 1));
+        assert!(cache.lookup(&key).is_none());
+        assert_eq!(cache.len(), 0);
+    }
+
+    #[test]
+    fn artifacts_round_trip_through_a_warm_restart() {
+        let dir = std::env::temp_dir().join(format!("mma-cache-test-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let key = cache_key(&Job { id: 5, pair: "clean".into(), batch: 20, seed: 7 });
+        {
+            let cache = ResultCache::open(Some(dir.clone()), 8).unwrap();
+            cache.insert(&key, &outcome(5, 20));
+            let artifact = dir.join(format!("{}.json", content_hash(&key)));
+            assert!(artifact.exists(), "insert must persist an artifact");
+        }
+        // a fresh cache over the same dir is warm
+        let warm = ResultCache::open(Some(dir.clone()), 8).unwrap();
+        let got = warm.lookup(&key).expect("warm restart must find the artifact");
+        assert_eq!((got.id, got.micros, got.tests), (0, 0, 20));
+
+        // corrupt artifacts are skipped, not trusted: rename a valid one
+        std::fs::rename(
+            dir.join(format!("{}.json", content_hash(&key))),
+            dir.join("0000000000000000ffffffffffffffff.json"),
+        )
+        .unwrap();
+        let cold = ResultCache::open(Some(dir.clone()), 8).unwrap();
+        assert!(cold.lookup(&key).is_none(), "mis-addressed artifact must be ignored");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

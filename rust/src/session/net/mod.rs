@@ -1,0 +1,668 @@
+//! The network service tier: many TCP clients, one shared worker pool,
+//! one content-addressed result cache.
+//!
+//! `mma-sim serve --tcp <addr>` turns the JSON-lines verification
+//! protocol into a real multi-client service. Each accepted connection
+//! speaks *exactly* the `serve --jsonl` wire protocol (job lines in,
+//! outcome/error lines out, one summary at end of stream), framed by the
+//! shared [`BoundedLineReader`] discipline, and all connections
+//! multiplex onto **one** long-lived [`ShardPool`] driven in service
+//! mode ([`ShardPool::run_service`]) — the hardened child-process tier
+//! (deadlines, respawn backoff, quarantine) is shared instead of
+//! per-client.
+//!
+//! Three properties define the tier:
+//!
+//! - **Deterministic per-connection streams.** Replies are emitted in
+//!   request order per connection (a sequence-numbered reorder buffer),
+//!   and `--deterministic` zeroes every timing field — so each client's
+//!   reply bytes are identical whether it is the only client or one of
+//!   N, and identical to a `serve --jsonl --workers 1 --deterministic`
+//!   stdin run of the same job stream. Error frames occupy their request
+//!   slot too, which makes the TCP stream *more* deterministic than the
+//!   stdin loop (where error frames race in-flight outcomes).
+//! - **Explicit backpressure.** A single global in-flight bound covers
+//!   every connection; a job that would exceed it is answered
+//!   immediately with `{"ok":false,"retry":true,...}` in its own reply
+//!   slot instead of queueing without bound. The connection stays up —
+//!   overload is a structured reply, never a dropped client.
+//! - **Memoized determinism.** Under `--deterministic` every outcome is
+//!   a pure function of `(pair, batch, seed)`, so results are cached by
+//!   the canonical JSON of the job ([`cache`]) in memory and, with
+//!   `--cache-dir`, as content-addressed artifacts that make restarts
+//!   warm. A cache hit is answered without touching the pool.
+//!
+//! Two extra request types ride the same frame discipline:
+//! `{"stats": true}` replies immediately (out of band) with a
+//! `{"stats": {...}}` counter snapshot, and `{"shutdown": true}` asks
+//! the whole server to drain: stop accepting, finish every in-flight
+//! job, emit each connection's summary, flush, and return cleanly.
+
+pub mod cache;
+pub mod stats;
+
+pub use cache::{cache_key, content_hash, ResultCache};
+pub use stats::NetStats;
+
+use std::collections::BTreeMap;
+use std::io::{BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::time::{Duration, Instant};
+
+use crate::coordinator::CampaignReport;
+use crate::error::ApiError;
+use crate::session::framing::{BoundedLine, BoundedLineReader};
+use crate::session::json::{self, JsonValue};
+use crate::session::shard::{
+    PoolHandle, ServiceReply, ShardConfig, ShardPool, WorkerRole, WorkerTransport,
+};
+
+/// How often connection loops wake from a blocked read to poll the
+/// shutdown flag and drain finished replies.
+const READ_TICK: Duration = Duration::from_millis(100);
+/// Accept-loop poll interval while no connection is arriving.
+const ACCEPT_TICK: Duration = Duration::from_millis(25);
+/// How long a drain waits for any single outstanding reply before
+/// declaring the pool unreachable and failing the remainder explicitly.
+const DRAIN_STEP: Duration = Duration::from_secs(60);
+
+/// Configuration for the TCP service tier.
+#[derive(Clone, Debug)]
+pub struct NetConfig {
+    /// Sizing and hardening for the shared child-process pool.
+    pub shard: ShardConfig,
+    /// Global in-flight bound across *all* connections; 0 resolves to
+    /// `workers * child_workers * 2` (the pool's natural concurrency,
+    /// doubled so submission overlaps execution).
+    pub queue_depth: usize,
+    /// Per-frame input cap; 0 = the shared default.
+    pub max_line_bytes: usize,
+    /// Zero all timing fields and enable the result cache — the mode
+    /// every byte-identity guarantee is stated under.
+    pub deterministic: bool,
+    /// Directory for persistent content-addressed outcome artifacts
+    /// (created if missing, warm-loaded at startup). `None` = memory-only.
+    pub cache_dir: Option<PathBuf>,
+    /// In-memory cache bound (entries); 0 disables caching entirely.
+    pub cache_max: usize,
+    /// Emit a one-line counter summary on stderr every this many
+    /// seconds; 0 disables.
+    pub stats_every_secs: u64,
+}
+
+impl Default for NetConfig {
+    fn default() -> Self {
+        Self {
+            shard: ShardConfig::default(),
+            queue_depth: 0,
+            max_line_bytes: 0,
+            deterministic: false,
+            cache_dir: None,
+            cache_max: 65_536,
+            stats_every_secs: 0,
+        }
+    }
+}
+
+impl NetConfig {
+    /// The effective global in-flight bound.
+    pub fn resolved_queue_depth(&self) -> usize {
+        if self.queue_depth > 0 {
+            self.queue_depth
+        } else {
+            (self.shard.workers.max(1) * self.shard.child_workers.max(1) * 2).max(1)
+        }
+    }
+}
+
+/// State shared by the accept loop and every connection handler. Lives
+/// outside the thread scope so scoped connection threads can borrow it.
+struct ServerShared {
+    stats: NetStats,
+    cache: ResultCache,
+    /// Pool-wide job ids: connections stamp submissions from one counter
+    /// so ids are unique among unresolved jobs (the `run_service`
+    /// contract); each connection maps them back to its local ids.
+    next_global_id: AtomicU64,
+    shutdown: AtomicBool,
+    queue_depth: usize,
+    line_cap: usize,
+    deterministic: bool,
+}
+
+impl ServerShared {
+    /// Claim one slot of the global in-flight bound, or report overload.
+    fn try_acquire(&self) -> bool {
+        let mut cur = self.stats.in_flight.load(Ordering::Relaxed);
+        loop {
+            if cur >= self.queue_depth as u64 {
+                return false;
+            }
+            match self.stats.in_flight.compare_exchange_weak(
+                cur,
+                cur + 1,
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => return true,
+                Err(seen) => cur = seen,
+            }
+        }
+    }
+
+    fn release(&self) {
+        self.stats.in_flight.fetch_sub(1, Ordering::Relaxed);
+    }
+}
+
+/// Run the TCP service on an already-bound listener until a client sends
+/// `{"shutdown": true}`. The caller owns binding (and printing the
+/// resolved address, for ephemeral ports); this function owns everything
+/// after: the shared pool's service thread, the accept loop, one thread
+/// per connection, and the drain on shutdown. Returns `Ok(())` only
+/// after every connection has been drained (no reply truncated
+/// mid-frame), the pool's children have exited, and cache artifacts are
+/// durable on disk (they are written atomically at insert time).
+pub fn serve_tcp(
+    listener: TcpListener,
+    cfg: &NetConfig,
+    transport: &(dyn WorkerTransport + Sync),
+) -> Result<(), ApiError> {
+    let shared = ServerShared {
+        stats: NetStats::default(),
+        cache: ResultCache::open(
+            cfg.cache_dir.clone(),
+            if cfg.deterministic { cfg.cache_max } else { 0 },
+        )?,
+        next_global_id: AtomicU64::new(0),
+        shutdown: AtomicBool::new(false),
+        queue_depth: cfg.resolved_queue_depth(),
+        line_cap: cfg.max_line_bytes,
+        deterministic: cfg.deterministic,
+    };
+    listener
+        .set_nonblocking(true)
+        .map_err(|e| ApiError::Net { detail: format!("cannot poll the listener: {e}") })?;
+
+    std::thread::scope(|s| {
+        // The pool is built *inside* its driver thread (construction and
+        // teardown stay on one thread; the transport only needs Sync, not
+        // the pool). The handle comes back over a channel; if the channel
+        // disconnects first, construction failed and the join tells us why.
+        let (handle_tx, handle_rx) = channel::<PoolHandle>();
+        let shard_cfg = cfg.shard.clone();
+        let service = s.spawn(move || -> Result<(), ApiError> {
+            let role = WorkerRole::Campaign { workers: shard_cfg.child_workers.max(1) };
+            let pool = ShardPool::new(transport, role, &shard_cfg)?;
+            if handle_tx.send(pool.handle()).is_err() {
+                return Ok(()); // server side already gone; nothing to serve
+            }
+            pool.run_service()
+        });
+        let handle = match handle_rx.recv() {
+            Ok(handle) => handle,
+            Err(_) => {
+                return match service.join() {
+                    Ok(Ok(())) => Err(ApiError::Net {
+                        detail: "pool service thread exited before serving".into(),
+                    }),
+                    Ok(Err(e)) => Err(e),
+                    Err(_) => Err(ApiError::Net {
+                        detail: "pool service thread panicked during startup".into(),
+                    }),
+                };
+            }
+        };
+
+        let mut conns = Vec::new();
+        let mut last_stats = Instant::now();
+        while !shared.shutdown.load(Ordering::SeqCst) {
+            match listener.accept() {
+                Ok((stream, _peer)) => {
+                    shared.stats.total_conns.fetch_add(1, Ordering::Relaxed);
+                    shared.stats.active_conns.fetch_add(1, Ordering::Relaxed);
+                    let conn_handle = handle.clone();
+                    let shared = &shared;
+                    conns.push(s.spawn(move || {
+                        if let Err(e) = conn_loop(&stream, conn_handle, shared) {
+                            eprintln!("serve: connection ended abnormally: {e}");
+                        }
+                        shared.stats.active_conns.fetch_sub(1, Ordering::Relaxed);
+                    }));
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(ACCEPT_TICK);
+                }
+                Err(e) => {
+                    // transient accept failure (EMFILE, ECONNABORTED):
+                    // note it and keep serving the clients we have
+                    eprintln!("serve: accept failed: {e}");
+                    std::thread::sleep(ACCEPT_TICK);
+                }
+            }
+            // reap finished connection threads so the handle list stays
+            // bounded by *live* connections, not lifetime connections
+            let mut i = 0;
+            while i < conns.len() {
+                if conns[i].is_finished() {
+                    let _ = conns.swap_remove(i).join();
+                } else {
+                    i += 1;
+                }
+            }
+            if cfg.stats_every_secs > 0
+                && last_stats.elapsed() >= Duration::from_secs(cfg.stats_every_secs)
+            {
+                eprintln!("{}", shared.stats.stderr_line(shared.queue_depth, shared.cache.len()));
+                last_stats = Instant::now();
+            }
+        }
+
+        // shutdown: no new connections; every live connection notices the
+        // flag within one read tick, drains its in-flight jobs, and emits
+        // its summary before closing — then the pool itself drains.
+        for conn in conns {
+            let _ = conn.join();
+        }
+        handle.shutdown();
+        match service.join() {
+            Ok(res) => res,
+            Err(_) => Err(ApiError::Net { detail: "pool service thread panicked".into() }),
+        }
+    })
+}
+
+/// Where one submitted job's reply goes when it comes back.
+struct Pending {
+    /// The connection-local reply slot this job's answer must fill.
+    seq: u64,
+    /// The id the client knows the job by (the one emitted back).
+    local_id: u64,
+    /// The canonical cache key, kept so the outcome can be memoized.
+    key: String,
+}
+
+/// Per-connection protocol state.
+struct ConnState {
+    /// Reply slots: every reply-bearing request takes the next slot.
+    next_seq: u64,
+    /// The next slot to emit (slots always flush in order).
+    next_emit: u64,
+    /// Finished reply lines waiting for their turn.
+    ready: BTreeMap<u64, String>,
+    /// Outstanding pool submissions, by *global* job id.
+    pending: BTreeMap<u64, Pending>,
+    /// The `serve --jsonl` local-id rule, verbatim.
+    next_id: u64,
+    report: CampaignReport,
+}
+
+impl ConnState {
+    fn new() -> Self {
+        Self {
+            next_seq: 0,
+            next_emit: 0,
+            ready: BTreeMap::new(),
+            pending: BTreeMap::new(),
+            next_id: 0,
+            report: CampaignReport::new(),
+        }
+    }
+
+    fn slot(&mut self) -> u64 {
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        seq
+    }
+}
+
+fn net_io(what: &str, e: std::io::Error) -> ApiError {
+    ApiError::Net { detail: format!("{what}: {e}") }
+}
+
+/// Drive one client connection to completion. On any early error the
+/// in-flight gauge is still settled (outstanding replies are awaited or
+/// written off) so the global backpressure bound stays truthful.
+fn conn_loop(stream: &TcpStream, handle: PoolHandle, sh: &ServerShared) -> Result<(), ApiError> {
+    let mut conn = ConnState::new();
+    let (reply_tx, reply_rx) = channel::<ServiceReply>();
+    let res = conn_run(stream, &handle, sh, &mut conn, &reply_tx, &reply_rx);
+    drop(reply_tx);
+    // Error-path gauge hygiene: jobs still pending will resolve inside
+    // the pool regardless; wait for those replies (their lines are
+    // discarded — the client is gone) so `in_flight` comes back down.
+    while !conn.pending.is_empty() {
+        match reply_rx.recv_timeout(DRAIN_STEP) {
+            Ok(reply) => {
+                let id = match &reply {
+                    ServiceReply::Outcome(o) => o.id,
+                    ServiceReply::Failed { id, .. } => *id,
+                };
+                if conn.pending.remove(&id).is_some() {
+                    sh.release();
+                }
+            }
+            Err(_) => {
+                for _ in 0..conn.pending.len() {
+                    sh.release();
+                }
+                conn.pending.clear();
+            }
+        }
+    }
+    res
+}
+
+fn conn_run(
+    stream: &TcpStream,
+    handle: &PoolHandle,
+    sh: &ServerShared,
+    conn: &mut ConnState,
+    reply_tx: &Sender<ServiceReply>,
+    reply_rx: &Receiver<ServiceReply>,
+) -> Result<(), ApiError> {
+    stream.set_nodelay(true).ok();
+    stream
+        .set_read_timeout(Some(READ_TICK))
+        .map_err(|e| net_io("cannot arm the read timeout", e))?;
+    let read_half = stream.try_clone().map_err(|e| net_io("cannot clone the stream", e))?;
+    let mut reader = BoundedLineReader::new(BufReader::new(read_half), sh.line_cap);
+    let mut out = stream;
+    let started = Instant::now();
+
+    let mut reading = true;
+    while reading && !sh.shutdown.load(Ordering::SeqCst) {
+        match reader.next_line() {
+            Ok(Some(BoundedLine::Line(line))) => {
+                handle_line(&line, conn, sh, handle, reply_tx, &mut out)?;
+            }
+            Ok(Some(BoundedLine::Oversized { limit })) => {
+                NetStats::bump(&sh.stats.errors);
+                let seq = conn.slot();
+                let msg = format!("input line exceeds the {limit}-byte frame cap; dropped");
+                conn.ready.insert(seq, json::error_frame(&msg, None).encode());
+            }
+            Ok(None) => reading = false,
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut => {}
+            Err(e) => return Err(net_io("read failed", e)),
+        }
+        drain_replies(conn, sh, reply_rx);
+        flush_ready(&mut out, conn)?;
+    }
+
+    // end of client input (or server shutdown): finish every in-flight
+    // job before the summary — a reply line is never truncated or dropped
+    while !conn.pending.is_empty() {
+        match reply_rx.recv_timeout(DRAIN_STEP) {
+            Ok(reply) => resolve(conn, sh, reply),
+            Err(_) => {
+                // the pool is unreachable; answer the remainder explicitly
+                let orphans: Vec<u64> = conn.pending.keys().copied().collect();
+                for gid in orphans {
+                    let p = conn.pending.remove(&gid).expect("key just listed");
+                    sh.release();
+                    NetStats::bump(&sh.stats.errors);
+                    conn.ready.insert(
+                        p.seq,
+                        json::error_frame("job reply never arrived: pool unavailable", Some(p.local_id))
+                            .encode(),
+                    );
+                }
+            }
+        }
+        flush_ready(&mut out, conn)?;
+    }
+    flush_ready(&mut out, conn)?;
+
+    if sh.deterministic {
+        conn.report.clear_timing();
+    } else {
+        conn.report.wall_micros = started.elapsed().as_micros() as u64;
+    }
+    writeln!(out, "{}", json::summary_frame(&conn.report).encode())
+        .and_then(|()| out.flush())
+        .map_err(|e| net_io("summary write failed", e))?;
+    Ok(())
+}
+
+/// Handle one complete input line: a job, a stats request, a shutdown
+/// request, or garbage — every reply-bearing case claims a reply slot so
+/// the output order is a pure function of the input order.
+fn handle_line(
+    line: &str,
+    conn: &mut ConnState,
+    sh: &ServerShared,
+    handle: &PoolHandle,
+    reply_tx: &Sender<ServiceReply>,
+    out: &mut impl Write,
+) -> Result<(), ApiError> {
+    let trimmed = line.trim();
+    if trimmed.is_empty() {
+        return Ok(());
+    }
+    let v = match JsonValue::parse(trimmed) {
+        Ok(v) => v,
+        Err(e) => {
+            NetStats::bump(&sh.stats.errors);
+            let seq = conn.slot();
+            conn.ready.insert(seq, json::error_frame(&e.to_string(), None).encode());
+            return Ok(());
+        }
+    };
+    if v.get("stats").and_then(|b| b.as_bool()) == Some(true) {
+        // out of band by design: observability must not wait behind a
+        // deep queue of pending outcomes
+        NetStats::bump(&sh.stats.requests);
+        let frame = sh.stats.frame(sh.queue_depth, sh.cache.len());
+        writeln!(out, "{}", frame.encode())
+            .and_then(|()| out.flush())
+            .map_err(|e| net_io("stats write failed", e))?;
+        return Ok(());
+    }
+    if v.get("shutdown").and_then(|b| b.as_bool()) == Some(true) {
+        sh.shutdown.store(true, Ordering::SeqCst);
+        let seq = conn.slot();
+        let ack = JsonValue::Obj(vec![
+            ("ok".into(), JsonValue::Bool(true)),
+            ("shutdown".into(), JsonValue::Bool(true)),
+        ]);
+        conn.ready.insert(seq, ack.encode());
+        return Ok(());
+    }
+    let job = match json::job_from_json(&v, conn.next_id) {
+        Ok(job) => job,
+        Err(e) => {
+            NetStats::bump(&sh.stats.errors);
+            let seq = conn.slot();
+            conn.ready.insert(seq, json::error_frame(&e.to_string(), None).encode());
+            return Ok(());
+        }
+    };
+    NetStats::bump(&sh.stats.requests);
+    conn.next_id = conn.next_id.max(job.id).saturating_add(1);
+    let local_id = job.id;
+    let seq = conn.slot();
+    let key = cache_key(&job);
+
+    if sh.deterministic {
+        if let Some(mut hit) = sh.cache.lookup(&key) {
+            NetStats::bump(&sh.stats.hits);
+            hit.id = local_id;
+            conn.report.absorb(&hit);
+            conn.ready.insert(seq, json::outcome_frame(&hit).encode());
+            return Ok(());
+        }
+        NetStats::bump(&sh.stats.misses);
+    }
+
+    if !sh.try_acquire() {
+        NetStats::bump(&sh.stats.rejected);
+        let msg = format!(
+            "server saturated ({} jobs in flight); resubmit this job",
+            sh.queue_depth
+        );
+        conn.ready.insert(seq, json::retry_frame(&msg, Some(local_id)).encode());
+        return Ok(());
+    }
+    let gid = sh.next_global_id.fetch_add(1, Ordering::SeqCst);
+    let mut submitted = job;
+    submitted.id = gid;
+    conn.pending.insert(gid, Pending { seq, local_id, key });
+    NetStats::bump(&sh.stats.pool_submissions);
+    if let Err(e) = handle.submit(submitted, reply_tx.clone()) {
+        conn.pending.remove(&gid);
+        sh.release();
+        NetStats::bump(&sh.stats.errors);
+        conn.ready.insert(seq, json::error_frame(&e.to_string(), Some(local_id)).encode());
+    }
+    Ok(())
+}
+
+/// Absorb every reply that has already arrived, without blocking.
+fn drain_replies(conn: &mut ConnState, sh: &ServerShared, reply_rx: &Receiver<ServiceReply>) {
+    while let Ok(reply) = reply_rx.try_recv() {
+        resolve(conn, sh, reply);
+    }
+}
+
+/// Route one pool reply into its reply slot: restamp the connection-local
+/// id, normalize timing under `--deterministic`, memoize, absorb.
+fn resolve(conn: &mut ConnState, sh: &ServerShared, reply: ServiceReply) {
+    match reply {
+        ServiceReply::Outcome(mut o) => {
+            let Some(p) = conn.pending.remove(&o.id) else { return };
+            sh.release();
+            o.id = p.local_id;
+            if sh.deterministic {
+                o.micros = 0;
+                let evicted = sh.cache.insert(&p.key, &o);
+                sh.stats.evictions.fetch_add(evicted as u64, Ordering::Relaxed);
+            }
+            conn.report.absorb(&o);
+            conn.ready.insert(p.seq, json::outcome_frame(&o).encode());
+        }
+        ServiceReply::Failed { id, msg, quarantined } => {
+            let Some(p) = conn.pending.remove(&id) else { return };
+            sh.release();
+            NetStats::bump(&sh.stats.errors);
+            // quarantine frames carry the same marker field the stdin
+            // sharding path emits, so parents account for them identically
+            let line = if quarantined {
+                JsonValue::Obj(vec![
+                    ("ok".into(), JsonValue::Bool(false)),
+                    ("error".into(), JsonValue::str(&msg)),
+                    ("id".into(), JsonValue::u64(p.local_id)),
+                    ("quarantined".into(), JsonValue::Bool(true)),
+                ])
+                .encode()
+            } else {
+                json::error_frame(&msg, Some(p.local_id)).encode()
+            };
+            conn.ready.insert(p.seq, line);
+        }
+    }
+}
+
+/// Emit every reply slot that is ready, strictly in slot order.
+fn flush_ready(out: &mut impl Write, conn: &mut ConnState) -> Result<(), ApiError> {
+    let mut wrote = false;
+    while let Some(line) = conn.ready.remove(&conn.next_emit) {
+        writeln!(out, "{line}").map_err(|e| net_io("reply write failed", e))?;
+        conn.next_emit += 1;
+        wrote = true;
+    }
+    if wrote {
+        out.flush().map_err(|e| net_io("reply flush failed", e))?;
+    }
+    Ok(())
+}
+
+/// A scripted pipe client: connect to a running server, forward stdin to
+/// the socket (closing the write half at EOF so the server sees end of
+/// stream and emits the summary), and copy every reply line to stdout.
+/// `mma-sim serve --connect <addr>` — the CI smoke leg drives the TCP
+/// path with exactly the same shell plumbing as the stdin path.
+pub fn connect_pipe(addr: &str) -> Result<(), ApiError> {
+    let stream = TcpStream::connect(addr)
+        .map_err(|e| ApiError::Net { detail: format!("cannot connect to {addr}: {e}") })?;
+    stream.set_nodelay(true).ok();
+    let read_half = stream.try_clone().map_err(|e| net_io("cannot clone the stream", e))?;
+    std::thread::scope(|s| {
+        let writer = s.spawn(|| -> std::io::Result<()> {
+            let mut stdin = std::io::stdin().lock();
+            let mut sink = &stream;
+            std::io::copy(&mut stdin, &mut sink)?;
+            stream.shutdown(std::net::Shutdown::Write)
+        });
+        let mut stdout = std::io::stdout().lock();
+        let mut source = &read_half;
+        let copy = std::io::copy(&mut source, &mut stdout);
+        let forward = writer.join();
+        copy.map_err(|e| net_io("socket read failed", e))?;
+        match forward {
+            Ok(Ok(())) => Ok(()),
+            Ok(Err(e)) => Err(net_io("stdin forward failed", e)),
+            Err(_) => Err(ApiError::Net { detail: "stdin forwarder panicked".into() }),
+        }
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn queue_depth_resolution_scales_with_the_pool() {
+        let sized = |workers, child_workers, queue_depth| NetConfig {
+            queue_depth,
+            shard: ShardConfig { workers, child_workers, ..ShardConfig::default() },
+            ..NetConfig::default()
+        };
+        assert_eq!(sized(2, 2, 0).resolved_queue_depth(), 8);
+        assert_eq!(sized(2, 2, 3).resolved_queue_depth(), 3, "an explicit depth wins");
+        assert_eq!(sized(0, 0, 0).resolved_queue_depth(), 2, "degenerate sizing floors at 1");
+    }
+
+    #[test]
+    fn the_in_flight_bound_is_acquired_and_released_exactly() {
+        let sh = ServerShared {
+            stats: NetStats::default(),
+            cache: ResultCache::open(None, 0).unwrap(),
+            next_global_id: AtomicU64::new(0),
+            shutdown: AtomicBool::new(false),
+            queue_depth: 2,
+            line_cap: 0,
+            deterministic: false,
+        };
+        assert!(sh.try_acquire());
+        assert!(sh.try_acquire());
+        assert!(!sh.try_acquire(), "the bound is inclusive");
+        sh.release();
+        assert!(sh.try_acquire(), "a released slot is immediately reusable");
+        assert_eq!(sh.stats.in_flight.load(Ordering::Relaxed), 2);
+    }
+
+    #[test]
+    fn reply_slots_emit_strictly_in_request_order() {
+        let mut conn = ConnState::new();
+        let s0 = conn.slot();
+        let s1 = conn.slot();
+        let s2 = conn.slot();
+        let mut out = Vec::new();
+        // slot 1 finishing first must wait for slot 0
+        conn.ready.insert(s1, "b".into());
+        flush_ready(&mut out, &mut conn).unwrap();
+        assert!(out.is_empty(), "slot 1 must not jump the queue");
+        conn.ready.insert(s0, "a".into());
+        flush_ready(&mut out, &mut conn).unwrap();
+        assert_eq!(String::from_utf8_lossy(&out), "a\nb\n");
+        conn.ready.insert(s2, "c".into());
+        flush_ready(&mut out, &mut conn).unwrap();
+        assert_eq!(String::from_utf8_lossy(&out), "a\nb\nc\n");
+    }
+}

@@ -1,0 +1,126 @@
+//! Per-server observability counters for the TCP service tier.
+//!
+//! One [`NetStats`] is shared (via `Arc`) by the accept loop, every
+//! connection handler, and the periodic stderr reporter. All fields are
+//! relaxed atomics — the counters are monotonic tallies, not a
+//! synchronization mechanism — so bumping one never contends with the
+//! request path.
+//!
+//! Two read surfaces:
+//!
+//! - the `{"stats": true}` request type: any client receives a
+//!   `{"stats": {...}}` frame snapshotting every counter (the CI warm leg
+//!   asserts `hits > 0` and an unchanged `pool_submissions` through it);
+//! - `--stats-every <secs>`: a one-line human summary on stderr, so a
+//!   long-running server is observable without a client.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::session::json::JsonValue;
+
+/// Monotonic server-wide counters (plus two gauges: `active_conns`,
+/// `in_flight`). Field meanings:
+///
+/// - `requests`: frames received that asked for work (jobs + stats);
+/// - `hits` / `misses`: deterministic-cache outcomes per job request;
+/// - `evictions`: in-memory cache entries dropped to stay bounded;
+/// - `rejected`: jobs answered with the backpressure retry frame;
+/// - `errors`: malformed/oversized/unknown-pair frames answered with an
+///   error frame;
+/// - `active_conns` / `total_conns`: live vs lifetime client connections;
+/// - `pool_submissions`: jobs actually forwarded to the shared
+///   [`ShardPool`](crate::session::shard::ShardPool) — a warm cache run
+///   of an identical campaign must not move this;
+/// - `in_flight`: jobs currently submitted and unresolved (the gauge the
+///   global queue bound is enforced against).
+#[derive(Default)]
+pub struct NetStats {
+    pub requests: AtomicU64,
+    pub hits: AtomicU64,
+    pub misses: AtomicU64,
+    pub evictions: AtomicU64,
+    pub rejected: AtomicU64,
+    pub errors: AtomicU64,
+    pub active_conns: AtomicU64,
+    pub total_conns: AtomicU64,
+    pub pool_submissions: AtomicU64,
+    pub in_flight: AtomicU64,
+}
+
+impl NetStats {
+    pub fn bump(counter: &AtomicU64) {
+        counter.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// The `{"stats": {...}}` reply frame. `queue_depth` is the
+    /// configured global bound and `cache_entries` the cache's current
+    /// in-memory size — both supplied by the server, which owns them.
+    pub fn frame(&self, queue_depth: usize, cache_entries: usize) -> JsonValue {
+        let g = |c: &AtomicU64| JsonValue::u64(c.load(Ordering::Relaxed));
+        JsonValue::Obj(vec![(
+            "stats".into(),
+            JsonValue::Obj(vec![
+                ("requests".into(), g(&self.requests)),
+                ("hits".into(), g(&self.hits)),
+                ("misses".into(), g(&self.misses)),
+                ("evictions".into(), g(&self.evictions)),
+                ("rejected".into(), g(&self.rejected)),
+                ("errors".into(), g(&self.errors)),
+                ("active_conns".into(), g(&self.active_conns)),
+                ("total_conns".into(), g(&self.total_conns)),
+                ("pool_submissions".into(), g(&self.pool_submissions)),
+                ("in_flight".into(), g(&self.in_flight)),
+                ("queue_depth".into(), JsonValue::u64(queue_depth as u64)),
+                ("cache_entries".into(), JsonValue::u64(cache_entries as u64)),
+            ]),
+        )])
+    }
+
+    /// The periodic stderr line: compact, grep-able, one line per tick.
+    pub fn stderr_line(&self, queue_depth: usize, cache_entries: usize) -> String {
+        let g = |c: &AtomicU64| c.load(Ordering::Relaxed);
+        format!(
+            "serve: stats requests={} hits={} misses={} evictions={} rejected={} errors={} \
+             conns={}/{} pool_submissions={} in_flight={}/{} cache_entries={}",
+            g(&self.requests),
+            g(&self.hits),
+            g(&self.misses),
+            g(&self.evictions),
+            g(&self.rejected),
+            g(&self.errors),
+            g(&self.active_conns),
+            g(&self.total_conns),
+            g(&self.pool_submissions),
+            g(&self.in_flight),
+            queue_depth,
+            cache_entries,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_frame_snapshots_every_counter() {
+        let stats = NetStats::default();
+        NetStats::bump(&stats.requests);
+        NetStats::bump(&stats.requests);
+        NetStats::bump(&stats.hits);
+        stats.in_flight.fetch_add(3, Ordering::Relaxed);
+        let frame = stats.frame(8, 5);
+        let s = frame.get("stats").expect("stats object");
+        let field = |name: &str| s.get(name).and_then(|v| v.as_u64()).unwrap();
+        assert_eq!(field("requests"), 2);
+        assert_eq!(field("hits"), 1);
+        assert_eq!(field("misses"), 0);
+        assert_eq!(field("in_flight"), 3);
+        assert_eq!(field("queue_depth"), 8);
+        assert_eq!(field("cache_entries"), 5);
+
+        let line = stats.stderr_line(8, 5);
+        assert!(line.contains("requests=2"), "{line}");
+        assert!(line.contains("in_flight=3/8"), "{line}");
+    }
+}

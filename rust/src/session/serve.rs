@@ -34,13 +34,11 @@ use std::collections::BTreeSet;
 use std::io::{BufRead, Write};
 
 use crate::coordinator::{CampaignReport, Coordinator, JobOutcome, VerifyPair};
+use crate::session::framing::{read_bounded_line, BoundedLine};
 use crate::session::json::{self, JsonValue};
 use crate::util::error::Result;
 
-/// Default cap on a single input frame: 64 MiB comfortably holds the
-/// largest legitimate frame (a `set_b` matrix for a big GEMM) while
-/// bounding what a garbage peer can make the service buffer.
-pub const DEFAULT_MAX_LINE_BYTES: usize = 64 << 20;
+pub use crate::session::framing::DEFAULT_MAX_LINE_BYTES;
 
 /// Pool sizing for the serve loop.
 #[derive(Clone, Copy, Debug)]
@@ -52,11 +50,16 @@ pub struct ServeConfig {
     /// over-long line is consumed and answered with a structured error
     /// frame instead of being buffered without bound.
     pub max_line_bytes: usize,
+    /// Zero the timing fields (per-outcome `micros`, summary wall/busy)
+    /// before emission, making the reply stream a pure function of the
+    /// job stream — the byte-identity baseline the TCP tier and its
+    /// result cache are compared against.
+    pub deterministic: bool,
 }
 
 impl Default for ServeConfig {
     fn default() -> Self {
-        Self { workers: 4, queue_depth: 0, max_line_bytes: 0 }
+        Self { workers: 4, queue_depth: 0, max_line_bytes: 0, deterministic: false }
     }
 }
 
@@ -81,78 +84,23 @@ impl ServeConfig {
     }
 }
 
-/// One bounded read off the input stream.
-enum BoundedLine {
-    /// A complete line within the cap (terminator stripped, lossy UTF-8).
-    Line(String),
-    /// A line that exceeded `limit` bytes; the whole oversized line has
-    /// been consumed and discarded, so the stream stays frame-aligned.
-    Oversized { limit: usize },
-}
-
-/// Read one newline-terminated line, buffering at most `cap` bytes of it.
-/// `input.lines()` would buffer an arbitrarily long line in full before
-/// returning — a single garbage frame without a newline could then OOM a
-/// long-running service — so this reads via `fill_buf`/`consume` and, once
-/// the cap is crossed, keeps consuming (without storing) to the newline or
-/// end of input. Returns `Ok(None)` on end of input.
-fn read_bounded_line(input: &mut impl BufRead, cap: usize) -> std::io::Result<Option<BoundedLine>> {
-    let mut buf: Vec<u8> = Vec::new();
-    let mut oversized = false;
-    loop {
-        let chunk = input.fill_buf()?;
-        if chunk.is_empty() {
-            // end of input: flush whatever the last (unterminated) line held
-            return Ok(match (buf.is_empty(), oversized) {
-                (true, false) => None,
-                (_, true) => Some(BoundedLine::Oversized { limit: cap }),
-                (false, false) => Some(BoundedLine::Line(String::from_utf8_lossy(&buf).into())),
-            });
-        }
-        let newline = chunk.iter().position(|&b| b == b'\n');
-        let take = newline.map(|i| i + 1).unwrap_or(chunk.len());
-        if !oversized {
-            let keep = newline.unwrap_or(take);
-            if buf.len() + keep > cap {
-                oversized = true;
-                buf.clear();
-            } else {
-                buf.extend_from_slice(&chunk[..keep]);
-            }
-        }
-        input.consume(take);
-        if newline.is_some() {
-            if oversized {
-                return Ok(Some(BoundedLine::Oversized { limit: cap }));
-            }
-            if buf.last() == Some(&b'\r') {
-                buf.pop();
-            }
-            return Ok(Some(BoundedLine::Line(String::from_utf8_lossy(&buf).into())));
-        }
+fn emit_outcome(
+    out: &mut dyn Write,
+    report: &mut CampaignReport,
+    mut o: JobOutcome,
+    deterministic: bool,
+) -> Result<()> {
+    if deterministic {
+        o.micros = 0;
     }
-}
-
-fn emit_outcome(out: &mut dyn Write, report: &mut CampaignReport, o: &JobOutcome) -> Result<()> {
-    report.absorb(o);
-    let line = JsonValue::Obj(vec![
-        ("ok".into(), JsonValue::Bool(true)),
-        ("outcome".into(), json::outcome_to_json(o)),
-    ]);
-    writeln!(out, "{}", line.encode())?;
+    report.absorb(&o);
+    writeln!(out, "{}", json::outcome_frame(&o).encode())?;
     out.flush()?;
     Ok(())
 }
 
 fn emit_error(out: &mut dyn Write, msg: &str, id: Option<u64>) -> Result<()> {
-    let mut fields = vec![
-        ("ok".into(), JsonValue::Bool(false)),
-        ("error".into(), JsonValue::str(msg)),
-    ];
-    if let Some(id) = id {
-        fields.push(("id".into(), JsonValue::u64(id)));
-    }
-    writeln!(out, "{}", JsonValue::Obj(fields).encode())?;
+    writeln!(out, "{}", json::error_frame(msg, id).encode())?;
     out.flush()?;
     Ok(())
 }
@@ -175,6 +123,7 @@ fn serve_loop(
     known: &BTreeSet<String>,
     in_flight_cap: usize,
     line_cap: usize,
+    deterministic: bool,
     mut input: impl BufRead,
     out: &mut dyn Write,
     st: &mut ServeProgress,
@@ -215,12 +164,12 @@ fn serve_loop(
         // in-flight cap with blocking collects before submitting more.
         while let Some(o) = coord.try_next_outcome() {
             st.collected += 1;
-            emit_outcome(out, &mut st.report, &o)?;
+            emit_outcome(out, &mut st.report, o, deterministic)?;
         }
         while st.submitted - st.collected >= in_flight_cap {
             let o = coord.next_outcome()?;
             st.collected += 1;
-            emit_outcome(out, &mut st.report, &o)?;
+            emit_outcome(out, &mut st.report, o, deterministic)?;
         }
         coord.submit(job)?;
         st.submitted += 1;
@@ -228,7 +177,7 @@ fn serve_loop(
     while st.collected < st.submitted {
         let o = coord.next_outcome()?;
         st.collected += 1;
-        emit_outcome(out, &mut st.report, &o)?;
+        emit_outcome(out, &mut st.report, o, deterministic)?;
     }
     Ok(())
 }
@@ -248,7 +197,16 @@ pub fn serve_jsonl(
 
     let started = std::time::Instant::now();
     let mut st = ServeProgress { report: CampaignReport::new(), submitted: 0, collected: 0 };
-    let res = serve_loop(&coord, &known, queue, cfg.resolved_line_cap(), input, out, &mut st);
+    let res = serve_loop(
+        &coord,
+        &known,
+        queue,
+        cfg.resolved_line_cap(),
+        cfg.deterministic,
+        input,
+        out,
+        &mut st,
+    );
     if res.is_err() {
         // The loop bailed (dead input, broken sink, dead pool). In-flight
         // jobs must still be collected — dropping the coordinator with
@@ -267,8 +225,12 @@ pub fn serve_jsonl(
     coord.shutdown();
     res?;
 
-    st.report.wall_micros = started.elapsed().as_micros() as u64;
-    let summary = JsonValue::Obj(vec![("summary".into(), json::report_to_json(&st.report))]);
+    if cfg.deterministic {
+        st.report.clear_timing();
+    } else {
+        st.report.wall_micros = started.elapsed().as_micros() as u64;
+    }
+    let summary = json::summary_frame(&st.report);
     writeln!(out, "{}", summary.encode())?;
     out.flush()?;
     Ok(st.report)
@@ -476,7 +438,8 @@ mod tests {
     fn queue_depth_overrides_the_in_flight_cap() {
         // the resolved queue depth is the in-flight bound: configured
         // depth wins, 0 falls back to workers * 2, workers floor at 1
-        let cfg = |workers, queue_depth| ServeConfig { workers, queue_depth, max_line_bytes: 0 };
+        let cfg =
+            |workers, queue_depth| ServeConfig { workers, queue_depth, ..ServeConfig::default() };
         assert_eq!(cfg(4, 0).resolved(), (4, 8));
         assert_eq!(cfg(4, 3).resolved(), (4, 3));
         assert_eq!(cfg(2, 9).resolved(), (2, 9));
@@ -531,33 +494,35 @@ mod tests {
     }
 
     #[test]
-    fn bounded_reader_splits_caps_and_flushes_the_tail() {
-        // ordinary lines within the cap round-trip, including the
-        // unterminated tail and CRLF endings
-        let mut input = "one\r\ntwo\nlast".as_bytes();
-        let mut lines = Vec::new();
-        while let Some(l) = read_bounded_line(&mut input, 64).unwrap() {
-            match l {
-                BoundedLine::Line(s) => lines.push(s),
-                BoundedLine::Oversized { .. } => panic!("nothing here exceeds the cap"),
+    fn deterministic_mode_zeroes_every_timing_field() {
+        // the same job stream twice through --deterministic single-worker
+        // serves must produce byte-identical reply streams — the baseline
+        // the TCP tier's byte-compare tests lean on
+        let input = "\
+            {\"pair\":\"clean\",\"batch\":20,\"seed\":1}\n\
+            {\"pair\":\"faulty\",\"batch\":20,\"seed\":2}\n";
+        let cfg = ServeConfig { workers: 1, deterministic: true, ..ServeConfig::default() };
+        let mut out_a = Vec::new();
+        serve_jsonl(pairs(), &cfg, input.as_bytes(), &mut out_a).unwrap();
+        let mut out_b = Vec::new();
+        serve_jsonl(pairs(), &cfg, input.as_bytes(), &mut out_b).unwrap();
+        assert_eq!(out_a, out_b, "deterministic replies must be byte-identical");
+
+        let text = String::from_utf8(out_a).unwrap();
+        for line in text.lines() {
+            let v = JsonValue::parse(line).unwrap();
+            if let Some(o) = v.get("outcome") {
+                let o = json::outcome_from_json(o).unwrap();
+                assert_eq!(o.micros, 0, "outcome micros must be zeroed");
+            }
+            if let Some(s) = v.get("summary") {
+                let r = json::report_from_json(s).unwrap();
+                assert_eq!(r.wall_micros, 0, "summary wall time must be zeroed");
+                for stats in r.pairs.values() {
+                    assert_eq!(stats.busy_micros, 0, "per-pair busy time must be zeroed");
+                }
             }
         }
-        assert_eq!(lines, ["one", "two", "last"]);
-
-        // an oversized line is consumed to its newline (stream stays
-        // aligned: the following short line still arrives intact), and an
-        // oversized unterminated tail is reported too
-        let long = "x".repeat(100);
-        let stream = format!("{long}\nshort\n{long}");
-        let mut input = stream.as_bytes();
-        let mut got = Vec::new();
-        while let Some(l) = read_bounded_line(&mut input, 16).unwrap() {
-            got.push(match l {
-                BoundedLine::Line(s) => s,
-                BoundedLine::Oversized { limit } => format!("<oversized:{limit}>"),
-            });
-        }
-        assert_eq!(got, ["<oversized:16>", "short", "<oversized:16>"]);
     }
 
     #[test]
@@ -565,7 +530,7 @@ mod tests {
         let long_junk = "z".repeat(4096);
         let input = format!("{long_junk}\n{{\"pair\":\"clean\",\"batch\":10,\"seed\":1}}\n");
         let mut out = Vec::new();
-        let cfg = ServeConfig { workers: 1, queue_depth: 0, max_line_bytes: 256 };
+        let cfg = ServeConfig { workers: 1, max_line_bytes: 256, ..ServeConfig::default() };
         let report = serve_jsonl(pairs(), &cfg, input.as_bytes(), &mut out).unwrap();
         assert_eq!(report.total_jobs, 1, "the valid job after the junk still ran");
 

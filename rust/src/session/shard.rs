@@ -337,7 +337,65 @@ fn parse_reply(line: &str) -> Reply {
     }
 }
 
-fn reader_loop(shard: usize, output: Box<dyn Read + Send>, tx: Sender<(usize, Reply)>) {
+/// One message on the pool's unified channel. Child reply lines and
+/// service-mode submissions share a single receiver, so
+/// [`ShardPool::run_service`] can block on one `recv` (std has no
+/// channel `select`) and wake for either a finished job or a new
+/// request — no polling, no forwarder thread.
+enum PoolMsg {
+    /// A reply line (or EOF) from child `usize`'s reader thread.
+    Child(usize, Reply),
+    /// A job submitted through a [`PoolHandle`] (service mode only).
+    Service(ServiceRequest),
+    /// A [`PoolHandle::shutdown`] request: resolve everything queued and
+    /// in flight, then drain the children and return.
+    Shutdown,
+}
+
+/// How the pool resolved one service-mode job.
+pub enum ServiceReply {
+    /// The job completed. The outcome carries the submitted (global) id
+    /// and the child's raw timing — the caller owns any local-id rewrite
+    /// and deterministic zeroing.
+    Outcome(JobOutcome),
+    /// The job failed terminally: a child-side rejection, a quarantine
+    /// verdict (`quarantined: true`), or pool shutdown. Never retried by
+    /// the pool; the caller decides whether to resubmit.
+    Failed { id: u64, msg: String, quarantined: bool },
+}
+
+/// One service-mode submission: a job plus the channel its resolution
+/// comes back on. Each caller brings its own reply channel, so many
+/// connections can share one pool without demultiplexing replies.
+pub struct ServiceRequest {
+    pub job: Job,
+    pub reply: Sender<ServiceReply>,
+}
+
+/// A cloneable submission handle into a pool being driven by
+/// [`ShardPool::run_service`] — the sharing seam the TCP tier
+/// ([`net`](crate::session::net)) multiplexes its connections through.
+#[derive(Clone)]
+pub struct PoolHandle {
+    tx: Sender<PoolMsg>,
+}
+
+impl PoolHandle {
+    /// Submit one job; its resolution arrives on `reply`. Errors only if
+    /// the service loop is gone entirely.
+    pub fn submit(&self, job: Job, reply: Sender<ServiceReply>) -> Result<(), ApiError> {
+        self.tx
+            .send(PoolMsg::Service(ServiceRequest { job, reply }))
+            .map_err(|_| ApiError::PoolStopped { during: "service submit" })
+    }
+
+    /// Ask the service loop to finish outstanding work and exit.
+    pub fn shutdown(&self) {
+        let _ = self.tx.send(PoolMsg::Shutdown);
+    }
+}
+
+fn reader_loop(shard: usize, output: Box<dyn Read + Send>, tx: Sender<PoolMsg>) {
     for line in BufReader::new(output).lines() {
         let line = match line {
             Ok(l) => l,
@@ -347,11 +405,11 @@ fn reader_loop(shard: usize, output: Box<dyn Read + Send>, tx: Sender<(usize, Re
         if trimmed.is_empty() {
             continue;
         }
-        if tx.send((shard, parse_reply(trimmed))).is_err() {
+        if tx.send(PoolMsg::Child(shard, parse_reply(trimmed))).is_err() {
             return; // pool is gone
         }
     }
-    let _ = tx.send((shard, Reply::Eof));
+    let _ = tx.send(PoolMsg::Child(shard, Reply::Eof));
 }
 
 fn io_err(what: &str, e: std::io::Error) -> ApiError {
@@ -426,8 +484,8 @@ pub struct ShardPool<'t> {
     /// Respawn budget: total children ever spawned may not exceed this.
     max_children: usize,
     children: Vec<ChildSlot>,
-    tx: Sender<(usize, Reply)>,
-    rx: Receiver<(usize, Reply)>,
+    tx: Sender<PoolMsg>,
+    rx: Receiver<PoolMsg>,
     /// Lines replayed to every newly spawned worker (e.g. the GEMM
     /// `set_b` frame), so a respawned replacement has the same state.
     prelude: Vec<String>,
@@ -668,11 +726,12 @@ impl<'t> ShardPool<'t> {
             .collect()
     }
 
-    /// The next merged reply, or `None` on a watchdog tick (some child
+    /// The next pool message, or `None` on a watchdog tick (some child
     /// may have blown its reply deadline — the caller sweeps
     /// [`hung_children`](Self::hung_children)). Blocks indefinitely when
-    /// no job timeout is configured.
-    fn next_reply(&mut self) -> Result<Option<(usize, Reply)>, ApiError> {
+    /// no job timeout is configured — a [`PoolMsg::Service`] submission
+    /// wakes the same receiver, so an idle service still responds.
+    fn next_reply(&mut self) -> Result<Option<PoolMsg>, ApiError> {
         let closed = || ApiError::Shard { detail: "reply channel closed".into() };
         let Some(timeout) = self.job_timeout else {
             return self.rx.recv().map(Some).map_err(|_| closed());
@@ -734,13 +793,24 @@ impl<'t> ShardPool<'t> {
                 },
             };
             match msg {
-                Some((shard, reply)) => {
+                Some(PoolMsg::Child(shard, reply)) => {
                     let slot = &mut self.children[shard];
                     match reply {
                         Reply::Eof => slot.eof = true,
                         other => on_reply(slot, other),
                     }
                 }
+                Some(PoolMsg::Service(req)) => {
+                    // a submission racing the teardown: answer it rather
+                    // than dropping the sender silently
+                    let id = req.job.id;
+                    let _ = req.reply.send(ServiceReply::Failed {
+                        id,
+                        msg: "pool is shutting down".into(),
+                        quarantined: false,
+                    });
+                }
+                Some(PoolMsg::Shutdown) => {} // already draining
                 None => {
                     // a child is hung in its shutdown path (e.g. stalled
                     // before its summary frame): kill the stragglers so
@@ -901,7 +971,7 @@ impl<'t> ShardPool<'t> {
                 break;
             }
             match self.next_reply()? {
-                Some((shard, reply)) => self.on_campaign_reply(
+                Some(PoolMsg::Child(shard, reply)) => self.on_campaign_reply(
                     shard,
                     reply,
                     out,
@@ -910,6 +980,17 @@ impl<'t> ShardPool<'t> {
                     &mut ready,
                     &mut remaining,
                 )?,
+                Some(PoolMsg::Service(req)) => {
+                    // a stray service submission on a one-shot driver:
+                    // answer it so the submitter never hangs
+                    let id = req.job.id;
+                    let _ = req.reply.send(ServiceReply::Failed {
+                        id,
+                        msg: "pool is running a one-shot campaign, not a service".into(),
+                        quarantined: false,
+                    });
+                }
+                Some(PoolMsg::Shutdown) => {} // meaningless outside service mode
                 None => {
                     self.retire_hung(out, &mut queue, &mut assigned, &mut ready, &mut remaining)?
                 }
@@ -1127,10 +1208,23 @@ impl<'t> ShardPool<'t> {
                     detail: format!("{} band replies never arrived", plan.len() - done.len()),
                 });
             }
-            let Some((shard, reply)) = self.next_reply()? else {
-                // watchdog tick: sweep for hung children
-                self.retire_hung_gemm(&mut queue)?;
-                continue;
+            let (shard, reply) = match self.next_reply()? {
+                Some(PoolMsg::Child(shard, reply)) => (shard, reply),
+                Some(PoolMsg::Service(req)) => {
+                    let id = req.job.id;
+                    let _ = req.reply.send(ServiceReply::Failed {
+                        id,
+                        msg: "pool is running a one-shot GEMM, not a service".into(),
+                        quarantined: false,
+                    });
+                    continue;
+                }
+                Some(PoolMsg::Shutdown) => continue, // meaningless outside service mode
+                None => {
+                    // watchdog tick: sweep for hung children
+                    self.retire_hung_gemm(&mut queue)?;
+                    continue;
+                }
             };
             // any reply line proves the child is alive
             self.touch(shard);
@@ -1254,6 +1348,252 @@ impl<'t> ShardPool<'t> {
             self.settle_lost_bands(&ids, queue)?;
         }
         Ok(())
+    }
+
+    // -- service driver -----------------------------------------------------
+
+    /// A cloneable submission handle for [`run_service`](Self::run_service).
+    /// Take handles *before* consuming the pool; clones stay valid for the
+    /// service's whole life.
+    pub fn handle(&self) -> PoolHandle {
+        PoolHandle { tx: self.tx.clone() }
+    }
+
+    /// Drive the pool as a long-lived shared service: jobs arrive through
+    /// [`PoolHandle::submit`] from any number of threads, scatter across
+    /// the child workers under the same bounded in-flight, dead-child
+    /// requeue, watchdog, and quarantine machinery as
+    /// [`run_campaign`](Self::run_campaign), and each resolves back on its
+    /// own request's reply channel. Runs until [`PoolHandle::shutdown`],
+    /// then finishes everything still queued or in flight, drains the
+    /// children, and returns.
+    ///
+    /// Submitted job ids must be unique among *unresolved* jobs — the TCP
+    /// tier stamps them from one shared counter. A duplicate unresolved id
+    /// is answered with a `Failed` reply rather than corrupting the
+    /// requeue bookkeeping.
+    ///
+    /// On a fatal pool error (respawn budget exhausted, reply channel
+    /// torn) every unresolved request is failed explicitly or its reply
+    /// sender dropped — callers blocked on a reply observe a resolution or
+    /// a disconnect, never a silent hang.
+    pub fn run_service(mut self) -> Result<(), ApiError> {
+        let mut queue: VecDeque<Job> = VecDeque::new();
+        let mut assigned: BTreeMap<u64, Job> = BTreeMap::new();
+        let mut pending: BTreeMap<u64, Sender<ServiceReply>> = BTreeMap::new();
+        let mut shutdown = false;
+        loop {
+            // submit while children have capacity
+            while !queue.is_empty() {
+                let Some(t) = self.pick_target() else { break };
+                let job = queue.pop_front().expect("queue checked non-empty");
+                let line = json::job_to_json(&job).encode();
+                match self.write_line(t, &line) {
+                    Ok(()) => {
+                        self.children[t].inflight.insert(job.id);
+                        self.touch(t);
+                        assigned.insert(job.id, job);
+                    }
+                    Err(e) => {
+                        queue.push_front(job);
+                        let note = self.failure_note(t, &format!("request write failed: {e}"));
+                        eprintln!("serve: {note}; requeueing its jobs");
+                        let ids = self.retire(t);
+                        self.settle_lost_service_jobs(ids, &mut queue, &mut assigned, &mut pending);
+                    }
+                }
+            }
+            // work queued but nobody can take it: grow the pool; on a
+            // blown respawn budget, fail every unresolved request before
+            // surfacing the error
+            if !queue.is_empty() && self.open_count() == 0 {
+                if let Err(e) = self.respawn_with_backoff() {
+                    let msg = e.to_string();
+                    for (id, reply) in pending {
+                        let _ = reply.send(ServiceReply::Failed {
+                            id,
+                            msg: msg.clone(),
+                            quarantined: false,
+                        });
+                    }
+                    return Err(e);
+                }
+                continue;
+            }
+            if !pending.is_empty() && queue.is_empty() && self.total_inflight() == 0 {
+                // every submitted job was answered yet some requests never
+                // resolved — a protocol violation; fail them rather than
+                // waiting forever (mirrors run_campaign's check)
+                for (id, reply) in std::mem::take(&mut pending) {
+                    assigned.remove(&id);
+                    let _ = reply.send(ServiceReply::Failed {
+                        id,
+                        msg: "job reply never arrived (protocol violation)".into(),
+                        quarantined: false,
+                    });
+                }
+            }
+            if shutdown && queue.is_empty() && pending.is_empty() {
+                break;
+            }
+            match self.next_reply()? {
+                Some(PoolMsg::Service(req)) => {
+                    let id = req.job.id;
+                    if shutdown {
+                        let _ = req.reply.send(ServiceReply::Failed {
+                            id,
+                            msg: "server is shutting down".into(),
+                            quarantined: false,
+                        });
+                    } else if pending.contains_key(&id) {
+                        let _ = req.reply.send(ServiceReply::Failed {
+                            id,
+                            msg: format!("duplicate unresolved job id {id}"),
+                            quarantined: false,
+                        });
+                    } else {
+                        pending.insert(id, req.reply);
+                        queue.push_back(req.job);
+                    }
+                }
+                Some(PoolMsg::Shutdown) => shutdown = true,
+                Some(PoolMsg::Child(shard, reply)) => {
+                    self.on_service_reply(shard, reply, &mut queue, &mut assigned, &mut pending);
+                }
+                None => self.retire_hung_service(&mut queue, &mut assigned, &mut pending),
+            }
+        }
+        self.drain_and_reap(|_, _| {})
+    }
+
+    fn on_service_reply(
+        &mut self,
+        shard: usize,
+        reply: Reply,
+        queue: &mut VecDeque<Job>,
+        assigned: &mut BTreeMap<u64, Job>,
+        pending: &mut BTreeMap<u64, Sender<ServiceReply>>,
+    ) {
+        // any reply line proves the child is alive: re-arm its watchdog
+        self.touch(shard);
+        match reply {
+            Reply::Outcome(o) => {
+                if !self.children[shard].inflight.remove(&o.id) {
+                    return; // stale reply from a retired child (job requeued)
+                }
+                assigned.remove(&o.id);
+                if let Some(reply) = pending.remove(&o.id) {
+                    let _ = reply.send(ServiceReply::Outcome(o));
+                }
+            }
+            Reply::Error { id: Some(id), msg } => {
+                // a job-level rejection is deterministic — resolve, don't retry
+                if self.children[shard].inflight.remove(&id) {
+                    assigned.remove(&id);
+                    if let Some(reply) = pending.remove(&id) {
+                        let _ =
+                            reply.send(ServiceReply::Failed { id, msg, quarantined: false });
+                    }
+                }
+            }
+            Reply::Error { id: None, msg } => {
+                // the service only writes well-formed job lines, so an
+                // unaddressed error means the child's stream is corrupt
+                let why = format!("unaddressed error: {msg}");
+                let note = self.failure_note(shard, &why);
+                eprintln!("serve: {note}; requeueing its jobs");
+                let ids = self.retire(shard);
+                self.settle_lost_service_jobs(ids, queue, assigned, pending);
+            }
+            Reply::Summary(_) => {
+                // service children summarize only when their stdin closes
+                // at drain time; a mid-service summary is harmless noise
+                // (per-connection summaries are aggregated by the TCP tier,
+                // not the children)
+            }
+            Reply::Band(_) => {
+                let note = self.failure_note(shard, "band reply on a campaign stream");
+                eprintln!("serve: {note}; requeueing its jobs");
+                let ids = self.retire(shard);
+                self.settle_lost_service_jobs(ids, queue, assigned, pending);
+            }
+            Reply::Garbage(what) => {
+                let note = self.failure_note(shard, &what);
+                eprintln!("serve: {note}; requeueing its jobs");
+                let ids = self.retire(shard);
+                self.settle_lost_service_jobs(ids, queue, assigned, pending);
+            }
+            Reply::Eof => {
+                let premature = {
+                    let c = &self.children[shard];
+                    !c.inflight.is_empty() || c.input.is_some()
+                };
+                self.children[shard].eof = true;
+                if premature {
+                    let note = self.failure_note(shard, "output closed with work owed");
+                    eprintln!("serve: {note}; requeueing its jobs");
+                    let ids = self.retire(shard);
+                    self.settle_lost_service_jobs(ids, queue, assigned, pending);
+                }
+            }
+        }
+    }
+
+    /// Settle the jobs a retired service worker still owed: requeue each —
+    /// unless it has now felled
+    /// [`max_worker_kills`](ShardConfig::max_worker_kills) distinct
+    /// workers, in which case it resolves as a quarantine failure on its
+    /// own reply channel (the service analogue of the campaign driver's
+    /// ordered quarantine error line).
+    fn settle_lost_service_jobs(
+        &mut self,
+        ids: Vec<u64>,
+        queue: &mut VecDeque<Job>,
+        assigned: &mut BTreeMap<u64, Job>,
+        pending: &mut BTreeMap<u64, Sender<ServiceReply>>,
+    ) {
+        for id in ids {
+            let Some(job) = assigned.remove(&id) else { continue };
+            let kills = {
+                let k = self.kills.entry(id).or_insert(0);
+                *k += 1;
+                *k
+            };
+            if self.max_worker_kills == 0 || kills < self.max_worker_kills {
+                queue.push_back(job);
+                continue;
+            }
+            let reason = match &self.last_failure {
+                Some(note) => format!("felled {kills} workers (last: {note})"),
+                None => format!("felled {kills} workers"),
+            };
+            eprintln!("serve: quarantining job {id}: {reason}");
+            if let Some(reply) = pending.remove(&id) {
+                let _ = reply.send(ServiceReply::Failed {
+                    id,
+                    msg: format!("job quarantined: {reason}"),
+                    quarantined: true,
+                });
+            }
+            self.quarantined.push(QuarantinedJob { id, pair: job.pair, kills, reason });
+        }
+    }
+
+    /// Watchdog tick (service): retire every child past its reply
+    /// deadline and settle the work it still owed.
+    fn retire_hung_service(
+        &mut self,
+        queue: &mut VecDeque<Job>,
+        assigned: &mut BTreeMap<u64, Job>,
+        pending: &mut BTreeMap<u64, Sender<ServiceReply>>,
+    ) {
+        for shard in self.hung_children() {
+            let ms = self.job_timeout.map_or(0, |t| t.as_millis() as u64);
+            let note = self.failure_note(shard, &format!("no reply within {ms} ms; presumed hung"));
+            eprintln!("serve: {note}; retiring and requeueing its jobs");
+            let ids = self.retire(shard);
+            self.settle_lost_service_jobs(ids, queue, assigned, pending);
+        }
     }
 }
 

@@ -1,0 +1,308 @@
+//! End-to-end tests of the TCP service tier (`session::net`): real
+//! sockets, real child worker processes, real concurrent clients.
+//!
+//! The contract under test is the ISSUE-8 acceptance bar: with
+//! `--deterministic`, a client's reply bytes are identical whether it is
+//! the only client or one of N, whether the cache is cold or warm, and
+//! whether the transport is TCP or the `serve --jsonl` stdin loop — and
+//! a warm re-run of an identical campaign performs zero pool
+//! submissions, observable through the `{"stats":true}` frame.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{Shutdown, TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::process::{Command, Stdio};
+use std::thread::JoinHandle;
+
+use mma_sim::session::json::JsonValue;
+use mma_sim::session::shard::ShardConfig;
+use mma_sim::session::{serve_tcp, ApiError, NetConfig, ProcessTransport};
+
+const PAIR_A: &str = "sm70 HMMA.884.F32.F16";
+const PAIR_B: &str = "sm70 HMMA.884.F16.F16";
+
+fn binary() -> &'static str {
+    env!("CARGO_BIN_EXE_mma-sim")
+}
+
+/// Start an in-process server on an ephemeral port; children are real
+/// `mma-sim serve --jsonl` processes of the test-built binary.
+fn start_server(cfg: NetConfig) -> (std::net::SocketAddr, JoinHandle<Result<(), ApiError>>) {
+    let listener = TcpListener::bind("127.0.0.1:0").expect("bind ephemeral port");
+    let addr = listener.local_addr().expect("local addr");
+    let server = std::thread::spawn(move || {
+        let transport = ProcessTransport::with_binary(binary());
+        serve_tcp(listener, &cfg, &transport)
+    });
+    (addr, server)
+}
+
+fn small_server_cfg() -> NetConfig {
+    NetConfig {
+        shard: ShardConfig { workers: 1, child_workers: 2, ..ShardConfig::default() },
+        queue_depth: 64,
+        deterministic: true,
+        cache_max: 1024,
+        ..NetConfig::default()
+    }
+}
+
+/// One whole client session: write `input`, half-close, read every reply
+/// byte until the server closes the connection.
+fn run_client(addr: std::net::SocketAddr, input: &str) -> String {
+    let mut stream = TcpStream::connect(addr).expect("connect");
+    stream.write_all(input.as_bytes()).expect("send jobs");
+    stream.shutdown(Shutdown::Write).expect("half-close");
+    let mut out = String::new();
+    stream.read_to_string(&mut out).expect("read replies");
+    out
+}
+
+fn shut_down(addr: std::net::SocketAddr, server: JoinHandle<Result<(), ApiError>>) {
+    let text = run_client(addr, "{\"shutdown\":true}\n");
+    assert!(text.contains("\"shutdown\":true"), "shutdown must be acked: {text}");
+    server.join().expect("server thread").expect("clean exit");
+}
+
+/// The stdin byte-identity baseline: the same job stream through
+/// `serve --jsonl --workers 1 --deterministic` in a child process.
+fn stdin_baseline(input: &str) -> String {
+    let mut child = Command::new(binary())
+        .args(["serve", "--jsonl", "--workers", "1", "--deterministic"])
+        .env("MMA_SIM_THREADS", "1")
+        .stdin(Stdio::piped())
+        .stdout(Stdio::piped())
+        .stderr(Stdio::null())
+        .spawn()
+        .expect("spawn serve --jsonl");
+    child.stdin.as_mut().expect("stdin").write_all(input.as_bytes()).expect("write jobs");
+    let out = child.wait_with_output().expect("child output");
+    assert!(out.status.success(), "stdin baseline failed");
+    String::from_utf8(out.stdout).expect("utf8 replies")
+}
+
+fn job_stream(pair: &str, seeds: &[u64], batch: usize) -> String {
+    seeds
+        .iter()
+        .map(|s| format!("{{\"pair\":\"{pair}\",\"batch\":{batch},\"seed\":{s}}}\n"))
+        .collect()
+}
+
+/// Read the first `{"stats":...}` frame a dedicated connection gets back.
+fn fetch_stats(addr: std::net::SocketAddr) -> JsonValue {
+    let text = run_client(addr, "{\"stats\":true}\n");
+    for line in text.lines() {
+        let v = JsonValue::parse(line).expect("stats reply parses");
+        if v.get("stats").is_some() {
+            return v;
+        }
+    }
+    panic!("no stats frame in: {text}");
+}
+
+fn stat(frame: &JsonValue, field: &str) -> u64 {
+    frame
+        .get("stats")
+        .and_then(|s| s.get(field))
+        .and_then(|v| v.as_u64())
+        .unwrap_or_else(|| panic!("stats frame missing {field}"))
+}
+
+#[test]
+fn concurrent_clients_match_serial_and_stdin_byte_for_byte() {
+    let (addr, server) = start_server(small_server_cfg());
+    let streams = [
+        job_stream(PAIR_A, &[1, 2, 3, 4], 5),
+        job_stream(PAIR_B, &[5, 6, 7], 5),
+        job_stream(PAIR_A, &[8, 9], 6),
+    ];
+
+    // cold + concurrent first: three clients race their jobs into the
+    // shared pool at once
+    let concurrent: Vec<String> = std::thread::scope(|s| {
+        let handles: Vec<_> =
+            streams.iter().map(|input| s.spawn(move || run_client(addr, input))).collect();
+        handles.into_iter().map(|h| h.join().expect("client thread")).collect()
+    });
+    // then serially, one client at a time, on the same server
+    let serial: Vec<String> = streams.iter().map(|input| run_client(addr, input)).collect();
+
+    for (i, input) in streams.iter().enumerate() {
+        let baseline = stdin_baseline(input);
+        assert_eq!(
+            concurrent[i], baseline,
+            "client {i}: concurrent TCP replies must match the stdin path byte-for-byte"
+        );
+        assert_eq!(
+            serial[i], baseline,
+            "client {i}: serial TCP replies must match the stdin path byte-for-byte"
+        );
+    }
+    shut_down(addr, server);
+}
+
+#[test]
+fn error_frames_occupy_their_request_slot() {
+    let (addr, server) = start_server(small_server_cfg());
+    // valid, malformed, unknown pair, valid — replies must come back in
+    // exactly that order, each in its own slot
+    let input = format!(
+        "{}garbage line\n{{\"pair\":\"no-such-pair\",\"batch\":5,\"seed\":1}}\n{}",
+        job_stream(PAIR_A, &[11], 5),
+        job_stream(PAIR_A, &[12], 5),
+    );
+    let text = run_client(addr, &input);
+    let lines: Vec<&str> = text.lines().collect();
+    assert_eq!(lines.len(), 5, "4 replies + summary:\n{text}");
+
+    let first = JsonValue::parse(lines[0]).unwrap();
+    assert_eq!(first.get("ok").and_then(|b| b.as_bool()), Some(true), "{text}");
+    let second = JsonValue::parse(lines[1]).unwrap();
+    assert_eq!(second.get("ok").and_then(|b| b.as_bool()), Some(false));
+    assert!(second.get("id").is_none(), "a parse failure carries no id");
+    let third = JsonValue::parse(lines[2]).unwrap();
+    let msg = third.get("error").and_then(|e| e.as_str()).unwrap_or_default();
+    assert!(msg.contains("no-such-pair"), "{msg}");
+    assert_eq!(third.get("id").and_then(|i| i.as_u64()), Some(1), "unknown pair keeps its id");
+    let fourth = JsonValue::parse(lines[3]).unwrap();
+    assert_eq!(fourth.get("ok").and_then(|b| b.as_bool()), Some(true));
+    assert!(JsonValue::parse(lines[4]).unwrap().get("summary").is_some());
+    shut_down(addr, server);
+}
+
+#[test]
+fn warm_cache_rerun_is_byte_identical_with_zero_pool_submissions() {
+    let cache_dir = std::env::temp_dir().join(format!("mma-net-cache-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&cache_dir);
+
+    let cfg = NetConfig { cache_dir: Some(PathBuf::from(&cache_dir)), ..small_server_cfg() };
+    let (addr, server) = start_server(cfg.clone());
+    let input = job_stream(PAIR_A, &[21, 22, 23], 5);
+
+    let cold = run_client(addr, &input);
+    let after_cold = fetch_stats(addr);
+    assert_eq!(stat(&after_cold, "pool_submissions"), 3, "cold run computes every job");
+    assert_eq!(stat(&after_cold, "misses"), 3);
+
+    let warm = run_client(addr, &input);
+    assert_eq!(warm, cold, "a warm re-run must be byte-identical");
+    let after_warm = fetch_stats(addr);
+    assert!(stat(&after_warm, "hits") >= 3, "warm run must hit the cache");
+    assert_eq!(
+        stat(&after_warm, "pool_submissions"),
+        stat(&after_cold, "pool_submissions"),
+        "a warm re-run must not touch the pool"
+    );
+    shut_down(addr, server);
+
+    // a fresh server over the same cache dir restarts warm: identical
+    // bytes, zero pool submissions ever
+    let (addr2, server2) = start_server(cfg);
+    let restarted = run_client(addr2, &input);
+    assert_eq!(restarted, cold, "a warm *restart* must be byte-identical too");
+    let stats2 = fetch_stats(addr2);
+    assert_eq!(stat(&stats2, "pool_submissions"), 0, "warm restart: all hits, no compute");
+    assert_eq!(stat(&stats2, "hits"), 3);
+    shut_down(addr2, server2);
+    let _ = std::fs::remove_dir_all(&cache_dir);
+}
+
+#[test]
+fn backpressure_returns_structured_retry_and_never_drops_the_connection() {
+    // one child that hangs instead of producing its first reply, a
+    // one-slot global queue, and a watchdog that quarantines the hung
+    // job: the second job must be rejected with the structured retry
+    // frame while the slot is held, then succeed when resubmitted
+    let cfg = NetConfig {
+        shard: ShardConfig {
+            workers: 1,
+            child_workers: 1,
+            job_timeout_ms: 500,
+            max_worker_kills: 1,
+            ..ShardConfig::default()
+        },
+        queue_depth: 1,
+        deterministic: true,
+        cache_max: 0, // no cache: the rejection path must be exercised, not memoized
+        ..NetConfig::default()
+    };
+    let listener = TcpListener::bind("127.0.0.1:0").expect("bind ephemeral port");
+    let addr = listener.local_addr().expect("local addr");
+    let server = std::thread::spawn(move || {
+        let transport = ProcessTransport::with_binary(binary())
+            .with_chaos(mma_sim::session::ChaosPlan::parse("0:hang@0").expect("chaos spec"));
+        serve_tcp(listener, &cfg, &transport)
+    });
+
+    let stream = TcpStream::connect(addr).expect("connect");
+    let mut reader = BufReader::new(stream.try_clone().expect("clone"));
+    let mut writer = &stream;
+    // job 0 occupies the single slot inside the hung child; job 1 finds
+    // the queue full and must be rejected immediately
+    write!(writer, "{}", job_stream(PAIR_A, &[31, 32], 5)).expect("send jobs");
+    writer.flush().expect("flush");
+
+    let mut line = String::new();
+    reader.read_line(&mut line).expect("first reply");
+    let first = JsonValue::parse(&line).expect("parses");
+    let msg = first.get("error").and_then(|e| e.as_str()).unwrap_or_default();
+    assert!(msg.contains("quarantined"), "the hung job resolves as a quarantine: {line}");
+    assert_eq!(first.get("quarantined").and_then(|b| b.as_bool()), Some(true));
+
+    line.clear();
+    reader.read_line(&mut line).expect("second reply");
+    let second = JsonValue::parse(&line).expect("parses");
+    assert_eq!(second.get("retry").and_then(|b| b.as_bool()), Some(true), "{line}");
+    assert_eq!(second.get("ok").and_then(|b| b.as_bool()), Some(false));
+    assert_eq!(second.get("id").and_then(|i| i.as_u64()), Some(1));
+
+    // the connection survived the overload: resubmit on the same socket
+    // and the job completes on the respawned (sane) worker
+    write!(writer, "{}", job_stream(PAIR_A, &[32], 5)).expect("resubmit");
+    writer.flush().expect("flush");
+    stream.shutdown(Shutdown::Write).expect("half-close");
+    let mut rest = String::new();
+    reader.read_to_string(&mut rest).expect("drain");
+    let lines: Vec<&str> = rest.lines().collect();
+    assert_eq!(lines.len(), 2, "outcome + summary:\n{rest}");
+    let outcome = JsonValue::parse(lines[0]).expect("parses");
+    assert_eq!(outcome.get("ok").and_then(|b| b.as_bool()), Some(true), "{rest}");
+    assert!(JsonValue::parse(lines[1]).unwrap().get("summary").is_some());
+
+    shut_down(addr, server);
+}
+
+#[test]
+fn shutdown_drains_in_flight_work_without_truncating_any_reply() {
+    let (addr, server) = start_server(small_server_cfg());
+    // jobs and the shutdown request land in one write: every job is
+    // still in flight (or queued) when the server learns it must stop
+    let input = format!("{}{{\"shutdown\":true}}\n", job_stream(PAIR_A, &[41, 42, 43, 44], 6));
+    let mut stream = TcpStream::connect(addr).expect("connect");
+    stream.write_all(input.as_bytes()).expect("send");
+    // deliberately no write-half shutdown: the drain must be triggered by
+    // the shutdown request itself, not by end of input
+    let mut text = String::new();
+    stream.read_to_string(&mut text).expect("read all replies");
+
+    assert!(text.ends_with('\n'), "the reply stream must end on a frame boundary");
+    let lines: Vec<&str> = text.lines().collect();
+    assert_eq!(lines.len(), 6, "4 outcomes + ack + summary:\n{text}");
+    for line in &lines {
+        JsonValue::parse(line).unwrap_or_else(|e| panic!("truncated/corrupt frame {line}: {e}"));
+    }
+    for line in &lines[..4] {
+        let v = JsonValue::parse(line).unwrap();
+        assert_eq!(v.get("ok").and_then(|b| b.as_bool()), Some(true), "{line}");
+    }
+    let ack = JsonValue::parse(lines[4]).unwrap();
+    assert_eq!(ack.get("shutdown").and_then(|b| b.as_bool()), Some(true));
+    let summary = JsonValue::parse(lines[5]).unwrap();
+    let jobs = summary
+        .get("summary")
+        .and_then(|s| s.get("total_jobs"))
+        .and_then(|v| v.as_u64());
+    assert_eq!(jobs, Some(4), "every in-flight job must be finished before the summary");
+
+    server.join().expect("server thread").expect("shutdown must exit cleanly");
+}
