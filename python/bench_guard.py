@@ -41,6 +41,14 @@ Two checks over a fresh ``BENCH_hotpath.json``:
      on smoke; env ``GUARD_MAX_NET_OVERHEAD`` overrides both). Catches
      the cache degrading to recompute speed and the socket seam getting
      expensive relative to the stdin path.
+   - ``fleet`` section — the multi-host shard tier, the marginal
+     per-job cost of driving a loopback ``serve --tcp`` daemon through
+     ``session::fleet::TcpTransport`` vs the local ``ProcessTransport``
+     path, as a finite difference so daemon startup and dial cost
+     cancel (ceiling: 4.0 on full runs, 8.0 on smoke; env
+     ``GUARD_MAX_FLEET_OVERHEAD`` overrides both). Catches the fleet
+     transport (probes, ledger bookkeeping, socket framing) getting
+     expensive relative to the pipe transport it substitutes.
 
 2. **Cross-run**: record-by-record, the fresh run must not regress more
    than ``REGRESSION_FACTOR`` (2x) against the committed baseline. When
@@ -106,6 +114,13 @@ def serve_overhead_ceiling(fresh):
     if env is not None:
         return float(env)
     return 6.0 if fresh.get("smoke") else 3.0
+
+
+def fleet_ceiling(fresh):
+    env = os.environ.get("GUARD_MAX_FLEET_OVERHEAD")
+    if env is not None:
+        return float(env)
+    return 8.0 if fresh.get("smoke") else 4.0
 
 
 def load(path):
@@ -276,6 +291,39 @@ def main():
         else:
             print(
                 f"guard: serve.overhead_tcp_vs_stdin = {overhead:.2f}x "
+                f"(<= {ceiling:.2f}x) ok"
+            )
+
+    # --- check 1f: fleet-seam marginal overhead ---------------------------
+    # The multi-host tier's fixed cost (daemon startup, dial, probe spin-up)
+    # amortizes away; what must stay bounded is the marginal per-job cost of
+    # driving a loopback `serve --tcp` daemon through the fleet TcpTransport
+    # vs the local ProcessTransport path it substitutes.
+    ceiling = fleet_ceiling(fresh)
+    fleet = fresh.get("fleet") or {}
+    if not fleet:
+        failures.append("no `fleet` section in fresh run (fleet-seam bench missing)")
+    else:
+        overhead = fleet.get("overhead_marginal_vs_process")
+        if overhead is None and fleet.get("measurable") is False:
+            print(
+                "guard: fleet marginals below timer resolution -- "
+                "overhead check skipped this run"
+            )
+        elif overhead is None:
+            failures.append(
+                "fleet.overhead_marginal_vs_process is null -- bench emitted "
+                "no measurement"
+            )
+        elif overhead > ceiling:
+            failures.append(
+                f"fleet.overhead_marginal_vs_process = {overhead:.2f}x > "
+                f"{ceiling:.2f}x: the fleet TCP transport costs too much per "
+                "job vs the local pipe transport"
+            )
+        else:
+            print(
+                f"guard: fleet.overhead_marginal_vs_process = {overhead:.2f}x "
                 f"(<= {ceiling:.2f}x) ok"
             )
 

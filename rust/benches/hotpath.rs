@@ -470,6 +470,97 @@ fn main() {
         .expect("serve bench: server thread")
         .expect("serve bench: server must exit cleanly");
 
+    // === fleet tier: marginal per-job TCP-transport overhead =================
+    // `shard --hosts` rides the same pool as ProcessTransport, swapping
+    // the stdin/stdout pipes of a local child for a TCP connection to a
+    // `serve --tcp` daemon. The number that must stay bounded is the
+    // *marginal* per-job cost vs the local ProcessTransport path (same
+    // finite difference as the shard section, so daemon startup and
+    // dial cost cancel) — a pure transport-seam ratio: same pool, same
+    // merge, same child arithmetic. The `fleet` section of
+    // BENCH_hotpath.json records it; bench_guard enforces the ceiling
+    // (GUARD_MAX_FLEET_OVERHEAD overrides).
+    let fleet_listener =
+        std::net::TcpListener::bind("127.0.0.1:0").expect("fleet bench: bind ephemeral port");
+    let fleet_addr = fleet_listener.local_addr().expect("fleet bench: local addr");
+    let fleet_net_cfg = mma_sim::session::NetConfig {
+        shard: mma_sim::session::ShardConfig {
+            workers: 1,
+            ..mma_sim::session::ShardConfig::default()
+        },
+        queue_depth: 64,
+        // no memoization: the transport seam must be measured, not cached away
+        cache_max: 0,
+        ..mma_sim::session::NetConfig::default()
+    };
+    let fleet_server = std::thread::spawn(move || {
+        let transport =
+            mma_sim::session::ProcessTransport::with_binary(env!("CARGO_BIN_EXE_mma-sim"));
+        mma_sim::session::serve_tcp(fleet_listener, &fleet_net_cfg, &transport)
+    });
+    let fleet_topo = mma_sim::session::FleetTopology::loopback(&[fleet_addr.to_string()]);
+    let fleet_transport =
+        mma_sim::session::TcpTransport::new(fleet_topo).expect("fleet bench: topology");
+    let fleet_run = |jobs: usize| -> f64 {
+        let job_list: Vec<mma_sim::coordinator::Job> = take_seeds(jobs)
+            .into_iter()
+            .enumerate()
+            .map(|(i, seed)| mma_sim::coordinator::Job {
+                id: i as u64,
+                pair: shard_pair.into(),
+                batch: shard_batch,
+                seed,
+            })
+            .collect();
+        let cfg = mma_sim::session::ShardConfig {
+            workers: 1,
+            steal: true,
+            ..mma_sim::session::ShardConfig::default()
+        };
+        let mut sink = std::io::sink();
+        let t = std::time::Instant::now();
+        black_box(
+            mma_sim::session::shard_campaign(job_list, &cfg, &fleet_transport, &mut sink)
+                .expect("fleet campaign"),
+        );
+        t.elapsed().as_secs_f64()
+    };
+    // untimed warmup: the daemon's child finishes registry + LUT warm
+    fleet_run(2);
+    let t_fl_lo = best2(&fleet_run, shard_jobs_lo);
+    let t_fl_hi = best2(&fleet_run, shard_jobs_hi);
+    let marg_fleet = (t_fl_hi - t_fl_lo) / shard_span;
+    // same rule as the shard/serve sections: a non-positive finite
+    // difference is scheduler noise, not a measurement
+    let fleet_overhead =
+        if marg_sh > 0.0 && marg_fleet > 0.0 { Some(marg_fleet / marg_sh) } else { None };
+    match fleet_overhead {
+        Some(x) => println!(
+            "    fleet seam: process marginal {:.3} ms/job, fleet marginal {:.3} ms/job, \
+             overhead {x:.2}x",
+            marg_sh * 1e3,
+            marg_fleet * 1e3
+        ),
+        None => println!(
+            "    fleet seam: marginals below timer resolution (process {:.3} ms/job, \
+             fleet {:.3} ms/job) — overhead not measurable this run",
+            marg_sh * 1e3,
+            marg_fleet * 1e3
+        ),
+    }
+    {
+        use std::io::{Read, Write};
+        let mut s = std::net::TcpStream::connect(fleet_addr).expect("fleet bench: shutdown");
+        s.write_all(b"{\"shutdown\":true}\n").expect("fleet bench: shutdown frame");
+        s.shutdown(std::net::Shutdown::Write).expect("fleet bench: half-close");
+        let mut ack = String::new();
+        s.read_to_string(&mut ack).expect("fleet bench: shutdown ack");
+    }
+    fleet_server
+        .join()
+        .expect("fleet bench: server thread")
+        .expect("fleet bench: server must exit cleanly");
+
     // === narrow-format decode & product LUTs =================================
     // Decode-bound and product-bound micro-benchmarks: the bit-level
     // reference path vs the table-driven fast path over identical inputs.
@@ -743,6 +834,25 @@ fn main() {
         None => json.push_str("    \"overhead_tcp_vs_stdin\": null,\n"),
     }
     json.push_str(&format!("    \"measurable\": {}\n", net_overhead.is_some()));
+    json.push_str("  },\n");
+    json.push_str("  \"fleet\": {\n");
+    json.push_str(&format!("    \"pair\": \"{shard_pair}\",\n"));
+    json.push_str(&format!("    \"jobs_lo\": {shard_jobs_lo},\n"));
+    json.push_str(&format!("    \"jobs_hi\": {shard_jobs_hi},\n"));
+    json.push_str(&format!("    \"batch\": {shard_batch},\n"));
+    json.push_str(&format!(
+        "    \"process_marginal_ms_per_job\": {:.4},\n",
+        marg_sh * 1e3
+    ));
+    json.push_str(&format!(
+        "    \"fleet_marginal_ms_per_job\": {:.4},\n",
+        marg_fleet * 1e3
+    ));
+    match fleet_overhead {
+        Some(x) => json.push_str(&format!("    \"overhead_marginal_vs_process\": {x:.3},\n")),
+        None => json.push_str("    \"overhead_marginal_vs_process\": null,\n"),
+    }
+    json.push_str(&format!("    \"measurable\": {}\n", fleet_overhead.is_some()));
     json.push_str("  },\n");
     json.push_str("  \"lut\": {\n");
     json.push_str(&format!("    \"decode_fp16_speedup\": {sp_dec16:.3},\n"));

@@ -38,8 +38,19 @@
 //!   ([`session::net::cache`]: canonical-JSON job keys, vendored
 //!   FNV-1a/SipHash addressing, persistent warm-restart artifacts under
 //!   `--cache-dir`), and a counters surface ([`session::net::stats`],
-//!   the `{"stats":true}` request). Start here; the layers below are
-//!   the machinery it drives.
+//!   the `{"stats":true}` request). At the top sits the multi-host
+//!   fleet tier ([`session::fleet`], `mma-sim shard --hosts
+//!   hosts.json`): a `TcpTransport` that plugs remote `serve --tcp`
+//!   daemons into the same hardened `ShardPool` as worker connections —
+//!   per-host liveness probes, reconnect with the pool's capped
+//!   exponential backoff, host-level quarantine after a failure budget
+//!   ([`session::fleet::hosts`] is the `hosts.json` schema),
+//!   work-stealing rebalance away from slow hosts, client-side
+//!   backpressure resubmits, per-host chaos (`Disconnect` /
+//!   `Partition` / `SlowHost` in [`session::faults`]), and per-host
+//!   counters — with `--deterministic` fleet bytes pinned identical to
+//!   the single-process run. Start here; the layers below are the
+//!   machinery it drives.
 //! - [`error`] — the structured [`ApiError`] every validated entry point
 //!   rejects malformed input with (a leaf module, so the layers below can
 //!   return it without depending on the facade above them).

@@ -119,7 +119,10 @@ fn print_help() {
          \x20                                    Prints {{\"listening\":\"IP:PORT\"}} on\n\
          \x20                                    stdout (bind ADDR :0 for ephemeral)\n\
          \x20 serve --connect ADDR               pipe client for a --tcp server: stdin\n\
-         \x20                                    to socket, replies to stdout\n\
+         \x20       [--retry-max N]              to socket, replies to stdout; resubmits\n\
+         \x20       [--retry-base MS]            {{\"retry\":true}} backpressure frames up\n\
+         \x20                                    to N times with capped-doubling backoff\n\
+         \x20                                    (0 = surface them verbatim)\n\
          \x20 shard [--workers N] [--jobs J] [--batch B] [--seed S] [--pair NAME]...\n\
          \x20       [--child-workers W] [--inflight K] [--deterministic]\n\
          \x20                                    campaign sharded across N child\n\
@@ -139,7 +142,17 @@ fn print_help() {
          \x20                                    child reply streams; SPEC is either\n\
          \x20                                    'L:kind@frame,…;L:…' (explicit) or\n\
          \x20                                    'seed=S,launches=N,frames=F,crash=c,\n\
-         \x20                                    hang=h,garbage=g,truncate=t,delay=d'\n\
+         \x20                                    hang=h,garbage=g,truncate=t,delay=d,\n\
+         \x20                                    disconnect=x,partition=p,slow=s'\n\
+         \x20 shard --hosts FILE                 same campaign over a multi-host fleet:\n\
+         \x20       [--steal]                    workers are TCP connections to remote\n\
+         \x20                                    `serve --tcp` daemons named by the\n\
+         \x20                                    hosts.json topology (liveness probes,\n\
+         \x20                                    reconnect backoff, host quarantine,\n\
+         \x20                                    work stealing — always on for fleets;\n\
+         \x20                                    --steal enables it for local runs).\n\
+         \x20                                    --chaos indexes hosts, not launches;\n\
+         \x20                                    per-host counters print on stderr\n\
          \x20 shard --gemm --arch A --instr FRAG [--m M --n N --k K] [--check]\n\
          \x20                                    GEMM row bands scattered across\n\
          \x20                                    `simulate --stdin` children; --check\n\
@@ -332,6 +345,7 @@ fn multi_flag(args: &[String], name: &str) -> Vec<String> {
 }
 
 fn cmd_shard(args: &[String]) -> Result<()> {
+    let hosts = flag(args, "--hosts");
     let shard_cfg = ShardConfig {
         workers: parsed(args, "--workers", 2usize)?,
         inflight: parsed(args, "--inflight", 0usize)?,
@@ -341,12 +355,18 @@ fn cmd_shard(args: &[String]) -> Result<()> {
         max_worker_kills: parsed(args, "--max-worker-kills", 3usize)?,
         respawn_base_ms: parsed(args, "--respawn-base", 25u64)?,
         max_spawns: parsed(args, "--max-spawns", 0usize)?,
+        // fleet runs always steal: rebalancing away from slow hosts is
+        // the point of a multi-host campaign
+        steal: has(args, "--steal") || hosts.is_some(),
     };
-    let mut transport = ProcessTransport::current_exe()?;
-    if let Some(spec) = flag(args, "--chaos") {
-        transport = transport.with_chaos(ChaosPlan::parse(&spec)?);
-    }
     if has(args, "--gemm") {
+        if hosts.is_some() {
+            bail!("--hosts drives campaign fleets; --gemm stays on local worker processes");
+        }
+        let mut transport = ProcessTransport::current_exe()?;
+        if let Some(spec) = flag(args, "--chaos") {
+            transport = transport.with_chaos(ChaosPlan::parse(&spec)?);
+        }
         return cmd_shard_gemm(args, &shard_cfg, &transport);
     }
 
@@ -385,7 +405,28 @@ fn cmd_shard(args: &[String]) -> Result<()> {
         shard_cfg.workers
     );
     let mut stdout = std::io::stdout();
-    let report = session::shard_campaign(jobs, &shard_cfg, &transport, &mut stdout)?;
+    let report = if let Some(path) = hosts {
+        // multi-host fleet: workers are connections to remote
+        // `serve --tcp` daemons named by the topology file; --chaos
+        // schedules connection-level faults per *host* index
+        let topo = session::FleetTopology::from_file(std::path::Path::new(&path))?;
+        eprintln!("shard: fleet of {} hosts from {path}", topo.hosts.len());
+        let mut transport = session::TcpTransport::new(topo)?;
+        if let Some(spec) = flag(args, "--chaos") {
+            transport = transport.with_chaos(ChaosPlan::parse(&spec)?);
+        }
+        let report = session::shard_campaign(jobs, &shard_cfg, &transport, &mut stdout)?;
+        // per-host counters on stderr: stdout stays byte-comparable
+        eprintln!("{}", transport.stats().frame().encode());
+        eprintln!("{}", transport.stats().render());
+        report
+    } else {
+        let mut transport = ProcessTransport::current_exe()?;
+        if let Some(spec) = flag(args, "--chaos") {
+            transport = transport.with_chaos(ChaosPlan::parse(&spec)?);
+        }
+        session::shard_campaign(jobs, &shard_cfg, &transport, &mut stdout)?
+    };
     eprint!("{}", report.render());
     Ok(())
 }
@@ -470,8 +511,14 @@ fn verify_pairs(args: &[String]) -> Result<Vec<VerifyPair>> {
 
 fn cmd_serve(args: &[String]) -> Result<()> {
     if let Some(addr) = flag(args, "--connect") {
-        // scripted pipe client: stdin -> server, server -> stdout
-        session::connect_pipe(&addr)?;
+        // scripted pipe client: stdin -> server, server -> stdout, with
+        // bounded client-side resubmission of {"retry":true} backpressure
+        // frames (--retry-max 0 restores the dumb pass-through pipe)
+        let retry = session::RetryPolicy {
+            max_attempts: parsed(args, "--retry-max", 4u32)?,
+            base_ms: parsed(args, "--retry-base", 25u64)?,
+        };
+        session::connect_pipe(&addr, retry)?;
         return Ok(());
     }
     if let Some(addr) = flag(args, "--tcp") {
@@ -533,6 +580,7 @@ fn serve_tcp_from_args(args: &[String], addr: &str) -> Result<()> {
             max_worker_kills: parsed(args, "--max-worker-kills", 3usize)?,
             respawn_base_ms: parsed(args, "--respawn-base", 25u64)?,
             max_spawns: parsed(args, "--max-spawns", 0usize)?,
+            steal: false,
         },
         queue_depth: parsed(args, "--queue-depth", 0usize)?,
         max_line_bytes: parsed(args, "--max-line-bytes", 0usize)?,

@@ -14,7 +14,14 @@
 //!   pool), [`Fault::Garbage`] (the frame is replaced by a non-protocol
 //!   line), [`Fault::Truncate`] (half the frame, then the stream ends —
 //!   a crash mid-write), and [`Fault::Delay`] (the frame arrives late but
-//!   intact — the fault that must *not* trip the watchdog);
+//!   intact — the fault that must *not* trip the watchdog). PR 9 added
+//!   three connection-level kinds for the multi-host fleet
+//!   ([`crate::session::fleet`]): [`Fault::Disconnect`] (the peer drops
+//!   the socket — distinguishable from a crash only at the transport),
+//!   [`Fault::Partition`] (the socket stays open but traffic blackholes —
+//!   the failure only a liveness probe can detect), and
+//!   [`Fault::SlowHost`] (every frame from this point on is late — the
+//!   degradation work-stealing must rebalance away from);
 //! - a [`ChaosPlan`] assigns one `FaultPlan` per worker *launch index*
 //!   (respawned replacements keep counting up), either written out
 //!   explicitly (`"0:hang@2;1:crash@4"`) or expanded deterministically
@@ -67,6 +74,16 @@ pub enum Fault {
     Truncate,
     /// The frame arrives intact after this many milliseconds.
     Delay(u64),
+    /// The connection drops where the frame would have been (the network
+    /// flavor of [`Fault::Crash`]: the peer is fine, the socket is gone).
+    Disconnect,
+    /// The connection blackholes: open socket, no traffic either way,
+    /// until the worker is killed (the network flavor of [`Fault::Hang`] —
+    /// what heartbeat deadlines exist to detect).
+    Partition,
+    /// This frame *and every later one* arrives after this many extra
+    /// milliseconds — a persistently slow host, not a one-off stall.
+    SlowHost(u64),
 }
 
 impl Fault {
@@ -77,6 +94,9 @@ impl Fault {
             Fault::Garbage => "garbage".into(),
             Fault::Truncate => "truncate".into(),
             Fault::Delay(ms) => format!("delay{ms}"),
+            Fault::Disconnect => "disconnect".into(),
+            Fault::Partition => "partition".into(),
+            Fault::SlowHost(ms) => format!("slow{ms}"),
         }
     }
 
@@ -86,14 +106,24 @@ impl Fault {
             "hang" => Ok(Fault::Hang),
             "garbage" => Ok(Fault::Garbage),
             "truncate" => Ok(Fault::Truncate),
-            _ => match kind.strip_prefix("delay") {
-                Some(ms) => Ok(Fault::Delay(ms.parse().map_err(|_| {
-                    bad_spec(format!("'{kind}': delay wants a millisecond count (delay50)"))
-                })?)),
-                None => Err(bad_spec(format!(
-                    "unknown fault kind '{kind}' (crash|hang|garbage|truncate|delay<ms>)"
-                ))),
-            },
+            "disconnect" => Ok(Fault::Disconnect),
+            "partition" => Ok(Fault::Partition),
+            _ => {
+                if let Some(ms) = kind.strip_prefix("delay") {
+                    return Ok(Fault::Delay(ms.parse().map_err(|_| {
+                        bad_spec(format!("'{kind}': delay wants a millisecond count (delay50)"))
+                    })?));
+                }
+                if let Some(ms) = kind.strip_prefix("slow") {
+                    return Ok(Fault::SlowHost(ms.parse().map_err(|_| {
+                        bad_spec(format!("'{kind}': slow wants a millisecond count (slow50)"))
+                    })?));
+                }
+                Err(bad_spec(format!(
+                    "unknown fault kind '{kind}' \
+                     (crash|hang|garbage|truncate|delay<ms>|disconnect|partition|slow<ms>)"
+                )))
+            }
         }
     }
 }
@@ -206,7 +236,8 @@ impl ChaosPlan {
 
     fn parse_seeded(spec: &str) -> Result<Self, ApiError> {
         let (mut seed, mut launches, mut frames) = (0u64, 4usize, 16u64);
-        let mut counts = [0usize; 5]; // crash, hang, garbage, truncate, delay
+        // crash, hang, garbage, truncate, delay, disconnect, partition, slow
+        let mut counts = [0usize; 8];
         for entry in spec.split(',').map(str::trim).filter(|e| !e.is_empty()) {
             let (key, value) = entry
                 .split_once('=')
@@ -226,11 +257,26 @@ impl ChaosPlan {
                 "garbage" => counts[2] = parse_num()? as usize,
                 "truncate" => counts[3] = parse_num()? as usize,
                 "delay" => counts[4] = parse_num()? as usize,
+                "disconnect" => counts[5] = parse_num()? as usize,
+                "partition" => counts[6] = parse_num()? as usize,
+                "slow" => counts[7] = parse_num()? as usize,
                 other => return Err(bad_spec(format!("unknown seeded key '{other}'"))),
             }
         }
-        Ok(Self::seeded(
-            seed, launches, frames, counts[0], counts[1], counts[2], counts[3], counts[4],
+        Ok(Self::seeded_with(
+            seed,
+            launches,
+            frames,
+            &[
+                (Fault::Crash, counts[0]),
+                (Fault::Hang, counts[1]),
+                (Fault::Garbage, counts[2]),
+                (Fault::Truncate, counts[3]),
+                (Fault::Delay(10), counts[4]),
+                (Fault::Disconnect, counts[5]),
+                (Fault::Partition, counts[6]),
+                (Fault::SlowHost(25), counts[7]),
+            ],
         ))
     }
 
@@ -239,6 +285,7 @@ impl ChaosPlan {
     /// `[0, frames)` from the crate's deterministic RNG. Collisions keep
     /// the first-drawn fault (same seed, same schedule, every run).
     /// Seeded delay events sleep a fixed 10 ms.
+    #[allow(clippy::too_many_arguments)]
     pub fn seeded(
         seed: u64,
         launches: usize,
@@ -249,17 +296,35 @@ impl ChaosPlan {
         truncate: usize,
         delay: usize,
     ) -> Self {
+        Self::seeded_with(
+            seed,
+            launches,
+            frames,
+            &[
+                (Fault::Crash, crash),
+                (Fault::Hang, hang),
+                (Fault::Garbage, garbage),
+                (Fault::Truncate, truncate),
+                (Fault::Delay(10), delay),
+            ],
+        )
+    }
+
+    /// [`ChaosPlan::seeded`] generalized over an explicit kind list —
+    /// the seeded fleet schedules (`disconnect=`/`partition=`/`slow=`
+    /// keys; seeded slow-host events add a fixed 25 ms per frame) draw
+    /// from the same RNG stream, so old five-kind specs keep expanding
+    /// to the exact schedules they always did.
+    pub fn seeded_with(
+        seed: u64,
+        launches: usize,
+        frames: u64,
+        kinds: &[(Fault, usize)],
+    ) -> Self {
         let (launches, frames) = (launches.max(1), frames.max(1));
         let mut rng = Rng::new(seed ^ 0xC4A0_5F17_DE7E_C7ED);
         let mut per_launch: BTreeMap<usize, FaultPlan> = BTreeMap::new();
-        let kinds = [
-            (Fault::Crash, crash),
-            (Fault::Hang, hang),
-            (Fault::Garbage, garbage),
-            (Fault::Truncate, truncate),
-            (Fault::Delay(10), delay),
-        ];
-        for (fault, count) in kinds {
+        for &(fault, count) in kinds {
             for _ in 0..count {
                 let launch = rng.below(launches as u64) as usize;
                 let frame = rng.below(frames);
@@ -368,6 +433,8 @@ struct ChaosReader {
     frame: u64,
     pending: Vec<u8>,
     pos: usize,
+    /// Persistent per-frame delay once a [`Fault::SlowHost`] fired.
+    slow_ms: u64,
     kill: Arc<KillSwitch>,
 }
 
@@ -379,6 +446,7 @@ impl ChaosReader {
             frame: 0,
             pending: Vec::new(),
             pos: 0,
+            slow_ms: 0,
             kill,
         }
     }
@@ -405,8 +473,14 @@ impl Read for ChaosReader {
             let fault = self.plan.fault_at(self.frame);
             self.frame += 1;
             self.pos = 0;
+            if let Some(Fault::SlowHost(ms)) = fault {
+                self.slow_ms = ms;
+            }
+            if self.slow_ms > 0 {
+                std::thread::sleep(Duration::from_millis(self.slow_ms));
+            }
             match fault {
-                None => self.pending = line,
+                None | Some(Fault::SlowHost(_)) => self.pending = line,
                 Some(Fault::Delay(ms)) => {
                     std::thread::sleep(Duration::from_millis(ms));
                     self.pending = line;
@@ -419,11 +493,11 @@ impl Read for ChaosReader {
                     self.pending = line;
                     self.inner = None;
                 }
-                Some(Fault::Crash) => {
+                Some(Fault::Crash) | Some(Fault::Disconnect) => {
                     self.inner = None;
                     return Ok(0);
                 }
-                Some(Fault::Hang) => {
+                Some(Fault::Hang) | Some(Fault::Partition) => {
                     // silent but open: block until the pool kills the
                     // worker, then surface EOF so the reader thread exits
                     self.inner = None;
@@ -458,12 +532,14 @@ pub struct ChaosWriter<W: Write> {
     plan: FaultPlan,
     frame: u64,
     buf: Vec<u8>,
+    /// Persistent per-frame delay once a [`Fault::SlowHost`] fired.
+    slow_ms: u64,
     dead: bool,
 }
 
 impl<W: Write> ChaosWriter<W> {
     pub fn new(inner: W, plan: FaultPlan) -> Self {
-        Self { inner, plan, frame: 0, buf: Vec::new(), dead: false }
+        Self { inner, plan, frame: 0, buf: Vec::new(), slow_ms: 0, dead: false }
     }
 }
 
@@ -477,8 +553,14 @@ impl<W: Write> Write for ChaosWriter<W> {
             let line: Vec<u8> = self.buf.drain(..=pos).collect();
             let fault = self.plan.fault_at(self.frame);
             self.frame += 1;
+            if let Some(Fault::SlowHost(ms)) = fault {
+                self.slow_ms = ms;
+            }
+            if self.slow_ms > 0 {
+                std::thread::sleep(Duration::from_millis(self.slow_ms));
+            }
             match fault {
-                None => self.inner.write_all(&line)?,
+                None | Some(Fault::SlowHost(_)) => self.inner.write_all(&line)?,
                 Some(Fault::Delay(ms)) => {
                     std::thread::sleep(Duration::from_millis(ms));
                     self.inner.write_all(&line)?;
@@ -492,11 +574,11 @@ impl<W: Write> Write for ChaosWriter<W> {
                     self.dead = true;
                     return Err(crash_err());
                 }
-                Some(Fault::Crash) => {
+                Some(Fault::Crash) | Some(Fault::Disconnect) => {
                     self.dead = true;
                     return Err(crash_err());
                 }
-                Some(Fault::Hang) => {
+                Some(Fault::Hang) | Some(Fault::Partition) => {
                     // stay alive, emit nothing more: a real hung worker
                     let _ = self.inner.flush();
                     loop {
@@ -533,8 +615,62 @@ mod tests {
     }
 
     #[test]
+    fn connection_fault_kinds_round_trip() {
+        let plan = FaultPlan::parse("disconnect@0,partition@2,slow40@4").unwrap();
+        assert_eq!(plan.fault_at(0), Some(Fault::Disconnect));
+        assert_eq!(plan.fault_at(2), Some(Fault::Partition));
+        assert_eq!(plan.fault_at(4), Some(Fault::SlowHost(40)));
+        assert_eq!(plan.to_spec(), "disconnect@0,partition@2,slow40@4");
+        assert_eq!(FaultPlan::parse(&plan.to_spec()).unwrap(), plan);
+        // seeded form accepts the new keys and stays deterministic
+        let spec = "seed=3,launches=2,frames=8,disconnect=2,partition=1,slow=1";
+        let a = ChaosPlan::parse(spec).unwrap();
+        assert_eq!(a, ChaosPlan::parse(spec).unwrap());
+        assert!(!a.is_empty());
+        assert_eq!(ChaosPlan::parse(&a.to_spec()).unwrap(), a);
+        // the new kinds draw *after* the old five, so legacy seeded specs
+        // still expand to the exact schedules they always did
+        let legacy = "seed=7,launches=3,frames=10,crash=2,hang=1";
+        assert_eq!(
+            ChaosPlan::parse(legacy).unwrap(),
+            ChaosPlan::seeded(7, 3, 10, 2, 1, 0, 0, 0)
+        );
+    }
+
+    #[test]
+    fn slow_host_delays_every_later_frame() {
+        let input = b"l0\nl1\nl2\nl3\n".to_vec();
+        let plan = FaultPlan::parse("slow20@1").unwrap();
+        let mut r = ChaosReader::new(
+            Box::new(std::io::Cursor::new(input)),
+            plan,
+            Arc::new(KillSwitch::default()),
+        );
+        let t = std::time::Instant::now();
+        let mut text = String::new();
+        r.read_to_string(&mut text).unwrap();
+        assert_eq!(text, "l0\nl1\nl2\nl3\n", "slow frames arrive intact");
+        // frames 1, 2, 3 each pay the persistent 20 ms tax
+        assert!(t.elapsed() >= Duration::from_millis(55), "{:?}", t.elapsed());
+    }
+
+    #[test]
+    fn chaos_reader_disconnect_ends_the_stream() {
+        let input = b"l0\nl1\nl2\n".to_vec();
+        let plan = FaultPlan::parse("disconnect@1").unwrap();
+        let mut r = ChaosReader::new(
+            Box::new(std::io::Cursor::new(input)),
+            plan,
+            Arc::new(KillSwitch::default()),
+        );
+        let mut text = String::new();
+        r.read_to_string(&mut text).unwrap();
+        assert_eq!(text, "l0\n", "the stream drops at the disconnect");
+    }
+
+    #[test]
     fn bad_specs_are_structured_errors_not_panics() {
-        for spec in ["crash", "wat@1", "crash@x", "crash@1,hang@1", "delay@2"] {
+        for spec in ["crash", "wat@1", "crash@x", "crash@1,hang@1", "delay@2", "slow@1"] {
             let err = FaultPlan::parse(spec).unwrap_err();
             assert!(matches!(err, ApiError::Unsupported { .. }), "{spec}: {err}");
         }

@@ -1,0 +1,850 @@
+//! Multi-host shard fleet: the [`WorkerTransport`] that dials remote
+//! `mma-sim serve --tcp` worker daemons, and everything that makes that
+//! safe on a flaky network.
+//!
+//! [`TcpTransport`] plugs into the existing [`ShardPool`] seam — each
+//! `launch` dials one TCP connection to a daemon named by a
+//! [`hosts.json`](hosts) topology, and the connection speaks exactly the
+//! `serve --jsonl` frame protocol, so the pool cannot tell a fleet from
+//! local child processes. The robustness layer lives in the transport:
+//!
+//! - **liveness probes**: an idle connection sends `{"stats":true}`
+//!   heartbeats every [`probe_interval_ms`]; silence past
+//!   [`probe_deadline_ms`] declares the host dead-or-partitioned and ends
+//!   the stream, which routes into the pool's ordinary dead-child
+//!   requeue/respawn machinery;
+//! - **reconnect**: a respawn re-enters [`TcpTransport::launch`], which
+//!   redials with the same deterministic capped-doubling backoff as the
+//!   pool's `--respawn-base` discipline ([`backoff_delay`]);
+//! - **host quarantine**: a host accumulating [`failure_budget`]
+//!   connection failures (failed dials, dead or partitioned connections)
+//!   stops being offered work; its unanswered jobs requeue onto survivors
+//!   exactly as a dead child's do;
+//! - **backpressure**: a daemon's `{"ok":false,"retry":true,...}` frame is
+//!   honored client-side — the job resubmits after a bounded backoff
+//!   ([`RetryPolicy`], shared with `serve --connect`) instead of
+//!   surfacing server saturation as a terminal error;
+//! - **fleet chaos**: the connection-level fault kinds
+//!   ([`Fault::Disconnect`], [`Fault::Partition`], [`Fault::SlowHost`])
+//!   are applied parent-side per *host* (frame counters survive
+//!   reconnects), so `rust/tests/fleet.rs` can pin the invariant: under
+//!   any chaos schedule where every job completes, `--deterministic`
+//!   fleet output is byte-identical to the single-process run.
+//!
+//! Byte-identity needs nothing from the daemons: the pool re-encodes every
+//! outcome line and merges in ascending job-id order, so host count,
+//! placement, steals, and retries never reach the output bytes.
+//!
+//! [`ShardPool`]: crate::session::shard::ShardPool
+//! [`probe_interval_ms`]: FleetTopology::probe_interval_ms
+//! [`probe_deadline_ms`]: FleetTopology::probe_deadline_ms
+//! [`failure_budget`]: FleetTopology::failure_budget
+
+use std::collections::{BTreeMap, VecDeque};
+use std::io::{Read, Write};
+use std::net::{Shutdown, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::error::ApiError;
+use crate::session::faults::{ChaosPlan, Fault, FaultPlan, GARBAGE_FRAME};
+use crate::session::json::{self, JsonValue};
+use crate::session::shard::{WorkerHandle, WorkerIo, WorkerRole, WorkerTransport};
+
+pub mod hosts;
+pub use hosts::{FleetTopology, HostSpec};
+
+/// Ceiling of every fleet backoff schedule (dial, retry) — the same cap
+/// as the pool's respawn backoff.
+const MAX_BACKOFF_DELAY: Duration = Duration::from_secs(1);
+
+/// How often a blocked connection read wakes to run the heartbeat clock.
+const READ_TICK: Duration = Duration::from_millis(50);
+
+/// The deterministic capped-doubling backoff shared by every fleet retry
+/// loop: attempt 0 is immediate, attempt n sleeps `base_ms << (n-1)`
+/// milliseconds, capped at 1 s. Jitter-free, so chaos runs reproduce.
+pub fn backoff_delay(base_ms: u64, attempt: u32) -> Duration {
+    if attempt == 0 || base_ms == 0 {
+        return Duration::ZERO;
+    }
+    let shift = (attempt - 1).min(16);
+    Duration::from_millis(base_ms).saturating_mul(1u32 << shift).min(MAX_BACKOFF_DELAY)
+}
+
+/// Bounded resubmission of backpressure (`{"retry":true}`) frames: how
+/// many resubmits a job gets and the backoff base between them. Shared by
+/// [`TcpTransport`] and the `serve --connect` pipe client.
+#[derive(Clone, Copy, Debug)]
+pub struct RetryPolicy {
+    /// Resubmits before the retry degrades to a terminal error; 0 turns
+    /// the client back into a dumb pipe that surfaces retry frames.
+    pub max_attempts: u32,
+    pub base_ms: u64,
+}
+
+impl RetryPolicy {
+    pub fn delay(&self, attempt: u32) -> Duration {
+        backoff_delay(self.base_ms, attempt)
+    }
+}
+
+/// The id of a backpressure frame — `{"ok":false,"retry":true,...,"id":N}`
+/// — if `v` is one. A retry frame without an id is not resubmittable and
+/// is treated as a terminal reply by every client.
+pub fn retry_frame_id(v: &JsonValue) -> Option<u64> {
+    if v.get("ok").and_then(|b| b.as_bool()) == Some(false)
+        && v.get("retry").and_then(|b| b.as_bool()) == Some(true)
+    {
+        v.get("id").and_then(|i| i.as_u64())
+    } else {
+        None
+    }
+}
+
+// ---------------------------------------------------------------------------
+// per-host observability
+// ---------------------------------------------------------------------------
+
+/// Per-host fleet counters, updated lock-free from connection threads.
+#[derive(Default)]
+pub struct HostCounters {
+    /// Outcome lines this host resolved (first resolution only).
+    pub jobs: AtomicU64,
+    /// Jobs re-issued to this host away from another host's backlog.
+    pub steals: AtomicU64,
+    /// Successful dials after the first (a respawn redialing the host).
+    pub reconnects: AtomicU64,
+    /// Times the host crossed its failure budget into quarantine.
+    pub quarantines: AtomicU64,
+    /// Dial attempts (successful or not).
+    pub dials: AtomicU64,
+    /// Backpressure resubmits sent to this host.
+    pub retries: AtomicU64,
+}
+
+/// The fleet's per-host counter table — the `{"stats":...}` surface and
+/// the `shard --hosts` end-of-run summary, so a degraded run is
+/// diagnosable from the report alone.
+pub struct FleetStats {
+    hosts: Vec<(String, HostCounters)>,
+}
+
+impl FleetStats {
+    fn new(topo: &FleetTopology) -> Self {
+        Self {
+            hosts: topo
+                .hosts
+                .iter()
+                .map(|h| (h.name.clone(), HostCounters::default()))
+                .collect(),
+        }
+    }
+
+    pub fn host(&self, idx: usize) -> &HostCounters {
+        &self.hosts[idx].1
+    }
+
+    /// The `{"stats":{"hosts":[...]}}` frame.
+    pub fn frame(&self) -> JsonValue {
+        let hosts = self
+            .hosts
+            .iter()
+            .map(|(name, c)| {
+                JsonValue::Obj(vec![
+                    ("host".into(), JsonValue::str(name)),
+                    ("jobs".into(), JsonValue::u64(c.jobs.load(Ordering::Relaxed))),
+                    ("steals".into(), JsonValue::u64(c.steals.load(Ordering::Relaxed))),
+                    ("reconnects".into(), JsonValue::u64(c.reconnects.load(Ordering::Relaxed))),
+                    ("quarantines".into(), JsonValue::u64(c.quarantines.load(Ordering::Relaxed))),
+                    ("dials".into(), JsonValue::u64(c.dials.load(Ordering::Relaxed))),
+                    ("retries".into(), JsonValue::u64(c.retries.load(Ordering::Relaxed))),
+                ])
+            })
+            .collect();
+        JsonValue::Obj(vec![(
+            "stats".into(),
+            JsonValue::Obj(vec![("hosts".into(), JsonValue::Arr(hosts))]),
+        )])
+    }
+
+    /// Human-readable per-host summary lines (stderr at end of run —
+    /// stdout stays byte-comparable).
+    pub fn render(&self) -> String {
+        self.hosts
+            .iter()
+            .map(|(name, c)| {
+                format!(
+                    "fleet: host '{}': {} jobs, {} steals, {} reconnects, {} quarantines, \
+                     {} dials, {} retries",
+                    name,
+                    c.jobs.load(Ordering::Relaxed),
+                    c.steals.load(Ordering::Relaxed),
+                    c.reconnects.load(Ordering::Relaxed),
+                    c.quarantines.load(Ordering::Relaxed),
+                    c.dials.load(Ordering::Relaxed),
+                    c.retries.load(Ordering::Relaxed),
+                )
+            })
+            .collect::<Vec<_>>()
+            .join("\n")
+    }
+}
+
+// ---------------------------------------------------------------------------
+// fleet-wide shared state
+// ---------------------------------------------------------------------------
+
+/// Mutable per-host runtime state, behind the fleet lock.
+struct HostRt {
+    /// Consecutive connection failures since the last success.
+    failures: usize,
+    quarantined: bool,
+    /// Successful dials so far (launch 2+ is a reconnect).
+    launches: usize,
+    /// Live connections to this host right now (load, for placement).
+    active: usize,
+    /// Reply-frame counter for the host's chaos plan. Persistent across
+    /// reconnects: `disconnect@2` fires once on the host's third frame
+    /// overall, not once per connection.
+    frames: Arc<AtomicU64>,
+}
+
+struct FleetShared {
+    topo: FleetTopology,
+    stats: FleetStats,
+    hosts: Mutex<Vec<HostRt>>,
+    /// Latest host each job id was sent to — the steal observer: a send
+    /// whose id already belongs to another *live* connection is a steal.
+    owners: Mutex<BTreeMap<u64, usize>>,
+}
+
+impl FleetShared {
+    /// One more connection failure for `idx`; crossing the failure budget
+    /// quarantines the host (0 disables quarantine).
+    fn record_failure(&self, idx: usize) {
+        let mut hosts = self.hosts.lock().unwrap();
+        let h = &mut hosts[idx];
+        h.failures += 1;
+        let budget = self.topo.failure_budget;
+        if budget > 0 && !h.quarantined && h.failures >= budget {
+            h.quarantined = true;
+            self.stats.host(idx).quarantines.fetch_add(1, Ordering::Relaxed);
+            eprintln!(
+                "fleet: quarantining host '{}' after {} connection failures",
+                self.topo.hosts[idx].name, h.failures
+            );
+        }
+    }
+
+    fn release(&self, idx: usize) {
+        let mut hosts = self.hosts.lock().unwrap();
+        hosts[idx].active = hosts[idx].active.saturating_sub(1);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// the transport
+// ---------------------------------------------------------------------------
+
+/// A [`WorkerTransport`] whose workers are remote `mma-sim serve --tcp`
+/// daemons: each `launch` dials the least-loaded non-quarantined host of
+/// a [`FleetTopology`]. See the [module docs](self) for the robustness
+/// contract.
+pub struct TcpTransport {
+    shared: Arc<FleetShared>,
+    /// Connection-level fault schedule, indexed by *host* (launch index
+    /// `i` in a spec means host `i`), applied parent-side to the host's
+    /// reply stream.
+    chaos: Option<ChaosPlan>,
+}
+
+impl TcpTransport {
+    pub fn new(topo: FleetTopology) -> Result<Self, ApiError> {
+        topo.validate()?;
+        let stats = FleetStats::new(&topo);
+        let hosts = topo
+            .hosts
+            .iter()
+            .map(|_| HostRt {
+                failures: 0,
+                quarantined: false,
+                launches: 0,
+                active: 0,
+                frames: Arc::new(AtomicU64::new(0)),
+            })
+            .collect();
+        Ok(Self {
+            shared: Arc::new(FleetShared {
+                topo,
+                stats,
+                hosts: Mutex::new(hosts),
+                owners: Mutex::new(BTreeMap::new()),
+            }),
+            chaos: None,
+        })
+    }
+
+    /// Inject a per-host fault schedule: plan index `i` applies to host
+    /// `i`'s reply stream (frame counters persist across reconnects).
+    pub fn with_chaos(mut self, plan: ChaosPlan) -> Self {
+        self.chaos = Some(plan);
+        self
+    }
+
+    /// The per-host counter table (live; final values after the run).
+    pub fn stats(&self) -> &FleetStats {
+        &self.shared.stats
+    }
+
+    /// Non-quarantined hosts, least-loaded first (`active/slots`
+    /// compared exactly as cross-multiplied integers; ties break on
+    /// index, so placement is deterministic).
+    fn host_order(&self) -> Vec<usize> {
+        let hosts = self.shared.hosts.lock().unwrap();
+        let specs = &self.shared.topo.hosts;
+        let mut order: Vec<usize> = (0..hosts.len()).filter(|&i| !hosts[i].quarantined).collect();
+        order.sort_by(|&a, &b| {
+            (hosts[a].active * specs[b].slots)
+                .cmp(&(hosts[b].active * specs[a].slots))
+                .then(a.cmp(&b))
+        });
+        order
+    }
+
+    /// Dial one host: every non-quarantined host in load order, up to
+    /// [`FleetTopology::dial_attempts`] backed-off attempts each. A host
+    /// that exhausts its attempts records a connection failure (and may
+    /// quarantine); no host connecting is a hard error — never a hang.
+    fn dial(&self) -> Result<(usize, TcpStream), ApiError> {
+        let topo = &self.shared.topo;
+        for idx in self.host_order() {
+            let spec = &topo.hosts[idx];
+            let mut connected = None;
+            for attempt in 0..topo.dial_attempts.max(1) {
+                let delay = backoff_delay(topo.dial_base_ms, attempt);
+                if !delay.is_zero() {
+                    std::thread::sleep(delay);
+                }
+                self.shared.stats.host(idx).dials.fetch_add(1, Ordering::Relaxed);
+                match TcpStream::connect(&spec.addr) {
+                    Ok(sock) => {
+                        connected = Some(sock);
+                        break;
+                    }
+                    Err(e) => eprintln!(
+                        "fleet: dial '{}' ({}) attempt {} failed: {e}",
+                        spec.name,
+                        spec.addr,
+                        attempt + 1
+                    ),
+                }
+            }
+            let Some(sock) = connected else {
+                self.shared.record_failure(idx);
+                continue;
+            };
+            let mut hosts = self.shared.hosts.lock().unwrap();
+            let h = &mut hosts[idx];
+            h.failures = 0;
+            h.launches += 1;
+            h.active += 1;
+            if h.launches > 1 {
+                self.shared.stats.host(idx).reconnects.fetch_add(1, Ordering::Relaxed);
+            }
+            return Ok((idx, sock));
+        }
+        Err(ApiError::Shard {
+            detail: "fleet: every host is quarantined or unreachable".into(),
+        })
+    }
+}
+
+impl WorkerTransport for TcpTransport {
+    fn launch(&self, role: &WorkerRole) -> Result<WorkerIo, ApiError> {
+        if matches!(role, WorkerRole::Gemm { .. }) {
+            return Err(ApiError::Shard {
+                detail: "fleet: TCP daemons serve campaign jobs only; GEMM bands \
+                         stay on the process transport"
+                    .into(),
+            });
+        }
+        let (host, sock) = self.dial()?;
+        let clone = |what: &str| {
+            sock.try_clone().map_err(|e| ApiError::Shard {
+                detail: format!("fleet: cloning the {what} half of the socket: {e}"),
+            })
+        };
+        let rx = clone("read")?;
+        let tx = clone("write")?;
+        rx.set_read_timeout(Some(READ_TICK)).map_err(|e| ApiError::Shard {
+            detail: format!("fleet: arming the connection read tick: {e}"),
+        })?;
+        let topo = &self.shared.topo;
+        let conn = Arc::new(ConnShared {
+            host,
+            fleet: self.shared.clone(),
+            tx: Mutex::new(tx),
+            sent: Mutex::new(BTreeMap::new()),
+            partitioned: AtomicBool::new(false),
+            released: AtomicBool::new(false),
+        });
+        let frames = self.shared.hosts.lock().unwrap()[host].frames.clone();
+        let plan =
+            self.chaos.as_ref().map(|p| p.for_launch(host)).unwrap_or_default();
+        let now = Instant::now();
+        Ok(WorkerIo {
+            input: Box::new(FleetWriter { conn: conn.clone(), buf: Vec::new() }),
+            output: Box::new(FleetReader {
+                conn: conn.clone(),
+                rx,
+                inbuf: Vec::new(),
+                outbuf: VecDeque::new(),
+                last_rx: now,
+                last_probe: now,
+                slow_ms: 0,
+                done: false,
+                clean: false,
+                plan,
+                frames,
+                retry: RetryPolicy { max_attempts: topo.retry_max, base_ms: topo.retry_base_ms },
+            }),
+            stderr: None,
+            handle: Box::new(FleetHandle { sock, _conn: conn }),
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// one connection
+// ---------------------------------------------------------------------------
+
+/// State shared between a connection's writer, reader, and handle.
+struct ConnShared {
+    host: usize,
+    fleet: Arc<FleetShared>,
+    /// The socket's write half; the lock serializes job lines, probes,
+    /// and backpressure resubmits.
+    tx: Mutex<TcpStream>,
+    /// Job lines sent on this connection and not yet resolved, by id,
+    /// with the resubmit count — the backpressure replay buffer.
+    sent: Mutex<BTreeMap<u64, (String, u32)>>,
+    /// The chaos `Partition` latch: socket open, traffic blackholed both
+    /// ways, until the probe deadline declares the host dead.
+    partitioned: AtomicBool,
+    /// Guards the one-shot `active` decrement at end of stream.
+    released: AtomicBool,
+}
+
+/// The pool-facing request sink: buffers to line boundaries, records
+/// each job line for backpressure replay and steal accounting, then
+/// writes it to the socket. Dropping it half-closes the connection, the
+/// TCP spelling of "stdin closed: summarize and exit".
+struct FleetWriter {
+    conn: Arc<ConnShared>,
+    buf: Vec<u8>,
+}
+
+impl FleetWriter {
+    fn send_line(&self, raw: &[u8]) -> std::io::Result<()> {
+        let text = String::from_utf8_lossy(raw);
+        let trimmed = text.trim();
+        if !trimmed.is_empty() {
+            if let Ok(v) = JsonValue::parse(trimmed) {
+                if let Some(id) = v.get("id").and_then(|i| i.as_u64()) {
+                    self.conn
+                        .sent
+                        .lock()
+                        .unwrap()
+                        .insert(id, (trimmed.to_string(), 0));
+                    let mut owners = self.conn.fleet.owners.lock().unwrap();
+                    if let Some(prev) = owners.insert(id, self.conn.host) {
+                        if prev != self.conn.host {
+                            // the id is still live on another host's
+                            // connection: this send is a steal (a dead
+                            // host's ids were disowned at its EOF)
+                            self.conn
+                                .fleet
+                                .stats
+                                .host(self.conn.host)
+                                .steals
+                                .fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
+                }
+            }
+        }
+        if self.conn.partitioned.load(Ordering::SeqCst) {
+            // blackholed: pretend the bytes left — the probe deadline
+            // will declare this connection dead and requeue the work
+            return Ok(());
+        }
+        self.conn.tx.lock().unwrap().write_all(raw)
+    }
+}
+
+impl Write for FleetWriter {
+    fn write(&mut self, data: &[u8]) -> std::io::Result<usize> {
+        self.buf.extend_from_slice(data);
+        while let Some(pos) = self.buf.iter().position(|&b| b == b'\n') {
+            let line: Vec<u8> = self.buf.drain(..=pos).collect();
+            self.send_line(&line)?;
+        }
+        Ok(data.len())
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        if self.conn.partitioned.load(Ordering::SeqCst) {
+            return Ok(());
+        }
+        self.conn.tx.lock().unwrap().flush()
+    }
+}
+
+impl Drop for FleetWriter {
+    fn drop(&mut self) {
+        // half-close: the daemon sees EOF, drains its in-flight jobs,
+        // emits its summary, and closes — the clean shutdown path
+        let _ = self.conn.tx.lock().unwrap().shutdown(Shutdown::Write);
+    }
+}
+
+/// The pool-facing reply source. Between socket bytes it runs the
+/// heartbeat clock; on each reply line it applies the host's chaos plan,
+/// intercepts probe acks and backpressure frames (which the pool's
+/// parser must never see), and forwards everything else verbatim.
+struct FleetReader {
+    conn: Arc<ConnShared>,
+    rx: TcpStream,
+    inbuf: Vec<u8>,
+    outbuf: VecDeque<u8>,
+    /// Last instant real (non-blackholed) bytes arrived.
+    last_rx: Instant,
+    last_probe: Instant,
+    /// Persistent per-frame delay installed by [`Fault::SlowHost`].
+    slow_ms: u64,
+    done: bool,
+    /// A summary frame was seen: the stream ended cleanly, so its EOF is
+    /// not a connection failure.
+    clean: bool,
+    plan: FaultPlan,
+    frames: Arc<AtomicU64>,
+    retry: RetryPolicy,
+}
+
+impl FleetReader {
+    /// End the stream (idempotent): a dirty end counts against the
+    /// host's failure budget and disowns the connection's unresolved
+    /// ids, so their requeue onto a survivor is not scored as a steal.
+    fn finish_eof(&mut self) {
+        if self.done {
+            return;
+        }
+        self.done = true;
+        let _ = self.rx.shutdown(Shutdown::Both);
+        if !self.clean {
+            self.conn.fleet.record_failure(self.conn.host);
+        }
+        {
+            let sent = self.conn.sent.lock().unwrap();
+            let mut owners = self.conn.fleet.owners.lock().unwrap();
+            for id in sent.keys() {
+                if owners.get(id) == Some(&self.conn.host) {
+                    owners.remove(id);
+                }
+            }
+        }
+        if !self.conn.released.swap(true, Ordering::SeqCst) {
+            self.conn.fleet.release(self.conn.host);
+        }
+    }
+
+    /// The heartbeat clock, run on every read tick without data: past
+    /// the probe deadline the host is presumed dead or partitioned;
+    /// otherwise an idle interval sends one `{"stats":true}` probe.
+    fn heartbeat(&mut self) {
+        let topo = &self.conn.fleet.topo;
+        let now = Instant::now();
+        if now.duration_since(self.last_rx) >= Duration::from_millis(topo.probe_deadline_ms) {
+            eprintln!(
+                "fleet: host '{}' silent past the {} ms probe deadline; presumed dead \
+                 or partitioned",
+                topo.hosts[self.conn.host].name, topo.probe_deadline_ms
+            );
+            self.finish_eof();
+            return;
+        }
+        if now.duration_since(self.last_probe) >= Duration::from_millis(topo.probe_interval_ms)
+            && !self.conn.partitioned.load(Ordering::SeqCst)
+        {
+            self.last_probe = now;
+            // failures surface on the read side, so a refused probe is
+            // fine to ignore here
+            let _ = self.conn.tx.lock().unwrap().write_all(b"{\"stats\":true}\n");
+        }
+    }
+
+    fn emit_line(&mut self, line: &str) {
+        self.outbuf.extend(line.as_bytes().iter().copied());
+        self.outbuf.push_back(b'\n');
+    }
+
+    /// Split complete lines out of `inbuf`, applying the host's chaos
+    /// plan frame by frame, then routing each surviving line.
+    fn process_lines(&mut self) {
+        while let Some(pos) = self.inbuf.iter().position(|&b| b == b'\n') {
+            let raw: Vec<u8> = self.inbuf.drain(..=pos).collect();
+            let mut line =
+                String::from_utf8_lossy(&raw[..raw.len() - 1]).trim_end_matches('\r').to_string();
+            let frame = self.frames.fetch_add(1, Ordering::SeqCst);
+            match self.plan.fault_at(frame) {
+                Some(Fault::Crash) | Some(Fault::Disconnect) => {
+                    self.finish_eof();
+                    return;
+                }
+                Some(Fault::Hang) | Some(Fault::Partition) => {
+                    // blackhole: this frame and everything after it is
+                    // dropped; the probe deadline will end the stream
+                    self.conn.partitioned.store(true, Ordering::SeqCst);
+                    self.inbuf.clear();
+                    return;
+                }
+                Some(Fault::Truncate) => {
+                    let keep = line.len() / 2;
+                    line.truncate(keep);
+                    self.outbuf.extend(line.as_bytes().iter().copied());
+                    self.finish_eof();
+                    return;
+                }
+                Some(Fault::Garbage) => line = GARBAGE_FRAME.to_string(),
+                Some(Fault::Delay(ms)) => std::thread::sleep(Duration::from_millis(ms)),
+                Some(Fault::SlowHost(ms)) => self.slow_ms = ms,
+                None => {}
+            }
+            if self.slow_ms > 0 {
+                std::thread::sleep(Duration::from_millis(self.slow_ms));
+            }
+            self.route_line(line);
+            if self.done {
+                return;
+            }
+        }
+    }
+
+    /// One reply line: consume probe acks, resubmit bounded backpressure
+    /// retries, account resolutions, forward everything else.
+    fn route_line(&mut self, line: String) {
+        let trimmed = line.trim();
+        if trimmed.is_empty() {
+            return;
+        }
+        let Ok(v) = JsonValue::parse(trimmed) else {
+            // not JSON (e.g. an injected garbage frame): the pool's
+            // protocol-violation machinery owns this
+            self.emit_line(&line);
+            return;
+        };
+        if matches!(v.get("stats"), Some(JsonValue::Obj(_))) {
+            // a probe ack — out-of-band, never forwarded (the pool's
+            // parser would call it garbage)
+            return;
+        }
+        if let Some(id) = retry_frame_id(&v) {
+            self.resubmit(id, &v);
+            return;
+        }
+        if v.get("summary").is_some() {
+            self.clean = true;
+            self.emit_line(&line);
+            return;
+        }
+        if let Some(id) = resolved_id(&v) {
+            self.conn.sent.lock().unwrap().remove(&id);
+            let mut owners = self.conn.fleet.owners.lock().unwrap();
+            if owners.get(&id) == Some(&self.conn.host) {
+                owners.remove(&id);
+            }
+            drop(owners);
+            if v.get("ok").and_then(|b| b.as_bool()) == Some(true) {
+                self.conn.fleet.stats.host(self.conn.host).jobs.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        self.emit_line(&line);
+    }
+
+    /// A `{"retry":true}` backpressure frame: resubmit the recorded job
+    /// line after a backoff, until the budget degrades it to an explicit
+    /// terminal error (the pool then resolves the id — never a spin).
+    fn resubmit(&mut self, id: u64, v: &JsonValue) {
+        let replay = {
+            let mut sent = self.conn.sent.lock().unwrap();
+            match sent.get_mut(&id) {
+                Some((line, attempts)) => {
+                    *attempts += 1;
+                    (*attempts <= self.retry.max_attempts).then(|| (line.clone(), *attempts))
+                }
+                None => None,
+            }
+        };
+        match replay {
+            Some((line, attempt)) => {
+                self.conn.fleet.stats.host(self.conn.host).retries.fetch_add(1, Ordering::Relaxed);
+                std::thread::sleep(self.retry.delay(attempt));
+                if !self.conn.partitioned.load(Ordering::SeqCst) {
+                    let mut tx = self.conn.tx.lock().unwrap();
+                    let _ = tx.write_all(line.as_bytes()).and_then(|_| tx.write_all(b"\n"));
+                }
+            }
+            None => {
+                let msg = v
+                    .get("error")
+                    .and_then(|e| e.as_str())
+                    .unwrap_or("server backpressure");
+                let n = self.retry.max_attempts;
+                let line = json::error_frame(
+                    &format!("retry budget exhausted after {n} resubmits: {msg}"),
+                    Some(id),
+                )
+                .encode();
+                self.emit_line(&line);
+            }
+        }
+    }
+}
+
+impl Read for FleetReader {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        loop {
+            if !self.outbuf.is_empty() {
+                let n = buf.len().min(self.outbuf.len());
+                for (i, b) in self.outbuf.drain(..n).enumerate() {
+                    buf[i] = b;
+                }
+                return Ok(n);
+            }
+            if self.done {
+                return Ok(0);
+            }
+            let mut tmp = [0u8; 4096];
+            match self.rx.read(&mut tmp) {
+                Ok(0) => self.finish_eof(),
+                Ok(n) => {
+                    if self.conn.partitioned.load(Ordering::SeqCst) {
+                        // blackholed traffic never counts as liveness
+                        continue;
+                    }
+                    self.last_rx = Instant::now();
+                    self.inbuf.extend_from_slice(&tmp[..n]);
+                    self.process_lines();
+                }
+                Err(e)
+                    if e.kind() == std::io::ErrorKind::WouldBlock
+                        || e.kind() == std::io::ErrorKind::TimedOut =>
+                {
+                    self.heartbeat()
+                }
+                Err(_) => self.finish_eof(),
+            }
+        }
+    }
+}
+
+/// The id a terminal reply resolves: an outcome's embedded id, else the
+/// frame's own `id` field (terminal error frames).
+fn resolved_id(v: &JsonValue) -> Option<u64> {
+    if let Some(o) = v.get("outcome") {
+        return o.get("id").and_then(|i| i.as_u64());
+    }
+    v.get("id").and_then(|i| i.as_u64())
+}
+
+/// Lifecycle handle for one connection: `kill` hard-closes the socket
+/// (unblocking the reader's next tick); there is no process to `wait` on.
+struct FleetHandle {
+    sock: TcpStream,
+    _conn: Arc<ConnShared>,
+}
+
+impl WorkerHandle for FleetHandle {
+    fn wait(&mut self) {}
+    fn kill(&mut self) {
+        let _ = self.sock.shutdown(Shutdown::Both);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backoff_schedule_is_capped_doubling() {
+        assert_eq!(backoff_delay(25, 0), Duration::ZERO, "first attempt is immediate");
+        assert_eq!(backoff_delay(25, 1), Duration::from_millis(25));
+        assert_eq!(backoff_delay(25, 2), Duration::from_millis(50));
+        assert_eq!(backoff_delay(25, 3), Duration::from_millis(100));
+        assert_eq!(backoff_delay(25, 10), MAX_BACKOFF_DELAY, "capped at 1 s");
+        assert_eq!(backoff_delay(25, u32::MAX), MAX_BACKOFF_DELAY, "shift is clamped");
+        assert_eq!(backoff_delay(0, 5), Duration::ZERO, "base 0 disables the backoff");
+    }
+
+    #[test]
+    fn retry_frames_are_recognized_exactly() {
+        let retry = json::retry_frame("queue full", Some(7));
+        assert_eq!(retry_frame_id(&retry), Some(7));
+        let no_id = json::retry_frame("queue full", None);
+        assert_eq!(retry_frame_id(&no_id), None, "no id means not resubmittable");
+        let error = json::error_frame("unknown pair", Some(7));
+        assert_eq!(retry_frame_id(&error), None, "terminal errors are not retries");
+        let ok = JsonValue::parse(r#"{"ok":true,"retry":true,"id":7}"#).unwrap();
+        assert_eq!(retry_frame_id(&ok), None, "ok frames are never retries");
+    }
+
+    #[test]
+    fn stats_frame_carries_every_host_counter() {
+        let topo =
+            FleetTopology::loopback(&["127.0.0.1:1".into(), "127.0.0.1:2".into()]);
+        let stats = FleetStats::new(&topo);
+        stats.host(0).jobs.fetch_add(3, Ordering::Relaxed);
+        stats.host(1).steals.fetch_add(2, Ordering::Relaxed);
+        let frame = stats.frame();
+        let hosts = frame.get("stats").and_then(|s| s.get("hosts")).unwrap();
+        let hosts = hosts.as_arr().unwrap();
+        assert_eq!(hosts.len(), 2);
+        assert_eq!(hosts[0].get("jobs").and_then(|v| v.as_u64()), Some(3));
+        assert_eq!(hosts[1].get("steals").and_then(|v| v.as_u64()), Some(2));
+        for key in ["host", "jobs", "steals", "reconnects", "quarantines", "dials", "retries"] {
+            assert!(hosts[0].get(key).is_some(), "stats frame missing '{key}'");
+        }
+        assert!(stats.render().contains("3 jobs"));
+    }
+
+    #[test]
+    fn gemm_roles_are_rejected() {
+        let topo = FleetTopology::loopback(&["127.0.0.1:1".into()]);
+        let transport = TcpTransport::new(topo).unwrap();
+        let err = transport
+            .launch(&WorkerRole::Gemm { arch: "sm70".into(), instr: "x".into() })
+            .err()
+            .expect("gemm roles must be rejected");
+        assert!(matches!(err, ApiError::Shard { .. }));
+    }
+
+    #[test]
+    fn unreachable_fleet_is_an_error_not_a_hang() {
+        // port 1 on loopback: nothing listens there
+        let mut topo = FleetTopology::loopback(&["127.0.0.1:1".into()]);
+        topo.dial_attempts = 1;
+        topo.failure_budget = 1;
+        let transport = TcpTransport::new(topo).unwrap();
+        let err = transport
+            .launch(&WorkerRole::Campaign { workers: 1 })
+            .err()
+            .expect("an unreachable fleet must fail the launch");
+        assert!(matches!(err, ApiError::Shard { .. }));
+        // the failed dial crossed the budget: the host is quarantined now
+        let err2 = transport.launch(&WorkerRole::Campaign { workers: 1 }).err().unwrap();
+        assert!(err2.to_string().contains("quarantined"), "got: {err2}");
+        assert_eq!(transport.stats().host(0).quarantines.load(Ordering::Relaxed), 1);
+    }
+}

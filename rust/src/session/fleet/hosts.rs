@@ -1,0 +1,283 @@
+//! `hosts.json` — the fleet topology file behind `mma-sim shard --hosts`.
+//!
+//! A topology names the worker daemons (`mma-sim serve --tcp`) a fleet
+//! run may dial, plus the robustness knobs the
+//! [`TcpTransport`](crate::session::fleet::TcpTransport) applies to every
+//! connection: dial retry budget, liveness-probe cadence, host failure
+//! budget, and the backpressure resubmit policy. The schema (all
+//! durations in milliseconds; every field except `hosts` optional):
+//!
+//! ```json
+//! {
+//!   "hosts": [
+//!     {"addr": "10.0.0.5:7070", "name": "rack1", "slots": 2},
+//!     {"addr": "127.0.0.1:7071"}
+//!   ],
+//!   "failure_budget": 3,
+//!   "dial_attempts": 3,
+//!   "dial_base_ms": 25,
+//!   "probe_interval_ms": 1000,
+//!   "probe_deadline_ms": 3000,
+//!   "retry_max": 4,
+//!   "retry_base_ms": 25
+//! }
+//! ```
+//!
+//! Parsing goes through [`session::json`](crate::session::json) (the
+//! crate ships no serde) and rejects unknown keys, so a typo'd knob is a
+//! structured [`ApiError`] instead of a silently ignored default.
+
+use crate::error::ApiError;
+use crate::session::json::JsonValue;
+
+fn bad_topology(detail: String) -> ApiError {
+    ApiError::Unsupported { what: "hosts topology", detail }
+}
+
+/// One worker daemon the fleet may dial.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct HostSpec {
+    /// `host:port` of a running `mma-sim serve --tcp` daemon.
+    pub addr: String,
+    /// Display name for stats and error messages (defaults to `addr`).
+    pub name: String,
+    /// Relative connection capacity: a host with `slots: 2` is offered
+    /// twice the worker connections of a `slots: 1` host.
+    pub slots: usize,
+}
+
+/// A parsed, validated `hosts.json`: the host list plus every
+/// fleet-robustness knob. See the [module docs](self) for the schema.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct FleetTopology {
+    pub hosts: Vec<HostSpec>,
+    /// Connection failures (failed dials, dead or partitioned
+    /// connections) a host may accumulate before it is quarantined and
+    /// its work requeues onto survivors. `0` disables host quarantine.
+    pub failure_budget: usize,
+    /// Connect attempts per host per launch, backed off with the same
+    /// capped doubling discipline as `--respawn-base`.
+    pub dial_attempts: u32,
+    pub dial_base_ms: u64,
+    /// How often an idle connection sends a `{"stats":true}` heartbeat.
+    pub probe_interval_ms: u64,
+    /// Silence longer than this (with a probe outstanding) declares the
+    /// connection dead or partitioned.
+    pub probe_deadline_ms: u64,
+    /// Bounded resubmits of a job answered with a backpressure
+    /// `{"retry":true}` frame before it degrades to a terminal error.
+    pub retry_max: u32,
+    pub retry_base_ms: u64,
+}
+
+impl Default for FleetTopology {
+    fn default() -> Self {
+        Self {
+            hosts: Vec::new(),
+            failure_budget: 3,
+            dial_attempts: 3,
+            dial_base_ms: 25,
+            probe_interval_ms: 1000,
+            probe_deadline_ms: 3000,
+            retry_max: 4,
+            retry_base_ms: 25,
+        }
+    }
+}
+
+impl FleetTopology {
+    /// A default-knob topology over loopback daemon addresses — the
+    /// shape every test and bench fleet starts from.
+    pub fn loopback(addrs: &[String]) -> Self {
+        Self {
+            hosts: addrs
+                .iter()
+                .map(|a| HostSpec { addr: a.clone(), name: a.clone(), slots: 1 })
+                .collect(),
+            ..Self::default()
+        }
+    }
+
+    /// Parse and validate a `hosts.json` document.
+    pub fn parse(text: &str) -> Result<Self, ApiError> {
+        let doc = JsonValue::parse(text.trim())?;
+        let JsonValue::Obj(fields) = &doc else {
+            return Err(bad_topology("the topology document must be a JSON object".into()));
+        };
+        let mut topo = Self::default();
+        for (key, value) in fields {
+            match key.as_str() {
+                "hosts" => topo.hosts = parse_hosts(value)?,
+                "failure_budget" => topo.failure_budget = knob(key, value)? as usize,
+                "dial_attempts" => topo.dial_attempts = knob(key, value)? as u32,
+                "dial_base_ms" => topo.dial_base_ms = knob(key, value)?,
+                "probe_interval_ms" => topo.probe_interval_ms = knob(key, value)?,
+                "probe_deadline_ms" => topo.probe_deadline_ms = knob(key, value)?,
+                "retry_max" => topo.retry_max = knob(key, value)? as u32,
+                "retry_base_ms" => topo.retry_base_ms = knob(key, value)?,
+                other => {
+                    return Err(bad_topology(format!("unknown topology key '{other}'")));
+                }
+            }
+        }
+        topo.validate()?;
+        Ok(topo)
+    }
+
+    /// [`parse`](FleetTopology::parse) a topology file from disk.
+    pub fn from_file(path: &std::path::Path) -> Result<Self, ApiError> {
+        let text = std::fs::read_to_string(path).map_err(|e| {
+            bad_topology(format!("cannot read '{}': {e}", path.display()))
+        })?;
+        Self::parse(&text)
+    }
+
+    /// The invariants every topology must satisfy (struct-literal
+    /// construction in tests goes through this too, via the transport).
+    pub fn validate(&self) -> Result<(), ApiError> {
+        if self.hosts.is_empty() {
+            return Err(bad_topology("'hosts' must name at least one daemon".into()));
+        }
+        for (i, host) in self.hosts.iter().enumerate() {
+            match host.addr.rsplit_once(':') {
+                Some((h, p)) if !h.is_empty() && p.parse::<u16>().is_ok() => {}
+                _ => {
+                    return Err(bad_topology(format!(
+                        "host {i} addr '{}' is not host:port",
+                        host.addr
+                    )));
+                }
+            }
+            if host.slots == 0 {
+                return Err(bad_topology(format!(
+                    "host '{}' has 0 slots; use at least 1",
+                    host.name
+                )));
+            }
+            if self.hosts[..i].iter().any(|h| h.name == host.name) {
+                return Err(bad_topology(format!("duplicate host name '{}'", host.name)));
+            }
+        }
+        if self.probe_deadline_ms <= self.probe_interval_ms {
+            return Err(bad_topology(format!(
+                "probe_deadline_ms ({}) must exceed probe_interval_ms ({}): a probe \
+                 needs a chance to be answered before the deadline declares death",
+                self.probe_deadline_ms, self.probe_interval_ms
+            )));
+        }
+        Ok(())
+    }
+}
+
+fn knob(key: &str, value: &JsonValue) -> Result<u64, ApiError> {
+    value
+        .as_u64()
+        .ok_or_else(|| bad_topology(format!("'{key}' must be a non-negative integer")))
+}
+
+fn parse_hosts(value: &JsonValue) -> Result<Vec<HostSpec>, ApiError> {
+    let items = value
+        .as_arr()
+        .ok_or_else(|| bad_topology("'hosts' must be an array of host objects".into()))?;
+    let mut hosts = Vec::with_capacity(items.len());
+    for (i, item) in items.iter().enumerate() {
+        let JsonValue::Obj(fields) = item else {
+            return Err(bad_topology(format!("host {i} must be an object")));
+        };
+        let (mut addr, mut name, mut slots) = (None, None, 1usize);
+        for (key, v) in fields {
+            match key.as_str() {
+                "addr" => {
+                    addr = Some(
+                        v.as_str()
+                            .ok_or_else(|| {
+                                bad_topology(format!("host {i}: 'addr' must be a string"))
+                            })?
+                            .to_string(),
+                    );
+                }
+                "name" => {
+                    name = Some(
+                        v.as_str()
+                            .ok_or_else(|| {
+                                bad_topology(format!("host {i}: 'name' must be a string"))
+                            })?
+                            .to_string(),
+                    );
+                }
+                "slots" => {
+                    slots = v.as_usize().ok_or_else(|| {
+                        bad_topology(format!("host {i}: 'slots' must be a non-negative integer"))
+                    })?;
+                }
+                other => {
+                    return Err(bad_topology(format!("host {i}: unknown key '{other}'")));
+                }
+            }
+        }
+        let addr = addr
+            .ok_or_else(|| bad_topology(format!("host {i} is missing required 'addr'")))?;
+        let name = name.unwrap_or_else(|| addr.clone());
+        hosts.push(HostSpec { addr, name, slots });
+    }
+    Ok(hosts)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn full_schema_parses_with_defaults_filled() {
+        let topo = FleetTopology::parse(
+            r#"{"hosts":[{"addr":"10.0.0.5:7070","name":"rack1","slots":2},
+                         {"addr":"127.0.0.1:7071"}],
+                "failure_budget":5,"probe_interval_ms":200,"probe_deadline_ms":900}"#,
+        )
+        .unwrap();
+        assert_eq!(topo.hosts.len(), 2);
+        assert_eq!(topo.hosts[0].name, "rack1");
+        assert_eq!(topo.hosts[0].slots, 2);
+        assert_eq!(topo.hosts[1].name, "127.0.0.1:7071", "name defaults to addr");
+        assert_eq!(topo.hosts[1].slots, 1);
+        assert_eq!(topo.failure_budget, 5);
+        assert_eq!(topo.probe_interval_ms, 200);
+        assert_eq!(topo.retry_max, FleetTopology::default().retry_max, "knob defaulted");
+    }
+
+    #[test]
+    fn invalid_topologies_are_structured_errors() {
+        for (bad, why) in [
+            (r#"[1,2]"#, "not an object"),
+            (r#"{"hosts":[]}"#, "empty host list"),
+            (r#"{"hosts":[{"name":"x"}]}"#, "missing addr"),
+            (r#"{"hosts":[{"addr":"nocolon"}]}"#, "addr without port"),
+            (r#"{"hosts":[{"addr":"h:notaport"}]}"#, "non-numeric port"),
+            (r#"{"hosts":[{"addr":"h:1","slots":0}]}"#, "zero slots"),
+            (
+                r#"{"hosts":[{"addr":"h:1","name":"a"},{"addr":"h:2","name":"a"}]}"#,
+                "duplicate names",
+            ),
+            (r#"{"hosts":[{"addr":"h:1"}],"wat":3}"#, "unknown topology key"),
+            (r#"{"hosts":[{"addr":"h:1","wat":3}]}"#, "unknown host key"),
+            (
+                r#"{"hosts":[{"addr":"h:1"}],"probe_interval_ms":500,"probe_deadline_ms":400}"#,
+                "deadline before interval",
+            ),
+        ] {
+            let err = FleetTopology::parse(bad).unwrap_err();
+            assert!(
+                matches!(err, ApiError::Unsupported { what: "hosts topology", .. }),
+                "{why}: {err}"
+            );
+        }
+    }
+
+    #[test]
+    fn loopback_helper_builds_a_valid_topology() {
+        let topo =
+            FleetTopology::loopback(&["127.0.0.1:7070".into(), "127.0.0.1:7071".into()]);
+        topo.validate().unwrap();
+        assert_eq!(topo.hosts.len(), 2);
+    }
+}

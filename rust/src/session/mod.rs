@@ -31,9 +31,14 @@
 //! respawn backoff, poisoned-job quarantine — and [`faults`] provides the
 //! deterministic chaos layer ([`ChaosTransport`], seeded [`ChaosPlan`]s)
 //! that proves the hardening under reproducible crash/hang/garbage
-//! schedules.
+//! schedules. [`fleet`] stretches the same seam across machines: a
+//! [`TcpTransport`] dials remote `serve --tcp` daemons from a
+//! `hosts.json` topology, with liveness probes, reconnect backoff,
+//! host quarantine, work stealing, and connection-level chaos — the
+//! deterministic merge stays byte-identical across any placement.
 
 pub mod faults;
+pub mod fleet;
 pub mod framing;
 pub mod json;
 pub mod net;
@@ -42,6 +47,7 @@ pub mod shard;
 
 pub use crate::error::ApiError;
 pub use faults::{ChaosPlan, ChaosTransport, ChaosWriter, Fault, FaultPlan};
+pub use fleet::{FleetStats, FleetTopology, HostSpec, RetryPolicy, TcpTransport};
 pub use framing::{read_bounded_line, BoundedLine, BoundedLineReader, DEFAULT_MAX_LINE_BYTES};
 pub use net::{connect_pipe, serve_tcp, NetConfig, ResultCache};
 pub use serve::{serve_cases, serve_cases_capped, serve_jsonl, ServeConfig};

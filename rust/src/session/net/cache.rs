@@ -21,9 +21,11 @@
 //! Both hash functions are vendored (no new dependencies): FNV-1a 64 for
 //! cheap dispersion and SipHash-2-4 with the reference key for collision
 //! resistance; the 32-hex-digit concatenation names the artifact.
-//! A warm load re-derives every filename from the stored key and skips
-//! files that do not match — a truncated or hand-edited artifact cannot
-//! poison the cache.
+//! A warm load re-derives every filename from the stored key and
+//! **deletes** files that fail to read, decode, or match their address —
+//! a truncated or hand-edited artifact is evicted from the corpus and
+//! becomes an ordinary cache miss, so it can never poison the cache nor
+//! shadow the honest artifact a later insert writes to the same name.
 
 use std::collections::{BTreeMap, VecDeque};
 use std::io::Write;
@@ -170,8 +172,11 @@ impl ResultCache {
     }
 
     /// Load artifacts from `dir`, verifying each filename against the
-    /// hash of its stored key. Invalid files are skipped with a stderr
-    /// note, never trusted.
+    /// hash of its stored key. Invalid files — unreadable, undecodable,
+    /// or mis-addressed — are **deleted** and treated as cache misses: a
+    /// corrupt artifact must not poison this warm load, and leaving it
+    /// in place would re-reject it on every restart while shadowing the
+    /// slot its honest replacement wants.
     fn warm_load(&self, dir: &std::path::Path) -> Result<(), ApiError> {
         let entries = std::fs::read_dir(dir).map_err(|e| ApiError::Net {
             detail: format!("cannot read cache dir {}: {e}", dir.display()),
@@ -187,7 +192,8 @@ impl ResultCache {
                 break;
             }
             let Ok(text) = std::fs::read_to_string(&path) else {
-                eprintln!("serve: skipping unreadable cache artifact {}", path.display());
+                eprintln!("serve: deleting unreadable cache artifact {}", path.display());
+                let _ = std::fs::remove_file(&path);
                 continue;
             };
             match decode_artifact(&text) {
@@ -195,9 +201,10 @@ impl ResultCache {
                     let expect = format!("{}.json", content_hash(&key));
                     if !matches!(path.file_name(), Some(n) if n == expect.as_str()) {
                         eprintln!(
-                            "serve: cache artifact {} does not match its content hash; skipping",
+                            "serve: cache artifact {} does not match its content hash; deleting",
                             path.display()
                         );
+                        let _ = std::fs::remove_file(&path);
                         continue;
                     }
                     if inner.map.insert(key.clone(), outcome).is_none() {
@@ -205,7 +212,8 @@ impl ResultCache {
                     }
                 }
                 Err(e) => {
-                    eprintln!("serve: bad cache artifact {}: {e}; skipping", path.display());
+                    eprintln!("serve: bad cache artifact {}: {e}; deleting", path.display());
+                    let _ = std::fs::remove_file(&path);
                 }
             }
         }
@@ -399,14 +407,41 @@ mod tests {
         let got = warm.lookup(&key).expect("warm restart must find the artifact");
         assert_eq!((got.id, got.micros, got.tests), (0, 0, 20));
 
-        // corrupt artifacts are skipped, not trusted: rename a valid one
-        std::fs::rename(
-            dir.join(format!("{}.json", content_hash(&key))),
-            dir.join("0000000000000000ffffffffffffffff.json"),
-        )
-        .unwrap();
+        // corrupt artifacts are deleted, not trusted: rename a valid one
+        let misaddressed = dir.join("0000000000000000ffffffffffffffff.json");
+        std::fs::rename(dir.join(format!("{}.json", content_hash(&key))), &misaddressed)
+            .unwrap();
         let cold = ResultCache::open(Some(dir.clone()), 8).unwrap();
         assert!(cold.lookup(&key).is_none(), "mis-addressed artifact must be ignored");
+        assert!(!misaddressed.exists(), "mis-addressed artifact must be deleted");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn truncated_artifacts_are_deleted_and_miss() {
+        let dir =
+            std::env::temp_dir().join(format!("mma-cache-trunc-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let good = cache_key(&Job { id: 1, pair: "clean".into(), batch: 10, seed: 1 });
+        let bad = cache_key(&Job { id: 2, pair: "clean".into(), batch: 10, seed: 2 });
+        {
+            let cache = ResultCache::open(Some(dir.clone()), 8).unwrap();
+            cache.insert(&good, &outcome(1, 10));
+            cache.insert(&bad, &outcome(2, 10));
+        }
+        // truncate the second artifact in place: correct address, torn body
+        let bad_path = dir.join(format!("{}.json", content_hash(&bad)));
+        let text = std::fs::read_to_string(&bad_path).unwrap();
+        std::fs::write(&bad_path, &text[..text.len() / 2]).unwrap();
+
+        let warm = ResultCache::open(Some(dir.clone()), 8).unwrap();
+        assert!(warm.lookup(&good).is_some(), "intact artifact still warm-loads");
+        assert!(warm.lookup(&bad).is_none(), "truncated artifact is a cache miss");
+        assert!(!bad_path.exists(), "truncated artifact must be deleted");
+
+        // a re-insert repopulates the slot the corrupt file vacated
+        warm.insert(&bad, &outcome(2, 10));
+        assert!(bad_path.exists(), "honest replacement artifact is persisted");
         let _ = std::fs::remove_dir_all(&dir);
     }
 }

@@ -45,15 +45,17 @@ pub use cache::{cache_key, content_hash, ResultCache};
 pub use stats::NetStats;
 
 use std::collections::BTreeMap;
-use std::io::{BufReader, Write};
+use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Mutex;
 use std::time::{Duration, Instant};
 
 use crate::coordinator::CampaignReport;
 use crate::error::ApiError;
+use crate::session::fleet::{retry_frame_id, RetryPolicy};
 use crate::session::framing::{BoundedLine, BoundedLineReader};
 use crate::session::json::{self, JsonValue};
 use crate::session::shard::{
@@ -582,28 +584,157 @@ fn flush_ready(out: &mut impl Write, conn: &mut ConnState) -> Result<(), ApiErro
     Ok(())
 }
 
+/// The pipe client's mirror of the server's per-connection id rule, plus
+/// the replay line of every job still awaiting a reply so a
+/// `{"retry":true}` backpressure frame can be resubmitted instead of
+/// surfaced. Shared between the stdin forwarder and the socket reader.
+struct PipeState {
+    next_id: u64,
+    /// job id -> (replay line with the id explicit, resubmits so far).
+    sent: BTreeMap<u64, (String, u32)>,
+}
+
+/// Record a stdin line in the resubmit ledger iff the server will treat
+/// it as a job, mirroring `handle_line` exactly: stats and shutdown
+/// requests, unparseable lines, and malformed jobs consume no id and are
+/// never resubmitted. The replay line re-encodes the job with its id
+/// explicit so a later resubmit cannot be stamped with a fresh id.
+fn pipe_record(state: &mut PipeState, trimmed: &str) {
+    let Ok(v) = JsonValue::parse(trimmed) else { return };
+    if v.get("stats").and_then(|b| b.as_bool()) == Some(true)
+        || v.get("shutdown").and_then(|b| b.as_bool()) == Some(true)
+    {
+        return;
+    }
+    let Ok(job) = json::job_from_json(&v, state.next_id) else { return };
+    state.next_id = state.next_id.max(job.id).saturating_add(1);
+    state.sent.insert(job.id, (json::job_to_json(&job).encode(), 0));
+}
+
+/// Write one line to the socket under the shared write lock (the stdin
+/// forwarder and the reader's resubmits interleave on whole lines).
+fn pipe_send(tx: &Mutex<&TcpStream>, line: &str) -> std::io::Result<()> {
+    let mut buf = Vec::with_capacity(line.len() + 1);
+    buf.extend_from_slice(line.as_bytes());
+    buf.push(b'\n');
+    let guard = tx.lock().unwrap();
+    let mut sock: &TcpStream = *guard;
+    sock.write_all(&buf)
+}
+
+/// The id a reply line resolves, if any: `outcome.id` for outcome
+/// frames, the top-level `id` for error frames.
+fn pipe_resolved_id(v: &JsonValue) -> Option<u64> {
+    v.get("outcome")
+        .and_then(|o| o.get("id"))
+        .and_then(|i| i.as_u64())
+        .or_else(|| v.get("id").and_then(|i| i.as_u64()))
+}
+
 /// A scripted pipe client: connect to a running server, forward stdin to
 /// the socket (closing the write half at EOF so the server sees end of
 /// stream and emits the summary), and copy every reply line to stdout.
 /// `mma-sim serve --connect <addr>` — the CI smoke leg drives the TCP
 /// path with exactly the same shell plumbing as the stdin path.
-pub fn connect_pipe(addr: &str) -> Result<(), ApiError> {
+///
+/// Backpressure frames (`{"ok":false,"retry":true,"id":N}`) are handled
+/// client-side: the job is resubmitted with the capped-doubling backoff
+/// of [`RetryPolicy`] up to `max_attempts` times before the retry
+/// degrades into a terminal error frame on stdout. `--retry-max 0`
+/// disables the ledger and surfaces retry frames verbatim, which is the
+/// pre-fleet behavior.
+pub fn connect_pipe(addr: &str, retry: RetryPolicy) -> Result<(), ApiError> {
     let stream = TcpStream::connect(addr)
         .map_err(|e| ApiError::Net { detail: format!("cannot connect to {addr}: {e}") })?;
     stream.set_nodelay(true).ok();
     let read_half = stream.try_clone().map_err(|e| net_io("cannot clone the stream", e))?;
+    let state = Mutex::new(PipeState { next_id: 0, sent: BTreeMap::new() });
+    let tx = Mutex::new(&stream);
     std::thread::scope(|s| {
         let writer = s.spawn(|| -> std::io::Result<()> {
-            let mut stdin = std::io::stdin().lock();
-            let mut sink = &stream;
-            std::io::copy(&mut stdin, &mut sink)?;
+            let stdin = std::io::stdin().lock();
+            for line in stdin.lines() {
+                let line = line?;
+                // The ledger lock is held across the send so ledger
+                // order matches the server's arrival order.
+                let mut st = state.lock().unwrap();
+                if retry.max_attempts > 0 {
+                    pipe_record(&mut st, line.trim());
+                }
+                pipe_send(&tx, &line)?;
+            }
             stream.shutdown(std::net::Shutdown::Write)
         });
-        let mut stdout = std::io::stdout().lock();
-        let mut source = &read_half;
-        let copy = std::io::copy(&mut source, &mut stdout);
+        let route = || -> Result<(), ApiError> {
+            let reader = BufReader::new(&read_half);
+            let mut stdout = std::io::stdout().lock();
+            for line in reader.lines() {
+                let line = line.map_err(|e| net_io("socket read failed", e))?;
+                if retry.max_attempts > 0 {
+                    if let Ok(v) = JsonValue::parse(line.trim()) {
+                        if let Some(id) = retry_frame_id(&v) {
+                            // attempts == None: unknown id, surface the
+                            // frame; Some(n) <= max: resubmit attempt n;
+                            // Some(n) > max: budget exhausted, degrade.
+                            let attempts = {
+                                let mut st = state.lock().unwrap();
+                                match st.sent.get_mut(&id) {
+                                    Some((_, attempts)) => {
+                                        *attempts += 1;
+                                        let n = *attempts;
+                                        if n > retry.max_attempts {
+                                            st.sent.remove(&id);
+                                        }
+                                        Some(n)
+                                    }
+                                    None => None,
+                                }
+                            };
+                            match attempts {
+                                Some(n) if n <= retry.max_attempts => {
+                                    std::thread::sleep(retry.delay(n));
+                                    let replay = {
+                                        let st = state.lock().unwrap();
+                                        st.sent.get(&id).map(|(raw, _)| raw.clone())
+                                    };
+                                    if let Some(raw) = replay {
+                                        pipe_send(&tx, &raw)
+                                            .map_err(|e| net_io("resubmit failed", e))?;
+                                    }
+                                    continue;
+                                }
+                                Some(n) => {
+                                    let msg = v
+                                        .get("error")
+                                        .and_then(|e| e.as_str())
+                                        .unwrap_or("server backpressure");
+                                    let frame = json::error_frame(
+                                        &format!(
+                                            "retry budget exhausted after {} resubmits: {msg}",
+                                            n - 1
+                                        ),
+                                        Some(id),
+                                    );
+                                    writeln!(stdout, "{}", frame.encode())
+                                        .map_err(|e| net_io("stdout write failed", e))?;
+                                    stdout.flush().map_err(|e| net_io("stdout flush failed", e))?;
+                                    continue;
+                                }
+                                None => {}
+                            }
+                        } else if let Some(id) = pipe_resolved_id(&v) {
+                            state.lock().unwrap().sent.remove(&id);
+                        }
+                    }
+                }
+                writeln!(stdout, "{line}").map_err(|e| net_io("stdout write failed", e))?;
+                stdout.flush().map_err(|e| net_io("stdout flush failed", e))?;
+            }
+            Ok(())
+        };
+        let routed = route();
         let forward = writer.join();
-        copy.map_err(|e| net_io("socket read failed", e))?;
+        routed?;
         match forward {
             Ok(Ok(())) => Ok(()),
             Ok(Err(e)) => Err(net_io("stdin forward failed", e)),

@@ -276,6 +276,13 @@ pub struct ShardConfig {
     /// Total child launches allowed in one run (initial fill plus
     /// respawns); 0 = auto (`workers * 3 + 2`).
     pub max_spawns: usize,
+    /// Work-stealing rebalance (fleet mode, enabled by `shard --hosts`):
+    /// dispatch becomes least-loaded instead of round-robin, and when the
+    /// queue is empty an idle worker is handed a *duplicate* of the
+    /// deepest backlog's newest job — the first resolution wins and the
+    /// echo is dropped, so a slow host cannot strand the campaign tail.
+    /// Off by default: duplicate execution spends compute to win latency.
+    pub steal: bool,
 }
 
 impl Default for ShardConfig {
@@ -289,6 +296,7 @@ impl Default for ShardConfig {
             max_worker_kills: 3,
             respawn_base_ms: 25,
             max_spawns: 0,
+            steal: false,
         }
     }
 }
@@ -508,6 +516,8 @@ pub struct ShardPool<'t> {
     /// The most recent worker-failure description (with stderr tail),
     /// quoted in quarantine records and budget-exhaustion errors.
     last_failure: Option<String>,
+    /// Work-stealing rebalance on ([`ShardConfig::steal`]).
+    steal: bool,
 }
 
 impl<'t> ShardPool<'t> {
@@ -549,6 +559,7 @@ impl<'t> ShardPool<'t> {
             kills: BTreeMap::new(),
             quarantined: Vec::new(),
             last_failure: None,
+            steal: cfg.steal,
         };
         for _ in 0..workers {
             pool.spawn_child()?;
@@ -620,10 +631,20 @@ impl<'t> ShardPool<'t> {
         res
     }
 
-    /// The next child (round-robin) with an open pipe and spare in-flight
-    /// capacity, if any.
+    /// The next child with an open pipe and spare in-flight capacity, if
+    /// any: round-robin normally, least-loaded (deterministic index
+    /// tie-break) under work-stealing — new work flows away from
+    /// backlogged hosts instead of being scattered blindly.
     fn pick_target(&mut self) -> Option<usize> {
         let n = self.children.len();
+        if self.steal {
+            return (0..n)
+                .filter(|&idx| {
+                    let c = &self.children[idx];
+                    !c.dead && c.input.is_some() && c.inflight.len() < self.cap
+                })
+                .min_by_key(|&idx| (self.children[idx].inflight.len(), idx));
+        }
         for step in 0..n {
             let idx = (self.rr + step) % n;
             let c = &self.children[idx];
@@ -855,6 +876,11 @@ impl<'t> ShardPool<'t> {
         out: &mut dyn Write,
     ) -> Result<(), ApiError> {
         for id in ids {
+            if self.children.iter().any(|c| !c.dead && c.inflight.contains(&id)) {
+                // a stolen duplicate is still live on a survivor: the
+                // lost copy was redundant, not lost work
+                continue;
+            }
             let Some(job) = assigned.remove(&id) else { continue };
             let kills = {
                 let k = self.kills.entry(id).or_insert(0);
@@ -881,6 +907,50 @@ impl<'t> ShardPool<'t> {
             self.quarantined.push(QuarantinedJob { id, pair: job.pair, kills, reason });
         }
         emit_ready(out, ready, remaining)
+    }
+
+    /// Work-stealing rebalance: with the queue empty but jobs still
+    /// owed, hand each idle worker a *duplicate* of the deepest
+    /// backlog's most-recently-queued job (one nobody else also holds).
+    /// The first resolution wins — [`on_campaign_reply`] drops the
+    /// loser via its `assigned` check — so a slow host can no longer
+    /// strand the campaign tail behind its backlog. Byte-identity is
+    /// unaffected: resolutions still land in `ready` once, and are
+    /// re-emitted in ascending job-id order.
+    ///
+    /// [`on_campaign_reply`]: Self::on_campaign_reply
+    fn steal_rebalance(&mut self, assigned: &BTreeMap<u64, Job>) {
+        loop {
+            let n = self.children.len();
+            let Some(thief) = (0..n).find(|&idx| {
+                let c = &self.children[idx];
+                !c.dead && c.input.is_some() && c.inflight.is_empty()
+            }) else {
+                return;
+            };
+            // deepest backlog with at least two owed jobs: stealing a
+            // worker's only job would duplicate every tail job everywhere
+            let Some(victim) = (0..n)
+                .filter(|&idx| idx != thief && !self.children[idx].dead)
+                .filter(|&idx| self.children[idx].inflight.len() >= 2)
+                .max_by_key(|&idx| (self.children[idx].inflight.len(), n - idx))
+            else {
+                return;
+            };
+            let Some(id) = self.children[victim].inflight.iter().rev().copied().find(|id| {
+                (0..n).all(|idx| idx == victim || !self.children[idx].inflight.contains(id))
+            }) else {
+                return;
+            };
+            let Some(job) = assigned.get(&id) else { return };
+            let line = json::job_to_json(job).encode();
+            if self.write_line(thief, &line).is_err() {
+                return; // the reader's EOF will route it through retire
+            }
+            eprintln!("shard: worker {thief} steals job {id} from worker {victim}'s backlog");
+            self.children[thief].inflight.insert(id);
+            self.touch(thief);
+        }
     }
 
     /// Watchdog tick (campaign): retire every child past its reply
@@ -960,6 +1030,9 @@ impl<'t> ShardPool<'t> {
                 self.respawn_with_backoff()?;
                 continue;
             }
+            if self.steal && queue.is_empty() && !remaining.is_empty() {
+                self.steal_rebalance(&assigned);
+            }
             if queue.is_empty() && self.total_inflight() == 0 && !remaining.is_empty() {
                 // every job was answered yet some ids never resolved — a
                 // protocol violation we must not wait on forever
@@ -1009,8 +1082,15 @@ impl<'t> ShardPool<'t> {
         let mut merged = CampaignReport::new();
         for c in &self.children {
             // a dead child's summary (if any slipped through) is not
-            // trustworthy — requeued jobs also appear in a survivor's
-            let report = if c.dead { &c.local } else { c.summary.as_ref().unwrap_or(&c.local) };
+            // trustworthy — requeued jobs also appear in a survivor's;
+            // under stealing no child's summary is: a stolen duplicate
+            // runs (and is counted) on both replicas, while `local`
+            // absorbed only first resolutions
+            let report = if c.dead || self.steal {
+                &c.local
+            } else {
+                c.summary.as_ref().unwrap_or(&c.local)
+            };
             merged.merge(report);
         }
         // graceful degradation: quarantined jobs make the report partial
@@ -1048,7 +1128,11 @@ impl<'t> ShardPool<'t> {
                     // job was requeued) — ignore rather than double-count
                     return Ok(());
                 }
-                assigned.remove(&o.id);
+                if assigned.remove(&o.id).is_none() {
+                    // a stolen duplicate already resolved this id — the
+                    // first resolution won; drop the echo
+                    return Ok(());
+                }
                 self.children[shard].local.absorb(&o);
                 let mut o = o;
                 if self.deterministic {
@@ -1066,7 +1150,10 @@ impl<'t> ShardPool<'t> {
                 // a job-level rejection (e.g. unknown pair): deterministic,
                 // so it resolves the id instead of being retried
                 if self.children[shard].inflight.remove(&id) {
-                    assigned.remove(&id);
+                    if assigned.remove(&id).is_none() {
+                        // already resolved by a stolen duplicate
+                        return Ok(());
+                    }
                     let line = JsonValue::Obj(vec![
                         ("ok".into(), JsonValue::Bool(false)),
                         ("error".into(), JsonValue::str(&msg)),

@@ -1,0 +1,265 @@
+//! Multi-host fleet integration: real `serve --tcp` worker daemons on
+//! loopback, driven through `session::fleet::TcpTransport` by the same
+//! hardened `ShardPool` that drives local child processes.
+//!
+//! The contract under test is the ISSUE-9 acceptance bar: under any
+//! chaos schedule in which every job still completes — dead daemons,
+//! dropped connections, partitions, persistently slow hosts — the
+//! `--deterministic` fleet output is byte-identical to the
+//! single-process run; and a host that exhausts its failure budget
+//! yields an explicit quarantined partial report that round-trips
+//! through the `CampaignReport` JSON codec, never a hang, never
+//! silently wrong bytes.
+
+use std::io::{BufRead, BufReader};
+use std::process::{Child, Command, Stdio};
+use std::sync::atomic::Ordering;
+use std::time::Duration;
+
+use mma_sim::coordinator::{CampaignReport, Job};
+use mma_sim::session::json::{self, JsonValue};
+use mma_sim::session::shard::{shard_campaign, ProcessTransport, ShardConfig};
+use mma_sim::session::{ChaosPlan, FleetTopology, TcpTransport};
+
+const PAIR: &str = "sm70 HMMA.884.F32.F16";
+
+fn binary() -> &'static str {
+    env!("CARGO_BIN_EXE_mma-sim")
+}
+
+/// A real worker daemon on an ephemeral loopback port, killed on drop.
+struct Daemon {
+    child: Child,
+    addr: String,
+}
+
+impl Drop for Daemon {
+    fn drop(&mut self) {
+        let _ = self.child.kill();
+        let _ = self.child.wait();
+    }
+}
+
+fn spawn_daemon() -> Daemon {
+    let mut child = Command::new(binary())
+        .args([
+            "serve",
+            "--tcp",
+            "127.0.0.1:0",
+            "--workers",
+            "1",
+            "--child-workers",
+            "1",
+            "--deterministic",
+        ])
+        .env("MMA_SIM_THREADS", "1")
+        .stdin(Stdio::null())
+        .stdout(Stdio::piped())
+        .stderr(Stdio::null())
+        .spawn()
+        .expect("spawn serve --tcp daemon");
+    let mut line = String::new();
+    BufReader::new(child.stdout.as_mut().expect("piped stdout"))
+        .read_line(&mut line)
+        .expect("daemon announces its port");
+    let addr = JsonValue::parse(line.trim())
+        .expect("listening frame parses")
+        .get("listening")
+        .and_then(|a| a.as_str())
+        .expect("listening frame carries the address")
+        .to_string();
+    Daemon { child, addr }
+}
+
+fn jobs(n: u64, batch: usize) -> Vec<Job> {
+    (0..n).map(|i| Job { id: i, pair: PAIR.into(), batch, seed: 0x9000 + i }).collect()
+}
+
+/// The byte-identity baseline: the same jobs through one local child
+/// process (`workers: 1` serializes the merge trivially).
+fn baseline(jobs: Vec<Job>) -> (String, CampaignReport) {
+    let transport = ProcessTransport::with_binary(binary());
+    let cfg = ShardConfig {
+        workers: 1,
+        child_workers: 1,
+        deterministic: true,
+        ..ShardConfig::default()
+    };
+    let mut out = Vec::new();
+    let report = shard_campaign(jobs, &cfg, &transport, &mut out).expect("baseline run");
+    (String::from_utf8(out).expect("utf8"), report)
+}
+
+/// The fleet-side pool sizing every test uses: one connection per
+/// daemon, stealing on (as `shard --hosts` always does).
+fn fleet_cfg(workers: usize) -> ShardConfig {
+    ShardConfig {
+        workers,
+        child_workers: 1,
+        deterministic: true,
+        steal: true,
+        job_timeout_ms: 10_000,
+        max_spawns: 16,
+        ..ShardConfig::default()
+    }
+}
+
+/// A loopback topology with probe and backoff knobs tightened to test
+/// timescales (a partition must be declared dead in ~0.4 s, not 3 s).
+fn short_probe_topo(addrs: &[String]) -> FleetTopology {
+    FleetTopology {
+        probe_interval_ms: 100,
+        probe_deadline_ms: 400,
+        dial_base_ms: 5,
+        retry_base_ms: 5,
+        ..FleetTopology::loopback(addrs)
+    }
+}
+
+fn run_fleet(
+    jobs: Vec<Job>,
+    cfg: &ShardConfig,
+    transport: &TcpTransport,
+) -> (String, CampaignReport) {
+    let mut out = Vec::new();
+    let report = shard_campaign(jobs, cfg, transport, &mut out).expect("fleet run");
+    (String::from_utf8(out).expect("utf8"), report)
+}
+
+#[test]
+fn fleet_matches_single_process_byte_for_byte() {
+    let (d1, d2) = (spawn_daemon(), spawn_daemon());
+    let work = jobs(6, 10);
+    let (want_bytes, want_report) = baseline(work.clone());
+
+    let topo = FleetTopology::loopback(&[d1.addr.clone(), d2.addr.clone()]);
+    let transport = TcpTransport::new(topo).expect("valid topology");
+    let (got_bytes, got_report) = run_fleet(work, &fleet_cfg(2), &transport);
+
+    assert_eq!(got_bytes, want_bytes, "fleet bytes must match the single-process run");
+    assert_eq!(got_report, want_report);
+
+    // the per-host counter surface covers the whole campaign: every job
+    // resolved on some host (stolen duplicates may resolve twice), and
+    // both daemons were dialed
+    let stats = transport.stats();
+    let resolved: u64 =
+        (0..2).map(|h| stats.host(h).jobs.load(Ordering::SeqCst)).sum();
+    assert!(resolved >= 6, "per-host job counters must cover the campaign: {resolved}");
+    let dials: u64 = (0..2).map(|h| stats.host(h).dials.load(Ordering::SeqCst)).sum();
+    assert!(dials >= 2, "both hosts must have been dialed: {dials}");
+    let frame = stats.frame().encode();
+    for key in ["jobs", "steals", "reconnects", "quarantines", "dials", "retries"] {
+        assert!(frame.contains(key), "stats frame must carry '{key}': {frame}");
+    }
+}
+
+#[test]
+fn killed_daemon_mid_campaign_keeps_bytes() {
+    let d1 = spawn_daemon();
+    let mut d2 = spawn_daemon();
+    let work = jobs(8, 60);
+    let (want_bytes, want_report) = baseline(work.clone());
+
+    let topo = short_probe_topo(&[d1.addr.clone(), d2.addr.clone()]);
+    let transport = TcpTransport::new(topo).expect("valid topology");
+    // fell the second daemon while the campaign is (very likely) still
+    // in flight; its jobs must requeue onto the survivor
+    let killer = std::thread::spawn(move || {
+        std::thread::sleep(Duration::from_millis(100));
+        let _ = d2.child.kill();
+        let _ = d2.child.wait();
+        d2
+    });
+    let (got_bytes, got_report) = run_fleet(work, &fleet_cfg(2), &transport);
+    let _d2 = killer.join().expect("killer thread");
+
+    assert_eq!(got_bytes, want_bytes, "a dead daemon may cost time, never content");
+    assert_eq!(got_report, want_report);
+}
+
+#[test]
+fn disconnect_chaos_reconnects_and_keeps_bytes() {
+    let (d1, d2) = (spawn_daemon(), spawn_daemon());
+    let work = jobs(8, 20);
+    let (want_bytes, want_report) = baseline(work.clone());
+
+    // both connections drop mid-stream: the pool is forced to respawn,
+    // which re-enters the transport and redials (fleet chaos indexes
+    // are HOST indexes, and fault frames persist across reconnects, so
+    // each disconnect fires exactly once)
+    let topo = short_probe_topo(&[d1.addr.clone(), d2.addr.clone()]);
+    let transport = TcpTransport::new(topo)
+        .expect("valid topology")
+        .with_chaos(ChaosPlan::parse("0:disconnect@1;1:disconnect@2").expect("chaos spec"));
+    let (got_bytes, got_report) = run_fleet(work, &fleet_cfg(2), &transport);
+
+    assert_eq!(got_bytes, want_bytes, "bytes must survive dropped connections");
+    assert_eq!(got_report, want_report);
+    let reconnects: u64 = (0..2)
+        .map(|h| transport.stats().host(h).reconnects.load(Ordering::SeqCst))
+        .sum();
+    assert!(reconnects >= 1, "a redial after both drops must be counted: {reconnects}");
+}
+
+#[test]
+fn seeded_partition_and_slow_host_chaos_keep_bytes() {
+    let (d1, d2) = (spawn_daemon(), spawn_daemon());
+    let work = jobs(8, 20);
+    let (want_bytes, want_report) = baseline(work.clone());
+
+    // a seeded schedule places one partition (silent open socket — only
+    // the probe deadline can catch it) and one persistently slow host
+    let topo = short_probe_topo(&[d1.addr.clone(), d2.addr.clone()]);
+    let transport = TcpTransport::new(topo).expect("valid topology").with_chaos(
+        ChaosPlan::parse("seed=11,launches=2,frames=4,partition=1,slow=1").expect("chaos spec"),
+    );
+    let (got_bytes, got_report) = run_fleet(work, &fleet_cfg(2), &transport);
+
+    assert_eq!(got_bytes, want_bytes, "bytes must survive partitions and slow hosts");
+    assert_eq!(got_report, want_report);
+}
+
+#[test]
+fn quarantined_host_yields_partial_report_that_round_trips() {
+    let d1 = spawn_daemon();
+    // one host, zero tolerance: the first dropped connection quarantines
+    // it, and with no survivors the poisoned jobs must settle into an
+    // explicit partial report — not a hang, not silently wrong bytes
+    let topo = FleetTopology {
+        failure_budget: 1,
+        dial_attempts: 1,
+        ..FleetTopology::loopback(&[d1.addr.clone()])
+    };
+    let transport = TcpTransport::new(topo)
+        .expect("valid topology")
+        .with_chaos(ChaosPlan::parse("0:disconnect@0").expect("chaos spec"));
+    let cfg = ShardConfig { max_worker_kills: 1, ..fleet_cfg(1) };
+
+    let mut out = Vec::new();
+    let report =
+        shard_campaign(jobs(2, 10), &cfg, &transport, &mut out).expect("partial, not an error");
+    assert_eq!(report.incomplete, 2, "both in-flight jobs were poisoned: {report:?}");
+    assert_eq!(report.quarantined.len(), 2);
+    assert_eq!(report.total_jobs, 0);
+    assert_eq!(
+        transport.stats().host(0).quarantines.load(Ordering::SeqCst),
+        1,
+        "the host itself must be quarantined"
+    );
+
+    // the emitted stream is whole: one ordered error line per poisoned
+    // job, then the merged summary
+    let text = String::from_utf8(out).expect("utf8");
+    let lines: Vec<&str> = text.lines().collect();
+    assert_eq!(lines.len(), 3, "2 error lines + summary:\n{text}");
+    for line in &lines[..2] {
+        let v = JsonValue::parse(line).expect("frame parses");
+        assert_eq!(v.get("ok").and_then(|b| b.as_bool()), Some(false), "{line}");
+    }
+    assert!(JsonValue::parse(lines[2]).expect("summary parses").get("summary").is_some());
+
+    // and the partial report survives the JSON codec unchanged
+    let round = json::report_from_json(&json::report_to_json(&report)).expect("codec");
+    assert_eq!(round, report, "quarantined partial reports must round-trip");
+}
