@@ -33,6 +33,17 @@ pub fn band_groups(bands: usize, groups: usize) -> Vec<std::ops::Range<usize>> {
         .collect()
 }
 
+/// The cross-process shard runner's request plan: each [`band_groups`]
+/// span scaled to output rows, as `(row0, rows)` pairs. Kept next to
+/// [`band_groups`] so the partition the shard parent requests and the
+/// partition this engine executes can never drift apart.
+pub fn band_plan(bands: usize, groups: usize, tile_m: usize) -> Vec<(usize, usize)> {
+    band_groups(bands, groups)
+        .iter()
+        .map(|s| (s.start * tile_m, (s.end - s.start) * tile_m))
+        .collect()
+}
+
 /// An arbitrary-shape GEMM executor built from one MMAU instruction.
 pub struct TiledGemm {
     /// The per-tile model (instruction shape).

@@ -15,11 +15,18 @@
 //!   `gemm` / `probe` / `infer` / `campaign` plus JSON-lines
 //!   serialization ([`session::json`]), the long-running verification
 //!   service ([`session::serve`]), and process-level sharding
-//!   ([`session::shard`]: a `ShardPool` scatters verification jobs or
-//!   GEMM row bands over `mma-sim` child workers through a
-//!   `WorkerTransport`, requeues work from dying children, and merges
-//!   the reply streams back deterministically — `Session::shard_campaign`
-//!   / `Session::shard_gemm`). The pool is hardened for unattended
+//!   ([`session::shard`]). Sharded work is *typed*: [`session::work`]
+//!   defines the one `WorkItem`/`WorkResult` model every tier moves —
+//!   campaign verification jobs and GEMM row bands are two variants of
+//!   the same enum, dispatched by one generic `ShardPool` engine over a
+//!   `WorkerTransport`, requeued from dying children, and merged back
+//!   deterministically (`Session::shard_campaign` /
+//!   `Session::shard_gemm`). GEMM's shared B operand travels through a
+//!   content-addressed `OperandStore` (`{"put":{"addr":…,"matrix":…}}`
+//!   frames, FNV-1a64‖SipHash-2-4 addresses over the canonical operand
+//!   JSON, workers answering `{"need":addr}` on a miss), so band items
+//!   reference operands by hash instead of relying on
+//!   connection-sticky `set_b` state. The pool is hardened for unattended
 //!   fleets: per-job reply deadlines retire hung-but-alive children,
 //!   respawns back off on a deterministic exponential schedule against a
 //!   launch budget, a job that keeps felling workers is quarantined into
@@ -35,12 +42,14 @@
 //!   one shared long-lived `ShardPool` in service mode with explicit
 //!   backpressure (`{"ok":false,"retry":true,...}` instead of unbounded
 //!   queueing), a content-addressed result cache
-//!   ([`session::net::cache`]: canonical-JSON job keys, vendored
+//!   ([`session::net::cache`]: canonical-JSON work-item keys, vendored
 //!   FNV-1a/SipHash addressing, persistent warm-restart artifacts under
-//!   `--cache-dir`), and a counters surface ([`session::net::stats`],
-//!   the `{"stats":true}` request). At the top sits the multi-host
-//!   fleet tier ([`session::fleet`], `mma-sim shard --hosts
-//!   hosts.json`): a `TcpTransport` that plugs remote `serve --tcp`
+//!   `--cache-dir` — band results included, so a repeated GEMM band is
+//!   a cache hit with zero pool submissions), and a counters surface
+//!   ([`session::net::stats`], the `{"stats":true}` request). At the
+//!   top sits the multi-host fleet tier ([`session::fleet`], `mma-sim
+//!   shard --hosts hosts.json`, campaign and `--gemm` alike): a
+//!   `TcpTransport` that plugs remote `serve --tcp`
 //!   daemons into the same hardened `ShardPool` as worker connections —
 //!   per-host liveness probes, reconnect with the pool's capped
 //!   exponential backoff, host-level quarantine after a failure budget

@@ -16,7 +16,8 @@
 //! - `validate`                  — randomized cross-validation vs PJRT artifacts
 //! - `serve`                     — verification campaign, one-shot or JSON-lines
 //! - `shard`                     — campaign (or `--gemm`) sharded across child
-//!                                 `mma-sim` worker processes
+//!                                 `mma-sim` worker processes or, with
+//!                                 `--hosts`, a TCP daemon fleet
 //!
 //! The argument parser is hand-rolled: the offline image ships no clap.
 
@@ -154,9 +155,13 @@ fn print_help() {
          \x20                                    --chaos indexes hosts, not launches;\n\
          \x20                                    per-host counters print on stderr\n\
          \x20 shard --gemm --arch A --instr FRAG [--m M --n N --k K] [--check]\n\
-         \x20                                    GEMM row bands scattered across\n\
-         \x20                                    `simulate --stdin` children; --check\n\
-         \x20                                    asserts bit-identity vs in-process"
+         \x20       [--hosts FILE]               GEMM row bands scattered across\n\
+         \x20                                    `simulate --stdin` children, or —\n\
+         \x20                                    with --hosts — across the same TCP\n\
+         \x20                                    fleet as a campaign (B published\n\
+         \x20                                    once per worker by content address);\n\
+         \x20                                    --check asserts bit-identity vs the\n\
+         \x20                                    in-process engine"
     );
 }
 
@@ -360,8 +365,22 @@ fn cmd_shard(args: &[String]) -> Result<()> {
         steal: has(args, "--steal") || hosts.is_some(),
     };
     if has(args, "--gemm") {
-        if hosts.is_some() {
-            bail!("--hosts drives campaign fleets; --gemm stays on local worker processes");
+        if let Some(path) = hosts {
+            // fleet GEMM: workers are TCP connections to remote
+            // `serve --tcp` daemons named by the topology file; every
+            // band rides the same put/band wire protocol a local worker
+            // speaks, so probes/quarantine/stealing apply unchanged
+            let topo = session::FleetTopology::from_file(std::path::Path::new(&path))?;
+            eprintln!("shard gemm: fleet of {} hosts from {path}", topo.hosts.len());
+            let mut transport = session::TcpTransport::new(topo)?;
+            if let Some(spec) = flag(args, "--chaos") {
+                transport = transport.with_chaos(ChaosPlan::parse(&spec)?);
+            }
+            cmd_shard_gemm(args, &shard_cfg, &transport)?;
+            // per-host counters on stderr: stdout stays byte-comparable
+            eprintln!("{}", transport.stats().frame().encode());
+            eprintln!("{}", transport.stats().render());
+            return Ok(());
         }
         let mut transport = ProcessTransport::current_exe()?;
         if let Some(spec) = flag(args, "--chaos") {
@@ -434,7 +453,7 @@ fn cmd_shard(args: &[String]) -> Result<()> {
 fn cmd_shard_gemm(
     args: &[String],
     shard_cfg: &ShardConfig,
-    transport: &ProcessTransport,
+    transport: &dyn session::WorkerTransport,
 ) -> Result<()> {
     let session = session_from_args(args)?;
     let m = parsed(args, "--m", 256usize)?;

@@ -18,6 +18,8 @@
 #[cfg(feature = "pjrt")]
 mod pjrt;
 #[cfg(feature = "pjrt")]
+mod xla_stub;
+#[cfg(feature = "pjrt")]
 pub use pjrt::{BiasDeviation, PjrtMma, RefGemm, Runtime};
 
 #[cfg(not(feature = "pjrt"))]

@@ -1,0 +1,108 @@
+//! Build-only stand-in for the vendored `xla` crate surface that
+//! `runtime::pjrt` compiles against.
+//!
+//! The offline image cannot fetch the real `xla` crate, so
+//! `cargo build --features pjrt` used to fail outright. This module
+//! vendors exactly the API surface `pjrt.rs` touches; every constructor
+//! fails at runtime ([`PjRtClient::cpu`] errors before anything else is
+//! reachable), so the `pjrt` feature now *compiles* everywhere — CI
+//! keeps it honest with a build-only leg — and behaves like the default
+//! stub runtime until a real `xla` crate replaces this file. PJRT tests
+//! keep skipping on missing artifacts either way.
+
+use std::fmt;
+use std::path::Path;
+
+const MSG: &str = "stub-vendored xla surface: the offline image has no real `xla` crate; \
+                   replace runtime/xla_stub.rs with the vendored crate to execute artifacts";
+
+/// Matches the vendored crate's error, used via `{e:?}` throughout.
+pub struct Error(String);
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+fn stub_err<T>() -> Result<T, Error> {
+    Err(Error(MSG.to_string()))
+}
+
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<Self, Error> {
+        stub_err()
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".into()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable, Error> {
+        stub_err()
+    }
+}
+
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: impl AsRef<Path>) -> Result<Self, Error> {
+        stub_err()
+    }
+}
+
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> Self {
+        XlaComputation
+    }
+}
+
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>, Error> {
+        stub_err()
+    }
+}
+
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal, Error> {
+        stub_err()
+    }
+}
+
+/// Element types the real crate's literals traffic in.
+pub trait NativeType: Copy {}
+impl NativeType for u32 {}
+impl NativeType for f32 {}
+impl NativeType for f64 {}
+
+pub struct Literal;
+
+impl Literal {
+    pub fn vec1<T: NativeType>(_vals: &[T]) -> Literal {
+        Literal
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal, Error> {
+        stub_err()
+    }
+
+    pub fn to_tuple1(&self) -> Result<Literal, Error> {
+        stub_err()
+    }
+
+    pub fn to_tuple3(&self) -> Result<(Literal, Literal, Literal), Error> {
+        stub_err()
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>, Error> {
+        stub_err()
+    }
+}

@@ -110,7 +110,8 @@ pub fn retry_frame_id(v: &JsonValue) -> Option<u64> {
 /// Per-host fleet counters, updated lock-free from connection threads.
 #[derive(Default)]
 pub struct HostCounters {
-    /// Outcome lines this host resolved (first resolution only).
+    /// Work items this host resolved (job outcomes and GEMM band
+    /// replies; first resolution only).
     pub jobs: AtomicU64,
     /// Jobs re-issued to this host away from another host's backlog.
     pub steals: AtomicU64,
@@ -363,13 +364,11 @@ impl TcpTransport {
 
 impl WorkerTransport for TcpTransport {
     fn launch(&self, role: &WorkerRole) -> Result<WorkerIo, ApiError> {
-        if matches!(role, WorkerRole::Gemm { .. }) {
-            return Err(ApiError::Shard {
-                detail: "fleet: TCP daemons serve campaign jobs only; GEMM bands \
-                         stay on the process transport"
-                    .into(),
-            });
-        }
+        // Both roles ride the same daemon protocol: campaign jobs as job
+        // lines, GEMM work as put/band frames (the daemon resolves each
+        // band's instruction from its `pair` field) — so a fleet GEMM
+        // needs nothing role-specific from the transport.
+        let _ = role;
         let (host, sock) = self.dial()?;
         let clone = |what: &str| {
             sock.try_clone().map_err(|e| ApiError::Shard {
@@ -446,13 +445,23 @@ struct FleetWriter {
     buf: Vec<u8>,
 }
 
+/// The replayable work-item id carried by an outgoing request line: a
+/// job's top-level `id`, or a band item's nested `{"band":{"id":N}}`.
+/// Operand `put` frames carry no id — they are shared state, re-published
+/// by the pool's dispatch on a fresh connection, never replayed here.
+fn sent_item_id(v: &JsonValue) -> Option<u64> {
+    v.get("id")
+        .and_then(|i| i.as_u64())
+        .or_else(|| v.get("band").and_then(|b| b.get("id")).and_then(|i| i.as_u64()))
+}
+
 impl FleetWriter {
     fn send_line(&self, raw: &[u8]) -> std::io::Result<()> {
         let text = String::from_utf8_lossy(raw);
         let trimmed = text.trim();
         if !trimmed.is_empty() {
             if let Ok(v) = JsonValue::parse(trimmed) {
-                if let Some(id) = v.get("id").and_then(|i| i.as_u64()) {
+                if let Some(id) = sent_item_id(&v) {
                     self.conn
                         .sent
                         .lock()
@@ -666,7 +675,7 @@ impl FleetReader {
                 owners.remove(&id);
             }
             drop(owners);
-            if v.get("ok").and_then(|b| b.as_bool()) == Some(true) {
+            if v.get("ok").and_then(|b| b.as_bool()) == Some(true) || v.get("band").is_some() {
                 self.conn.fleet.stats.host(self.conn.host).jobs.fetch_add(1, Ordering::Relaxed);
             }
         }
@@ -750,11 +759,15 @@ impl Read for FleetReader {
     }
 }
 
-/// The id a terminal reply resolves: an outcome's embedded id, else the
-/// frame's own `id` field (terminal error frames).
+/// The id a terminal reply resolves: an outcome's embedded id, a band
+/// reply's nested id, else the frame's own `id` field (terminal error
+/// frames).
 fn resolved_id(v: &JsonValue) -> Option<u64> {
     if let Some(o) = v.get("outcome") {
         return o.get("id").and_then(|i| i.as_u64());
+    }
+    if let Some(b) = v.get("band") {
+        return b.get("id").and_then(|i| i.as_u64());
     }
     v.get("id").and_then(|i| i.as_u64())
 }
@@ -820,14 +833,31 @@ mod tests {
     }
 
     #[test]
-    fn gemm_roles_are_rejected() {
-        let topo = FleetTopology::loopback(&["127.0.0.1:1".into()]);
+    fn gemm_roles_dial_the_fleet_like_campaign_roles() {
+        let mut topo = FleetTopology::loopback(&["127.0.0.1:1".into()]);
+        topo.dial_attempts = 1;
         let transport = TcpTransport::new(topo).unwrap();
         let err = transport
-            .launch(&WorkerRole::Gemm { arch: "sm70".into(), instr: "x".into() })
+            .launch(&WorkerRole::Gemm { arch: "sm75".into(), instr: "HMMA.1688.F32.F16".into() })
             .err()
-            .expect("gemm roles must be rejected");
-        assert!(matches!(err, ApiError::Shard { .. }));
+            .expect("nothing listens on port 1");
+        assert!(matches!(err, ApiError::Shard { .. }), "got: {err}");
+        assert_eq!(
+            transport.stats().host(0).dials.load(Ordering::Relaxed),
+            1,
+            "the gemm role actually dialed the host instead of being rejected up front"
+        );
+    }
+
+    #[test]
+    fn band_frames_carry_and_resolve_nested_ids() {
+        let band = JsonValue::parse(r#"{"band":{"id":9,"row0":0,"a":[],"c":[]}}"#).unwrap();
+        assert_eq!(sent_item_id(&band), Some(9), "band submissions ledger under their nested id");
+        assert_eq!(resolved_id(&band), Some(9), "band replies resolve that same ledger entry");
+        let put = JsonValue::parse(r#"{"put":{"addr":"00","matrix":[]}}"#).unwrap();
+        assert_eq!(sent_item_id(&put), None, "puts are shared state, not ledgered work");
+        let job = JsonValue::parse(r#"{"id":4,"pair":"p"}"#).unwrap();
+        assert_eq!(sent_item_id(&job), Some(4));
     }
 
     #[test]

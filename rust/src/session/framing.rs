@@ -22,8 +22,9 @@
 use std::io::BufRead;
 
 /// Default cap on a single input frame: 64 MiB comfortably holds the
-/// largest legitimate frame (a `set_b` matrix for a big GEMM) while
-/// bounding what a garbage peer can make the service buffer.
+/// largest legitimate frame (a `put` operand-publish frame carrying the
+/// shared B matrix of a big GEMM) while bounding what a garbage peer
+/// can make the service buffer.
 pub const DEFAULT_MAX_LINE_BYTES: usize = 64 << 20;
 
 /// One bounded read off the input stream.

@@ -17,7 +17,7 @@ use crate::coordinator::{CampaignReport, Job, JobOutcome, Mismatch, PairStats, Q
 use crate::error::ApiError;
 use crate::formats::Format;
 use crate::interface::{BitMatrix, MmaCase};
-use crate::session::shard::{BandReply, BandRequest};
+use crate::session::work::{BandReply, BandRequest};
 use crate::session::RunOutput;
 
 /// A parsed JSON document. Numbers stay as raw text so 64-bit integers
@@ -859,23 +859,49 @@ pub fn summary_frame(r: &CampaignReport) -> JsonValue {
 // sharded-GEMM band framing
 // ---------------------------------------------------------------------------
 
-/// `{"id":N,"row0":R,"a":M,"c":M}` — the payload of a `{"band": ...}`
-/// request frame on the `simulate --stdin` stream. The shared operand B
-/// is installed once per worker by a `{"set_b": M}` frame; each band then
-/// carries only its own rows of A and C.
+/// `{"id":N,"row0":R,"pair":"..."?,"b":H?,"a":M,"c":M}` — the payload of
+/// a `{"band": ...}` request frame. Each band carries only its own rows
+/// of A and C; the shared operand B is referenced by content address
+/// (`"b"`, installed by a prior `{"put": ...}` frame) and the
+/// instruction by `"pair"`. Both are optional on the wire: a
+/// `simulate --stdin` worker has a fixed instruction and still accepts
+/// the legacy `{"set_b": M}` default operand for address-free bands.
 pub fn band_request_to_json(r: &BandRequest) -> JsonValue {
-    JsonValue::Obj(vec![
+    let mut fields = vec![
         ("id".into(), JsonValue::u64(r.id)),
         ("row0".into(), JsonValue::usize(r.row0)),
-        ("a".into(), bitmatrix_to_json(&r.a)),
-        ("c".into(), bitmatrix_to_json(&r.c)),
-    ])
+    ];
+    if let Some(pair) = &r.pair {
+        fields.push(("pair".into(), JsonValue::str(pair)));
+    }
+    if let Some(addr) = &r.b {
+        fields.push(("b".into(), JsonValue::str(addr)));
+    }
+    fields.push(("a".into(), bitmatrix_to_json(&r.a)));
+    fields.push(("c".into(), bitmatrix_to_json(&r.c)));
+    JsonValue::Obj(fields)
 }
 
 pub fn band_request_from_json(v: &JsonValue) -> Result<BandRequest, ApiError> {
     Ok(BandRequest {
         id: u64_field(v, "id")?,
         row0: usize_field(v, "row0")?,
+        pair: match v.get("pair") {
+            None | Some(JsonValue::Null) => None,
+            Some(p) => Some(
+                p.as_str()
+                    .ok_or_else(|| semantic("field 'pair' must be a string"))?
+                    .to_string(),
+            ),
+        },
+        b: match v.get("b") {
+            None | Some(JsonValue::Null) => None,
+            Some(a) => Some(
+                a.as_str()
+                    .ok_or_else(|| semantic("field 'b' must be a string address"))?
+                    .to_string(),
+            ),
+        },
         a: bitmatrix_from_json(field(v, "a")?)?,
         c: bitmatrix_from_json(field(v, "c")?)?,
     })
@@ -897,6 +923,122 @@ pub fn band_reply_from_json(v: &JsonValue) -> Result<BandReply, ApiError> {
         row0: usize_field(v, "row0")?,
         d: bitmatrix_from_json(field(v, "d")?)?,
     })
+}
+
+// ---------------------------------------------------------------------------
+// operand frames (content-addressed store)
+// ---------------------------------------------------------------------------
+
+/// `{"put": {"addr": H, "matrix": M}}` — publish a shared operand under
+/// its content address ([`operand_addr`](crate::session::work::operand_addr)).
+/// Receivers verify the address against the matrix bytes before storing.
+pub fn put_frame(addr: &str, m: &BitMatrix) -> JsonValue {
+    JsonValue::Obj(vec![(
+        "put".into(),
+        JsonValue::Obj(vec![
+            ("addr".into(), JsonValue::str(addr)),
+            ("matrix".into(), bitmatrix_to_json(m)),
+        ]),
+    )])
+}
+
+/// Decode the payload of a `{"put": ...}` frame into `(addr, matrix)`.
+pub fn put_from_json(v: &JsonValue) -> Result<(String, BitMatrix), ApiError> {
+    Ok((str_field(v, "addr")?.to_string(), bitmatrix_from_json(field(v, "matrix")?)?))
+}
+
+/// `{"need": H}` — a worker's request to re-send the `put` for an
+/// operand it does not (or, after bounded-memo eviction, no longer)
+/// holds.
+pub fn need_frame(addr: &str) -> JsonValue {
+    JsonValue::Obj(vec![("need".into(), JsonValue::str(addr))])
+}
+
+// ---------------------------------------------------------------------------
+// the one reply classifier
+// ---------------------------------------------------------------------------
+
+/// Every frame a pipeline endpoint can receive, decoded once. This is
+/// the single classifier behind the shard dispatcher's reply loop and
+/// the fleet reader's frame routing — the two used to carry divergent
+/// ad-hoc matches.
+///
+/// Classification order mirrors the original shard `parse_reply` (and
+/// preserves its `Garbage` reason strings byte-for-byte): parse error,
+/// `summary`, `band`, `put`, `need`, `stats`, `retry`, `ok` outcome,
+/// `error`, fallthrough garbage.
+#[derive(Debug)]
+pub enum Frame {
+    /// `{"ok":true,"outcome":{...}}` — a completed verification job.
+    Outcome(JobOutcome),
+    /// `{"ok":false,"error":"...","id"?}` — a terminal error.
+    Error { id: Option<u64>, msg: String },
+    /// `{"ok":false,"retry":true,"error":"...","id"?}` — backpressure:
+    /// the request was not enqueued and should be resubmitted.
+    Retry { id: Option<u64>, msg: String },
+    /// `{"summary":{...}}` — the end-of-stream aggregate.
+    Summary(CampaignReport),
+    /// `{"band":{...}}` — a completed GEMM band.
+    Band(Box<BandReply>),
+    /// `{"put":{"addr":H,"matrix":M}}` — an operand publication.
+    Put { addr: String, matrix: BitMatrix },
+    /// `{"need":H}` — an operand re-send request.
+    Need(String),
+    /// `{"stats":...}` — the out-of-band server counter surface (also
+    /// the fleet's heartbeat ack).
+    Stats(JsonValue),
+    /// Anything else, with a protocol-violation reason.
+    Garbage(String),
+}
+
+pub fn classify_frame(line: &str) -> Frame {
+    let v = match JsonValue::parse(line) {
+        Ok(v) => v,
+        Err(e) => return Frame::Garbage(format!("unparseable reply ({e})")),
+    };
+    if let Some(s) = v.get("summary") {
+        return match report_from_json(s) {
+            Ok(r) => Frame::Summary(r),
+            Err(e) => Frame::Garbage(format!("bad summary ({e})")),
+        };
+    }
+    if let Some(b) = v.get("band") {
+        return match band_reply_from_json(b) {
+            Ok(r) => Frame::Band(Box::new(r)),
+            Err(e) => Frame::Garbage(format!("bad band reply ({e})")),
+        };
+    }
+    if let Some(p) = v.get("put") {
+        return match put_from_json(p) {
+            Ok((addr, matrix)) => Frame::Put { addr, matrix },
+            Err(e) => Frame::Garbage(format!("bad put frame ({e})")),
+        };
+    }
+    if let Some(n) = v.get("need") {
+        return match n.as_str() {
+            Some(addr) => Frame::Need(addr.to_string()),
+            None => Frame::Garbage("bad need frame (field 'need' must be a string)".into()),
+        };
+    }
+    if v.get("stats").is_some() {
+        return Frame::Stats(v);
+    }
+    let id = v.get("id").and_then(|x| x.as_u64());
+    if v.get("retry").and_then(|b| b.as_bool()) == Some(true) {
+        let msg =
+            v.get("error").and_then(|e| e.as_str()).unwrap_or("resubmit later").to_string();
+        return Frame::Retry { id, msg };
+    }
+    if v.get("ok").and_then(|b| b.as_bool()) == Some(true) {
+        return match v.get("outcome").map(outcome_from_json) {
+            Some(Ok(o)) => Frame::Outcome(o),
+            _ => Frame::Garbage("ok reply without a valid outcome".into()),
+        };
+    }
+    if let Some(msg) = v.get("error").and_then(|e| e.as_str()) {
+        return Frame::Error { id, msg: msg.to_string() };
+    }
+    Frame::Garbage("reply is neither outcome, error, band, nor summary".into())
 }
 
 #[cfg(test)]
@@ -1101,20 +1243,125 @@ mod tests {
         let req = BandRequest {
             id: 3,
             row0: 32,
+            pair: None,
+            b: None,
             a: mk(Format::Fp16, 16, 64, 7),
             c: mk(Format::Fp32, 16, 8, 9),
         };
         let v = JsonValue::parse(&band_request_to_json(&req).encode()).unwrap();
         let back = band_request_from_json(&v).unwrap();
         assert_eq!((back.id, back.row0), (3, 32));
+        assert!(back.pair.is_none() && back.b.is_none());
         assert_eq!(back.a, req.a);
         assert_eq!(back.c, req.c);
+        // legacy (pre-operand-store) band lines omit the optional fields
+        let line = band_request_to_json(&req).encode();
+        assert!(!line.contains("\"pair\"") && !line.contains("\"b\""), "{line}");
+
+        let addressed = BandRequest {
+            pair: Some("sm75 HMMA.1688.F32.F16".into()),
+            b: Some("00".repeat(16)),
+            ..req
+        };
+        let v = JsonValue::parse(&band_request_to_json(&addressed).encode()).unwrap();
+        let back = band_request_from_json(&v).unwrap();
+        assert_eq!(back.pair.as_deref(), Some("sm75 HMMA.1688.F32.F16"));
+        assert_eq!(back.b.as_deref(), Some("00".repeat(16).as_str()));
 
         let reply = BandReply { id: 3, row0: 32, d: mk(Format::Fp32, 16, 8, 11) };
         let v = JsonValue::parse(&band_reply_to_json(&reply).encode()).unwrap();
         let back = band_reply_from_json(&v).unwrap();
         assert_eq!((back.id, back.row0), (3, 32));
         assert_eq!(back.d, reply.d);
+    }
+
+    #[test]
+    fn classify_frame_types_every_frame_kind() {
+        // outcome
+        let o = JobOutcome {
+            id: 5,
+            pair: "clean".into(),
+            tests: 10,
+            micros: 0,
+            mismatches: Vec::new(),
+        };
+        let f = classify_frame(&outcome_frame(&o).encode());
+        assert!(matches!(f, Frame::Outcome(got) if got == o), "outcome frame");
+
+        // terminal error, with and without id
+        match classify_frame(&error_frame("boom", Some(4)).encode()) {
+            Frame::Error { id: Some(4), msg } => assert_eq!(msg, "boom"),
+            f => panic!("expected Error, got {f:?}"),
+        }
+        assert!(matches!(
+            classify_frame(&error_frame("boom", None).encode()),
+            Frame::Error { id: None, .. }
+        ));
+
+        // backpressure retry is distinguished from a terminal error
+        match classify_frame(&retry_frame("queue full", Some(7)).encode()) {
+            Frame::Retry { id: Some(7), msg } => assert_eq!(msg, "queue full"),
+            f => panic!("expected Retry, got {f:?}"),
+        }
+
+        // summary
+        let report = CampaignReport::new();
+        assert!(matches!(classify_frame(&summary_frame(&report).encode()), Frame::Summary(_)));
+
+        // band reply — including when it arrives on a stream that
+        // expected campaign outcomes (the classifier types it; the
+        // dispatcher decides the misroute is fatal)
+        let d = BitMatrix::zeros(2, 2, Format::Fp32);
+        let reply = BandReply { id: 1, row0: 0, d: d.clone() };
+        let line = JsonValue::Obj(vec![("band".into(), band_reply_to_json(&reply))]).encode();
+        assert!(matches!(classify_frame(&line), Frame::Band(b) if b.id == 1));
+        // a malformed band body is garbage with the legacy reason prefix
+        let bad = r#"{"band":{"id":1}}"#;
+        assert!(matches!(
+            classify_frame(bad),
+            Frame::Garbage(msg) if msg.starts_with("bad band reply")
+        ));
+
+        // put round-trips addr + matrix; a torn put is garbage
+        let addr = "ff".repeat(16);
+        let f = classify_frame(&put_frame(&addr, &d).encode());
+        match f {
+            Frame::Put { addr: got, matrix } => {
+                assert_eq!(got, addr);
+                assert_eq!(matrix, d);
+            }
+            f => panic!("expected Put, got {f:?}"),
+        }
+        assert!(matches!(
+            classify_frame(r#"{"put":{"addr":"ff"}}"#),
+            Frame::Garbage(msg) if msg.starts_with("bad put frame")
+        ));
+
+        // need
+        let f = classify_frame(&need_frame(&addr).encode());
+        assert!(matches!(f, Frame::Need(got) if got == addr));
+        assert!(matches!(
+            classify_frame(r#"{"need":7}"#),
+            Frame::Garbage(msg) if msg.starts_with("bad need frame")
+        ));
+
+        // stats (both the request marker and the reply object)
+        assert!(matches!(classify_frame(r#"{"stats":{"hits":1}}"#), Frame::Stats(_)));
+
+        // garbage: unparseable, ok-without-outcome, and the fallthrough
+        assert!(matches!(
+            classify_frame("not json"),
+            Frame::Garbage(msg) if msg.starts_with("unparseable reply")
+        ));
+        assert!(matches!(
+            classify_frame(r#"{"ok":true}"#),
+            Frame::Garbage(msg) if msg == "ok reply without a valid outcome"
+        ));
+        assert!(matches!(
+            classify_frame(r#"{"unrelated":1}"#),
+            Frame::Garbage(msg)
+                if msg == "reply is neither outcome, error, band, nor summary"
+        ));
     }
 
     #[test]

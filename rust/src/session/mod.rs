@@ -44,6 +44,7 @@ pub mod json;
 pub mod net;
 pub mod serve;
 pub mod shard;
+pub mod work;
 
 pub use crate::error::ApiError;
 pub use faults::{ChaosPlan, ChaosTransport, ChaosWriter, Fault, FaultPlan};
@@ -55,6 +56,7 @@ pub use shard::{
     shard_campaign, PoolHandle, ProcessTransport, ServiceReply, ServiceRequest, ShardConfig,
     ShardPool, WorkerTransport,
 };
+pub use work::{operand_addr, OperandStore, WorkItem, WorkResult};
 
 use std::sync::{Arc, Mutex};
 
@@ -612,10 +614,12 @@ impl Session {
     }
 
     /// Arbitrary-shape GEMM scattered across child `simulate --stdin`
-    /// processes: the [`TiledGemm`] band plan becomes per-band requests
-    /// (B installed once per worker), and the gathered output is
-    /// bit-identical to [`Session::gemm`] because every child runs the
-    /// same per-band K-chain.
+    /// processes: the [`TiledGemm`] band plan becomes per-band
+    /// [`WorkItem`](crate::session::work::WorkItem)s referencing the B
+    /// operand by content address (published once per worker with a
+    /// `put` frame), and the gathered output is bit-identical to
+    /// [`Session::gemm`] because every child runs the same per-band
+    /// K-chain.
     pub fn shard_gemm(
         &self,
         a: &BitMatrix,

@@ -8,10 +8,16 @@
 //! [`JsonValue::canonical_encode`]) so any request spelling of the same
 //! job — reordered keys, client-chosen ids — lands on one entry.
 //!
+//! The same property holds for GEMM bands now that operands are
+//! content-addressed (`session::work`): a band is a pure function of
+//! `(pair, a, c, b-addr)`, so the cache stores both result kinds
+//! ([`CacheValue`]) under one keyspace.
+//!
 //! Entries live in a bounded in-memory map (FIFO eviction) and, when a
 //! `--cache-dir` is configured, as one content-addressed JSON artifact
-//! per outcome: `<fnv1a64><siphash24>.json` holding
-//! `{"key": <canonical job>, "outcome": <normalized outcome>}`. Artifacts
+//! per result: `<fnv1a64><siphash24>.json` holding
+//! `{"key": <canonical job>, "outcome": <normalized outcome>}` for jobs
+//! and `{"key": <canonical band>, "band_d": <matrix>}` for bands. Artifacts
 //! are written atomically (temp file + rename) at insert time, so the
 //! on-disk corpus is always whole — a server restart warm-loads it, and
 //! the directory is shareable between servers the way a campaign corpus
@@ -34,6 +40,7 @@ use std::sync::Mutex;
 
 use crate::coordinator::{Job, JobOutcome};
 use crate::error::ApiError;
+use crate::interface::BitMatrix;
 use crate::session::json::{self, JsonValue};
 
 // ---------------------------------------------------------------------------
@@ -132,8 +139,17 @@ pub fn content_hash(key: &str) -> String {
     format!("{:016x}{:016x}", fnv1a64(key.as_bytes()), siphash24(SIP_K0, SIP_K1, key.as_bytes()))
 }
 
+/// A memoized result: one of the two result kinds of `session::work`.
+/// Outcomes are stored id/timing-normalized; bands store only the output
+/// matrix (id and row0 are request bookkeeping the caller re-stamps).
+#[derive(Clone, Debug)]
+pub enum CacheValue {
+    Outcome(JobOutcome),
+    Band(BitMatrix),
+}
+
 struct CacheInner {
-    map: BTreeMap<String, JobOutcome>,
+    map: BTreeMap<String, CacheValue>,
     /// Insertion order for FIFO eviction.
     order: VecDeque<String>,
 }
@@ -197,7 +213,7 @@ impl ResultCache {
                 continue;
             };
             match decode_artifact(&text) {
-                Ok((key, outcome)) => {
+                Ok((key, value)) => {
                     let expect = format!("{}.json", content_hash(&key));
                     if !matches!(path.file_name(), Some(n) if n == expect.as_str()) {
                         eprintln!(
@@ -207,7 +223,7 @@ impl ResultCache {
                         let _ = std::fs::remove_file(&path);
                         continue;
                     }
-                    if inner.map.insert(key.clone(), outcome).is_none() {
+                    if inner.map.insert(key.clone(), value).is_none() {
                         inner.order.push_back(key);
                     }
                 }
@@ -220,10 +236,26 @@ impl ResultCache {
         Ok(())
     }
 
-    /// Look up a canonical key. The returned outcome is normalized
+    /// Look up a canonical job key. The returned outcome is normalized
     /// (`id = 0`, `micros = 0`); the caller re-stamps the connection-local
     /// id before emission.
     pub fn lookup(&self, key: &str) -> Option<JobOutcome> {
+        match self.lookup_value(key) {
+            Some(CacheValue::Outcome(o)) => Some(o),
+            _ => None,
+        }
+    }
+
+    /// Look up a canonical band key: the memoized output rows. The
+    /// caller re-stamps `id` and `row0` from the live request.
+    pub fn lookup_band(&self, key: &str) -> Option<BitMatrix> {
+        match self.lookup_value(key) {
+            Some(CacheValue::Band(d)) => Some(d),
+            _ => None,
+        }
+    }
+
+    fn lookup_value(&self, key: &str) -> Option<CacheValue> {
         if self.max_entries == 0 {
             return None;
         }
@@ -232,19 +264,31 @@ impl ResultCache {
 
     /// Memoize `outcome` under `key`, normalizing it first. Returns the
     /// number of entries FIFO-evicted from memory to stay within
-    /// `max_entries`. When a cache dir is configured the artifact is
-    /// written atomically before the lock is released; a failed write
-    /// degrades to memory-only with a stderr note (the cache is an
-    /// optimization — a full disk must not take the server down).
+    /// `max_entries`.
     pub fn insert(&self, key: &str, outcome: &JobOutcome) -> usize {
-        if self.max_entries == 0 {
-            return 0;
-        }
         let mut normalized = outcome.clone();
         normalized.id = 0;
         normalized.micros = 0;
+        self.insert_value(key, CacheValue::Outcome(normalized))
+    }
+
+    /// Memoize a band's output rows under `key`.
+    pub fn insert_band(&self, key: &str, d: &BitMatrix) -> usize {
+        self.insert_value(key, CacheValue::Band(d.clone()))
+    }
+
+    /// The shared insert path. Returns the number of entries
+    /// FIFO-evicted from memory to stay within `max_entries`. When a
+    /// cache dir is configured the artifact is written atomically before
+    /// the lock is released; a failed write degrades to memory-only with
+    /// a stderr note (the cache is an optimization — a full disk must
+    /// not take the server down).
+    fn insert_value(&self, key: &str, value: CacheValue) -> usize {
+        if self.max_entries == 0 {
+            return 0;
+        }
         let mut inner = self.inner.lock().expect("cache mutex poisoned");
-        if inner.map.insert(key.to_string(), normalized.clone()).is_some() {
+        if inner.map.insert(key.to_string(), value.clone()).is_some() {
             return 0; // refreshed an existing entry; artifact already on disk
         }
         inner.order.push_back(key.to_string());
@@ -258,7 +302,7 @@ impl ResultCache {
             }
         }
         if let Some(dir) = &self.dir {
-            if let Err(e) = write_artifact(dir, key, &normalized) {
+            if let Err(e) = write_artifact(dir, key, &value) {
                 eprintln!("serve: cache artifact write failed ({e}); continuing memory-only");
             }
         }
@@ -275,34 +319,43 @@ impl ResultCache {
     }
 }
 
-fn decode_artifact(text: &str) -> Result<(String, JobOutcome), ApiError> {
+fn decode_artifact(text: &str) -> Result<(String, CacheValue), ApiError> {
     let v = JsonValue::parse(text.trim())?;
     let key = v
         .get("key")
         .ok_or_else(|| ApiError::Json { offset: 0, msg: "artifact missing 'key'".into() })?
         .canonical_encode();
+    if let Some(d) = v.get("band_d") {
+        return Ok((key, CacheValue::Band(json::bitmatrix_from_json(d)?)));
+    }
     let outcome = v
         .get("outcome")
-        .ok_or_else(|| ApiError::Json { offset: 0, msg: "artifact missing 'outcome'".into() })
+        .ok_or_else(|| ApiError::Json {
+            offset: 0,
+            msg: "artifact missing 'outcome' or 'band_d'".into(),
+        })
         .and_then(json::outcome_from_json)?;
-    Ok((key, outcome))
+    Ok((key, CacheValue::Outcome(outcome)))
 }
 
-/// Write `{"key": ..., "outcome": ...}` to `<dir>/<hash>.json` via a
+/// Write `{"key": ..., "outcome": ...}` (jobs) or
+/// `{"key": ..., "band_d": ...}` (bands) to `<dir>/<hash>.json` via a
 /// temp file + rename, so readers (and warm loads after a crash) never
 /// see a torn artifact. Callers hold the cache mutex, which also makes
 /// the temp filename race-free within this process.
 fn write_artifact(
     dir: &std::path::Path,
     key: &str,
-    outcome: &JobOutcome,
+    value: &CacheValue,
 ) -> std::io::Result<()> {
     let key_value = JsonValue::parse(key)
         .map_err(|e| std::io::Error::other(format!("unencodable cache key: {e}")))?;
-    let artifact = JsonValue::Obj(vec![
-        ("key".into(), key_value),
-        ("outcome".into(), json::outcome_to_json(outcome)),
-    ]);
+    let payload = match value {
+        CacheValue::Outcome(o) => ("outcome", json::outcome_to_json(o)),
+        CacheValue::Band(d) => ("band_d", json::bitmatrix_to_json(d)),
+    };
+    let artifact =
+        JsonValue::Obj(vec![("key".into(), key_value), (payload.0.into(), payload.1)]);
     let name = format!("{}.json", content_hash(key));
     let tmp = dir.join(format!("{name}.tmp"));
     let fin = dir.join(&name);
@@ -442,6 +495,35 @@ mod tests {
         // a re-insert repopulates the slot the corrupt file vacated
         warm.insert(&bad, &outcome(2, 10));
         assert!(bad_path.exists(), "honest replacement artifact is persisted");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn band_results_share_the_cache_and_survive_a_warm_restart() {
+        use crate::formats::Format;
+        let dir = std::env::temp_dir().join(format!("mma-cache-band-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut d = BitMatrix::zeros(2, 3, Format::Fp32);
+        for (i, v) in d.data.iter_mut().enumerate() {
+            *v = (i as u64 + 1) * 0x3f80_0000;
+        }
+        // a band key is canonical JSON exactly like a job key — here any
+        // canonical document stands in for (pair, a, c, b-addr)
+        let key = r#"{"b":"00ff","pair":"sm75 HMMA.1688.F32.F16"}"#;
+        {
+            let cache = ResultCache::open(Some(dir.clone()), 8).unwrap();
+            assert!(cache.lookup_band(key).is_none());
+            cache.insert_band(key, &d);
+            assert_eq!(cache.lookup_band(key).unwrap(), d);
+            // kinds do not cross: a band entry is not a job outcome
+            assert!(cache.lookup(key).is_none());
+        }
+        let warm = ResultCache::open(Some(dir.clone()), 8).unwrap();
+        assert_eq!(
+            warm.lookup_band(key).expect("band artifact must warm-load"),
+            d,
+            "warm-loaded band bytes must be identical"
+        );
         let _ = std::fs::remove_dir_all(&dir);
     }
 }

@@ -37,6 +37,16 @@
 //! `{"stats": {...}}` counter snapshot, and `{"shutdown": true}` asks
 //! the whole server to drain: stop accepting, finish every in-flight
 //! job, emit each connection's summary, flush, and return cleanly.
+//!
+//! The unified work-item pipeline rides the same connections: a
+//! `{"put": {"addr":H,"matrix":M}}` frame publishes a content-addressed
+//! operand into the shared pool's [`OperandStore`] (hash-verified, no
+//! reply on success), `{"need": H}` asks the server to re-send a `put`
+//! it holds, and `{"band": {...}}` submits one GEMM band — validated
+//! against the store, answered in its reply slot, memoized under
+//! `--deterministic` exactly like job outcomes (keyed by the canonical
+//! band JSON minus `id`/`row0`, so a repeated band is a cache hit with
+//! zero pool submissions).
 
 pub mod cache;
 pub mod stats;
@@ -50,7 +60,7 @@ use std::net::{TcpListener, TcpStream};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::coordinator::CampaignReport;
@@ -59,8 +69,10 @@ use crate::session::fleet::{retry_frame_id, RetryPolicy};
 use crate::session::framing::{BoundedLine, BoundedLineReader};
 use crate::session::json::{self, JsonValue};
 use crate::session::shard::{
-    PoolHandle, ServiceReply, ShardConfig, ShardPool, WorkerRole, WorkerTransport,
+    BandReply, BandRequest, PoolHandle, ServiceReply, ShardConfig, ShardPool, WorkerRole,
+    WorkerTransport,
 };
+use crate::session::work::{OperandStore, WorkItem};
 
 /// How often connection loops wake from a blocked read to poll the
 /// shutdown flag and drain finished replies.
@@ -194,17 +206,17 @@ pub fn serve_tcp(
         // teardown stay on one thread; the transport only needs Sync, not
         // the pool). The handle comes back over a channel; if the channel
         // disconnects first, construction failed and the join tells us why.
-        let (handle_tx, handle_rx) = channel::<PoolHandle>();
+        let (handle_tx, handle_rx) = channel::<(PoolHandle, Arc<OperandStore>)>();
         let shard_cfg = cfg.shard.clone();
         let service = s.spawn(move || -> Result<(), ApiError> {
             let role = WorkerRole::Campaign { workers: shard_cfg.child_workers.max(1) };
             let pool = ShardPool::new(transport, role, &shard_cfg)?;
-            if handle_tx.send(pool.handle()).is_err() {
+            if handle_tx.send((pool.handle(), pool.operands())).is_err() {
                 return Ok(()); // server side already gone; nothing to serve
             }
             pool.run_service()
         });
-        let handle = match handle_rx.recv() {
+        let (handle, operands) = match handle_rx.recv() {
             Ok(handle) => handle,
             Err(_) => {
                 return match service.join() {
@@ -227,9 +239,10 @@ pub fn serve_tcp(
                     shared.stats.total_conns.fetch_add(1, Ordering::Relaxed);
                     shared.stats.active_conns.fetch_add(1, Ordering::Relaxed);
                     let conn_handle = handle.clone();
+                    let conn_operands = operands.clone();
                     let shared = &shared;
                     conns.push(s.spawn(move || {
-                        if let Err(e) = conn_loop(&stream, conn_handle, shared) {
+                        if let Err(e) = conn_loop(&stream, conn_handle, conn_operands, shared) {
                             eprintln!("serve: connection ended abnormally: {e}");
                         }
                         shared.stats.active_conns.fetch_sub(1, Ordering::Relaxed);
@@ -328,10 +341,15 @@ fn net_io(what: &str, e: std::io::Error) -> ApiError {
 /// Drive one client connection to completion. On any early error the
 /// in-flight gauge is still settled (outstanding replies are awaited or
 /// written off) so the global backpressure bound stays truthful.
-fn conn_loop(stream: &TcpStream, handle: PoolHandle, sh: &ServerShared) -> Result<(), ApiError> {
+fn conn_loop(
+    stream: &TcpStream,
+    handle: PoolHandle,
+    operands: Arc<OperandStore>,
+    sh: &ServerShared,
+) -> Result<(), ApiError> {
     let mut conn = ConnState::new();
     let (reply_tx, reply_rx) = channel::<ServiceReply>();
-    let res = conn_run(stream, &handle, sh, &mut conn, &reply_tx, &reply_rx);
+    let res = conn_run(stream, &handle, &operands, sh, &mut conn, &reply_tx, &reply_rx);
     drop(reply_tx);
     // Error-path gauge hygiene: jobs still pending will resolve inside
     // the pool regardless; wait for those replies (their lines are
@@ -341,6 +359,7 @@ fn conn_loop(stream: &TcpStream, handle: PoolHandle, sh: &ServerShared) -> Resul
             Ok(reply) => {
                 let id = match &reply {
                     ServiceReply::Outcome(o) => o.id,
+                    ServiceReply::Band(r) => r.id,
                     ServiceReply::Failed { id, .. } => *id,
                 };
                 if conn.pending.remove(&id).is_some() {
@@ -361,6 +380,7 @@ fn conn_loop(stream: &TcpStream, handle: PoolHandle, sh: &ServerShared) -> Resul
 fn conn_run(
     stream: &TcpStream,
     handle: &PoolHandle,
+    operands: &Arc<OperandStore>,
     sh: &ServerShared,
     conn: &mut ConnState,
     reply_tx: &Sender<ServiceReply>,
@@ -379,7 +399,7 @@ fn conn_run(
     while reading && !sh.shutdown.load(Ordering::SeqCst) {
         match reader.next_line() {
             Ok(Some(BoundedLine::Line(line))) => {
-                handle_line(&line, conn, sh, handle, reply_tx, &mut out)?;
+                handle_line(&line, conn, sh, handle, operands, reply_tx, &mut out)?;
             }
             Ok(Some(BoundedLine::Oversized { limit })) => {
                 NetStats::bump(&sh.stats.errors);
@@ -432,14 +452,16 @@ fn conn_run(
     Ok(())
 }
 
-/// Handle one complete input line: a job, a stats request, a shutdown
-/// request, or garbage — every reply-bearing case claims a reply slot so
-/// the output order is a pure function of the input order.
+/// Handle one complete input line: a job, a band, an operand `put` or
+/// `need`, a stats request, a shutdown request, or garbage — every
+/// reply-bearing case claims a reply slot so the output order is a pure
+/// function of the input order.
 fn handle_line(
     line: &str,
     conn: &mut ConnState,
     sh: &ServerShared,
     handle: &PoolHandle,
+    operands: &Arc<OperandStore>,
     reply_tx: &Sender<ServiceReply>,
     out: &mut impl Write,
 ) -> Result<(), ApiError> {
@@ -475,6 +497,35 @@ fn handle_line(
         ]);
         conn.ready.insert(seq, ack.encode());
         return Ok(());
+    }
+    if let Some(payload) = v.get("put") {
+        // like set_b before it, a successful put earns no reply (and no
+        // reply slot) — it is shared state, not a request
+        let res = json::put_from_json(payload)
+            .map_err(|e| e.to_string())
+            .and_then(|(addr, m)| operands.insert_at(&addr, m));
+        match res {
+            Ok(()) => NetStats::bump(&sh.stats.operand_puts),
+            Err(msg) => {
+                NetStats::bump(&sh.stats.errors);
+                let seq = conn.slot();
+                conn.ready.insert(seq, json::error_frame(&format!("put: {msg}"), None).encode());
+            }
+        }
+        return Ok(());
+    }
+    if let Some(addr) = v.get("need").and_then(|a| a.as_str()) {
+        NetStats::bump(&sh.stats.operand_needs);
+        let seq = conn.slot();
+        let line = match operands.get(addr) {
+            Some(m) => json::put_frame(addr, &m).encode(),
+            None => json::error_frame(&format!("unknown operand {addr}"), None).encode(),
+        };
+        conn.ready.insert(seq, line);
+        return Ok(());
+    }
+    if let Some(frame) = v.get("band") {
+        return handle_band(frame, conn, sh, handle, operands, reply_tx);
     }
     let job = match json::job_from_json(&v, conn.next_id) {
         Ok(job) => job,
@@ -525,6 +576,103 @@ fn handle_line(
     Ok(())
 }
 
+/// The canonical cache key of a band: its JSON encoding minus `id` and
+/// `row0` — both are request bookkeeping, not part of the band's
+/// mathematical identity `(pair, a, c, b-addr)`. A hit re-stamps both
+/// from the live request.
+fn band_cache_key(req: &BandRequest) -> String {
+    match json::band_request_to_json(req) {
+        JsonValue::Obj(fields) => JsonValue::Obj(
+            fields.into_iter().filter(|(k, _)| k != "id" && k != "row0").collect(),
+        )
+        .canonical_encode(),
+        other => other.canonical_encode(),
+    }
+}
+
+/// Handle one `{"band": ...}` submission: validate its pair and operand
+/// address against the shared store, answer from the result cache when
+/// deterministic, otherwise restamp to a global id and submit it to the
+/// pool like any other work item.
+fn handle_band(
+    frame: &JsonValue,
+    conn: &mut ConnState,
+    sh: &ServerShared,
+    handle: &PoolHandle,
+    operands: &Arc<OperandStore>,
+    reply_tx: &Sender<ServiceReply>,
+) -> Result<(), ApiError> {
+    NetStats::bump(&sh.stats.requests);
+    NetStats::bump(&sh.stats.gemm_items);
+    let id = frame.get("id").and_then(|i| i.as_u64());
+    let mut reject = |conn: &mut ConnState, msg: &str, id: Option<u64>| {
+        NetStats::bump(&sh.stats.errors);
+        let seq = conn.slot();
+        conn.ready.insert(seq, json::error_frame(msg, id).encode());
+    };
+    let req = match json::band_request_from_json(frame) {
+        Ok(req) => req,
+        Err(e) => {
+            reject(conn, &e.to_string(), id);
+            return Ok(());
+        }
+    };
+    if req.pair.as_deref().unwrap_or("").is_empty() {
+        reject(
+            conn,
+            "band names no pair; the service resolves instructions by '<arch> <instr>' pair",
+            Some(req.id),
+        );
+        return Ok(());
+    }
+    let Some(addr) = req.b.clone() else {
+        reject(conn, "band names no operand address; publish B with a put frame first", Some(req.id));
+        return Ok(());
+    };
+    if !operands.contains(&addr) {
+        reject(
+            conn,
+            &format!("unknown operand {addr}: publish it with a put frame first"),
+            Some(req.id),
+        );
+        return Ok(());
+    }
+    let local_id = req.id;
+    let seq = conn.slot();
+    let key = band_cache_key(&req);
+
+    if sh.deterministic {
+        if let Some(d) = sh.cache.lookup_band(&key) {
+            NetStats::bump(&sh.stats.hits);
+            let hit = BandReply { id: local_id, row0: req.row0, d };
+            let line = JsonValue::Obj(vec![("band".into(), json::band_reply_to_json(&hit))]);
+            conn.ready.insert(seq, line.encode());
+            return Ok(());
+        }
+        NetStats::bump(&sh.stats.misses);
+    }
+
+    if !sh.try_acquire() {
+        NetStats::bump(&sh.stats.rejected);
+        let msg =
+            format!("server saturated ({} jobs in flight); resubmit this band", sh.queue_depth);
+        conn.ready.insert(seq, json::retry_frame(&msg, Some(local_id)).encode());
+        return Ok(());
+    }
+    let gid = sh.next_global_id.fetch_add(1, Ordering::SeqCst);
+    let mut item = WorkItem::Band(Box::new(req));
+    item.set_id(gid);
+    conn.pending.insert(gid, Pending { seq, local_id, key });
+    NetStats::bump(&sh.stats.pool_submissions);
+    if let Err(e) = handle.submit_item(item, reply_tx.clone()) {
+        conn.pending.remove(&gid);
+        sh.release();
+        NetStats::bump(&sh.stats.errors);
+        conn.ready.insert(seq, json::error_frame(&e.to_string(), Some(local_id)).encode());
+    }
+    Ok(())
+}
+
 /// Absorb every reply that has already arrived, without blocking.
 fn drain_replies(conn: &mut ConnState, sh: &ServerShared, reply_rx: &Receiver<ServiceReply>) {
     while let Ok(reply) = reply_rx.try_recv() {
@@ -547,6 +695,17 @@ fn resolve(conn: &mut ConnState, sh: &ServerShared, reply: ServiceReply) {
             }
             conn.report.absorb(&o);
             conn.ready.insert(p.seq, json::outcome_frame(&o).encode());
+        }
+        ServiceReply::Band(mut r) => {
+            let Some(p) = conn.pending.remove(&r.id) else { return };
+            sh.release();
+            r.id = p.local_id;
+            if sh.deterministic {
+                let evicted = sh.cache.insert_band(&p.key, &r.d);
+                sh.stats.evictions.fetch_add(evicted as u64, Ordering::Relaxed);
+            }
+            let line = JsonValue::Obj(vec![("band".into(), json::band_reply_to_json(&r))]);
+            conn.ready.insert(p.seq, line.encode());
         }
         ServiceReply::Failed { id, msg, quarantined } => {
             let Some(p) = conn.pending.remove(&id) else { return };

@@ -28,11 +28,15 @@ use crate::session::json::JsonValue;
 /// - `errors`: malformed/oversized/unknown-pair frames answered with an
 ///   error frame;
 /// - `active_conns` / `total_conns`: live vs lifetime client connections;
-/// - `pool_submissions`: jobs actually forwarded to the shared
+/// - `pool_submissions`: work items actually forwarded to the shared
 ///   [`ShardPool`](crate::session::shard::ShardPool) — a warm cache run
-///   of an identical campaign must not move this;
-/// - `in_flight`: jobs currently submitted and unresolved (the gauge the
-///   global queue bound is enforced against).
+///   of an identical campaign (or repeated band) must not move this;
+/// - `in_flight`: items currently submitted and unresolved (the gauge
+///   the global queue bound is enforced against);
+/// - `gemm_items`: band requests received (a subset of `requests`);
+/// - `operand_puts` / `operand_needs`: operand-store traffic — `put`
+///   frames accepted into the server's store, and `need` re-send
+///   requests answered.
 #[derive(Default)]
 pub struct NetStats {
     pub requests: AtomicU64,
@@ -45,6 +49,9 @@ pub struct NetStats {
     pub total_conns: AtomicU64,
     pub pool_submissions: AtomicU64,
     pub in_flight: AtomicU64,
+    pub gemm_items: AtomicU64,
+    pub operand_puts: AtomicU64,
+    pub operand_needs: AtomicU64,
 }
 
 impl NetStats {
@@ -70,6 +77,9 @@ impl NetStats {
                 ("total_conns".into(), g(&self.total_conns)),
                 ("pool_submissions".into(), g(&self.pool_submissions)),
                 ("in_flight".into(), g(&self.in_flight)),
+                ("gemm_items".into(), g(&self.gemm_items)),
+                ("operand_puts".into(), g(&self.operand_puts)),
+                ("operand_needs".into(), g(&self.operand_needs)),
                 ("queue_depth".into(), JsonValue::u64(queue_depth as u64)),
                 ("cache_entries".into(), JsonValue::u64(cache_entries as u64)),
             ]),
@@ -81,7 +91,8 @@ impl NetStats {
         let g = |c: &AtomicU64| c.load(Ordering::Relaxed);
         format!(
             "serve: stats requests={} hits={} misses={} evictions={} rejected={} errors={} \
-             conns={}/{} pool_submissions={} in_flight={}/{} cache_entries={}",
+             conns={}/{} pool_submissions={} in_flight={}/{} gemm_items={} operand_puts={} \
+             operand_needs={} cache_entries={}",
             g(&self.requests),
             g(&self.hits),
             g(&self.misses),
@@ -93,6 +104,9 @@ impl NetStats {
             g(&self.pool_submissions),
             g(&self.in_flight),
             queue_depth,
+            g(&self.gemm_items),
+            g(&self.operand_puts),
+            g(&self.operand_needs),
             cache_entries,
         )
     }
@@ -109,6 +123,9 @@ mod tests {
         NetStats::bump(&stats.requests);
         NetStats::bump(&stats.hits);
         stats.in_flight.fetch_add(3, Ordering::Relaxed);
+        NetStats::bump(&stats.gemm_items);
+        NetStats::bump(&stats.operand_puts);
+        NetStats::bump(&stats.operand_needs);
         let frame = stats.frame(8, 5);
         let s = frame.get("stats").expect("stats object");
         let field = |name: &str| s.get(name).and_then(|v| v.as_u64()).unwrap();
@@ -116,11 +133,15 @@ mod tests {
         assert_eq!(field("hits"), 1);
         assert_eq!(field("misses"), 0);
         assert_eq!(field("in_flight"), 3);
+        assert_eq!(field("gemm_items"), 1);
+        assert_eq!(field("operand_puts"), 1);
+        assert_eq!(field("operand_needs"), 1);
         assert_eq!(field("queue_depth"), 8);
         assert_eq!(field("cache_entries"), 5);
 
         let line = stats.stderr_line(8, 5);
         assert!(line.contains("requests=2"), "{line}");
         assert!(line.contains("in_flight=3/8"), "{line}");
+        assert!(line.contains("operand_puts=1"), "{line}");
     }
 }

@@ -19,6 +19,16 @@
 //!   shard parent can account for the job instead of waiting forever;
 //! - summary: `{"summary": {...}}` once, after end of input.
 //!
+//! The same stream also carries the GEMM half of the unified work-item
+//! pipeline: `{"put": {"addr":H,"matrix":M}}` publishes a
+//! content-addressed operand into the worker's bounded memo (no reply on
+//! success), and `{"band": {"id":N,"row0":R,"pair":P,"b":H,...}}` runs
+//! one GEMM band on a lazily built single-threaded session for pair `P`,
+//! replying `{"band": {...}}`. A band whose operand is missing — never
+//! put, or evicted from the [`WORKER_OPERAND_MEMO`]-bounded memo — emits
+//! `{"need": H}` and parks until the re-`put` arrives, so a campaign
+//! worker doubles as a GEMM worker with no stateful prelude.
+//!
 //! This is the cross-process sharding seam: a parent process spawns one
 //! `mma-sim serve --jsonl` child per shard, partitions jobs over their
 //! stdins, and merges the summary lines with
@@ -30,15 +40,87 @@
 //! threads via [`Coordinator::shutdown`]; the service never strands
 //! in-flight jobs or leaks threads.
 
-use std::collections::BTreeSet;
+use std::collections::{BTreeMap, BTreeSet};
 use std::io::{BufRead, Write};
+use std::sync::Arc;
 
 use crate::coordinator::{CampaignReport, Coordinator, JobOutcome, VerifyPair};
+use crate::interface::BitMatrix;
 use crate::session::framing::{read_bounded_line, BoundedLine};
 use crate::session::json::{self, JsonValue};
+use crate::session::work::{BandRequest, OperandStore};
 use crate::util::error::Result;
 
 pub use crate::session::framing::DEFAULT_MAX_LINE_BYTES;
+
+/// Bound of the worker-side operand memo: how many distinct `put`
+/// operands a worker keeps before FIFO eviction. An evicted (or
+/// never-received) operand is re-fetched with a `{"need": addr}` frame,
+/// so the bound trades worker memory for an extra round-trip.
+pub const WORKER_OPERAND_MEMO: usize = 16;
+
+/// What [`BandServer::lookup`] decided about one band request.
+enum BandLookup {
+    /// The referenced operand is in the memo.
+    Ready(Box<BandRequest>, Arc<BitMatrix>),
+    /// The band names no operand address — the caller's legacy shared-B
+    /// (`set_b`) fallback applies, if it has one.
+    Shared(Box<BandRequest>),
+    /// The operand is missing: the band was parked and the caller must
+    /// emit `{"need": addr}`; the parent's re-`put` releases it.
+    Need(String),
+}
+
+/// Worker-side half of the content-addressed operand protocol, shared by
+/// the case stream ([`serve_cases`]) and the campaign service
+/// ([`serve_jsonl`]): a bounded operand memo fed by `put` frames, and a
+/// parking lot for bands that arrived before their operand (or after its
+/// eviction) — they run, in arrival order, when the re-`put` lands.
+struct BandServer {
+    store: OperandStore,
+    parked: Vec<(String, Box<BandRequest>)>,
+}
+
+impl BandServer {
+    fn new() -> Self {
+        Self { store: OperandStore::bounded(WORKER_OPERAND_MEMO), parked: Vec::new() }
+    }
+
+    /// Install a `put` frame's payload (hash-verified) and return the
+    /// parked bands it unblocks, in arrival order.
+    fn on_put(&mut self, payload: &JsonValue) -> std::result::Result<Vec<Box<BandRequest>>, String> {
+        let (addr, m) = json::put_from_json(payload).map_err(|e| e.to_string())?;
+        self.store.insert_at(&addr, m)?;
+        let mut ready = Vec::new();
+        let mut still = Vec::new();
+        for (a, req) in self.parked.drain(..) {
+            if a == addr {
+                ready.push(req);
+            } else {
+                still.push((a, req));
+            }
+        }
+        self.parked = still;
+        Ok(ready)
+    }
+
+    /// Resolve a band's operand from the memo, parking it on a miss.
+    fn lookup(&mut self, req: Box<BandRequest>) -> BandLookup {
+        let Some(addr) = req.b.clone() else { return BandLookup::Shared(req) };
+        match self.store.get(&addr) {
+            Some(m) => BandLookup::Ready(req, m),
+            None => {
+                self.parked.push((addr.clone(), req));
+                BandLookup::Need(addr)
+            }
+        }
+    }
+
+    /// The memo copy of `addr`, for running a just-unblocked parked band.
+    fn operand(&self, addr: &str) -> Option<Arc<BitMatrix>> {
+        self.store.get(addr)
+    }
+}
 
 /// Pool sizing for the serve loop.
 #[derive(Clone, Copy, Debug)]
@@ -105,6 +187,56 @@ fn emit_error(out: &mut dyn Write, msg: &str, id: Option<u64>) -> Result<()> {
     Ok(())
 }
 
+/// Build the single-threaded session a service-mode band executes on,
+/// resolved from its `"<arch> <instr>"` pair.
+fn build_band_session(pair: &str) -> std::result::Result<crate::session::Session, String> {
+    let mut parts = pair.split_whitespace();
+    match (parts.next(), parts.next(), parts.next()) {
+        (Some(arch), Some(instr), None) => crate::session::SessionBuilder::new()
+            .arch_named(arch)
+            .instruction(instr)
+            .threads(1)
+            .build()
+            .map_err(|e| format!("band pair '{pair}': {e}")),
+        _ => Err(format!("band pair '{pair}' is not of the form '<arch> <instr>'")),
+    }
+}
+
+/// Execute one service-mode band on the (lazily built, memoized) session
+/// for its pair and emit the reply — or an addressed `ok:false` error.
+fn service_band(
+    sessions: &mut BTreeMap<String, crate::session::Session>,
+    req: &BandRequest,
+    b: &BitMatrix,
+    out: &mut dyn Write,
+) -> Result<()> {
+    let pair = req.pair.as_deref().unwrap_or_default();
+    if pair.is_empty() {
+        return emit_error(
+            out,
+            "band names no pair; the service resolves instructions by '<arch> <instr>' pair",
+            Some(req.id),
+        );
+    }
+    if !sessions.contains_key(pair) {
+        match build_band_session(pair) {
+            Ok(s) => {
+                sessions.insert(pair.to_string(), s);
+            }
+            Err(msg) => return emit_error(out, &msg, Some(req.id)),
+        }
+    }
+    match sessions[pair].run_band(req, b) {
+        Ok(reply) => {
+            let line = JsonValue::Obj(vec![("band".into(), json::band_reply_to_json(&reply))]);
+            writeln!(out, "{}", line.encode())?;
+            out.flush()?;
+        }
+        Err(e) => emit_error(out, &e.to_string(), Some(req.id))?,
+    }
+    Ok(())
+}
+
 /// Submission/collection progress, shared between the serve loop and the
 /// cleanup path so an early return knows exactly how many outcomes are
 /// still owed by the pool.
@@ -129,6 +261,8 @@ fn serve_loop(
     st: &mut ServeProgress,
 ) -> Result<()> {
     let mut next_id = 0u64;
+    let mut bands = BandServer::new();
+    let mut band_sessions: BTreeMap<String, crate::session::Session> = BTreeMap::new();
     while let Some(bounded) = read_bounded_line(&mut input, line_cap)? {
         let line = match bounded {
             BoundedLine::Line(line) => line,
@@ -145,8 +279,51 @@ fn serve_loop(
         if trimmed.is_empty() {
             continue;
         }
-        let job = JsonValue::parse(trimmed).and_then(|v| json::job_from_json(&v, next_id));
-        let job = match job {
+        let v = match JsonValue::parse(trimmed) {
+            Ok(v) => v,
+            Err(e) => {
+                emit_error(out, &e.to_string(), None)?;
+                continue;
+            }
+        };
+        // Operand publications and GEMM bands ride the same stream as
+        // verification jobs (the unified work-item pipeline). Bands run
+        // synchronously — the parent pool bounds its own in-flight count,
+        // so a band never races a queued job for the reply stream.
+        if let Some(payload) = v.get("put") {
+            match bands.on_put(payload) {
+                Ok(ready) => {
+                    for req in ready {
+                        let Some(b) = req.b.as_deref().and_then(|a| bands.operand(a)) else {
+                            continue;
+                        };
+                        service_band(&mut band_sessions, &req, &b, out)?;
+                    }
+                }
+                Err(msg) => emit_error(out, &format!("put: {msg}"), None)?,
+            }
+            continue;
+        }
+        if let Some(frame) = v.get("band") {
+            let id = frame.get("id").and_then(|i| i.as_u64());
+            match json::band_request_from_json(frame) {
+                Ok(req) => match bands.lookup(Box::new(req)) {
+                    BandLookup::Ready(req, b) => service_band(&mut band_sessions, &req, &b, out)?,
+                    BandLookup::Shared(req) => emit_error(
+                        out,
+                        "band names no operand address; publish B with a put frame first",
+                        Some(req.id),
+                    )?,
+                    BandLookup::Need(addr) => {
+                        writeln!(out, "{}", json::need_frame(&addr).encode())?;
+                        out.flush()?;
+                    }
+                },
+                Err(e) => emit_error(out, &e.to_string(), id)?,
+            }
+            continue;
+        }
+        let job = match json::job_from_json(&v, next_id) {
             Ok(job) => job,
             Err(e) => {
                 emit_error(out, &e.to_string(), None)?;
@@ -250,16 +427,40 @@ fn emit_case_error(out: &mut dyn Write, msg: &str, id: Option<u64>) -> Result<()
     Ok(())
 }
 
+/// Run one case-stream band and emit its reply (or an addressed error).
+fn case_band(
+    session: &crate::session::Session,
+    req: &BandRequest,
+    b: &BitMatrix,
+    out: &mut dyn Write,
+) -> Result<()> {
+    match session.run_band(req, b) {
+        Ok(reply) => {
+            let line = JsonValue::Obj(vec![("band".into(), json::band_reply_to_json(&reply))]);
+            writeln!(out, "{}", line.encode())?;
+            out.flush()?;
+        }
+        Err(e) => emit_case_error(out, &e.to_string(), Some(req.id))?,
+    }
+    Ok(())
+}
+
 /// The `mma-sim simulate --stdin` stream loop — the per-case sharding
 /// seam, one reply line per input frame:
 ///
 /// - a plain [`MmaCase`](crate::interface::MmaCase) object runs through
 ///   [`Session::run`] and replies with a `RunOutput` line;
-/// - `{"set_b": <matrix>}` installs the shared GEMM operand B for
-///   subsequent band frames (no reply);
-/// - `{"band": {"id":N,"row0":R,"a":M,"c":M}}` executes that band's
-///   K-chain against the installed B via [`Session::run_band`] and
-///   replies `{"band": {"id":N,"row0":R,"d":M}}`.
+/// - `{"put": {"addr":H,"matrix":M}}` installs matrix `M` in the
+///   worker's bounded content-addressed operand memo (hash-verified
+///   against `H`; no reply on success) and releases any bands parked on
+///   that address;
+/// - `{"band": {"id":N,"row0":R,"b":H?,"a":M,"c":M}}` executes that
+///   band's K-chain via [`Session::run_band`] and replies
+///   `{"band": {"id":N,"row0":R,"d":M}}`. With an operand address `b`,
+///   the B matrix comes from the memo — a miss (never put, or evicted)
+///   emits `{"need": H}` and parks the band until the re-`put` lands.
+///   Without an address, the legacy `set_b` shared operand applies;
+/// - `{"set_b": <matrix>}` installs that legacy shared B (no reply).
 ///
 /// Malformed or failing frames reply `{"error": "...", "id": N?}` (the
 /// id is included whenever the frame carried one, so a shard parent can
@@ -282,7 +483,8 @@ pub fn serve_cases_capped(
     max_line_bytes: usize,
 ) -> Result<()> {
     let cap = if max_line_bytes > 0 { max_line_bytes } else { DEFAULT_MAX_LINE_BYTES };
-    let mut b_shared: Option<crate::interface::BitMatrix> = None;
+    let mut b_shared: Option<BitMatrix> = None;
+    let mut bands = BandServer::new();
     while let Some(bounded) = read_bounded_line(&mut input, cap)? {
         let line = match bounded {
             BoundedLine::Line(line) => line,
@@ -313,22 +515,39 @@ pub fn serve_cases_capped(
             }
             continue;
         }
+        if let Some(payload) = v.get("put") {
+            match bands.on_put(payload) {
+                Ok(ready) => {
+                    for req in ready {
+                        let Some(b) = req.b.as_deref().and_then(|a| bands.operand(a)) else {
+                            continue;
+                        };
+                        case_band(session, &req, &b, out)?;
+                    }
+                }
+                Err(msg) => emit_case_error(out, &format!("put: {msg}"), None)?,
+            }
+            continue;
+        }
         if let Some(frame) = v.get("band") {
             // pull the id out first so even a failing band is addressable
             let id = frame.get("id").and_then(|i| i.as_u64());
-            let res = json::band_request_from_json(frame).and_then(|req| {
-                let b = b_shared.as_ref().ok_or_else(|| crate::error::ApiError::Shard {
-                    detail: "no B operand installed (send a set_b frame first)".into(),
-                })?;
-                session.run_band(&req, b)
-            });
-            match res {
-                Ok(reply) => {
-                    let line =
-                        JsonValue::Obj(vec![("band".into(), json::band_reply_to_json(&reply))]);
-                    writeln!(out, "{}", line.encode())?;
-                    out.flush()?;
-                }
+            match json::band_request_from_json(frame) {
+                Ok(req) => match bands.lookup(Box::new(req)) {
+                    BandLookup::Ready(req, b) => case_band(session, &req, &b, out)?,
+                    BandLookup::Shared(req) => match b_shared.as_ref() {
+                        Some(b) => case_band(session, &req, b, out)?,
+                        None => emit_case_error(
+                            out,
+                            "no B operand installed (publish one with a put frame or send set_b)",
+                            Some(req.id),
+                        )?,
+                    },
+                    BandLookup::Need(addr) => {
+                        writeln!(out, "{}", json::need_frame(&addr).encode())?;
+                        out.flush()?;
+                    }
+                },
                 Err(e) => emit_case_error(out, &e.to_string(), id)?,
             }
             continue;
@@ -563,5 +782,169 @@ mod tests {
         let msg = first.get("error").and_then(|e| e.as_str()).unwrap_or_default();
         assert!(msg.contains("128-byte frame cap"), "{msg}");
         assert!(JsonValue::parse(lines[1]).unwrap().get("error").is_some());
+    }
+
+    // -- content-addressed operand protocol (put / need / addressed bands) --
+
+    const GEMM_PAIR: &str = "sm75 HMMA.1688.F32.F16";
+
+    fn gemm_session() -> crate::session::Session {
+        crate::session::SessionBuilder::new()
+            .arch_named("sm75")
+            .instruction("HMMA.1688.F32.F16")
+            .threads(1)
+            .build()
+            .unwrap()
+    }
+
+    /// One 16-row band (A, C) plus its 16x16 B operand, filled from the
+    /// seeded RNG in the session's operand formats.
+    fn band_fixture(seed: u64) -> (crate::session::Session, BandRequest, BitMatrix) {
+        let session = gemm_session();
+        let fmts = session.formats();
+        let mut rng = crate::util::Rng::new(seed);
+        let (m, k, n) = (16, 16, 16);
+        let mut a = BitMatrix::zeros(m, k, fmts.a);
+        let mut b = BitMatrix::zeros(k, n, fmts.b);
+        let mut c = BitMatrix::zeros(m, n, fmts.c);
+        for v in a.data.iter_mut() {
+            *v = fmts.a.from_f64(rng.normal());
+        }
+        for v in b.data.iter_mut() {
+            *v = fmts.b.from_f64(rng.normal());
+        }
+        for v in c.data.iter_mut() {
+            *v = fmts.c.from_f64(rng.normal());
+        }
+        let req = BandRequest { id: 7, row0: 32, pair: None, b: None, a, c };
+        (session, req, b)
+    }
+
+    fn band_line(req: &BandRequest) -> String {
+        JsonValue::Obj(vec![("band".into(), json::band_request_to_json(req))]).encode()
+    }
+
+    #[test]
+    fn addressed_bands_park_on_need_and_survive_memo_eviction() {
+        use crate::session::work::operand_addr;
+        let (session, mut req, b) = band_fixture(11);
+        let addr = operand_addr(&b);
+        req.b = Some(addr.clone());
+        let want = session.run_band(&req, &b).unwrap();
+        let put = json::put_frame(&addr, &b).encode();
+
+        // 16 distinct filler operands — enough to evict `addr` from the
+        // WORKER_OPERAND_MEMO-bounded memo once it has been installed
+        let fillers: String = (0..WORKER_OPERAND_MEMO as u64)
+            .map(|i| {
+                let mut m = BitMatrix::zeros(1, 1, Format::Fp32);
+                m.data[0] = i + 1;
+                format!("{}\n", json::put_frame(&operand_addr(&m), &m).encode())
+            })
+            .collect();
+
+        // band before its put -> need + park; put -> parked band runs;
+        // fillers evict it; same band again -> need again; re-put -> runs
+        let band = band_line(&req);
+        let input = format!("{band}\n{put}\n{fillers}{band}\n{put}\n");
+        let mut out = Vec::new();
+        serve_cases(&session, input.as_bytes(), &mut out).unwrap();
+
+        let text = String::from_utf8(out).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 4, "need, band, need, band: {text}");
+        for i in [0usize, 2] {
+            let v = JsonValue::parse(lines[i]).unwrap();
+            assert_eq!(v.get("need").and_then(|n| n.as_str()), Some(addr.as_str()), "{text}");
+        }
+        for i in [1usize, 3] {
+            let v = JsonValue::parse(lines[i]).unwrap();
+            let reply = json::band_reply_from_json(v.get("band").unwrap()).unwrap();
+            assert_eq!(reply.id, want.id);
+            assert_eq!(reply.row0, want.row0);
+            assert_eq!(reply.d, want.d, "parked band must run bit-identically");
+        }
+    }
+
+    #[test]
+    fn hash_mismatched_put_is_rejected_and_installs_nothing() {
+        use crate::session::work::operand_addr;
+        let (session, mut req, b) = band_fixture(12);
+        let addr = operand_addr(&b);
+        req.b = Some(addr.clone());
+        let forged = json::put_frame(&"0".repeat(32), &b).encode();
+        let input = format!("{forged}\n{}\n", band_line(&req));
+        let mut out = Vec::new();
+        serve_cases(&session, input.as_bytes(), &mut out).unwrap();
+
+        let text = String::from_utf8(out).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2, "put error + need: {text}");
+        let err = JsonValue::parse(lines[0]).unwrap();
+        let msg = err.get("error").and_then(|e| e.as_str()).unwrap_or_default();
+        assert!(msg.contains("hash") && msg.contains(addr.as_str()), "{msg}");
+        // the forged operand must not have been installed under either
+        // address: the honest band still has to ask for its operand
+        let need = JsonValue::parse(lines[1]).unwrap();
+        assert_eq!(need.get("need").and_then(|n| n.as_str()), Some(addr.as_str()));
+    }
+
+    #[test]
+    fn service_mode_executes_addressed_bands_alongside_jobs() {
+        use crate::session::work::operand_addr;
+        let (session, mut req, b) = band_fixture(13);
+        let addr = operand_addr(&b);
+        req.b = Some(addr.clone());
+        req.pair = Some(GEMM_PAIR.into());
+        let want = session.run_band(&req, &b).unwrap();
+
+        let input = format!(
+            "{}\n{}\n{{\"pair\":\"clean\",\"batch\":10,\"seed\":5}}\n",
+            json::put_frame(&addr, &b).encode(),
+            band_line(&req),
+        );
+        let mut out = Vec::new();
+        let cfg = ServeConfig { workers: 1, deterministic: true, ..ServeConfig::default() };
+        let report = serve_jsonl(pairs(), &cfg, input.as_bytes(), &mut out).unwrap();
+        assert_eq!(report.total_jobs, 1, "the verification job still ran");
+
+        let text = String::from_utf8(out).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 3, "band + outcome + summary: {text}");
+        let reply = JsonValue::parse(lines[0]).unwrap();
+        let reply = json::band_reply_from_json(reply.get("band").unwrap()).unwrap();
+        assert_eq!((reply.id, reply.row0), (want.id, want.row0));
+        assert_eq!(reply.d, want.d, "service band must match the in-process band");
+        assert!(JsonValue::parse(lines[1]).unwrap().get("outcome").is_some());
+        assert!(JsonValue::parse(lines[2]).unwrap().get("summary").is_some());
+    }
+
+    #[test]
+    fn service_band_without_pair_or_operand_address_is_an_addressed_error() {
+        use crate::session::work::operand_addr;
+        let (_, mut req, b) = band_fixture(14);
+        // no operand address at all -> addressed error (no set_b in service mode)
+        req.pair = Some(GEMM_PAIR.into());
+        let no_addr = band_line(&req);
+        // operand published, but the band names no pair -> addressed error
+        let addr = operand_addr(&b);
+        req.b = Some(addr.clone());
+        req.pair = None;
+        let no_pair = band_line(&req);
+        let input = format!("{no_addr}\n{}\n{no_pair}\n", json::put_frame(&addr, &b).encode());
+
+        let mut out = Vec::new();
+        let cfg = ServeConfig { workers: 1, deterministic: true, ..ServeConfig::default() };
+        serve_jsonl(pairs(), &cfg, input.as_bytes(), &mut out).unwrap();
+        let text = String::from_utf8(out).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 3, "2 errors + summary: {text}");
+        for (line, needle) in [(lines[0], "operand address"), (lines[1], "pair")] {
+            let v = JsonValue::parse(line).unwrap();
+            assert_eq!(v.get("ok").and_then(|o| o.as_bool()), Some(false), "{text}");
+            assert_eq!(v.get("id").and_then(|i| i.as_u64()), Some(req.id), "{text}");
+            let msg = v.get("error").and_then(|e| e.as_str()).unwrap_or_default();
+            assert!(msg.contains(needle), "{msg}");
+        }
     }
 }

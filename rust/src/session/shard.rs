@@ -19,17 +19,28 @@
 //! - **GEMM** ([`ShardPool::run_gemm`], via
 //!   [`Session::shard_gemm`](crate::session::Session::shard_gemm)): the
 //!   [`TiledGemm`](crate::gemm::TiledGemm) band plan
-//!   ([`gemm::band_groups`](crate::gemm::band_groups)) becomes per-band
-//!   requests over `simulate --stdin` children — B is installed once per
-//!   worker with a `{"set_b": M}` frame, each `{"band": {...}}` request
-//!   carries only its rows of A and C, and the gathered output is
-//!   bit-identical to the in-process engine because each child runs the
-//!   very same K-chain code on its band.
+//!   ([`gemm::band_plan`](crate::gemm::band_plan)) becomes per-band
+//!   requests — B is published once per worker as a content-addressed
+//!   `{"put": {"addr": H, "matrix": M}}` frame
+//!   ([`OperandStore`](crate::session::work::OperandStore)), each
+//!   `{"band": {...}}` request references it by address and carries only
+//!   its rows of A and C, and the gathered output is bit-identical to
+//!   the in-process engine because each worker runs the very same
+//!   K-chain code on its band.
+//!
+//! Both drivers are the same engine: [`run_campaign`] and [`run_gemm`]
+//! are thin wrappers that turn their inputs into
+//! [`WorkItem`](crate::session::work::WorkItem)s and plug a kind-specific
+//! `WorkSink` (ordered line emission vs. band gathering) into one
+//! dispatch/requeue/quarantine pipeline loop.
 //!
 //! A dying child does not kill the run: its unanswered work is requeued
-//! onto surviving workers (or a respawned replacement, with the prelude
-//! frames replayed), and every exit path — including errors — kills,
-//! joins, and reaps all children and reader threads.
+//! onto surviving workers (or a respawned replacement, which re-receives
+//! any operand `put` on first dispatch), and every exit path — including
+//! errors — kills, joins, and reaps all children and reader threads.
+//!
+//! [`run_campaign`]: ShardPool::run_campaign
+//! [`run_gemm`]: ShardPool::run_gemm
 //!
 //! The pool is also hardened against the *unclean* failures:
 //!
@@ -71,32 +82,11 @@ use crate::gemm;
 use crate::interface::BitMatrix;
 use crate::session::faults::ChaosPlan;
 use crate::session::json::{self, JsonValue};
+use crate::session::work::{ItemKind, OperandStore, WorkItem, WorkResult};
 
-// ---------------------------------------------------------------------------
-// band wire types
-// ---------------------------------------------------------------------------
-
-/// One sharded-GEMM work unit: a contiguous span of row bands. The shared
-/// operand B is installed separately (a `{"set_b": M}` frame), so the
-/// request carries only the band's rows of A and its accumulator rows C.
-#[derive(Clone, Debug, PartialEq)]
-pub struct BandRequest {
-    pub id: u64,
-    /// First output row this band covers.
-    pub row0: usize,
-    /// The band's rows of A (`rows × K`).
-    pub a: BitMatrix,
-    /// The band's rows of C (`rows × N`).
-    pub c: BitMatrix,
-}
-
-/// A completed band: the output rows to gather at `row0`.
-#[derive(Clone, Debug, PartialEq)]
-pub struct BandReply {
-    pub id: u64,
-    pub row0: usize,
-    pub d: BitMatrix,
-}
+// The band wire types moved to the unified work-item model; re-exported
+// here so existing `shard::BandRequest` paths keep resolving.
+pub use crate::session::work::{BandReply, BandRequest};
 
 // ---------------------------------------------------------------------------
 // transports
@@ -307,41 +297,34 @@ enum Reply {
     Error { id: Option<u64>, msg: String },
     Summary(CampaignReport),
     Band(Box<BandReply>),
+    /// The worker is missing a referenced operand and asks for its `put`
+    /// to be re-sent.
+    Need(String),
     /// A line that is not part of the protocol — the child is broken.
     Garbage(String),
     /// The child's output closed (clean exit or a crash).
     Eof,
 }
 
+/// Decode one child line through the shared classifier
+/// ([`json::classify_frame`]) into the pool's reply vocabulary. Frames a
+/// worker has no business sending (puts, stats, retry-only frames)
+/// collapse to the same verdicts the pre-classifier decoder produced.
 fn parse_reply(line: &str) -> Reply {
-    let v = match JsonValue::parse(line) {
-        Ok(v) => v,
-        Err(e) => return Reply::Garbage(format!("unparseable reply ({e})")),
-    };
-    if let Some(s) = v.get("summary") {
-        return match json::report_from_json(s) {
-            Ok(r) => Reply::Summary(r),
-            Err(e) => Reply::Garbage(format!("bad summary ({e})")),
-        };
-    }
-    if let Some(b) = v.get("band") {
-        return match json::band_reply_from_json(b) {
-            Ok(r) => Reply::Band(Box::new(r)),
-            Err(e) => Reply::Garbage(format!("bad band reply ({e})")),
-        };
-    }
-    if v.get("ok").and_then(|b| b.as_bool()) == Some(true) {
-        return match v.get("outcome").map(json::outcome_from_json) {
-            Some(Ok(o)) => Reply::Outcome(o),
-            _ => Reply::Garbage("ok reply without a valid outcome".into()),
-        };
-    }
-    match v.get("error").and_then(|e| e.as_str()) {
-        Some(msg) => Reply::Error {
-            id: v.get("id").and_then(|i| i.as_u64()),
-            msg: msg.to_string(),
-        },
-        None => Reply::Garbage("reply is neither outcome, error, band, nor summary".into()),
+    match json::classify_frame(line) {
+        json::Frame::Outcome(o) => Reply::Outcome(o),
+        json::Frame::Error { id, msg } => Reply::Error { id, msg },
+        // a retry frame carries an error string, so the legacy decoder
+        // classified it as a plain addressed error; keep that verdict
+        json::Frame::Retry { id, msg } => Reply::Error { id, msg },
+        json::Frame::Summary(r) => Reply::Summary(r),
+        json::Frame::Band(b) => Reply::Band(b),
+        json::Frame::Need(addr) => Reply::Need(addr),
+        json::Frame::Put { .. } => Reply::Garbage("unexpected put frame from a worker".into()),
+        json::Frame::Stats(_) => {
+            Reply::Garbage("reply is neither outcome, error, band, nor summary".into())
+        }
+        json::Frame::Garbage(what) => Reply::Garbage(what),
     }
 }
 
@@ -360,23 +343,27 @@ enum PoolMsg {
     Shutdown,
 }
 
-/// How the pool resolved one service-mode job.
+/// How the pool resolved one service-mode work item.
 pub enum ServiceReply {
-    /// The job completed. The outcome carries the submitted (global) id
-    /// and the child's raw timing — the caller owns any local-id rewrite
-    /// and deterministic zeroing.
+    /// A verification job completed. The outcome carries the submitted
+    /// (global) id and the child's raw timing — the caller owns any
+    /// local-id rewrite and deterministic zeroing.
     Outcome(JobOutcome),
-    /// The job failed terminally: a child-side rejection, a quarantine
-    /// verdict (`quarantined: true`), or pool shutdown. Never retried by
-    /// the pool; the caller decides whether to resubmit.
+    /// A GEMM band completed.
+    Band(Box<BandReply>),
+    /// The item failed terminally: a child-side rejection, a quarantine
+    /// verdict (`quarantined: true`), an unpublished operand reference,
+    /// or pool shutdown. Never retried by the pool; the caller decides
+    /// whether to resubmit.
     Failed { id: u64, msg: String, quarantined: bool },
 }
 
-/// One service-mode submission: a job plus the channel its resolution
-/// comes back on. Each caller brings its own reply channel, so many
-/// connections can share one pool without demultiplexing replies.
+/// One service-mode submission: a work item plus the channel its
+/// resolution comes back on. Each caller brings its own reply channel,
+/// so many connections can share one pool without demultiplexing
+/// replies.
 pub struct ServiceRequest {
-    pub job: Job,
+    pub item: WorkItem,
     pub reply: Sender<ServiceReply>,
 }
 
@@ -389,17 +376,235 @@ pub struct PoolHandle {
 }
 
 impl PoolHandle {
-    /// Submit one job; its resolution arrives on `reply`. Errors only if
-    /// the service loop is gone entirely.
+    /// Submit one verification job; its resolution arrives on `reply`.
+    /// Errors only if the service loop is gone entirely.
     pub fn submit(&self, job: Job, reply: Sender<ServiceReply>) -> Result<(), ApiError> {
+        self.submit_item(WorkItem::Verify(job), reply)
+    }
+
+    /// Submit any work item (a job or a band). A band must reference an
+    /// operand already published into the pool's [`OperandStore`]
+    /// ([`ShardPool::operands`]); an unknown address resolves as a
+    /// `Failed` reply rather than hanging.
+    pub fn submit_item(&self, item: WorkItem, reply: Sender<ServiceReply>) -> Result<(), ApiError> {
         self.tx
-            .send(PoolMsg::Service(ServiceRequest { job, reply }))
+            .send(PoolMsg::Service(ServiceRequest { item, reply }))
             .map_err(|_| ApiError::PoolStopped { during: "service submit" })
     }
 
     /// Ask the service loop to finish outstanding work and exit.
     pub fn shutdown(&self) {
         let _ = self.tx.send(PoolMsg::Shutdown);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// the unified pipeline engine
+// ---------------------------------------------------------------------------
+
+/// Mutable bookkeeping of one pipeline run: what is waiting, what is on
+/// a worker, and which ids have not resolved yet.
+struct PipelineState {
+    queue: VecDeque<WorkItem>,
+    /// Items currently owned by some worker, by id — the requeue source
+    /// and the stolen-duplicate dedup key.
+    assigned: BTreeMap<u64, WorkItem>,
+    /// Ids not yet resolved; the pipeline runs until this drains.
+    unresolved: BTreeSet<u64>,
+}
+
+/// How a sink landed one matching-kind result.
+enum Resolved {
+    Done,
+    /// The payload failed the sink's validation: the worker that
+    /// produced it is broken, and the item must be re-settled (its kill
+    /// budget counted) so a permanently-malformed reply cannot loop.
+    Malformed(String),
+}
+
+/// The kind-specific half of the pipeline: what a resolution, a
+/// deterministic rejection, and a quarantine verdict mean. The engine
+/// ([`ShardPool::run_pipeline`]) owns everything else — dispatch,
+/// bounded in-flight, operand publication, requeue, respawn, stealing,
+/// and the watchdog.
+trait WorkSink {
+    /// The item kind this pipeline dispatches; replies of the other
+    /// kind are a protocol violation that fells the sender.
+    fn kind(&self) -> ItemKind;
+    /// A worker answered `item` with a result of the matching kind.
+    fn resolve(
+        &mut self,
+        item: &WorkItem,
+        result: WorkResult,
+        unresolved: &mut BTreeSet<u64>,
+    ) -> Result<Resolved, ApiError>;
+    /// A worker deterministically rejected an in-flight item (a retry
+    /// would fail identically).
+    fn reject(
+        &mut self,
+        shard: usize,
+        id: u64,
+        msg: String,
+        unresolved: &mut BTreeSet<u64>,
+    ) -> Result<(), ApiError>;
+    /// The item felled `kills` workers and is presumed poisoned.
+    fn quarantine(
+        &mut self,
+        item: WorkItem,
+        kills: usize,
+        last_failure: Option<String>,
+        unresolved: &mut BTreeSet<u64>,
+    ) -> Result<(), ApiError>;
+}
+
+/// Log nouns per item kind, so shared engine messages keep reading
+/// naturally ("requeueing its jobs" / "... its bands").
+fn work_nouns(kind: ItemKind) -> (&'static str, &'static str) {
+    match kind {
+        ItemKind::Verify => ("job", "jobs"),
+        ItemKind::Band => ("band", "bands"),
+    }
+}
+
+/// Campaign sink: resolutions become JSON lines re-emitted in ascending
+/// job-id order; poisoned jobs quarantine as explicit ordered error
+/// lines plus a record for the merged report.
+struct CampaignSink<'o> {
+    out: &'o mut dyn Write,
+    /// Buffered lines awaiting their turn in the id-ordered stream.
+    ready: BTreeMap<u64, String>,
+    deterministic: bool,
+    quarantined: Vec<QuarantinedJob>,
+}
+
+impl WorkSink for CampaignSink<'_> {
+    fn kind(&self) -> ItemKind {
+        ItemKind::Verify
+    }
+
+    fn resolve(
+        &mut self,
+        _item: &WorkItem,
+        result: WorkResult,
+        unresolved: &mut BTreeSet<u64>,
+    ) -> Result<Resolved, ApiError> {
+        let WorkResult::Outcome(mut o) = result else {
+            return Ok(Resolved::Malformed("cross-kind result".into()));
+        };
+        if self.deterministic {
+            o.micros = 0;
+        }
+        let line = JsonValue::Obj(vec![
+            ("ok".into(), JsonValue::Bool(true)),
+            ("outcome".into(), json::outcome_to_json(&o)),
+        ])
+        .encode();
+        self.ready.insert(o.id, line);
+        emit_ready(&mut *self.out, &mut self.ready, unresolved)?;
+        Ok(Resolved::Done)
+    }
+
+    fn reject(
+        &mut self,
+        _shard: usize,
+        id: u64,
+        msg: String,
+        unresolved: &mut BTreeSet<u64>,
+    ) -> Result<(), ApiError> {
+        let line = JsonValue::Obj(vec![
+            ("ok".into(), JsonValue::Bool(false)),
+            ("error".into(), JsonValue::str(&msg)),
+            ("id".into(), JsonValue::u64(id)),
+        ])
+        .encode();
+        self.ready.insert(id, line);
+        emit_ready(&mut *self.out, &mut self.ready, unresolved)
+    }
+
+    fn quarantine(
+        &mut self,
+        item: WorkItem,
+        kills: usize,
+        last_failure: Option<String>,
+        unresolved: &mut BTreeSet<u64>,
+    ) -> Result<(), ApiError> {
+        let id = item.id();
+        let pair = item.pair().unwrap_or_default().to_string();
+        let reason = match last_failure {
+            Some(note) => format!("felled {kills} workers (last: {note})"),
+            None => format!("felled {kills} workers"),
+        };
+        eprintln!("shard: quarantining job {id}: {reason}");
+        let line = JsonValue::Obj(vec![
+            ("ok".into(), JsonValue::Bool(false)),
+            ("error".into(), JsonValue::str(&format!("job quarantined: {reason}"))),
+            ("id".into(), JsonValue::u64(id)),
+            ("quarantined".into(), JsonValue::Bool(true)),
+        ])
+        .encode();
+        self.ready.insert(id, line);
+        self.quarantined.push(QuarantinedJob { id, pair, kills, reason });
+        emit_ready(&mut *self.out, &mut self.ready, unresolved)
+    }
+}
+
+/// GEMM sink: band resolutions gather into the output matrix; any
+/// terminal band failure aborts the run, because a partial GEMM output
+/// would be silently wrong.
+struct GemmSink<'d> {
+    d: &'d mut BitMatrix,
+    n: usize,
+    d_fmt: Format,
+}
+
+impl WorkSink for GemmSink<'_> {
+    fn kind(&self) -> ItemKind {
+        ItemKind::Band
+    }
+
+    fn resolve(
+        &mut self,
+        item: &WorkItem,
+        result: WorkResult,
+        unresolved: &mut BTreeSet<u64>,
+    ) -> Result<Resolved, ApiError> {
+        let (WorkItem::Band(req), WorkResult::Band(r)) = (item, result) else {
+            return Ok(Resolved::Malformed("cross-kind result".into()));
+        };
+        let (row0, rows) = (req.row0, req.a.rows);
+        if r.row0 != row0 || r.d.rows != rows || r.d.cols != self.n || r.d.fmt != self.d_fmt {
+            return Ok(Resolved::Malformed(format!("returned a malformed band {}", r.id)));
+        }
+        self.d.data[row0 * self.n..(row0 + rows) * self.n].copy_from_slice(&r.d.data);
+        unresolved.remove(&r.id);
+        Ok(Resolved::Done)
+    }
+
+    fn reject(
+        &mut self,
+        shard: usize,
+        id: u64,
+        msg: String,
+        _unresolved: &mut BTreeSet<u64>,
+    ) -> Result<(), ApiError> {
+        Err(ApiError::Shard { detail: format!("worker {shard} rejected band {id}: {msg}") })
+    }
+
+    fn quarantine(
+        &mut self,
+        item: WorkItem,
+        kills: usize,
+        last_failure: Option<String>,
+        _unresolved: &mut BTreeSet<u64>,
+    ) -> Result<(), ApiError> {
+        let id = item.id();
+        let last = last_failure.unwrap_or_else(|| "no worker failure recorded".into());
+        Err(ApiError::Shard {
+            detail: format!(
+                "band {id} felled {kills} workers (last failure: {last}); a partial \
+                 GEMM would be silently wrong, aborting"
+            ),
+        })
     }
 }
 
@@ -476,6 +681,10 @@ struct ChildSlot {
     busy_since: Option<Instant>,
     /// Tail of the child's stderr, when the transport captures it.
     stderr: Option<StderrTail>,
+    /// Operand addresses this child has been sent a `put` for. Dispatch
+    /// publishes an item's operand before the item on first reference;
+    /// a `{"need": addr}` reply clears and re-sends it.
+    published: BTreeSet<String>,
 }
 
 /// The parent side of process-level sharding. Construct with
@@ -494,9 +703,12 @@ pub struct ShardPool<'t> {
     children: Vec<ChildSlot>,
     tx: Sender<PoolMsg>,
     rx: Receiver<PoolMsg>,
-    /// Lines replayed to every newly spawned worker (e.g. the GEMM
-    /// `set_b` frame), so a respawned replacement has the same state.
-    prelude: Vec<String>,
+    /// The authoritative copy of every published operand, shared with
+    /// the TCP tier via [`operands`](Self::operands). Workers receive
+    /// operands lazily (a `put` before the first item that references
+    /// one), so a respawned replacement needs no prelude replay — its
+    /// empty `published` set triggers a fresh `put` on first dispatch.
+    operands: Arc<OperandStore>,
     /// Round-robin cursor over children.
     rr: usize,
     /// Per-child reply deadline; `None` = block forever (watchdog off).
@@ -546,7 +758,7 @@ impl<'t> ShardPool<'t> {
             children: Vec::new(),
             tx,
             rx,
-            prelude: Vec::new(),
+            operands: Arc::new(OperandStore::unbounded()),
             rr: 0,
             job_timeout: if cfg.job_timeout_ms > 0 {
                 Some(Duration::from_millis(cfg.job_timeout_ms))
@@ -567,8 +779,16 @@ impl<'t> ShardPool<'t> {
         Ok(pool)
     }
 
+    /// The pool's content-addressed operand store. The TCP tier shares
+    /// it with its connection handlers: a client `put` lands here once,
+    /// and dispatch forwards it to whichever workers need it.
+    pub fn operands(&self) -> Arc<OperandStore> {
+        self.operands.clone()
+    }
+
     /// Launch one more worker (initial fill or a replacement for a dead
-    /// child), replaying the prelude frames to it.
+    /// child). Fresh workers start with an empty `published` set, so any
+    /// operand their first item references is re-`put` automatically.
     fn spawn_child(&mut self) -> Result<usize, ApiError> {
         if self.children.len() >= self.max_children {
             let last =
@@ -617,18 +837,9 @@ impl<'t> ShardPool<'t> {
             local: CampaignReport::new(),
             busy_since: None,
             stderr,
+            published: BTreeSet::new(),
         });
-        let prelude = std::mem::take(&mut self.prelude);
-        let mut res = Ok(idx);
-        for line in &prelude {
-            if let Err(e) = self.write_line(idx, line) {
-                let _ = self.retire(idx);
-                res = Err(io_err("replaying prelude to a fresh worker", e));
-                break;
-            }
-        }
-        self.prelude = prelude;
-        res
+        Ok(idx)
     }
 
     /// The next child with an open pipe and spare in-flight capacity, if
@@ -824,7 +1035,7 @@ impl<'t> ShardPool<'t> {
                 Some(PoolMsg::Service(req)) => {
                     // a submission racing the teardown: answer it rather
                     // than dropping the sender silently
-                    let id = req.job.id;
+                    let id = req.item.id();
                     let _ = req.reply.send(ServiceReply::Failed {
                         id,
                         msg: "pool is shutting down".into(),
@@ -858,22 +1069,19 @@ impl<'t> ShardPool<'t> {
         Ok(())
     }
 
-    /// Settle the campaign jobs a retired worker still owed: requeue
-    /// each — unless it has now felled [`max_worker_kills`] distinct
-    /// workers, in which case it is presumed poisoned and quarantined:
-    /// resolved as an explicit ordered error line and recorded for the
-    /// report's `quarantined` section instead of being fed to the next
-    /// worker forever.
+    /// Settle the items a retired worker still owed: requeue each —
+    /// unless it has now felled [`max_worker_kills`] distinct workers,
+    /// in which case it is presumed poisoned and handed to the sink's
+    /// quarantine verdict (an explicit ordered error line for campaign
+    /// jobs; an aborting error for GEMM bands) instead of being fed to
+    /// the next worker forever.
     ///
     /// [`max_worker_kills`]: ShardConfig::max_worker_kills
-    fn settle_lost_jobs(
+    fn settle_lost_items(
         &mut self,
         ids: Vec<u64>,
-        queue: &mut VecDeque<Job>,
-        assigned: &mut BTreeMap<u64, Job>,
-        ready: &mut BTreeMap<u64, String>,
-        remaining: &mut BTreeSet<u64>,
-        out: &mut dyn Write,
+        st: &mut PipelineState,
+        sink: &mut dyn WorkSink,
     ) -> Result<(), ApiError> {
         for id in ids {
             if self.children.iter().any(|c| !c.dead && c.inflight.contains(&id)) {
@@ -881,45 +1089,87 @@ impl<'t> ShardPool<'t> {
                 // lost copy was redundant, not lost work
                 continue;
             }
-            let Some(job) = assigned.remove(&id) else { continue };
+            let Some(item) = st.assigned.remove(&id) else { continue };
             let kills = {
                 let k = self.kills.entry(id).or_insert(0);
                 *k += 1;
                 *k
             };
             if self.max_worker_kills == 0 || kills < self.max_worker_kills {
-                queue.push_back(job);
+                st.queue.push_back(item);
                 continue;
             }
-            let reason = match &self.last_failure {
-                Some(note) => format!("felled {kills} workers (last: {note})"),
-                None => format!("felled {kills} workers"),
-            };
-            eprintln!("shard: quarantining job {id}: {reason}");
-            let line = JsonValue::Obj(vec![
-                ("ok".into(), JsonValue::Bool(false)),
-                ("error".into(), JsonValue::str(&format!("job quarantined: {reason}"))),
-                ("id".into(), JsonValue::u64(id)),
-                ("quarantined".into(), JsonValue::Bool(true)),
-            ])
-            .encode();
-            ready.insert(id, line);
-            self.quarantined.push(QuarantinedJob { id, pair: job.pair, kills, reason });
+            sink.quarantine(item, kills, self.last_failure.clone(), &mut st.unresolved)?;
         }
-        emit_ready(out, ready, remaining)
+        Ok(())
     }
 
-    /// Work-stealing rebalance: with the queue empty but jobs still
+    /// Dispatch queued items while children have capacity, publishing a
+    /// referenced operand to each worker before its first item that
+    /// needs it. A failed write — of the `put` or of the item line —
+    /// retires the worker, keeps the undelivered item at the head of
+    /// the queue, and settles whatever the worker already held, so an
+    /// operand publish to a dead child loses no work.
+    fn dispatch_items(
+        &mut self,
+        st: &mut PipelineState,
+        sink: &mut dyn WorkSink,
+    ) -> Result<(), ApiError> {
+        let plural = work_nouns(sink.kind()).1;
+        while !st.queue.is_empty() {
+            let Some(t) = self.pick_target() else { break };
+            let item = st.queue.pop_front().expect("queue checked non-empty");
+            if let Some(addr) = item.operand().map(str::to_string) {
+                if !self.children[t].published.contains(&addr) {
+                    let Some(m) = self.operands.get(&addr) else {
+                        return Err(ApiError::Shard {
+                            detail: format!(
+                                "item {} references unpublished operand {addr}",
+                                item.id()
+                            ),
+                        });
+                    };
+                    let put = json::put_frame(&addr, &m).encode();
+                    if let Err(e) = self.write_line(t, &put) {
+                        st.queue.push_front(item);
+                        let note = self.failure_note(t, &format!("operand publish failed: {e}"));
+                        eprintln!("shard: {note}; requeueing its {plural}");
+                        let ids = self.retire(t);
+                        self.settle_lost_items(ids, st, sink)?;
+                        continue;
+                    }
+                    self.children[t].published.insert(addr);
+                }
+            }
+            let line = item.encode();
+            match self.write_line(t, &line) {
+                Ok(()) => {
+                    self.children[t].inflight.insert(item.id());
+                    self.touch(t);
+                    st.assigned.insert(item.id(), item);
+                }
+                Err(e) => {
+                    st.queue.push_front(item);
+                    let note = self.failure_note(t, &format!("request write failed: {e}"));
+                    eprintln!("shard: {note}; requeueing its {plural}");
+                    let ids = self.retire(t);
+                    self.settle_lost_items(ids, st, sink)?;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Work-stealing rebalance: with the queue empty but items still
     /// owed, hand each idle worker a *duplicate* of the deepest
-    /// backlog's most-recently-queued job (one nobody else also holds).
-    /// The first resolution wins — [`on_campaign_reply`] drops the
-    /// loser via its `assigned` check — so a slow host can no longer
-    /// strand the campaign tail behind its backlog. Byte-identity is
-    /// unaffected: resolutions still land in `ready` once, and are
-    /// re-emitted in ascending job-id order.
+    /// backlog's most-recently-queued item (one nobody else also holds).
+    /// The first resolution wins — [`resolve_result`] drops the loser
+    /// via its `assigned` check — so a slow host can no longer strand
+    /// the run's tail behind its backlog. Byte-identity is unaffected:
+    /// resolutions still land exactly once.
     ///
-    /// [`on_campaign_reply`]: Self::on_campaign_reply
-    fn steal_rebalance(&mut self, assigned: &BTreeMap<u64, Job>) {
+    /// [`resolve_result`]: Self::resolve_result
+    fn steal_rebalance(&mut self, assigned: &BTreeMap<u64, WorkItem>) {
         loop {
             let n = self.children.len();
             let Some(thief) = (0..n).find(|&idx| {
@@ -928,8 +1178,8 @@ impl<'t> ShardPool<'t> {
             }) else {
                 return;
             };
-            // deepest backlog with at least two owed jobs: stealing a
-            // worker's only job would duplicate every tail job everywhere
+            // deepest backlog with at least two owed items: stealing a
+            // worker's only item would duplicate every tail item everywhere
             let Some(victim) = (0..n)
                 .filter(|&idx| idx != thief && !self.children[idx].dead)
                 .filter(|&idx| self.children[idx].inflight.len() >= 2)
@@ -942,35 +1192,274 @@ impl<'t> ShardPool<'t> {
             }) else {
                 return;
             };
-            let Some(job) = assigned.get(&id) else { return };
-            let line = json::job_to_json(job).encode();
+            let Some(item) = assigned.get(&id) else { return };
+            // the thief needs the item's operand before the item itself
+            if let Some(addr) = item.operand().map(str::to_string) {
+                if !self.children[thief].published.contains(&addr) {
+                    let Some(m) = self.operands.get(&addr) else { return };
+                    let put = json::put_frame(&addr, &m).encode();
+                    if self.write_line(thief, &put).is_err() {
+                        return; // the reader's EOF will route it through retire
+                    }
+                    self.children[thief].published.insert(addr);
+                }
+            }
+            let noun = work_nouns(item.kind()).0;
+            let line = item.encode();
             if self.write_line(thief, &line).is_err() {
                 return; // the reader's EOF will route it through retire
             }
-            eprintln!("shard: worker {thief} steals job {id} from worker {victim}'s backlog");
+            eprintln!("shard: worker {thief} steals {noun} {id} from worker {victim}'s backlog");
             self.children[thief].inflight.insert(id);
             self.touch(thief);
         }
     }
 
-    /// Watchdog tick (campaign): retire every child past its reply
-    /// deadline and settle the work it still owed.
-    fn retire_hung(
+    /// Watchdog tick: retire every child past its reply deadline and
+    /// settle the work it still owed.
+    fn retire_hung_pipeline(
         &mut self,
-        out: &mut dyn Write,
-        queue: &mut VecDeque<Job>,
-        assigned: &mut BTreeMap<u64, Job>,
-        ready: &mut BTreeMap<u64, String>,
-        remaining: &mut BTreeSet<u64>,
+        st: &mut PipelineState,
+        sink: &mut dyn WorkSink,
     ) -> Result<(), ApiError> {
         for shard in self.hung_children() {
             let ms = self.job_timeout.map_or(0, |t| t.as_millis() as u64);
             let note = self.failure_note(shard, &format!("no reply within {ms} ms; presumed hung"));
-            eprintln!("shard: {note}; retiring and requeueing its jobs");
+            eprintln!(
+                "shard: {note}; retiring and requeueing its {}",
+                work_nouns(sink.kind()).1
+            );
             let ids = self.retire(shard);
-            self.settle_lost_jobs(ids, queue, assigned, ready, remaining, out)?;
+            self.settle_lost_items(ids, st, sink)?;
         }
         Ok(())
+    }
+
+    /// The one dispatcher loop behind both one-shot drivers: scatter
+    /// `items` across the children with bounded in-flight, publish
+    /// operands on first reference, requeue on death, steal when idle
+    /// (fleet mode), watchdog the silent, and quarantine the poisoned —
+    /// all kind-agnostic; the sink owns what a resolution means.
+    fn run_pipeline(
+        &mut self,
+        items: Vec<WorkItem>,
+        sink: &mut dyn WorkSink,
+    ) -> Result<(), ApiError> {
+        let mut st = PipelineState {
+            queue: VecDeque::new(),
+            assigned: BTreeMap::new(),
+            unresolved: BTreeSet::new(),
+        };
+        let noun = work_nouns(sink.kind()).0;
+        for item in items {
+            if !st.unresolved.insert(item.id()) {
+                return Err(ApiError::Shard {
+                    detail: format!("duplicate {noun} id {}", item.id()),
+                });
+            }
+            st.queue.push_back(item);
+        }
+        while !st.unresolved.is_empty() {
+            self.dispatch_items(&mut st, sink)?;
+            // work remains but nobody can take it: grow the pool (after
+            // the deterministic backoff delay)
+            if !st.queue.is_empty() && self.open_count() == 0 {
+                self.respawn_with_backoff()?;
+                continue;
+            }
+            if self.steal && st.queue.is_empty() && !st.unresolved.is_empty() {
+                self.steal_rebalance(&st.assigned);
+            }
+            if st.queue.is_empty() && self.total_inflight() == 0 && !st.unresolved.is_empty() {
+                // every item was answered yet some ids never resolved — a
+                // protocol violation we must not wait on forever
+                return Err(ApiError::Shard {
+                    detail: format!("{} {noun} replies never arrived", st.unresolved.len()),
+                });
+            }
+            if st.unresolved.is_empty() {
+                break;
+            }
+            match self.next_reply()? {
+                Some(PoolMsg::Child(shard, reply)) => {
+                    self.on_pipeline_reply(shard, reply, &mut st, sink)?;
+                }
+                Some(PoolMsg::Service(req)) => {
+                    // a stray service submission on a one-shot driver:
+                    // answer it so the submitter never hangs
+                    let id = req.item.id();
+                    let what = match sink.kind() {
+                        ItemKind::Verify => "campaign",
+                        ItemKind::Band => "GEMM",
+                    };
+                    let _ = req.reply.send(ServiceReply::Failed {
+                        id,
+                        msg: format!("pool is running a one-shot {what}, not a service"),
+                        quarantined: false,
+                    });
+                }
+                Some(PoolMsg::Shutdown) => {} // meaningless outside service mode
+                None => self.retire_hung_pipeline(&mut st, sink)?,
+            }
+        }
+        Ok(())
+    }
+
+    fn on_pipeline_reply(
+        &mut self,
+        shard: usize,
+        reply: Reply,
+        st: &mut PipelineState,
+        sink: &mut dyn WorkSink,
+    ) -> Result<(), ApiError> {
+        // any reply line proves the child is alive: re-arm its watchdog
+        self.touch(shard);
+        match reply {
+            // cross-kind replies are protocol violations regardless of
+            // their ids — the stream itself is not trustworthy
+            Reply::Outcome(_) | Reply::Summary(_) if sink.kind() == ItemKind::Band => {
+                self.fail_item_child(shard, "sent campaign replies on a GEMM stream", st, sink)?;
+            }
+            Reply::Band(_) if sink.kind() == ItemKind::Verify => {
+                self.fail_item_child(shard, "band reply on a campaign stream", st, sink)?;
+            }
+            Reply::Outcome(o) => {
+                self.resolve_result(shard, WorkResult::Outcome(o), st, sink)?;
+            }
+            Reply::Band(r) => {
+                self.resolve_result(shard, WorkResult::Band(r), st, sink)?;
+            }
+            Reply::Summary(r) => {
+                // a summary from a retired child covers requeued jobs —
+                // merging it would double-count them (its `local` stands)
+                if !self.children[shard].dead {
+                    self.children[shard].summary = Some(r);
+                }
+            }
+            Reply::Error { id: Some(id), msg } => {
+                // an addressed rejection (e.g. unknown pair, invalid
+                // band) is deterministic: it resolves the item instead
+                // of being retried
+                if self.children[shard].inflight.remove(&id) {
+                    if st.assigned.remove(&id).is_none() {
+                        // already resolved by a stolen duplicate
+                        return Ok(());
+                    }
+                    sink.reject(shard, id, msg, &mut st.unresolved)?;
+                }
+            }
+            Reply::Error { id: None, msg } => {
+                // the parent only writes well-formed request lines, so an
+                // unaddressed error means the stream is corrupt
+                let why = format!("unaddressed error: {msg}");
+                self.fail_item_child(shard, &why, st, sink)?;
+            }
+            Reply::Need(addr) => self.repopulate_operand(shard, addr, st, sink)?,
+            Reply::Garbage(what) => {
+                self.fail_item_child(shard, &what, st, sink)?;
+            }
+            Reply::Eof => {
+                let premature = {
+                    let c = &self.children[shard];
+                    !c.inflight.is_empty() || (c.input.is_some() && c.summary.is_none())
+                };
+                self.children[shard].eof = true;
+                if premature {
+                    let note = self.failure_note(shard, "output closed with work owed");
+                    eprintln!("shard: {note}; requeueing its {}", work_nouns(sink.kind()).1);
+                    let ids = self.retire(shard);
+                    self.settle_lost_items(ids, st, sink)?;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Route one matching-kind result through the sink, enforcing the
+    /// stale-reply and stolen-duplicate guards shared by both kinds.
+    fn resolve_result(
+        &mut self,
+        shard: usize,
+        result: WorkResult,
+        st: &mut PipelineState,
+        sink: &mut dyn WorkSink,
+    ) -> Result<(), ApiError> {
+        let id = result.id();
+        if !self.children[shard].inflight.remove(&id) {
+            // not ours (a stale reply from a retired child whose work
+            // was requeued) — ignore rather than double-count
+            return Ok(());
+        }
+        let Some(item) = st.assigned.remove(&id) else {
+            // a stolen duplicate already resolved this id — the first
+            // resolution won; drop the echo
+            return Ok(());
+        };
+        if let WorkResult::Outcome(o) = &result {
+            // the merge fallback for a child that dies before its
+            // summary: absorb the raw outcome (timing un-zeroed)
+            self.children[shard].local.absorb(o);
+        }
+        match sink.resolve(&item, result, &mut st.unresolved)? {
+            Resolved::Done => Ok(()),
+            Resolved::Malformed(why) => {
+                let note = self.failure_note(shard, &why);
+                eprintln!("shard: {note}; requeueing its {}", work_nouns(sink.kind()).1);
+                // the malformed item counts against its kill budget too —
+                // an item whose reply is always malformed must not retry
+                // forever
+                st.assigned.insert(id, item);
+                self.settle_lost_items(vec![id], st, sink)?;
+                let ids = self.retire(shard);
+                self.settle_lost_items(ids, st, sink)
+            }
+        }
+    }
+
+    /// Protocol violation: retire the child and settle (requeue or
+    /// quarantine) its work.
+    fn fail_item_child(
+        &mut self,
+        shard: usize,
+        why: &str,
+        st: &mut PipelineState,
+        sink: &mut dyn WorkSink,
+    ) -> Result<(), ApiError> {
+        let note = self.failure_note(shard, why);
+        eprintln!("shard: {note}; requeueing its {}", work_nouns(sink.kind()).1);
+        let ids = self.retire(shard);
+        self.settle_lost_items(ids, st, sink)
+    }
+
+    /// A worker missed an operand (fresh respawn, bounded-memo eviction
+    /// on its side): re-send the `put` from the authoritative store. An
+    /// unknown address is a protocol violation — the parent never
+    /// dispatches an item whose operand it does not hold.
+    fn repopulate_operand(
+        &mut self,
+        shard: usize,
+        addr: String,
+        st: &mut PipelineState,
+        sink: &mut dyn WorkSink,
+    ) -> Result<(), ApiError> {
+        let Some(m) = self.operands.get(&addr) else {
+            let why = format!("requested an unknown operand {addr}");
+            return self.fail_item_child(shard, &why, st, sink);
+        };
+        self.children[shard].published.remove(&addr);
+        let put = json::put_frame(&addr, &m).encode();
+        match self.write_line(shard, &put) {
+            Ok(()) => {
+                self.children[shard].published.insert(addr);
+                Ok(())
+            }
+            Err(e) => {
+                let note = self.failure_note(shard, &format!("operand republish failed: {e}"));
+                eprintln!("shard: {note}; requeueing its {}", work_nouns(sink.kind()).1);
+                let ids = self.retire(shard);
+                self.settle_lost_items(ids, st, sink)
+            }
+        }
     }
 
     // -- campaign driver ----------------------------------------------------
@@ -986,89 +1475,16 @@ impl<'t> ShardPool<'t> {
         jobs: Vec<Job>,
         out: &mut dyn Write,
     ) -> Result<CampaignReport, ApiError> {
-        let mut remaining: BTreeSet<u64> = BTreeSet::new();
-        for j in &jobs {
-            if !remaining.insert(j.id) {
-                return Err(ApiError::Shard { detail: format!("duplicate job id {}", j.id) });
-            }
-        }
-        let mut queue: VecDeque<Job> = jobs.into_iter().collect();
-        let mut assigned: BTreeMap<u64, Job> = BTreeMap::new();
-        let mut ready: BTreeMap<u64, String> = BTreeMap::new();
-
-        while !remaining.is_empty() {
-            // submit while children have capacity
-            while !queue.is_empty() {
-                let Some(t) = self.pick_target() else { break };
-                let job = queue.pop_front().expect("queue checked non-empty");
-                let line = json::job_to_json(&job).encode();
-                match self.write_line(t, &line) {
-                    Ok(()) => {
-                        self.children[t].inflight.insert(job.id);
-                        self.touch(t);
-                        assigned.insert(job.id, job);
-                    }
-                    Err(e) => {
-                        queue.push_front(job);
-                        let note = self.failure_note(t, &format!("request write failed: {e}"));
-                        eprintln!("shard: {note}; requeueing its jobs");
-                        let ids = self.retire(t);
-                        self.settle_lost_jobs(
-                            ids,
-                            &mut queue,
-                            &mut assigned,
-                            &mut ready,
-                            &mut remaining,
-                            out,
-                        )?;
-                    }
-                }
-            }
-            // work remains but nobody can take it: grow the pool (after
-            // the deterministic backoff delay)
-            if !queue.is_empty() && self.open_count() == 0 {
-                self.respawn_with_backoff()?;
-                continue;
-            }
-            if self.steal && queue.is_empty() && !remaining.is_empty() {
-                self.steal_rebalance(&assigned);
-            }
-            if queue.is_empty() && self.total_inflight() == 0 && !remaining.is_empty() {
-                // every job was answered yet some ids never resolved — a
-                // protocol violation we must not wait on forever
-                return Err(ApiError::Shard {
-                    detail: format!("{} job replies never arrived", remaining.len()),
-                });
-            }
-            if remaining.is_empty() {
-                break;
-            }
-            match self.next_reply()? {
-                Some(PoolMsg::Child(shard, reply)) => self.on_campaign_reply(
-                    shard,
-                    reply,
-                    out,
-                    &mut queue,
-                    &mut assigned,
-                    &mut ready,
-                    &mut remaining,
-                )?,
-                Some(PoolMsg::Service(req)) => {
-                    // a stray service submission on a one-shot driver:
-                    // answer it so the submitter never hangs
-                    let id = req.job.id;
-                    let _ = req.reply.send(ServiceReply::Failed {
-                        id,
-                        msg: "pool is running a one-shot campaign, not a service".into(),
-                        quarantined: false,
-                    });
-                }
-                Some(PoolMsg::Shutdown) => {} // meaningless outside service mode
-                None => {
-                    self.retire_hung(out, &mut queue, &mut assigned, &mut ready, &mut remaining)?
-                }
-            }
-        }
+        let items: Vec<WorkItem> = jobs.into_iter().map(WorkItem::Verify).collect();
+        let mut sink = CampaignSink {
+            out,
+            ready: BTreeMap::new(),
+            deterministic: self.deterministic,
+            quarantined: Vec::new(),
+        };
+        self.run_pipeline(items, &mut sink)?;
+        self.quarantined.append(&mut sink.quarantined);
+        let out = sink.out;
 
         // all outcomes emitted: close stdins so children summarize + exit
         self.drain_and_reap(|slot, reply| {
@@ -1108,118 +1524,6 @@ impl<'t> ShardPool<'t> {
         Ok(merged)
     }
 
-    #[allow(clippy::too_many_arguments)]
-    fn on_campaign_reply(
-        &mut self,
-        shard: usize,
-        reply: Reply,
-        out: &mut dyn Write,
-        queue: &mut VecDeque<Job>,
-        assigned: &mut BTreeMap<u64, Job>,
-        ready: &mut BTreeMap<u64, String>,
-        remaining: &mut BTreeSet<u64>,
-    ) -> Result<(), ApiError> {
-        // any reply line proves the child is alive: re-arm its watchdog
-        self.touch(shard);
-        match reply {
-            Reply::Outcome(o) => {
-                if !self.children[shard].inflight.remove(&o.id) {
-                    // not ours (a stale reply from a retired child whose
-                    // job was requeued) — ignore rather than double-count
-                    return Ok(());
-                }
-                if assigned.remove(&o.id).is_none() {
-                    // a stolen duplicate already resolved this id — the
-                    // first resolution won; drop the echo
-                    return Ok(());
-                }
-                self.children[shard].local.absorb(&o);
-                let mut o = o;
-                if self.deterministic {
-                    o.micros = 0;
-                }
-                let line = JsonValue::Obj(vec![
-                    ("ok".into(), JsonValue::Bool(true)),
-                    ("outcome".into(), json::outcome_to_json(&o)),
-                ])
-                .encode();
-                ready.insert(o.id, line);
-                emit_ready(out, ready, remaining)?;
-            }
-            Reply::Error { id: Some(id), msg } => {
-                // a job-level rejection (e.g. unknown pair): deterministic,
-                // so it resolves the id instead of being retried
-                if self.children[shard].inflight.remove(&id) {
-                    if assigned.remove(&id).is_none() {
-                        // already resolved by a stolen duplicate
-                        return Ok(());
-                    }
-                    let line = JsonValue::Obj(vec![
-                        ("ok".into(), JsonValue::Bool(false)),
-                        ("error".into(), JsonValue::str(&msg)),
-                        ("id".into(), JsonValue::u64(id)),
-                    ])
-                    .encode();
-                    ready.insert(id, line);
-                    emit_ready(out, ready, remaining)?;
-                }
-            }
-            Reply::Error { id: None, msg } => {
-                // the parent only writes well-formed job lines, so an
-                // unaddressed error means the pipe is corrupt
-                let why = format!("unaddressed error: {msg}");
-                self.fail_child(shard, out, queue, assigned, ready, remaining, &why)?;
-            }
-            Reply::Summary(r) => {
-                // a summary from a retired child covers requeued jobs —
-                // merging it would double-count them (its `local` stands)
-                if !self.children[shard].dead {
-                    self.children[shard].summary = Some(r);
-                }
-            }
-            Reply::Band(_) => {
-                let why = "band reply on a campaign stream";
-                self.fail_child(shard, out, queue, assigned, ready, remaining, why)?;
-            }
-            Reply::Garbage(what) => {
-                self.fail_child(shard, out, queue, assigned, ready, remaining, &what)?;
-            }
-            Reply::Eof => {
-                let premature = {
-                    let c = &self.children[shard];
-                    !c.inflight.is_empty() || (c.input.is_some() && c.summary.is_none())
-                };
-                self.children[shard].eof = true;
-                if premature {
-                    let note = self.failure_note(shard, "output closed with work owed");
-                    eprintln!("shard: {note}; requeueing its jobs");
-                    let ids = self.retire(shard);
-                    self.settle_lost_jobs(ids, queue, assigned, ready, remaining, out)?;
-                }
-            }
-        }
-        Ok(())
-    }
-
-    /// Protocol violation: retire the child and settle (requeue or
-    /// quarantine) its jobs.
-    #[allow(clippy::too_many_arguments)]
-    fn fail_child(
-        &mut self,
-        shard: usize,
-        out: &mut dyn Write,
-        queue: &mut VecDeque<Job>,
-        assigned: &mut BTreeMap<u64, Job>,
-        ready: &mut BTreeMap<u64, String>,
-        remaining: &mut BTreeSet<u64>,
-        why: &str,
-    ) -> Result<(), ApiError> {
-        let note = self.failure_note(shard, why);
-        eprintln!("shard: {note}; requeueing its jobs");
-        let ids = self.retire(shard);
-        self.settle_lost_jobs(ids, queue, assigned, ready, remaining, out)
-    }
-
     // -- GEMM driver --------------------------------------------------------
 
     /// Scatter the row bands of `D = A×B + C` across the pool's
@@ -1238,203 +1542,34 @@ impl<'t> ShardPool<'t> {
         let n = b.cols;
         let bands = a.rows / tile_m.max(1);
         // a few spans per worker so a fast child can steal ahead
-        let spans = gemm::band_groups(bands, self.children.len().max(1) * 4);
-        // id → (row0, rows): the request payloads are re-sliced on demand
-        let plan: Vec<(usize, usize)> =
-            spans.iter().map(|s| (s.start * tile_m, (s.end - s.start) * tile_m)).collect();
-
-        // install B once per worker; respawned workers get it replayed
-        let set_b = JsonValue::Obj(vec![("set_b".into(), json::bitmatrix_to_json(b))]).encode();
-        for idx in 0..self.children.len() {
-            if self.children[idx].dead || self.children[idx].input.is_none() {
-                continue;
-            }
-            if self.write_line(idx, &set_b).is_err() {
-                let _ = self.retire(idx); // nothing in flight yet
-            }
-        }
-        self.prelude.push(set_b);
-
-        let mut queue: VecDeque<u64> = (0..plan.len() as u64).collect();
-        let mut d = BitMatrix::zeros(a.rows, n, d_fmt);
-        let mut done: BTreeSet<u64> = BTreeSet::new();
-
-        while done.len() < plan.len() {
-            while !queue.is_empty() {
-                let Some(t) = self.pick_target() else { break };
-                let gid = queue.pop_front().expect("queue checked non-empty");
-                let (row0, rows) = plan[gid as usize];
-                let req = BandRequest {
-                    id: gid,
+        let plan = gemm::band_plan(bands, self.children.len().max(1) * 4, tile_m);
+        // publish B once into the content-addressed store; each worker
+        // receives its `put` lazily before the first band that references
+        // it, and respawned replacements repopulate through the same path
+        let b_addr = self.operands.publish(b);
+        let pair = match &self.role {
+            WorkerRole::Gemm { arch, instr } => Some(format!("{arch} {instr}")),
+            WorkerRole::Campaign { .. } => None,
+        };
+        let items: Vec<WorkItem> = plan
+            .iter()
+            .enumerate()
+            .map(|(gid, &(row0, rows))| {
+                WorkItem::Band(Box::new(BandRequest {
+                    id: gid as u64,
                     row0,
+                    pair: pair.clone(),
+                    b: Some(b_addr.clone()),
                     a: row_slice(a, row0, rows),
                     c: row_slice(c, row0, rows),
-                };
-                let line = JsonValue::Obj(vec![("band".into(), json::band_request_to_json(&req))])
-                        .encode();
-                match self.write_line(t, &line) {
-                    Ok(()) => {
-                        self.children[t].inflight.insert(gid);
-                        self.touch(t);
-                    }
-                    Err(e) => {
-                        queue.push_front(gid);
-                        let note = self.failure_note(t, &format!("request write failed: {e}"));
-                        eprintln!("shard: {note}; requeueing its bands");
-                        let ids = self.retire(t);
-                        self.settle_lost_bands(&ids, &mut queue)?;
-                    }
-                }
-            }
-            if !queue.is_empty() && self.open_count() == 0 {
-                self.respawn_with_backoff()?;
-                continue;
-            }
-            if queue.is_empty() && self.total_inflight() == 0 && done.len() < plan.len() {
-                return Err(ApiError::Shard {
-                    detail: format!("{} band replies never arrived", plan.len() - done.len()),
-                });
-            }
-            let (shard, reply) = match self.next_reply()? {
-                Some(PoolMsg::Child(shard, reply)) => (shard, reply),
-                Some(PoolMsg::Service(req)) => {
-                    let id = req.job.id;
-                    let _ = req.reply.send(ServiceReply::Failed {
-                        id,
-                        msg: "pool is running a one-shot GEMM, not a service".into(),
-                        quarantined: false,
-                    });
-                    continue;
-                }
-                Some(PoolMsg::Shutdown) => continue, // meaningless outside service mode
-                None => {
-                    // watchdog tick: sweep for hung children
-                    self.retire_hung_gemm(&mut queue)?;
-                    continue;
-                }
-            };
-            // any reply line proves the child is alive
-            self.touch(shard);
-            match reply {
-                Reply::Band(r) => {
-                    if !self.children[shard].inflight.remove(&r.id) {
-                        continue; // stale reply from a retired child
-                    }
-                    let (row0, rows) = plan[r.id as usize];
-                    if r.row0 != row0 || r.d.rows != rows || r.d.cols != n || r.d.fmt != d_fmt {
-                        let why = format!("returned a malformed band {}", r.id);
-                        let note = self.failure_note(shard, &why);
-                        eprintln!("shard: {note}; requeueing its bands");
-                        // the malformed band counts against its kill
-                        // budget too — a band whose reply is always
-                        // malformed must not retry forever
-                        self.settle_lost_bands(&[r.id], &mut queue)?;
-                        let ids = self.retire(shard);
-                        self.settle_lost_bands(&ids, &mut queue)?;
-                        continue;
-                    }
-                    d.data[row0 * n..(row0 + rows) * n].copy_from_slice(&r.d.data);
-                    done.insert(r.id);
-                }
-                Reply::Error { id, msg } => {
-                    // only an error for a band this worker still owes is a
-                    // verdict; stale noise from a retired child is ignored
-                    // (its bands were already requeued)
-                    let owed = id.map_or(false, |id| self.children[shard].inflight.remove(&id));
-                    if owed {
-                        // a live band rejection is deterministic
-                        // (validation): a retry would fail identically
-                        return Err(ApiError::Shard {
-                            detail: format!(
-                                "worker {shard} rejected band {}: {msg}",
-                                id.expect("owed implies an id")
-                            ),
-                        });
-                    }
-                    if id.is_none() && !self.children[shard].dead {
-                        // an unaddressed error from a live worker (e.g. a
-                        // rejected set_b): the stream is not trustworthy —
-                        // retire it and let the requeue/respawn machinery
-                        // (bounded by the respawn budget) sort it out
-                        let note = self.failure_note(shard, &msg);
-                        eprintln!("shard: {note}; requeueing its bands");
-                        let ids = self.retire(shard);
-                        self.settle_lost_bands(&ids, &mut queue)?;
-                    }
-                }
-                Reply::Eof => {
-                    self.children[shard].eof = true;
-                    if !self.children[shard].inflight.is_empty() {
-                        let note = self.failure_note(shard, "output closed with bands owed");
-                        eprintln!("shard: {note}; requeueing its bands");
-                    }
-                    let ids = self.retire(shard);
-                    self.settle_lost_bands(&ids, &mut queue)?;
-                }
-                Reply::Garbage(what) => {
-                    let note = self.failure_note(shard, &what);
-                    eprintln!("shard: {note}; requeueing its bands");
-                    let ids = self.retire(shard);
-                    self.settle_lost_bands(&ids, &mut queue)?;
-                }
-                Reply::Outcome(_) | Reply::Summary(_) => {
-                    let note = self.failure_note(shard, "sent campaign replies on a GEMM stream");
-                    eprintln!("shard: {note}; requeueing its bands");
-                    let ids = self.retire(shard);
-                    self.settle_lost_bands(&ids, &mut queue)?;
-                }
-            }
-        }
-
+                }))
+            })
+            .collect();
+        let mut d = BitMatrix::zeros(a.rows, n, d_fmt);
+        let mut sink = GemmSink { d: &mut d, n, d_fmt };
+        self.run_pipeline(items, &mut sink)?;
         self.drain_and_reap(|_, _| {})?;
         Ok(d)
-    }
-
-    /// Settle the bands a retired worker still owed: requeue each —
-    /// unless one has now felled
-    /// [`max_worker_kills`](ShardConfig::max_worker_kills) workers.
-    /// A partial GEMM output would be silently wrong, so a poisoned
-    /// band aborts the run with an explicit error instead of being
-    /// quarantined.
-    fn settle_lost_bands(
-        &mut self,
-        ids: &[u64],
-        queue: &mut VecDeque<u64>,
-    ) -> Result<(), ApiError> {
-        for &id in ids {
-            let kills = {
-                let k = self.kills.entry(id).or_insert(0);
-                *k += 1;
-                *k
-            };
-            if self.max_worker_kills > 0 && kills >= self.max_worker_kills {
-                let last = self
-                    .last_failure
-                    .clone()
-                    .unwrap_or_else(|| "no worker failure recorded".into());
-                return Err(ApiError::Shard {
-                    detail: format!(
-                        "band {id} felled {kills} workers (last failure: {last}); a partial \
-                         GEMM would be silently wrong, aborting"
-                    ),
-                });
-            }
-            queue.push_back(id);
-        }
-        Ok(())
-    }
-
-    /// Watchdog tick (GEMM): retire every child past its reply deadline
-    /// and settle the bands it still owed.
-    fn retire_hung_gemm(&mut self, queue: &mut VecDeque<u64>) -> Result<(), ApiError> {
-        for shard in self.hung_children() {
-            let ms = self.job_timeout.map_or(0, |t| t.as_millis() as u64);
-            let note = self.failure_note(shard, &format!("no reply within {ms} ms; presumed hung"));
-            eprintln!("shard: {note}; retiring and requeueing its bands");
-            let ids = self.retire(shard);
-            self.settle_lost_bands(&ids, queue)?;
-        }
-        Ok(())
     }
 
     // -- service driver -----------------------------------------------------
@@ -1465,24 +1600,58 @@ impl<'t> ShardPool<'t> {
     /// sender dropped — callers blocked on a reply observe a resolution or
     /// a disconnect, never a silent hang.
     pub fn run_service(mut self) -> Result<(), ApiError> {
-        let mut queue: VecDeque<Job> = VecDeque::new();
-        let mut assigned: BTreeMap<u64, Job> = BTreeMap::new();
+        let mut queue: VecDeque<WorkItem> = VecDeque::new();
+        let mut assigned: BTreeMap<u64, WorkItem> = BTreeMap::new();
         let mut pending: BTreeMap<u64, Sender<ServiceReply>> = BTreeMap::new();
         let mut shutdown = false;
         loop {
-            // submit while children have capacity
+            // submit while children have capacity, publishing referenced
+            // operands ahead of the first item that needs them
             while !queue.is_empty() {
                 let Some(t) = self.pick_target() else { break };
-                let job = queue.pop_front().expect("queue checked non-empty");
-                let line = json::job_to_json(&job).encode();
+                let item = queue.pop_front().expect("queue checked non-empty");
+                if let Some(addr) = item.operand().map(str::to_string) {
+                    if !self.children[t].published.contains(&addr) {
+                        let Some(m) = self.operands.get(&addr) else {
+                            // validated at submission, so only reachable if
+                            // the store was torn under us: resolve, don't hang
+                            let id = item.id();
+                            if let Some(reply) = pending.remove(&id) {
+                                let _ = reply.send(ServiceReply::Failed {
+                                    id,
+                                    msg: format!("operand {addr} vanished from the store"),
+                                    quarantined: false,
+                                });
+                            }
+                            continue;
+                        };
+                        let put = json::put_frame(&addr, &m).encode();
+                        if let Err(e) = self.write_line(t, &put) {
+                            queue.push_front(item);
+                            let note =
+                                self.failure_note(t, &format!("operand publish failed: {e}"));
+                            eprintln!("serve: {note}; requeueing its jobs");
+                            let ids = self.retire(t);
+                            self.settle_lost_service_jobs(
+                                ids,
+                                &mut queue,
+                                &mut assigned,
+                                &mut pending,
+                            );
+                            continue;
+                        }
+                        self.children[t].published.insert(addr);
+                    }
+                }
+                let line = item.encode();
                 match self.write_line(t, &line) {
                     Ok(()) => {
-                        self.children[t].inflight.insert(job.id);
+                        self.children[t].inflight.insert(item.id());
                         self.touch(t);
-                        assigned.insert(job.id, job);
+                        assigned.insert(item.id(), item);
                     }
                     Err(e) => {
-                        queue.push_front(job);
+                        queue.push_front(item);
                         let note = self.failure_note(t, &format!("request write failed: {e}"));
                         eprintln!("serve: {note}; requeueing its jobs");
                         let ids = self.retire(t);
@@ -1525,7 +1694,12 @@ impl<'t> ShardPool<'t> {
             }
             match self.next_reply()? {
                 Some(PoolMsg::Service(req)) => {
-                    let id = req.job.id;
+                    let id = req.item.id();
+                    let unknown_operand = req
+                        .item
+                        .operand()
+                        .filter(|addr| !self.operands.contains(addr))
+                        .map(str::to_string);
                     if shutdown {
                         let _ = req.reply.send(ServiceReply::Failed {
                             id,
@@ -1538,9 +1712,19 @@ impl<'t> ShardPool<'t> {
                             msg: format!("duplicate unresolved job id {id}"),
                             quarantined: false,
                         });
+                    } else if let Some(addr) = unknown_operand {
+                        // fail fast: dispatching would only discover the
+                        // missing operand later, with the child involved
+                        let _ = req.reply.send(ServiceReply::Failed {
+                            id,
+                            msg: format!(
+                                "unknown operand {addr}: publish it with a put frame first"
+                            ),
+                            quarantined: false,
+                        });
                     } else {
                         pending.insert(id, req.reply);
-                        queue.push_back(req.job);
+                        queue.push_back(req.item);
                     }
                 }
                 Some(PoolMsg::Shutdown) => shutdown = true,
@@ -1557,8 +1741,8 @@ impl<'t> ShardPool<'t> {
         &mut self,
         shard: usize,
         reply: Reply,
-        queue: &mut VecDeque<Job>,
-        assigned: &mut BTreeMap<u64, Job>,
+        queue: &mut VecDeque<WorkItem>,
+        assigned: &mut BTreeMap<u64, WorkItem>,
         pending: &mut BTreeMap<u64, Sender<ServiceReply>>,
     ) {
         // any reply line proves the child is alive: re-arm its watchdog
@@ -1573,6 +1757,38 @@ impl<'t> ShardPool<'t> {
                     let _ = reply.send(ServiceReply::Outcome(o));
                 }
             }
+            Reply::Band(r) => {
+                // the service pipeline is kind-agnostic: band items
+                // resolve on their own reply channels just like jobs
+                if !self.children[shard].inflight.remove(&r.id) {
+                    return; // stale reply from a retired child (band requeued)
+                }
+                assigned.remove(&r.id);
+                if let Some(reply) = pending.remove(&r.id) {
+                    let _ = reply.send(ServiceReply::Band(r));
+                }
+            }
+            Reply::Need(addr) => match self.operands.get(&addr) {
+                Some(m) => {
+                    self.children[shard].published.remove(&addr);
+                    let put = json::put_frame(&addr, &m).encode();
+                    if self.write_line(shard, &put).is_ok() {
+                        self.children[shard].published.insert(addr);
+                    } else {
+                        let note = self.failure_note(shard, "operand republish failed");
+                        eprintln!("serve: {note}; requeueing its jobs");
+                        let ids = self.retire(shard);
+                        self.settle_lost_service_jobs(ids, queue, assigned, pending);
+                    }
+                }
+                None => {
+                    let why = format!("requested an unknown operand {addr}");
+                    let note = self.failure_note(shard, &why);
+                    eprintln!("serve: {note}; requeueing its jobs");
+                    let ids = self.retire(shard);
+                    self.settle_lost_service_jobs(ids, queue, assigned, pending);
+                }
+            },
             Reply::Error { id: Some(id), msg } => {
                 // a job-level rejection is deterministic — resolve, don't retry
                 if self.children[shard].inflight.remove(&id) {
@@ -1597,12 +1813,6 @@ impl<'t> ShardPool<'t> {
                 // at drain time; a mid-service summary is harmless noise
                 // (per-connection summaries are aggregated by the TCP tier,
                 // not the children)
-            }
-            Reply::Band(_) => {
-                let note = self.failure_note(shard, "band reply on a campaign stream");
-                eprintln!("serve: {note}; requeueing its jobs");
-                let ids = self.retire(shard);
-                self.settle_lost_service_jobs(ids, queue, assigned, pending);
             }
             Reply::Garbage(what) => {
                 let note = self.failure_note(shard, &what);
@@ -1635,19 +1845,19 @@ impl<'t> ShardPool<'t> {
     fn settle_lost_service_jobs(
         &mut self,
         ids: Vec<u64>,
-        queue: &mut VecDeque<Job>,
-        assigned: &mut BTreeMap<u64, Job>,
+        queue: &mut VecDeque<WorkItem>,
+        assigned: &mut BTreeMap<u64, WorkItem>,
         pending: &mut BTreeMap<u64, Sender<ServiceReply>>,
     ) {
         for id in ids {
-            let Some(job) = assigned.remove(&id) else { continue };
+            let Some(item) = assigned.remove(&id) else { continue };
             let kills = {
                 let k = self.kills.entry(id).or_insert(0);
                 *k += 1;
                 *k
             };
             if self.max_worker_kills == 0 || kills < self.max_worker_kills {
-                queue.push_back(job);
+                queue.push_back(item);
                 continue;
             }
             let reason = match &self.last_failure {
@@ -1662,7 +1872,8 @@ impl<'t> ShardPool<'t> {
                     quarantined: true,
                 });
             }
-            self.quarantined.push(QuarantinedJob { id, pair: job.pair, kills, reason });
+            let pair = item.pair().unwrap_or_default().to_string();
+            self.quarantined.push(QuarantinedJob { id, pair, kills, reason });
         }
     }
 
@@ -1670,8 +1881,8 @@ impl<'t> ShardPool<'t> {
     /// deadline and settle the work it still owed.
     fn retire_hung_service(
         &mut self,
-        queue: &mut VecDeque<Job>,
-        assigned: &mut BTreeMap<u64, Job>,
+        queue: &mut VecDeque<WorkItem>,
+        assigned: &mut BTreeMap<u64, WorkItem>,
         pending: &mut BTreeMap<u64, Sender<ServiceReply>>,
     ) {
         for shard in self.hung_children() {
@@ -2134,6 +2345,115 @@ mod tests {
         let got = s.shard_gemm(&a, &b, &c, &cfg, &flaky).unwrap();
         let want = TiledGemm::from_model(s.model().clone()).try_execute(&a, &b, &c).unwrap();
         assert_eq!(got, want, "bands owned by the dead worker were requeued");
+    }
+
+    /// Wraps a transport; the first launched worker's stdin is closed
+    /// before the pool ever writes to it, so the very first write — the
+    /// operand `put` in a GEMM run — fails. The negative path for
+    /// operand publication: the undelivered item must be requeued like
+    /// any dead-child work, not silently retired with the worker.
+    struct ClosedStdinTransport<'a> {
+        inner: &'a ThreadTransport,
+        launches: AtomicUsize,
+    }
+
+    impl WorkerTransport for ClosedStdinTransport<'_> {
+        fn launch(&self, role: &WorkerRole) -> Result<WorkerIo, ApiError> {
+            if self.launches.fetch_add(1, Ordering::SeqCst) > 0 {
+                return self.inner.launch(role);
+            }
+            let stdin = Pipe::default();
+            let stdout = Pipe::default();
+            stdin.close();
+            let join = std::thread::spawn(|| {});
+            Ok(WorkerIo {
+                input: Box::new(stdin.writer()),
+                output: Box::new(stdout.reader()),
+                stderr: None,
+                handle: Box::new(ThreadHandle { join: Some(join), stdin, stdout }),
+            })
+        }
+    }
+
+    #[test]
+    fn operand_publish_to_a_dead_child_loses_no_bands() {
+        let inner = ThreadTransport;
+        let closed = ClosedStdinTransport { inner: &inner, launches: AtomicUsize::new(0) };
+        let s = SessionBuilder::new()
+            .arch(Arch::Turing)
+            .instruction("HMMA.1688.F32.F16")
+            .build()
+            .unwrap();
+        let mut rng = Rng::new(79);
+        let (a, b, c) = random_mats(&mut rng, 48, 16, 16, s.formats());
+        let cfg = ShardConfig {
+            workers: 2,
+            inflight: 0,
+            child_workers: 1,
+            deterministic: false,
+            ..ShardConfig::default()
+        };
+        let got = s.shard_gemm(&a, &b, &c, &cfg, &closed).unwrap();
+        let want = TiledGemm::from_model(s.model().clone()).try_execute(&a, &b, &c).unwrap();
+        assert_eq!(got, want, "the band whose put failed must be redispatched, not dropped");
+    }
+
+    /// Wraps a transport; the first launched worker reads one request,
+    /// answers it with a *band* reply — a kind misroute on a campaign
+    /// stream — and exits.
+    struct MisrouteTransport<'a> {
+        inner: &'a ThreadTransport,
+        launches: AtomicUsize,
+    }
+
+    impl WorkerTransport for MisrouteTransport<'_> {
+        fn launch(&self, role: &WorkerRole) -> Result<WorkerIo, ApiError> {
+            if self.launches.fetch_add(1, Ordering::SeqCst) > 0 {
+                return self.inner.launch(role);
+            }
+            let stdin = Pipe::default();
+            let stdout = Pipe::default();
+            let (child_in, child_out) = (stdin.reader(), stdout.writer());
+            let join = std::thread::spawn(move || {
+                let mut lines = BufReader::new(child_in).lines();
+                let _ = lines.next();
+                let reply = BandReply { id: 0, row0: 0, d: BitMatrix::zeros(1, 1, Format::Fp32) };
+                let frame =
+                    JsonValue::Obj(vec![("band".into(), json::band_reply_to_json(&reply))])
+                        .encode();
+                let mut out = child_out;
+                let _ = writeln!(out, "{frame}");
+            });
+            Ok(WorkerIo {
+                input: Box::new(stdin.writer()),
+                output: Box::new(stdout.reader()),
+                stderr: None,
+                handle: Box::new(ThreadHandle { join: Some(join), stdin, stdout }),
+            })
+        }
+    }
+
+    #[test]
+    fn band_reply_on_a_campaign_stream_fells_the_worker() {
+        let inner = ThreadTransport;
+        let misroute = MisrouteTransport { inner: &inner, launches: AtomicUsize::new(0) };
+        let cfg = ShardConfig {
+            workers: 1,
+            inflight: 0,
+            child_workers: 1,
+            deterministic: true,
+            ..ShardConfig::default()
+        };
+        let mut out = Vec::new();
+        let report = shard_campaign(jobs(4), &cfg, &misroute, &mut out).unwrap();
+        assert_eq!(report.total_jobs, 4, "jobs owed by the misrouting worker were requeued");
+
+        // byte-identical to an all-healthy run: the misrouted frame is
+        // rejected wholesale, never partially applied
+        let mut healthy_out = Vec::new();
+        let healthy = shard_campaign(jobs(4), &cfg, &inner, &mut healthy_out).unwrap();
+        assert_eq!(String::from_utf8(out).unwrap(), String::from_utf8(healthy_out).unwrap());
+        assert_eq!(report, healthy);
     }
 
     #[test]

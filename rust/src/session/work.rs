@@ -1,0 +1,357 @@
+//! The unified work-item pipeline: one typed job model for every tier.
+//!
+//! Campaign verification jobs and GEMM bands used to ride two disjoint
+//! wire paths through [`ShardPool`](crate::session::shard::ShardPool):
+//! jobs were requeue-able, cacheable, and fleet-capable, while bands were
+//! pinned to local process workers by a stateful `{"set_b": M}` prelude
+//! that had to be replayed to every respawn. This module collapses the
+//! fork into one typed model:
+//!
+//! - [`WorkItem`] — the enum over every dispatchable unit (a
+//!   verification [`Job`] or a GEMM [`BandRequest`] today; the ROADMAP's
+//!   replay and mining workloads plug in as further kinds);
+//! - [`WorkResult`] — the matching result enum ([`JobOutcome`] /
+//!   [`BandReply`]);
+//! - [`OperandStore`] — content-addressed storage for large shared
+//!   operands (the GEMM B matrix today, replay tensors tomorrow),
+//!   addressed by the same vendored FNV-1a64‖SipHash-2-4 scheme as the
+//!   result-cache artifacts ([`operand_addr`]).
+//!
+//! The operand protocol replaces the prelude: a publisher sends
+//! `{"put": {"addr": H, "matrix": M}}` once per worker, work items
+//! reference the operand by address (`"b": H` inside a band), and any
+//! worker that misses — a fresh respawn, a remote daemon, a bounded memo
+//! that evicted — answers `{"need": H}` and is repopulated. Workers are
+//! therefore stateless-recoverable, and a band request is a pure
+//! function of its canonical JSON (operand addresses included), which is
+//! exactly what makes it memoizable by the TCP tier's result cache.
+
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::{Arc, Mutex};
+
+use crate::coordinator::{Job, JobOutcome};
+use crate::interface::BitMatrix;
+use crate::session::json::{self, JsonValue};
+use crate::session::net::cache::content_hash;
+
+// ---------------------------------------------------------------------------
+// band wire types
+// ---------------------------------------------------------------------------
+
+/// One GEMM band request: rows `[row0, row0 + a.rows)` of the full
+/// product, carrying only its own rows of A and C. `pair` names the
+/// instruction (`"<arch> <instr>"`) so a generic campaign worker can
+/// resolve a session for it; `b` is the content address of the shared
+/// right-hand operand in the publisher's [`OperandStore`]. Both are
+/// optional on the wire: a `simulate --stdin` worker has a fixed
+/// instruction, and the legacy `{"set_b": M}` frame still installs a
+/// default operand for address-free bands.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BandRequest {
+    pub id: u64,
+    pub row0: usize,
+    pub pair: Option<String>,
+    pub b: Option<String>,
+    pub a: BitMatrix,
+    pub c: BitMatrix,
+}
+
+/// The completed band: the output rows for `[row0, row0 + d.rows)`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BandReply {
+    pub id: u64,
+    pub row0: usize,
+    pub d: BitMatrix,
+}
+
+// ---------------------------------------------------------------------------
+// the typed item/result model
+// ---------------------------------------------------------------------------
+
+/// The kind of a [`WorkItem`] / [`WorkResult`]. A pipeline run is
+/// homogeneous; the engine uses the kind to detect cross-stream
+/// misroutes (a band reply on a campaign stream fells the worker that
+/// sent it, and vice versa).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ItemKind {
+    Verify,
+    Band,
+}
+
+/// Every unit of work the pipeline dispatches, over every transport
+/// (process children, TCP service connections, fleet hosts).
+#[derive(Clone, Debug)]
+pub enum WorkItem {
+    /// A seeded verification job: `{"pair","batch","seed","id"}`.
+    Verify(Job),
+    /// A GEMM band: `{"band": {...}}`.
+    Band(Box<BandRequest>),
+}
+
+impl WorkItem {
+    pub fn id(&self) -> u64 {
+        match self {
+            WorkItem::Verify(j) => j.id,
+            WorkItem::Band(b) => b.id,
+        }
+    }
+
+    pub fn set_id(&mut self, id: u64) {
+        match self {
+            WorkItem::Verify(j) => j.id = id,
+            WorkItem::Band(b) => b.id = id,
+        }
+    }
+
+    pub fn kind(&self) -> ItemKind {
+        match self {
+            WorkItem::Verify(_) => ItemKind::Verify,
+            WorkItem::Band(_) => ItemKind::Band,
+        }
+    }
+
+    /// The instruction pair this item runs under, when it names one.
+    pub fn pair(&self) -> Option<&str> {
+        match self {
+            WorkItem::Verify(j) => Some(&j.pair),
+            WorkItem::Band(b) => b.pair.as_deref(),
+        }
+    }
+
+    /// The content address of the shared operand this item references,
+    /// if any. The dispatcher guarantees a `put` for this address
+    /// reaches the worker before (or is re-sent on `need` after) the
+    /// item itself.
+    pub fn operand(&self) -> Option<&str> {
+        match self {
+            WorkItem::Verify(_) => None,
+            WorkItem::Band(b) => b.b.as_deref(),
+        }
+    }
+
+    /// The single wire line for this item (no trailing newline) — the
+    /// one request codec every transport writes.
+    pub fn encode(&self) -> String {
+        match self {
+            WorkItem::Verify(job) => json::job_to_json(job).encode(),
+            WorkItem::Band(req) => {
+                JsonValue::Obj(vec![("band".into(), json::band_request_to_json(req))]).encode()
+            }
+        }
+    }
+}
+
+/// The typed result for a [`WorkItem`] of the matching kind.
+#[derive(Clone, Debug)]
+pub enum WorkResult {
+    Outcome(JobOutcome),
+    Band(Box<BandReply>),
+}
+
+impl WorkResult {
+    pub fn id(&self) -> u64 {
+        match self {
+            WorkResult::Outcome(o) => o.id,
+            WorkResult::Band(b) => b.id,
+        }
+    }
+
+    pub fn kind(&self) -> ItemKind {
+        match self {
+            WorkResult::Outcome(_) => ItemKind::Verify,
+            WorkResult::Band(_) => ItemKind::Band,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// content-addressed operand store
+// ---------------------------------------------------------------------------
+
+/// The content address of an operand matrix: 32 hex digits —
+/// FNV-1a 64 then SipHash-2-4 over the matrix's *canonical* JSON
+/// encoding. This is the same addressing scheme as the result-cache
+/// artifacts ([`content_hash`]), so an operand has exactly one name on
+/// every host and across restarts.
+pub fn operand_addr(m: &BitMatrix) -> String {
+    content_hash(&json::bitmatrix_to_json(m).canonical_encode())
+}
+
+struct StoreInner {
+    map: BTreeMap<String, Arc<BitMatrix>>,
+    /// Insertion order for FIFO eviction (bounded stores only).
+    order: VecDeque<String>,
+}
+
+/// Content-addressed operand storage, shared by reference between the
+/// dispatcher and its transports. Publishers (the GEMM parent, the TCP
+/// server) hold an [`unbounded`](OperandStore::unbounded) store — the
+/// authoritative copy every `put` is replayed from. Workers hold a small
+/// [`bounded`](OperandStore::bounded) memo with FIFO eviction and answer
+/// `{"need": addr}` for anything evicted, which the publisher satisfies
+/// by re-sending the `put`.
+pub struct OperandStore {
+    inner: Mutex<StoreInner>,
+    /// `0` = unbounded.
+    cap: usize,
+}
+
+impl OperandStore {
+    /// The publisher side: never evicts.
+    pub fn unbounded() -> Self {
+        Self::bounded(0)
+    }
+
+    /// The worker side: at most `cap` operands resident (`0` =
+    /// unbounded), FIFO-evicted.
+    pub fn bounded(cap: usize) -> Self {
+        OperandStore {
+            inner: Mutex::new(StoreInner { map: BTreeMap::new(), order: VecDeque::new() }),
+            cap,
+        }
+    }
+
+    /// Publish a matrix: compute its address, insert it, return the
+    /// address. Re-publishing an identical matrix is a no-op refresh.
+    pub fn publish(&self, m: &BitMatrix) -> String {
+        let addr = operand_addr(m);
+        let mut inner = self.inner.lock().expect("operand store mutex poisoned");
+        if !inner.map.contains_key(&addr) {
+            inner.map.insert(addr.clone(), Arc::new(m.clone()));
+            inner.order.push_back(addr.clone());
+            self.evict(&mut inner);
+        }
+        addr
+    }
+
+    /// Insert a matrix under a *claimed* address, verifying the claim:
+    /// a `put` whose matrix bytes do not hash to its `addr` is rejected
+    /// — a corrupted or forged frame must not shadow the honest operand.
+    pub fn insert_at(&self, addr: &str, m: BitMatrix) -> Result<(), String> {
+        let actual = operand_addr(&m);
+        if actual != addr {
+            return Err(format!("operand bytes hash to {actual}, frame claims {addr}"));
+        }
+        let mut inner = self.inner.lock().expect("operand store mutex poisoned");
+        if !inner.map.contains_key(addr) {
+            inner.map.insert(addr.to_string(), Arc::new(m));
+            inner.order.push_back(addr.to_string());
+            self.evict(&mut inner);
+        }
+        Ok(())
+    }
+
+    fn evict(&self, inner: &mut StoreInner) {
+        while self.cap > 0 && inner.map.len() > self.cap {
+            if let Some(old) = inner.order.pop_front() {
+                inner.map.remove(&old);
+            } else {
+                break;
+            }
+        }
+    }
+
+    pub fn get(&self, addr: &str) -> Option<Arc<BitMatrix>> {
+        self.inner.lock().expect("operand store mutex poisoned").map.get(addr).cloned()
+    }
+
+    pub fn contains(&self, addr: &str) -> bool {
+        self.inner.lock().expect("operand store mutex poisoned").map.contains_key(addr)
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().expect("operand store mutex poisoned").map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::Format;
+
+    fn mat(seed: u64, rows: usize, cols: usize) -> BitMatrix {
+        let mut m = BitMatrix::zeros(rows, cols, Format::Fp16);
+        for (i, v) in m.data.iter_mut().enumerate() {
+            *v = (seed.wrapping_mul(37).wrapping_add(i as u64)) & Format::Fp16.mask();
+        }
+        m
+    }
+
+    #[test]
+    fn operand_addresses_are_stable_and_content_derived() {
+        let a = mat(1, 4, 4);
+        assert_eq!(operand_addr(&a), operand_addr(&a.clone()));
+        assert_eq!(operand_addr(&a).len(), 32);
+        assert_ne!(operand_addr(&a), operand_addr(&mat(2, 4, 4)));
+    }
+
+    #[test]
+    fn publish_and_get_round_trip() {
+        let store = OperandStore::unbounded();
+        let a = mat(1, 4, 4);
+        let addr = store.publish(&a);
+        assert_eq!(addr, operand_addr(&a));
+        assert!(store.contains(&addr));
+        assert_eq!(*store.get(&addr).unwrap(), a);
+        // re-publish is a refresh, not a duplicate
+        assert_eq!(store.publish(&a), addr);
+        assert_eq!(store.len(), 1);
+    }
+
+    #[test]
+    fn bounded_memo_evicts_fifo_and_misses_repopulate() {
+        let store = OperandStore::bounded(1);
+        let (a, b) = (mat(1, 4, 4), mat(2, 4, 4));
+        let addr_a = store.publish(&a);
+        let addr_b = store.publish(&b);
+        assert!(!store.contains(&addr_a), "FIFO: oldest operand evicted");
+        assert!(store.contains(&addr_b));
+        // the re-`need` path is a plain re-insert of the same put
+        store.insert_at(&addr_a, a.clone()).unwrap();
+        assert!(store.contains(&addr_a));
+        assert!(!store.contains(&addr_b), "cap 1: repopulation evicts the other");
+    }
+
+    #[test]
+    fn corrupted_puts_are_rejected_by_address_verification() {
+        let store = OperandStore::unbounded();
+        let a = mat(1, 4, 4);
+        let addr = operand_addr(&a);
+        let mut corrupt = a.clone();
+        corrupt.data[0] ^= 1;
+        let err = store.insert_at(&addr, corrupt).unwrap_err();
+        assert!(err.contains("hash"), "{err}");
+        assert!(!store.contains(&addr), "a rejected put must not be stored");
+        store.insert_at(&addr, a).unwrap();
+        assert!(store.contains(&addr));
+    }
+
+    #[test]
+    fn work_items_encode_ids_kinds_and_operands() {
+        let mut job = WorkItem::Verify(Job { id: 3, pair: "clean".into(), batch: 10, seed: 7 });
+        assert_eq!((job.id(), job.kind()), (3, ItemKind::Verify));
+        assert_eq!(job.pair(), Some("clean"));
+        assert!(job.operand().is_none());
+        job.set_id(9);
+        assert!(job.encode().contains("\"id\":9"), "{}", job.encode());
+
+        let band = WorkItem::Band(Box::new(BandRequest {
+            id: 4,
+            row0: 8,
+            pair: Some("sm75 HMMA.1688.F32.F16".into()),
+            b: Some("ab".repeat(16)),
+            a: mat(1, 2, 2),
+            c: mat(2, 2, 2),
+        }));
+        assert_eq!((band.id(), band.kind()), (4, ItemKind::Band));
+        assert_eq!(band.pair(), Some("sm75 HMMA.1688.F32.F16"));
+        assert_eq!(band.operand(), Some("ab".repeat(16).as_str()));
+        let line = band.encode();
+        assert!(line.starts_with("{\"band\":{"), "{line}");
+        assert!(line.contains("\"b\":"), "band line must carry its operand address: {line}");
+    }
+}

@@ -10,6 +10,11 @@
 //! yields an explicit quarantined partial report that round-trips
 //! through the `CampaignReport` JSON codec, never a hang, never
 //! silently wrong bytes.
+//!
+//! PR 10 extends the same contract to GEMM: band work items and
+//! content-addressed operand `put` frames ride the same daemon
+//! connections, and the gathered output must be bit-identical to the
+//! in-process `TiledGemm` — including under a mid-run daemon kill.
 
 use std::io::{BufRead, BufReader};
 use std::process::{Child, Command, Stdio};
@@ -17,9 +22,13 @@ use std::sync::atomic::Ordering;
 use std::time::Duration;
 
 use mma_sim::coordinator::{CampaignReport, Job};
+use mma_sim::gemm::TiledGemm;
+use mma_sim::interface::{BitMatrix, MmaFormats};
+use mma_sim::isa::Arch;
 use mma_sim::session::json::{self, JsonValue};
 use mma_sim::session::shard::{shard_campaign, ProcessTransport, ShardConfig};
-use mma_sim::session::{ChaosPlan, FleetTopology, TcpTransport};
+use mma_sim::session::{ChaosPlan, FleetTopology, Session, SessionBuilder, TcpTransport};
+use mma_sim::util::Rng;
 
 const PAIR: &str = "sm70 HMMA.884.F32.F16";
 
@@ -262,4 +271,85 @@ fn quarantined_host_yields_partial_report_that_round_trips() {
     // and the partial report survives the JSON codec unchanged
     let round = json::report_from_json(&json::report_to_json(&report)).expect("codec");
     assert_eq!(round, report, "quarantined partial reports must round-trip");
+}
+
+// ---------------------------------------------------------------------------
+// GEMM over the fleet (PR 10: typed band items + content-addressed operands)
+// ---------------------------------------------------------------------------
+
+fn gemm_session() -> Session {
+    SessionBuilder::new()
+        .arch(Arch::Turing)
+        .instruction("HMMA.1688.F32.F16")
+        .build()
+        .expect("registry instruction resolves")
+}
+
+fn random_mats(
+    rng: &mut Rng,
+    m: usize,
+    n: usize,
+    k: usize,
+    fmts: MmaFormats,
+) -> (BitMatrix, BitMatrix, BitMatrix) {
+    let mut a = BitMatrix::zeros(m, k, fmts.a);
+    let mut b = BitMatrix::zeros(k, n, fmts.b);
+    let mut c = BitMatrix::zeros(m, n, fmts.c);
+    for v in a.data.iter_mut() {
+        *v = fmts.a.from_f64(rng.normal());
+    }
+    for v in b.data.iter_mut() {
+        *v = fmts.b.from_f64(rng.normal());
+    }
+    for v in c.data.iter_mut() {
+        *v = fmts.c.from_f64(rng.normal());
+    }
+    (a, b, c)
+}
+
+#[test]
+fn fleet_gemm_bit_identical_to_in_process() {
+    let (d1, d2) = (spawn_daemon(), spawn_daemon());
+    let s = gemm_session();
+    let mut rng = Rng::new(0xF1EE7);
+    let (a, b, c) = random_mats(&mut rng, 64, 32, 32, s.formats());
+
+    let topo = short_probe_topo(&[d1.addr.clone(), d2.addr.clone()]);
+    let transport = TcpTransport::new(topo).expect("valid topology");
+    let got = s.shard_gemm(&a, &b, &c, &fleet_cfg(2), &transport).expect("fleet gemm");
+    let want =
+        TiledGemm::from_model(s.model().clone()).try_execute(&a, &b, &c).expect("in-process ref");
+    assert_eq!(got.data, want.data, "fleet GEMM must be bit-identical to the in-process engine");
+    assert_eq!((got.rows, got.cols, got.fmt), (want.rows, want.cols, want.fmt));
+
+    // band replies count as resolved work on the per-host surface
+    let stats = transport.stats();
+    let resolved: u64 = (0..2).map(|h| stats.host(h).jobs.load(Ordering::SeqCst)).sum();
+    assert!(resolved >= 1, "band replies must count as resolved work items: {resolved}");
+}
+
+#[test]
+fn killed_daemon_mid_gemm_keeps_bits() {
+    let d1 = spawn_daemon();
+    let mut d2 = spawn_daemon();
+    let s = gemm_session();
+    let mut rng = Rng::new(0xF1EE8);
+    let (a, b, c) = random_mats(&mut rng, 128, 64, 64, s.formats());
+
+    let topo = short_probe_topo(&[d1.addr.clone(), d2.addr.clone()]);
+    let transport = TcpTransport::new(topo).expect("valid topology");
+    // fell the second daemon while bands are (very likely) in flight:
+    // its bands requeue onto the survivor, which re-receives the shared
+    // B operand through the content-addressed publish path
+    let killer = std::thread::spawn(move || {
+        std::thread::sleep(Duration::from_millis(100));
+        let _ = d2.child.kill();
+        let _ = d2.child.wait();
+        d2
+    });
+    let got = s.shard_gemm(&a, &b, &c, &fleet_cfg(2), &transport).expect("fleet gemm survives");
+    let _d2 = killer.join().expect("killer thread");
+    let want =
+        TiledGemm::from_model(s.model().clone()).try_execute(&a, &b, &c).expect("in-process ref");
+    assert_eq!(got.data, want.data, "a dead daemon may cost time, never bits");
 }
